@@ -1,0 +1,125 @@
+//! Interactive session against a *running* cluster — the paper's §IV-D-3
+//! point: CylonFlow lets you submit distributed dataframe programs to a
+//! live resource pool interactively (Jupyter-style), which bare MPI
+//! cannot do. Type small commands; each runs as a fresh SPMD app on the
+//! same resident actor gang (communication context reused across
+//! commands — no re-initialization).
+//!
+//! ```bash
+//! cargo run --release --example interactive
+//! # or non-interactively:
+//! echo -e "gen a 100000\ngen b 100000\njoin a b\nsort a\nquit" | \
+//!     cargo run --release --example interactive
+//! ```
+
+use cylonflow::prelude::*;
+use std::io::{BufRead, Write};
+use std::time::Duration;
+
+const HELP: &str = "\
+commands:
+  gen <name> <rows>   generate DDF (2 int64 cols, 90% cardinality)
+  join <a> <b>        distributed join on k; stores result as <a>_<b>
+  groupby <a>         distributed groupby k, sum(v)
+  sort <a>            distributed sort by k
+  rows <a>            total rows of a stored DDF
+  help | quit";
+
+fn main() -> Result<()> {
+    let p = 4;
+    let cluster = Cluster::local(p)?;
+    let exec = CylonExecutor::new(&cluster, p)?;
+    println!("cylonflow interactive — {p} resident actors (type 'help')");
+
+    let stdin = std::io::stdin();
+    loop {
+        print!("> ");
+        std::io::stdout().flush().ok();
+        let mut line = String::new();
+        if stdin.lock().read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        let words: Vec<String> = line.split_whitespace().map(str::to_string).collect();
+        let t0 = std::time::Instant::now();
+        let result: Result<String> = match words.first().map(|s| s.as_str()) {
+            None => continue,
+            Some("quit") | Some("exit") => break,
+            Some("help") => {
+                println!("{HELP}");
+                continue;
+            }
+            Some("gen") if words.len() == 3 => {
+                let name = words[1].clone();
+                let rows: usize = words[2].parse().unwrap_or(10_000);
+                let seed = name.bytes().map(|b| b as u64).sum::<u64>();
+                exec.run(move |env| {
+                    let t = datagen::partition_for_rank(
+                        seed, rows, 0.9, env.rank(), env.world_size());
+                    env.store().put(&name, t)
+                })?
+                .wait()
+                .map(|_| format!("generated '{}' ({rows} rows)", words[1]))
+            }
+            Some("join") if words.len() == 3 => {
+                let (a, b) = (words[1].clone(), words[2].clone());
+                let out_name = format!("{a}_{b}");
+                let on = out_name.clone();
+                exec.run(move |env| {
+                    let l = env.store().get(&a, Duration::from_secs(5))?;
+                    let r = env.store().get(&b, Duration::from_secs(5))?;
+                    let j = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+                    let n = j.num_rows();
+                    env.store().put(&on, j)?;
+                    Ok(n)
+                })?
+                .wait()
+                .map(|ns| format!("join -> '{out_name}' ({} rows)", ns.iter().sum::<usize>()))
+            }
+            Some("groupby") if words.len() == 2 => {
+                let a = words[1].clone();
+                exec.run(move |env| {
+                    let t = env.store().get(&a, Duration::from_secs(5))?;
+                    let g = dist::groupby(
+                        &t,
+                        &[0],
+                        &[AggSpec::new(1, dist::AggFun::Sum)],
+                        dist::GroupbyStrategy::default(),
+                        env,
+                    )?;
+                    Ok(g.num_rows())
+                })?
+                .wait()
+                .map(|ns| format!("groupby -> {} groups", ns.iter().sum::<usize>()))
+            }
+            Some("sort") if words.len() == 2 => {
+                let a = words[1].clone();
+                exec.run(move |env| {
+                    let t = env.store().get(&a, Duration::from_secs(5))?;
+                    let s = dist::sort(&t, &SortOptions::by(0), env)?;
+                    Ok(s.num_rows())
+                })?
+                .wait()
+                .map(|ns| format!("sorted {} rows (global order)", ns.iter().sum::<usize>()))
+            }
+            Some("rows") if words.len() == 2 => {
+                let a = words[1].clone();
+                exec.run(move |env| {
+                    let t = env.store().get(&a, Duration::from_secs(5))?;
+                    Ok(t.num_rows())
+                })?
+                .wait()
+                .map(|ns| format!("{} rows", ns.iter().sum::<usize>()))
+            }
+            Some(other) => {
+                println!("unknown command '{other}' (try 'help')");
+                continue;
+            }
+        };
+        match result {
+            Ok(msg) => println!("{msg}   [{:.3}s]", t0.elapsed().as_secs_f64()),
+            Err(e) => println!("error: {e}"),
+        }
+    }
+    println!("bye");
+    Ok(())
+}

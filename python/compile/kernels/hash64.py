@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: splitmix64 avalanche hash over int64 key blocks.
+
+This is the per-row compute hot-spot of every key-based dataframe operator
+(shuffle partitioning, hash join build/probe, hash groupby): the Rust
+coordinator calls the AOT-compiled artifact of this kernel through PJRT on
+its hot path. Constants are bit-identical to
+``rust/src/util/hash.rs::hash64`` — the Rust tests cross-check.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the kernel streams one
+row-tile per grid step. ``BlockSpec`` tiles the HBM→VMEM transfer; a
+BLOCK_ROWS=65536 i64 tile is 512 KiB in + 512 KiB out, comfortably inside
+a ~16 MiB VMEM with double-buffering headroom. The work is pure VPU
+element-wise ops (no MXU), so the roofline is memory-bandwidth; one read
+and one write per element is optimal. ``interpret=True`` is mandatory on
+CPU PJRT (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot execute).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Stafford mix13 multipliers (unsigned; the Rust side uses the same bits as
+# two's-complement i64 constants).
+M1 = 0xFF51AFD7ED558CCD
+M2 = 0xC4CEB9FE1A85EC53
+
+# Rows per grid step (must divide the lowered block size).
+TILE_ROWS = 8192
+
+
+def _mix(h):
+    """splitmix64 finalizer on an int64 array (logical >> via uint64)."""
+    u = h.astype(jnp.uint64)
+    u = u ^ (u >> 33)
+    u = u * jnp.uint64(M1)
+    u = u ^ (u >> 33)
+    u = u * jnp.uint64(M2)
+    u = u ^ (u >> 33)
+    return u.astype(jnp.int64)
+
+
+def _hash_kernel(keys_ref, out_ref):
+    out_ref[...] = _mix(keys_ref[...])
+
+
+def hash64_block(keys, *, tile_rows: int | None = None):
+    """Hash a 1-D int64 block with a row-tiled Pallas kernel.
+
+    ``keys.shape[0]`` must be a multiple of ``tile_rows`` (default: the
+    standard tile, shrunk to the block when the block is smaller); the AOT
+    path lowers one fixed block size and Rust pads the tail block.
+    """
+    (n,) = keys.shape
+    if tile_rows is None:
+        tile_rows = min(TILE_ROWS, n)
+    assert n % tile_rows == 0, f"block {n} not a multiple of tile {tile_rows}"
+    grid = n // tile_rows
+    return pl.pallas_call(
+        _hash_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int64),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(keys)

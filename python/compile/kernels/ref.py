@@ -1,0 +1,38 @@
+"""Pure-jnp/numpy oracles for the kernels — the build-time correctness
+reference every Pallas/L2 graph is pytest-checked against."""
+
+import numpy as np
+
+M1_U = np.uint64(0xFF51AFD7ED558CCD)
+M2_U = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+def hash64_ref(keys: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, plain numpy uint64 arithmetic."""
+    with np.errstate(over="ignore"):
+        u = keys.astype(np.int64).view(np.uint64).copy()
+        u ^= u >> np.uint64(33)
+        u *= M1_U
+        u ^= u >> np.uint64(33)
+        u *= M2_U
+        u ^= u >> np.uint64(33)
+    return u.view(np.int64)
+
+
+def add_scalar_ref(xs: np.ndarray, c: float) -> np.ndarray:
+    """x + c."""
+    return xs + c
+
+
+def colagg_ref(xs: np.ndarray) -> np.ndarray:
+    """(sum, min, max) of a float64 vector."""
+    return np.array([xs.sum(), xs.min(), xs.max()], dtype=np.float64)
+
+
+def partition_hist_ref(keys: np.ndarray, valid: np.ndarray, nparts: int) -> np.ndarray:
+    """Per-partition counts of hash(key) % nparts over the valid rows."""
+    pids = (hash64_ref(keys).view(np.uint64) % np.uint64(nparts)).astype(np.int64)
+    out = np.zeros(nparts, dtype=np.int64)
+    for p in range(nparts):
+        out[p] = int(((pids == p) & (valid != 0)).sum())
+    return out

@@ -1,0 +1,52 @@
+"""L2 JAX graphs — the compute functions the Rust coordinator executes
+through PJRT. Each calls the L1 Pallas kernel where keys are hashed, so
+the kernel lowers into the same HLO module.
+
+All graphs are fixed-shape (one block); Rust pads tail blocks and
+masks/compensates (see rust/src/runtime/kernels.rs).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.hash64 import hash64_block
+
+#: Rows per lowered block — must match rust/src/runtime KERNEL_BLOCK.
+BLOCK_ROWS = 65_536
+
+#: Partition count the fused partition histogram is lowered for.
+HIST_PARTITIONS = 8
+
+
+def hash64(keys):
+    """L1 kernel pass-through: splitmix64 over one key block.
+
+    AOT-lowered with ONE grid step per block (tile == block): the Rust
+    caller already loops over 64Ki-row blocks, so the block itself is the
+    VMEM tile. Multi-step grids under interpret=True lower to an HLO
+    while-loop with dynamic-update-slice per step, which costs ~10x on
+    CPU PJRT (see EXPERIMENTS.md §Perf, L1 iteration 1); a single step
+    lowers to a straight-line fused elementwise chain.
+    """
+    return (hash64_block(keys, tile_rows=keys.shape[0]),)
+
+
+def add_scalar(xs, c):
+    """Element-wise x + c over one f64 block (Fig 9 pipeline tail)."""
+    return (xs + c[0],)
+
+
+def colagg(xs):
+    """Fused (sum, min, max) over one f64 block — XLA fuses the three
+    reductions into a single pass over the data."""
+    return (jnp.stack([jnp.sum(xs), jnp.min(xs), jnp.max(xs)]),)
+
+
+def partition_hist(keys, valid):
+    """The paper's shuffle partition sub-operator as one fused graph:
+    hash (L1 Pallas) → pid = hash mod P → one-hot histogram, masking pad
+    rows via ``valid``. Returns per-partition counts (int64[P])."""
+    hashes = hash64_block(keys, tile_rows=keys.shape[0])
+    pids = (hashes.astype(jnp.uint64) % jnp.uint64(HIST_PARTITIONS)).astype(jnp.int32)
+    hist = jnp.zeros((HIST_PARTITIONS,), dtype=jnp.int64)
+    hist = hist.at[pids].add(valid.astype(jnp.int64))
+    return (hist,)

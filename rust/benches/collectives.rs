@@ -1,0 +1,97 @@
+//! Micro-benchmarks: collective algorithms across backends and payload
+//! sizes — the paper's §V-B point that algorithm selection (Bruck vs
+//! pairwise vs linear) dominates at small payloads while transport
+//! dominates at large.
+
+use cylonflow::bench_util::bench;
+use cylonflow::comm::algorithms::AllToAllAlgo;
+use cylonflow::comm::{AlgoSet, CommContext, InMemoryKv, MemoryFabric, TcpFabric};
+use cylonflow::datagen;
+use cylonflow::table::Table;
+use std::sync::Arc;
+
+fn gang_memory(p: usize, algos: AlgoSet) -> Vec<CommContext> {
+    MemoryFabric::create(p)
+        .into_iter()
+        .map(|c| CommContext::new(Box::new(c), algos))
+        .collect()
+}
+
+fn gang_tcp(p: usize, algos: AlgoSet, name: &str) -> Vec<CommContext> {
+    TcpFabric::create(p, InMemoryKv::shared(), name)
+        .unwrap()
+        .into_iter()
+        .map(|c| CommContext::new(Box::new(c), algos))
+        .collect()
+}
+
+/// One timed shuffle across a gang (all ranks run in threads; returns when
+/// every rank completes — BSP semantics).
+fn timed_shuffle(ctxs: &[CommContext], rows_per_part: usize) {
+    std::thread::scope(|s| {
+        for ctx in ctxs {
+            s.spawn(move || {
+                let parts: Vec<Table> = (0..ctx.world_size())
+                    .map(|j| datagen::uniform_table(j as u64, rows_per_part, 0.9))
+                    .collect();
+                ctx.shuffle(parts).unwrap();
+            });
+        }
+    });
+}
+
+fn main() {
+    let p = 4;
+    for rows in [100usize, 10_000, 200_000] {
+        println!("--- all-to-all shuffle, p={p}, {rows} rows/part ---");
+        for (label, algo) in [
+            ("linear", AllToAllAlgo::Linear),
+            ("pairwise", AllToAllAlgo::Pairwise),
+            ("bruck", AllToAllAlgo::Bruck),
+        ] {
+            let mut algos = AlgoSet::simple();
+            algos.all_to_all = algo;
+            let ctxs = gang_memory(p, algos);
+            let m = bench(&format!("memory/{label}/{rows}"), 1, 5, || {
+                timed_shuffle(&ctxs, rows);
+            });
+            println!("{}", m.report());
+        }
+        for (label, algos) in [("gloo-ish", AlgoSet::simple()), ("ucc-ish", AlgoSet::optimized())]
+        {
+            let ctxs = gang_tcp(p, algos, &format!("bench-{label}-{rows}"));
+            let m = bench(&format!("tcp/{label}/{rows}"), 1, 5, || {
+                timed_shuffle(&ctxs, rows);
+            });
+            println!("{}", m.report());
+        }
+    }
+
+    println!("--- allgather / bcast, p={p}, 50k rows ---");
+    for (label, algos) in [("simple", AlgoSet::simple()), ("optimized", AlgoSet::optimized())] {
+        let ctxs = gang_memory(p, algos);
+        let m = bench(&format!("allgather/{label}"), 1, 5, || {
+            std::thread::scope(|s| {
+                for ctx in &ctxs {
+                    s.spawn(move || {
+                        let t = datagen::uniform_table(ctx.rank() as u64, 50_000, 0.9);
+                        ctx.allgather(&t).unwrap();
+                    });
+                }
+            });
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("bcast/{label}"), 1, 5, || {
+            std::thread::scope(|s| {
+                for ctx in &ctxs {
+                    s.spawn(move || {
+                        let t = (ctx.rank() == 0)
+                            .then(|| datagen::uniform_table(9, 50_000, 0.9));
+                        ctx.bcast(t.as_ref(), 0).unwrap();
+                    });
+                }
+            });
+        });
+        println!("{}", m.report());
+    }
+}

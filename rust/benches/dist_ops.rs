@@ -1,0 +1,68 @@
+//! End-to-end distributed operator benches at fixed parallelism — the
+//! `cargo bench` counterpart of the paper's Fig 8 single points (the full
+//! sweeps live in `bench_driver`).
+
+use cylonflow::bench_util::bench;
+use cylonflow::comm::CommBackend;
+use cylonflow::config::Config;
+use cylonflow::prelude::*;
+
+fn main() {
+    let p = 4;
+    let rows = 1 << 19;
+    for backend in [CommBackend::Memory, CommBackend::Tcp, CommBackend::TcpUcc] {
+        let cfg = Config { backend, ..Config::from_env() };
+        let cluster = Cluster::with_config(p, cfg).unwrap();
+        let exec = CylonExecutor::new(&cluster, p).unwrap();
+        println!("--- dist ops, p={p}, {rows} rows, {} ---", backend.label());
+        let m = bench(&format!("dist_join/{}", backend.label()), 1, 3, || {
+            exec.run(move |env| {
+                let l = datagen::partition_for_rank(1, rows, 0.9, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(2, rows, 0.9, env.rank(), env.world_size());
+                dist::join(&l, &r, &JoinOptions::inner(0, 0), env).map(|t| t.num_rows())
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("dist_groupby/{}", backend.label()), 1, 3, || {
+            exec.run(move |env| {
+                let t = datagen::partition_for_rank(3, rows, 0.9, env.rank(), env.world_size());
+                dist::groupby(
+                    &t,
+                    &[0],
+                    &[AggSpec::new(1, dist::AggFun::Sum)],
+                    dist::GroupbyStrategy::ShuffleFirst,
+                    env,
+                )
+                .map(|t| t.num_rows())
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("dist_sort/{}", backend.label()), 1, 3, || {
+            exec.run(move |env| {
+                let t = datagen::partition_for_rank(4, rows, 0.9, env.rank(), env.world_size());
+                dist::sort(&t, &SortOptions::by(0), env).map(|t| t.num_rows())
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("dist_pipeline/{}", backend.label()), 1, 3, || {
+            exec.run(move |env| {
+                let l = datagen::partition_for_rank(5, rows, 0.9, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(6, rows, 0.9, env.rank(), env.world_size());
+                dist::pipeline(&l, &r, 1.0, env).map(|rep| rep.table.num_rows())
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        println!("{}", m.report());
+    }
+}

@@ -1,0 +1,48 @@
+//! PJRT kernel-path benches: per-row cost of the AOT Pallas hash through
+//! PJRT vs the native Rust path, plus the L2 graphs — quantifies the
+//! PJRT call overhead the Auto hash path weighs (DESIGN.md §Perf).
+
+use cylonflow::bench_util::bench;
+use cylonflow::config::default_artifacts_dir;
+use cylonflow::ops::{KeyHasher, NativeHasher};
+use cylonflow::runtime::{artifacts_present, Kernels, KERNEL_BLOCK};
+use cylonflow::util::SplitMix64;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !artifacts_present(&dir) {
+        println!("artifacts not built — run `make artifacts` first; skipping PJRT benches");
+        return;
+    }
+    let mut rng = SplitMix64::new(7);
+    for blocks in [1usize, 8] {
+        let n = blocks * KERNEL_BLOCK;
+        let keys: Vec<i64> = (0..n).map(|_| rng.next_i64()).collect();
+        let mut out = vec![0i64; n];
+        println!("--- hash64 over {n} keys ({blocks} blocks) ---");
+        let m = bench(&format!("hash_native/{n}"), 2, 10, || {
+            NativeHasher.hash_i64(&keys, &mut out).unwrap();
+        });
+        println!("{}  ({:.1} ns/row)", m.report(), m.median().as_nanos() as f64 / n as f64);
+        let m = bench(&format!("hash_pjrt/{n}"), 2, 10, || {
+            Kernels::with(&dir, |k| k.hash64(&keys, &mut out)).unwrap();
+        });
+        println!("{}  ({:.1} ns/row)", m.report(), m.median().as_nanos() as f64 / n as f64);
+    }
+
+    let xs: Vec<f64> = (0..KERNEL_BLOCK).map(|_| rng.next_f64()).collect();
+    let mut outf = vec![0f64; xs.len()];
+    let m = bench("add_scalar_pjrt/1block", 2, 10, || {
+        Kernels::with(&dir, |k| k.add_scalar_f64(&xs, 1.5, &mut outf)).unwrap();
+    });
+    println!("{}", m.report());
+    let m = bench("colagg_pjrt/1block", 2, 10, || {
+        Kernels::with(&dir, |k| k.colagg_f64(&xs)).unwrap();
+    });
+    println!("{}", m.report());
+    let keys: Vec<i64> = (0..KERNEL_BLOCK).map(|_| rng.next_i64()).collect();
+    let m = bench("partition_hist_pjrt/1block", 2, 10, || {
+        Kernels::with(&dir, |k| k.partition_hist(&keys)).unwrap();
+    });
+    println!("{}", m.report());
+}

@@ -1,0 +1,58 @@
+//! Micro-benchmarks: local operator kernels (the "core local operator"
+//! costs under every distributed op). Run with `cargo bench`.
+
+use cylonflow::bench_util::bench;
+use cylonflow::datagen;
+use cylonflow::ops::{self, AggFun, AggSpec, JoinOptions, NativeHasher, SortOptions};
+use cylonflow::table::{table_from_bytes, table_to_bytes};
+
+fn main() {
+    let sizes = [100_000usize, 1_000_000];
+    for &n in &sizes {
+        let l = datagen::uniform_table(1, n, 0.9);
+        let r = datagen::uniform_table(2, n, 0.9);
+        println!("--- local ops, {n} rows, 90% cardinality ---");
+        let m = bench(&format!("hash_join/{n}"), 1, 5, || {
+            ops::join(&l, &r, &JoinOptions::inner(0, 0)).unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("sort_merge_join/{n}"), 1, 3, || {
+            ops::join(
+                &l,
+                &r,
+                &JoinOptions::inner(0, 0).with_algo(ops::JoinAlgo::SortMerge),
+            )
+            .unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("groupby_sum/{n}"), 1, 5, || {
+            ops::groupby(&l, &[0], &[AggSpec::new(1, AggFun::Sum)]).unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("sort/{n}"), 1, 5, || {
+            ops::sort(&l, &SortOptions::by(0)).unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("partition_by_hash_8/{n}"), 1, 5, || {
+            ops::partition_by_hash(&l, &[0], 8, &NativeHasher).unwrap();
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("add_scalar/{n}"), 1, 10, || {
+            ops::add_scalar(&l, 1, 1.5).unwrap();
+        });
+        println!("{}", m.report());
+        let bytes = table_to_bytes(&l);
+        let m = bench(&format!("wire_serialize/{n}"), 1, 10, || {
+            let _ = table_to_bytes(&l);
+        });
+        println!("{}", m.report());
+        let m = bench(&format!("wire_deserialize/{n}"), 1, 10, || {
+            let _ = table_from_bytes(&bytes).unwrap();
+        });
+        println!(
+            "{}   ({} MiB wire size)",
+            m.report(),
+            bytes.len() / (1024 * 1024)
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Serialized blob store — the shuffle-file substrate of the actor-MR
+//! baseline. Producers `put` serialized tables under string keys;
+//! consumers block on `wait`. Real serialization on both sides (the
+//! paper's "(de)serialization overheads when transferring data" point
+//! about JVM-based Spark).
+
+use crate::error::{Error, Result};
+use crate::table::{table_from_bytes, table_to_bytes, Table};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Blocking serialized KV store for shuffle exchange.
+#[derive(Default)]
+pub struct BlobStore {
+    blobs: Mutex<HashMap<String, Arc<Vec<u8>>>>,
+    cv: Condvar,
+}
+
+impl BlobStore {
+    /// New store behind an Arc.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Serialize and publish a table under `key`.
+    pub fn put_table(&self, key: &str, t: &Table) {
+        let bytes = Arc::new(table_to_bytes(t));
+        let mut m = self.blobs.lock().expect("blob store poisoned");
+        m.insert(key.to_string(), bytes);
+        self.cv.notify_all();
+    }
+
+    /// Block until `key` exists, deserialize, return.
+    pub fn wait_table(&self, key: &str, timeout: Duration) -> Result<Table> {
+        let deadline = Instant::now() + timeout;
+        let mut m = self.blobs.lock().expect("blob store poisoned");
+        loop {
+            if let Some(b) = m.get(key) {
+                let b = b.clone();
+                drop(m);
+                return table_from_bytes(&b);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Store(format!("blob '{key}' never arrived")));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(m, deadline - now)
+                .expect("blob store poisoned");
+            m = guard;
+        }
+    }
+
+    /// Remove all blobs with the given prefix (post-stage cleanup).
+    pub fn clear_prefix(&self, prefix: &str) {
+        let mut m = self.blobs.lock().expect("blob store poisoned");
+        m.retain(|k, _| !k.starts_with(prefix));
+    }
+
+    /// Current blob count (diagnostics).
+    pub fn len(&self) -> usize {
+        self.blobs.lock().expect("blob store poisoned").len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    #[test]
+    fn put_wait_roundtrip() {
+        let s = BlobStore::shared();
+        let t = Table::from_columns(vec![("v", Column::from_i64(vec![1, 2]))]).unwrap();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.wait_table("k", Duration::from_secs(2)).unwrap());
+        std::thread::sleep(Duration::from_millis(5));
+        s.put_table("k", &t);
+        assert_eq!(h.join().unwrap(), t);
+    }
+
+    #[test]
+    fn timeout_and_cleanup() {
+        let s = BlobStore::shared();
+        assert!(s.wait_table("nope", Duration::from_millis(20)).is_err());
+        let t = Table::from_columns(vec![("v", Column::from_i64(vec![1]))]).unwrap();
+        s.put_table("e1/a", &t);
+        s.put_table("e1/b", &t);
+        s.put_table("e2/a", &t);
+        s.clear_prefix("e1/");
+        assert_eq!(s.len(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Actor map-reduce baseline — the Apache Spark Datasets analogue
+//! (paper §III-C-3).
+//!
+//! Long-lived executors process **bulk stages** (no per-task central
+//! scheduling — Spark plans a whole stage at once, which is why it
+//! outscales Dask in the paper's Fig 8), but shuffle data moves through a
+//! **serialized blob store** (the Spark shuffle-file / JVM-serde
+//! analogue) instead of direct worker-to-worker message passing, and every
+//! key-based operator re-exchanges — the two properties that separate it
+//! from the pseudo-BSP CylonFlow path.
+
+mod blob_store;
+mod runtime;
+
+pub use blob_store::BlobStore;
+pub use runtime::MrRuntime;

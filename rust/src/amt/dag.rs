@@ -1,0 +1,106 @@
+//! Task graphs: multi-output tasks wired by (task, output) dependencies.
+
+use crate::error::{Error, Result};
+use crate::table::Table;
+
+/// Task identifier within one graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub(crate) usize);
+
+/// One dependency edge: output `output` of task `task`.
+#[derive(Debug, Clone, Copy)]
+pub struct Dep {
+    /// Producing task.
+    pub task: TaskId,
+    /// Which of its outputs.
+    pub output: usize,
+}
+
+pub(crate) type TaskFn = Box<dyn FnOnce(Vec<Table>) -> Result<Vec<Table>> + Send>;
+
+pub(crate) struct TaskNode {
+    pub deps: Vec<Dep>,
+    pub run: Option<TaskFn>,
+    pub n_outputs: usize,
+}
+
+/// A DAG of dataframe tasks under construction.
+#[derive(Default)]
+pub struct TaskGraph {
+    pub(crate) nodes: Vec<TaskNode>,
+}
+
+impl TaskGraph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a task taking the tables produced by `deps` (in order) and
+    /// yielding `n_outputs` tables.
+    pub fn add_task(
+        &mut self,
+        deps: Vec<Dep>,
+        n_outputs: usize,
+        run: impl FnOnce(Vec<Table>) -> Result<Vec<Table>> + Send + 'static,
+    ) -> TaskId {
+        let id = TaskId(self.nodes.len());
+        self.nodes.push(TaskNode {
+            deps,
+            run: Some(Box::new(run)),
+            n_outputs,
+        });
+        id
+    }
+
+    /// Convenience: a source task with no deps producing one table.
+    pub fn add_source(&mut self, table: Table) -> TaskId {
+        self.add_task(Vec::new(), 1, move |_| Ok(vec![table]))
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the graph is empty.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Validate that all dependency edges point backwards (acyclic by
+    /// construction) and within range.
+    pub(crate) fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for d in &n.deps {
+                if d.task.0 >= i {
+                    return Err(Error::Scheduler(format!(
+                        "task {i} depends on non-earlier task {}",
+                        d.task.0
+                    )));
+                }
+                if d.output >= self.nodes[d.task.0].n_outputs {
+                    return Err(Error::Scheduler(format!(
+                        "task {i} wants output {} of task {} which has {}",
+                        d.output,
+                        d.task.0,
+                        self.nodes[d.task.0].n_outputs
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Dep {
+    /// First output of `task`.
+    pub fn of(task: TaskId) -> Dep {
+        Dep { task, output: 0 }
+    }
+
+    /// Output `output` of `task`.
+    pub fn output(task: TaskId, output: usize) -> Dep {
+        Dep { task, output }
+    }
+}

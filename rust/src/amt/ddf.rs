@@ -1,0 +1,291 @@
+//! The AMT distributed dataframe — Dask-DDF-style lazy operators over a
+//! task graph.
+//!
+//! Every key-based operator re-shuffles: without an execution-plan
+//! optimizer (which Dask DDF also lacks for this pattern, paper §III-B-1)
+//! the graph carries no partitioning knowledge between operators. The
+//! shuffle itself is the classic task-based O(p²) split/merge.
+
+use super::dag::{Dep, TaskGraph};
+use crate::error::Result;
+use crate::ops::{self, AggSpec, JoinOptions, NativeHasher, SortKey, SortOptions};
+use crate::table::Table;
+
+/// A lazy, partitioned dataframe: one graph output per partition.
+#[derive(Debug, Clone)]
+pub struct AmtDataFrame {
+    parts: Vec<Dep>,
+}
+
+impl AmtDataFrame {
+    /// Source dataframe from in-memory partitions.
+    pub fn from_partitions(g: &mut TaskGraph, parts: Vec<Table>) -> AmtDataFrame {
+        let parts = parts
+            .into_iter()
+            .map(|t| Dep::of(g.add_source(t)))
+            .collect();
+        AmtDataFrame { parts }
+    }
+
+    /// Partition count.
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Graph outputs for [`super::AmtRuntime::execute`].
+    pub fn deps(&self) -> &[Dep] {
+        &self.parts
+    }
+
+    /// Element-wise map over partitions (one task per partition).
+    pub fn map_partitions(
+        &self,
+        g: &mut TaskGraph,
+        f: impl Fn(Table) -> Result<Table> + Clone + Send + 'static,
+    ) -> AmtDataFrame {
+        let parts = self
+            .parts
+            .iter()
+            .map(|&d| {
+                let f = f.clone();
+                Dep::of(g.add_task(vec![d], 1, move |mut ins| {
+                    f(ins.remove(0)).map(|t| vec![t])
+                }))
+            })
+            .collect();
+        AmtDataFrame { parts }
+    }
+
+    /// Task-based hash shuffle to `p_out` partitions: one split task per
+    /// input partition (p_out outputs each) + one merge task per output
+    /// partition (p_in inputs each) — the O(p²) edge pattern of Fig 4.
+    pub fn shuffle(&self, g: &mut TaskGraph, key_cols: Vec<usize>, p_out: usize) -> AmtDataFrame {
+        let splits: Vec<_> = self
+            .parts
+            .iter()
+            .map(|&d| {
+                let key_cols = key_cols.clone();
+                g.add_task(vec![d], p_out, move |mut ins| {
+                    ops::partition_by_hash(&ins.remove(0), &key_cols, p_out, &NativeHasher)
+                })
+            })
+            .collect();
+        let parts = (0..p_out)
+            .map(|j| {
+                let deps: Vec<Dep> = splits.iter().map(|&s| Dep::output(s, j)).collect();
+                Dep::of(g.add_task(deps, 1, |ins| {
+                    Table::concat(&ins.iter().collect::<Vec<_>>()).map(|t| vec![t])
+                }))
+            })
+            .collect();
+        AmtDataFrame { parts }
+    }
+
+    /// Distributed join: shuffle both sides, then one join task per
+    /// co-partition pair.
+    pub fn join(
+        &self,
+        g: &mut TaskGraph,
+        other: &AmtDataFrame,
+        opts: &JoinOptions,
+    ) -> AmtDataFrame {
+        let p = self.parts.len().max(other.parts.len());
+        let l = self.shuffle(g, opts.left_on.clone(), p);
+        let r = other.shuffle(g, opts.right_on.clone(), p);
+        let opts = opts.clone();
+        let parts = l
+            .parts
+            .iter()
+            .zip(&r.parts)
+            .map(|(&ld, &rd)| {
+                let opts = opts.clone();
+                Dep::of(g.add_task(vec![ld, rd], 1, move |mut ins| {
+                    let right = ins.remove(1);
+                    let left = ins.remove(0);
+                    ops::join(&left, &right, &opts).map(|t| vec![t])
+                }))
+            })
+            .collect();
+        AmtDataFrame { parts }
+    }
+
+    /// Distributed groupby: shuffle on keys, aggregate per partition.
+    pub fn groupby(
+        &self,
+        g: &mut TaskGraph,
+        key_cols: Vec<usize>,
+        aggs: Vec<AggSpec>,
+    ) -> AmtDataFrame {
+        let shuffled = self.shuffle(g, key_cols.clone(), self.parts.len());
+        shuffled.map_partitions(g, move |t| ops::groupby(&t, &key_cols, &aggs))
+    }
+
+    /// Distributed sample sort, all in tasks: per-partition sample →
+    /// global splitter task → per-partition range split → per-range merge
+    /// + local sort.
+    pub fn sort(&self, g: &mut TaskGraph, opts: &SortOptions) -> AmtDataFrame {
+        let p = self.parts.len();
+        let key_cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
+        // 1. sample tasks
+        let samples: Vec<Dep> = self
+            .parts
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                let key_cols = key_cols.clone();
+                Dep::of(g.add_task(vec![d], 1, move |mut ins| {
+                    let t = ins.remove(0);
+                    let k = (16 * 8).min(t.num_rows().max(1));
+                    ops::sample_rows(&t, k, 0x5eed ^ i as u64)
+                        .project(&key_cols)
+                        .map(|t| vec![t])
+                }))
+            })
+            .collect();
+        // 2. splitter task (depends on all samples)
+        let proj: Vec<usize> = (0..key_cols.len()).collect();
+        let proj2 = proj.clone();
+        let splitters = g.add_task(samples, 1, move |ins| {
+            let all = Table::concat(&ins.iter().collect::<Vec<_>>())?;
+            ops::splitters_from_sample(&all, &proj2, p).map(|t| vec![t])
+        });
+        // 3. range-split tasks (p outputs each)
+        let ascending = opts.keys.first().map(|k| k.ascending).unwrap_or(true);
+        let splits: Vec<_> = self
+            .parts
+            .iter()
+            .map(|&d| {
+                let key_cols = key_cols.clone();
+                let proj = proj.clone();
+                g.add_task(vec![d, Dep::of(splitters)], p, move |mut ins| {
+                    let sp = ins.remove(1);
+                    let t = ins.remove(0);
+                    let mut parts = ops::partition_by_range(&t, &key_cols, &sp, &proj)?;
+                    if !ascending {
+                        parts.reverse();
+                    }
+                    Ok(parts)
+                })
+            })
+            .collect();
+        // 4. merge + sort tasks
+        let keys: Vec<SortKey> = opts.keys.clone();
+        let stable = opts.stable;
+        let parts = (0..p)
+            .map(|j| {
+                let deps: Vec<Dep> = splits.iter().map(|&s| Dep::output(s, j)).collect();
+                let keys = keys.clone();
+                Dep::of(g.add_task(deps, 1, move |ins| {
+                    let merged = Table::concat(&ins.iter().collect::<Vec<_>>())?;
+                    ops::sort(&merged, &SortOptions { keys: keys.clone(), stable })
+                        .map(|t| vec![t])
+                }))
+            })
+            .collect();
+        AmtDataFrame { parts }
+    }
+
+    /// `add_scalar` over a column (pure map).
+    pub fn add_scalar(&self, g: &mut TaskGraph, col: usize, scalar: f64) -> AmtDataFrame {
+        self.map_partitions(g, move |t| ops::add_scalar(&t, col, scalar))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::AmtRuntime;
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::AggFun;
+
+    fn parts_of(t: &Table, p: usize) -> Vec<Table> {
+        t.split_even(p)
+    }
+
+    #[test]
+    fn shuffle_covers_and_copartitions() {
+        let rt = AmtRuntime::new(2);
+        let mut g = TaskGraph::new();
+        let t = crate::datagen::uniform_table(1, 1000, 0.9);
+        let df = AmtDataFrame::from_partitions(&mut g, parts_of(&t, 4));
+        let sh = df.shuffle(&mut g, vec![0], 4);
+        let out = rt.execute(g, sh.deps()).unwrap();
+        let total: usize = out.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 1000);
+        // co-partitioning: a key appears in exactly one partition
+        let mut seen = std::collections::HashMap::new();
+        for (pi, t) in out.iter().enumerate() {
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                let e = seen.entry(k).or_insert(pi);
+                assert_eq!(*e, pi, "key {k} split across partitions");
+            }
+        }
+    }
+
+    #[test]
+    fn join_matches_local_reference() {
+        let rt = AmtRuntime::new(3);
+        let mut g = TaskGraph::new();
+        let l = crate::datagen::uniform_table(1, 500, 0.5);
+        let r = crate::datagen::uniform_table(2, 500, 0.5);
+        let opts = JoinOptions::inner(0, 0);
+        let ldf = AmtDataFrame::from_partitions(&mut g, parts_of(&l, 3));
+        let rdf = AmtDataFrame::from_partitions(&mut g, parts_of(&r, 3));
+        let j = ldf.join(&mut g, &rdf, &opts);
+        let out = rt.execute(g, j.deps()).unwrap();
+        let dist_rows: usize = out.iter().map(|t| t.num_rows()).sum();
+        let reference = ops::join(&l, &r, &opts).unwrap();
+        assert_eq!(dist_rows, reference.num_rows());
+    }
+
+    #[test]
+    fn groupby_matches_local_reference() {
+        let rt = AmtRuntime::new(2);
+        let mut g = TaskGraph::new();
+        let t = crate::datagen::uniform_table(3, 800, 0.1);
+        let df = AmtDataFrame::from_partitions(&mut g, parts_of(&t, 4));
+        let gb = df.groupby(&mut g, vec![0], vec![AggSpec::new(1, AggFun::Sum)]);
+        let out = rt.execute(g, gb.deps()).unwrap();
+        let dist = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let reference = ops::groupby(&t, &[0], &[AggSpec::new(1, AggFun::Sum)]).unwrap();
+        assert_eq!(dist.num_rows(), reference.num_rows());
+        // spot-check one group's sum
+        let k0 = reference.value(0, 0).unwrap().as_i64().unwrap();
+        let expect = reference.value(0, 1).unwrap().as_i64().unwrap();
+        let got = (0..dist.num_rows())
+            .find(|&r| dist.value(r, 0).unwrap().as_i64() == Some(k0))
+            .map(|r| dist.value(r, 1).unwrap().as_i64().unwrap())
+            .unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sort_produces_global_order() {
+        let rt = AmtRuntime::new(2);
+        let mut g = TaskGraph::new();
+        let t = crate::datagen::uniform_table(5, 2000, 0.9);
+        let df = AmtDataFrame::from_partitions(&mut g, parts_of(&t, 4));
+        let s = df.sort(&mut g, &SortOptions::by(0));
+        let out = rt.execute(g, s.deps()).unwrap();
+        let total: usize = out.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 2000);
+        let mut last = i64::MIN;
+        for t in &out {
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                assert!(k >= last, "global order violated");
+                last = k;
+            }
+        }
+    }
+
+    #[test]
+    fn add_scalar_maps() {
+        let rt = AmtRuntime::new(1);
+        let mut g = TaskGraph::new();
+        let t = Table::from_columns(vec![("v", Column::from_i64(vec![1, 2]))]).unwrap();
+        let df = AmtDataFrame::from_partitions(&mut g, vec![t]);
+        let a = df.add_scalar(&mut g, 0, 5.0);
+        let out = rt.execute(g, a.deps()).unwrap();
+        assert_eq!(out[0].column(0).unwrap().i64_values().unwrap(), &[6, 7]);
+    }
+}

@@ -1,0 +1,19 @@
+//! AMT baseline — the Dask-DDF analogue (paper §II-B, §III-C-1).
+//!
+//! Asynchronous many-tasks execution: DDF operators decompose into a task
+//! DAG; a **central scheduler** dispatches ready tasks to a worker pool;
+//! data moves **through a serialized object store** (the Partd / Ray
+//! object-store analogue), never directly worker-to-worker. Both
+//! properties are the honest mechanics of the systems the paper
+//! benchmarks against — the scheduler round-trips per task and the
+//! store-mediated O(p²)-task shuffle are exactly the overheads Fig 8
+//! attributes Dask's limited scalability to. No artificial slowdowns are
+//! inserted anywhere.
+
+mod dag;
+mod ddf;
+mod scheduler;
+
+pub use dag::{Dep, TaskGraph, TaskId};
+pub use ddf::AmtDataFrame;
+pub use scheduler::AmtRuntime;

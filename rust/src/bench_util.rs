@@ -1,0 +1,124 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, median/mean reporting, and aligned table output used
+//! by both `cargo bench` targets and the `bench_driver` binary.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall times.
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    /// Median duration.
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    /// Mean duration.
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// Min duration.
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().expect("non-empty")
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>9.3?}  mean {:>9.3?}  min {:>9.3?}  (n={})",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.min(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+/// Time one invocation of `f`, returning (value, duration).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Render rows as an aligned table: `(label, column values)` with a header.
+pub fn print_table(title: &str, header: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(std::iter::once(8))
+        .max()
+        .unwrap_or(8);
+    for (_, cells) in rows {
+        for (w, c) in widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+    }
+    print!("{:<label_w$}", "");
+    for (h, w) in header.iter().zip(&widths) {
+        print!("  {h:>w$}");
+    }
+    println!();
+    for (label, cells) in rows {
+        print!("{label:<label_w$}");
+        for (c, w) in cells.iter().zip(&widths) {
+            print!("  {c:>w$}");
+        }
+        println!();
+    }
+}
+
+/// Format seconds compactly for table cells.
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let m = bench("sleep", 1, 3, || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median() >= Duration::from_millis(2));
+        assert!(m.report().contains("sleep"));
+    }
+
+    #[test]
+    fn fmt_paths() {
+        assert!(fmt_secs(Duration::from_millis(1500)).ends_with('s'));
+        assert!(fmt_secs(Duration::from_millis(5)).ends_with("ms"));
+    }
+}

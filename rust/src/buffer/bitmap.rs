@@ -1,0 +1,224 @@
+//! Packed validity bitmap, Arrow semantics: bit set ⇒ value is valid.
+
+/// Packed bitmap over `len` slots, little-endian bit order within u64 words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// All-valid bitmap of length `len`.
+    pub fn new_valid(len: usize) -> Self {
+        let mut b = Bitmap { words: vec![u64::MAX; len.div_ceil(64)], len };
+        b.mask_tail();
+        b
+    }
+
+    /// All-null bitmap of length `len`.
+    pub fn new_null(len: usize) -> Self {
+        Bitmap { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Bitmap from a bool slice (`true` = valid).
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut b = Bitmap::new_null(bits.len());
+        for (i, &v) in bits.iter().enumerate() {
+            if v {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when there are zero slots.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Validity of slot `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set validity of slot `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, valid: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        if valid {
+            *w |= 1 << (i & 63);
+        } else {
+            *w &= !(1 << (i & 63));
+        }
+    }
+
+    /// Append one slot.
+    pub fn push(&mut self, valid: bool) {
+        let i = self.len;
+        self.len += 1;
+        if self.words.len() * 64 < self.len {
+            self.words.push(0);
+        }
+        self.set(i, valid);
+    }
+
+    /// Number of valid slots (popcount).
+    pub fn count_valid(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of null slots.
+    pub fn count_null(&self) -> usize {
+        self.len - self.count_valid()
+    }
+
+    /// True when every slot is valid (fast path: drop the bitmap).
+    pub fn all_valid(&self) -> bool {
+        self.count_valid() == self.len
+    }
+
+    /// Gather: output bitmap with `out[j] = self[indices[j]]`.
+    pub fn gather(&self, indices: &[u32]) -> Bitmap {
+        let mut out = Bitmap::new_null(indices.len());
+        for (j, &i) in indices.iter().enumerate() {
+            if self.get(i as usize) {
+                out.set(j, true);
+            }
+        }
+        out
+    }
+
+    /// Concatenate two bitmaps.
+    pub fn concat(&self, other: &Bitmap) -> Bitmap {
+        let mut out = Bitmap::new_null(self.len + other.len);
+        for i in 0..self.len {
+            if self.get(i) {
+                out.set(i, true);
+            }
+        }
+        for i in 0..other.len {
+            if other.get(i) {
+                out.set(self.len + i, true);
+            }
+        }
+        out
+    }
+
+    /// Slice `[offset, offset+len)` into a new bitmap.
+    pub fn slice(&self, offset: usize, len: usize) -> Bitmap {
+        assert!(offset + len <= self.len);
+        let mut out = Bitmap::new_null(len);
+        for i in 0..len {
+            if self.get(offset + i) {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Intersection (both valid), for zipping two nullable columns.
+    pub fn and(&self, other: &Bitmap) -> Bitmap {
+        assert_eq!(self.len, other.len);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| a & b)
+            .collect();
+        Bitmap { words, len: self.len }
+    }
+
+    /// Raw words (wire format).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words + length (wire format).
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert!(words.len() == len.div_ceil(64));
+        let mut b = Bitmap { words, len };
+        b.mask_tail();
+        b
+    }
+
+    fn mask_tail(&mut self) {
+        let tail = self.len & 63;
+        if tail != 0 {
+            if let Some(w) = self.words.last_mut() {
+                *w &= (1u64 << tail) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_set_get() {
+        let mut b = Bitmap::new_null(100);
+        assert_eq!(b.count_valid(), 0);
+        b.set(0, true);
+        b.set(63, true);
+        b.set(64, true);
+        b.set(99, true);
+        assert!(b.get(0) && b.get(63) && b.get(64) && b.get(99));
+        assert!(!b.get(1));
+        assert_eq!(b.count_valid(), 4);
+        b.set(63, false);
+        assert_eq!(b.count_valid(), 3);
+    }
+
+    #[test]
+    fn valid_tail_masked() {
+        let b = Bitmap::new_valid(70);
+        assert_eq!(b.count_valid(), 70);
+        assert!(b.all_valid());
+    }
+
+    #[test]
+    fn push_grows() {
+        let mut b = Bitmap::new_null(0);
+        for i in 0..130 {
+            b.push(i % 3 == 0);
+        }
+        assert_eq!(b.len(), 130);
+        assert_eq!(b.count_valid(), (0..130).filter(|i| i % 3 == 0).count());
+    }
+
+    #[test]
+    fn gather_concat_slice() {
+        let b = Bitmap::from_bools(&[true, false, true, false, true]);
+        let g = b.gather(&[4, 1, 0]);
+        assert_eq!((g.get(0), g.get(1), g.get(2)), (true, false, true));
+        let c = b.concat(&g);
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.count_valid(), 5);
+        let s = c.slice(5, 3);
+        assert_eq!((s.get(0), s.get(1), s.get(2)), (true, false, true));
+    }
+
+    #[test]
+    fn and_zip() {
+        let a = Bitmap::from_bools(&[true, true, false]);
+        let b = Bitmap::from_bools(&[true, false, false]);
+        let c = a.and(&b);
+        assert_eq!((c.get(0), c.get(1), c.get(2)), (true, false, false));
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let a = Bitmap::from_bools(&[true, false, true]);
+        let b = Bitmap::from_words(a.words().to_vec(), 3);
+        assert_eq!(a, b);
+    }
+}

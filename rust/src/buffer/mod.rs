@@ -1,0 +1,8 @@
+//! Raw storage: validity bitmaps (Arrow-style packed bits).
+//!
+//! Fixed-width value storage is plain `Vec<T>` in the column layer; the only
+//! non-trivial buffer is the validity [`Bitmap`].
+
+mod bitmap;
+
+pub use bitmap::Bitmap;

@@ -1,0 +1,213 @@
+//! Incremental column construction.
+
+use super::{BoolColumn, Column, Float64Column, Int64Column, StringColumn};
+use crate::buffer::Bitmap;
+use crate::error::{Error, Result};
+use crate::types::{DType, Value};
+
+/// Appends dynamically-typed values into a column of a fixed dtype.
+#[derive(Debug)]
+pub struct ColumnBuilder {
+    dtype: DType,
+    i64s: Vec<i64>,
+    f64s: Vec<f64>,
+    bools: Vec<bool>,
+    str_offsets: Vec<i32>,
+    str_data: Vec<u8>,
+    validity: Bitmap,
+    any_null: bool,
+}
+
+impl ColumnBuilder {
+    /// New builder for `dtype`.
+    pub fn new(dtype: DType) -> Self {
+        Self::with_capacity(dtype, 0)
+    }
+
+    /// New builder with row-capacity hint.
+    pub fn with_capacity(dtype: DType, cap: usize) -> Self {
+        let mut b = ColumnBuilder {
+            dtype,
+            i64s: Vec::new(),
+            f64s: Vec::new(),
+            bools: Vec::new(),
+            str_offsets: Vec::new(),
+            str_data: Vec::new(),
+            validity: Bitmap::new_null(0),
+            any_null: false,
+        };
+        match dtype {
+            DType::Int64 => b.i64s.reserve(cap),
+            DType::Float64 => b.f64s.reserve(cap),
+            DType::Bool => b.bools.reserve(cap),
+            DType::Utf8 => {
+                b.str_offsets.reserve(cap + 1);
+                b.str_offsets.push(0);
+            }
+        }
+        if dtype != DType::Utf8 {
+            b.str_offsets.push(0);
+        }
+        b
+    }
+
+    /// Rows appended so far.
+    pub fn len(&self) -> usize {
+        self.validity.len()
+    }
+
+    /// True when no rows appended.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one value; must match the builder dtype (or be `Null`).
+    pub fn push(&mut self, v: Value) -> Result<()> {
+        match (&v, self.dtype) {
+            (Value::Null, _) => {
+                self.push_null();
+                return Ok(());
+            }
+            (Value::Int64(x), DType::Int64) => self.push_i64(*x),
+            (Value::Float64(x), DType::Float64) => self.push_f64(*x),
+            (Value::Int64(x), DType::Float64) => self.push_f64(*x as f64),
+            (Value::Utf8(s), DType::Utf8) => self.push_str(s),
+            (Value::Bool(b), DType::Bool) => self.push_bool(*b),
+            _ => {
+                return Err(Error::Type(format!(
+                    "cannot push {v:?} into {} column",
+                    self.dtype
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Append a valid i64 (dtype must be Int64).
+    pub fn push_i64(&mut self, x: i64) {
+        debug_assert_eq!(self.dtype, DType::Int64);
+        self.i64s.push(x);
+        self.validity.push(true);
+    }
+
+    /// Append a valid f64 (dtype must be Float64).
+    pub fn push_f64(&mut self, x: f64) {
+        debug_assert_eq!(self.dtype, DType::Float64);
+        self.f64s.push(x);
+        self.validity.push(true);
+    }
+
+    /// Append a valid bool (dtype must be Bool).
+    pub fn push_bool(&mut self, x: bool) {
+        debug_assert_eq!(self.dtype, DType::Bool);
+        self.bools.push(x);
+        self.validity.push(true);
+    }
+
+    /// Append a valid string (dtype must be Utf8).
+    pub fn push_str(&mut self, s: &str) {
+        debug_assert_eq!(self.dtype, DType::Utf8);
+        self.str_data.extend_from_slice(s.as_bytes());
+        self.str_offsets.push(self.str_data.len() as i32);
+        self.validity.push(true);
+    }
+
+    /// Append a null slot.
+    pub fn push_null(&mut self) {
+        self.any_null = true;
+        match self.dtype {
+            DType::Int64 => self.i64s.push(0),
+            DType::Float64 => self.f64s.push(0.0),
+            DType::Bool => self.bools.push(false),
+            DType::Utf8 => self.str_offsets.push(self.str_data.len() as i32),
+        }
+        self.validity.push(false);
+    }
+
+    /// Bulk-append `len` rows of `col` starting at `offset` (same dtype).
+    pub fn extend_from(&mut self, col: &Column, offset: usize, len: usize) {
+        assert_eq!(col.dtype(), self.dtype, "extend_from dtype mismatch");
+        match col {
+            Column::Int64(c) => self.i64s.extend_from_slice(&c.values[offset..offset + len]),
+            Column::Float64(c) => self.f64s.extend_from_slice(&c.values[offset..offset + len]),
+            Column::Bool(c) => self.bools.extend_from_slice(&c.values[offset..offset + len]),
+            Column::Utf8(c) => {
+                let lo = c.offsets[offset] as usize;
+                let hi = c.offsets[offset + len] as usize;
+                let base = self.str_data.len() as i32 - c.offsets[offset];
+                self.str_data.extend_from_slice(&c.data[lo..hi]);
+                for i in offset + 1..=offset + len {
+                    self.str_offsets.push(c.offsets[i] + base);
+                }
+            }
+        }
+        match col.validity() {
+            Some(b) => {
+                for i in offset..offset + len {
+                    let v = b.get(i);
+                    self.any_null |= !v;
+                    self.validity.push(v);
+                }
+            }
+            None => {
+                for _ in 0..len {
+                    self.validity.push(true);
+                }
+            }
+        }
+    }
+
+    /// Finalize into a column.
+    pub fn finish(self) -> Column {
+        let validity = if self.any_null { Some(self.validity) } else { None };
+        match self.dtype {
+            DType::Int64 => Column::Int64(Int64Column::new(self.i64s, validity)),
+            DType::Float64 => Column::Float64(Float64Column::new(self.f64s, validity)),
+            DType::Bool => Column::Bool(BoolColumn::new(self.bools, validity)),
+            DType::Utf8 => Column::Utf8(StringColumn::new(self.str_offsets, self.str_data, validity)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_with_nulls() {
+        let mut b = ColumnBuilder::new(DType::Utf8);
+        b.push_str("a");
+        b.push_null();
+        b.push_str("c");
+        let c = b.finish();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.null_count(), 1);
+        assert_eq!(c.value(2), Value::Utf8("c".into()));
+    }
+
+    #[test]
+    fn type_checked_push() {
+        let mut b = ColumnBuilder::new(DType::Int64);
+        assert!(b.push(Value::Utf8("x".into())).is_err());
+        assert!(b.push(Value::Int64(1)).is_ok());
+        assert!(b.push(Value::Null).is_ok());
+        assert_eq!(b.finish().len(), 2);
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let mut b = ColumnBuilder::new(DType::Float64);
+        b.push(Value::Int64(2)).unwrap();
+        assert_eq!(b.finish().value(0), Value::Float64(2.0));
+    }
+
+    #[test]
+    fn extend_from_strings_mid() {
+        let src = Column::from_strings(&["aa", "bb", "cc", "dd"]);
+        let mut b = ColumnBuilder::new(DType::Utf8);
+        b.extend_from(&src, 1, 2);
+        let c = b.finish();
+        assert_eq!(c.value(0), Value::Utf8("bb".into()));
+        assert_eq!(c.value(1), Value::Utf8("cc".into()));
+    }
+}

@@ -1,0 +1,263 @@
+//! Columns: homogeneously-typed, optionally-nullable vectors.
+//!
+//! Fixed-width columns store values in a plain `Vec`; strings use the Arrow
+//! offsets+data layout. A missing validity bitmap means "all valid" (the
+//! common fast path: kernels skip null checks entirely).
+
+mod builder;
+mod primitive;
+mod string;
+
+pub use builder::ColumnBuilder;
+pub use primitive::{BoolColumn, Float64Column, Int64Column};
+pub use string::StringColumn;
+
+use crate::buffer::Bitmap;
+use crate::error::{Error, Result};
+use crate::types::{DType, Value};
+
+/// A column of one of the supported domains.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    /// int64 column.
+    Int64(Int64Column),
+    /// float64 column.
+    Float64(Float64Column),
+    /// utf8 column.
+    Utf8(StringColumn),
+    /// bool column.
+    Bool(BoolColumn),
+}
+
+impl Column {
+    /// Column from i64 values, all valid.
+    pub fn from_i64(values: Vec<i64>) -> Column {
+        Column::Int64(Int64Column::new(values, None))
+    }
+
+    /// Column from f64 values, all valid.
+    pub fn from_f64(values: Vec<f64>) -> Column {
+        Column::Float64(Float64Column::new(values, None))
+    }
+
+    /// Column from strings, all valid.
+    pub fn from_strings<S: AsRef<str>>(values: &[S]) -> Column {
+        Column::Utf8(StringColumn::from_strs(values))
+    }
+
+    /// Column from bools, all valid.
+    pub fn from_bools(values: Vec<bool>) -> Column {
+        Column::Bool(BoolColumn::new(values, None))
+    }
+
+    /// Column from optional i64s (None ⇒ null).
+    pub fn from_opt_i64(values: &[Option<i64>]) -> Column {
+        let mut b = ColumnBuilder::new(DType::Int64);
+        for v in values {
+            match v {
+                Some(x) => b.push(Value::Int64(*x)).unwrap(),
+                None => b.push_null(),
+            }
+        }
+        b.finish()
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int64(c) => c.len(),
+            Column::Float64(c) => c.len(),
+            Column::Utf8(c) => c.len(),
+            Column::Bool(c) => c.len(),
+        }
+    }
+
+    /// True when the column has zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The column's domain.
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::Int64(_) => DType::Int64,
+            Column::Float64(_) => DType::Float64,
+            Column::Utf8(_) => DType::Utf8,
+            Column::Bool(_) => DType::Bool,
+        }
+    }
+
+    /// Validity bitmap; `None` means all-valid.
+    pub fn validity(&self) -> Option<&Bitmap> {
+        match self {
+            Column::Int64(c) => c.validity.as_ref(),
+            Column::Float64(c) => c.validity.as_ref(),
+            Column::Utf8(c) => c.validity.as_ref(),
+            Column::Bool(c) => c.validity.as_ref(),
+        }
+    }
+
+    /// Is row `i` valid?
+    #[inline]
+    pub fn is_valid(&self, i: usize) -> bool {
+        self.validity().map(|b| b.get(i)).unwrap_or(true)
+    }
+
+    /// Number of null rows.
+    pub fn null_count(&self) -> usize {
+        self.validity().map(|b| b.count_null()).unwrap_or(0)
+    }
+
+    /// Dynamically-typed cell access (slow path, for display/tests).
+    pub fn value(&self, i: usize) -> Value {
+        if !self.is_valid(i) {
+            return Value::Null;
+        }
+        match self {
+            Column::Int64(c) => Value::Int64(c.values[i]),
+            Column::Float64(c) => Value::Float64(c.values[i]),
+            Column::Utf8(c) => Value::Utf8(c.get(i).to_string()),
+            Column::Bool(c) => Value::Bool(c.values[i]),
+        }
+    }
+
+    /// Gather rows by index: `out[j] = self[indices[j]]`.
+    pub fn gather(&self, indices: &[u32]) -> Column {
+        match self {
+            Column::Int64(c) => Column::Int64(c.gather(indices)),
+            Column::Float64(c) => Column::Float64(c.gather(indices)),
+            Column::Utf8(c) => Column::Utf8(c.gather(indices)),
+            Column::Bool(c) => Column::Bool(c.gather(indices)),
+        }
+    }
+
+    /// Gather where index `u32::MAX` produces a null (outer-join fill).
+    pub fn gather_opt(&self, indices: &[u32]) -> Column {
+        match self {
+            Column::Int64(c) => Column::Int64(c.gather_opt(indices)),
+            Column::Float64(c) => Column::Float64(c.gather_opt(indices)),
+            Column::Utf8(c) => Column::Utf8(c.gather_opt(indices)),
+            Column::Bool(c) => Column::Bool(c.gather_opt(indices)),
+        }
+    }
+
+    /// Concatenate columns of the same dtype.
+    pub fn concat(cols: &[&Column]) -> Result<Column> {
+        let first = cols
+            .first()
+            .ok_or_else(|| Error::invalid("concat of zero columns"))?;
+        let dt = first.dtype();
+        for c in cols {
+            if c.dtype() != dt {
+                return Err(Error::Type(format!(
+                    "concat dtype mismatch: {} vs {}",
+                    dt,
+                    c.dtype()
+                )));
+            }
+        }
+        let mut b = ColumnBuilder::with_capacity(dt, cols.iter().map(|c| c.len()).sum());
+        for c in cols {
+            b.extend_from(c, 0, c.len());
+        }
+        Ok(b.finish())
+    }
+
+    /// Zero-copyish slice (`[offset, offset+len)`); strings re-pack data.
+    pub fn slice(&self, offset: usize, len: usize) -> Column {
+        let mut b = ColumnBuilder::with_capacity(self.dtype(), len);
+        b.extend_from(self, offset, len);
+        b.finish()
+    }
+
+    /// Borrow as i64 values (errors on other dtypes).
+    pub fn i64_values(&self) -> Result<&[i64]> {
+        match self {
+            Column::Int64(c) => Ok(&c.values),
+            other => Err(Error::Type(format!("expected int64, got {}", other.dtype()))),
+        }
+    }
+
+    /// Borrow as f64 values (errors on other dtypes).
+    pub fn f64_values(&self) -> Result<&[f64]> {
+        match self {
+            Column::Float64(c) => Ok(&c.values),
+            other => Err(Error::Type(format!("expected float64, got {}", other.dtype()))),
+        }
+    }
+
+    /// Approximate heap footprint in bytes (buffers only).
+    pub fn byte_size(&self) -> usize {
+        let vals = match self {
+            Column::Int64(c) => c.values.len() * 8,
+            Column::Float64(c) => c.values.len() * 8,
+            Column::Utf8(c) => c.data.len() + (c.offsets.len()) * 4,
+            Column::Bool(c) => c.values.len(),
+        };
+        vals + self.validity().map(|b| b.words().len() * 8).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_values() {
+        let c = Column::from_i64(vec![1, 2, 3]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.dtype(), DType::Int64);
+        assert_eq!(c.value(1), Value::Int64(2));
+        assert_eq!(c.null_count(), 0);
+    }
+
+    #[test]
+    fn nullable_column() {
+        let c = Column::from_opt_i64(&[Some(1), None, Some(3)]);
+        assert_eq!(c.null_count(), 1);
+        assert_eq!(c.value(1), Value::Null);
+        assert_eq!(c.value(2), Value::Int64(3));
+    }
+
+    #[test]
+    fn gather_and_concat() {
+        let c = Column::from_i64(vec![10, 20, 30, 40]);
+        let g = c.gather(&[3, 0, 0]);
+        assert_eq!(g.i64_values().unwrap(), &[40, 10, 10]);
+        let cc = Column::concat(&[&c, &g]).unwrap();
+        assert_eq!(cc.len(), 7);
+        assert_eq!(cc.value(4), Value::Int64(40));
+    }
+
+    #[test]
+    fn gather_opt_nulls() {
+        let c = Column::from_i64(vec![10, 20]);
+        let g = c.gather_opt(&[1, u32::MAX, 0]);
+        assert_eq!(g.value(0), Value::Int64(20));
+        assert_eq!(g.value(1), Value::Null);
+        assert_eq!(g.value(2), Value::Int64(10));
+    }
+
+    #[test]
+    fn string_columns() {
+        let c = Column::from_strings(&["ab", "", "xyz"]);
+        assert_eq!(c.value(0), Value::Utf8("ab".into()));
+        assert_eq!(c.value(1), Value::Utf8("".into()));
+        let g = c.gather(&[2, 2]);
+        assert_eq!(g.value(1), Value::Utf8("xyz".into()));
+    }
+
+    #[test]
+    fn slice_mid() {
+        let c = Column::from_i64((0..10).collect());
+        let s = c.slice(3, 4);
+        assert_eq!(s.i64_values().unwrap(), &[3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn concat_type_mismatch_errors() {
+        let a = Column::from_i64(vec![1]);
+        let b = Column::from_f64(vec![1.0]);
+        assert!(Column::concat(&[&a, &b]).is_err());
+    }
+}

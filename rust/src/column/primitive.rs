@@ -1,0 +1,99 @@
+//! Fixed-width column storage (int64 / float64 / bool).
+
+use crate::buffer::Bitmap;
+
+macro_rules! primitive_column {
+    ($name:ident, $ty:ty, $doc:expr) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone, PartialEq)]
+        pub struct $name {
+            /// Value buffer (junk at null slots).
+            pub values: Vec<$ty>,
+            /// Validity; `None` ⇒ all valid.
+            pub validity: Option<Bitmap>,
+        }
+
+        impl $name {
+            /// New column; a provided all-valid bitmap is normalized away.
+            pub fn new(values: Vec<$ty>, validity: Option<Bitmap>) -> Self {
+                let validity = validity.filter(|b| !b.all_valid());
+                if let Some(b) = &validity {
+                    assert_eq!(b.len(), values.len(), "validity length mismatch");
+                }
+                $name { values, validity }
+            }
+
+            /// Row count.
+            pub fn len(&self) -> usize {
+                self.values.len()
+            }
+
+            /// True when empty.
+            pub fn is_empty(&self) -> bool {
+                self.values.is_empty()
+            }
+
+            /// Gather rows by u32 indices.
+            pub fn gather(&self, indices: &[u32]) -> $name {
+                let mut values = Vec::with_capacity(indices.len());
+                for &i in indices {
+                    values.push(self.values[i as usize]);
+                }
+                let validity = self.validity.as_ref().map(|b| b.gather(indices));
+                $name::new(values, validity)
+            }
+
+            /// Gather with `u32::MAX` producing null slots.
+            pub fn gather_opt(&self, indices: &[u32]) -> $name {
+                let mut values = Vec::with_capacity(indices.len());
+                let mut validity = Bitmap::new_null(indices.len());
+                for (j, &i) in indices.iter().enumerate() {
+                    if i == u32::MAX {
+                        values.push(<$ty>::default());
+                    } else {
+                        values.push(self.values[i as usize]);
+                        let valid =
+                            self.validity.as_ref().map(|b| b.get(i as usize)).unwrap_or(true);
+                        if valid {
+                            validity.set(j, true);
+                        }
+                    }
+                }
+                $name::new(values, Some(validity))
+            }
+        }
+    };
+}
+
+primitive_column!(Int64Column, i64, "int64 column buffer.");
+primitive_column!(Float64Column, f64, "float64 column buffer.");
+primitive_column!(BoolColumn, bool, "bool column buffer (byte per value).");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_valid_bitmap_normalized() {
+        let c = Int64Column::new(vec![1, 2], Some(Bitmap::new_valid(2)));
+        assert!(c.validity.is_none());
+    }
+
+    #[test]
+    fn gather_keeps_validity() {
+        let c = Int64Column::new(vec![1, 2, 3], Some(Bitmap::from_bools(&[true, false, true])));
+        let g = c.gather(&[1, 2]);
+        assert!(!g.validity.as_ref().unwrap().get(0));
+        assert!(g.validity.as_ref().unwrap().get(1));
+    }
+
+    #[test]
+    fn gather_opt_sentinel() {
+        let c = Float64Column::new(vec![1.5, 2.5], None);
+        let g = c.gather_opt(&[u32::MAX, 1]);
+        let v = g.validity.unwrap();
+        assert!(!v.get(0));
+        assert!(v.get(1));
+        assert_eq!(g.values[1], 2.5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Variable-length UTF-8 column, Arrow offsets+data layout.
+
+use crate::buffer::Bitmap;
+
+/// UTF-8 column: `offsets.len() == len + 1`, string `i` is
+/// `data[offsets[i]..offsets[i+1]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StringColumn {
+    /// Monotone offsets into `data`, `len + 1` entries.
+    pub offsets: Vec<i32>,
+    /// Concatenated UTF-8 bytes.
+    pub data: Vec<u8>,
+    /// Validity; `None` ⇒ all valid.
+    pub validity: Option<Bitmap>,
+}
+
+impl StringColumn {
+    /// Build from raw parts (wire format path).
+    pub fn new(offsets: Vec<i32>, data: Vec<u8>, validity: Option<Bitmap>) -> Self {
+        assert!(!offsets.is_empty(), "offsets must have len+1 entries");
+        let validity = validity.filter(|b| !b.all_valid());
+        if let Some(b) = &validity {
+            assert_eq!(b.len(), offsets.len() - 1);
+        }
+        StringColumn { offsets, data, validity }
+    }
+
+    /// Build from string slices, all valid.
+    pub fn from_strs<S: AsRef<str>>(values: &[S]) -> Self {
+        let mut offsets = Vec::with_capacity(values.len() + 1);
+        let mut data = Vec::new();
+        offsets.push(0);
+        for v in values {
+            data.extend_from_slice(v.as_ref().as_bytes());
+            offsets.push(data.len() as i32);
+        }
+        StringColumn { offsets, data, validity: None }
+    }
+
+    /// Row count.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// String at row `i` (junk if the slot is null).
+    #[inline]
+    pub fn get(&self, i: usize) -> &str {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        // Data is only ever built from &str, so it is valid UTF-8.
+        std::str::from_utf8(&self.data[lo..hi]).expect("column holds valid utf8")
+    }
+
+    /// Gather rows by u32 indices.
+    pub fn gather(&self, indices: &[u32]) -> StringColumn {
+        let mut offsets = Vec::with_capacity(indices.len() + 1);
+        let mut data = Vec::new();
+        offsets.push(0i32);
+        for &i in indices {
+            let lo = self.offsets[i as usize] as usize;
+            let hi = self.offsets[i as usize + 1] as usize;
+            data.extend_from_slice(&self.data[lo..hi]);
+            offsets.push(data.len() as i32);
+        }
+        let validity = self.validity.as_ref().map(|b| b.gather(indices));
+        StringColumn::new(offsets, data, validity)
+    }
+
+    /// Gather with `u32::MAX` producing null slots.
+    pub fn gather_opt(&self, indices: &[u32]) -> StringColumn {
+        let mut offsets = Vec::with_capacity(indices.len() + 1);
+        let mut data = Vec::new();
+        let mut validity = Bitmap::new_null(indices.len());
+        offsets.push(0i32);
+        for (j, &i) in indices.iter().enumerate() {
+            if i != u32::MAX {
+                let lo = self.offsets[i as usize] as usize;
+                let hi = self.offsets[i as usize + 1] as usize;
+                data.extend_from_slice(&self.data[lo..hi]);
+                let valid = self.validity.as_ref().map(|b| b.get(i as usize)).unwrap_or(true);
+                if valid {
+                    validity.set(j, true);
+                }
+            }
+            offsets.push(data.len() as i32);
+        }
+        StringColumn::new(offsets, data, Some(validity))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout() {
+        let c = StringColumn::from_strs(&["ab", "", "xyz"]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(0), "ab");
+        assert_eq!(c.get(1), "");
+        assert_eq!(c.get(2), "xyz");
+        assert_eq!(c.offsets, vec![0, 2, 2, 5]);
+    }
+
+    #[test]
+    fn gather_repacks() {
+        let c = StringColumn::from_strs(&["aa", "bb", "cc"]);
+        let g = c.gather(&[2, 0]);
+        assert_eq!(g.get(0), "cc");
+        assert_eq!(g.get(1), "aa");
+        assert_eq!(g.data.len(), 4);
+    }
+
+    #[test]
+    fn gather_opt_null() {
+        let c = StringColumn::from_strs(&["aa"]);
+        let g = c.gather_opt(&[u32::MAX, 0]);
+        assert!(!g.validity.as_ref().unwrap().get(0));
+        assert_eq!(g.get(1), "aa");
+    }
+}

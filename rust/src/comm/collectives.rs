@@ -1,0 +1,353 @@
+//! Table-level collective routines — the communicator interface the DDF
+//! operators program against (paper §III-B-2: "these routines must be
+//! extended on data structures such as DFs, arrays, and scalars").
+//!
+//! [`CommContext`] bundles a transport, an algorithm set and a tag
+//! allocator; it is the object stored in each actor's state (the paper's
+//! `Cylon_env` communication context) and reused across operators —
+//! *"the state keeps this communication context alive for the duration of
+//! an application"* (§IV-A).
+
+use super::algorithms::{self, AlgoSet};
+use super::Communicator;
+use crate::error::Result;
+use crate::metrics::{Phase, PhaseTimers};
+use crate::table::{table_from_bytes, table_to_bytes, Table};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A live communication context: transport + algorithms + tag allocation
+/// + comm-phase timing.
+pub struct CommContext {
+    comm: Box<dyn Communicator>,
+    algos: AlgoSet,
+    // Collective ops consume tag ranges; every rank allocates in the same
+    // order (SPMD), so counters stay aligned without coordination.
+    next_tag: AtomicU64,
+    timers: Mutex<PhaseTimers>,
+}
+
+impl CommContext {
+    /// Wrap a transport with an algorithm set.
+    pub fn new(comm: Box<dyn Communicator>, algos: AlgoSet) -> Self {
+        CommContext {
+            comm,
+            algos,
+            next_tag: AtomicU64::new(1 << 16),
+            timers: Mutex::new(PhaseTimers::new()),
+        }
+    }
+
+    /// This worker's rank.
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Gang size.
+    pub fn world_size(&self) -> usize {
+        self.comm.world_size()
+    }
+
+    /// Transport label.
+    pub fn label(&self) -> &'static str {
+        self.comm.label()
+    }
+
+    /// Transport bytes sent so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.comm.bytes_sent()
+    }
+
+    /// The algorithm set in force.
+    pub fn algos(&self) -> AlgoSet {
+        self.algos
+    }
+
+    /// Snapshot and reset the accumulated communication timers.
+    pub fn take_timers(&self) -> PhaseTimers {
+        let mut t = self.timers.lock().expect("timers poisoned");
+        let snap = t.clone();
+        t.reset();
+        snap
+    }
+
+    fn alloc_tags(&self, n: u64) -> u64 {
+        self.next_tag.fetch_add(n, Ordering::SeqCst)
+    }
+
+    fn timed<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        let start = std::time::Instant::now();
+        let out = f();
+        self.timers
+            .lock()
+            .expect("timers poisoned")
+            .add(Phase::Communication, start.elapsed());
+        out
+    }
+
+    /// Synchronize the gang.
+    pub fn barrier(&self) -> Result<()> {
+        self.timed(|| self.comm.barrier())
+    }
+
+    /// Shuffle: send `parts[j]` to rank `j`, receive one table per rank,
+    /// concatenated. THE collective of DDF systems (paper Fig 2's
+    /// "shuffle" box).
+    pub fn shuffle(&self, parts: Vec<Table>) -> Result<Table> {
+        let p = self.world_size();
+        assert_eq!(parts.len(), p, "shuffle needs one partition per rank");
+        // reserve a generous tag range (pairwise/bruck consume ≤ p + 64)
+        let tag = self.alloc_tags(2 * p as u64 + 64);
+        self.timed(|| {
+            let payloads: Vec<Vec<u8>> = parts.iter().map(table_to_bytes).collect();
+            let received =
+                algorithms::all_to_all(self.comm.as_ref(), self.algos.all_to_all, payloads, tag)?;
+            let tables: Vec<Table> = received
+                .into_iter()
+                .map(|b| table_from_bytes(&b))
+                .collect::<Result<_>>()?;
+            Table::concat(&tables.iter().collect::<Vec<_>>())
+        })
+    }
+
+    /// Allgather: every rank contributes a table, every rank receives the
+    /// concatenation (used to distribute sort samples / small dimension
+    /// tables).
+    pub fn allgather(&self, t: &Table) -> Result<Table> {
+        let tag = self.alloc_tags(self.world_size() as u64 + 64);
+        self.timed(|| {
+            let blocks = algorithms::allgather(
+                self.comm.as_ref(),
+                self.algos.allgather,
+                table_to_bytes(t),
+                tag,
+            )?;
+            let tables: Vec<Table> = blocks
+                .into_iter()
+                .map(|b| table_from_bytes(&b))
+                .collect::<Result<_>>()?;
+            Table::concat(&tables.iter().collect::<Vec<_>>())
+        })
+    }
+
+    /// Broadcast a table from `root` to all ranks.
+    pub fn bcast(&self, t: Option<&Table>, root: usize) -> Result<Table> {
+        let tag = self.alloc_tags(64);
+        self.timed(|| {
+            let payload = t.map(table_to_bytes);
+            let out = algorithms::bcast(self.comm.as_ref(), self.algos.bcast, payload, root, tag)?;
+            table_from_bytes(&out)
+        })
+    }
+
+    /// Scatter: root distributes one table per rank (the paper's driver →
+    /// workers load path); every rank returns its partition.
+    pub fn scatter(&self, parts: Option<Vec<Table>>, root: usize) -> Result<Table> {
+        let tag = self.alloc_tags(64);
+        self.timed(|| {
+            let payloads = parts.map(|ps| ps.iter().map(table_to_bytes).collect());
+            let mine = algorithms::scatter(self.comm.as_ref(), payloads, root, tag)?;
+            table_from_bytes(&mine)
+        })
+    }
+
+    /// Gather all partitions at `root` (None on non-root ranks).
+    pub fn gather(&self, t: &Table, root: usize) -> Result<Option<Table>> {
+        let tag = self.alloc_tags(64);
+        self.timed(|| {
+            let blocks = algorithms::gather(self.comm.as_ref(), table_to_bytes(t), root, tag)?;
+            match blocks {
+                None => Ok(None),
+                Some(bs) => {
+                    let tables: Vec<Table> = bs
+                        .into_iter()
+                        .map(|b| table_from_bytes(&b))
+                        .collect::<Result<_>>()?;
+                    Ok(Some(Table::concat(&tables.iter().collect::<Vec<_>>())?))
+                }
+            }
+        })
+    }
+
+    /// Element-wise sum-allreduce of an i64 vector (row counts, histogram
+    /// merging).
+    pub fn allreduce_sum(&self, values: &[i64]) -> Result<Vec<i64>> {
+        let tag = self.alloc_tags(64);
+        self.timed(|| {
+            algorithms::allreduce_sum_i64(self.comm.as_ref(), values, self.algos.bcast, tag)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::comm::memory::MemoryFabric;
+
+    fn contexts(p: usize, algos: AlgoSet) -> Vec<CommContext> {
+        MemoryFabric::create(p)
+            .into_iter()
+            .map(|c| CommContext::new(Box::new(c), algos))
+            .collect()
+    }
+
+    fn run_gang<T: Send + 'static>(
+        ctxs: Vec<CommContext>,
+        f: impl Fn(&CommContext) -> Result<T> + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = std::sync::Arc::new(f);
+        let hs: Vec<_> = ctxs
+            .into_iter()
+            .map(|ctx| {
+                let f = f.clone();
+                std::thread::spawn(move || f(&ctx).unwrap())
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn check_shuffle(algos: AlgoSet, p: usize) {
+        let outs = run_gang(contexts(p, algos), move |ctx| {
+            // rank r sends table [r*10 + j] to rank j
+            let parts: Vec<Table> = (0..ctx.world_size())
+                .map(|j| {
+                    Table::from_columns(vec![(
+                        "v",
+                        Column::from_i64(vec![(ctx.rank() * 10 + j) as i64]),
+                    )])
+                    .unwrap()
+                })
+                .collect();
+            ctx.shuffle(parts)
+        });
+        for (j, t) in outs.iter().enumerate() {
+            let mut vals: Vec<i64> = t.column(0).unwrap().i64_values().unwrap().to_vec();
+            vals.sort_unstable();
+            let expect: Vec<i64> = (0..p).map(|r| (r * 10 + j) as i64).collect();
+            assert_eq!(vals, expect, "rank {j} received wrong rows");
+        }
+    }
+
+    #[test]
+    fn shuffle_pairwise_pow2() {
+        check_shuffle(AlgoSet::simple(), 4);
+    }
+
+    #[test]
+    fn shuffle_pairwise_non_pow2() {
+        check_shuffle(AlgoSet::simple(), 5);
+    }
+
+    #[test]
+    fn shuffle_bruck_pow2_and_non_pow2() {
+        check_shuffle(AlgoSet::optimized(), 4);
+        check_shuffle(AlgoSet::optimized(), 7);
+    }
+
+    #[test]
+    fn shuffle_linear() {
+        let mut a = AlgoSet::simple();
+        a.all_to_all = super::super::algorithms::AllToAllAlgo::Linear;
+        check_shuffle(a, 3);
+    }
+
+    #[test]
+    fn allgather_ring_vs_linear_agree() {
+        for algos in [AlgoSet::simple(), AlgoSet::optimized()] {
+            let outs = run_gang(contexts(3, algos), |ctx| {
+                let t = Table::from_columns(vec![(
+                    "v",
+                    Column::from_i64(vec![ctx.rank() as i64]),
+                )])
+                .unwrap();
+                ctx.allgather(&t)
+            });
+            for t in outs {
+                let mut vals: Vec<i64> = t.column(0).unwrap().i64_values().unwrap().to_vec();
+                vals.sort_unstable();
+                assert_eq!(vals, vec![0, 1, 2]);
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_tree_and_linear() {
+        for algos in [AlgoSet::simple(), AlgoSet::optimized()] {
+            for p in [1usize, 2, 5, 8] {
+                let outs = run_gang(contexts(p, algos), move |ctx| {
+                    let t = if ctx.rank() == 1 % p {
+                        Some(
+                            Table::from_columns(vec![("v", Column::from_i64(vec![77]))]).unwrap(),
+                        )
+                    } else {
+                        None
+                    };
+                    ctx.bcast(t.as_ref(), 1 % p)
+                });
+                for t in outs {
+                    assert_eq!(t.column(0).unwrap().i64_values().unwrap(), &[77]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_at_root() {
+        let outs = run_gang(contexts(4, AlgoSet::simple()), |ctx| {
+            let t =
+                Table::from_columns(vec![("v", Column::from_i64(vec![ctx.rank() as i64]))])
+                    .unwrap();
+            ctx.gather(&t, 2)
+        });
+        let some: Vec<_> = outs.iter().filter(|o| o.is_some()).collect();
+        assert_eq!(some.len(), 1);
+        let t = some[0].as_ref().unwrap();
+        let mut vals: Vec<i64> = t.column(0).unwrap().i64_values().unwrap().to_vec();
+        vals.sort_unstable();
+        assert_eq!(vals, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scatter_from_root() {
+        let outs = run_gang(contexts(3, AlgoSet::simple()), |ctx| {
+            let parts = (ctx.rank() == 1).then(|| {
+                (0..3)
+                    .map(|j| {
+                        Table::from_columns(vec![("v", Column::from_i64(vec![j * 100]))])
+                            .unwrap()
+                    })
+                    .collect::<Vec<_>>()
+            });
+            ctx.scatter(parts, 1)
+        });
+        for (rank, t) in outs.iter().enumerate() {
+            assert_eq!(
+                t.column(0).unwrap().i64_values().unwrap(),
+                &[rank as i64 * 100]
+            );
+        }
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        let outs = run_gang(contexts(4, AlgoSet::optimized()), |ctx| {
+            ctx.allreduce_sum(&[ctx.rank() as i64, 1])
+        });
+        for o in outs {
+            assert_eq!(o, vec![6, 4]);
+        }
+    }
+
+    #[test]
+    fn comm_timers_accumulate() {
+        let outs = run_gang(contexts(2, AlgoSet::simple()), |ctx| {
+            let t = Table::from_columns(vec![("v", Column::from_i64(vec![1]))]).unwrap();
+            ctx.allgather(&t)?;
+            Ok(ctx.take_timers())
+        });
+        for t in outs {
+            assert!(t.get(Phase::Communication) > std::time::Duration::ZERO);
+        }
+    }
+}

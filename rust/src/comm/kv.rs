@@ -1,0 +1,155 @@
+//! Rendezvous key-value store — the Redis/NFS analogue the paper's Gloo
+//! and UCX backends bootstrap from.
+//!
+//! TCP workers publish their listen addresses under well-known keys; peers
+//! poll until present. [`InMemoryKv`] serves thread-gang clusters,
+//! [`FileKv`] serves multi-process clusters (a directory standing in for
+//! NFS).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Blocking key-value rendezvous.
+pub trait KvStore: Send + Sync {
+    /// Publish `value` under `key` (idempotent overwrite).
+    fn put(&self, key: &str, value: &[u8]) -> Result<()>;
+
+    /// Block until `key` exists (or timeout), returning its value.
+    fn wait(&self, key: &str, timeout: Duration) -> Result<Vec<u8>>;
+
+    /// Non-blocking read.
+    fn get(&self, key: &str) -> Option<Vec<u8>>;
+}
+
+/// Shared-memory KV store for single-process clusters.
+#[derive(Default)]
+pub struct InMemoryKv {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    cv: Condvar,
+}
+
+impl InMemoryKv {
+    /// New empty store behind an Arc (shared across worker threads).
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+}
+
+impl KvStore for InMemoryKv {
+    fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        let mut m = self.map.lock().expect("kv poisoned");
+        m.insert(key.to_string(), value.to_vec());
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn wait(&self, key: &str, timeout: Duration) -> Result<Vec<u8>> {
+        let deadline = Instant::now() + timeout;
+        let mut m = self.map.lock().expect("kv poisoned");
+        loop {
+            if let Some(v) = m.get(key) {
+                return Ok(v.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::comm(format!("kv rendezvous timeout on '{key}'")));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(m, deadline - now)
+                .expect("kv poisoned");
+            m = guard;
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.map.lock().expect("kv poisoned").get(key).cloned()
+    }
+}
+
+/// Directory-backed KV store for multi-process clusters (NFS analogue).
+/// Values are written atomically via rename.
+pub struct FileKv {
+    dir: PathBuf,
+}
+
+impl FileKv {
+    /// Store rooted at `dir` (created if absent).
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(FileKv { dir })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        // keys are simple identifiers; escape slashes defensively
+        self.dir.join(key.replace('/', "_"))
+    }
+}
+
+impl KvStore for FileKv {
+    fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        // escape the key in the temp name too (keys contain '/')
+        let safe = key.replace('/', "_");
+        let tmp = self.dir.join(format!(".tmp_{safe}_{}", std::process::id()));
+        std::fs::write(&tmp, value)?;
+        std::fs::rename(&tmp, self.path_of(key))?;
+        Ok(())
+    }
+
+    fn wait(&self, key: &str, timeout: Duration) -> Result<Vec<u8>> {
+        let deadline = Instant::now() + timeout;
+        let p = self.path_of(key);
+        loop {
+            match std::fs::read(&p) {
+                Ok(v) => return Ok(v),
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => {
+                    return Err(Error::comm(format!("file-kv rendezvous timeout on '{key}'")))
+                }
+            }
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<Vec<u8>> {
+        std::fs::read(self.path_of(key)).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inmemory_put_wait() {
+        let kv = InMemoryKv::shared();
+        let kv2 = kv.clone();
+        let h = std::thread::spawn(move || kv2.wait("a", Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(10));
+        kv.put("a", b"hello").unwrap();
+        assert_eq!(h.join().unwrap().unwrap(), b"hello");
+    }
+
+    #[test]
+    fn inmemory_timeout() {
+        let kv = InMemoryKv::shared();
+        let e = kv.wait("missing", Duration::from_millis(20));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn file_kv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cylonflow_kv_{}", std::process::id()));
+        let kv = FileKv::new(&dir).unwrap();
+        kv.put("x", b"v1").unwrap();
+        assert_eq!(kv.get("x").unwrap(), b"v1");
+        assert_eq!(kv.wait("x", Duration::from_millis(50)).unwrap(), b"v1");
+        assert!(kv.wait("y", Duration::from_millis(30)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

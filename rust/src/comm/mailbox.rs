@@ -1,0 +1,52 @@
+//! Tag-matched mailbox shared by the memory and TCP transports.
+
+use crate::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// How long a recv waits before declaring the gang dead.
+pub(crate) const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// FIFO message queues keyed by `(from_rank, tag)` with blocking pop.
+pub(crate) struct Mailbox {
+    slots: Mutex<HashMap<(usize, u64), VecDeque<Vec<u8>>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> Self {
+        Mailbox { slots: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Enqueue a message (wakes blocked receivers).
+    pub(crate) fn push(&self, from: usize, tag: u64, data: Vec<u8>) {
+        let mut s = self.slots.lock().expect("mailbox poisoned");
+        s.entry((from, tag)).or_default().push_back(data);
+        self.cv.notify_all();
+    }
+
+    /// Blocking dequeue of the next message matching `(from, tag)`.
+    pub(crate) fn pop(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        let deadline = std::time::Instant::now() + RECV_TIMEOUT;
+        let mut s = self.slots.lock().expect("mailbox poisoned");
+        loop {
+            if let Some(q) = s.get_mut(&(from, tag)) {
+                if let Some(m) = q.pop_front() {
+                    return Ok(m);
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(Error::comm(format!(
+                    "recv timeout waiting for rank {from} tag {tag}"
+                )));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, deadline - now)
+                .expect("mailbox poisoned");
+            s = guard;
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! In-process communicator — the OpenMPI analogue.
+//!
+//! A [`MemoryFabric`] is the "mpirun world": it owns one tag-matched
+//! mailbox per rank and a barrier. Worker threads hold [`MemoryComm`]
+//! handles. Message passing is a `Vec<u8>` move (no copy), which is the
+//! honest analogue of MPI shared-memory eager transport on one node.
+
+use super::mailbox::Mailbox;
+use super::Communicator;
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+/// The shared world: mailboxes + barrier for `world_size` ranks.
+pub struct MemoryFabric {
+    mailboxes: Vec<Arc<Mailbox>>,
+    barrier: Arc<Barrier>,
+    world_size: usize,
+}
+
+impl MemoryFabric {
+    /// Build a fabric for `world_size` ranks; returns one communicator per
+    /// rank (hand them to the worker threads).
+    pub fn create(world_size: usize) -> Vec<MemoryComm> {
+        assert!(world_size > 0);
+        let fabric = Arc::new(MemoryFabric {
+            mailboxes: (0..world_size).map(|_| Arc::new(Mailbox::new())).collect(),
+            barrier: Arc::new(Barrier::new(world_size)),
+            world_size,
+        });
+        (0..world_size)
+            .map(|rank| MemoryComm {
+                fabric: fabric.clone(),
+                rank,
+                bytes_sent: Arc::new(AtomicU64::new(0)),
+            })
+            .collect()
+    }
+}
+
+/// Per-rank handle onto a [`MemoryFabric`].
+pub struct MemoryComm {
+    fabric: Arc<MemoryFabric>,
+    rank: usize,
+    bytes_sent: Arc<AtomicU64>,
+}
+
+impl Communicator for MemoryComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.fabric.world_size
+    }
+
+    fn send(&self, to: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        if to >= self.fabric.world_size {
+            return Err(Error::comm(format!("send to invalid rank {to}")));
+        }
+        self.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.fabric.mailboxes[to].push(self.rank, tag, data);
+        Ok(())
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        if from >= self.fabric.world_size {
+            return Err(Error::comm(format!("recv from invalid rank {from}")));
+        }
+        self.fabric.mailboxes[self.rank].pop(from, tag)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.fabric.barrier.wait();
+        Ok(())
+    }
+
+    fn label(&self) -> &'static str {
+        "memory(mpi)"
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let comms = MemoryFabric::create(2);
+        let (c0, c1) = {
+            let mut it = comms.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        let h = std::thread::spawn(move || {
+            let m = c1.recv(0, 7).unwrap();
+            c1.send(0, 8, m.iter().rev().copied().collect()).unwrap();
+        });
+        c0.send(1, 7, vec![1, 2, 3]).unwrap();
+        assert_eq!(c0.recv(1, 8).unwrap(), vec![3, 2, 1]);
+        h.join().unwrap();
+        assert_eq!(c0.bytes_sent(), 3);
+    }
+
+    #[test]
+    fn tag_matching_keeps_streams_separate() {
+        let comms = MemoryFabric::create(2);
+        let (c0, c1) = {
+            let mut it = comms.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        c0.send(1, 1, vec![1]).unwrap();
+        c0.send(1, 2, vec![2]).unwrap();
+        c0.send(1, 1, vec![3]).unwrap();
+        // receive out of send order, by tag
+        assert_eq!(c1.recv(0, 2).unwrap(), vec![2]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![1]);
+        assert_eq!(c1.recv(0, 1).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let comms = MemoryFabric::create(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let counter = counter.clone();
+                std::thread::spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                    c.barrier().unwrap();
+                    // after the barrier every increment must be visible
+                    assert_eq!(counter.load(Ordering::SeqCst), 4);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn invalid_rank_errors() {
+        let comms = MemoryFabric::create(1);
+        assert!(comms[0].send(5, 0, vec![]).is_err());
+        assert!(comms[0].recv(5, 0).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! The paper's **modularized communicator** (§IV-B).
+//!
+//! A [`Communicator`] provides rank-addressed, tag-matched point-to-point
+//! message passing inside one gang of workers. Everything above it —
+//! the collective routines the DDF operators need (shuffle/all-to-all,
+//! allgather, broadcast, gather, allreduce, barrier) — is implemented
+//! *generically* over the trait in [`collectives`], with selectable
+//! algorithms in [`algorithms`].
+//!
+//! Backends (the paper's OpenMPI / Gloo / UCX-UCC analogues, see
+//! DESIGN.md §4 for the substitution argument):
+//!
+//! | paper     | here                          | transport           | algorithms |
+//! |-----------|-------------------------------|---------------------|------------|
+//! | OpenMPI   | [`CommBackend::Memory`]       | in-proc rendezvous  | pairwise   |
+//! | Gloo      | [`CommBackend::Tcp`]          | TCP + KV bootstrap  | simple     |
+//! | UCX/UCC   | [`CommBackend::TcpUcc`]       | TCP + KV bootstrap  | optimized  |
+//!
+//! The *reason* the paper needs this module — MPI cannot bootstrap inside
+//! Dask/Ray-managed workers — maps here to: the memory backend only works
+//! when the gang shares one process (the "mpirun" world), while the TCP
+//! backends bootstrap from a key-value store ([`kv::KvStore`], the
+//! Redis/NFS analogue) and therefore work under any worker topology.
+
+pub mod algorithms;
+pub mod collectives;
+pub mod kv;
+pub(crate) mod mailbox;
+pub mod memory;
+pub mod tcp;
+
+pub use algorithms::{AlgoSet, AllGatherAlgo, AllToAllAlgo, BcastAlgo};
+pub use collectives::CommContext;
+pub use kv::{FileKv, InMemoryKv, KvStore};
+pub use memory::MemoryFabric;
+pub use tcp::TcpFabric;
+
+use crate::error::Result;
+
+/// Backend selector (paper Fig 7's x-axis sweeps these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommBackend {
+    /// In-process rendezvous channels — the OpenMPI analogue.
+    Memory,
+    /// TCP sockets + simple collective algorithms — the Gloo analogue.
+    Tcp,
+    /// TCP sockets + optimized collective algorithms — the UCX/UCC analogue.
+    TcpUcc,
+}
+
+impl CommBackend {
+    /// Parse from CLI/env string.
+    pub fn parse(s: &str) -> Option<CommBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "memory" | "mpi" => Some(CommBackend::Memory),
+            "tcp" | "gloo" => Some(CommBackend::Tcp),
+            "tcp-ucc" | "tcpucc" | "ucc" | "ucx" => Some(CommBackend::TcpUcc),
+            _ => None,
+        }
+    }
+
+    /// Display label (used in bench output rows).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CommBackend::Memory => "memory(mpi)",
+            CommBackend::Tcp => "tcp(gloo)",
+            CommBackend::TcpUcc => "tcp(ucx/ucc)",
+        }
+    }
+
+    /// The collective algorithm set this backend ships with.
+    pub fn algos(&self) -> AlgoSet {
+        match self {
+            CommBackend::Memory => AlgoSet::simple(),
+            CommBackend::Tcp => AlgoSet::simple(),
+            CommBackend::TcpUcc => AlgoSet::optimized(),
+        }
+    }
+}
+
+/// Rank-addressed, tag-matched point-to-point transport within a gang.
+///
+/// Implementations must be usable from one thread per rank; sends are
+/// non-blocking (buffered), receives block until a matching message
+/// arrives. Tags disambiguate concurrent collectives.
+pub trait Communicator: Send + Sync {
+    /// This worker's rank in `[0, world_size)`.
+    fn rank(&self) -> usize;
+
+    /// Gang size.
+    fn world_size(&self) -> usize;
+
+    /// Send `data` to rank `to` under `tag`.
+    fn send(&self, to: usize, tag: u64, data: Vec<u8>) -> Result<()>;
+
+    /// Block until a message from `from` under `tag` arrives.
+    fn recv(&self, from: usize, tag: u64) -> Result<Vec<u8>>;
+
+    /// Synchronize all ranks.
+    fn barrier(&self) -> Result<()>;
+
+    /// Backend label for metrics.
+    fn label(&self) -> &'static str;
+
+    /// Bytes sent so far (transport-level accounting for the benches).
+    fn bytes_sent(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(CommBackend::parse("memory"), Some(CommBackend::Memory));
+        assert_eq!(CommBackend::parse("MPI"), Some(CommBackend::Memory));
+        assert_eq!(CommBackend::parse("tcp"), Some(CommBackend::Tcp));
+        assert_eq!(CommBackend::parse("ucc"), Some(CommBackend::TcpUcc));
+        assert_eq!(CommBackend::parse("bogus"), None);
+    }
+
+    #[test]
+    fn backend_algo_presets() {
+        assert_eq!(CommBackend::Tcp.algos().all_to_all, AllToAllAlgo::Pairwise);
+        assert_eq!(CommBackend::TcpUcc.algos().all_to_all, AllToAllAlgo::Bruck);
+    }
+}

@@ -1,0 +1,91 @@
+//! Runtime configuration knobs, env-var driven.
+//!
+//! The paper's experiments sweep backends, parallelism and data sizes; the
+//! config gathers all knobs in one place so the bench driver and examples
+//! stay declarative.
+
+use crate::comm::CommBackend;
+
+/// Where key hashing runs: the AOT-compiled Pallas kernel via PJRT, the
+/// native Rust fallback (bit-identical), or auto (PJRT when artifacts are
+/// present).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashPath {
+    /// Use the PJRT-executed L1 kernel; error if artifacts are missing.
+    Pjrt,
+    /// Use the native Rust splitmix64 (identical numerics).
+    Native,
+    /// PJRT if `artifacts/` is loadable, else native.
+    Auto,
+}
+
+/// Global configuration for a CylonFlow run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Communicator backend for distributed operators.
+    pub backend: CommBackend,
+    /// Hash execution path.
+    pub hash_path: HashPath,
+    /// Directory holding `*.hlo.txt` AOT artifacts.
+    pub artifacts_dir: String,
+    /// Rows per PJRT kernel block (must match the lowered block size).
+    pub kernel_block_rows: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            backend: CommBackend::Memory,
+            hash_path: HashPath::Auto,
+            artifacts_dir: default_artifacts_dir(),
+            kernel_block_rows: 65_536,
+        }
+    }
+}
+
+impl Config {
+    /// Config from environment variables:
+    /// `CYLONFLOW_BACKEND` (memory|tcp|tcp-ucc), `CYLONFLOW_HASH`
+    /// (pjrt|native|auto), `CYLONFLOW_ARTIFACTS`.
+    pub fn from_env() -> Config {
+        let mut c = Config::default();
+        if let Ok(b) = std::env::var("CYLONFLOW_BACKEND") {
+            if let Some(parsed) = CommBackend::parse(&b) {
+                c.backend = parsed;
+            }
+        }
+        if let Ok(h) = std::env::var("CYLONFLOW_HASH") {
+            c.hash_path = match h.as_str() {
+                "pjrt" => HashPath::Pjrt,
+                "native" => HashPath::Native,
+                _ => HashPath::Auto,
+            };
+        }
+        if let Ok(d) = std::env::var("CYLONFLOW_ARTIFACTS") {
+            c.artifacts_dir = d;
+        }
+        c
+    }
+}
+
+/// `artifacts/` next to the workspace root (env `CYLONFLOW_ARTIFACTS` wins).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("CYLONFLOW_ARTIFACTS").unwrap_or_else(|_| {
+        // CARGO_MANIFEST_DIR is baked at compile time: repo root.
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = Config::default();
+        assert_eq!(c.backend, CommBackend::Memory);
+        assert_eq!(c.hash_path, HashPath::Auto);
+        assert_eq!(c.kernel_block_rows, 65_536);
+        assert!(c.artifacts_dir.ends_with("artifacts"));
+    }
+}

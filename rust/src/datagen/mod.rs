@@ -1,0 +1,143 @@
+//! Workload generation — the paper's benchmark datasets.
+//!
+//! The paper uses uniformly random data, two int64 columns, 10⁹ rows,
+//! **cardinality 90 %** (fraction of unique keys — the worst case for
+//! key-based operators). We reproduce that generator, seeded and scaled,
+//! plus a Zipf-ish skewed generator for the load-imbalance ablation.
+
+use crate::column::Column;
+use crate::table::Table;
+use crate::util::SplitMix64;
+
+/// The paper's benchmark table: two int64 columns `(k, v)`, `rows` rows,
+/// keys uniform over a domain sized so that the expected fraction of
+/// distinct keys ≈ `cardinality` (0 < cardinality ≤ 1).
+pub fn uniform_table(seed: u64, rows: usize, cardinality: f64) -> Table {
+    assert!((0.0..=1.0).contains(&cardinality) && cardinality > 0.0);
+    let domain = ((rows as f64 * cardinality).ceil() as u64).max(1);
+    let mut rng = SplitMix64::new(seed);
+    let keys: Vec<i64> = (0..rows).map(|_| rng.next_bounded(domain) as i64).collect();
+    // Values bounded to 1e6: realistic payload domain, keeps i64 sums
+    // far from overflow and f64 aggregate accumulation exact.
+    let vals: Vec<i64> = (0..rows).map(|_| rng.next_bounded(1_000_000) as i64).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("v", Column::from_i64(vals)),
+    ])
+    .expect("generated columns are well-formed")
+}
+
+/// Like [`uniform_table`] but with an extra float64 value column (for
+/// aggregate benchmarks that need a numeric payload).
+pub fn uniform_table_f64(seed: u64, rows: usize, cardinality: f64) -> Table {
+    let base = uniform_table(seed, rows, cardinality);
+    let mut rng = SplitMix64::new(seed ^ 0xf00d);
+    let f: Vec<f64> = (0..rows).map(|_| rng.next_f64() * 1000.0).collect();
+    base.with_column("w", Column::from_f64(f)).unwrap()
+}
+
+/// Skewed keys: a `hot_frac` fraction of rows all share one hot key, the
+/// rest are uniform. Models the "skewed datasets could starve some
+/// processes" scenario from the paper's §VI.
+pub fn skewed_table(seed: u64, rows: usize, hot_frac: f64) -> Table {
+    assert!((0.0..=1.0).contains(&hot_frac));
+    let mut rng = SplitMix64::new(seed);
+    let hot_key = 0i64;
+    let keys: Vec<i64> = (0..rows)
+        .map(|_| {
+            if rng.next_f64() < hot_frac {
+                hot_key
+            } else {
+                rng.next_bounded(rows as u64).max(1) as i64
+            }
+        })
+        .collect();
+    // Values bounded to 1e6: realistic payload domain, keeps i64 sums
+    // far from overflow and f64 aggregate accumulation exact.
+    let vals: Vec<i64> = (0..rows).map(|_| rng.next_bounded(1_000_000) as i64).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("v", Column::from_i64(vals)),
+    ])
+    .unwrap()
+}
+
+/// The per-worker slice of a logical `total_rows` dataset: worker `rank` of
+/// `world` generates its own partition locally (the paper loads partitions
+/// directly on workers; generation stands in for Parquet reads).
+pub fn partition_for_rank(
+    seed: u64,
+    total_rows: usize,
+    cardinality: f64,
+    rank: usize,
+    world: usize,
+) -> Table {
+    let base = total_rows / world;
+    let extra = total_rows % world;
+    let rows = base + usize::from(rank < extra);
+    // Mix the rank into the seed but keep the *key domain* global so joins
+    // across partitions hit (same key space on every worker).
+    let domain = ((total_rows as f64 * cardinality).ceil() as u64).max(1);
+    let mut rng = SplitMix64::new(seed ^ (rank as u64).wrapping_mul(0x9e37_79b9));
+    let keys: Vec<i64> = (0..rows).map(|_| rng.next_bounded(domain) as i64).collect();
+    // Values bounded to 1e6: realistic payload domain, keeps i64 sums
+    // far from overflow and f64 aggregate accumulation exact.
+    let vals: Vec<i64> = (0..rows).map(|_| rng.next_bounded(1_000_000) as i64).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("v", Column::from_i64(vals)),
+    ])
+    .unwrap()
+}
+
+/// Count of distinct values in an i64 slice (test helper for cardinality).
+pub fn distinct_count(xs: &[i64]) -> usize {
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = uniform_table(42, 1000, 0.9);
+        let b = uniform_table(42, 1000, 0.9);
+        assert_eq!(a, b);
+        assert_eq!(a.num_rows(), 1000);
+        assert_eq!(a.num_columns(), 2);
+    }
+
+    #[test]
+    fn cardinality_approx() {
+        let t = uniform_table(1, 100_000, 0.9);
+        let d = distinct_count(t.column(0).unwrap().i64_values().unwrap());
+        // E[distinct] for n draws over 0.9n domain ≈ 0.9n(1-e^{-1/0.9}) ≈ 0.60n;
+        // just check it is "high cardinality" rather than exact.
+        assert!(d > 50_000, "distinct {d}");
+        let low = uniform_table(1, 100_000, 0.001);
+        let dl = distinct_count(low.column(0).unwrap().i64_values().unwrap());
+        assert!(dl <= 100, "distinct {dl}");
+    }
+
+    #[test]
+    fn skew_concentrates() {
+        let t = skewed_table(7, 10_000, 0.5);
+        let keys = t.column(0).unwrap().i64_values().unwrap();
+        let hot = keys.iter().filter(|&&k| k == 0).count();
+        assert!((4_000..6_000).contains(&hot), "hot count {hot}");
+    }
+
+    #[test]
+    fn rank_partitions_cover_total() {
+        let world = 4;
+        let total = 1003;
+        let rows: usize = (0..world)
+            .map(|r| partition_for_rank(5, total, 0.9, r, world).num_rows())
+            .sum();
+        assert_eq!(rows, total);
+    }
+}

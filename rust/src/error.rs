@@ -1,0 +1,80 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result<T>`]. Variants
+//! are grouped by subsystem so callers (and tests) can match on failure
+//! classes — e.g. [`Error::Comm`] for transport faults vs [`Error::Schema`]
+//! for user errors.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by CylonFlow-RS subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Schema mismatch or invalid column reference in an operator call.
+    #[error("schema error: {0}")]
+    Schema(String),
+
+    /// Type mismatch between a requested operation and column dtype.
+    #[error("type error: {0}")]
+    Type(String),
+
+    /// Malformed argument (out-of-range index, empty key list, ...).
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Communication failure (socket, channel closed, rendezvous timeout).
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    /// Wire-format (de)serialization failure.
+    #[error("serialization error: {0}")]
+    Serde(String),
+
+    /// Executor/cluster lifecycle failure (worker panic, double-reserve...).
+    #[error("executor error: {0}")]
+    Executor(String),
+
+    /// Object store failure (missing key, timeout, repartition mismatch).
+    #[error("store error: {0}")]
+    Store(String),
+
+    /// AMT scheduler failure (cycle in task graph, lost task...).
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("pjrt runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled up from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper: schema error with formatted message.
+    pub fn schema(msg: impl Into<String>) -> Self {
+        Error::Schema(msg.into())
+    }
+    /// Helper: communication error with formatted message.
+    pub fn comm(msg: impl Into<String>) -> Self {
+        Error::Comm(msg.into())
+    }
+    /// Helper: invalid-argument error with formatted message.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArgument(msg.into())
+    }
+}

@@ -1,0 +1,56 @@
+//! Application futures: per-rank results + aggregated metrics.
+
+use crate::error::{Error, Result};
+use crate::metrics::{Breakdown, PhaseTimers};
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+/// Future over a submitted SPMD application: one result per rank.
+pub struct AppHandle<T> {
+    pub(crate) rx: Receiver<(usize, Result<T>, PhaseTimers)>,
+    pub(crate) parallelism: usize,
+    pub(crate) timeout: Duration,
+}
+
+impl<T> AppHandle<T> {
+    /// Block for all ranks; returns rank-ordered results and keeps the
+    /// per-rank metrics available via the second element.
+    pub fn wait_with_metrics(self) -> Result<(Vec<T>, Breakdown)> {
+        let mut slots: Vec<Option<(T, PhaseTimers)>> = Vec::new();
+        for _ in 0..self.parallelism {
+            slots.push(None);
+        }
+        let mut first_err: Option<Error> = None;
+        for _ in 0..self.parallelism {
+            let (rank, result, timers) = self
+                .rx
+                .recv_timeout(self.timeout)
+                .map_err(|e| Error::Executor(format!("app result channel: {e}")))?;
+            match result {
+                Ok(v) => slots[rank] = Some((v, timers)),
+                Err(e) => {
+                    // keep draining so the gang isn't left half-joined
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut values = Vec::with_capacity(self.parallelism);
+        let mut timers = Vec::with_capacity(self.parallelism);
+        for s in slots {
+            let (v, t) = s.ok_or_else(|| Error::Executor("missing rank result".into()))?;
+            values.push(v);
+            timers.push(t);
+        }
+        Ok((values, Breakdown::new(timers)))
+    }
+
+    /// Block for all ranks; rank-ordered results.
+    pub fn wait(self) -> Result<Vec<T>> {
+        Ok(self.wait_with_metrics()?.0)
+    }
+}

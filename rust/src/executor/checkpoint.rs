@@ -1,0 +1,155 @@
+//! Coarse-grained checkpointing (paper §VI: "a checkpointing mechanism
+//! that would allow a much coarser-level fault tolerance" — BSP comm
+//! channels cannot survive worker loss, so recovery restarts the
+//! application from the last checkpoint instead).
+//!
+//! Each rank persists its partition of a named checkpoint (wire-format
+//! files under a directory); a restarted application reloads them —
+//! including across *different* parallelisms, via the same logical
+//! repartition the CylonStore uses.
+
+use crate::error::{Error, Result};
+use crate::table::{table_from_bytes, table_to_bytes, Table};
+use std::path::{Path, PathBuf};
+
+/// Directory-backed checkpoint store.
+pub struct Checkpointer {
+    dir: PathBuf,
+}
+
+impl Checkpointer {
+    /// Checkpointer rooted at `dir` (created if absent).
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Checkpointer> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Checkpointer { dir })
+    }
+
+    fn part_path(&self, name: &str, rank: usize) -> PathBuf {
+        self.dir.join(format!("{name}.part{rank}.cyt"))
+    }
+
+    fn meta_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.meta"))
+    }
+
+    /// Persist rank `rank`'s partition of checkpoint `name` (atomic
+    /// write-rename). Rank 0 also records the world size.
+    pub fn save(&self, name: &str, rank: usize, world: usize, t: &Table) -> Result<()> {
+        let tmp = self.dir.join(format!(".tmp.{name}.{rank}.{}", std::process::id()));
+        std::fs::write(&tmp, table_to_bytes(t))?;
+        std::fs::rename(&tmp, self.part_path(name, rank))?;
+        if rank == 0 {
+            std::fs::write(self.meta_path(name), world.to_string())?;
+        }
+        Ok(())
+    }
+
+    /// True when checkpoint `name` is complete (meta + all parts).
+    pub fn exists(&self, name: &str) -> bool {
+        let Ok(world) = self.world_of(name) else { return false };
+        (0..world).all(|r| self.part_path(name, r).exists())
+    }
+
+    /// The parallelism `name` was written with.
+    pub fn world_of(&self, name: &str) -> Result<usize> {
+        let s = std::fs::read_to_string(self.meta_path(name))
+            .map_err(|_| Error::Store(format!("no checkpoint '{name}'")))?;
+        s.trim()
+            .parse()
+            .map_err(|e| Error::Store(format!("bad checkpoint meta: {e}")))
+    }
+
+    /// Restore this rank's partition. When the restarting gang has a
+    /// different parallelism, partitions are logically concatenated and
+    /// re-split evenly (same semantics as the CylonStore repartition).
+    pub fn restore(&self, name: &str, rank: usize, world: usize) -> Result<Table> {
+        let saved_world = self.world_of(name)?;
+        if world == saved_world {
+            let bytes = std::fs::read(self.part_path(name, rank))?;
+            return table_from_bytes(&bytes);
+        }
+        // repartition path: load all, concat, take our even slice
+        let mut parts = Vec::with_capacity(saved_world);
+        for r in 0..saved_world {
+            let bytes = std::fs::read(self.part_path(name, r))?;
+            parts.push(table_from_bytes(&bytes)?);
+        }
+        let all = Table::concat(&parts.iter().collect::<Vec<_>>())?;
+        Ok(all.split_even(world)[rank].clone())
+    }
+
+    /// Delete checkpoint `name`.
+    pub fn delete(&self, name: &str) -> Result<()> {
+        if let Ok(world) = self.world_of(name) {
+            for r in 0..world {
+                let _ = std::fs::remove_file(self.part_path(name, r));
+            }
+        }
+        let _ = std::fs::remove_file(self.meta_path(name));
+        Ok(())
+    }
+
+    /// Root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cylonflow-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_restore_same_world() {
+        let ck = Checkpointer::new(tmpdir("same")).unwrap();
+        let t = datagen::uniform_table(1, 1000, 0.9);
+        for (r, part) in t.split_even(3).iter().enumerate() {
+            ck.save("stage1", r, 3, part).unwrap();
+        }
+        assert!(ck.exists("stage1"));
+        assert_eq!(ck.world_of("stage1").unwrap(), 3);
+        let got = ck.restore("stage1", 1, 3).unwrap();
+        assert_eq!(got, t.split_even(3)[1]);
+    }
+
+    #[test]
+    fn restore_across_parallelisms() {
+        let ck = Checkpointer::new(tmpdir("repart")).unwrap();
+        let t = datagen::uniform_table(2, 999, 0.9);
+        for (r, part) in t.split_even(4).iter().enumerate() {
+            ck.save("s", r, 4, part).unwrap();
+        }
+        let mut total = 0;
+        for r in 0..2 {
+            total += ck.restore("s", r, 2).unwrap().num_rows();
+        }
+        assert_eq!(total, 999);
+    }
+
+    #[test]
+    fn incomplete_checkpoint_not_visible() {
+        let ck = Checkpointer::new(tmpdir("incomplete")).unwrap();
+        let t = datagen::uniform_table(3, 100, 0.9);
+        ck.save("x", 0, 2, &t).unwrap(); // rank 1 never arrives
+        assert!(!ck.exists("x"));
+        assert!(ck.restore("x", 1, 2).is_err());
+    }
+
+    #[test]
+    fn delete_removes() {
+        let ck = Checkpointer::new(tmpdir("del")).unwrap();
+        let t = datagen::uniform_table(4, 10, 0.9);
+        ck.save("x", 0, 1, &t).unwrap();
+        assert!(ck.exists("x"));
+        ck.delete("x").unwrap();
+        assert!(!ck.exists("x"));
+    }
+}

@@ -1,0 +1,115 @@
+//! [`Cluster`] — the running Dask/Ray cluster analogue.
+
+use super::placement::{PlacementGroup, Reservations};
+use super::worker::WorkerHandle;
+use crate::comm::kv::InMemoryKv;
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::store::ObjectStore;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+
+pub(crate) struct ClusterInner {
+    pub workers: Vec<WorkerHandle>,
+    pub store: Arc<ObjectStore>,
+    pub kv: Arc<InMemoryKv>,
+    pub reservations: Mutex<Reservations>,
+    pub gang_counter: AtomicU64,
+    pub config: Config,
+}
+
+/// A pool of long-lived workers + cluster services (object store,
+/// rendezvous KV). Cheap to clone (Arc).
+#[derive(Clone)]
+pub struct Cluster {
+    pub(crate) inner: Arc<ClusterInner>,
+}
+
+impl Cluster {
+    /// Start an in-process cluster with `n_workers` worker threads and the
+    /// given config.
+    pub fn with_config(n_workers: usize, config: Config) -> Result<Cluster> {
+        if n_workers == 0 {
+            return Err(Error::Executor("cluster needs at least one worker".into()));
+        }
+        let store = ObjectStore::shared();
+        let workers = (0..n_workers)
+            .map(|i| WorkerHandle::spawn(i, store.clone()))
+            .collect();
+        Ok(Cluster {
+            inner: Arc::new(ClusterInner {
+                workers,
+                store,
+                kv: InMemoryKv::shared(),
+                reservations: Mutex::new(Reservations::new(n_workers)),
+                gang_counter: AtomicU64::new(0),
+                config,
+            }),
+        })
+    }
+
+    /// Start a local cluster with the default (env-driven) config.
+    pub fn local(n_workers: usize) -> Result<Cluster> {
+        Self::with_config(n_workers, Config::from_env())
+    }
+
+    /// Total workers in the pool.
+    pub fn num_workers(&self) -> usize {
+        self.inner.workers.len()
+    }
+
+    /// Workers not currently reserved by a placement group.
+    pub fn available_workers(&self) -> usize {
+        self.inner
+            .reservations
+            .lock()
+            .expect("reservations poisoned")
+            .available()
+    }
+
+    /// Gang-reserve `parallelism` workers (Ray placement group / Dask
+    /// worker-list analogue). Errors if the cluster cannot satisfy the
+    /// request — gang scheduling is all-or-nothing.
+    pub fn reserve(&self, parallelism: usize) -> Result<PlacementGroup> {
+        PlacementGroup::reserve(self.clone(), parallelism)
+    }
+
+    /// The cluster object store.
+    pub fn object_store(&self) -> Arc<ObjectStore> {
+        self.inner.store.clone()
+    }
+
+    /// The cluster config.
+    pub fn config(&self) -> &Config {
+        &self.inner.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_spins_up_and_reserves() {
+        let c = Cluster::local(4).unwrap();
+        assert_eq!(c.num_workers(), 4);
+        assert_eq!(c.available_workers(), 4);
+        let pg = c.reserve(3).unwrap();
+        assert_eq!(pg.parallelism(), 3);
+        assert_eq!(c.available_workers(), 1);
+        drop(pg);
+        assert_eq!(c.available_workers(), 4);
+    }
+
+    #[test]
+    fn overcommit_rejected() {
+        let c = Cluster::local(2).unwrap();
+        let _pg = c.reserve(2).unwrap();
+        assert!(c.reserve(1).is_err());
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(Cluster::local(0).is_err());
+    }
+}

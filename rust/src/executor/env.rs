@@ -1,0 +1,77 @@
+//! [`CylonEnv`] — the paper's `Cylon_env`: what application closures
+//! receive inside an actor. Holds the live communication context (kept
+//! alive in actor state across calls — the pseudo-BSP statefulness), the
+//! store handle, the key-hasher and per-phase metrics.
+
+use crate::comm::CommContext;
+use crate::metrics::{Phase, PhaseTimers};
+use crate::ops::KeyHasher;
+use crate::store::CylonStore;
+use std::cell::RefCell;
+
+/// Per-actor execution environment.
+pub struct CylonEnv {
+    comm: CommContext,
+    store: CylonStore,
+    hasher: Box<dyn KeyHasher>,
+    timers: RefCell<PhaseTimers>,
+}
+
+impl CylonEnv {
+    /// Assemble an environment (called once per actor at gang start).
+    pub fn new(comm: CommContext, store: CylonStore, hasher: Box<dyn KeyHasher>) -> Self {
+        CylonEnv {
+            comm,
+            store,
+            hasher,
+            timers: RefCell::new(PhaseTimers::new()),
+        }
+    }
+
+    /// This actor's rank within the gang.
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Gang size (the application's parallelism).
+    pub fn world_size(&self) -> usize {
+        self.comm.world_size()
+    }
+
+    /// The live communication context.
+    pub fn comm(&self) -> &CommContext {
+        &self.comm
+    }
+
+    /// The inter-application data store (paper §IV-C).
+    pub fn store(&self) -> &CylonStore {
+        &self.store
+    }
+
+    /// The key-hash execution path (PJRT Pallas kernel or native).
+    pub fn hasher(&self) -> &dyn KeyHasher {
+        self.hasher.as_ref()
+    }
+
+    /// Time `f` under `phase` (compute/auxiliary; communication is timed
+    /// inside [`CommContext`]).
+    pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        self.timers.borrow_mut().time(phase, f)
+    }
+
+    /// Snapshot and reset this actor's metrics, folding in the
+    /// communication timers.
+    pub fn take_metrics(&self) -> PhaseTimers {
+        let mut t = self.timers.borrow_mut();
+        let mut snap = t.clone();
+        t.reset();
+        drop(t);
+        snap.merge(&self.comm.take_timers());
+        snap
+    }
+
+    /// Convenience: synchronize the gang.
+    pub fn barrier(&self) -> crate::error::Result<()> {
+        self.comm.barrier()
+    }
+}

@@ -1,0 +1,340 @@
+//! [`CylonExecutor`] — submit SPMD applications to a gang of stateful
+//! actors (paper §IV-A).
+
+use super::app::AppHandle;
+use super::cluster::Cluster;
+use super::env::CylonEnv;
+use super::placement::PlacementGroup;
+use crate::comm::{CommBackend, CommContext, MemoryFabric, TcpFabric};
+use crate::error::{Error, Result};
+use crate::store::CylonStore;
+use std::any::Any;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Default wait for application completion.
+const APP_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// A user "executable class" instantiated inside each actor
+/// (paper: `start_executable`). State persists across
+/// [`CylonExecutor::execute`] calls.
+pub trait Executable: Send + 'static {
+    /// Called once inside the actor after instantiation.
+    fn on_start(&mut self, _env: &CylonEnv) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// One actor's state: the env (with its live communication context) and an
+/// optional user executable.
+struct ActorInstance {
+    env: CylonEnv,
+    executable: Option<Box<dyn Any + Send>>,
+}
+
+/// Executor over a gang-reserved placement group. Creating one instantiates
+/// a `CylonActor` (env + communication context) on every reserved worker;
+/// dropping it tears the actors down and releases the reservation.
+pub struct CylonExecutor {
+    pg: PlacementGroup,
+    exec_id: u64,
+}
+
+impl CylonExecutor {
+    /// Reserve `parallelism` workers on `cluster` and boot the actor gang.
+    pub fn new(cluster: &Cluster, parallelism: usize) -> Result<CylonExecutor> {
+        let pg = cluster.reserve(parallelism)?;
+        Self::on(pg)
+    }
+
+    /// Boot an actor gang on an existing placement group.
+    pub fn on(pg: PlacementGroup) -> Result<CylonExecutor> {
+        let cluster = pg.cluster().clone();
+        let inner = &cluster.inner;
+        let exec_id = inner.gang_counter.fetch_add(1, Ordering::SeqCst);
+        let p = pg.parallelism();
+        let config = cluster.config().clone();
+
+        // Build the communicator gang driver-side (the "expensive
+        // Cylon_env instantiation" the paper keeps alive in actor state).
+        let backend = config.backend;
+        let mut contexts: Vec<CommContext> = match backend {
+            CommBackend::Memory => MemoryFabric::create(p)
+                .into_iter()
+                .map(|c| CommContext::new(Box::new(c), backend.algos()))
+                .collect(),
+            CommBackend::Tcp | CommBackend::TcpUcc => {
+                let gang = format!("gang-{exec_id}");
+                TcpFabric::create(p, inner.kv.clone(), &gang)?
+                    .into_iter()
+                    .map(|c| CommContext::new(Box::new(c), backend.algos()))
+                    .collect()
+            }
+        };
+
+        // Instantiate the actor (env) on each reserved worker.
+        for rank in (0..p).rev() {
+            let comm = contexts.pop().expect("one context per rank");
+            let store = CylonStore::new(inner.store.clone(), rank, p);
+            let hasher = crate::runtime::make_hasher(&config);
+            let worker_id = pg.worker_ids()[rank];
+            inner.workers[worker_id].submit(Box::new(move |state| {
+                let env = CylonEnv::new(comm, store, hasher);
+                state.actors.insert(
+                    exec_id,
+                    Box::new(ActorInstance { env, executable: None }),
+                );
+            }))?;
+        }
+        Ok(CylonExecutor { pg, exec_id })
+    }
+
+    /// The gang's parallelism.
+    pub fn parallelism(&self) -> usize {
+        self.pg.parallelism()
+    }
+
+    /// The placement group backing this executor.
+    pub fn placement_group(&self) -> &PlacementGroup {
+        &self.pg
+    }
+
+    fn submit_raw<T: Send + 'static>(
+        &self,
+        f: Arc<dyn Fn(&mut ActorInstance) -> Result<T> + Send + Sync>,
+    ) -> Result<AppHandle<T>> {
+        let p = self.pg.parallelism();
+        let (tx, rx) = channel();
+        let exec_id = self.exec_id;
+        for rank in 0..p {
+            let worker_id = self.pg.worker_ids()[rank];
+            let tx = tx.clone();
+            let f = f.clone();
+            self.pg.cluster().inner.workers[worker_id].submit(Box::new(move |state| {
+                // Isolate user-code panics: a panicking app must fail its
+                // future, not kill the long-lived worker (Dask/Ray actors
+                // survive task exceptions the same way).
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<(T, crate::metrics::PhaseTimers)> {
+                        let actor = state
+                            .actors
+                            .get_mut(&exec_id)
+                            .ok_or_else(|| Error::Executor("actor not initialized".into()))?
+                            .downcast_mut::<ActorInstance>()
+                            .ok_or_else(|| {
+                                Error::Executor("actor state type mismatch".into())
+                            })?;
+                        let v = f(actor)?;
+                        let m = actor.env.take_metrics();
+                        Ok((v, m))
+                    },
+                ))
+                .unwrap_or_else(|panic| {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    Err(Error::Executor(format!("application panicked: {msg}")))
+                });
+                match out {
+                    Ok((v, m)) => {
+                        let _ = tx.send((rank, Ok(v), m));
+                    }
+                    Err(e) => {
+                        let _ = tx.send((rank, Err(e), crate::metrics::PhaseTimers::new()));
+                    }
+                }
+            }))?;
+        }
+        Ok(AppHandle { rx, parallelism: p, timeout: APP_TIMEOUT })
+    }
+
+    /// Run an SPMD lambda on every actor — the paper's `run_Cylon`.
+    /// Returns a future over rank-ordered results.
+    pub fn run<T, F>(&self, f: F) -> Result<AppHandle<T>>
+    where
+        T: Send + 'static,
+        F: Fn(&CylonEnv) -> Result<T> + Send + Sync + 'static,
+    {
+        self.submit_raw(Arc::new(move |actor: &mut ActorInstance| f(&actor.env)))
+    }
+
+    /// Instantiate a user executable inside every actor — the paper's
+    /// `start_executable`. The factory receives the rank.
+    pub fn start_executable<E, F>(&self, factory: F) -> Result<AppHandle<()>>
+    where
+        E: Executable,
+        F: Fn(usize) -> E + Send + Sync + 'static,
+    {
+        self.submit_raw(Arc::new(move |actor: &mut ActorInstance| {
+            let mut exe = factory(actor.env.rank());
+            exe.on_start(&actor.env)?;
+            actor.executable = Some(Box::new(exe));
+            Ok(())
+        }))
+    }
+
+    /// Call a method on the resident executable — the paper's
+    /// `execute_Cylon`. The executable's state persists between calls.
+    pub fn execute<E, T, F>(&self, f: F) -> Result<AppHandle<T>>
+    where
+        E: Executable,
+        T: Send + 'static,
+        F: Fn(&mut E, &CylonEnv) -> Result<T> + Send + Sync + 'static,
+    {
+        self.submit_raw(Arc::new(move |actor: &mut ActorInstance| {
+            let exe = actor
+                .executable
+                .as_mut()
+                .ok_or_else(|| Error::Executor("no executable started".into()))?
+                .downcast_mut::<E>()
+                .ok_or_else(|| Error::Executor("executable type mismatch".into()))?;
+            f(exe, &actor.env)
+        }))
+    }
+}
+
+impl Drop for CylonExecutor {
+    fn drop(&mut self) {
+        // Tear down actor state (drops comm contexts, closing sockets).
+        let exec_id = self.exec_id;
+        for &worker_id in self.pg.worker_ids() {
+            let _ = self.pg.cluster().inner.workers[worker_id].submit(Box::new(move |state| {
+                state.actors.remove(&exec_id);
+            }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_lambda_spmd() {
+        let c = Cluster::local(4).unwrap();
+        let exec = CylonExecutor::new(&c, 4).unwrap();
+        let out = exec
+            .run(|env| Ok(env.rank() * 10 + env.world_size()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out, vec![4, 14, 24, 34]);
+    }
+
+    #[test]
+    fn comm_context_lives_across_calls() {
+        let c = Cluster::local(2).unwrap();
+        let exec = CylonExecutor::new(&c, 2).unwrap();
+        for round in 0..3u64 {
+            let out = exec
+                .run(move |env| {
+                    // ring: send rank to the right, recv from the left
+                    env.comm().allreduce_sum(&[env.rank() as i64 + round as i64])
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(out[0], vec![1 + 2 * round as i64]);
+            assert_eq!(out[0], out[1]);
+        }
+    }
+
+    #[test]
+    fn executable_state_persists() {
+        struct Counter {
+            count: i64,
+            rank_bonus: i64,
+        }
+        impl Executable for Counter {
+            fn on_start(&mut self, env: &CylonEnv) -> Result<()> {
+                self.rank_bonus = env.rank() as i64;
+                Ok(())
+            }
+        }
+        let c = Cluster::local(2).unwrap();
+        let exec = CylonExecutor::new(&c, 2).unwrap();
+        exec.start_executable(|_| Counter { count: 0, rank_bonus: -1 })
+            .unwrap()
+            .wait()
+            .unwrap();
+        for _ in 0..3 {
+            exec.execute(|e: &mut Counter, _env| {
+                e.count += 1;
+                Ok(e.count)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        }
+        let out = exec
+            .execute(|e: &mut Counter, _| Ok((e.count, e.rank_bonus)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out, vec![(3, 0), (3, 1)]);
+    }
+
+    #[test]
+    fn execute_without_start_errors() {
+        struct Nop;
+        impl Executable for Nop {}
+        let c = Cluster::local(1).unwrap();
+        let exec = CylonExecutor::new(&c, 1).unwrap();
+        let r = exec.execute(|_: &mut Nop, _| Ok(())).unwrap().wait();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn panicking_app_fails_future_but_worker_survives() {
+        let c = Cluster::local(2).unwrap();
+        let exec = CylonExecutor::new(&c, 2).unwrap();
+        let r = exec
+            .run(|env| -> Result<()> {
+                if env.rank() == 0 {
+                    panic!("deliberate panic in user code");
+                }
+                Ok(())
+            })
+            .unwrap()
+            .wait();
+        match r {
+            Err(Error::Executor(msg)) => assert!(msg.contains("deliberate panic")),
+            other => panic!("expected executor error, got {other:?}"),
+        }
+        // the gang (and its comm context) is still usable
+        let ok = exec
+            .run(|env| env.comm().allreduce_sum(&[1]))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(ok[0], vec![2]);
+    }
+
+    #[test]
+    fn two_apps_on_disjoint_gangs() {
+        let c = Cluster::local(4).unwrap();
+        let a = CylonExecutor::new(&c, 2).unwrap();
+        let b = CylonExecutor::new(&c, 2).unwrap();
+        let ha = a.run(|env| Ok(env.world_size())).unwrap();
+        let hb = b.run(|env| Ok(env.world_size() * 100)).unwrap();
+        assert_eq!(ha.wait().unwrap(), vec![2, 2]);
+        assert_eq!(hb.wait().unwrap(), vec![200, 200]);
+    }
+
+    #[test]
+    fn worker_released_after_drop() {
+        let c = Cluster::local(2).unwrap();
+        {
+            let _exec = CylonExecutor::new(&c, 2).unwrap();
+            assert_eq!(c.available_workers(), 0);
+        }
+        assert_eq!(c.available_workers(), 2);
+        // workers are reusable for a fresh gang
+        let exec = CylonExecutor::new(&c, 2).unwrap();
+        assert_eq!(exec.run(|_| Ok(1)).unwrap().wait().unwrap(), vec![1, 1]);
+    }
+}

@@ -1,0 +1,39 @@
+//! The **stateful pseudo-BSP execution environment** (paper §IV-A) — the
+//! CylonFlow contribution itself.
+//!
+//! - [`Cluster`] stands in for a running Dask/Ray cluster: a pool of
+//!   long-lived workers plus a cluster object store and rendezvous KV.
+//! - [`PlacementGroup`] is Ray's placement-group / Dask's
+//!   `Client.map(workers=...)` analogue: gang-reserving a slice of the
+//!   cluster for one application (resource partitioning).
+//! - [`CylonExecutor`] submits SPMD applications to a gang. On creation it
+//!   instantiates an **actor** on each reserved worker whose state holds a
+//!   live [`crate::comm::CommContext`] — the expensive-to-build
+//!   communication context the paper keeps alive across calls — plus a
+//!   [`crate::store::CylonStore`] handle and the key-hasher (PJRT or
+//!   native).
+//! - [`CylonEnv`] is what application closures receive (the paper's
+//!   `Cylon_env`): rank, world, communicator, store, metrics.
+//!
+//! Endpoints mirror the paper's actor API: [`CylonExecutor::run`] ↔
+//! `run_Cylon` (lambda), [`CylonExecutor::start_executable`] +
+//! [`CylonExecutor::execute`] ↔ `start_executable`/`execute_Cylon`
+//! (stateful executable class).
+
+mod app;
+pub mod checkpoint;
+mod cluster;
+mod env;
+#[allow(clippy::module_inception)]
+mod executor;
+mod placement;
+pub mod process;
+mod worker;
+
+pub use app::AppHandle;
+pub use checkpoint::Checkpointer;
+pub use cluster::Cluster;
+pub use env::CylonEnv;
+pub use executor::{CylonExecutor, Executable};
+pub use placement::PlacementGroup;
+pub use process::{launch_process_gang, run_named_app, run_worker};

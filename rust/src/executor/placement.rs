@@ -1,0 +1,121 @@
+//! Placement groups — gang scheduling / resource partitioning (paper
+//! §IV-A-2: Ray `Placement Groups`, Dask `Client.map` over a chosen worker
+//! list).
+
+use super::cluster::Cluster;
+use crate::error::{Error, Result};
+
+/// Book-keeping of which cluster workers are reserved.
+pub(crate) struct Reservations {
+    reserved: Vec<bool>,
+}
+
+impl Reservations {
+    pub fn new(n: usize) -> Self {
+        Reservations { reserved: vec![false; n] }
+    }
+
+    pub fn available(&self) -> usize {
+        self.reserved.iter().filter(|r| !**r).count()
+    }
+
+    /// All-or-nothing claim of `p` workers; returns their ids.
+    pub fn claim(&mut self, p: usize) -> Result<Vec<usize>> {
+        let free: Vec<usize> = self
+            .reserved
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !**r)
+            .map(|(i, _)| i)
+            .collect();
+        if free.len() < p {
+            return Err(Error::Executor(format!(
+                "gang scheduling failed: requested {p} workers, {} available",
+                free.len()
+            )));
+        }
+        let chosen = free[..p].to_vec();
+        for &i in &chosen {
+            self.reserved[i] = true;
+        }
+        Ok(chosen)
+    }
+
+    pub fn release(&mut self, ids: &[usize]) {
+        for &i in ids {
+            self.reserved[i] = false;
+        }
+    }
+}
+
+/// A gang-reservation of cluster workers. Releases on drop.
+pub struct PlacementGroup {
+    cluster: Cluster,
+    worker_ids: Vec<usize>,
+}
+
+impl PlacementGroup {
+    /// Reserve `parallelism` workers on `cluster` (all-or-nothing).
+    pub fn reserve(cluster: Cluster, parallelism: usize) -> Result<PlacementGroup> {
+        if parallelism == 0 {
+            return Err(Error::invalid("placement group of zero workers"));
+        }
+        let worker_ids = cluster
+            .inner
+            .reservations
+            .lock()
+            .expect("reservations poisoned")
+            .claim(parallelism)?;
+        Ok(PlacementGroup { cluster, worker_ids })
+    }
+
+    /// Number of reserved workers (the app's parallelism).
+    pub fn parallelism(&self) -> usize {
+        self.worker_ids.len()
+    }
+
+    /// Reserved worker ids (rank order).
+    pub fn worker_ids(&self) -> &[usize] {
+        &self.worker_ids
+    }
+
+    /// The owning cluster.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl Drop for PlacementGroup {
+    fn drop(&mut self) {
+        self.cluster
+            .inner
+            .reservations
+            .lock()
+            .expect("reservations poisoned")
+            .release(&self.worker_ids);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_disjoint_groups() {
+        let c = Cluster::local(5).unwrap();
+        let a = c.reserve(2).unwrap();
+        let b = c.reserve(3).unwrap();
+        let mut all: Vec<usize> = a.worker_ids().iter().chain(b.worker_ids()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 5, "groups overlap");
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let c = Cluster::local(3).unwrap();
+        let _a = c.reserve(2).unwrap();
+        assert!(c.reserve(2).is_err());
+        assert_eq!(c.available_workers(), 1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Cluster workers: long-lived threads executing submitted tasks against
+//! per-worker actor state (the remote-object model of Dask/Ray actors).
+
+use crate::store::ObjectStore;
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Mutable state owned by one worker thread.
+#[allow(dead_code)] // worker_id/store model worker-local services; actors
+                    // currently receive their own store handles at init
+pub(crate) struct WorkerState {
+    /// Worker id within the cluster.
+    pub worker_id: usize,
+    /// Actor instances keyed by (executor id): the paper's remote objects.
+    /// Values are `CylonEnv`s and user executables, type-erased.
+    pub actors: HashMap<u64, Box<dyn Any + Send>>,
+    /// Cluster object store handle.
+    pub store: Arc<ObjectStore>,
+}
+
+/// A unit of work shipped to a worker thread.
+pub(crate) type WorkerTask = Box<dyn FnOnce(&mut WorkerState) + Send>;
+
+/// Handle to a running worker thread.
+pub(crate) struct WorkerHandle {
+    pub sender: Sender<WorkerTask>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn worker `worker_id` sharing `store`.
+    pub fn spawn(worker_id: usize, store: Arc<ObjectStore>) -> WorkerHandle {
+        let (tx, rx) = channel::<WorkerTask>();
+        let join = std::thread::Builder::new()
+            .name(format!("cylonflow-worker-{worker_id}"))
+            .spawn(move || {
+                let mut state = WorkerState {
+                    worker_id,
+                    actors: HashMap::new(),
+                    store,
+                };
+                while let Ok(task) = rx.recv() {
+                    task(&mut state);
+                }
+            })
+            .expect("spawn worker thread");
+        WorkerHandle { sender: tx, join: Some(join) }
+    }
+
+    /// Submit a task (fire-and-forget; results travel via channels the
+    /// task captures).
+    pub fn submit(&self, task: WorkerTask) -> crate::error::Result<()> {
+        self.sender
+            .send(task)
+            .map_err(|_| crate::error::Error::Executor("worker thread is gone".into()))
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        // Closing the channel ends the worker loop.
+        let (dead_tx, _) = channel::<WorkerTask>();
+        let _ = std::mem::replace(&mut self.sender, dead_tx);
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}

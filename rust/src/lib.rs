@@ -1,0 +1,96 @@
+//! # CylonFlow-RS
+//!
+//! A Rust reproduction of **CylonFlow** (*"Supercharging Distributed
+//! Computing Environments For High Performance Data Engineering"*,
+//! CS.DC 2023): high-performance distributed dataframes (HP-DDF) executed on
+//! a **stateful pseudo-BSP actor runtime** with a **modular communicator**,
+//! plus the AMT (Dask-DDF-like) and actor map-reduce (Spark-like) baselines
+//! the paper evaluates against.
+//!
+//! The compute hot-spot (64-bit key hashing used by every key-based
+//! operator) is authored in JAX/Pallas, AOT-lowered to HLO text at build
+//! time (`make artifacts`), and executed from Rust through PJRT — Python is
+//! never on the request path. See `DESIGN.md` for the full system inventory.
+//!
+//! ## Layer map
+//!
+//! - [`table`], [`column`], [`buffer`], [`types`] — Arrow-like columnar
+//!   dataframe substrate (the Cylon table analogue).
+//! - [`ops`] — local (single-partition) operators: hash join, sort-merge
+//!   join, hash groupby, multi-key sort, filter, project, add_scalar,
+//!   hash partition.
+//! - [`comm`] — the paper's *modularized communicator*: a [`comm::Communicator`]
+//!   trait with in-process (`memory`, MPI-analog) and TCP (`tcp`,
+//!   Gloo/UCX-analog) backends and selectable collective algorithms.
+//! - [`executor`] — the paper's *stateful pseudo-BSP environment*: clusters,
+//!   placement groups (gang scheduling), `CylonExecutor` / `CylonEnv`.
+//! - [`dist`] — distributed DDF operators composed from `ops` × `comm`.
+//! - [`amt`] — AMT baseline (central scheduler + object-store shuffle).
+//! - [`actor_mr`] — actor map-reduce baseline.
+//! - [`store`] — object store + `CylonStore` for inter-app data sharing.
+//! - [`stream`] — sharded micro-batch ingestion with bounded-queue
+//!   backpressure (the data-pipeline orchestrator).
+//! - [`executor::process`] — multi-process gangs (leader spawns workers,
+//!   file-KV rendezvous, TCP) and [`executor::checkpoint`] — coarse
+//!   fault tolerance (paper §VI).
+//! - [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` kernels.
+//! - [`metrics`] — phase timers for the comm/compute breakdown experiments.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cylonflow::prelude::*;
+//!
+//! let cluster = Cluster::local(4).unwrap();
+//! let exec = CylonExecutor::new(&cluster, 4).unwrap();
+//! let out = exec
+//!     .run(|env| {
+//!         let df = datagen::uniform_table(env.rank() as u64, 1_000, 0.9);
+//!         let other = datagen::uniform_table(100 + env.rank() as u64, 1_000, 0.9);
+//!         dist::join(&df, &other, &JoinOptions::inner(0, 0), env)
+//!     })
+//!     .unwrap()
+//!     .wait()
+//!     .unwrap();
+//! println!("partition row counts: {:?}",
+//!          out.iter().map(|t| t.num_rows()).collect::<Vec<_>>());
+//! ```
+
+pub mod actor_mr;
+pub mod amt;
+pub mod baseline_naive;
+pub mod bench_util;
+pub mod buffer;
+pub mod column;
+pub mod comm;
+pub mod config;
+pub mod datagen;
+pub mod dist;
+pub mod error;
+pub mod executor;
+pub mod metrics;
+pub mod ops;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod store;
+pub mod stream;
+pub mod table;
+pub mod types;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for applications.
+pub mod prelude {
+    pub use crate::column::Column;
+    pub use crate::comm::{CommBackend, Communicator};
+    pub use crate::datagen;
+    pub use crate::dist;
+    pub use crate::dist::{AggSpec, JoinOptions, SortOptions};
+    pub use crate::error::{Error, Result};
+    pub use crate::executor::{Cluster, CylonEnv, CylonExecutor, PlacementGroup};
+    pub use crate::ops;
+    pub use crate::store::CylonStore;
+    pub use crate::table::Table;
+    pub use crate::types::{DType, Schema, Value};
+}

@@ -1,0 +1,223 @@
+//! `cylonflow` CLI — cluster smoke operations and quick distributed-op
+//! invocations (the leader entrypoint).
+//!
+//! ```text
+//! cylonflow info
+//! cylonflow smoke   [--workers N] [--backend memory|tcp|tcp-ucc]
+//! cylonflow join    [--rows N] [--workers N] [--backend B] [--cardinality C]
+//! cylonflow groupby [--rows N] [--workers N] [--backend B]
+//! cylonflow sort    [--rows N] [--workers N] [--backend B]
+//! cylonflow pipeline[--rows N] [--workers N] [--backend B]
+//! ```
+//!
+//! Figure/table regeneration lives in the `bench_driver` binary.
+
+use cylonflow::comm::CommBackend;
+use cylonflow::config::Config;
+use cylonflow::prelude::*;
+use cylonflow::runtime;
+use std::time::Instant;
+
+struct Args {
+    cmd: String,
+    rows: usize,
+    workers: usize,
+    backend: CommBackend,
+    cardinality: f64,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+    };
+    Args {
+        cmd,
+        rows: flag("--rows").and_then(|v| v.parse().ok()).unwrap_or(1_000_000),
+        workers: flag("--workers").and_then(|v| v.parse().ok()).unwrap_or(4),
+        backend: flag("--backend")
+            .and_then(|v| CommBackend::parse(&v))
+            .unwrap_or(CommBackend::Memory),
+        cardinality: flag("--cardinality").and_then(|v| v.parse().ok()).unwrap_or(0.9),
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "info" => info(),
+        "smoke" => smoke(args),
+        "join" | "groupby" | "sort" | "pipeline" => op(args),
+        "launch" => launch(args),
+        "worker" => worker(),
+        _ => {
+            println!(
+                "usage: cylonflow <info|smoke|join|groupby|sort|pipeline> \
+                 [--rows N] [--workers N] [--backend memory|tcp|tcp-ucc] [--cardinality C]\n\
+                 \n\
+                 multi-process mode:\n\
+                 cylonflow launch --app <smoke|join|groupby|sort|pipeline> --workers N [--rows N]\n\
+                 cylonflow worker --rank R --world P --gang G --kv-dir D --app A [--param k=v]..."
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Leader mode: spawn worker *processes* that rendezvous via a file KV and
+/// talk real TCP — the multi-node deployment analogue.
+fn launch(args: &Args) -> Result<()> {
+    use cylonflow::executor::process;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+    };
+    let app = flag("--app").unwrap_or_else(|| "smoke".into());
+    let mut params = process::AppParams::new();
+    params.insert("rows".into(), args.rows.to_string());
+    params.insert("cardinality".into(), args.cardinality.to_string());
+    let binary = process::current_binary()?;
+    let t0 = Instant::now();
+    let results = process::launch_process_gang(
+        &binary,
+        args.workers,
+        &app,
+        &params,
+        std::time::Duration::from_secs(600),
+    )?;
+    println!(
+        "process gang ({} workers) app '{app}' finished in {:.3}s",
+        args.workers,
+        t0.elapsed().as_secs_f64()
+    );
+    for (rank, r) in results.iter().enumerate() {
+        println!("  rank {rank}: {r}");
+    }
+    Ok(())
+}
+
+/// Worker mode (spawned by `launch`).
+fn worker() -> Result<()> {
+    use cylonflow::executor::process;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+    };
+    let rank: usize = flag("--rank")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| cylonflow::Error::invalid("worker needs --rank"))?;
+    let world: usize = flag("--world")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| cylonflow::Error::invalid("worker needs --world"))?;
+    let gang = flag("--gang").unwrap_or_else(|| "pg".into());
+    let kv_dir = flag("--kv-dir")
+        .ok_or_else(|| cylonflow::Error::invalid("worker needs --kv-dir"))?;
+    let app = flag("--app").unwrap_or_else(|| "smoke".into());
+    let mut params = process::AppParams::new();
+    for (i, a) in argv.iter().enumerate() {
+        if a == "--param" {
+            if let Some(kv) = argv.get(i + 1) {
+                if let Some((k, v)) = kv.split_once('=') {
+                    params.insert(k.to_string(), v.to_string());
+                }
+            }
+        }
+    }
+    process::run_worker(rank, world, &gang, std::path::Path::new(&kv_dir), &app, &params)
+}
+
+fn info() -> Result<()> {
+    let cfg = Config::from_env();
+    println!("cylonflow-rs {}", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir : {}", cfg.artifacts_dir);
+    println!(
+        "artifacts     : {}",
+        if runtime::artifacts_present(&cfg.artifacts_dir) {
+            "present (PJRT hash path available)"
+        } else {
+            "missing (native hash fallback; run `make artifacts`)"
+        }
+    );
+    println!("default backend: {}", cfg.backend.label());
+    Ok(())
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let mut cfg = Config::from_env();
+    cfg.backend = args.backend;
+    let cluster = Cluster::with_config(args.workers, cfg)?;
+    let exec = CylonExecutor::new(&cluster, args.workers)?;
+    let out = exec
+        .run(|env| {
+            let sum = env.comm().allreduce_sum(&[env.rank() as i64 + 1])?;
+            Ok(sum[0])
+        })?
+        .wait()?;
+    let p = args.workers as i64;
+    assert_eq!(out[0], p * (p + 1) / 2);
+    println!(
+        "smoke OK: {} workers over {} agree on allreduce={}",
+        args.workers,
+        args.backend.label(),
+        out[0]
+    );
+    Ok(())
+}
+
+fn op(args: &Args) -> Result<()> {
+    let mut cfg = Config::from_env();
+    cfg.backend = args.backend;
+    let cluster = Cluster::with_config(args.workers, cfg)?;
+    let exec = CylonExecutor::new(&cluster, args.workers)?;
+    let rows = args.rows;
+    let card = args.cardinality;
+    let cmd = args.cmd.clone();
+    let start = Instant::now();
+    let (out, breakdown) = exec
+        .run(move |env| {
+            let l = datagen::partition_for_rank(11, rows, card, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(23, rows, card, env.rank(), env.world_size());
+            env.barrier()?;
+            let t = match cmd.as_str() {
+                "join" => dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?,
+                "groupby" => dist::groupby(
+                    &l,
+                    &[0],
+                    &[AggSpec::new(1, dist::AggFun::Sum)],
+                    dist::GroupbyStrategy::default(),
+                    env,
+                )?,
+                "sort" => dist::sort(&l, &SortOptions::by(0), env)?,
+                "pipeline" => dist::pipeline(&l, &r, 1.0, env)?.table,
+                _ => unreachable!(),
+            };
+            Ok(t.num_rows())
+        })?
+        .wait_with_metrics()?;
+    let total: usize = out.iter().sum();
+    println!(
+        "{} rows={} workers={} backend={} -> {} output rows in {:.3}s",
+        args.cmd,
+        rows,
+        args.workers,
+        args.backend.label(),
+        total,
+        start.elapsed().as_secs_f64()
+    );
+    println!("breakdown: {}", breakdown.report());
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Phase metrics — what Fig 6 (communication vs computation breakdown) is
+//! made of.
+//!
+//! Each worker tracks wall time per [`Phase`]; the driver aggregates
+//! per-rank reports into a [`Breakdown`].
+
+use crate::util::Stopwatch;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// The phases distributed operators are decomposed into (paper §III-B:
+/// core local operator, auxiliary local operators, communication operators).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Core local compute (local join/groupby/sort kernels).
+    Compute,
+    /// Auxiliary local work (hash partitioning, split/gather, serde).
+    Auxiliary,
+    /// Communication (collective routines on the wire / channel).
+    Communication,
+}
+
+impl Phase {
+    /// Stable label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Auxiliary => "auxiliary",
+            Phase::Communication => "communication",
+        }
+    }
+}
+
+/// Per-worker phase timer. Cheap to clone into reports.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    timers: BTreeMap<Phase, Duration>,
+}
+
+impl PhaseTimers {
+    /// Fresh, all-zero timers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let mut sw = Stopwatch::new();
+        let out = sw.time(f);
+        self.add(phase, sw.elapsed());
+        out
+    }
+
+    /// Add a pre-measured duration to `phase`.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        *self.timers.entry(phase).or_default() += d;
+    }
+
+    /// Accumulated duration for `phase`.
+    pub fn get(&self, phase: Phase) -> Duration {
+        self.timers.get(&phase).copied().unwrap_or_default()
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> Duration {
+        self.timers.values().sum()
+    }
+
+    /// Merge another report into this one (sums).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (p, d) in &other.timers {
+            *self.timers.entry(*p).or_default() += *d;
+        }
+    }
+
+    /// Reset all timers to zero.
+    pub fn reset(&mut self) {
+        self.timers.clear();
+    }
+}
+
+/// Aggregated comm/compute breakdown across a gang of workers.
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    /// Per-rank timer snapshots.
+    pub per_rank: Vec<PhaseTimers>,
+}
+
+impl Breakdown {
+    /// Build from per-rank snapshots.
+    pub fn new(per_rank: Vec<PhaseTimers>) -> Self {
+        Breakdown { per_rank }
+    }
+
+    /// Mean duration of `phase` across ranks.
+    pub fn mean(&self, phase: Phase) -> Duration {
+        if self.per_rank.is_empty() {
+            return Duration::ZERO;
+        }
+        let sum: Duration = self.per_rank.iter().map(|t| t.get(phase)).sum();
+        sum / self.per_rank.len() as u32
+    }
+
+    /// Max duration of `phase` across ranks (the BSP critical path).
+    pub fn max(&self, phase: Phase) -> Duration {
+        self.per_rank
+            .iter()
+            .map(|t| t.get(phase))
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// Fraction of mean wall time spent in communication — the Fig 6 y-axis.
+    pub fn comm_fraction(&self) -> f64 {
+        let comm = self.mean(Phase::Communication).as_secs_f64();
+        let total: f64 = [Phase::Compute, Phase::Auxiliary, Phase::Communication]
+            .iter()
+            .map(|p| self.mean(*p).as_secs_f64())
+            .sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            comm / total
+        }
+    }
+
+    /// One-line report: `compute=…ms auxiliary=…ms communication=…ms (x%)`.
+    pub fn report(&self) -> String {
+        format!(
+            "compute={:.1}ms auxiliary={:.1}ms communication={:.1}ms (comm {:.0}%)",
+            self.mean(Phase::Compute).as_secs_f64() * 1e3,
+            self.mean(Phase::Auxiliary).as_secs_f64() * 1e3,
+            self.mean(Phase::Communication).as_secs_f64() * 1e3,
+            self.comm_fraction() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate_and_merge() {
+        let mut t = PhaseTimers::new();
+        t.add(Phase::Compute, Duration::from_millis(10));
+        t.add(Phase::Compute, Duration::from_millis(5));
+        t.add(Phase::Communication, Duration::from_millis(15));
+        assert_eq!(t.get(Phase::Compute), Duration::from_millis(15));
+        let mut u = PhaseTimers::new();
+        u.merge(&t);
+        u.merge(&t);
+        assert_eq!(u.total(), Duration::from_millis(60));
+    }
+
+    #[test]
+    fn breakdown_fractions() {
+        let mut a = PhaseTimers::new();
+        a.add(Phase::Compute, Duration::from_millis(30));
+        a.add(Phase::Communication, Duration::from_millis(10));
+        let b = a.clone();
+        let br = Breakdown::new(vec![a, b]);
+        assert!((br.comm_fraction() - 0.25).abs() < 1e-9);
+        assert_eq!(br.max(Phase::Compute), Duration::from_millis(30));
+        assert!(br.report().contains("comm 25%"));
+    }
+
+    #[test]
+    fn time_closure() {
+        let mut t = PhaseTimers::new();
+        let v = t.time(Phase::Auxiliary, || 42);
+        assert_eq!(v, 42);
+        assert!(t.get(Phase::Auxiliary) > Duration::ZERO);
+    }
+}

@@ -1,0 +1,230 @@
+//! Column-wise arithmetic and comparisons (vectorized, null-propagating) —
+//! the element-wise slice of the DDF operator surface.
+
+use crate::buffer::Bitmap;
+use crate::column::{BoolColumn, Column, Float64Column, Int64Column};
+use crate::error::{Error, Result};
+use crate::table::Table;
+
+/// Binary arithmetic operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    /// Wrapping add (ints) / IEEE add (floats).
+    Add,
+    /// Wrapping sub / IEEE sub.
+    Sub,
+    /// Wrapping mul / IEEE mul.
+    Mul,
+    /// Division; int/0 and float/0 produce null.
+    Div,
+}
+
+/// Comparison operator producing a bool column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Less than.
+    Lt,
+    /// Less or equal.
+    Le,
+    /// Greater than.
+    Gt,
+    /// Greater or equal.
+    Ge,
+}
+
+fn zip_validity(a: &Column, b: &Column) -> Option<Bitmap> {
+    match (a.validity(), b.validity()) {
+        (None, None) => None,
+        (Some(x), None) => Some(x.clone()),
+        (None, Some(y)) => Some(y.clone()),
+        (Some(x), Some(y)) => Some(x.and(y)),
+    }
+}
+
+/// `a OP b` element-wise; both columns must share a numeric dtype and
+/// length. Nulls propagate; division by zero yields null.
+pub fn binary_op(a: &Column, b: &Column, op: BinOp) -> Result<Column> {
+    if a.len() != b.len() {
+        return Err(Error::invalid(format!(
+            "column length mismatch: {} vs {}",
+            a.len(),
+            b.len()
+        )));
+    }
+    match (a, b) {
+        (Column::Int64(x), Column::Int64(y)) => {
+            let mut validity = zip_validity(a, b).unwrap_or_else(|| Bitmap::new_valid(a.len()));
+            let values: Vec<i64> = x
+                .values
+                .iter()
+                .zip(&y.values)
+                .enumerate()
+                .map(|(i, (&xa, &xb))| match op {
+                    BinOp::Add => xa.wrapping_add(xb),
+                    BinOp::Sub => xa.wrapping_sub(xb),
+                    BinOp::Mul => xa.wrapping_mul(xb),
+                    BinOp::Div => {
+                        if xb == 0 {
+                            validity.set(i, false);
+                            0
+                        } else {
+                            xa.wrapping_div(xb)
+                        }
+                    }
+                })
+                .collect();
+            Ok(Column::Int64(Int64Column::new(values, Some(validity))))
+        }
+        (Column::Float64(x), Column::Float64(y)) => {
+            let mut validity = zip_validity(a, b).unwrap_or_else(|| Bitmap::new_valid(a.len()));
+            let values: Vec<f64> = x
+                .values
+                .iter()
+                .zip(&y.values)
+                .enumerate()
+                .map(|(i, (&xa, &xb))| match op {
+                    BinOp::Add => xa + xb,
+                    BinOp::Sub => xa - xb,
+                    BinOp::Mul => xa * xb,
+                    BinOp::Div => {
+                        if xb == 0.0 {
+                            validity.set(i, false);
+                            0.0
+                        } else {
+                            xa / xb
+                        }
+                    }
+                })
+                .collect();
+            Ok(Column::Float64(Float64Column::new(values, Some(validity))))
+        }
+        _ => Err(Error::Type(format!(
+            "binary op needs matching numeric dtypes, got {} and {}",
+            a.dtype(),
+            b.dtype()
+        ))),
+    }
+}
+
+/// `a CMP b` element-wise; mismatched/NaN comparisons are false, null
+/// inputs yield null.
+pub fn compare(a: &Column, b: &Column, op: CmpOp) -> Result<Column> {
+    if a.len() != b.len() {
+        return Err(Error::invalid("column length mismatch"));
+    }
+    let validity = zip_validity(a, b);
+    let eval = |ord: Option<std::cmp::Ordering>| -> bool {
+        use std::cmp::Ordering::*;
+        match (op, ord) {
+            (CmpOp::Eq, Some(Equal)) => true,
+            (CmpOp::Ne, Some(Less | Greater)) => true,
+            (CmpOp::Lt, Some(Less)) => true,
+            (CmpOp::Le, Some(Less | Equal)) => true,
+            (CmpOp::Gt, Some(Greater)) => true,
+            (CmpOp::Ge, Some(Greater | Equal)) => true,
+            _ => false,
+        }
+    };
+    let values: Vec<bool> = match (a, b) {
+        (Column::Int64(x), Column::Int64(y)) => x
+            .values
+            .iter()
+            .zip(&y.values)
+            .map(|(xa, xb)| eval(Some(xa.cmp(xb))))
+            .collect(),
+        (Column::Float64(x), Column::Float64(y)) => x
+            .values
+            .iter()
+            .zip(&y.values)
+            .map(|(xa, xb)| eval(xa.partial_cmp(xb)))
+            .collect(),
+        (Column::Utf8(x), Column::Utf8(y)) => (0..a.len())
+            .map(|i| eval(Some(x.get(i).cmp(y.get(i)))))
+            .collect(),
+        _ => {
+            return Err(Error::Type(format!(
+                "compare needs matching dtypes, got {} and {}",
+                a.dtype(),
+                b.dtype()
+            )))
+        }
+    };
+    Ok(Column::Bool(BoolColumn::new(values, validity)))
+}
+
+/// Table helper: `out_name = t[a] OP t[b]` appended as a new column.
+pub fn with_binary(t: &Table, a: usize, b: usize, op: BinOp, out_name: &str) -> Result<Table> {
+    let col = binary_op(t.column(a)?, t.column(b)?, op)?;
+    t.with_column(out_name, col)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    #[test]
+    fn int_arith_with_div_by_zero() {
+        let a = Column::from_i64(vec![6, 7, 8]);
+        let b = Column::from_i64(vec![2, 0, 4]);
+        let d = binary_op(&a, &b, BinOp::Div).unwrap();
+        assert_eq!(d.value(0), Value::Int64(3));
+        assert_eq!(d.value(1), Value::Null);
+        assert_eq!(d.value(2), Value::Int64(2));
+        let m = binary_op(&a, &b, BinOp::Mul).unwrap();
+        assert_eq!(m.value(1), Value::Int64(0));
+    }
+
+    #[test]
+    fn null_propagation() {
+        let a = Column::from_opt_i64(&[Some(1), None]);
+        let b = Column::from_i64(vec![1, 1]);
+        let s = binary_op(&a, &b, BinOp::Add).unwrap();
+        assert_eq!(s.value(0), Value::Int64(2));
+        assert!(s.value(1).is_null());
+    }
+
+    #[test]
+    fn float_and_string_compare() {
+        let a = Column::from_f64(vec![1.0, f64::NAN]);
+        let b = Column::from_f64(vec![1.0, 1.0]);
+        let e = compare(&a, &b, CmpOp::Eq).unwrap();
+        assert_eq!(e.value(0), Value::Bool(true));
+        assert_eq!(e.value(1), Value::Bool(false)); // NaN never equal
+        let s1 = Column::from_strings(&["a", "c"]);
+        let s2 = Column::from_strings(&["b", "b"]);
+        let lt = compare(&s1, &s2, CmpOp::Lt).unwrap();
+        assert_eq!(lt.value(0), Value::Bool(true));
+        assert_eq!(lt.value(1), Value::Bool(false));
+    }
+
+    #[test]
+    fn table_with_binary_then_filter() {
+        let t = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 5, 10])),
+            ("b", Column::from_i64(vec![1, 1, 1])),
+        ])
+        .unwrap();
+        let t2 = with_binary(&t, 0, 1, BinOp::Add, "sum").unwrap();
+        assert_eq!(t2.num_columns(), 3);
+        assert_eq!(t2.value(2, 2).unwrap(), Value::Int64(11));
+        let mask = compare(t2.column(2).unwrap(), t2.column(0).unwrap(), CmpOp::Gt).unwrap();
+        let t3 = t2.with_column("m", mask).unwrap();
+        let f = crate::ops::filter_by_column(&t3, 3).unwrap();
+        assert_eq!(f.num_rows(), 3);
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = Column::from_i64(vec![1]);
+        let b = Column::from_f64(vec![1.0]);
+        assert!(binary_op(&a, &b, BinOp::Add).is_err());
+        assert!(compare(&a, &b, CmpOp::Eq).is_err());
+        let c = Column::from_i64(vec![1, 2]);
+        assert!(binary_op(&a, &c, BinOp::Add).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! `describe` — per-column summary statistics (pandas `DataFrame.describe`
+//! analogue). The numeric reductions can run through the AOT `colagg`
+//! kernel (PJRT) or natively.
+
+use crate::column::Column;
+use crate::error::Result;
+use crate::table::Table;
+use crate::types::{DType, Value};
+
+/// Summary statistics of one column.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnStats {
+    /// Column name.
+    pub name: String,
+    /// Non-null count.
+    pub count: usize,
+    /// Null count.
+    pub nulls: usize,
+    /// Sum (numeric columns only).
+    pub sum: Option<f64>,
+    /// Min (numeric columns only).
+    pub min: Option<f64>,
+    /// Max (numeric columns only).
+    pub max: Option<f64>,
+    /// Mean (numeric columns only).
+    pub mean: Option<f64>,
+}
+
+fn numeric_stats(values: impl Iterator<Item = Option<f64>>) -> (usize, f64, f64, f64) {
+    let mut count = 0usize;
+    let mut sum = 0.0;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for v in values.flatten() {
+        count += 1;
+        sum += v;
+        if v < min {
+            min = v;
+        }
+        if v > max {
+            max = v;
+        }
+    }
+    (count, sum, min, max)
+}
+
+/// Compute stats for every column of `t`.
+pub fn describe(t: &Table) -> Result<Vec<ColumnStats>> {
+    let mut out = Vec::with_capacity(t.num_columns());
+    for (i, field) in t.schema().fields().iter().enumerate() {
+        let col = t.column(i)?;
+        let nulls = col.null_count();
+        let stats = if field.dtype.is_numeric() {
+            let (count, sum, min, max) = match col {
+                Column::Int64(c) => numeric_stats(
+                    c.values
+                        .iter()
+                        .enumerate()
+                        .map(|(r, &v)| col.is_valid(r).then_some(v as f64)),
+                ),
+                Column::Float64(c) => numeric_stats(
+                    c.values
+                        .iter()
+                        .enumerate()
+                        .map(|(r, &v)| col.is_valid(r).then_some(v)),
+                ),
+                _ => unreachable!(),
+            };
+            ColumnStats {
+                name: field.name.clone(),
+                count,
+                nulls,
+                sum: (count > 0).then_some(sum),
+                min: (count > 0).then_some(min),
+                max: (count > 0).then_some(max),
+                mean: (count > 0).then_some(sum / count as f64),
+            }
+        } else {
+            ColumnStats {
+                name: field.name.clone(),
+                count: t.num_rows() - nulls,
+                nulls,
+                sum: None,
+                min: None,
+                max: None,
+                mean: None,
+            }
+        };
+        out.push(stats);
+    }
+    Ok(out)
+}
+
+/// Render `describe` output as a table (columns: name/count/nulls/sum/
+/// min/max/mean).
+pub fn describe_table(t: &Table) -> Result<Table> {
+    let stats = describe(t)?;
+    let mut names = crate::column::ColumnBuilder::new(DType::Utf8);
+    let mut counts = crate::column::ColumnBuilder::new(DType::Int64);
+    let mut nulls = crate::column::ColumnBuilder::new(DType::Int64);
+    let mut sums = crate::column::ColumnBuilder::new(DType::Float64);
+    let mut mins = crate::column::ColumnBuilder::new(DType::Float64);
+    let mut maxs = crate::column::ColumnBuilder::new(DType::Float64);
+    let mut means = crate::column::ColumnBuilder::new(DType::Float64);
+    for s in &stats {
+        names.push_str(&s.name);
+        counts.push_i64(s.count as i64);
+        nulls.push_i64(s.nulls as i64);
+        for (b, v) in [
+            (&mut sums, s.sum),
+            (&mut mins, s.min),
+            (&mut maxs, s.max),
+            (&mut means, s.mean),
+        ] {
+            match v {
+                Some(x) => b.push(Value::Float64(x))?,
+                None => b.push_null(),
+            }
+        }
+    }
+    Table::from_columns(vec![
+        ("column", names.finish()),
+        ("count", counts.finish()),
+        ("nulls", nulls.finish()),
+        ("sum", sums.finish()),
+        ("min", mins.finish()),
+        ("max", maxs.finish()),
+        ("mean", means.finish()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_and_string_stats() {
+        let t = Table::from_columns(vec![
+            ("i", Column::from_opt_i64(&[Some(1), Some(3), None])),
+            ("f", Column::from_f64(vec![0.5, 1.5, 2.5])),
+            ("s", Column::from_strings(&["a", "b", "c"])),
+        ])
+        .unwrap();
+        let stats = describe(&t).unwrap();
+        assert_eq!(stats[0].count, 2);
+        assert_eq!(stats[0].nulls, 1);
+        assert_eq!(stats[0].sum, Some(4.0));
+        assert_eq!(stats[0].mean, Some(2.0));
+        assert_eq!(stats[1].min, Some(0.5));
+        assert_eq!(stats[1].max, Some(2.5));
+        assert_eq!(stats[2].sum, None);
+        assert_eq!(stats[2].count, 3);
+    }
+
+    #[test]
+    fn as_table() {
+        let t = Table::from_columns(vec![("i", Column::from_i64(vec![1, 2]))]).unwrap();
+        let d = describe_table(&t).unwrap();
+        assert_eq!(d.num_rows(), 1);
+        assert_eq!(d.value(0, 0).unwrap().as_str(), Some("i"));
+        assert_eq!(d.value(0, 3).unwrap(), Value::Float64(3.0));
+    }
+
+    #[test]
+    fn empty_numeric_column() {
+        let t = Table::from_columns(vec![("i", Column::from_i64(vec![]))]).unwrap();
+        let stats = describe(&t).unwrap();
+        assert_eq!(stats[0].count, 0);
+        assert_eq!(stats[0].sum, None);
+    }
+}

@@ -1,0 +1,102 @@
+//! Distinct / duplicate elimination (pandas `drop_duplicates`).
+
+use super::kernels::{row_hashes, rows_equal, KeyHasher, NativeHasher};
+use crate::error::Result;
+use crate::table::Table;
+use std::collections::HashMap;
+
+/// Keep the first occurrence of each distinct key-tuple (`key_cols`; pass
+/// all columns for whole-row distinct).
+pub fn distinct(t: &Table, key_cols: &[usize]) -> Result<Table> {
+    distinct_with_hasher(t, key_cols, &NativeHasher)
+}
+
+/// [`distinct`] with an explicit hasher.
+pub fn distinct_with_hasher(
+    t: &Table,
+    key_cols: &[usize],
+    hasher: &dyn KeyHasher,
+) -> Result<Table> {
+    let n = t.num_rows();
+    let mut keep: Vec<u32> = Vec::new();
+
+    // fast path: single non-null int64 key
+    if let [kc] = key_cols {
+        if let crate::column::Column::Int64(c) = t.column(*kc)? {
+            if c.validity.is_none() {
+                let mut seen: crate::util::hash::FastMap<i64, ()> =
+                    crate::util::hash::fast_map_with_capacity(n);
+                for (i, &k) in c.values.iter().enumerate() {
+                    if seen.insert(k, ()).is_none() {
+                        keep.push(i as u32);
+                    }
+                }
+                return Ok(t.gather(&keep));
+            }
+        }
+    }
+
+    let hashes = row_hashes(t, key_cols, hasher)?;
+    let mut buckets: HashMap<i64, Vec<u32>> = HashMap::new();
+    for i in 0..n {
+        let bucket = buckets.entry(hashes[i]).or_default();
+        let dup = bucket
+            .iter()
+            .any(|&j| rows_equal(t, j as usize, key_cols, t, i, key_cols));
+        if !dup {
+            bucket.push(i as u32);
+            keep.push(i as u32);
+        }
+    }
+    Ok(t.gather(&keep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::types::Value;
+
+    #[test]
+    fn keeps_first_occurrence() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 1, 3, 2])),
+            ("v", Column::from_i64(vec![10, 20, 30, 40, 50])),
+        ])
+        .unwrap();
+        let d = distinct(&t, &[0]).unwrap();
+        assert_eq!(d.column(0).unwrap().i64_values().unwrap(), &[1, 2, 3]);
+        // first occurrence keeps its payload
+        assert_eq!(d.value(0, 1).unwrap(), Value::Int64(10));
+    }
+
+    #[test]
+    fn whole_row_distinct() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 1, 1])),
+            ("v", Column::from_i64(vec![10, 10, 20])),
+        ])
+        .unwrap();
+        let d = distinct(&t, &[0, 1]).unwrap();
+        assert_eq!(d.num_rows(), 2);
+    }
+
+    #[test]
+    fn null_keys_are_one_group() {
+        let t = Table::from_columns(vec![(
+            "k",
+            Column::from_opt_i64(&[None, Some(1), None]),
+        )])
+        .unwrap();
+        let d = distinct(&t, &[0]).unwrap();
+        assert_eq!(d.num_rows(), 2);
+    }
+
+    #[test]
+    fn string_distinct() {
+        let t =
+            Table::from_columns(vec![("s", Column::from_strings(&["a", "b", "a"]))]).unwrap();
+        let d = distinct(&t, &[0]).unwrap();
+        assert_eq!(d.num_rows(), 2);
+    }
+}

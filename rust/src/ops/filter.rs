@@ -1,0 +1,62 @@
+//! Filter / selection operators.
+
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::table::Table;
+
+/// Keep rows where `pred(row)` is true (slow generic path).
+pub fn filter(t: &Table, pred: impl Fn(usize) -> bool) -> Table {
+    let idx: Vec<u32> = (0..t.num_rows())
+        .filter(|&r| pred(r))
+        .map(|r| r as u32)
+        .collect();
+    t.gather(&idx)
+}
+
+/// Keep rows where a bool column is true (nulls drop) — the vectorized path.
+pub fn filter_by_column(t: &Table, mask_col: usize) -> Result<Table> {
+    let col = t.column(mask_col)?;
+    let mask = match col {
+        Column::Bool(c) => c,
+        other => {
+            return Err(Error::Type(format!(
+                "filter mask must be bool, got {}",
+                other.dtype()
+            )))
+        }
+    };
+    let mut idx = Vec::new();
+    for (r, &m) in mask.values.iter().enumerate() {
+        if m && col.is_valid(r) {
+            idx.push(r as u32);
+        }
+    }
+    Ok(t.gather(&idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    #[test]
+    fn filter_closure() {
+        let t = Table::from_columns(vec![("k", Column::from_i64(vec![1, 2, 3, 4]))]).unwrap();
+        let keys = t.column(0).unwrap().i64_values().unwrap().to_vec();
+        let f = filter(&t, |r| keys[r] % 2 == 0);
+        assert_eq!(f.column(0).unwrap().i64_values().unwrap(), &[2, 4]);
+    }
+
+    #[test]
+    fn filter_mask_column() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 3])),
+            ("m", Column::from_bools(vec![true, false, true])),
+        ])
+        .unwrap();
+        let f = filter_by_column(&t, 1).unwrap();
+        assert_eq!(f.num_rows(), 2);
+        assert_eq!(f.value(1, 0).unwrap(), Value::Int64(3));
+        assert!(filter_by_column(&t, 0).is_err());
+    }
+}

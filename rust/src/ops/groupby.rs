@@ -1,0 +1,399 @@
+//! Local hash groupby with numeric aggregates.
+//!
+//! The distributed groupby (paper Fig 2 pattern) shuffles on key columns
+//! then runs this kernel per worker; for algebraic aggregates `dist`
+//! instead runs a *partial* local groupby, shuffles the much smaller
+//! partials, and finalizes — the classic two-phase optimization.
+
+use super::kernels::{row_hashes, rows_equal, KeyHasher, NativeHasher};
+use crate::column::{Column, ColumnBuilder};
+use crate::error::{Error, Result};
+use crate::table::Table;
+use crate::types::DType;
+use std::collections::HashMap;
+
+/// Aggregate functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggFun {
+    /// Sum of non-null values.
+    Sum,
+    /// Count of non-null values.
+    Count,
+    /// Min of non-null values.
+    Min,
+    /// Max of non-null values.
+    Max,
+    /// Arithmetic mean of non-null values.
+    Mean,
+    /// Sum of squares (building block of Var/Std; float64 output).
+    SumSq,
+    /// Population variance of non-null values.
+    Var,
+    /// Population standard deviation of non-null values.
+    Std,
+}
+
+impl AggFun {
+    /// Output column name prefix.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggFun::Sum => "sum",
+            AggFun::Count => "count",
+            AggFun::Min => "min",
+            AggFun::Max => "max",
+            AggFun::Mean => "mean",
+            AggFun::SumSq => "sumsq",
+            AggFun::Var => "var",
+            AggFun::Std => "std",
+        }
+    }
+}
+
+/// One aggregate: `fun(column)`.
+#[derive(Debug, Clone, Copy)]
+pub struct AggSpec {
+    /// Value column index.
+    pub col: usize,
+    /// Aggregate function.
+    pub fun: AggFun,
+}
+
+impl AggSpec {
+    /// Convenience constructor.
+    pub fn new(col: usize, fun: AggFun) -> Self {
+        AggSpec { col, fun }
+    }
+}
+
+/// Running accumulator for one (group, aggregate) cell.
+#[derive(Debug, Clone, Copy)]
+struct Acc {
+    sum: f64,
+    sumsq: f64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Acc {
+    fn new() -> Self {
+        Acc {
+            sum: 0.0,
+            sumsq: 0.0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+    #[inline]
+    fn update(&mut self, v: f64) {
+        self.sum += v;
+        self.sumsq += v * v;
+        self.count += 1;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+    fn finish(&self, fun: AggFun) -> Option<f64> {
+        if self.count == 0 && fun != AggFun::Count {
+            return None;
+        }
+        Some(match fun {
+            AggFun::Sum => self.sum,
+            AggFun::Count => self.count as f64,
+            AggFun::Min => self.min,
+            AggFun::Max => self.max,
+            AggFun::Mean => self.sum / self.count as f64,
+            AggFun::SumSq => self.sumsq,
+            AggFun::Var => {
+                let mean = self.sum / self.count as f64;
+                (self.sumsq / self.count as f64 - mean * mean).max(0.0)
+            }
+            AggFun::Std => {
+                let mean = self.sum / self.count as f64;
+                (self.sumsq / self.count as f64 - mean * mean).max(0.0).sqrt()
+            }
+        })
+    }
+}
+
+/// Group `t` by `key_cols`, computing `aggs`. Output: key columns (first
+/// occurrence order) followed by one float64/int64 column per aggregate
+/// named `{fun}_{col_name}`.
+pub fn groupby(t: &Table, key_cols: &[usize], aggs: &[AggSpec]) -> Result<Table> {
+    groupby_with_hasher(t, key_cols, aggs, &NativeHasher)
+}
+
+/// [`groupby`] with an explicit key hasher.
+pub fn groupby_with_hasher(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[AggSpec],
+    hasher: &dyn KeyHasher,
+) -> Result<Table> {
+    if key_cols.is_empty() {
+        return Err(Error::invalid("groupby: empty key column list"));
+    }
+    for a in aggs {
+        let dt = t.schema().dtype(a.col)?;
+        if !dt.is_numeric() {
+            return Err(Error::Type(format!(
+                "aggregate {} over non-numeric column {}",
+                a.fun.label(),
+                dt
+            )));
+        }
+    }
+    let n = t.num_rows();
+    let mut group_of = vec![0u32; n];
+    let mut reps: Vec<u32> = Vec::new();
+
+    // Fast path: single non-null int64 key — direct value-keyed map, no
+    // per-group bucket Vecs, no generic row comparisons (§Perf L3 iter 1:
+    // this path took groupby from 0.2x to >1x vs the row-wise baseline).
+    let fast = match (key_cols, t.column(key_cols[0])?) {
+        ([_], crate::column::Column::Int64(c)) if c.validity.is_none() => Some(&c.values),
+        _ => None,
+    };
+    if let Some(keys) = fast {
+        let mut map: crate::util::hash::FastMap<i64, u32> =
+            crate::util::hash::fast_map_with_capacity(n);
+        for (i, &k) in keys.iter().enumerate() {
+            let gid = *map.entry(k).or_insert_with(|| {
+                reps.push(i as u32);
+                (reps.len() - 1) as u32
+            });
+            group_of[i] = gid;
+        }
+    } else {
+        // generic path: hash rows, chain per hash bucket, compare keys
+        let hashes = row_hashes(t, key_cols, hasher)?;
+        let mut head: HashMap<i64, Vec<u32>> = HashMap::new();
+        for i in 0..n {
+            let bucket = head.entry(hashes[i]).or_default();
+            let mut gid = u32::MAX;
+            for &cand in bucket.iter() {
+                if rows_equal(t, reps[cand as usize] as usize, key_cols, t, i, key_cols) {
+                    gid = cand;
+                    break;
+                }
+            }
+            if gid == u32::MAX {
+                gid = reps.len() as u32;
+                reps.push(i as u32);
+                bucket.push(gid);
+            }
+            group_of[i] = gid;
+        }
+    }
+    let ngroups = reps.len();
+
+    // Accumulate per (group, agg).
+    let mut accs = vec![Acc::new(); ngroups * aggs.len()];
+    for (ai, a) in aggs.iter().enumerate() {
+        let col = t.column(a.col)?;
+        match col {
+            Column::Int64(c) => {
+                for i in 0..n {
+                    if col.is_valid(i) {
+                        accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i] as f64);
+                    }
+                }
+            }
+            Column::Float64(c) => {
+                for i in 0..n {
+                    if col.is_valid(i) {
+                        accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i]);
+                    }
+                }
+            }
+            _ => unreachable!("validated numeric"),
+        }
+    }
+
+    // Materialize: gather key columns at rep rows + build agg columns.
+    let mut columns: Vec<Column> = Vec::with_capacity(key_cols.len() + aggs.len());
+    let mut schema = crate::types::Schema::default();
+    for &kc in key_cols {
+        schema = schema.with_field(t.schema().field(kc)?.clone());
+        columns.push(t.column(kc)?.gather(&reps));
+    }
+    for (ai, a) in aggs.iter().enumerate() {
+        let src_name = &t.schema().field(a.col)?.name;
+        let name = format!("{}_{}", a.fun.label(), src_name);
+        let src_dtype = t.schema().dtype(a.col)?;
+        // Sum/Min/Max over int64 stay int64; Count is int64; Mean is f64.
+        let out_dtype = match (a.fun, src_dtype) {
+            (AggFun::Count, _) => DType::Int64,
+            (AggFun::Mean | AggFun::SumSq | AggFun::Var | AggFun::Std, _) => DType::Float64,
+            (_, DType::Int64) => DType::Int64,
+            _ => DType::Float64,
+        };
+        let mut b = ColumnBuilder::with_capacity(out_dtype, ngroups);
+        for g in 0..ngroups {
+            match accs[g * aggs.len() + ai].finish(a.fun) {
+                None => b.push_null(),
+                Some(v) => match out_dtype {
+                    DType::Int64 => b.push_i64(v as i64),
+                    DType::Float64 => b.push_f64(v),
+                    _ => unreachable!(),
+                },
+            }
+        }
+        schema = schema.with_field(crate::types::Field::new(name, out_dtype));
+        columns.push(b.finish());
+    }
+    Table::new(schema, columns)
+}
+
+/// Decompose an aggregate into its shuffle-able partial form:
+/// `(partial aggs to compute locally, finalizer)`. Mean becomes
+/// (Sum, Count) and is finalized as sum/count — used by the two-phase
+/// distributed groupby.
+pub fn partial_aggs(fun: AggFun) -> Vec<AggFun> {
+    match fun {
+        AggFun::Mean => vec![AggFun::Sum, AggFun::Count],
+        AggFun::Var | AggFun::Std => vec![AggFun::Sum, AggFun::Count, AggFun::SumSq],
+        AggFun::Count => vec![AggFun::Count],
+        f => vec![f],
+    }
+}
+
+/// Merge function for combining two partials of the same aggregate:
+/// Sum/Count merge by Sum; Min by Min; Max by Max.
+pub fn merge_fun(fun: AggFun) -> AggFun {
+    match fun {
+        AggFun::Sum | AggFun::Count | AggFun::SumSq => AggFun::Sum,
+        AggFun::Min => AggFun::Min,
+        AggFun::Max => AggFun::Max,
+        AggFun::Mean | AggFun::Var | AggFun::Std => {
+            unreachable!("decomposed before merge")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 1, 2, 1])),
+            ("v", Column::from_i64(vec![10, 20, 30, 40, 50])),
+            ("w", Column::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0])),
+        ])
+        .unwrap()
+    }
+
+    fn group_map(out: &Table, key_col: usize, val_col: usize) -> HashMap<i64, Value> {
+        (0..out.num_rows())
+            .map(|r| {
+                (
+                    out.value(r, key_col).unwrap().as_i64().unwrap(),
+                    out.value(r, val_col).unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sum_count_mean() {
+        let out = groupby(
+            &t(),
+            &[0],
+            &[
+                AggSpec::new(1, AggFun::Sum),
+                AggSpec::new(1, AggFun::Count),
+                AggSpec::new(2, AggFun::Mean),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out.num_rows(), 2);
+        assert_eq!(out.schema().field(1).unwrap().name, "sum_v");
+        let sums = group_map(&out, 0, 1);
+        assert_eq!(sums[&1], Value::Int64(90));
+        assert_eq!(sums[&2], Value::Int64(60));
+        let counts = group_map(&out, 0, 2);
+        assert_eq!(counts[&1], Value::Int64(3));
+        let means = group_map(&out, 0, 3);
+        assert_eq!(means[&1], Value::Float64(3.0));
+    }
+
+    #[test]
+    fn min_max_keep_int_dtype() {
+        let out = groupby(
+            &t(),
+            &[0],
+            &[AggSpec::new(1, AggFun::Min), AggSpec::new(1, AggFun::Max)],
+        )
+        .unwrap();
+        assert_eq!(out.schema().dtype(1).unwrap(), DType::Int64);
+        let mins = group_map(&out, 0, 1);
+        assert_eq!(mins[&1], Value::Int64(10));
+        let maxs = group_map(&out, 0, 2);
+        assert_eq!(maxs[&1], Value::Int64(50));
+    }
+
+    #[test]
+    fn null_values_skipped_null_keys_group() {
+        let tab = Table::from_columns(vec![
+            ("k", Column::from_opt_i64(&[Some(1), None, None, Some(1)])),
+            ("v", Column::from_opt_i64(&[Some(5), Some(7), None, None])),
+        ])
+        .unwrap();
+        let out = groupby(
+            &tab,
+            &[0],
+            &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)],
+        )
+        .unwrap();
+        assert_eq!(out.num_rows(), 2); // groups: k=1, k=null
+        for r in 0..2 {
+            match out.value(r, 0).unwrap() {
+                Value::Int64(1) => {
+                    assert_eq!(out.value(r, 1).unwrap(), Value::Int64(5));
+                    assert_eq!(out.value(r, 2).unwrap(), Value::Int64(1));
+                }
+                Value::Null => {
+                    assert_eq!(out.value(r, 1).unwrap(), Value::Int64(7));
+                    assert_eq!(out.value(r, 2).unwrap(), Value::Int64(1));
+                }
+                other => panic!("unexpected key {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn multi_key_groups() {
+        let tab = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 1, 2, 1])),
+            ("b", Column::from_strings(&["x", "y", "x", "x"])),
+            ("v", Column::from_i64(vec![1, 1, 1, 1])),
+        ])
+        .unwrap();
+        let out = groupby(&tab, &[0, 1], &[AggSpec::new(2, AggFun::Count)]).unwrap();
+        assert_eq!(out.num_rows(), 3);
+    }
+
+    #[test]
+    fn rejects_non_numeric_agg() {
+        let tab = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1])),
+            ("s", Column::from_strings(&["x"])),
+        ])
+        .unwrap();
+        assert!(groupby(&tab, &[0], &[AggSpec::new(1, AggFun::Sum)]).is_err());
+    }
+
+    #[test]
+    fn empty_table_yields_empty() {
+        let e = Table::empty(t().schema().clone());
+        let out = groupby(&e, &[0], &[AggSpec::new(1, AggFun::Sum)]).unwrap();
+        assert_eq!(out.num_rows(), 0);
+        assert_eq!(out.num_columns(), 2);
+    }
+}

@@ -1,0 +1,494 @@
+//! Local join kernels: hash join (default) and sort-merge join.
+//!
+//! These are the *core local operator* of the paper's Fig 2 distributed
+//! join: in the distributed setting both inputs are hash-shuffled on their
+//! key columns first, then each worker runs this local join on its
+//! co-partitioned pair.
+
+use super::kernels::{row_hashes, rows_cmp, rows_equal, KeyHasher, NativeHasher};
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::table::Table;
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+/// Join type (SQL semantics; nulls never match nulls).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinType {
+    /// Rows with matches on both sides.
+    Inner,
+    /// All left rows; unmatched right side is null-filled.
+    Left,
+    /// All right rows; unmatched left side is null-filled.
+    Right,
+    /// All rows from both sides.
+    FullOuter,
+}
+
+/// Join algorithm selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinAlgo {
+    /// Build a hash table on the smaller side, probe with the larger.
+    Hash,
+    /// Sort both sides on keys, merge. (Cylon exposes both.)
+    SortMerge,
+}
+
+/// Options for [`join`].
+#[derive(Debug, Clone)]
+pub struct JoinOptions {
+    /// Key column indices on the left table.
+    pub left_on: Vec<usize>,
+    /// Key column indices on the right table.
+    pub right_on: Vec<usize>,
+    /// Join type.
+    pub join_type: JoinType,
+    /// Algorithm.
+    pub algo: JoinAlgo,
+}
+
+impl JoinOptions {
+    /// Inner hash join on single key columns.
+    pub fn inner(left_on: usize, right_on: usize) -> Self {
+        JoinOptions {
+            left_on: vec![left_on],
+            right_on: vec![right_on],
+            join_type: JoinType::Inner,
+            algo: JoinAlgo::Hash,
+        }
+    }
+
+    /// Builder-style join type override.
+    pub fn with_type(mut self, jt: JoinType) -> Self {
+        self.join_type = jt;
+        self
+    }
+
+    /// Builder-style algorithm override.
+    pub fn with_algo(mut self, a: JoinAlgo) -> Self {
+        self.algo = a;
+        self
+    }
+
+    fn validate(&self, left: &Table, right: &Table) -> Result<()> {
+        if self.left_on.is_empty() || self.left_on.len() != self.right_on.len() {
+            return Err(Error::invalid(
+                "join requires equal, non-empty key column lists",
+            ));
+        }
+        for &c in &self.left_on {
+            left.column(c)?;
+        }
+        for &c in &self.right_on {
+            right.column(c)?;
+        }
+        for (&lc, &rc) in self.left_on.iter().zip(&self.right_on) {
+            let lt = left.schema().dtype(lc)?;
+            let rt = right.schema().dtype(rc)?;
+            if lt != rt {
+                return Err(Error::Type(format!(
+                    "join key dtype mismatch: {lt} vs {rt}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Join two tables. Output schema is `left ++ right` with right-side name
+/// collisions prefixed `rhs_`.
+pub fn join(left: &Table, right: &Table, opts: &JoinOptions) -> Result<Table> {
+    join_with_hasher(left, right, opts, &NativeHasher)
+}
+
+/// [`join`] with an explicit key-hasher (PJRT or native).
+pub fn join_with_hasher(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    hasher: &dyn KeyHasher,
+) -> Result<Table> {
+    opts.validate(left, right)?;
+    let (lidx, ridx) = match opts.algo {
+        JoinAlgo::Hash => hash_join_indices(left, right, opts, hasher)?,
+        JoinAlgo::SortMerge => sort_merge_indices(left, right, opts)?,
+    };
+    materialize(left, right, &lidx, &ridx)
+}
+
+/// A row is a valid join key only if *no* key column is null (SQL).
+fn row_key_valid(t: &Table, row: usize, cols: &[usize]) -> bool {
+    cols.iter().all(|&c| t.columns()[c].is_valid(row))
+}
+
+fn hash_join_indices(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    hasher: &dyn KeyHasher,
+) -> Result<(Vec<u32>, Vec<u32>)> {
+    // Build on the smaller side; probe from the larger. For Right/Left we
+    // keep orientation fixed (build=right for Left, build=left for Right)
+    // so the outer side streams.
+    let (build_left, swap_back) = match opts.join_type {
+        JoinType::Inner | JoinType::FullOuter => (left.num_rows() <= right.num_rows(), false),
+        JoinType::Left => (false, false),
+        JoinType::Right => (true, false),
+    };
+    let _ = swap_back;
+    let (bt, bcols, pt, pcols) = if build_left {
+        (left, &opts.left_on, right, &opts.right_on)
+    } else {
+        (right, &opts.right_on, left, &opts.left_on)
+    };
+
+    let mut build_idx: Vec<u32> = Vec::new();
+    let mut probe_idx: Vec<u32> = Vec::new();
+    let mut build_matched = vec![false; bt.num_rows()];
+    let emit_unmatched_probe = matches!(
+        (opts.join_type, build_left),
+        (JoinType::Left, false) | (JoinType::Right, true) | (JoinType::FullOuter, _)
+    );
+    let emit_unmatched_build = matches!(opts.join_type, JoinType::FullOuter);
+
+    // Fast path: single non-null int64 keys on both sides — map keyed by
+    // the value itself, no row-hash pass, no generic equality (§Perf L3
+    // iter 2).
+    let fast = match (bcols.as_slice(), pcols.as_slice()) {
+        ([bc], [pc]) => match (&bt.columns()[*bc], &pt.columns()[*pc]) {
+            (crate::column::Column::Int64(b), crate::column::Column::Int64(p))
+                if b.validity.is_none() && p.validity.is_none() =>
+            {
+                Some((&b.values, &p.values))
+            }
+            _ => None,
+        },
+        _ => None,
+    };
+
+    if let Some((bkeys, pkeys)) = fast {
+        let mut head: crate::util::hash::FastMap<i64, u32> =
+            crate::util::hash::fast_map_with_capacity(bt.num_rows());
+        let mut next: Vec<u32> = vec![u32::MAX; bt.num_rows()];
+        for (i, &k) in bkeys.iter().enumerate() {
+            let e = head.entry(k).or_insert(u32::MAX);
+            next[i] = *e;
+            *e = i as u32;
+        }
+        for (p, &k) in pkeys.iter().enumerate() {
+            let mut matched = false;
+            let mut b = head.get(&k).copied().unwrap_or(u32::MAX);
+            while b != u32::MAX {
+                // exact key equality guaranteed: map is keyed by the value
+                build_idx.push(b);
+                probe_idx.push(p as u32);
+                build_matched[b as usize] = true;
+                matched = true;
+                b = next[b as usize];
+            }
+            if !matched && emit_unmatched_probe {
+                build_idx.push(u32::MAX);
+                probe_idx.push(p as u32);
+            }
+        }
+    } else {
+        let bh = row_hashes(bt, bcols, hasher)?;
+        let ph = row_hashes(pt, pcols, hasher)?;
+
+        // hash -> chain of build-side row ids (head map + next array).
+        let mut head: HashMap<i64, u32> = HashMap::with_capacity(bt.num_rows());
+        let mut next: Vec<u32> = vec![u32::MAX; bt.num_rows()];
+        for (i, &h) in bh.iter().enumerate() {
+            if !row_key_valid(bt, i, bcols) {
+                continue; // null keys never match
+            }
+            let e = head.entry(h).or_insert(u32::MAX);
+            next[i] = *e;
+            *e = i as u32;
+        }
+        for (p, &h) in ph.iter().enumerate() {
+            let mut matched = false;
+            if row_key_valid(pt, p, pcols) {
+                let mut b = head.get(&h).copied().unwrap_or(u32::MAX);
+                while b != u32::MAX {
+                    if rows_equal(bt, b as usize, bcols, pt, p, pcols) {
+                        build_idx.push(b);
+                        probe_idx.push(p as u32);
+                        build_matched[b as usize] = true;
+                        matched = true;
+                    }
+                    b = next[b as usize];
+                }
+            }
+            if !matched && emit_unmatched_probe {
+                build_idx.push(u32::MAX);
+                probe_idx.push(p as u32);
+            }
+        }
+    }
+    if emit_unmatched_build {
+        for (b, m) in build_matched.iter().enumerate() {
+            if !m && row_key_valid(bt, b, bcols) {
+                build_idx.push(b as u32);
+                probe_idx.push(u32::MAX);
+            } else if !m {
+                // null-keyed build rows still appear in a full outer join
+                build_idx.push(b as u32);
+                probe_idx.push(u32::MAX);
+            }
+        }
+    }
+    // Also: Left join with null-keyed *left* rows must emit them; covered
+    // because probe side is left there and null keys fall into !matched.
+    if build_left {
+        Ok((build_idx, probe_idx))
+    } else {
+        Ok((probe_idx, build_idx))
+    }
+}
+
+fn sort_merge_indices(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+) -> Result<(Vec<u32>, Vec<u32>)> {
+    let mut lorder: Vec<u32> = (0..left.num_rows() as u32).collect();
+    let mut rorder: Vec<u32> = (0..right.num_rows() as u32).collect();
+    lorder.sort_unstable_by(|&a, &b| {
+        rows_cmp(left, a as usize, &opts.left_on, left, b as usize, &opts.left_on)
+    });
+    rorder.sort_unstable_by(|&a, &b| {
+        rows_cmp(right, a as usize, &opts.right_on, right, b as usize, &opts.right_on)
+    });
+
+    let mut lidx = Vec::new();
+    let mut ridx = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut lmatched = vec![false; left.num_rows()];
+    let mut rmatched = vec![false; right.num_rows()];
+    while i < lorder.len() && j < rorder.len() {
+        let li = lorder[i] as usize;
+        let rj = rorder[j] as usize;
+        let lvalid = row_key_valid(left, li, &opts.left_on);
+        let rvalid = row_key_valid(right, rj, &opts.right_on);
+        // nulls sort first: skip them (they cannot match)
+        if !lvalid {
+            i += 1;
+            continue;
+        }
+        if !rvalid {
+            j += 1;
+            continue;
+        }
+        match rows_cmp(left, li, &opts.left_on, right, rj, &opts.right_on) {
+            Ordering::Less => i += 1,
+            Ordering::Greater => j += 1,
+            Ordering::Equal => {
+                // find both equal runs, emit the cross product
+                let mut ie = i;
+                while ie < lorder.len()
+                    && rows_cmp(left, lorder[ie] as usize, &opts.left_on, left, li, &opts.left_on)
+                        == Ordering::Equal
+                {
+                    ie += 1;
+                }
+                let mut je = j;
+                while je < rorder.len()
+                    && rows_cmp(
+                        right,
+                        rorder[je] as usize,
+                        &opts.right_on,
+                        right,
+                        rj,
+                        &opts.right_on,
+                    ) == Ordering::Equal
+                {
+                    je += 1;
+                }
+                for a in i..ie {
+                    for b in j..je {
+                        lidx.push(lorder[a]);
+                        ridx.push(rorder[b]);
+                        lmatched[lorder[a] as usize] = true;
+                        rmatched[rorder[b] as usize] = true;
+                    }
+                }
+                i = ie;
+                j = je;
+            }
+        }
+    }
+    let emit_left = matches!(opts.join_type, JoinType::Left | JoinType::FullOuter);
+    let emit_right = matches!(opts.join_type, JoinType::Right | JoinType::FullOuter);
+    if emit_left {
+        for (r, m) in lmatched.iter().enumerate() {
+            if !m {
+                lidx.push(r as u32);
+                ridx.push(u32::MAX);
+            }
+        }
+    }
+    if emit_right {
+        for (r, m) in rmatched.iter().enumerate() {
+            if !m {
+                lidx.push(u32::MAX);
+                ridx.push(r as u32);
+            }
+        }
+    }
+    Ok((lidx, ridx))
+}
+
+fn materialize(left: &Table, right: &Table, lidx: &[u32], ridx: &[u32]) -> Result<Table> {
+    let schema = left.schema().merge_for_join(right.schema());
+    let mut columns: Vec<Column> = Vec::with_capacity(schema.len());
+    for c in left.columns() {
+        columns.push(c.gather_opt(lidx));
+    }
+    for c in right.columns() {
+        columns.push(c.gather_opt(ridx));
+    }
+    Table::new(schema, columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    fn left() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 2, 3])),
+            ("lv", Column::from_i64(vec![10, 20, 21, 30])),
+        ])
+        .unwrap()
+    }
+
+    fn right() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![2, 3, 3, 4])),
+            ("rv", Column::from_i64(vec![200, 300, 301, 400])),
+        ])
+        .unwrap()
+    }
+
+    fn rows(t: &Table) -> Vec<Vec<Value>> {
+        let mut out: Vec<Vec<Value>> = (0..t.num_rows())
+            .map(|r| (0..t.num_columns()).map(|c| t.value(r, c).unwrap()).collect())
+            .collect();
+        out.sort_by(|a, b| format!("{a:?}").cmp(&format!("{b:?}")));
+        out
+    }
+
+    #[test]
+    fn inner_hash_vs_sort_merge_agree() {
+        let h = join(&left(), &right(), &JoinOptions::inner(0, 0)).unwrap();
+        let s = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner(0, 0).with_algo(JoinAlgo::SortMerge),
+        )
+        .unwrap();
+        // inner: k=2 matches 2 left x 1 right = 2 rows, k=3 matches 1 x 2 = 2 rows
+        assert_eq!(h.num_rows(), 4);
+        assert_eq!(rows(&h), rows(&s));
+        assert_eq!(h.schema().field(2).unwrap().name, "rhs_k");
+    }
+
+    #[test]
+    fn left_join_fills_nulls() {
+        let t = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner(0, 0).with_type(JoinType::Left),
+        )
+        .unwrap();
+        // 4 matches + unmatched k=1
+        assert_eq!(t.num_rows(), 5);
+        let unmatched: Vec<usize> = (0..t.num_rows())
+            .filter(|&r| t.value(r, 2).unwrap().is_null())
+            .collect();
+        assert_eq!(unmatched.len(), 1);
+        assert_eq!(t.value(unmatched[0], 0).unwrap(), Value::Int64(1));
+    }
+
+    #[test]
+    fn right_and_outer() {
+        let r = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner(0, 0).with_type(JoinType::Right),
+        )
+        .unwrap();
+        assert_eq!(r.num_rows(), 5); // 4 matches + unmatched k=4
+        let o = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner(0, 0).with_type(JoinType::FullOuter),
+        )
+        .unwrap();
+        assert_eq!(o.num_rows(), 6); // + unmatched k=1 and k=4
+        let sm = join(
+            &left(),
+            &right(),
+            &JoinOptions::inner(0, 0)
+                .with_type(JoinType::FullOuter)
+                .with_algo(JoinAlgo::SortMerge),
+        )
+        .unwrap();
+        assert_eq!(rows(&o), rows(&sm));
+    }
+
+    #[test]
+    fn null_keys_do_not_match() {
+        let l = Table::from_columns(vec![("k", Column::from_opt_i64(&[None, Some(1)]))]).unwrap();
+        let r = Table::from_columns(vec![("k", Column::from_opt_i64(&[None, Some(1)]))]).unwrap();
+        let t = join(&l, &r, &JoinOptions::inner(0, 0)).unwrap();
+        assert_eq!(t.num_rows(), 1); // only (1,1)
+        let lo = join(&l, &r, &JoinOptions::inner(0, 0).with_type(JoinType::Left)).unwrap();
+        assert_eq!(lo.num_rows(), 2); // null left row survives
+    }
+
+    #[test]
+    fn multi_key_join() {
+        let l = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 1, 2])),
+            ("b", Column::from_strings(&["x", "y", "x"])),
+        ])
+        .unwrap();
+        let r = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 2])),
+            ("b", Column::from_strings(&["y", "x"])),
+        ])
+        .unwrap();
+        let opts = JoinOptions {
+            left_on: vec![0, 1],
+            right_on: vec![0, 1],
+            join_type: JoinType::Inner,
+            algo: JoinAlgo::Hash,
+        };
+        let t = join(&l, &r, &opts).unwrap();
+        assert_eq!(t.num_rows(), 2); // (1,y) and (2,x)
+    }
+
+    #[test]
+    fn key_dtype_mismatch_errors() {
+        let l = Table::from_columns(vec![("k", Column::from_i64(vec![1]))]).unwrap();
+        let r = Table::from_columns(vec![("k", Column::from_f64(vec![1.0]))]).unwrap();
+        assert!(join(&l, &r, &JoinOptions::inner(0, 0)).is_err());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = Table::empty(left().schema().clone());
+        let t = join(&e, &right(), &JoinOptions::inner(0, 0)).unwrap();
+        assert_eq!(t.num_rows(), 0);
+        let t2 = join(
+            &e,
+            &right(),
+            &JoinOptions::inner(0, 0).with_type(JoinType::Right),
+        )
+        .unwrap();
+        assert_eq!(t2.num_rows(), 4);
+    }
+}

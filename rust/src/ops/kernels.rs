@@ -1,0 +1,228 @@
+//! Row-level kernels shared by the key-based operators: per-row key
+//! hashing, multi-column row comparison and equality.
+//!
+//! Key hashing is *the* per-row compute hot-spot (every shuffle, hash join
+//! and hash groupby runs it over all rows). The [`KeyHasher`] trait makes
+//! the execution path pluggable: [`NativeHasher`] (pure Rust) or
+//! [`crate::runtime::PjrtHasher`] (the L1 Pallas kernel compiled AOT and
+//! executed through PJRT). Both compute the identical splitmix64 function.
+
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::table::Table;
+use crate::util::hash::{combine, hash64};
+use std::cmp::Ordering;
+
+/// Hash sentinel for null slots (any fixed odd constant works; it must just
+/// be consistent across workers).
+const NULL_HASH: i64 = 0x6b5f_c1a7_1234_5677u64 as i64;
+
+/// Pluggable per-row key-hash execution.
+pub trait KeyHasher: Send + Sync {
+    /// Hash the i64 key slice into `out` (both sides implement splitmix64).
+    fn hash_i64(&self, keys: &[i64], out: &mut [i64]) -> Result<()>;
+
+    /// Human-readable label for reports ("native", "pjrt").
+    fn label(&self) -> &'static str;
+}
+
+/// Pure-Rust splitmix64 hasher (bit-identical to the Pallas kernel).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeHasher;
+
+impl KeyHasher for NativeHasher {
+    fn hash_i64(&self, keys: &[i64], out: &mut [i64]) -> Result<()> {
+        crate::util::hash::hash64_slice(keys, out);
+        Ok(())
+    }
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Per-row hashes of one column (nulls hash to a fixed sentinel).
+fn column_hashes(col: &Column, hasher: &dyn KeyHasher, out: &mut [i64]) -> Result<()> {
+    match col {
+        Column::Int64(c) => hasher.hash_i64(&c.values, out)?,
+        Column::Float64(c) => {
+            // Hash the bit pattern; canonicalize -0.0 and NaNs first.
+            let bits: Vec<i64> = c
+                .values
+                .iter()
+                .map(|&f| {
+                    let f = if f == 0.0 { 0.0 } else { f };
+                    let f = if f.is_nan() { f64::NAN } else { f };
+                    f.to_bits() as i64
+                })
+                .collect();
+            hasher.hash_i64(&bits, out)?;
+        }
+        Column::Bool(c) => {
+            let bits: Vec<i64> = c.values.iter().map(|&b| b as i64).collect();
+            hasher.hash_i64(&bits, out)?;
+        }
+        Column::Utf8(c) => {
+            // FNV-1a over bytes, then one splitmix64 avalanche round so the
+            // partitioner sees well-mixed high bits.
+            for (i, o) in out.iter_mut().enumerate() {
+                let s = c.get(i);
+                let mut h = 0xcbf29ce484222325u64;
+                for &b in s.as_bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+                *o = hash64(h as i64);
+            }
+        }
+    }
+    // Null slots overwrite with the sentinel.
+    if let Some(v) = col.validity() {
+        for (i, o) in out.iter_mut().enumerate() {
+            if !v.get(i) {
+                *o = NULL_HASH;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-row combined hash over multiple key columns.
+pub fn row_hashes(t: &Table, key_cols: &[usize], hasher: &dyn KeyHasher) -> Result<Vec<i64>> {
+    if key_cols.is_empty() {
+        return Err(Error::invalid("row_hashes: empty key column list"));
+    }
+    let n = t.num_rows();
+    let mut acc = vec![0i64; n];
+    column_hashes(t.column(key_cols[0])?, hasher, &mut acc)?;
+    if key_cols.len() > 1 {
+        let mut tmp = vec![0i64; n];
+        for &kc in &key_cols[1..] {
+            column_hashes(t.column(kc)?, hasher, &mut tmp)?;
+            for (a, &b) in acc.iter_mut().zip(&tmp) {
+                *a = combine(*a, b);
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// Row equality on key columns across two tables (SQL semantics for the
+/// hash path: null == null so nulls group together; join kernels that need
+/// `NULL != NULL` filter separately).
+pub fn rows_equal(
+    left: &Table,
+    lrow: usize,
+    lcols: &[usize],
+    right: &Table,
+    rrow: usize,
+    rcols: &[usize],
+) -> bool {
+    debug_assert_eq!(lcols.len(), rcols.len());
+    for (&lc, &rc) in lcols.iter().zip(rcols) {
+        let a = &left.columns()[lc];
+        let b = &right.columns()[rc];
+        let av = a.is_valid(lrow);
+        let bv = b.is_valid(rrow);
+        if av != bv {
+            return false;
+        }
+        if !av {
+            continue; // both null
+        }
+        let eq = match (a, b) {
+            (Column::Int64(x), Column::Int64(y)) => x.values[lrow] == y.values[rrow],
+            (Column::Float64(x), Column::Float64(y)) => x.values[lrow] == y.values[rrow],
+            (Column::Bool(x), Column::Bool(y)) => x.values[lrow] == y.values[rrow],
+            (Column::Utf8(x), Column::Utf8(y)) => x.get(lrow) == y.get(rrow),
+            _ => false,
+        };
+        if !eq {
+            return false;
+        }
+    }
+    true
+}
+
+/// Row ordering on key columns across two tables (nulls first).
+pub fn rows_cmp(
+    left: &Table,
+    lrow: usize,
+    lcols: &[usize],
+    right: &Table,
+    rrow: usize,
+    rcols: &[usize],
+) -> Ordering {
+    for (&lc, &rc) in lcols.iter().zip(rcols) {
+        let a = &left.columns()[lc];
+        let b = &right.columns()[rc];
+        let av = a.is_valid(lrow);
+        let bv = b.is_valid(rrow);
+        let ord = match (av, bv) {
+            (false, false) => Ordering::Equal,
+            (false, true) => Ordering::Less,
+            (true, false) => Ordering::Greater,
+            (true, true) => match (a, b) {
+                (Column::Int64(x), Column::Int64(y)) => x.values[lrow].cmp(&y.values[rrow]),
+                (Column::Float64(x), Column::Float64(y)) => x.values[lrow]
+                    .partial_cmp(&y.values[rrow])
+                    .unwrap_or(Ordering::Equal),
+                (Column::Bool(x), Column::Bool(y)) => x.values[lrow].cmp(&y.values[rrow]),
+                (Column::Utf8(x), Column::Utf8(y)) => x.get(lrow).cmp(y.get(rrow)),
+                _ => Ordering::Equal,
+            },
+        };
+        if ord != Ordering::Equal {
+            return ord;
+        }
+    }
+    Ordering::Equal
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_opt_i64(&[Some(1), Some(2), None, Some(1)])),
+            ("s", Column::from_strings(&["a", "b", "c", "a"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn hashes_consistent_for_equal_rows() {
+        let tab = t();
+        let hs = row_hashes(&tab, &[0, 1], &NativeHasher).unwrap();
+        assert_eq!(hs[0], hs[3]); // (1,"a") twice
+        assert_ne!(hs[0], hs[1]);
+    }
+
+    #[test]
+    fn null_rows_hash_to_sentinel_consistently() {
+        let a = Table::from_columns(vec![("k", Column::from_opt_i64(&[None]))]).unwrap();
+        let b = Table::from_columns(vec![("k", Column::from_opt_i64(&[None, Some(3)]))]).unwrap();
+        let ha = row_hashes(&a, &[0], &NativeHasher).unwrap();
+        let hb = row_hashes(&b, &[0], &NativeHasher).unwrap();
+        assert_eq!(ha[0], hb[0]);
+        assert_ne!(hb[0], hb[1]);
+    }
+
+    #[test]
+    fn equality_and_order() {
+        let tab = t();
+        assert!(rows_equal(&tab, 0, &[0, 1], &tab, 3, &[0, 1]));
+        assert!(!rows_equal(&tab, 0, &[0, 1], &tab, 1, &[0, 1]));
+        // null == null under grouping semantics
+        assert!(rows_equal(&tab, 2, &[0], &tab, 2, &[0]));
+        assert_eq!(rows_cmp(&tab, 0, &[0], &tab, 1, &[0]), Ordering::Less);
+        // nulls sort first
+        assert_eq!(rows_cmp(&tab, 2, &[0], &tab, 0, &[0]), Ordering::Less);
+    }
+
+    #[test]
+    fn float_hash_canonicalizes_zero() {
+        let tab = Table::from_columns(vec![("f", Column::from_f64(vec![0.0, -0.0]))]).unwrap();
+        let hs = row_hashes(&tab, &[0], &NativeHasher).unwrap();
+        assert_eq!(hs[0], hs[1]);
+    }
+}

@@ -1,0 +1,139 @@
+//! K-way merge of sorted tables — the final local step of distributed sort
+//! when workers receive pre-sorted runs, and the repartitioner's combiner.
+
+use super::kernels::rows_cmp;
+use super::sort::SortOptions;
+use crate::error::Result;
+use crate::table::Table;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+struct HeapItem {
+    key_rank: usize, // which input table
+    row: u32,
+}
+
+/// Merge tables that are each sorted under `opts` into one sorted table.
+pub fn merge_sorted(tables: &[&Table], opts: &SortOptions) -> Result<Table> {
+    if tables.is_empty() {
+        return Err(crate::error::Error::invalid("merge_sorted of zero tables"));
+    }
+    if tables.len() == 1 {
+        return Ok(tables[0].clone());
+    }
+    let cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
+    let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
+    let cmp = |a: &HeapItem, b: &HeapItem| -> Ordering {
+        for (i, &c) in cols.iter().enumerate() {
+            let ord = rows_cmp(
+                tables[a.key_rank],
+                a.row as usize,
+                &[c],
+                tables[b.key_rank],
+                b.row as usize,
+                &[c],
+            );
+            let ord = if dirs[i] { ord } else { ord.reverse() };
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        }
+        // tie-break on input rank for determinism
+        a.key_rank.cmp(&b.key_rank)
+    };
+
+    struct Ord2<'a> {
+        item: HeapItem,
+        cmp: &'a dyn Fn(&HeapItem, &HeapItem) -> Ordering,
+    }
+    impl PartialEq for Ord2<'_> {
+        fn eq(&self, other: &Self) -> bool {
+            (self.cmp)(&self.item, &other.item) == Ordering::Equal
+        }
+    }
+    impl Eq for Ord2<'_> {}
+    impl PartialOrd for Ord2<'_> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ord2<'_> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            (self.cmp)(&self.item, &other.item)
+        }
+    }
+
+    let cmp_ref: &dyn Fn(&HeapItem, &HeapItem) -> Ordering = &cmp;
+    let mut heap: BinaryHeap<Reverse<Ord2>> = BinaryHeap::new();
+    for (k, t) in tables.iter().enumerate() {
+        if t.num_rows() > 0 {
+            heap.push(Reverse(Ord2 { item: HeapItem { key_rank: k, row: 0 }, cmp: cmp_ref }));
+        }
+    }
+    // Collect (table, row) picks, then gather per input table preserving
+    // pick order via a permutation over the concatenated table.
+    let mut pick_table: Vec<u32> = Vec::new();
+    let mut pick_row: Vec<u32> = Vec::new();
+    while let Some(Reverse(top)) = heap.pop() {
+        let HeapItem { key_rank, row } = top.item;
+        pick_table.push(key_rank as u32);
+        pick_row.push(row);
+        if (row as usize) + 1 < tables[key_rank].num_rows() {
+            heap.push(Reverse(Ord2 {
+                item: HeapItem { key_rank, row: row + 1 },
+                cmp: cmp_ref,
+            }));
+        }
+    }
+    // Build global indices into concat order.
+    let mut base = vec![0u32; tables.len()];
+    let mut acc = 0u32;
+    for (k, t) in tables.iter().enumerate() {
+        base[k] = acc;
+        acc += t.num_rows() as u32;
+    }
+    let global: Vec<u32> = pick_table
+        .iter()
+        .zip(&pick_row)
+        .map(|(&t, &r)| base[t as usize] + r)
+        .collect();
+    let concat = Table::concat(tables)?;
+    Ok(concat.gather(&global))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::sort::is_sorted;
+
+    #[test]
+    fn merges_sorted_runs() {
+        let a = Table::from_columns(vec![("k", Column::from_i64(vec![1, 4, 7]))]).unwrap();
+        let b = Table::from_columns(vec![("k", Column::from_i64(vec![2, 5, 8]))]).unwrap();
+        let c = Table::from_columns(vec![("k", Column::from_i64(vec![3, 6]))]).unwrap();
+        let m = merge_sorted(&[&a, &b, &c], &SortOptions::by(0)).unwrap();
+        assert_eq!(
+            m.column(0).unwrap().i64_values().unwrap(),
+            &[1, 2, 3, 4, 5, 6, 7, 8]
+        );
+    }
+
+    #[test]
+    fn merge_with_duplicates_and_empty() {
+        let a = Table::from_columns(vec![("k", Column::from_i64(vec![1, 1, 2]))]).unwrap();
+        let b = Table::from_columns(vec![("k", Column::from_i64(vec![]))]).unwrap();
+        let c = Table::from_columns(vec![("k", Column::from_i64(vec![1, 3]))]).unwrap();
+        let m = merge_sorted(&[&a, &b, &c], &SortOptions::by(0)).unwrap();
+        assert_eq!(m.column(0).unwrap().i64_values().unwrap(), &[1, 1, 1, 2, 3]);
+        assert!(is_sorted(&m, &SortOptions::by(0)));
+    }
+
+    #[test]
+    fn descending_merge() {
+        let a = Table::from_columns(vec![("k", Column::from_i64(vec![9, 5, 1]))]).unwrap();
+        let b = Table::from_columns(vec![("k", Column::from_i64(vec![8, 4]))]).unwrap();
+        let m = merge_sorted(&[&a, &b], &SortOptions::by_desc(0)).unwrap();
+        assert_eq!(m.column(0).unwrap().i64_values().unwrap(), &[9, 8, 5, 4, 1]);
+    }
+}

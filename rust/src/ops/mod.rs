@@ -1,0 +1,37 @@
+//! Local (single-partition) dataframe operators — the paper's *core local
+//! operators* (§III-B-1).
+//!
+//! Every distributed operator in [`crate::dist`] is composed of these local
+//! kernels plus communication routines ([`crate::comm`]), mirroring the
+//! paper's sub-operator decomposition: *core local op* + *auxiliary local
+//! ops* + *communication ops*.
+
+pub mod arith;
+pub mod describe;
+pub mod distinct;
+pub mod filter;
+pub mod groupby;
+pub mod join;
+pub mod kernels;
+pub mod merge;
+pub mod partition;
+pub mod sample;
+pub mod scalar;
+pub mod select;
+pub mod setops;
+pub mod sort;
+
+pub use arith::{binary_op, compare, with_binary, BinOp, CmpOp};
+pub use describe::{describe, describe_table, ColumnStats};
+pub use distinct::distinct;
+pub use filter::{filter, filter_by_column};
+pub use groupby::{groupby, AggFun, AggSpec};
+pub use join::{join, JoinAlgo, JoinOptions, JoinType};
+pub use kernels::{KeyHasher, NativeHasher};
+pub use merge::merge_sorted;
+pub use partition::{partition_by_hash, partition_by_range};
+pub use sample::{sample_rows, splitters_from_sample};
+pub use scalar::{add_scalar, mul_scalar};
+pub use select::{drop_columns, head, limit, rename, select, tail};
+pub use setops::{difference, intersect, union_all, union_distinct};
+pub use sort::{sort, SortKey, SortOptions};

@@ -1,0 +1,177 @@
+//! Partitioners — the *auxiliary local operators* that precede every
+//! shuffle (paper Fig 2: "partition" boxes).
+//!
+//! Hash partitioning runs the [`KeyHasher`] (PJRT Pallas kernel or native)
+//! over the key columns and scatters rows to `p` output tables; range
+//! partitioning (for distributed sort) routes by splitter comparison.
+
+use super::kernels::{row_hashes, rows_cmp, KeyHasher};
+use crate::error::{Error, Result};
+use crate::table::Table;
+
+/// Split `t` into `p` tables by key hash: row `i` goes to partition
+/// `hash(keys[i]) mod p`. Partition assignment is identical on every
+/// worker (same hash function), which is what makes the distributed
+/// operators correct.
+pub fn partition_by_hash(
+    t: &Table,
+    key_cols: &[usize],
+    p: usize,
+    hasher: &dyn KeyHasher,
+) -> Result<Vec<Table>> {
+    if p == 0 {
+        return Err(Error::invalid("partition_by_hash: p must be > 0"));
+    }
+    if p == 1 {
+        return Ok(vec![t.clone()]);
+    }
+    let hashes = row_hashes(t, key_cols, hasher)?;
+    // two-pass scatter: histogram then fill — avoids per-partition Vec grow.
+    let mut counts = vec![0u32; p];
+    let pids: Vec<u32> = hashes
+        .iter()
+        .map(|&h| (h as u64 % p as u64) as u32)
+        .collect();
+    for &pid in &pids {
+        counts[pid as usize] += 1;
+    }
+    let mut offsets = vec![0u32; p + 1];
+    for i in 0..p {
+        offsets[i + 1] = offsets[i] + counts[i];
+    }
+    let mut order = vec![0u32; t.num_rows()];
+    let mut cursor = offsets[..p].to_vec();
+    for (row, &pid) in pids.iter().enumerate() {
+        order[cursor[pid as usize] as usize] = row as u32;
+        cursor[pid as usize] += 1;
+    }
+    let mut out = Vec::with_capacity(p);
+    for i in 0..p {
+        let slice = &order[offsets[i] as usize..offsets[i + 1] as usize];
+        out.push(t.gather(slice));
+    }
+    Ok(out)
+}
+
+/// Split `t` into `splitters.num_rows() + 1` tables by range: row goes to
+/// the first partition whose splitter is ≥ the row key (splitters must be
+/// sorted on the same key columns). Used by the distributed sample sort.
+pub fn partition_by_range(
+    t: &Table,
+    key_cols: &[usize],
+    splitters: &Table,
+    splitter_cols: &[usize],
+) -> Result<Vec<Table>> {
+    let p = splitters.num_rows() + 1;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for row in 0..t.num_rows() {
+        // binary search over splitters
+        let (mut lo, mut hi) = (0usize, splitters.num_rows());
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            match rows_cmp(t, row, key_cols, splitters, mid, splitter_cols) {
+                std::cmp::Ordering::Less | std::cmp::Ordering::Equal => hi = mid,
+                std::cmp::Ordering::Greater => lo = mid + 1,
+            }
+        }
+        buckets[lo].push(row as u32);
+    }
+    Ok(buckets.into_iter().map(|b| t.gather(&b)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::NativeHasher;
+
+    fn t(n: usize) -> Table {
+        crate::datagen::uniform_table(3, n, 0.9)
+    }
+
+    #[test]
+    fn hash_partition_covers_all_rows() {
+        let tab = t(10_000);
+        let parts = partition_by_hash(&tab, &[0], 8, &NativeHasher).unwrap();
+        assert_eq!(parts.len(), 8);
+        let total: usize = parts.iter().map(|p| p.num_rows()).sum();
+        assert_eq!(total, 10_000);
+        // roughly balanced under uniform keys
+        for p in &parts {
+            assert!(p.num_rows() > 800, "unbalanced: {}", p.num_rows());
+        }
+    }
+
+    #[test]
+    fn same_key_same_partition() {
+        let tab = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![7, 7, 7, 13, 13, 7]),
+        )])
+        .unwrap();
+        let parts = partition_by_hash(&tab, &[0], 4, &NativeHasher).unwrap();
+        // all 7s land together, all 13s land together
+        let with_7: Vec<usize> = parts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.column(0).unwrap().i64_values().unwrap().contains(&7))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(with_7.len(), 1);
+        assert_eq!(
+            parts[with_7[0]]
+                .column(0)
+                .unwrap()
+                .i64_values()
+                .unwrap()
+                .iter()
+                .filter(|&&k| k == 7)
+                .count(),
+            4
+        );
+    }
+
+    #[test]
+    fn p_one_is_identity() {
+        let tab = t(100);
+        let parts = partition_by_hash(&tab, &[0], 1, &NativeHasher).unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], tab);
+    }
+
+    #[test]
+    fn range_partition_routes_by_splitters() {
+        let tab = Table::from_columns(vec![("k", Column::from_i64(vec![5, 15, 25, 10, 20]))])
+            .unwrap();
+        let splitters =
+            Table::from_columns(vec![("k", Column::from_i64(vec![10, 20]))]).unwrap();
+        let parts = partition_by_range(&tab, &[0], &splitters, &[0]).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].column(0).unwrap().i64_values().unwrap(), &[5, 10]); // ≤10
+        assert_eq!(parts[1].column(0).unwrap().i64_values().unwrap(), &[15, 20]); // ≤20
+        assert_eq!(parts[2].column(0).unwrap().i64_values().unwrap(), &[25]); // >20
+    }
+
+    #[test]
+    fn range_partition_ordering_invariant() {
+        // every key in partition i ≤ every key in partition i+1
+        let tab = t(5_000);
+        let splitters = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![1000, 2500, 4000]),
+        )])
+        .unwrap();
+        let parts = partition_by_range(&tab, &[0], &splitters, &[0]).unwrap();
+        let maxes: Vec<i64> = parts
+            .iter()
+            .map(|p| p.column(0).unwrap().i64_values().unwrap().iter().copied().max().unwrap_or(i64::MIN))
+            .collect();
+        let mins: Vec<i64> = parts
+            .iter()
+            .map(|p| p.column(0).unwrap().i64_values().unwrap().iter().copied().min().unwrap_or(i64::MAX))
+            .collect();
+        for i in 0..parts.len() - 1 {
+            assert!(maxes[i] <= mins[i + 1]);
+        }
+    }
+}

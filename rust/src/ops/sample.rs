@@ -1,0 +1,105 @@
+//! Row sampling and splitter derivation — the basis of the distributed
+//! sample sort and of the paper's (§VI) sample-based repartitioning plan.
+
+use super::sort::{sort_indices, SortOptions};
+use crate::error::Result;
+use crate::table::Table;
+use crate::util::SplitMix64;
+
+/// Uniformly sample `k` rows (without replacement when `k ≤ n`).
+pub fn sample_rows(t: &Table, k: usize, seed: u64) -> Table {
+    let n = t.num_rows();
+    if k >= n {
+        return t.clone();
+    }
+    // Floyd's algorithm for a k-subset.
+    let mut rng = SplitMix64::new(seed);
+    let mut chosen: Vec<u32> = Vec::with_capacity(k);
+    for j in (n - k)..n {
+        let r = rng.next_bounded(j as u64 + 1) as u32;
+        if chosen.contains(&r) {
+            chosen.push(j as u32);
+        } else {
+            chosen.push(r);
+        }
+    }
+    chosen.sort_unstable();
+    t.gather(&chosen)
+}
+
+/// Derive `p - 1` splitter rows from a (gathered, global) sample so that
+/// range-partitioning by them yields ~balanced partitions. Returns a table
+/// holding only the key columns, sorted.
+pub fn splitters_from_sample(
+    sample: &Table,
+    key_cols: &[usize],
+    p: usize,
+) -> Result<Table> {
+    let opts = SortOptions {
+        keys: key_cols.iter().map(|&c| super::sort::SortKey::asc(c)).collect(),
+        stable: false,
+    };
+    let idx = sort_indices(sample, &opts)?;
+    let sorted = sample.gather(&idx).project(key_cols)?;
+    if p <= 1 || sorted.num_rows() == 0 {
+        return Ok(sorted.slice(0, 0));
+    }
+    let n = sorted.num_rows();
+    let mut picks: Vec<u32> = Vec::with_capacity(p - 1);
+    for i in 1..p {
+        let pos = (i * n / p).min(n - 1) as u32;
+        picks.push(pos);
+    }
+    Ok(sorted.gather(&picks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    #[test]
+    fn sample_size_and_membership() {
+        let t = Table::from_columns(vec![("k", Column::from_i64((0..1000).collect()))]).unwrap();
+        let s = sample_rows(&t, 100, 7);
+        assert_eq!(s.num_rows(), 100);
+        let all: Vec<i64> = s.column(0).unwrap().i64_values().unwrap().to_vec();
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 100, "sampled with replacement");
+        assert!(all.iter().all(|&k| (0..1000).contains(&k)));
+    }
+
+    #[test]
+    fn sample_k_ge_n_is_identity() {
+        let t = Table::from_columns(vec![("k", Column::from_i64(vec![1, 2]))]).unwrap();
+        assert_eq!(sample_rows(&t, 10, 1), t);
+    }
+
+    #[test]
+    fn splitters_are_sorted_and_sized() {
+        let t = crate::datagen::uniform_table(11, 10_000, 0.9);
+        let s = sample_rows(&t, 512, 3);
+        let sp = splitters_from_sample(&s, &[0], 8).unwrap();
+        assert_eq!(sp.num_rows(), 7);
+        assert_eq!(sp.num_columns(), 1);
+        let keys = sp.column(0).unwrap().i64_values().unwrap();
+        for w in keys.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn splitters_balance_range_partition() {
+        let t = crate::datagen::uniform_table(13, 20_000, 0.9);
+        let s = sample_rows(&t, 2_000, 5);
+        let sp = splitters_from_sample(&s, &[0], 4).unwrap();
+        let parts = crate::ops::partition_by_range(&t, &[0], &sp, &[0]).unwrap();
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            let frac = p.num_rows() as f64 / 20_000.0;
+            assert!((0.15..0.35).contains(&frac), "unbalanced: {frac}");
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Element-wise scalar arithmetic — the `add_scalar` stage of the paper's
+//! Fig 9 pipeline (`join → groupby → sort → add_scalar`).
+//!
+//! Like key hashing, `add_scalar` has an AOT-compiled L2/L1 path
+//! ([`crate::runtime::Kernels::add_scalar_f64`]) and this native fallback.
+
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::table::Table;
+
+/// `t[col] += scalar` (int64 or float64 column; int columns take the
+/// scalar truncated, wrapping on overflow — SQL-ish modular semantics).
+/// Null slots stay null.
+pub fn add_scalar(t: &Table, col: usize, scalar: f64) -> Result<Table> {
+    map_numeric(t, col, |x| x + scalar, |x| x.wrapping_add(scalar as i64))
+}
+
+/// `t[col] *= scalar` (wrapping for int columns).
+pub fn mul_scalar(t: &Table, col: usize, scalar: f64) -> Result<Table> {
+    map_numeric(t, col, |x| x * scalar, |x| x.wrapping_mul(scalar as i64))
+}
+
+fn map_numeric(
+    t: &Table,
+    col: usize,
+    f: impl Fn(f64) -> f64,
+    g: impl Fn(i64) -> i64,
+) -> Result<Table> {
+    let c = t.column(col)?;
+    let new_col = match c {
+        Column::Float64(fc) => {
+            let values = fc.values.iter().map(|&x| f(x)).collect();
+            Column::Float64(crate::column::Float64Column::new(values, fc.validity.clone()))
+        }
+        Column::Int64(ic) => {
+            let values = ic.values.iter().map(|&x| g(x)).collect();
+            Column::Int64(crate::column::Int64Column::new(values, ic.validity.clone()))
+        }
+        other => {
+            return Err(Error::Type(format!(
+                "scalar arithmetic on non-numeric column {}",
+                other.dtype()
+            )))
+        }
+    };
+    let mut cols: Vec<Column> = t.columns().to_vec();
+    cols[col] = new_col;
+    Table::new(t.schema().clone(), cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    #[test]
+    fn add_int_and_float() {
+        let t = Table::from_columns(vec![
+            ("i", Column::from_i64(vec![1, 2])),
+            ("f", Column::from_f64(vec![0.5, 1.5])),
+        ])
+        .unwrap();
+        let a = add_scalar(&t, 0, 10.0).unwrap();
+        assert_eq!(a.column(0).unwrap().i64_values().unwrap(), &[11, 12]);
+        let b = add_scalar(&t, 1, 0.25).unwrap();
+        assert_eq!(b.value(0, 1).unwrap(), Value::Float64(0.75));
+    }
+
+    #[test]
+    fn nulls_preserved() {
+        let t =
+            Table::from_columns(vec![("i", Column::from_opt_i64(&[Some(1), None]))]).unwrap();
+        let a = add_scalar(&t, 0, 1.0).unwrap();
+        assert_eq!(a.value(0, 0).unwrap(), Value::Int64(2));
+        assert!(a.value(1, 0).unwrap().is_null());
+    }
+
+    #[test]
+    fn mul_and_type_error() {
+        let t = Table::from_columns(vec![
+            ("f", Column::from_f64(vec![2.0])),
+            ("s", Column::from_strings(&["x"])),
+        ])
+        .unwrap();
+        let m = mul_scalar(&t, 0, 3.0).unwrap();
+        assert_eq!(m.value(0, 0).unwrap(), Value::Float64(6.0));
+        assert!(add_scalar(&t, 1, 1.0).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Row/column selection utilities completing the DDF API surface:
+//! head/tail/limit, column rename/drop — the cheap relational-algebra
+//! scaffolding every dataframe user expects.
+
+use crate::error::{Error, Result};
+use crate::table::Table;
+use crate::types::{Field, Schema};
+
+/// First `n` rows (all rows when `n ≥ len`).
+pub fn head(t: &Table, n: usize) -> Table {
+    t.slice(0, n.min(t.num_rows()))
+}
+
+/// Last `n` rows.
+pub fn tail(t: &Table, n: usize) -> Table {
+    let n = n.min(t.num_rows());
+    t.slice(t.num_rows() - n, n)
+}
+
+/// Alias of [`head`] (SQL LIMIT).
+pub fn limit(t: &Table, n: usize) -> Table {
+    head(t, n)
+}
+
+/// Rename a column (by name) returning a new table.
+pub fn rename(t: &Table, from: &str, to: &str) -> Result<Table> {
+    let idx = t.schema().index_of(from)?;
+    if t.schema().index_of(to).is_ok() {
+        return Err(Error::schema(format!("column '{to}' already exists")));
+    }
+    let fields: Vec<Field> = t
+        .schema()
+        .fields()
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            if i == idx {
+                Field::new(to, f.dtype)
+            } else {
+                f.clone()
+            }
+        })
+        .collect();
+    Table::new(Schema::new(fields), t.columns().to_vec())
+}
+
+/// Drop columns by name, returning the projection onto the rest.
+pub fn drop_columns(t: &Table, names: &[&str]) -> Result<Table> {
+    let mut drop_idx = Vec::with_capacity(names.len());
+    for n in names {
+        drop_idx.push(t.schema().index_of(n)?);
+    }
+    let keep: Vec<usize> = (0..t.num_columns())
+        .filter(|i| !drop_idx.contains(i))
+        .collect();
+    if keep.is_empty() {
+        return Err(Error::schema("cannot drop every column"));
+    }
+    t.project(&keep)
+}
+
+/// Select columns by name, in the given order.
+pub fn select(t: &Table, names: &[&str]) -> Result<Table> {
+    let mut idx = Vec::with_capacity(names.len());
+    for n in names {
+        idx.push(t.schema().index_of(n)?);
+    }
+    t.project(&idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::types::Value;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 3, 4, 5])),
+            ("v", Column::from_i64(vec![10, 20, 30, 40, 50])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn head_tail_limit() {
+        assert_eq!(head(&t(), 2).column(0).unwrap().i64_values().unwrap(), &[1, 2]);
+        assert_eq!(tail(&t(), 2).column(0).unwrap().i64_values().unwrap(), &[4, 5]);
+        assert_eq!(limit(&t(), 100).num_rows(), 5);
+        assert_eq!(head(&t(), 0).num_rows(), 0);
+    }
+
+    #[test]
+    fn rename_checks_collisions() {
+        let r = rename(&t(), "v", "value").unwrap();
+        assert_eq!(r.schema().field(1).unwrap().name, "value");
+        assert_eq!(r.value(0, 1).unwrap(), Value::Int64(10));
+        assert!(rename(&t(), "v", "k").is_err());
+        assert!(rename(&t(), "zzz", "x").is_err());
+    }
+
+    #[test]
+    fn drop_and_select() {
+        let d = drop_columns(&t(), &["k"]).unwrap();
+        assert_eq!(d.num_columns(), 1);
+        assert_eq!(d.schema().field(0).unwrap().name, "v");
+        assert!(drop_columns(&t(), &["k", "v"]).is_err());
+        let s = select(&t(), &["v", "k"]).unwrap();
+        assert_eq!(s.schema().field(0).unwrap().name, "v");
+        assert_eq!(s.schema().field(1).unwrap().name, "k");
+    }
+}

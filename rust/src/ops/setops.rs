@@ -1,0 +1,156 @@
+//! SQL set operators over whole rows: union (all/distinct), intersect,
+//! difference — part of the Cylon DDF operator surface (paper Fig 3's
+//! operator families).
+
+use super::distinct::distinct_with_hasher;
+use super::kernels::{row_hashes, rows_equal, KeyHasher, NativeHasher};
+use crate::error::Result;
+use crate::table::Table;
+use std::collections::HashMap;
+
+fn all_cols(t: &Table) -> Vec<usize> {
+    (0..t.num_columns()).collect()
+}
+
+/// Bag union: concatenation (schemas must be compatible).
+pub fn union_all(a: &Table, b: &Table) -> Result<Table> {
+    Table::concat(&[a, b])
+}
+
+/// Set union: concatenation then whole-row distinct.
+pub fn union_distinct(a: &Table, b: &Table) -> Result<Table> {
+    let u = union_all(a, b)?;
+    let cols = all_cols(&u);
+    distinct_with_hasher(&u, &cols, &NativeHasher)
+}
+
+/// Rows of `a` that (whole-row) appear in `b`, deduplicated.
+pub fn intersect(a: &Table, b: &Table) -> Result<Table> {
+    intersect_with_hasher(a, b, &NativeHasher)
+}
+
+/// [`intersect`] with an explicit hasher.
+pub fn intersect_with_hasher(a: &Table, b: &Table, hasher: &dyn KeyHasher) -> Result<Table> {
+    a.schema().check_compatible(b.schema())?;
+    let acols = all_cols(a);
+    let bcols = all_cols(b);
+    let bh = row_hashes(b, &bcols, hasher)?;
+    let mut bmap: HashMap<i64, Vec<u32>> = HashMap::new();
+    for (i, &h) in bh.iter().enumerate() {
+        bmap.entry(h).or_default().push(i as u32);
+    }
+    let da = distinct_with_hasher(a, &acols, hasher)?;
+    let dh = row_hashes(&da, &acols, hasher)?;
+    let mut keep = Vec::new();
+    for (i, &h) in dh.iter().enumerate() {
+        if let Some(cands) = bmap.get(&h) {
+            if cands
+                .iter()
+                .any(|&j| rows_equal(&da, i, &acols, b, j as usize, &bcols))
+            {
+                keep.push(i as u32);
+            }
+        }
+    }
+    Ok(da.gather(&keep))
+}
+
+/// Rows of `a` that (whole-row) do NOT appear in `b`, deduplicated
+/// (SQL `EXCEPT`).
+pub fn difference(a: &Table, b: &Table) -> Result<Table> {
+    difference_with_hasher(a, b, &NativeHasher)
+}
+
+/// [`difference`] with an explicit hasher.
+pub fn difference_with_hasher(a: &Table, b: &Table, hasher: &dyn KeyHasher) -> Result<Table> {
+    a.schema().check_compatible(b.schema())?;
+    let acols = all_cols(a);
+    let bcols = all_cols(b);
+    let bh = row_hashes(b, &bcols, hasher)?;
+    let mut bmap: HashMap<i64, Vec<u32>> = HashMap::new();
+    for (i, &h) in bh.iter().enumerate() {
+        bmap.entry(h).or_default().push(i as u32);
+    }
+    let da = distinct_with_hasher(a, &acols, hasher)?;
+    let dh = row_hashes(&da, &acols, hasher)?;
+    let mut keep = Vec::new();
+    for (i, &h) in dh.iter().enumerate() {
+        let hit = bmap.get(&h).map(|cands| {
+            cands
+                .iter()
+                .any(|&j| rows_equal(&da, i, &acols, b, j as usize, &bcols))
+        });
+        if hit != Some(true) {
+            keep.push(i as u32);
+        }
+    }
+    Ok(da.gather(&keep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t(ks: Vec<i64>) -> Table {
+        Table::from_columns(vec![("k", Column::from_i64(ks))]).unwrap()
+    }
+
+    fn keys(t: &Table) -> Vec<i64> {
+        let mut v = t.column(0).unwrap().i64_values().unwrap().to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn union_variants() {
+        let a = t(vec![1, 2, 2]);
+        let b = t(vec![2, 3]);
+        assert_eq!(union_all(&a, &b).unwrap().num_rows(), 5);
+        assert_eq!(keys(&union_distinct(&a, &b).unwrap()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn intersect_dedups() {
+        let a = t(vec![1, 2, 2, 3]);
+        let b = t(vec![2, 3, 4]);
+        assert_eq!(keys(&intersect(&a, &b).unwrap()), vec![2, 3]);
+    }
+
+    #[test]
+    fn difference_except_semantics() {
+        let a = t(vec![1, 2, 2, 3]);
+        let b = t(vec![2]);
+        assert_eq!(keys(&difference(&a, &b).unwrap()), vec![1, 3]);
+        // empty b: difference = distinct(a)
+        assert_eq!(keys(&difference(&a, &t(vec![])).unwrap()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn multi_column_rows() {
+        let a = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 1])),
+            ("s", Column::from_strings(&["x", "y"])),
+        ])
+        .unwrap();
+        let b = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1])),
+            ("s", Column::from_strings(&["y"])),
+        ])
+        .unwrap();
+        let i = intersect(&a, &b).unwrap();
+        assert_eq!(i.num_rows(), 1);
+        assert_eq!(i.value(0, 1).unwrap().as_str(), Some("y"));
+        let d = difference(&a, &b).unwrap();
+        assert_eq!(d.num_rows(), 1);
+        assert_eq!(d.value(0, 1).unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn incompatible_schema_errors() {
+        let a = t(vec![1]);
+        let b = Table::from_columns(vec![("f", Column::from_f64(vec![1.0]))]).unwrap();
+        assert!(intersect(&a, &b).is_err());
+        assert!(difference(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Local multi-key sort.
+//!
+//! The distributed sort (paper Fig 8 third panel) is a sample sort: sample
+//! → broadcast splitters → range partition ([`super::partition_by_range`]) →
+//! all-to-all → this local sort per worker.
+
+use super::kernels::rows_cmp;
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::table::Table;
+use std::cmp::Ordering;
+
+/// One sort key.
+#[derive(Debug, Clone, Copy)]
+pub struct SortKey {
+    /// Column index.
+    pub col: usize,
+    /// Ascending order when true.
+    pub ascending: bool,
+}
+
+impl SortKey {
+    /// Ascending key on `col`.
+    pub fn asc(col: usize) -> Self {
+        SortKey { col, ascending: true }
+    }
+    /// Descending key on `col`.
+    pub fn desc(col: usize) -> Self {
+        SortKey { col, ascending: false }
+    }
+}
+
+/// Options for [`sort`].
+#[derive(Debug, Clone)]
+pub struct SortOptions {
+    /// Sort keys, most-significant first.
+    pub keys: Vec<SortKey>,
+    /// Stable sort (preserve input order of ties).
+    pub stable: bool,
+}
+
+impl SortOptions {
+    /// Single ascending key.
+    pub fn by(col: usize) -> Self {
+        SortOptions { keys: vec![SortKey::asc(col)], stable: false }
+    }
+    /// Single descending key.
+    pub fn by_desc(col: usize) -> Self {
+        SortOptions { keys: vec![SortKey::desc(col)], stable: false }
+    }
+    /// Builder-style stability toggle.
+    pub fn stable(mut self) -> Self {
+        self.stable = true;
+        self
+    }
+}
+
+/// Sort a table. Nulls sort first under ascending order (pandas
+/// `na_position='first'` analogue), last under descending.
+pub fn sort(t: &Table, opts: &SortOptions) -> Result<Table> {
+    if opts.keys.is_empty() {
+        return Err(Error::invalid("sort: empty key list"));
+    }
+    for k in &opts.keys {
+        t.column(k.col)?;
+    }
+    let indices = sort_indices(t, opts)?;
+    Ok(t.gather(&indices))
+}
+
+/// The permutation that sorts `t` (exposed for merge/splitter logic).
+pub fn sort_indices(t: &Table, opts: &SortOptions) -> Result<Vec<u32>> {
+    // Fast path: single int64 ascending non-null key — the benchmark shape.
+    if opts.keys.len() == 1 && opts.keys[0].ascending {
+        if let Column::Int64(c) = t.column(opts.keys[0].col)? {
+            if c.validity.is_none() {
+                let mut idx: Vec<u32> = (0..t.num_rows() as u32).collect();
+                if opts.stable {
+                    idx.sort_by_key(|&i| c.values[i as usize]);
+                } else {
+                    idx.sort_unstable_by_key(|&i| c.values[i as usize]);
+                }
+                return Ok(idx);
+            }
+        }
+    }
+    let cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
+    let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
+    let cmp = |&a: &u32, &b: &u32| -> Ordering {
+        for (i, &c) in cols.iter().enumerate() {
+            let ord = rows_cmp(t, a as usize, &[c], t, b as usize, &[c]);
+            let ord = if dirs[i] { ord } else { ord.reverse() };
+            if ord != Ordering::Equal {
+                return ord;
+            }
+        }
+        Ordering::Equal
+    };
+    let mut idx: Vec<u32> = (0..t.num_rows() as u32).collect();
+    if opts.stable {
+        idx.sort_by(cmp);
+    } else {
+        idx.sort_unstable_by(cmp);
+    }
+    Ok(idx)
+}
+
+/// Check whether `t` is sorted under `opts` (test/verification helper).
+pub fn is_sorted(t: &Table, opts: &SortOptions) -> bool {
+    for r in 1..t.num_rows() {
+        for k in &opts.keys {
+            let ord = rows_cmp(t, r - 1, &[k.col], t, r, &[k.col]);
+            let ord = if k.ascending { ord } else { ord.reverse() };
+            match ord {
+                Ordering::Less => break,
+                Ordering::Greater => return false,
+                Ordering::Equal => continue,
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    #[test]
+    fn single_key_fast_path() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![3, 1, 2])),
+            ("v", Column::from_strings(&["c", "a", "b"])),
+        ])
+        .unwrap();
+        let s = sort(&t, &SortOptions::by(0)).unwrap();
+        assert_eq!(s.column(0).unwrap().i64_values().unwrap(), &[1, 2, 3]);
+        assert_eq!(s.value(0, 1).unwrap(), Value::Utf8("a".into()));
+        assert!(is_sorted(&s, &SortOptions::by(0)));
+    }
+
+    #[test]
+    fn descending() {
+        let t = Table::from_columns(vec![("k", Column::from_i64(vec![3, 1, 2]))]).unwrap();
+        let s = sort(&t, &SortOptions::by_desc(0)).unwrap();
+        assert_eq!(s.column(0).unwrap().i64_values().unwrap(), &[3, 2, 1]);
+        assert!(is_sorted(&s, &SortOptions::by_desc(0)));
+        assert!(!is_sorted(&s, &SortOptions::by(0)));
+    }
+
+    #[test]
+    fn nulls_sort_first_ascending() {
+        let t =
+            Table::from_columns(vec![("k", Column::from_opt_i64(&[Some(2), None, Some(1)]))])
+                .unwrap();
+        let s = sort(&t, &SortOptions::by(0)).unwrap();
+        assert!(s.value(0, 0).unwrap().is_null());
+        assert_eq!(s.value(1, 0).unwrap(), Value::Int64(1));
+    }
+
+    #[test]
+    fn multi_key_with_direction() {
+        let t = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1, 1, 2, 2])),
+            ("b", Column::from_i64(vec![5, 9, 5, 9])),
+        ])
+        .unwrap();
+        let s = sort(
+            &t,
+            &SortOptions {
+                keys: vec![SortKey::asc(0), SortKey::desc(1)],
+                stable: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(s.column(1).unwrap().i64_values().unwrap(), &[9, 5, 9, 5]);
+    }
+
+    #[test]
+    fn stable_preserves_tie_order() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 1, 1])),
+            ("pos", Column::from_i64(vec![0, 1, 2])),
+        ])
+        .unwrap();
+        let s = sort(&t, &SortOptions::by(0).stable()).unwrap();
+        assert_eq!(s.column(1).unwrap().i64_values().unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn string_sort() {
+        let t = Table::from_columns(vec![("s", Column::from_strings(&["b", "a", "c"]))]).unwrap();
+        let s = sort(&t, &SortOptions::by(0)).unwrap();
+        assert_eq!(s.value(0, 0).unwrap(), Value::Utf8("a".into()));
+        assert_eq!(s.value(2, 0).unwrap(), Value::Utf8("c".into()));
+    }
+}

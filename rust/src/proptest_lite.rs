@@ -1,0 +1,149 @@
+//! Minimal in-repo property-testing harness (the environment has no
+//! `proptest`/`quickcheck` crates offline).
+//!
+//! Usage:
+//! ```no_run
+//! use cylonflow::proptest_lite::{Gen, run_prop};
+//! run_prop("sort is idempotent", 50, |g| {
+//!     let mut xs: Vec<i64> = g.vec_i64(0, 100);
+//!     xs.sort_unstable();
+//!     let once = xs.clone();
+//!     xs.sort_unstable();
+//!     assert_eq!(once, xs);
+//! });
+//! ```
+//!
+//! On failure the panic message includes the case seed so the exact input
+//! can be replayed with [`run_prop_seeded`].
+
+use crate::util::SplitMix64;
+
+/// Random input generator handed to property closures.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    /// Generator from a case seed.
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: SplitMix64::new(seed) }
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform i64.
+    pub fn i64(&mut self) -> i64 {
+        self.rng.next_i64()
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// i64 in `[lo, hi)` (small-domain keys produce hash collisions, which
+    /// is what the operator properties need to exercise).
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.next_bounded((hi - lo) as u64) as i64
+    }
+
+    /// f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Bool with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vec of i64 with length in `[min_len, max_len]`, values in a small
+    /// collision-rich domain.
+    pub fn vec_i64(&mut self, min_len: usize, max_len: usize) -> Vec<i64> {
+        let n = self.usize_in(min_len, max_len + 1);
+        (0..n).map(|_| self.i64_in(-50, 50)).collect()
+    }
+
+    /// Vec of f64 with length in `[min_len, max_len]`.
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize) -> Vec<f64> {
+        let n = self.usize_in(min_len, max_len + 1);
+        (0..n).map(|_| self.f64() * 100.0 - 50.0).collect()
+    }
+
+    /// Short ASCII string.
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.usize_in(0, max_len + 1);
+        (0..n)
+            .map(|_| (b'a' + self.rng.next_bounded(26) as u8) as char)
+            .collect()
+    }
+}
+
+/// Run `cases` property checks with seeds derived from the property name.
+///
+/// Panics (with the failing seed) on the first failing case.
+pub fn run_prop(name: &str, cases: u64, prop: impl Fn(&mut Gen)) {
+    // Name-derived base seed: stable across runs, distinct across props.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single property case by seed (debugging helper).
+pub fn run_prop_seeded(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("reverse twice is identity", 20, |g| {
+            let xs = g.vec_i64(0, 50);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn reports_failures_with_seed() {
+        run_prop("always fails eventually", 20, |g| {
+            assert!(g.usize_in(0, 10) < 9, "hit the 10% case");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let x = g.i64_in(-5, 5);
+            assert!((-5..5).contains(&x));
+            let s = g.string(8);
+            assert!(s.len() <= 8);
+        }
+    }
+}

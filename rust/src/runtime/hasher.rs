@@ -1,0 +1,74 @@
+//! The PJRT-backed [`KeyHasher`]: routes the per-row hash hot-spot through
+//! the AOT-compiled L1 Pallas kernel.
+
+use super::kernels::{artifacts_present, Kernels};
+use crate::config::{Config, HashPath};
+use crate::error::Result;
+use crate::ops::{KeyHasher, NativeHasher};
+
+/// Key hasher executing the Pallas `hash64` artifact through PJRT.
+/// Stateless and `Sync`; the compiled executable lives in a thread-local
+/// cache (PJRT handles are not `Sync`), so each worker thread compiles
+/// once and reuses.
+#[derive(Debug, Clone)]
+pub struct PjrtHasher {
+    artifacts_dir: String,
+}
+
+impl PjrtHasher {
+    /// Hasher reading artifacts from `dir`. Compilation is lazy (first
+    /// hash call on each thread).
+    pub fn new(dir: impl Into<String>) -> Self {
+        PjrtHasher { artifacts_dir: dir.into() }
+    }
+}
+
+impl KeyHasher for PjrtHasher {
+    fn hash_i64(&self, keys: &[i64], out: &mut [i64]) -> Result<()> {
+        Kernels::with(&self.artifacts_dir, |k| k.hash64(keys, out))
+    }
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Build the configured hasher. `Auto` probes the artifacts directory:
+/// PJRT when the kernels are built, native otherwise (so `cargo test`
+/// passes before `make artifacts`).
+pub fn make_hasher(config: &Config) -> Box<dyn KeyHasher> {
+    match config.hash_path {
+        HashPath::Native => Box::new(NativeHasher),
+        HashPath::Pjrt => Box::new(PjrtHasher::new(config.artifacts_dir.clone())),
+        HashPath::Auto => {
+            if artifacts_present(&config.artifacts_dir) {
+                Box::new(PjrtHasher::new(config.artifacts_dir.clone()))
+            } else {
+                Box::new(NativeHasher)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let cfg = Config {
+            artifacts_dir: "/nonexistent/path".into(),
+            ..Config::default()
+        };
+        let h = make_hasher(&cfg);
+        assert_eq!(h.label(), "native");
+    }
+
+    #[test]
+    fn native_path_explicit() {
+        let cfg = Config {
+            hash_path: HashPath::Native,
+            ..Config::default()
+        };
+        assert_eq!(make_hasher(&cfg).label(), "native");
+    }
+}

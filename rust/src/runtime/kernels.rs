@@ -1,0 +1,197 @@
+//! Thread-local PJRT kernel cache + typed wrappers.
+
+use super::{HIST_PARTITIONS, KERNEL_BLOCK};
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+thread_local! {
+    static KERNELS: RefCell<Option<Kernels>> = const { RefCell::new(None) };
+}
+
+fn artifact_path(dir: &str, name: &str) -> PathBuf {
+    Path::new(dir).join(format!("{name}.hlo.txt"))
+}
+
+/// True when every artifact this runtime needs exists under `dir`.
+pub fn artifacts_present(dir: &str) -> bool {
+    ["hash64", "add_scalar", "colagg"]
+        .iter()
+        .all(|n| artifact_path(dir, &format!("{n}_b{KERNEL_BLOCK}")).exists())
+}
+
+/// The compiled kernel set owned by one thread.
+pub struct Kernels {
+    client: xla::PjRtClient,
+    hash64: xla::PjRtLoadedExecutable,
+    add_scalar: xla::PjRtLoadedExecutable,
+    colagg: xla::PjRtLoadedExecutable,
+    partition_hist: Option<xla::PjRtLoadedExecutable>,
+    /// Scratch block reused across calls (avoids per-block allocation).
+    scratch_i64: Vec<i64>,
+    scratch_f64: Vec<f64>,
+}
+
+impl Kernels {
+    /// Load + compile all artifacts from `dir`.
+    pub fn load(dir: &str) -> Result<Kernels> {
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = artifact_path(dir, name);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                Error::Runtime(format!(
+                    "loading {} failed ({e}); run `make artifacts`",
+                    path.display()
+                ))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(Error::from)
+        };
+        let hash64 = compile(&format!("hash64_b{KERNEL_BLOCK}"))?;
+        let add_scalar = compile(&format!("add_scalar_b{KERNEL_BLOCK}"))?;
+        let colagg = compile(&format!("colagg_b{KERNEL_BLOCK}"))?;
+        let partition_hist =
+            compile(&format!("partition_hist_b{KERNEL_BLOCK}_p{HIST_PARTITIONS}")).ok();
+        Ok(Kernels {
+            client,
+            hash64,
+            add_scalar,
+            colagg,
+            partition_hist,
+            scratch_i64: vec![0i64; KERNEL_BLOCK],
+            scratch_f64: vec![0f64; KERNEL_BLOCK],
+        })
+    }
+
+    /// Run `f` with this thread's kernel cache, loading it on first use.
+    pub fn with<T>(dir: &str, f: impl FnOnce(&mut Kernels) -> Result<T>) -> Result<T> {
+        KERNELS.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(Kernels::load(dir)?);
+            }
+            f(slot.as_mut().expect("just initialized"))
+        })
+    }
+
+    /// Number of PJRT devices (diagnostics).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Upload one block (padding the tail with `pad`) as a device buffer.
+    /// The scratch buffer keeps tail-block uploads allocation-free.
+    fn upload_i64(
+        client: &xla::PjRtClient,
+        scratch: &mut [i64],
+        chunk: &[i64],
+        pad: i64,
+    ) -> Result<xla::PjRtBuffer> {
+        let data: &[i64] = if chunk.len() == KERNEL_BLOCK {
+            chunk
+        } else {
+            scratch[..chunk.len()].copy_from_slice(chunk);
+            scratch[chunk.len()..].fill(pad);
+            &scratch[..]
+        };
+        client
+            .buffer_from_host_buffer(data, &[KERNEL_BLOCK], None)
+            .map_err(Error::from)
+    }
+
+    fn upload_f64(
+        client: &xla::PjRtClient,
+        scratch: &mut [f64],
+        chunk: &[f64],
+        pad: f64,
+    ) -> Result<xla::PjRtBuffer> {
+        let data: &[f64] = if chunk.len() == KERNEL_BLOCK {
+            chunk
+        } else {
+            scratch[..chunk.len()].copy_from_slice(chunk);
+            scratch[chunk.len()..].fill(pad);
+            &scratch[..]
+        };
+        client
+            .buffer_from_host_buffer(data, &[KERNEL_BLOCK], None)
+            .map_err(Error::from)
+    }
+
+    /// splitmix64 over i64 keys via the L1 Pallas kernel; handles arbitrary
+    /// lengths by padding the tail block. Device-buffer upload (no input
+    /// Literal) + tuple-free output literal (§Perf L1/L3 iterations 2-3:
+    /// 55 → 11.5 ns/row).
+    pub fn hash64(&mut self, keys: &[i64], out: &mut [i64]) -> Result<()> {
+        debug_assert_eq!(keys.len(), out.len());
+        for (chunk, ochunk) in keys.chunks(KERNEL_BLOCK).zip(out.chunks_mut(KERNEL_BLOCK)) {
+            let buf = Self::upload_i64(&self.client, &mut self.scratch_i64, chunk, 0)?;
+            let result = self.hash64.execute_b(&[buf])?;
+            // TFRT CPU PJRT lacks CopyRawToHost; literal sync is the
+            // supported download path (plain array, no tuple wrapper).
+            let lit = result[0][0].to_literal_sync()?;
+            let values = lit.to_vec::<i64>()?;
+            ochunk.copy_from_slice(&values[..ochunk.len()]);
+        }
+        Ok(())
+    }
+
+    /// `x + c` over an f64 slice (L2 graph).
+    pub fn add_scalar_f64(&mut self, xs: &[f64], c: f64, out: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(xs.len(), out.len());
+        for (chunk, ochunk) in xs.chunks(KERNEL_BLOCK).zip(out.chunks_mut(KERNEL_BLOCK)) {
+            let buf = Self::upload_f64(&self.client, &mut self.scratch_f64, chunk, 0.0)?;
+            let c_buf = self.client.buffer_from_host_buffer(&[c], &[1], None)?;
+            let result = self.add_scalar.execute_b(&[buf, c_buf])?;
+            let lit = result[0][0].to_literal_sync()?;
+            let values = lit.to_vec::<f64>()?;
+            ochunk.copy_from_slice(&values[..ochunk.len()]);
+        }
+        Ok(())
+    }
+
+    /// Fused (sum, min, max) over an f64 slice (L2 graph). Pads with a
+    /// neutral element and compensates the sum for tail blocks.
+    pub fn colagg_f64(&mut self, xs: &[f64]) -> Result<(f64, f64, f64)> {
+        let mut sum = 0.0f64;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for chunk in xs.chunks(KERNEL_BLOCK) {
+            // pad with the first element so min/max are unaffected, then
+            // subtract the pad mass from the sum
+            let fill = chunk.first().copied().unwrap_or(0.0);
+            let pad = (KERNEL_BLOCK - chunk.len()) as f64 * fill;
+            let buf = Self::upload_f64(&self.client, &mut self.scratch_f64, chunk, fill)?;
+            let result = self.colagg.execute_b(&[buf])?;
+            let v = result[0][0].to_literal_sync()?.to_vec::<f64>()?;
+            sum += v[0] - pad;
+            min = min.min(v[1]);
+            max = max.max(v[2]);
+        }
+        Ok((sum, min, max))
+    }
+
+    /// Fused hash→pid→histogram over one key block (8-way). Returns
+    /// per-partition counts for the first `n` keys of the block
+    /// (`n ≤ KERNEL_BLOCK`; pad rows are masked inside the graph via the
+    /// validity argument).
+    pub fn partition_hist(&mut self, keys: &[i64]) -> Result<Vec<i64>> {
+        if keys.len() > KERNEL_BLOCK {
+            return Err(Error::invalid("partition_hist takes one block"));
+        }
+        let valid: Vec<i64> = (0..KERNEL_BLOCK)
+            .map(|i| (i < keys.len()) as i64)
+            .collect();
+        let kbuf = Self::upload_i64(&self.client, &mut self.scratch_i64, keys, 0)?;
+        let vbuf = self
+            .client
+            .buffer_from_host_buffer(&valid, &[KERNEL_BLOCK], None)?;
+        let exe = self.partition_hist.as_ref().ok_or_else(|| {
+            Error::Runtime("partition_hist artifact not built".into())
+        })?;
+        let result = exe.execute_b(&[kbuf, vbuf])?;
+        result[0][0]
+            .to_literal_sync()?
+            .to_vec::<i64>()
+            .map_err(Error::from)
+    }
+}

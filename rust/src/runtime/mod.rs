@@ -1,0 +1,30 @@
+//! PJRT runtime bridge — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text**; see `/opt/xla-example/README.md`
+//! for why text, not serialized protos) and executes them from the Rust
+//! hot path. Python never runs at request time.
+//!
+//! Kernels (all fixed block size, tail blocks padded):
+//!
+//! | artifact                    | layer | role |
+//! |-----------------------------|-------|------|
+//! | `hash64_b{B}.hlo.txt`       | L1 Pallas | splitmix64 over i64 key blocks — the per-row hot-spot of every key-based operator |
+//! | `add_scalar_b{B}.hlo.txt`   | L2 jnp | `x + c` over f64 blocks (Fig 9 pipeline tail) |
+//! | `colagg_b{B}.hlo.txt`       | L2 jnp | fused (sum, min, max) over f64 blocks |
+//! | `partition_hist_b{B}_p8.hlo.txt` | L2+L1 | hash → pid → per-partition histogram (8-way), the paper's partition sub-operator as one fused graph |
+//!
+//! Compiled executables are cached **per thread** (PJRT client/executable
+//! handles are not Sync); each worker thread pays one compile per kernel
+//! and then reuses it for the application lifetime — the same
+//! keep-expensive-state-alive pattern as the communication context.
+
+mod hasher;
+mod kernels;
+
+pub use hasher::{make_hasher, PjrtHasher};
+pub use kernels::{artifacts_present, Kernels};
+
+/// Block size every kernel was lowered with (must match `aot.py`).
+pub const KERNEL_BLOCK: usize = 65_536;
+
+/// Partition count the `partition_hist` artifact was lowered with.
+pub const HIST_PARTITIONS: usize = 8;

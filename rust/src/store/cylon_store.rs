@@ -1,0 +1,162 @@
+//! `CylonStore` — the paper's §IV-C inter-application data store.
+//!
+//! Producer app ranks `put` their partition of a named DDF; consumer app
+//! ranks `get` theirs. When the consumer's parallelism differs from the
+//! producer's, `get` runs the repartition routine the paper calls out
+//! ("the store object may be required to carry out a repartition
+//! routine"): partitions are concatenated logically and re-split evenly
+//! over the consumer gang.
+
+use super::ObjectStore;
+use crate::error::Result;
+use crate::table::Table;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-application handle onto the cluster object store.
+#[derive(Clone)]
+pub struct CylonStore {
+    store: Arc<ObjectStore>,
+    rank: usize,
+    world: usize,
+}
+
+impl CylonStore {
+    /// Handle for rank `rank` of a `world`-wide gang.
+    pub fn new(store: Arc<ObjectStore>, rank: usize, world: usize) -> Self {
+        CylonStore { store, rank, world }
+    }
+
+    /// Publish this rank's partition of DDF `name`.
+    pub fn put(&self, name: &str, table: Table) -> Result<()> {
+        self.store
+            .put_partition(name, self.rank, self.world, table)
+    }
+
+    /// Fetch this rank's partition of DDF `name`, blocking up to `timeout`.
+    ///
+    /// If the producer's parallelism equals ours, this is a direct
+    /// partition fetch. Otherwise the repartition routine splits the
+    /// logical table evenly across the consumer gang (row-balanced;
+    /// key-locality is *not* preserved — downstream key-based operators
+    /// shuffle anyway, exactly as in the paper's store design).
+    pub fn get(&self, name: &str, timeout: Duration) -> Result<Table> {
+        let parts = self.store.wait_object(name, timeout)?;
+        if parts.len() == self.world {
+            return Ok((*parts[self.rank]).clone());
+        }
+        // Repartition: logical concat -> even split -> take our slice.
+        // Computed per-rank from cheap metadata (row counts), materializing
+        // only the rows this rank owns.
+        let counts: Vec<usize> = parts.iter().map(|p| p.num_rows()).collect();
+        let total: usize = counts.iter().sum();
+        let base = total / self.world;
+        let extra = total % self.world;
+        let my_start: usize = (0..self.rank)
+            .map(|r| base + usize::from(r < extra))
+            .sum();
+        let my_len = base + usize::from(self.rank < extra);
+        // Walk producer partitions, slicing the overlap with [my_start, my_start+my_len).
+        let mut out: Vec<Table> = Vec::new();
+        let mut offset = 0usize;
+        for (p, &c) in parts.iter().zip(&counts) {
+            let lo = my_start.max(offset);
+            let hi = (my_start + my_len).min(offset + c);
+            if lo < hi {
+                out.push(p.slice(lo - offset, hi - lo));
+            }
+            offset += c;
+        }
+        if out.is_empty() {
+            return Ok(parts
+                .first()
+                .map(|p| Table::empty(p.schema().clone()))
+                .expect("object has at least one partition"));
+        }
+        Table::concat(&out.iter().collect::<Vec<_>>())
+    }
+
+    /// Drop DDF `name` from the store (producer-side cleanup; call from
+    /// one rank).
+    pub fn delete(&self, name: &str) {
+        self.store.delete(name);
+    }
+
+    /// The underlying cluster store (for diagnostics).
+    pub fn object_store(&self) -> &Arc<ObjectStore> {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn table_range(lo: i64, n: i64) -> Table {
+        Table::from_columns(vec![("v", Column::from_i64((lo..lo + n).collect()))]).unwrap()
+    }
+
+    #[test]
+    fn same_parallelism_direct_fetch() {
+        let os = ObjectStore::shared();
+        for r in 0..3 {
+            CylonStore::new(os.clone(), r, 3)
+                .put("d", table_range(r as i64 * 10, 2))
+                .unwrap();
+        }
+        let got = CylonStore::new(os.clone(), 1, 3)
+            .get("d", Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(got.column(0).unwrap().i64_values().unwrap(), &[10, 11]);
+    }
+
+    #[test]
+    fn repartition_4_to_2() {
+        let os = ObjectStore::shared();
+        // producer: 4 ranks x 3 rows = 12 rows, values 0..12
+        for r in 0..4i64 {
+            CylonStore::new(os.clone(), r as usize, 4)
+                .put("d", table_range(r * 3, 3))
+                .unwrap();
+        }
+        // consumer: 2 ranks, each should get 6 contiguous rows
+        let a = CylonStore::new(os.clone(), 0, 2)
+            .get("d", Duration::from_secs(1))
+            .unwrap();
+        let b = CylonStore::new(os.clone(), 1, 2)
+            .get("d", Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(a.column(0).unwrap().i64_values().unwrap(), &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(b.column(0).unwrap().i64_values().unwrap(), &[6, 7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn repartition_2_to_5_covers_all() {
+        let os = ObjectStore::shared();
+        for r in 0..2i64 {
+            CylonStore::new(os.clone(), r as usize, 2)
+                .put("d", table_range(r * 7, 7))
+                .unwrap();
+        }
+        let mut all: Vec<i64> = Vec::new();
+        for r in 0..5 {
+            let t = CylonStore::new(os.clone(), r, 5)
+                .get("d", Duration::from_secs(1))
+                .unwrap();
+            all.extend(t.column(0).unwrap().i64_values().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..14).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn get_timeout_on_incomplete() {
+        let os = ObjectStore::shared();
+        CylonStore::new(os.clone(), 0, 2)
+            .put("d", table_range(0, 1))
+            .unwrap();
+        let e = CylonStore::new(os, 0, 2).get("d", Duration::from_millis(30));
+        assert!(e.is_err());
+    }
+}

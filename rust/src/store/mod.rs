@@ -1,0 +1,10 @@
+//! Object stores: the cluster-wide [`ObjectStore`] (Ray object store / NFS
+//! analogue) and the application-facing [`CylonStore`] (paper §IV-C) that
+//! shares partitioned DDFs between resource-partitioned applications,
+//! repartitioning when parallelisms differ.
+
+mod cylon_store;
+mod object_store;
+
+pub use cylon_store::CylonStore;
+pub use object_store::ObjectStore;

@@ -1,0 +1,196 @@
+//! Cluster-wide in-memory object store holding *partitioned* tables.
+//!
+//! Each named object is a vector of partitions published independently by
+//! the producing app's ranks; consumers block until the object is
+//! complete. This is the substrate under [`super::CylonStore`] and under
+//! the AMT baseline's shuffle (Dask's Partd / Ray's object store
+//! analogue — the paper's point that routing shuffles through a store is
+//! *slower* than direct message passing is exactly what the baselines
+//! exhibit in the benches).
+
+use crate::error::{Error, Result};
+use crate::table::Table;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Entry {
+    parts: Vec<Option<Arc<Table>>>,
+}
+
+impl Entry {
+    fn complete(&self) -> bool {
+        self.parts.iter().all(|p| p.is_some())
+    }
+}
+
+/// Shared, blocking, partition-aware object store.
+#[derive(Default)]
+pub struct ObjectStore {
+    objects: Mutex<HashMap<String, Entry>>,
+    cv: Condvar,
+}
+
+impl ObjectStore {
+    /// New store behind an Arc.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Publish partition `part` of `nparts` under `name`. All writers of an
+    /// object must agree on `nparts`.
+    pub fn put_partition(
+        &self,
+        name: &str,
+        part: usize,
+        nparts: usize,
+        table: Table,
+    ) -> Result<()> {
+        if part >= nparts {
+            return Err(Error::Store(format!(
+                "partition {part} out of range ({nparts})"
+            )));
+        }
+        let mut objs = self.objects.lock().expect("store poisoned");
+        let entry = objs.entry(name.to_string()).or_insert_with(|| Entry {
+            parts: vec![None; nparts],
+        });
+        if entry.parts.len() != nparts {
+            return Err(Error::Store(format!(
+                "object '{name}' created with {} partitions, writer claims {nparts}",
+                entry.parts.len()
+            )));
+        }
+        entry.parts[part] = Some(Arc::new(table));
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until object `name` is complete, then return all partitions.
+    pub fn wait_object(&self, name: &str, timeout: Duration) -> Result<Vec<Arc<Table>>> {
+        let deadline = Instant::now() + timeout;
+        let mut objs = self.objects.lock().expect("store poisoned");
+        loop {
+            if let Some(e) = objs.get(name) {
+                if e.complete() {
+                    return Ok(e.parts.iter().map(|p| p.clone().unwrap()).collect());
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Store(format!(
+                    "timeout waiting for object '{name}'"
+                )));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(objs, deadline - now)
+                .expect("store poisoned");
+            objs = guard;
+        }
+    }
+
+    /// Block until partition `part` of `name` is published.
+    pub fn wait_partition(
+        &self,
+        name: &str,
+        part: usize,
+        timeout: Duration,
+    ) -> Result<Arc<Table>> {
+        let deadline = Instant::now() + timeout;
+        let mut objs = self.objects.lock().expect("store poisoned");
+        loop {
+            if let Some(e) = objs.get(name) {
+                if let Some(Some(t)) = e.parts.get(part) {
+                    return Ok(t.clone());
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Store(format!(
+                    "timeout waiting for '{name}'[{part}]"
+                )));
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(objs, deadline - now)
+                .expect("store poisoned");
+            objs = guard;
+        }
+    }
+
+    /// Drop an object (frees memory between pipeline stages).
+    pub fn delete(&self, name: &str) {
+        self.objects.lock().expect("store poisoned").remove(name);
+    }
+
+    /// Number of stored objects (diagnostics).
+    pub fn len(&self) -> usize {
+        self.objects.lock().expect("store poisoned").len()
+    }
+
+    /// True when no objects are stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes across stored partitions (diagnostics/backpressure).
+    pub fn byte_size(&self) -> usize {
+        let objs = self.objects.lock().expect("store poisoned");
+        objs.values()
+            .flat_map(|e| e.parts.iter().flatten())
+            .map(|t| t.byte_size())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t(v: i64) -> Table {
+        Table::from_columns(vec![("v", Column::from_i64(vec![v]))]).unwrap()
+    }
+
+    #[test]
+    fn put_wait_roundtrip() {
+        let s = ObjectStore::shared();
+        s.put_partition("x", 0, 2, t(0)).unwrap();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.wait_object("x", Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(5));
+        s.put_partition("x", 1, 2, t(1)).unwrap();
+        let parts = h.join().unwrap().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].column(0).unwrap().i64_values().unwrap(), &[1]);
+    }
+
+    #[test]
+    fn wait_single_partition() {
+        let s = ObjectStore::shared();
+        s.put_partition("y", 1, 3, t(9)).unwrap();
+        // partition 1 is available even though the object is incomplete
+        let p = s.wait_partition("y", 1, Duration::from_millis(50)).unwrap();
+        assert_eq!(p.column(0).unwrap().i64_values().unwrap(), &[9]);
+        assert!(s.wait_object("y", Duration::from_millis(30)).is_err());
+    }
+
+    #[test]
+    fn nparts_mismatch_and_range_errors() {
+        let s = ObjectStore::shared();
+        s.put_partition("z", 0, 2, t(0)).unwrap();
+        assert!(s.put_partition("z", 0, 3, t(0)).is_err());
+        assert!(s.put_partition("w", 5, 2, t(0)).is_err());
+    }
+
+    #[test]
+    fn delete_frees() {
+        let s = ObjectStore::shared();
+        s.put_partition("a", 0, 1, t(1)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert!(s.byte_size() > 0);
+        s.delete("a");
+        assert!(s.is_empty());
+    }
+}

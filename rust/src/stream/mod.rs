@@ -1,0 +1,18 @@
+//! Streaming ingestion orchestrator — the data-pipeline face of the
+//! coordinator: chunked sources feed **bounded queues** (credit-style
+//! backpressure: producers block when consumers lag), sharded across a
+//! pool of stage workers, with per-stage throughput accounting.
+//!
+//! This is the paper's §IV-D-2 "application-level parallelism" story
+//! turned into a runnable subsystem: each micro-batch is a small DDF, the
+//! stages are DDF operators, and the shard router reuses the same key
+//! hashing as the distributed operators, so batches arrive key-sharded
+//! exactly like a BSP shuffle would deliver them.
+
+mod pipeline;
+mod queue;
+mod source;
+
+pub use pipeline::{ShardedStage, StreamPipeline, StreamReport};
+pub use queue::BoundedQueue;
+pub use source::{GeneratorSource, Source, TableSource};

@@ -1,0 +1,175 @@
+//! Bounded MPMC queue with blocking push (backpressure) and pop.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+    // high-water mark: diagnostics for the backpressure report
+    max_depth: usize,
+    // count of pushes that had to wait (backpressure events)
+    stalls: u64,
+}
+
+/// Blocking bounded queue. `push` waits while full (backpressure), `pop`
+/// waits while empty, `close` wakes all poppers with `None` once drained.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `capacity` items.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                buf: VecDeque::with_capacity(capacity),
+                closed: false,
+                max_depth: 0,
+                stalls: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.buf.len() >= self.capacity {
+            g.stalls += 1;
+        }
+        while g.buf.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).expect("queue poisoned");
+        }
+        if g.closed {
+            return false;
+        }
+        g.buf.push_back(item);
+        let depth = g.buf.len();
+        if depth > g.max_depth {
+            g.max_depth = depth;
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.closed = true;
+        drop(g);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Highest observed depth (≤ capacity).
+    pub fn max_depth(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").max_depth
+    }
+
+    /// Number of pushes that blocked on a full queue.
+    pub fn stalls(&self) -> u64 {
+        self.inner.lock().expect("queue poisoned").stalls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_roundtrip() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_and_counts() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(3)); // blocks
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!h.is_finished(), "push should be blocked on full queue");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert!(q.stalls() >= 1);
+        assert_eq!(q.max_depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.push(1);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert!(!q.push(9), "push after close must fail");
+    }
+
+    #[test]
+    fn mpmc_conservation() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 1000;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..total / 4 {
+                        q.push(p * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        let consumed = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let c = consumed.clone();
+                std::thread::spawn(move || {
+                    while q.pop().is_some() {
+                        c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(std::sync::atomic::Ordering::SeqCst), total);
+    }
+}

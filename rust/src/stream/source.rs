@@ -1,0 +1,109 @@
+//! Micro-batch sources.
+
+use crate::table::Table;
+use crate::util::SplitMix64;
+use crate::column::Column;
+
+/// A pull source of micro-batches.
+pub trait Source: Send {
+    /// Next batch, or `None` at end of stream.
+    fn next_batch(&mut self) -> Option<Table>;
+}
+
+/// Synthetic source: `total_rows` of the paper's `(k, v)` schema in
+/// batches of `batch_rows` (stands in for Kafka/file tailing).
+pub struct GeneratorSource {
+    remaining: usize,
+    batch_rows: usize,
+    cardinality_domain: u64,
+    rng: SplitMix64,
+}
+
+impl GeneratorSource {
+    /// New source; `cardinality` as in [`crate::datagen::uniform_table`].
+    pub fn new(seed: u64, total_rows: usize, batch_rows: usize, cardinality: f64) -> Self {
+        GeneratorSource {
+            remaining: total_rows,
+            batch_rows,
+            cardinality_domain: ((total_rows as f64 * cardinality).ceil() as u64).max(1),
+            rng: SplitMix64::new(seed),
+        }
+    }
+}
+
+impl Source for GeneratorSource {
+    fn next_batch(&mut self) -> Option<Table> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let n = self.batch_rows.min(self.remaining);
+        self.remaining -= n;
+        let keys: Vec<i64> = (0..n)
+            .map(|_| self.rng.next_bounded(self.cardinality_domain) as i64)
+            .collect();
+        let vals: Vec<i64> = (0..n)
+            .map(|_| self.rng.next_bounded(1_000_000) as i64)
+            .collect();
+        Some(
+            Table::from_columns(vec![
+                ("k", Column::from_i64(keys)),
+                ("v", Column::from_i64(vals)),
+            ])
+            .expect("well-formed batch"),
+        )
+    }
+}
+
+/// Source over a pre-materialized table, re-sliced into batches.
+pub struct TableSource {
+    table: Table,
+    offset: usize,
+    batch_rows: usize,
+}
+
+impl TableSource {
+    /// Batch `table` into `batch_rows` chunks.
+    pub fn new(table: Table, batch_rows: usize) -> Self {
+        assert!(batch_rows > 0);
+        TableSource { table, offset: 0, batch_rows }
+    }
+}
+
+impl Source for TableSource {
+    fn next_batch(&mut self) -> Option<Table> {
+        if self.offset >= self.table.num_rows() {
+            return None;
+        }
+        let n = self.batch_rows.min(self.table.num_rows() - self.offset);
+        let t = self.table.slice(self.offset, n);
+        self.offset += n;
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_batches_cover_total() {
+        let mut s = GeneratorSource::new(1, 1050, 100, 0.9);
+        let mut total = 0;
+        let mut batches = 0;
+        while let Some(b) = s.next_batch() {
+            total += b.num_rows();
+            batches += 1;
+        }
+        assert_eq!(total, 1050);
+        assert_eq!(batches, 11); // 10 full + 1 tail of 50
+    }
+
+    #[test]
+    fn table_source_slices() {
+        let t = crate::datagen::uniform_table(2, 250, 0.9);
+        let mut s = TableSource::new(t.clone(), 100);
+        let sizes: Vec<usize> = std::iter::from_fn(|| s.next_batch().map(|b| b.num_rows()))
+            .collect();
+        assert_eq!(sizes, vec![100, 100, 50]);
+    }
+}

@@ -1,0 +1,130 @@
+//! CSV I/O — the "load from workers" path in the paper's experiment setup
+//! (they load Parquet from workers; we use CSV + the binary wire format as
+//! the storage substrate).
+
+use crate::column::ColumnBuilder;
+use crate::error::{Error, Result};
+use crate::table::Table;
+use crate::types::{DType, Schema};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read a headered CSV file with an explicit schema.
+///
+/// Empty fields parse as nulls. No quoting/escaping — the datasets this
+/// repo generates never contain commas in strings.
+pub fn read_csv(path: impl AsRef<Path>, schema: &Schema) -> Result<Table> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Serde("empty csv".into()))??;
+    let names: Vec<&str> = header.split(',').collect();
+    if names.len() != schema.len() {
+        return Err(Error::schema(format!(
+            "csv has {} columns, schema {}",
+            names.len(),
+            schema.len()
+        )));
+    }
+    let mut builders: Vec<ColumnBuilder> = schema
+        .fields()
+        .iter()
+        .map(|f| ColumnBuilder::new(f.dtype))
+        .collect();
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split(',');
+        for (ci, b) in builders.iter_mut().enumerate() {
+            let raw = fields
+                .next()
+                .ok_or_else(|| Error::Serde(format!("row too short at column {ci}")))?;
+            if raw.is_empty() {
+                b.push_null();
+                continue;
+            }
+            match schema.dtype(ci)? {
+                DType::Int64 => b.push_i64(
+                    raw.parse::<i64>()
+                        .map_err(|e| Error::Serde(format!("bad int64 '{raw}': {e}")))?,
+                ),
+                DType::Float64 => b.push_f64(
+                    raw.parse::<f64>()
+                        .map_err(|e| Error::Serde(format!("bad float64 '{raw}': {e}")))?,
+                ),
+                DType::Bool => b.push_bool(match raw {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    _ => return Err(Error::Serde(format!("bad bool '{raw}'"))),
+                }),
+                DType::Utf8 => b.push_str(raw),
+            }
+        }
+    }
+    Table::new(
+        schema.clone(),
+        builders.into_iter().map(|b| b.finish()).collect(),
+    )
+}
+
+/// Write a table as headered CSV.
+pub fn write_csv(t: &Table, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    let names: Vec<&str> = t.schema().fields().iter().map(|f| f.name.as_str()).collect();
+    writeln!(w, "{}", names.join(","))?;
+    for r in 0..t.num_rows() {
+        for (ci, c) in t.columns().iter().enumerate() {
+            if ci > 0 {
+                write!(w, ",")?;
+            }
+            let v = c.value(r);
+            if !v.is_null() {
+                write!(w, "{v}")?;
+            }
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::types::Value;
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2])),
+            ("v", Column::from_f64(vec![0.5, -2.0])),
+            ("s", Column::from_strings(&["hello", "world"])),
+        ])
+        .unwrap();
+        let dir = std::env::temp_dir().join("cylonflow_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(&t, &p).unwrap();
+        let back = read_csv(&p, t.schema()).unwrap();
+        assert_eq!(back.num_rows(), 2);
+        assert_eq!(back.value(1, 2).unwrap(), Value::Utf8("world".into()));
+    }
+
+    #[test]
+    fn csv_nulls() {
+        let dir = std::env::temp_dir().join("cylonflow_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("n.csv");
+        std::fs::write(&p, "k,v\n1,\n,2.5\n").unwrap();
+        let schema = Schema::from_pairs(&[("k", DType::Int64), ("v", DType::Float64)]);
+        let t = read_csv(&p, &schema).unwrap();
+        assert_eq!(t.value(0, 1).unwrap(), Value::Null);
+        assert_eq!(t.value(1, 0).unwrap(), Value::Null);
+        assert_eq!(t.value(1, 1).unwrap(), Value::Float64(2.5));
+    }
+}

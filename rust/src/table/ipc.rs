@@ -1,0 +1,158 @@
+//! Binary table files + partitioned datasets on disk — the repo's
+//! Parquet analogue. The paper's benchmark setup loads partition files
+//! directly on the workers ("loaded as Parquet files from the workers
+//! themselves"); [`write_dataset`]/[`read_partition`] reproduce that
+//! pattern over the crate wire format with a magic/version header.
+
+use super::{table_from_bytes, table_to_bytes, Table};
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const FILE_MAGIC: &[u8; 8] = b"CYLONF01";
+
+/// Write a single table file (atomic via rename).
+pub fn write_table_file(t: &Table, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(FILE_MAGIC)?;
+        let bytes = table_to_bytes(t);
+        f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&bytes)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read a single table file.
+pub fn read_table_file(path: impl AsRef<Path>) -> Result<Table> {
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != FILE_MAGIC {
+        return Err(Error::Serde(format!(
+            "{}: not a cylonflow table file",
+            path.as_ref().display()
+        )));
+    }
+    let mut len = [0u8; 8];
+    f.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len) as usize;
+    let mut bytes = vec![0u8; len];
+    f.read_exact(&mut bytes)?;
+    table_from_bytes(&bytes)
+}
+
+fn partition_path(dir: &Path, part: usize) -> PathBuf {
+    dir.join(format!("part-{part:05}.cyt"))
+}
+
+/// Write `parts` as a partitioned dataset directory
+/// (`part-00000.cyt`, ...). Analogue of a directory of Parquet shards.
+pub fn write_dataset(parts: &[Table], dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    for (i, t) in parts.iter().enumerate() {
+        write_table_file(t, partition_path(dir, i))?;
+    }
+    std::fs::write(dir.join("_METADATA"), parts.len().to_string())?;
+    Ok(())
+}
+
+/// Number of partitions in a dataset directory.
+pub fn dataset_partitions(dir: impl AsRef<Path>) -> Result<usize> {
+    let s = std::fs::read_to_string(dir.as_ref().join("_METADATA"))
+        .map_err(|_| Error::Serde("not a dataset dir (missing _METADATA)".into()))?;
+    s.trim()
+        .parse()
+        .map_err(|e| Error::Serde(format!("bad _METADATA: {e}")))
+}
+
+/// Read one partition of a dataset (what each worker calls with its own
+/// rank — the paper's worker-side load).
+pub fn read_partition(dir: impl AsRef<Path>, part: usize) -> Result<Table> {
+    read_table_file(partition_path(dir.as_ref(), part))
+}
+
+/// Read and concatenate the whole dataset (driver-side/serial path).
+pub fn read_dataset(dir: impl AsRef<Path>) -> Result<Table> {
+    let n = dataset_partitions(&dir)?;
+    if n == 0 {
+        return Err(Error::Serde("empty dataset".into()));
+    }
+    let parts: Vec<Table> = (0..n)
+        .map(|i| read_partition(&dir, i))
+        .collect::<Result<_>>()?;
+    Table::concat(&parts.iter().collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cylonflow-ipc-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let d = tmpdir("file");
+        let t = datagen::uniform_table(1, 500, 0.9);
+        let p = d.join("t.cyt");
+        write_table_file(&t, &p).unwrap();
+        assert_eq!(read_table_file(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let d = tmpdir("bad");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("x.cyt");
+        std::fs::write(&p, b"definitely not a table").unwrap();
+        assert!(read_table_file(&p).is_err());
+    }
+
+    #[test]
+    fn dataset_roundtrip_per_partition() {
+        let d = tmpdir("ds");
+        let t = datagen::uniform_table(2, 1000, 0.9);
+        let parts = t.split_even(4);
+        write_dataset(&parts, &d).unwrap();
+        assert_eq!(dataset_partitions(&d).unwrap(), 4);
+        for (i, expect) in parts.iter().enumerate() {
+            assert_eq!(&read_partition(&d, i).unwrap(), expect);
+        }
+        let whole = read_dataset(&d).unwrap();
+        assert_eq!(whole.num_rows(), 1000);
+    }
+
+    #[test]
+    fn workers_load_their_partitions() {
+        // the paper's load pattern: write once, each worker reads its rank
+        use crate::prelude::*;
+        let d = tmpdir("workers");
+        let t = datagen::uniform_table(3, 2000, 0.9);
+        write_dataset(&t.split_even(3), &d).unwrap();
+        let c = Cluster::local(3).unwrap();
+        let exec = CylonExecutor::new(&c, 3).unwrap();
+        let dir = d.to_string_lossy().to_string();
+        let out = exec
+            .run(move |env| {
+                let mine = read_partition(&dir, env.rank())?;
+                crate::dist::sort(&mine, &SortOptions::by(0), env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.iter().map(|t| t.num_rows()).sum::<usize>(), 2000);
+    }
+}

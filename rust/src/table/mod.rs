@@ -1,0 +1,275 @@
+//! The dataframe itself: a [`Schema`] plus equal-length [`Column`]s.
+//!
+//! `Table` is the unit everything else operates on: local operators
+//! ([`crate::ops`]) map tables to tables, the communicator
+//! ([`crate::comm`]) shuffles tables between workers, and the stores keep
+//! tables as objects.
+
+mod io;
+pub mod ipc;
+mod pretty;
+mod wire;
+
+pub use io::{read_csv, write_csv};
+pub use ipc::{read_dataset, read_partition, read_table_file, write_dataset, write_table_file};
+pub use wire::{table_from_bytes, table_to_bytes};
+
+use crate::column::{Column, ColumnBuilder};
+use crate::error::{Error, Result};
+use crate::types::{Field, Schema, Value};
+
+/// An immutable, columnar dataframe partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    schema: Schema,
+    columns: Vec<Column>,
+    num_rows: usize,
+}
+
+impl Table {
+    /// Build a table; all columns must have equal length matching the schema.
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Table> {
+        if schema.len() != columns.len() {
+            return Err(Error::schema(format!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            )));
+        }
+        let num_rows = columns.first().map(|c| c.len()).unwrap_or(0);
+        for (i, c) in columns.iter().enumerate() {
+            if c.len() != num_rows {
+                return Err(Error::schema(format!(
+                    "column {i} has {} rows, expected {num_rows}",
+                    c.len()
+                )));
+            }
+            let expected = schema.dtype(i)?;
+            if c.dtype() != expected {
+                return Err(Error::schema(format!(
+                    "column {i} dtype {} does not match schema {expected}",
+                    c.dtype()
+                )));
+            }
+        }
+        Ok(Table { schema, columns, num_rows })
+    }
+
+    /// Table from `(name, column)` pairs.
+    pub fn from_columns(pairs: Vec<(&str, Column)>) -> Result<Table> {
+        let schema = Schema::new(
+            pairs
+                .iter()
+                .map(|(n, c)| Field::new(*n, c.dtype()))
+                .collect(),
+        );
+        Table::new(schema, pairs.into_iter().map(|(_, c)| c).collect())
+    }
+
+    /// Zero-row table with the given schema.
+    pub fn empty(schema: Schema) -> Table {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|f| ColumnBuilder::new(f.dtype).finish())
+            .collect();
+        Table { schema, columns, num_rows: 0 }
+    }
+
+    /// The schema.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Row count (`N`).
+    pub fn num_rows(&self) -> usize {
+        self.num_rows
+    }
+
+    /// Column count (`M`).
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// True when the table has zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.num_rows == 0
+    }
+
+    /// All columns in order.
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    /// Column at position `i`.
+    pub fn column(&self, i: usize) -> Result<&Column> {
+        self.columns
+            .get(i)
+            .ok_or_else(|| Error::schema(format!("column index {i} out of range")))
+    }
+
+    /// Column by name.
+    pub fn column_by_name(&self, name: &str) -> Result<&Column> {
+        let i = self.schema.index_of(name)?;
+        Ok(&self.columns[i])
+    }
+
+    /// Cell access (slow path).
+    pub fn value(&self, row: usize, col: usize) -> Result<Value> {
+        Ok(self.column(col)?.value(row))
+    }
+
+    /// Gather rows by index into a new table.
+    pub fn gather(&self, indices: &[u32]) -> Table {
+        let columns: Vec<Column> = self.columns.iter().map(|c| c.gather(indices)).collect();
+        Table {
+            schema: self.schema.clone(),
+            num_rows: indices.len(),
+            columns,
+        }
+    }
+
+    /// Slice rows `[offset, offset+len)`.
+    pub fn slice(&self, offset: usize, len: usize) -> Table {
+        let columns: Vec<Column> = self.columns.iter().map(|c| c.slice(offset, len)).collect();
+        Table {
+            schema: self.schema.clone(),
+            num_rows: len,
+            columns,
+        }
+    }
+
+    /// Concatenate column-compatible tables (schema taken from the first).
+    pub fn concat(tables: &[&Table]) -> Result<Table> {
+        let first = tables
+            .first()
+            .ok_or_else(|| Error::invalid("concat of zero tables"))?;
+        for t in &tables[1..] {
+            first.schema.check_compatible(&t.schema)?;
+        }
+        let mut columns = Vec::with_capacity(first.num_columns());
+        for ci in 0..first.num_columns() {
+            let cols: Vec<&Column> = tables.iter().map(|t| &t.columns[ci]).collect();
+            columns.push(Column::concat(&cols)?);
+        }
+        let num_rows = tables.iter().map(|t| t.num_rows).sum();
+        Ok(Table {
+            schema: first.schema.clone(),
+            columns,
+            num_rows,
+        })
+    }
+
+    /// Project onto the given column indices.
+    pub fn project(&self, indices: &[usize]) -> Result<Table> {
+        let schema = self.schema.project(indices)?;
+        let mut columns = Vec::with_capacity(indices.len());
+        for &i in indices {
+            columns.push(self.column(i)?.clone());
+        }
+        Ok(Table { schema, columns, num_rows: self.num_rows })
+    }
+
+    /// New table with an extra column appended.
+    pub fn with_column(&self, name: &str, col: Column) -> Result<Table> {
+        if col.len() != self.num_rows {
+            return Err(Error::schema(format!(
+                "new column has {} rows, table has {}",
+                col.len(),
+                self.num_rows
+            )));
+        }
+        let schema = self.schema.with_field(Field::new(name, col.dtype()));
+        let mut columns = self.columns.clone();
+        columns.push(col);
+        Ok(Table { schema, columns, num_rows: self.num_rows })
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn byte_size(&self) -> usize {
+        self.columns.iter().map(|c| c.byte_size()).sum()
+    }
+
+    /// Split into `n` row-contiguous chunks (sizes differ by ≤1); used by
+    /// the AMT baseline's partitioner and the repartitioner.
+    pub fn split_even(&self, n: usize) -> Vec<Table> {
+        assert!(n > 0);
+        let base = self.num_rows / n;
+        let extra = self.num_rows % n;
+        let mut out = Vec::with_capacity(n);
+        let mut off = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < extra);
+            out.push(self.slice(off, len));
+            off += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::DType;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 3, 4])),
+            ("v", Column::from_f64(vec![1.0, 2.0, 3.0, 4.0])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_checks() {
+        let bad = Table::new(
+            Schema::from_pairs(&[("a", DType::Int64)]),
+            vec![Column::from_f64(vec![1.0])],
+        );
+        assert!(bad.is_err());
+        let ragged = Table::from_columns(vec![
+            ("a", Column::from_i64(vec![1])),
+            ("b", Column::from_i64(vec![1, 2])),
+        ]);
+        assert!(ragged.is_err());
+    }
+
+    #[test]
+    fn gather_slice_concat() {
+        let tab = t();
+        let g = tab.gather(&[3, 0]);
+        assert_eq!(g.num_rows(), 2);
+        assert_eq!(g.value(0, 0).unwrap(), Value::Int64(4));
+        let s = tab.slice(1, 2);
+        assert_eq!(s.value(0, 0).unwrap(), Value::Int64(2));
+        let c = Table::concat(&[&g, &s]).unwrap();
+        assert_eq!(c.num_rows(), 4);
+        assert_eq!(c.value(2, 0).unwrap(), Value::Int64(2));
+    }
+
+    #[test]
+    fn project_and_with_column() {
+        let tab = t();
+        let p = tab.project(&[1]).unwrap();
+        assert_eq!(p.num_columns(), 1);
+        let w = tab.with_column("w", Column::from_i64(vec![9, 9, 9, 9])).unwrap();
+        assert_eq!(w.num_columns(), 3);
+        assert!(tab.with_column("bad", Column::from_i64(vec![1])).is_err());
+    }
+
+    #[test]
+    fn split_even_covers_all_rows() {
+        let tab = t();
+        let parts = tab.split_even(3);
+        assert_eq!(parts.iter().map(|p| p.num_rows()).collect::<Vec<_>>(), vec![2, 1, 1]);
+        let back = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(back.num_rows(), 4);
+    }
+
+    #[test]
+    fn empty_table() {
+        let e = Table::empty(t().schema().clone());
+        assert_eq!(e.num_rows(), 0);
+        assert_eq!(e.num_columns(), 2);
+    }
+}

@@ -1,0 +1,75 @@
+//! Human-readable table rendering (Display impl) — used by the interactive
+//! example and debugging.
+
+use crate::table::Table;
+use std::fmt;
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        const MAX_ROWS: usize = 20;
+        let names: Vec<String> = self
+            .schema()
+            .fields()
+            .iter()
+            .map(|fl| fl.name.clone())
+            .collect();
+        let shown = self.num_rows().min(MAX_ROWS);
+        let mut cells: Vec<Vec<String>> = Vec::with_capacity(shown);
+        for r in 0..shown {
+            cells.push(
+                self.columns()
+                    .iter()
+                    .map(|c| c.value(r).to_string())
+                    .collect(),
+            );
+        }
+        let mut widths: Vec<usize> = names.iter().map(|n| n.len()).collect();
+        for row in &cells {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let fmt_row = |row: &[String]| -> String {
+            row.iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        writeln!(f, "{}", fmt_row(&names))?;
+        writeln!(f, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "))?;
+        for row in &cells {
+            writeln!(f, "{}", fmt_row(row))?;
+        }
+        if self.num_rows() > MAX_ROWS {
+            writeln!(f, "... {} more rows", self.num_rows() - MAX_ROWS)?;
+        }
+        write!(f, "[{} rows x {} cols]", self.num_rows(), self.num_columns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::column::Column;
+    use crate::table::Table;
+
+    #[test]
+    fn renders() {
+        let t = Table::from_columns(vec![
+            ("key", Column::from_i64(vec![1, 22, 333])),
+            ("name", Column::from_strings(&["a", "bb", "ccc"])),
+        ])
+        .unwrap();
+        let s = format!("{t}");
+        assert!(s.contains("key"));
+        assert!(s.contains("333"));
+        assert!(s.contains("[3 rows x 2 cols]"));
+    }
+
+    #[test]
+    fn truncates_long() {
+        let t = Table::from_columns(vec![("k", Column::from_i64((0..100).collect()))]).unwrap();
+        let s = format!("{t}");
+        assert!(s.contains("more rows"));
+    }
+}

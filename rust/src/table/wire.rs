@@ -1,0 +1,216 @@
+//! Table wire format — the unit the communicator sends between workers.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic "CYT1" | u32 ncols | u64 nrows
+//! per column:
+//!   u8 dtype tag | u16 name_len | name bytes | u8 has_validity
+//!   [validity: u64 words (ceil(nrows/64))]
+//!   Int64/Float64: nrows * 8 bytes raw
+//!   Bool:          nrows bytes
+//!   Utf8:          (nrows+1) * 4 offset bytes | u64 data_len | data
+//! ```
+//!
+//! Mirrors Arrow IPC in spirit (buffer-oriented, no per-row encoding) so
+//! serialization cost is `memcpy`-bound — which matters for the Fig 6
+//! comm/compute breakdown to be honest.
+
+use crate::buffer::Bitmap;
+use crate::column::{BoolColumn, Column, Float64Column, Int64Column, StringColumn};
+use crate::error::{Error, Result};
+use crate::table::Table;
+use crate::types::{DType, Field, Schema};
+
+const MAGIC: &[u8; 4] = b"CYT1";
+
+/// Serialize a table to bytes.
+pub fn table_to_bytes(t: &Table) -> Vec<u8> {
+    let mut out = Vec::with_capacity(t.byte_size() + 64);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(t.num_columns() as u32).to_le_bytes());
+    out.extend_from_slice(&(t.num_rows() as u64).to_le_bytes());
+    for (f, c) in t.schema().fields().iter().zip(t.columns()) {
+        out.push(c.dtype().wire_tag());
+        let name = f.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        match c.validity() {
+            Some(b) => {
+                out.push(1);
+                for w in b.words() {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            None => out.push(0),
+        }
+        match c {
+            Column::Int64(ic) => {
+                for v in &ic.values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Column::Float64(fc) => {
+                for v in &fc.values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Column::Bool(bc) => {
+                out.extend(bc.values.iter().map(|&b| b as u8));
+            }
+            Column::Utf8(sc) => {
+                for o in &sc.offsets {
+                    out.extend_from_slice(&o.to_le_bytes());
+                }
+                out.extend_from_slice(&(sc.data.len() as u64).to_le_bytes());
+                out.extend_from_slice(&sc.data);
+            }
+        }
+    }
+    out
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Serde(format!(
+                "truncated table buffer: need {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Deserialize a table from bytes produced by [`table_to_bytes`].
+pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
+    let mut r = Reader { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(Error::Serde("bad table magic".into()));
+    }
+    let ncols = r.u32()? as usize;
+    let nrows = r.u64()? as usize;
+    let mut fields = Vec::with_capacity(ncols);
+    let mut columns = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        let tag = r.u8()?;
+        let dtype = DType::from_wire_tag(tag)
+            .ok_or_else(|| Error::Serde(format!("bad dtype tag {tag}")))?;
+        let name_len = r.u16()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .map_err(|e| Error::Serde(format!("bad column name utf8: {e}")))?
+            .to_string();
+        let has_validity = r.u8()? == 1;
+        let validity = if has_validity {
+            let nwords = nrows.div_ceil(64);
+            let mut words = Vec::with_capacity(nwords);
+            for _ in 0..nwords {
+                words.push(r.u64()?);
+            }
+            Some(Bitmap::from_words(words, nrows))
+        } else {
+            None
+        };
+        let col = match dtype {
+            DType::Int64 => {
+                let raw = r.take(nrows * 8)?;
+                let values = raw
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Column::Int64(Int64Column::new(values, validity))
+            }
+            DType::Float64 => {
+                let raw = r.take(nrows * 8)?;
+                let values = raw
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Column::Float64(Float64Column::new(values, validity))
+            }
+            DType::Bool => {
+                let raw = r.take(nrows)?;
+                Column::Bool(BoolColumn::new(raw.iter().map(|&b| b != 0).collect(), validity))
+            }
+            DType::Utf8 => {
+                let raw = r.take((nrows + 1) * 4)?;
+                let offsets: Vec<i32> = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let data_len = r.u64()? as usize;
+                let data = r.take(data_len)?.to_vec();
+                Column::Utf8(StringColumn::new(offsets, data, validity))
+            }
+        };
+        fields.push(Field::new(name, dtype));
+        columns.push(col);
+    }
+    Table::new(Schema::new(fields), columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::ColumnBuilder;
+    use crate::types::Value;
+
+    fn sample() -> Table {
+        let mut s = ColumnBuilder::new(DType::Utf8);
+        s.push_str("alpha");
+        s.push_null();
+        s.push_str("");
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, -5, i64::MAX])),
+            ("v", Column::from_f64(vec![0.5, -1.5, f64::INFINITY])),
+            ("s", s.finish()),
+            ("b", Column::from_bools(vec![true, false, true])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sample();
+        let bytes = table_to_bytes(&t);
+        let back = table_from_bytes(&bytes).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.value(1, 2).unwrap(), Value::Null);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let t = Table::empty(sample().schema().clone());
+        let back = table_from_bytes(&table_to_bytes(&t)).unwrap();
+        assert_eq!(back.num_rows(), 0);
+        assert_eq!(back.schema(), t.schema());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(table_from_bytes(b"nope").is_err());
+        let mut bytes = table_to_bytes(&sample());
+        bytes.truncate(bytes.len() - 3);
+        assert!(table_from_bytes(&bytes).is_err());
+    }
+}

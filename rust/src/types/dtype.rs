@@ -1,0 +1,94 @@
+//! Column domains (`Dom` in the paper's dataframe formalism).
+
+use std::fmt;
+
+/// The supported column domains.
+///
+/// Columns are homogeneously typed (heterogeneity is across columns), which
+/// is what allows the vectorized columnar kernels in [`crate::ops`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 64-bit signed integers (the paper's benchmark key/value domain).
+    Int64,
+    /// IEEE-754 doubles.
+    Float64,
+    /// Variable-length UTF-8 strings (Arrow offsets+data layout).
+    Utf8,
+    /// Booleans (byte-per-value storage, bitmap validity).
+    Bool,
+}
+
+impl DType {
+    /// Fixed byte width of one element, if the type is fixed-width.
+    pub fn byte_width(&self) -> Option<usize> {
+        match self {
+            DType::Int64 | DType::Float64 => Some(8),
+            DType::Bool => Some(1),
+            DType::Utf8 => None,
+        }
+    }
+
+    /// Whether the domain admits a total order usable as a sort key.
+    pub fn is_orderable(&self) -> bool {
+        true
+    }
+
+    /// Whether the domain is numeric (valid for arithmetic aggregates).
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, DType::Int64 | DType::Float64)
+    }
+
+    /// Stable wire tag used by the serialization format.
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            DType::Int64 => 0,
+            DType::Float64 => 1,
+            DType::Utf8 => 2,
+            DType::Bool => 3,
+        }
+    }
+
+    /// Inverse of [`DType::wire_tag`].
+    pub fn from_wire_tag(tag: u8) -> Option<DType> {
+        match tag {
+            0 => Some(DType::Int64),
+            1 => Some(DType::Float64),
+            2 => Some(DType::Utf8),
+            3 => Some(DType::Bool),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::Int64 => "int64",
+            DType::Float64 => "float64",
+            DType::Utf8 => "utf8",
+            DType::Bool => "bool",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_tag_roundtrip() {
+        for dt in [DType::Int64, DType::Float64, DType::Utf8, DType::Bool] {
+            assert_eq!(DType::from_wire_tag(dt.wire_tag()), Some(dt));
+        }
+        assert_eq!(DType::from_wire_tag(200), None);
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(DType::Int64.byte_width(), Some(8));
+        assert_eq!(DType::Utf8.byte_width(), None);
+        assert!(DType::Float64.is_numeric());
+        assert!(!DType::Utf8.is_numeric());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dataframe type system: domains ([`DType`]), scalar values ([`Value`]) and
+//! schemas ([`Schema`]) — the `(D_M, C_M)` tuple of the paper's §III-A
+//! dataframe definition.
+
+mod dtype;
+mod schema;
+mod value;
+
+pub use dtype::DType;
+pub use schema::{Field, Schema};
+pub use value::Value;

@@ -1,0 +1,176 @@
+//! Schemas: named, typed column lists — `S_M = (D_M, C_M)`.
+
+use super::DType;
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// One named, typed column slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    /// Column label (`C_M` entry).
+    pub name: String,
+    /// Column domain (`D_M` entry).
+    pub dtype: DType,
+}
+
+impl Field {
+    /// New field.
+    pub fn new(name: impl Into<String>, dtype: DType) -> Self {
+        Field { name: name.into(), dtype }
+    }
+}
+
+/// An ordered list of fields. Lookups by name or position.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+impl Schema {
+    /// Schema from fields.
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    /// Schema from `(name, dtype)` pairs.
+    pub fn from_pairs(pairs: &[(&str, DType)]) -> Self {
+        Schema {
+            fields: pairs.iter().map(|(n, d)| Field::new(*n, *d)).collect(),
+        }
+    }
+
+    /// Number of columns (`M`).
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// True when the schema has no columns.
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// All fields in order.
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    /// Field at position `i`.
+    pub fn field(&self, i: usize) -> Result<&Field> {
+        self.fields
+            .get(i)
+            .ok_or_else(|| Error::schema(format!("column index {i} out of range ({})", self.len())))
+    }
+
+    /// Position of the column named `name`.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.fields
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| Error::schema(format!("no column named '{name}'")))
+    }
+
+    /// dtype at position `i`.
+    pub fn dtype(&self, i: usize) -> Result<DType> {
+        Ok(self.field(i)?.dtype)
+    }
+
+    /// Append a field, returning the extended schema.
+    pub fn with_field(&self, f: Field) -> Schema {
+        let mut fields = self.fields.clone();
+        fields.push(f);
+        Schema { fields }
+    }
+
+    /// Schema of `self ++ other`, renaming collisions on the right with a
+    /// `rhs_` prefix (join output convention, mirroring pandas suffixes).
+    pub fn merge_for_join(&self, other: &Schema) -> Schema {
+        let mut fields = self.fields.clone();
+        for f in &other.fields {
+            let name = if self.fields.iter().any(|g| g.name == f.name) {
+                format!("rhs_{}", f.name)
+            } else {
+                f.name.clone()
+            };
+            fields.push(Field::new(name, f.dtype));
+        }
+        Schema { fields }
+    }
+
+    /// Projection of the schema onto `indices`.
+    pub fn project(&self, indices: &[usize]) -> Result<Schema> {
+        let mut fields = Vec::with_capacity(indices.len());
+        for &i in indices {
+            fields.push(self.field(i)?.clone());
+        }
+        Ok(Schema { fields })
+    }
+
+    /// Error unless `other` is column-compatible (same dtypes in order).
+    pub fn check_compatible(&self, other: &Schema) -> Result<()> {
+        if self.len() != other.len() {
+            return Err(Error::schema(format!(
+                "column count mismatch: {} vs {}",
+                self.len(),
+                other.len()
+            )));
+        }
+        for (a, b) in self.fields.iter().zip(other.fields.iter()) {
+            if a.dtype != b.dtype {
+                return Err(Error::schema(format!(
+                    "dtype mismatch on '{}': {} vs {}",
+                    a.name, a.dtype, b.dtype
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Schema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, fld) in self.fields.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{}: {}", fld.name, fld.dtype)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s() -> Schema {
+        Schema::from_pairs(&[("k", DType::Int64), ("v", DType::Float64)])
+    }
+
+    #[test]
+    fn lookup() {
+        let sc = s();
+        assert_eq!(sc.index_of("v").unwrap(), 1);
+        assert!(sc.index_of("zzz").is_err());
+        assert_eq!(sc.dtype(0).unwrap(), DType::Int64);
+        assert!(sc.field(2).is_err());
+    }
+
+    #[test]
+    fn join_merge_renames_collisions() {
+        let merged = s().merge_for_join(&s());
+        assert_eq!(merged.len(), 4);
+        assert_eq!(merged.field(2).unwrap().name, "rhs_k");
+        assert_eq!(merged.field(3).unwrap().name, "rhs_v");
+    }
+
+    #[test]
+    fn project_and_compat() {
+        let sc = s();
+        let p = sc.project(&[1]).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.field(0).unwrap().name, "v");
+        assert!(sc.check_compatible(&s()).is_ok());
+        assert!(sc.check_compatible(&p).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Dynamically-typed scalar cell values.
+
+use super::DType;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// One dataframe cell. `Null` is a member of every domain.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// SQL-style NULL.
+    Null,
+    /// int64 cell.
+    Int64(i64),
+    /// float64 cell.
+    Float64(f64),
+    /// utf8 cell.
+    Utf8(String),
+    /// bool cell.
+    Bool(bool),
+}
+
+impl Value {
+    /// The domain this value belongs to, or `None` for `Null`.
+    pub fn dtype(&self) -> Option<DType> {
+        match self {
+            Value::Null => None,
+            Value::Int64(_) => Some(DType::Int64),
+            Value::Float64(_) => Some(DType::Float64),
+            Value::Utf8(_) => Some(DType::Utf8),
+            Value::Bool(_) => Some(DType::Bool),
+        }
+    }
+
+    /// True for `Value::Null`.
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Extract an i64 (None on mismatch/null).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Extract an f64, widening Int64 (None otherwise).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float64(v) => Some(*v),
+            Value::Int64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Extract a &str (None on mismatch/null).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Utf8(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// SQL-style comparison: nulls sort first, cross-numeric compares widen.
+    pub fn cmp_sql(&self, other: &Value) -> Ordering {
+        use Value::*;
+        match (self, other) {
+            (Null, Null) => Ordering::Equal,
+            (Null, _) => Ordering::Less,
+            (_, Null) => Ordering::Greater,
+            (Int64(a), Int64(b)) => a.cmp(b),
+            (Float64(a), Float64(b)) => a.partial_cmp(b).unwrap_or(Ordering::Equal),
+            (Int64(a), Float64(b)) => (*a as f64).partial_cmp(b).unwrap_or(Ordering::Equal),
+            (Float64(a), Int64(b)) => a.partial_cmp(&(*b as f64)).unwrap_or(Ordering::Equal),
+            (Utf8(a), Utf8(b)) => a.cmp(b),
+            (Bool(a), Bool(b)) => a.cmp(b),
+            _ => Ordering::Equal, // incomparable domains: treat as equal
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Int64(v) => write!(f, "{v}"),
+            Value::Float64(v) => write!(f, "{v}"),
+            Value::Utf8(s) => write!(f, "{s}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int64(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float64(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Utf8(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Utf8(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sorts_first() {
+        assert_eq!(Value::Null.cmp_sql(&Value::Int64(i64::MIN)), Ordering::Less);
+        assert_eq!(Value::Int64(0).cmp_sql(&Value::Null), Ordering::Greater);
+    }
+
+    #[test]
+    fn cross_numeric() {
+        assert_eq!(Value::Int64(2).cmp_sql(&Value::Float64(2.5)), Ordering::Less);
+        assert_eq!(Value::Float64(3.0).cmp_sql(&Value::Int64(2)), Ordering::Greater);
+    }
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::from(5i64).as_i64(), Some(5));
+        assert_eq!(Value::from(5i64).as_f64(), Some(5.0));
+        assert_eq!(Value::from("x").as_str(), Some("x"));
+        assert!(Value::Null.is_null());
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: seeded PRNG, the splitmix64 hash (shared constant
+//! with the L1 Pallas kernel), radix helpers, and timing.
+
+pub mod hash;
+pub mod rng;
+pub mod time;
+
+pub use hash::{hash64, HASH_M1, HASH_M2};
+pub use rng::SplitMix64;
+pub use time::Stopwatch;

@@ -1,0 +1,63 @@
+//! Minimal timing helper used by metrics and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating elapsed time across segments.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accum: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// New, stopped, zero-accumulated stopwatch.
+    pub fn new() -> Self {
+        Stopwatch { started: None, accum: Duration::ZERO }
+    }
+
+    /// Start (or restart) the current segment.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop the current segment, folding it into the accumulator.
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.accum += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (running segment included).
+    pub fn elapsed(&self) -> Duration {
+        self.accum + self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO)
+    }
+
+    /// Run `f`, adding its wall time to the accumulator, returning its value.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        let a = sw.elapsed();
+        assert!(a >= Duration::from_millis(2));
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(sw.elapsed() >= a + Duration::from_millis(2));
+    }
+}

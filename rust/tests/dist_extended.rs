@@ -1,0 +1,323 @@
+//! Integration: the extended distributed operators (set ops, distinct,
+//! describe, rebalance) and the checkpoint/recovery flow.
+
+use cylonflow::executor::Checkpointer;
+use cylonflow::ops;
+use cylonflow::prelude::*;
+use cylonflow::table::Table;
+use std::collections::BTreeMap;
+
+fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in 0..t.num_rows() {
+        let key: Vec<String> = (0..t.num_columns())
+            .map(|c| format!("{:?}", t.value(r, c).unwrap()))
+            .collect();
+        *m.entry(key.join("|")).or_insert(0) += 1;
+    }
+    m
+}
+
+fn concat(parts: &[Table]) -> Table {
+    Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+}
+
+#[test]
+fn dist_distinct_matches_local() {
+    let p = 3;
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            // low cardinality => plenty of duplicates across ranks
+            let t = datagen::partition_for_rank(7, 3000, 0.05, env.rank(), env.world_size());
+            // project to keys only so whole-row distinct has duplicates
+            let keys = t.project(&[0])?;
+            dist::distinct(&keys, env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let whole: Vec<Table> = (0..p)
+        .map(|r| datagen::partition_for_rank(7, 3000, 0.05, r, p).project(&[0]).unwrap())
+        .collect();
+    let reference = ops::distinct(&concat(&whole), &[0]).unwrap();
+    let dist_all = concat(&out);
+    assert_eq!(dist_all.num_rows(), reference.num_rows());
+    assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
+}
+
+#[test]
+fn dist_setops_match_local() {
+    let p = 2;
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let outs = exec
+        .run(|env| {
+            let a = datagen::partition_for_rank(8, 2000, 0.1, env.rank(), env.world_size())
+                .project(&[0])?;
+            let b = datagen::partition_for_rank(9, 2000, 0.1, env.rank(), env.world_size())
+                .project(&[0])?;
+            let i = dist::intersect(&a, &b, env)?;
+            let d = dist::difference(&a, &b, env)?;
+            let u = dist::union_distinct(&a, &b, env)?;
+            Ok((i, d, u))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let whole = |seed: u64| -> Table {
+        concat(
+            &(0..p)
+                .map(|r| {
+                    datagen::partition_for_rank(seed, 2000, 0.1, r, p)
+                        .project(&[0])
+                        .unwrap()
+                })
+                .collect::<Vec<_>>(),
+        )
+    };
+    let (a, b) = (whole(8), whole(9));
+    let i_ref = ops::intersect(&a, &b).unwrap();
+    let d_ref = ops::difference(&a, &b).unwrap();
+    let u_ref = ops::union_distinct(&a, &b).unwrap();
+    let i_all = concat(&outs.iter().map(|(i, _, _)| i.clone()).collect::<Vec<_>>());
+    let d_all = concat(&outs.iter().map(|(_, d, _)| d.clone()).collect::<Vec<_>>());
+    let u_all = concat(&outs.iter().map(|(_, _, u)| u.clone()).collect::<Vec<_>>());
+    assert_eq!(row_multiset(&i_all), row_multiset(&i_ref), "intersect");
+    assert_eq!(row_multiset(&d_all), row_multiset(&d_ref), "difference");
+    assert_eq!(row_multiset(&u_all), row_multiset(&u_ref), "union");
+    // sanity: intersect + difference partition distinct(a)
+    assert_eq!(
+        i_ref.num_rows() + d_ref.num_rows(),
+        ops::distinct(&a, &[0]).unwrap().num_rows()
+    );
+}
+
+#[test]
+fn dist_describe_matches_local() {
+    let p = 4;
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let t = datagen::partition_for_rank(10, 4000, 0.9, env.rank(), env.world_size());
+            dist::describe(&t, env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let whole = concat(
+        &(0..p)
+            .map(|r| datagen::partition_for_rank(10, 4000, 0.9, r, p))
+            .collect::<Vec<_>>(),
+    );
+    let reference = ops::describe(&whole).unwrap();
+    for rank_stats in &out {
+        assert_eq!(rank_stats.len(), reference.len());
+        for (got, want) in rank_stats.iter().zip(&reference) {
+            assert_eq!(got.count, want.count, "{}", want.name);
+            assert_eq!(got.sum, want.sum);
+            assert_eq!(got.min, want.min);
+            assert_eq!(got.max, want.max);
+        }
+    }
+}
+
+#[test]
+fn dist_var_std_match_local_two_phase() {
+    let p = 3;
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let aggs = [
+        AggSpec::new(1, dist::AggFun::Var),
+        AggSpec::new(1, dist::AggFun::Std),
+        AggSpec::new(1, dist::AggFun::Mean),
+    ];
+    let out = exec
+        .run(move |env| {
+            let t = datagen::partition_for_rank(15, 6000, 0.05, env.rank(), env.world_size());
+            dist::groupby(&t, &[0], &aggs, dist::GroupbyStrategy::TwoPhase, env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let whole = concat(
+        &(0..p)
+            .map(|r| datagen::partition_for_rank(15, 6000, 0.05, r, p))
+            .collect::<Vec<_>>(),
+    );
+    let reference = ops::groupby(
+        &whole,
+        &[0],
+        &[
+            AggSpec::new(1, ops::AggFun::Var),
+            AggSpec::new(1, ops::AggFun::Std),
+            AggSpec::new(1, ops::AggFun::Mean),
+        ],
+    )
+    .unwrap();
+    let dist_all = concat(&out);
+    assert_eq!(dist_all.num_rows(), reference.num_rows());
+    // numeric agreement per key within float tolerance
+    let to_map = |t: &Table| -> BTreeMap<i64, (f64, f64, f64)> {
+        (0..t.num_rows())
+            .map(|r| {
+                (
+                    t.value(r, 0).unwrap().as_i64().unwrap(),
+                    (
+                        t.value(r, 1).unwrap().as_f64().unwrap(),
+                        t.value(r, 2).unwrap().as_f64().unwrap(),
+                        t.value(r, 3).unwrap().as_f64().unwrap(),
+                    ),
+                )
+            })
+            .collect()
+    };
+    let got = to_map(&dist_all);
+    for (k, (var, std, mean)) in to_map(&reference) {
+        let (gv, gs, gm) = got[&k];
+        assert!((gv - var).abs() < 1e-6 * var.abs().max(1.0), "var mismatch key {k}");
+        assert!((gs - std).abs() < 1e-6 * std.abs().max(1.0), "std mismatch key {k}");
+        assert!((gm - mean).abs() < 1e-9 * mean.abs().max(1.0), "mean mismatch key {k}");
+    }
+    // schema names survive the two-phase finalize
+    assert_eq!(dist_all.schema().field(1).unwrap().name, "var_v");
+    assert_eq!(dist_all.schema().field(2).unwrap().name, "std_v");
+}
+
+#[test]
+fn rebalance_evens_skewed_partitions() {
+    let p = 4;
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            // rank r holds ~r * 1000 rows: heavily imbalanced
+            let rows = env.rank() * 1000 + 10;
+            let t = datagen::uniform_table(env.rank() as u64, rows, 0.9);
+            let (balanced, report) = dist::rebalance(&t, env)?;
+            Ok((balanced.num_rows(), report.rows_before, report.rows_sent))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let total_before: usize = out.iter().map(|(_, b, _)| b).sum();
+    let after: Vec<usize> = out.iter().map(|(a, _, _)| *a).collect();
+    assert_eq!(after.iter().sum::<usize>(), total_before, "row conservation");
+    let (mn, mx) = (after.iter().min().unwrap(), after.iter().max().unwrap());
+    assert!(mx - mn <= 1, "not balanced: {after:?}");
+    assert!(out.iter().any(|(_, _, s)| *s > 0), "someone must ship rows");
+}
+
+#[test]
+fn checkpoint_recovery_resumes_pipeline() {
+    // run stage 1, checkpoint, "crash", restart with DIFFERENT parallelism,
+    // resume from the checkpoint and finish — the paper's coarse recovery.
+    let dir = std::env::temp_dir().join(format!("cylonflow-ckpt-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_string_lossy().to_string();
+
+    // --- first life: p=4, stage 1 (join), checkpoint, then die ----------
+    {
+        let c = Cluster::local(4).unwrap();
+        let exec = CylonExecutor::new(&c, 4).unwrap();
+        let d = dir_s.clone();
+        exec.run(move |env| {
+            let l = datagen::partition_for_rank(61, 4000, 0.9, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(62, 4000, 0.9, env.rank(), env.world_size());
+            let joined = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+            Checkpointer::new(&d)?.save("after_join", env.rank(), env.world_size(), &joined)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+        // cluster dropped = crash
+    }
+
+    // --- second life: p=2, restore and run stage 2 ----------------------
+    let c = Cluster::local(2).unwrap();
+    let exec = CylonExecutor::new(&c, 2).unwrap();
+    let d = dir_s.clone();
+    let out = exec
+        .run(move |env| {
+            let ck = Checkpointer::new(&d)?;
+            assert!(ck.exists("after_join"));
+            let joined = ck.restore("after_join", env.rank(), env.world_size())?;
+            // stage 2: groupby (keys were co-partitioned for p=4, not p=2 —
+            // the restored layout is row-balanced, so shuffle again)
+            dist::groupby(
+                &joined,
+                &[0],
+                &[AggSpec::new(1, dist::AggFun::Sum)],
+                dist::GroupbyStrategy::ShuffleFirst,
+                env,
+            )
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    // reference: the same two stages single-node
+    let lall = concat(
+        &(0..4)
+            .map(|r| datagen::partition_for_rank(61, 4000, 0.9, r, 4))
+            .collect::<Vec<_>>(),
+    );
+    let rall = concat(
+        &(0..4)
+            .map(|r| datagen::partition_for_rank(62, 4000, 0.9, r, 4))
+            .collect::<Vec<_>>(),
+    );
+    let j = ops::join(&lall, &rall, &JoinOptions::inner(0, 0)).unwrap();
+    let g = ops::groupby(&j, &[0], &[AggSpec::new(1, ops::AggFun::Sum)]).unwrap();
+    assert_eq!(concat(&out).num_rows(), g.num_rows());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streaming_pipeline_feeds_distributed_groupby() {
+    use cylonflow::stream::{GeneratorSource, ShardedStage, StreamPipeline};
+    // streaming ingest (sharded, backpressured) -> per-shard pre-aggregate,
+    // then the shards' outputs are the partitions of a CylonFlow app.
+    let shards = 3;
+    let stage = ShardedStage::new(shards, 4, vec![0], |batch| {
+        ops::groupby(
+            &batch,
+            &[0],
+            &[AggSpec::new(1, ops::AggFun::Sum), AggSpec::new(1, ops::AggFun::Count)],
+        )
+    });
+    let rep = StreamPipeline::new(stage)
+        .run(Box::new(GeneratorSource::new(77, 30_000, 1024, 0.02)))
+        .unwrap();
+    assert_eq!(rep.rows_in, 30_000);
+    assert_eq!(rep.outputs.len(), shards);
+
+    // finish the aggregation distributed: each shard output is a partition
+    let c = Cluster::local(shards).unwrap();
+    let exec = CylonExecutor::new(&c, shards).unwrap();
+    let parts = rep.outputs.clone();
+    let out = exec
+        .run(move |env| {
+            let mine = parts[env.rank()].clone();
+            // merge partials: sum of sums, sum of counts
+            dist::groupby(
+                &mine,
+                &[0],
+                &[AggSpec::new(1, dist::AggFun::Sum), AggSpec::new(2, dist::AggFun::Sum)],
+                dist::GroupbyStrategy::ShuffleFirst,
+                env,
+            )
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    // reference: total count across groups == rows_in
+    let final_all = concat(&out);
+    let mut total = 0i64;
+    for r in 0..final_all.num_rows() {
+        total += final_all.value(r, 2).unwrap().as_i64().unwrap();
+    }
+    assert_eq!(total, 30_000);
+}

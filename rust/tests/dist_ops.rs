@@ -1,0 +1,238 @@
+//! Integration: distributed operators over every backend × parallelism
+//! must agree with the single-node local reference on the concatenated
+//! data (up to row order).
+
+use cylonflow::comm::CommBackend;
+use cylonflow::config::Config;
+use cylonflow::ops;
+use cylonflow::prelude::*;
+use cylonflow::table::Table;
+use std::collections::BTreeMap;
+
+fn cluster(p: usize, backend: CommBackend) -> (Cluster, CylonExecutor) {
+    let cfg = Config { backend, ..Config::default() };
+    let c = Cluster::with_config(p, cfg).unwrap();
+    let e = CylonExecutor::new(&c, p).unwrap();
+    (c, e)
+}
+
+/// Canonical multiset of rows for order-insensitive table comparison.
+fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in 0..t.num_rows() {
+        let key: Vec<String> = (0..t.num_columns())
+            .map(|c| format!("{:?}", t.value(r, c).unwrap()))
+            .collect();
+        *m.entry(key.join("|")).or_insert(0) += 1;
+    }
+    m
+}
+
+fn whole(seed: u64, rows: usize, p: usize) -> (Table, Vec<Table>) {
+    let parts: Vec<Table> = (0..p)
+        .map(|r| datagen::partition_for_rank(seed, rows, 0.9, r, p))
+        .collect();
+    let all = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+    (all, parts)
+}
+
+const BACKENDS: [CommBackend; 3] = [CommBackend::Memory, CommBackend::Tcp, CommBackend::TcpUcc];
+
+#[test]
+fn dist_join_matches_local_all_backends() {
+    for backend in BACKENDS {
+        for p in [1usize, 2, 4] {
+            let (lall, _) = whole(21, 4000, p);
+            let (rall, _) = whole(22, 4000, p);
+            let (_c, exec) = cluster(p, backend);
+            let out = exec
+                .run(move |env| {
+                    let l =
+                        datagen::partition_for_rank(21, 4000, 0.9, env.rank(), env.world_size());
+                    let r =
+                        datagen::partition_for_rank(22, 4000, 0.9, env.rank(), env.world_size());
+                    dist::join(&l, &r, &JoinOptions::inner(0, 0), env)
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+            let reference = ops::join(&lall, &rall, &JoinOptions::inner(0, 0)).unwrap();
+            assert_eq!(
+                row_multiset(&dist_all),
+                row_multiset(&reference),
+                "join mismatch backend={backend:?} p={p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_groupby_both_strategies_match_local() {
+    use cylonflow::dist::GroupbyStrategy;
+    for strategy in [GroupbyStrategy::TwoPhase, GroupbyStrategy::ShuffleFirst] {
+        for p in [1usize, 3] {
+            let (all, _) = whole(31, 5000, p);
+            let (_c, exec) = cluster(p, CommBackend::Memory);
+            let out = exec
+                .run(move |env| {
+                    let t =
+                        datagen::partition_for_rank(31, 5000, 0.9, env.rank(), env.world_size());
+                    dist::groupby(
+                        &t,
+                        &[0],
+                        &[
+                            AggSpec::new(1, dist::AggFun::Sum),
+                            AggSpec::new(1, dist::AggFun::Count),
+                            AggSpec::new(1, dist::AggFun::Mean),
+                            AggSpec::new(1, dist::AggFun::Min),
+                            AggSpec::new(1, dist::AggFun::Max),
+                        ],
+                        strategy,
+                        env,
+                    )
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+            let reference = ops::groupby(
+                &all,
+                &[0],
+                &[
+                    AggSpec::new(1, dist::AggFun::Sum),
+                    AggSpec::new(1, dist::AggFun::Count),
+                    AggSpec::new(1, dist::AggFun::Mean),
+                    AggSpec::new(1, dist::AggFun::Min),
+                    AggSpec::new(1, dist::AggFun::Max),
+                ],
+            )
+            .unwrap();
+            assert_eq!(dist_all.num_rows(), reference.num_rows(), "{strategy} p={p}");
+            assert_eq!(
+                row_multiset(&dist_all),
+                row_multiset(&reference),
+                "groupby mismatch strategy={strategy} p={p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_sort_globally_ordered_and_complete() {
+    for backend in BACKENDS {
+        let p = 4;
+        let (all, _) = whole(41, 6000, p);
+        let (_c, exec) = cluster(p, backend);
+        let out = exec
+            .run(move |env| {
+                let t = datagen::partition_for_rank(41, 6000, 0.9, env.rank(), env.world_size());
+                dist::sort(&t, &SortOptions::by(0), env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        // per-rank sorted + rank boundaries ordered + complete multiset
+        let mut last = i64::MIN;
+        let mut total = 0usize;
+        for t in &out {
+            total += t.num_rows();
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                assert!(k >= last, "order violated (backend {backend:?})");
+                last = k;
+            }
+        }
+        assert_eq!(total, all.num_rows());
+        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&dist_all), row_multiset(&all));
+    }
+}
+
+#[test]
+fn dist_sort_descending() {
+    let p = 3;
+    let (_c, exec) = cluster(p, CommBackend::Memory);
+    let out = exec
+        .run(move |env| {
+            let t = datagen::partition_for_rank(43, 3000, 0.9, env.rank(), env.world_size());
+            dist::sort(&t, &SortOptions::by_desc(0), env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let mut last = i64::MAX;
+    for t in &out {
+        for &k in t.column(0).unwrap().i64_values().unwrap() {
+            assert!(k <= last);
+            last = k;
+        }
+    }
+}
+
+#[test]
+fn dist_pipeline_matches_composed_local_reference() {
+    let p = 4;
+    let (lall, _) = whole(51, 4000, p);
+    let (rall, _) = whole(52, 4000, p);
+    let (_c, exec) = cluster(p, CommBackend::Memory);
+    let out = exec
+        .run(move |env| {
+            let l = datagen::partition_for_rank(51, 4000, 0.9, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(52, 4000, 0.9, env.rank(), env.world_size());
+            dist::pipeline(&l, &r, 10.0, env).map(|rep| rep.table)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    // local reference: join -> groupby -> sort -> add_scalar
+    let j = ops::join(&lall, &rall, &JoinOptions::inner(0, 0)).unwrap();
+    let g = ops::groupby(
+        &j,
+        &[0],
+        &[
+            AggSpec::new(1, dist::AggFun::Sum),
+            AggSpec::new(3, dist::AggFun::Sum),
+        ],
+    )
+    .unwrap();
+    let s = ops::sort(&g, &SortOptions::by(0)).unwrap();
+    let reference = ops::add_scalar(&s, 1, 10.0).unwrap();
+    let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+    assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
+    // and the distributed output is globally sorted
+    let mut last = i64::MIN;
+    for t in &out {
+        for &k in t.column(0).unwrap().i64_values().unwrap() {
+            assert!(k >= last);
+            last = k;
+        }
+    }
+}
+
+#[test]
+fn comm_fraction_grows_with_parallelism() {
+    // The Fig 6 *shape*: communication share of a distributed join rises
+    // with parallelism (checked loosely: p=8 share > p=2 share - 10pt).
+    let share = |p: usize| -> f64 {
+        let (_c, exec) = cluster(p, CommBackend::Memory);
+        let (_, breakdown) = exec
+            .run(move |env| {
+                let l =
+                    datagen::partition_for_rank(61, 60_000, 0.9, env.rank(), env.world_size());
+                let r =
+                    datagen::partition_for_rank(62, 60_000, 0.9, env.rank(), env.world_size());
+                let t = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+                Ok(t.num_rows())
+            })
+            .unwrap()
+            .wait_with_metrics()
+            .unwrap();
+        breakdown.comm_fraction()
+    };
+    let s2 = share(2);
+    let s8 = share(8);
+    assert!(
+        s8 > s2 - 0.10,
+        "comm share should not collapse with p: p2={s2:.2} p8={s8:.2}"
+    );
+}

@@ -1,0 +1,129 @@
+//! Integration: the AOT-compiled JAX/Pallas kernels executed through PJRT
+//! from Rust must agree bit-for-bit (hash) / exactly (f64 ops on these
+//! inputs) with the native reference implementations.
+//!
+//! Requires `make artifacts`; each test skips (with a notice) when the
+//! artifacts are absent so a bare `cargo test` still passes.
+
+use cylonflow::config::{default_artifacts_dir, Config, HashPath};
+use cylonflow::ops::{KeyHasher, NativeHasher};
+use cylonflow::runtime::{artifacts_present, make_hasher, Kernels, KERNEL_BLOCK};
+use cylonflow::util::SplitMix64;
+
+fn artifacts_dir_or_skip() -> Option<String> {
+    let dir = default_artifacts_dir();
+    if artifacts_present(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_hash_matches_native_exact_block() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    let mut rng = SplitMix64::new(1);
+    let keys: Vec<i64> = (0..KERNEL_BLOCK).map(|_| rng.next_i64()).collect();
+    let mut native = vec![0i64; keys.len()];
+    NativeHasher.hash_i64(&keys, &mut native).unwrap();
+    let mut pjrt = vec![0i64; keys.len()];
+    Kernels::with(&dir, |k| k.hash64(&keys, &mut pjrt)).unwrap();
+    assert_eq!(native, pjrt);
+}
+
+#[test]
+fn pjrt_hash_matches_native_ragged_lengths() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    let mut rng = SplitMix64::new(2);
+    for n in [1usize, 7, 1000, KERNEL_BLOCK - 1, KERNEL_BLOCK + 1, 3 * KERNEL_BLOCK + 17] {
+        let keys: Vec<i64> = (0..n).map(|_| rng.next_i64()).collect();
+        let mut native = vec![0i64; n];
+        NativeHasher.hash_i64(&keys, &mut native).unwrap();
+        let mut pjrt = vec![0i64; n];
+        Kernels::with(&dir, |k| k.hash64(&keys, &mut pjrt)).unwrap();
+        assert_eq!(native, pjrt, "mismatch at n={n}");
+    }
+}
+
+#[test]
+fn pjrt_hasher_through_trait() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    let cfg = Config {
+        hash_path: HashPath::Pjrt,
+        artifacts_dir: dir,
+        ..Config::default()
+    };
+    let h = make_hasher(&cfg);
+    assert_eq!(h.label(), "pjrt");
+    let keys = vec![0i64, 1, 42, -1];
+    let mut out = vec![0i64; 4];
+    h.hash_i64(&keys, &mut out).unwrap();
+    // the shared known vectors (see python/tests/test_kernel.py)
+    assert_eq!(
+        out,
+        vec![0, -5451962507482445012, -9148929187392628276, 7256831767414464289]
+    );
+}
+
+#[test]
+fn pjrt_add_scalar_and_colagg() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    let mut rng = SplitMix64::new(3);
+    let xs: Vec<f64> = (0..KERNEL_BLOCK + 100).map(|_| rng.next_f64() * 100.0).collect();
+    let mut out = vec![0f64; xs.len()];
+    Kernels::with(&dir, |k| k.add_scalar_f64(&xs, 2.5, &mut out)).unwrap();
+    for (o, x) in out.iter().zip(&xs) {
+        assert_eq!(*o, x + 2.5);
+    }
+    let (sum, min, max) = Kernels::with(&dir, |k| k.colagg_f64(&xs)).unwrap();
+    let nsum: f64 = xs.iter().sum();
+    let nmin = xs.iter().copied().fold(f64::INFINITY, f64::min);
+    let nmax = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    assert!((sum - nsum).abs() < 1e-6 * nsum.abs().max(1.0), "{sum} vs {nsum}");
+    assert_eq!(min, nmin);
+    assert_eq!(max, nmax);
+}
+
+#[test]
+fn pjrt_partition_hist_matches_native() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    let mut rng = SplitMix64::new(4);
+    let n = KERNEL_BLOCK / 2 + 123;
+    let keys: Vec<i64> = (0..n).map(|_| rng.next_i64()).collect();
+    let hist = Kernels::with(&dir, |k| k.partition_hist(&keys)).unwrap();
+    let nparts = cylonflow::runtime::HIST_PARTITIONS;
+    let mut native = vec![0i64; nparts];
+    for &k in &keys {
+        native[cylonflow::util::hash::partition_of(k, nparts)] += 1;
+    }
+    assert_eq!(hist, native);
+    assert_eq!(hist.iter().sum::<i64>() as usize, n);
+}
+
+#[test]
+fn distributed_join_identical_under_both_hash_paths() {
+    let Some(dir) = artifacts_dir_or_skip() else { return };
+    use cylonflow::prelude::*;
+    let run = |hash_path: HashPath| -> Vec<usize> {
+        let cfg = Config {
+            hash_path,
+            artifacts_dir: dir.clone(),
+            ..Config::default()
+        };
+        let cluster = Cluster::with_config(2, cfg).unwrap();
+        let exec = CylonExecutor::new(&cluster, 2).unwrap();
+        exec.run(|env| {
+            let l = datagen::partition_for_rank(9, 20_000, 0.9, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(10, 20_000, 0.9, env.rank(), env.world_size());
+            let t = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+            Ok(t.num_rows())
+        })
+        .unwrap()
+        .wait()
+        .unwrap()
+    };
+    // identical hash function ⇒ identical partitioning ⇒ identical
+    // per-rank row counts
+    assert_eq!(run(HashPath::Native), run(HashPath::Pjrt));
+}

@@ -1,0 +1,83 @@
+//! Integration: multi-process gangs — real OS processes, file-KV
+//! rendezvous, TCP sockets. The closest thing to the paper's multi-node
+//! deployment this testbed can express.
+
+use cylonflow::executor::process::{launch_process_gang, AppParams};
+use std::path::Path;
+use std::time::Duration;
+
+fn binary() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cylonflow"))
+}
+
+#[test]
+fn process_gang_smoke() {
+    let results = launch_process_gang(
+        binary(),
+        3,
+        "smoke",
+        &AppParams::new(),
+        Duration::from_secs(120),
+    )
+    .unwrap();
+    assert_eq!(results, vec!["allreduce=6"; 3]);
+}
+
+#[test]
+fn process_gang_distributed_join() {
+    let mut params = AppParams::new();
+    params.insert("rows".into(), "50000".into());
+    let results =
+        launch_process_gang(binary(), 2, "join", &params, Duration::from_secs(180)).unwrap();
+    // every rank reports its partition rows; total must be > 0 and the
+    // runs are deterministic, so re-running gives identical output
+    let parse = |s: &str| -> usize { s.trim_start_matches("rows=").parse().unwrap() };
+    let total: usize = results.iter().map(|r| parse(r)).sum();
+    assert!(total > 0);
+    let again =
+        launch_process_gang(binary(), 2, "join", &params, Duration::from_secs(180)).unwrap();
+    assert_eq!(results, again, "process-mode runs must be deterministic");
+}
+
+#[test]
+fn process_gang_joins_on_disk_datasets() {
+    // the paper's load path: write partitioned datasets, every worker
+    // PROCESS reads its own partition from disk, then distributed-joins.
+    use cylonflow::datagen;
+    use cylonflow::table::write_dataset;
+    let p = 2;
+    let dir = std::env::temp_dir().join(format!("cylonflow-ds-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let l = datagen::uniform_table(31, 20_000, 0.9);
+    let r = datagen::uniform_table(32, 20_000, 0.9);
+    write_dataset(&l.split_even(p), dir.join("left")).unwrap();
+    write_dataset(&r.split_even(p), dir.join("right")).unwrap();
+
+    let mut params = AppParams::new();
+    params.insert("left".into(), dir.join("left").to_string_lossy().into_owned());
+    params.insert("right".into(), dir.join("right").to_string_lossy().into_owned());
+    let results =
+        launch_process_gang(binary(), p, "join-files", &params, Duration::from_secs(180))
+            .unwrap();
+    let total: usize = results
+        .iter()
+        .map(|s| s.trim_start_matches("rows=").parse::<usize>().unwrap())
+        .sum();
+    // must equal the single-node reference join size
+    let reference =
+        cylonflow::ops::join(&l, &r, &cylonflow::ops::JoinOptions::inner(0, 0)).unwrap();
+    assert_eq!(total, reference.num_rows());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn process_gang_unknown_app_fails_cleanly() {
+    let err = launch_process_gang(
+        binary(),
+        2,
+        "no-such-app",
+        &AppParams::new(),
+        Duration::from_secs(60),
+    );
+    assert!(err.is_err());
+}

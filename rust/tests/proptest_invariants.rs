@@ -1,0 +1,466 @@
+//! Property tests (in-repo `proptest_lite` harness) over the coordinator
+//! invariants: routing, partitioning, shuffle conservation, operator
+//! equivalences, wire-format round-trips, store repartitioning.
+
+use cylonflow::column::Column;
+use cylonflow::ops::{self, AggSpec, JoinAlgo, JoinOptions, NativeHasher, SortOptions};
+use cylonflow::proptest_lite::{run_prop, Gen};
+use cylonflow::table::{table_from_bytes, table_to_bytes, Table};
+use cylonflow::types::Value;
+use std::collections::BTreeMap;
+
+fn random_table(g: &mut Gen) -> Table {
+    let n = g.usize_in(0, 200);
+    let keys: Vec<i64> = (0..n).map(|_| g.i64_in(-30, 30)).collect();
+    let vals: Vec<i64> = (0..n).map(|_| g.i64_in(-1000, 1000)).collect();
+    let mut nullable = Vec::with_capacity(n);
+    for i in 0..n {
+        nullable.push(if g.bool(0.1) { None } else { Some(keys[i]) });
+    }
+    let strs: Vec<String> = (0..n).map(|_| g.string(5)).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_opt_i64(&nullable)),
+        ("v", Column::from_i64(vals)),
+        ("s", Column::from_strings(&strs)),
+        ("kd", Column::from_i64(keys)),
+    ])
+    .unwrap()
+}
+
+fn row_multiset(t: &Table) -> BTreeMap<String, usize> {
+    let mut m = BTreeMap::new();
+    for r in 0..t.num_rows() {
+        let key: Vec<String> = (0..t.num_columns())
+            .map(|c| format!("{:?}", t.value(r, c).unwrap()))
+            .collect();
+        *m.entry(key.join("|")).or_insert(0) += 1;
+    }
+    m
+}
+
+#[test]
+fn prop_wire_roundtrip() {
+    run_prop("wire roundtrip preserves tables", 60, |g| {
+        let t = random_table(g);
+        let back = table_from_bytes(&table_to_bytes(&t)).unwrap();
+        assert_eq!(t, back);
+    });
+}
+
+#[test]
+fn prop_hash_partition_conserves_and_routes() {
+    run_prop("hash partition conserves rows & routes keys consistently", 50, |g| {
+        let t = random_table(g);
+        let p = g.usize_in(1, 9);
+        let parts = ops::partition_by_hash(&t, &[0], p, &NativeHasher).unwrap();
+        assert_eq!(parts.len(), p);
+        let total: usize = parts.iter().map(|x| x.num_rows()).sum();
+        assert_eq!(total, t.num_rows());
+        // multiset conservation
+        let merged = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&merged), row_multiset(&t));
+        // routing: each key value appears in exactly one partition
+        let mut owner: BTreeMap<String, usize> = BTreeMap::new();
+        for (pi, part) in parts.iter().enumerate() {
+            for r in 0..part.num_rows() {
+                let key = format!("{:?}", part.value(r, 0).unwrap());
+                if let Some(&prev) = owner.get(&key) {
+                    assert_eq!(prev, pi, "key {key} routed to two partitions");
+                } else {
+                    owner.insert(key, pi);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_partition_routing_agrees_across_tables() {
+    // The cross-worker invariant distributed joins rely on: the same key
+    // routes to the same partition no matter which table it sits in.
+    run_prop("partition routing is table-independent", 40, |g| {
+        let a = random_table(g);
+        let b = random_table(g);
+        let p = g.usize_in(2, 8);
+        let pa = ops::partition_by_hash(&a, &[3], p, &NativeHasher).unwrap();
+        let pb = ops::partition_by_hash(&b, &[3], p, &NativeHasher).unwrap();
+        let mut owner: BTreeMap<i64, usize> = BTreeMap::new();
+        for (pi, part) in pa.iter().enumerate().chain(pb.iter().enumerate()) {
+            for &k in part.column(3).unwrap().i64_values().unwrap() {
+                if let Some(&prev) = owner.get(&k) {
+                    assert_eq!(prev, pi, "key {k} split across partitions");
+                } else {
+                    owner.insert(k, pi);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_hash_join_equals_sort_merge_join() {
+    run_prop("hash join ≡ sort-merge join", 40, |g| {
+        let l = random_table(g);
+        let r = random_table(g);
+        for jt in [
+            ops::JoinType::Inner,
+            ops::JoinType::Left,
+            ops::JoinType::Right,
+            ops::JoinType::FullOuter,
+        ] {
+            let opts_h = JoinOptions::inner(0, 0).with_type(jt);
+            let opts_s = JoinOptions::inner(0, 0).with_type(jt).with_algo(JoinAlgo::SortMerge);
+            let h = ops::join(&l, &r, &opts_h).unwrap();
+            let s = ops::join(&l, &r, &opts_s).unwrap();
+            assert_eq!(row_multiset(&h), row_multiset(&s), "join type {jt:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_join_partitioned_equals_whole() {
+    // partition both sides, join co-partitions, union == whole join
+    run_prop("partitioned join ≡ whole join", 30, |g| {
+        let l = random_table(g);
+        let r = random_table(g);
+        let p = g.usize_in(1, 6);
+        let opts = JoinOptions::inner(3, 3);
+        let lp = ops::partition_by_hash(&l, &[3], p, &NativeHasher).unwrap();
+        let rp = ops::partition_by_hash(&r, &[3], p, &NativeHasher).unwrap();
+        let mut pieces = Vec::new();
+        for (a, b) in lp.iter().zip(&rp) {
+            pieces.push(ops::join(a, b, &opts).unwrap());
+        }
+        let merged = Table::concat(&pieces.iter().collect::<Vec<_>>()).unwrap();
+        let reference = ops::join(&l, &r, &opts).unwrap();
+        assert_eq!(row_multiset(&merged), row_multiset(&reference));
+    });
+}
+
+#[test]
+fn prop_groupby_partial_merge_equals_whole() {
+    // the two-phase distributed groupby algebra: partial + merge == whole
+    run_prop("two-phase groupby ≡ single groupby", 30, |g| {
+        let t = random_table(g);
+        let p = g.usize_in(1, 5);
+        let aggs = [AggSpec::new(1, ops::AggFun::Sum), AggSpec::new(1, ops::AggFun::Count)];
+        // split arbitrarily (not by key!), partial-group each, merge
+        let chunks = t.split_even(p);
+        let partials: Vec<Table> = chunks
+            .iter()
+            .map(|c| ops::groupby(c, &[0], &aggs).unwrap())
+            .collect();
+        let all_partials = Table::concat(&partials.iter().collect::<Vec<_>>()).unwrap();
+        let merged = ops::groupby(
+            &all_partials,
+            &[0],
+            &[
+                AggSpec::new(1, ops::AggFun::Sum), // sum of sums
+                AggSpec::new(2, ops::AggFun::Sum), // sum of counts
+            ],
+        )
+        .unwrap();
+        let reference = ops::groupby(&t, &[0], &aggs).unwrap();
+        assert_eq!(merged.num_rows(), reference.num_rows());
+        // compare (key -> (sum, count)) maps
+        let to_map = |t: &Table| -> BTreeMap<String, (i64, i64)> {
+            (0..t.num_rows())
+                .map(|r| {
+                    (
+                        format!("{:?}", t.value(r, 0).unwrap()),
+                        (
+                            t.value(r, 1).unwrap().as_i64().unwrap_or(i64::MIN),
+                            t.value(r, 2).unwrap().as_i64().unwrap_or(i64::MIN),
+                        ),
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(to_map(&merged), to_map(&reference));
+    });
+}
+
+#[test]
+fn prop_sort_is_permutation_and_ordered() {
+    run_prop("sort yields an ordered permutation", 40, |g| {
+        let t = random_table(g);
+        let sorted = ops::sort(&t, &SortOptions::by(0)).unwrap();
+        assert_eq!(row_multiset(&sorted), row_multiset(&t));
+        assert!(ops::sort::is_sorted(&sorted, &SortOptions::by(0)));
+        for r in 1..sorted.num_rows() {
+            let a = sorted.value(r - 1, 0).unwrap();
+            let b = sorted.value(r, 0).unwrap();
+            assert_ne!(a.cmp_sql(&b), std::cmp::Ordering::Greater);
+        }
+    });
+}
+
+#[test]
+fn prop_range_partition_conserves_and_orders() {
+    run_prop("range partition conserves rows, orders buckets", 40, |g| {
+        let t = random_table(g);
+        let nsplit = g.usize_in(0, 6);
+        let mut sp: Vec<i64> = (0..nsplit).map(|_| g.i64_in(-30, 30)).collect();
+        sp.sort_unstable();
+        let splitters = Table::from_columns(vec![("k", Column::from_i64(sp))]).unwrap();
+        let parts = ops::partition_by_range(&t, &[3], &splitters, &[0]).unwrap();
+        assert_eq!(parts.len(), nsplit + 1);
+        let total: usize = parts.iter().map(|p| p.num_rows()).sum();
+        assert_eq!(total, t.num_rows());
+        // max(part i) <= min(part i+1)
+        let bounds: Vec<(i64, i64)> = parts
+            .iter()
+            .map(|p| {
+                let ks = p.column(3).unwrap().i64_values().unwrap();
+                (
+                    ks.iter().copied().min().unwrap_or(i64::MAX),
+                    ks.iter().copied().max().unwrap_or(i64::MIN),
+                )
+            })
+            .collect();
+        for w in bounds.windows(2) {
+            if w[0].1 != i64::MIN && w[1].0 != i64::MAX {
+                assert!(w[0].1 <= w[1].0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_filter_complement_partitions_table() {
+    run_prop("filter + complement = whole table", 40, |g| {
+        let t = random_table(g);
+        let thresh = g.i64_in(-30, 30);
+        let keys: Vec<Option<i64>> = (0..t.num_rows())
+            .map(|r| t.value(r, 0).unwrap().as_i64())
+            .collect();
+        let yes = ops::filter(&t, |r| keys[r].map(|k| k < thresh).unwrap_or(false));
+        let no = ops::filter(&t, |r| !keys[r].map(|k| k < thresh).unwrap_or(false));
+        assert_eq!(yes.num_rows() + no.num_rows(), t.num_rows());
+        let merged = Table::concat(&[&yes, &no]).unwrap();
+        assert_eq!(row_multiset(&merged), row_multiset(&t));
+    });
+}
+
+#[test]
+fn prop_add_scalar_roundtrip() {
+    run_prop("add_scalar(+c) then (−c) is identity on int64", 40, |g| {
+        let t = random_table(g);
+        let c = g.i64_in(-100, 100) as f64;
+        let fwd = ops::add_scalar(&t, 1, c).unwrap();
+        let back = ops::add_scalar(&fwd, 1, -c).unwrap();
+        assert_eq!(back, t);
+    });
+}
+
+#[test]
+fn prop_gather_value_semantics() {
+    run_prop("gather returns exactly the indexed rows", 40, |g| {
+        let t = random_table(g);
+        if t.num_rows() == 0 {
+            return;
+        }
+        let idx: Vec<u32> = (0..g.usize_in(0, 50))
+            .map(|_| g.usize_in(0, t.num_rows()) as u32)
+            .collect();
+        let gathered = t.gather(&idx);
+        assert_eq!(gathered.num_rows(), idx.len());
+        for (j, &i) in idx.iter().enumerate() {
+            for c in 0..t.num_columns() {
+                assert_eq!(
+                    gathered.value(j, c).unwrap(),
+                    t.value(i as usize, c).unwrap()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_sorted_equals_sort_of_concat() {
+    run_prop("k-way merge ≡ sort of concat", 30, |g| {
+        let k = g.usize_in(1, 5);
+        let opts = SortOptions::by(0);
+        let runs: Vec<Table> = (0..k)
+            .map(|_| {
+                let t = random_table(g).project(&[3, 1]).unwrap();
+                ops::sort(&t, &opts).unwrap()
+            })
+            .collect();
+        let merged = ops::merge_sorted(&runs.iter().collect::<Vec<_>>(), &opts).unwrap();
+        let concat = Table::concat(&runs.iter().collect::<Vec<_>>()).unwrap();
+        let reference = ops::sort(&concat, &opts).unwrap();
+        assert_eq!(row_multiset(&merged), row_multiset(&reference));
+        assert!(ops::sort::is_sorted(&merged, &opts));
+    });
+}
+
+#[test]
+fn prop_store_repartition_conserves_rows() {
+    use cylonflow::store::{CylonStore, ObjectStore};
+    use std::time::Duration;
+    run_prop("store repartition conserves the logical table", 25, |g| {
+        let t = random_table(g);
+        let p_prod = g.usize_in(1, 5);
+        let p_cons = g.usize_in(1, 5);
+        let os = ObjectStore::shared();
+        for (rank, part) in t.split_even(p_prod).into_iter().enumerate() {
+            CylonStore::new(os.clone(), rank, p_prod)
+                .put("d", part)
+                .unwrap();
+        }
+        let mut pieces = Vec::new();
+        for rank in 0..p_cons {
+            pieces.push(
+                CylonStore::new(os.clone(), rank, p_cons)
+                    .get("d", Duration::from_secs(1))
+                    .unwrap(),
+            );
+        }
+        let merged = Table::concat(&pieces.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&merged), row_multiset(&t));
+        // balance: consumer partitions differ by ≤ 1 row
+        let sizes: Vec<usize> = pieces.iter().map(|p| p.num_rows()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "unbalanced repartition: {sizes:?}");
+    });
+}
+
+#[test]
+fn prop_join_null_keys_never_match() {
+    run_prop("null join keys never match", 30, |g| {
+        let l = random_table(g);
+        let r = random_table(g);
+        let j = ops::join(&l, &r, &JoinOptions::inner(0, 0)).unwrap();
+        for row in 0..j.num_rows() {
+            assert!(
+                !matches!(j.value(row, 0).unwrap(), Value::Null),
+                "null key matched in inner join"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_distinct_idempotent_and_minimal() {
+    run_prop("distinct is idempotent and duplicate-free", 30, |g| {
+        let t = random_table(g);
+        let d1 = ops::distinct(&t, &[0]).unwrap();
+        let d2 = ops::distinct(&d1, &[0]).unwrap();
+        assert_eq!(d1, d2, "distinct must be idempotent");
+        // no two rows share a key
+        let mut seen = std::collections::BTreeSet::new();
+        for r in 0..d1.num_rows() {
+            let k = format!("{:?}", d1.value(r, 0).unwrap());
+            assert!(seen.insert(k), "duplicate key survived distinct");
+        }
+        // every input key is represented
+        for r in 0..t.num_rows() {
+            let k = format!("{:?}", t.value(r, 0).unwrap());
+            assert!(seen.contains(&k), "key lost by distinct");
+        }
+    });
+}
+
+#[test]
+fn prop_setops_algebra() {
+    run_prop("intersect/difference partition distinct(a)", 25, |g| {
+        let a = random_table(g).project(&[3]).unwrap();
+        let b = random_table(g).project(&[3]).unwrap();
+        let i = ops::intersect(&a, &b).unwrap();
+        let d = ops::difference(&a, &b).unwrap();
+        let da = ops::distinct(&a, &[0]).unwrap();
+        assert_eq!(i.num_rows() + d.num_rows(), da.num_rows());
+        // intersect(a, b) == intersect(b, a) as multisets of rows
+        let i2 = ops::intersect(&b, &a).unwrap();
+        assert_eq!(row_multiset(&i), row_multiset(&i2));
+        // difference(a, a) is empty; intersect(a, a) == distinct(a)
+        assert_eq!(ops::difference(&a, &a).unwrap().num_rows(), 0);
+        assert_eq!(
+            row_multiset(&ops::intersect(&a, &a).unwrap()),
+            row_multiset(&da)
+        );
+    });
+}
+
+#[test]
+fn prop_head_tail_partition_rows() {
+    run_prop("head(n) ++ tail(len-n) == table", 30, |g| {
+        let t = random_table(g);
+        let n = g.usize_in(0, t.num_rows() + 1);
+        let h = ops::head(&t, n);
+        let ta = ops::tail(&t, t.num_rows() - n);
+        let merged = Table::concat(&[&h, &ta]).unwrap();
+        assert_eq!(merged, t);
+    });
+}
+
+#[test]
+fn prop_groupby_var_nonnegative_and_consistent() {
+    run_prop("var >= 0, std == sqrt(var), count*mean == sum", 25, |g| {
+        let t = random_table(g);
+        let out = ops::groupby(
+            &t,
+            &[3],
+            &[
+                AggSpec::new(1, ops::AggFun::Var),
+                AggSpec::new(1, ops::AggFun::Std),
+                AggSpec::new(1, ops::AggFun::Sum),
+                AggSpec::new(1, ops::AggFun::Count),
+            ],
+        )
+        .unwrap();
+        for r in 0..out.num_rows() {
+            let var = out.value(r, 1).unwrap().as_f64().unwrap();
+            let std = out.value(r, 2).unwrap().as_f64().unwrap();
+            let sum = out.value(r, 3).unwrap().as_f64().unwrap();
+            let count = out.value(r, 4).unwrap().as_i64().unwrap();
+            assert!(var >= 0.0);
+            assert!((std - var.sqrt()).abs() < 1e-9 * std.max(1.0));
+            assert!(count > 0);
+            let _ = sum;
+        }
+    });
+}
+
+#[test]
+fn prop_ipc_file_roundtrip() {
+    use cylonflow::table::{read_table_file, write_table_file};
+    run_prop("table file roundtrip", 20, |g| {
+        let t = random_table(g);
+        let p = std::env::temp_dir().join(format!(
+            "cylonflow-prop-{}-{}.cyt",
+            std::process::id(),
+            g.u64()
+        ));
+        write_table_file(&t, &p).unwrap();
+        assert_eq!(read_table_file(&p).unwrap(), t);
+        let _ = std::fs::remove_file(&p);
+    });
+}
+
+#[test]
+fn prop_bounded_queue_fifo_per_producer() {
+    use cylonflow::stream::BoundedQueue;
+    use std::sync::Arc;
+    run_prop("queue preserves per-producer order", 15, |g| {
+        let q = Arc::new(BoundedQueue::new(g.usize_in(1, 8)));
+        let n = g.usize_in(0, 200);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                q2.push(i);
+            }
+            q2.close();
+        });
+        let mut last = None;
+        while let Some(v) = q.pop() {
+            if let Some(l) = last {
+                assert!(v > l, "order violated");
+            }
+            last = Some(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(last, n.checked_sub(1));
+    });
+}
