@@ -71,6 +71,12 @@ impl CommContext {
         snap
     }
 
+    /// Non-destructive snapshot of the accumulated communication timers
+    /// (per-stage deltas peek without disturbing the app-level report).
+    pub fn peek_timers(&self) -> PhaseTimers {
+        self.timers.lock().expect("timers poisoned").clone()
+    }
+
     fn alloc_tags(&self, n: u64) -> u64 {
         self.next_tag.fetch_add(n, Ordering::SeqCst)
     }

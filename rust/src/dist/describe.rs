@@ -1,0 +1,138 @@
+//! Distributed `describe`: per-column summary statistics over the whole
+//! logical table. Each rank computes local stats (core local operator),
+//! encodes them as a tiny stats table, and an allgather + local merge
+//! yields identical global stats on every rank — the classic
+//! tree-reducible aggregate, so no raw data moves.
+
+use crate::column::ColumnBuilder;
+use crate::error::{Error, Result};
+use crate::executor::CylonEnv;
+use crate::metrics::Phase;
+use crate::ops::{self, ColumnStats};
+use crate::table::Table;
+use crate::types::DType;
+
+/// Distributed column statistics: every rank returns the same global
+/// [`ColumnStats`] per column (count/nulls/sum/min/max/mean), equal to
+/// running [`ops::describe`] on the concatenated table.
+pub fn describe(t: &Table, env: &CylonEnv) -> Result<Vec<ColumnStats>> {
+    let local = env.time(Phase::Compute, || ops::describe(t))?;
+    if env.world_size() == 1 {
+        return Ok(local);
+    }
+    let stats_t = env.time(Phase::Auxiliary, || stats_to_table(&local))?;
+    let all = env.comm().allgather(&stats_t)?;
+    env.time(Phase::Auxiliary, || merge_stats(t, &all))
+}
+
+/// Encode per-column stats as rows of `(col, count, nulls, sum, min, max)`
+/// — nullable floats carry the "no numeric data" case across the wire.
+fn stats_to_table(stats: &[ColumnStats]) -> Result<Table> {
+    let mut col = ColumnBuilder::with_capacity(DType::Int64, stats.len());
+    let mut count = ColumnBuilder::with_capacity(DType::Int64, stats.len());
+    let mut nulls = ColumnBuilder::with_capacity(DType::Int64, stats.len());
+    let mut sum = ColumnBuilder::with_capacity(DType::Float64, stats.len());
+    let mut min = ColumnBuilder::with_capacity(DType::Float64, stats.len());
+    let mut max = ColumnBuilder::with_capacity(DType::Float64, stats.len());
+    for (i, s) in stats.iter().enumerate() {
+        col.push_i64(i as i64);
+        count.push_i64(s.count as i64);
+        nulls.push_i64(s.nulls as i64);
+        for (b, v) in [(&mut sum, s.sum), (&mut min, s.min), (&mut max, s.max)] {
+            match v {
+                Some(x) => b.push_f64(x),
+                None => b.push_null(),
+            }
+        }
+    }
+    Table::from_columns(vec![
+        ("col", col.finish()),
+        ("count", count.finish()),
+        ("nulls", nulls.finish()),
+        ("sum", sum.finish()),
+        ("min", min.finish()),
+        ("max", max.finish()),
+    ])
+}
+
+fn merge_stats(t: &Table, all: &Table) -> Result<Vec<ColumnStats>> {
+    let m = t.num_columns();
+    let mut out = Vec::with_capacity(m);
+    for i in 0..m {
+        out.push(ColumnStats {
+            name: t.schema().field(i)?.name.clone(),
+            count: 0,
+            nulls: 0,
+            sum: None,
+            min: None,
+            max: None,
+            mean: None,
+        });
+    }
+    for r in 0..all.num_rows() {
+        let ci = all
+            .value(r, 0)?
+            .as_i64()
+            .ok_or_else(|| Error::invalid("malformed stats row"))? as usize;
+        if ci >= m {
+            continue;
+        }
+        let s = &mut out[ci];
+        s.count += all.value(r, 1)?.as_i64().unwrap_or(0) as usize;
+        s.nulls += all.value(r, 2)?.as_i64().unwrap_or(0) as usize;
+        if let Some(x) = all.value(r, 3)?.as_f64() {
+            s.sum = Some(s.sum.unwrap_or(0.0) + x);
+        }
+        if let Some(x) = all.value(r, 4)?.as_f64() {
+            s.min = Some(s.min.map_or(x, |cur| cur.min(x)));
+        }
+        if let Some(x) = all.value(r, 5)?.as_f64() {
+            s.max = Some(s.max.map_or(x, |cur| cur.max(x)));
+        }
+    }
+    for s in &mut out {
+        s.mean = match (s.sum, s.count > 0) {
+            (Some(x), true) => Some(x / s.count as f64),
+            _ => None,
+        };
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+
+    #[test]
+    fn matches_local_reference_on_every_rank() {
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let t = datagen::partition_for_rank(701, 2400, 0.9, env.rank(), env.world_size());
+                describe(&t, env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let parts: Vec<Table> = (0..p)
+            .map(|r| datagen::partition_for_rank(701, 2400, 0.9, r, p))
+            .collect();
+        let whole = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        let reference = ops::describe(&whole).unwrap();
+        for rank_stats in &out {
+            assert_eq!(rank_stats.len(), reference.len());
+            for (got, want) in rank_stats.iter().zip(&reference) {
+                assert_eq!(got.name, want.name);
+                assert_eq!(got.count, want.count);
+                assert_eq!(got.nulls, want.nulls);
+                assert_eq!(got.sum, want.sum);
+                assert_eq!(got.min, want.min);
+                assert_eq!(got.max, want.max);
+            }
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Distributed groupby with two strategies (the paper's §VI ablation):
+//!
+//! - **Shuffle-first**: hash-shuffle raw rows on the key columns, then run
+//!   the local groupby. Moves all data; right for high-cardinality keys
+//!   where partial aggregation would barely shrink the payload.
+//! - **Two-phase** (default): run a *partial* local groupby, shuffle the
+//!   much smaller partials, merge, and finalize the algebraic aggregates
+//!   (Mean = sum/count, Var/Std from (sum, count, sumsq)). Right for
+//!   low/medium cardinality where partials collapse the shuffle volume.
+
+use super::{check_keys, shuffle_by_key};
+use crate::column::ColumnBuilder;
+use crate::error::Result;
+use crate::executor::CylonEnv;
+use crate::metrics::Phase;
+use crate::ops::{self, AggFun, AggSpec};
+use crate::table::Table;
+use crate::types::{DType, Field, Schema};
+use std::fmt;
+
+/// How the distributed groupby moves data (paper §VI groupby ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GroupbyStrategy {
+    /// Partial-aggregate locally, shuffle partials, merge + finalize.
+    #[default]
+    TwoPhase,
+    /// Shuffle raw rows on the keys, then aggregate locally.
+    ShuffleFirst,
+}
+
+impl fmt::Display for GroupbyStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            GroupbyStrategy::TwoPhase => "two-phase",
+            GroupbyStrategy::ShuffleFirst => "shuffle-first",
+        })
+    }
+}
+
+/// Distributed groupby: each rank passes its partition and receives the
+/// complete rows for the keys that hash to it. Output schema matches the
+/// local [`ops::groupby`]: key columns, then one `{fun}_{col}` column per
+/// aggregate.
+pub fn groupby(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[AggSpec],
+    strategy: GroupbyStrategy,
+    env: &CylonEnv,
+) -> Result<Table> {
+    check_keys(t, key_cols, "dist::groupby")?;
+    match strategy {
+        GroupbyStrategy::ShuffleFirst => {
+            let shuffled = shuffle_by_key(t, key_cols, env)?;
+            env.time(Phase::Compute, || {
+                ops::groupby_with_hasher(&shuffled, key_cols, aggs, env.hasher())
+            })
+        }
+        GroupbyStrategy::TwoPhase => groupby_two_phase(t, key_cols, aggs, env),
+    }
+}
+
+/// Groupby that elides the shuffle entirely: correct when the input is
+/// already co-partitioned on `key_cols` (e.g. the output of
+/// [`super::join`] keyed on the same columns) — the zero-communication
+/// reuse the paper's pipeline leans on.
+pub fn groupby_prepartitioned(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[AggSpec],
+    env: &CylonEnv,
+) -> Result<Table> {
+    check_keys(t, key_cols, "dist::groupby_prepartitioned")?;
+    env.time(Phase::Compute, || {
+        ops::groupby_with_hasher(t, key_cols, aggs, env.hasher())
+    })
+}
+
+fn groupby_two_phase(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[AggSpec],
+    env: &CylonEnv,
+) -> Result<Table> {
+    let nk = key_cols.len();
+    // Decompose every aggregate into shuffle-able partials; `offsets[i]`
+    // is where aggregate i's partial columns start (after the keys).
+    let mut expanded: Vec<AggSpec> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::with_capacity(aggs.len());
+    for a in aggs {
+        offsets.push(expanded.len());
+        for pf in ops::groupby::partial_aggs(a.fun) {
+            expanded.push(AggSpec::new(a.col, pf));
+        }
+    }
+
+    // Phase 1: local partial aggregation (core local operator).
+    let partial = env.time(Phase::Compute, || {
+        ops::groupby_with_hasher(t, key_cols, &expanded, env.hasher())
+    })?;
+
+    // Phase 2: shuffle the partials on the (now leading) key columns.
+    let key_idx: Vec<usize> = (0..nk).collect();
+    let shuffled = shuffle_by_key(&partial, &key_idx, env)?;
+
+    // Phase 3: merge partials of the same key (sum of sums, min of mins…).
+    let merge_specs: Vec<AggSpec> = expanded
+        .iter()
+        .enumerate()
+        .map(|(j, s)| AggSpec::new(nk + j, ops::groupby::merge_fun(s.fun)))
+        .collect();
+    let merged = env.time(Phase::Compute, || {
+        ops::groupby_with_hasher(&shuffled, &key_idx, &merge_specs, env.hasher())
+    })?;
+
+    // Phase 4: finalize — rename pass-through partials and compute the
+    // algebraic aggregates, reproducing the local kernel's output schema.
+    env.time(Phase::Auxiliary, || finalize(t, aggs, &offsets, nk, &merged))
+}
+
+fn finalize(
+    t: &Table,
+    aggs: &[AggSpec],
+    offsets: &[usize],
+    nk: usize,
+    merged: &Table,
+) -> Result<Table> {
+    let ngroups = merged.num_rows();
+    let mut schema = Schema::default();
+    let mut columns = Vec::with_capacity(nk + aggs.len());
+    for i in 0..nk {
+        schema = schema.with_field(merged.schema().field(i)?.clone());
+        columns.push(merged.column(i)?.clone());
+    }
+    for (a, &off) in aggs.iter().zip(offsets) {
+        let src_name = &t.schema().field(a.col)?.name;
+        let name = format!("{}_{}", a.fun.label(), src_name);
+        match a.fun {
+            AggFun::Sum | AggFun::Count | AggFun::Min | AggFun::Max | AggFun::SumSq => {
+                // A single merged partial IS the final value (dtype already
+                // matches the local kernel's output dtype rules).
+                let col = merged.column(nk + off)?.clone();
+                schema = schema.with_field(Field::new(name, col.dtype()));
+                columns.push(col);
+            }
+            AggFun::Mean | AggFun::Var | AggFun::Std => {
+                let sum_c = merged.column(nk + off)?;
+                let cnt_c = merged.column(nk + off + 1)?;
+                let mut b = ColumnBuilder::with_capacity(DType::Float64, ngroups);
+                for g in 0..ngroups {
+                    let cnt = cnt_c.value(g).as_f64().unwrap_or(0.0);
+                    if cnt <= 0.0 || !sum_c.is_valid(g) {
+                        b.push_null();
+                        continue;
+                    }
+                    let sum = sum_c.value(g).as_f64().unwrap_or(0.0);
+                    let mean = sum / cnt;
+                    let v = match a.fun {
+                        AggFun::Mean => mean,
+                        // same expression order as the local kernel so the
+                        // float results are bit-identical
+                        AggFun::Var | AggFun::Std => {
+                            let ssq = merged
+                                .column(nk + off + 2)?
+                                .value(g)
+                                .as_f64()
+                                .unwrap_or(0.0);
+                            let var = (ssq / cnt - mean * mean).max(0.0);
+                            if a.fun == AggFun::Std {
+                                var.sqrt()
+                            } else {
+                                var
+                            }
+                        }
+                        _ => unreachable!("matched above"),
+                    };
+                    b.push_f64(v);
+                }
+                schema = schema.with_field(Field::new(name, DType::Float64));
+                columns.push(b.finish());
+            }
+        }
+    }
+    Table::new(schema, columns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+    use std::collections::BTreeMap;
+
+    fn whole(seed: u64, rows: usize, card: f64, p: usize) -> Table {
+        let parts: Vec<Table> = (0..p)
+            .map(|r| datagen::partition_for_rank(seed, rows, card, r, p))
+            .collect();
+        Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+    }
+
+    fn key_map(t: &Table, val_col: usize) -> BTreeMap<i64, crate::types::Value> {
+        (0..t.num_rows())
+            .map(|r| {
+                (
+                    t.value(r, 0).unwrap().as_i64().unwrap(),
+                    t.value(r, val_col).unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn two_phase_algebraic_aggs_match_local_exactly() {
+        let p = 3;
+        let aggs = [
+            AggSpec::new(1, AggFun::Sum),
+            AggSpec::new(1, AggFun::Mean),
+            AggSpec::new(1, AggFun::Min),
+            AggSpec::new(1, AggFun::Count),
+        ];
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(move |env| {
+                let t = datagen::partition_for_rank(401, 3000, 0.1, env.rank(), env.world_size());
+                groupby(&t, &[0], &aggs, GroupbyStrategy::TwoPhase, env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let reference = ops::groupby(&whole(401, 3000, 0.1, p), &[0], &aggs).unwrap();
+        assert_eq!(dist_all.num_rows(), reference.num_rows());
+        for v in 1..=aggs.len() {
+            assert_eq!(key_map(&dist_all, v), key_map(&reference, v), "agg col {v}");
+        }
+        // schema names reproduce the local kernel's convention
+        assert_eq!(dist_all.schema().field(1).unwrap().name, "sum_v");
+        assert_eq!(dist_all.schema().field(2).unwrap().name, "mean_v");
+    }
+
+    #[test]
+    fn strategies_agree() {
+        let p = 2;
+        let aggs = [AggSpec::new(1, AggFun::Sum)];
+        let run = |strategy: GroupbyStrategy| -> BTreeMap<i64, crate::types::Value> {
+            let c = Cluster::local(p).unwrap();
+            let exec = CylonExecutor::new(&c, p).unwrap();
+            let out = exec
+                .run(move |env| {
+                    let t =
+                        datagen::partition_for_rank(402, 2000, 0.3, env.rank(), env.world_size());
+                    groupby(&t, &[0], &aggs, strategy, env)
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            key_map(&Table::concat(&out.iter().collect::<Vec<_>>()).unwrap(), 1)
+        };
+        assert_eq!(run(GroupbyStrategy::TwoPhase), run(GroupbyStrategy::ShuffleFirst));
+    }
+
+    #[test]
+    fn prepartitioned_after_join_has_no_split_groups() {
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let l = datagen::partition_for_rank(403, 2000, 0.2, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(404, 2000, 0.2, env.rank(), env.world_size());
+                let j = super::super::join(&l, &r, &crate::ops::JoinOptions::inner(0, 0), env)?;
+                groupby_prepartitioned(&j, &[0], &[AggSpec::new(1, AggFun::Count)], env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        // a key must appear on exactly one rank (otherwise the shuffle
+        // elision would double-count groups)
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &out {
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                assert!(seen.insert(k), "group {k} split across ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn display_labels() {
+        assert_eq!(GroupbyStrategy::TwoPhase.to_string(), "two-phase");
+        assert_eq!(GroupbyStrategy::ShuffleFirst.to_string(), "shuffle-first");
+        assert_eq!(GroupbyStrategy::default(), GroupbyStrategy::TwoPhase);
+    }
+}

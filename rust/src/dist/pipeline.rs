@@ -1,0 +1,186 @@
+//! The paper's Fig 9 composite workload, `join → groupby → sort →
+//! add_scalar`, executed as one distributed pipeline with per-stage phase
+//! timings (the breakdown the paper's pipeline experiment reports).
+//!
+//! The stages chain through the partitioning invariants: the join leaves
+//! both sides co-partitioned on the key, so the groupby elides its
+//! shuffle ([`super::groupby_prepartitioned`]); the sample sort then
+//! re-ranges the (much smaller) aggregate table; `add_scalar` is purely
+//! local.
+
+use super::{groupby_prepartitioned, join, sort};
+use crate::error::Result;
+use crate::executor::CylonEnv;
+use crate::metrics::{Phase, PhaseTimers};
+use crate::ops::{self, AggFun, AggSpec, JoinOptions, SortOptions};
+use crate::table::Table;
+use std::time::Duration;
+
+/// Phase timers attributed to one pipeline stage (delta of the actor's
+/// timers across the stage, communication included).
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    /// Stage label (`join`, `groupby`, `sort`, `add_scalar`).
+    pub name: &'static str,
+    /// Compute / auxiliary / communication spent inside the stage.
+    pub timers: PhaseTimers,
+}
+
+/// Result of [`pipeline`]: this rank's output partition plus the
+/// per-stage comm/compute breakdown.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// This rank's partition of the final (globally sorted) table.
+    pub table: Table,
+    /// Per-stage phase timings, in execution order.
+    pub stages: Vec<StageTiming>,
+}
+
+impl PipelineReport {
+    /// Timers summed across all stages.
+    pub fn total(&self) -> PhaseTimers {
+        let mut t = PhaseTimers::new();
+        for s in &self.stages {
+            t.merge(&s.timers);
+        }
+        t
+    }
+
+    /// Total communication time across stages.
+    pub fn comm_time(&self) -> Duration {
+        self.total().get(Phase::Communication)
+    }
+
+    /// Total core-compute time across stages.
+    pub fn compute_time(&self) -> Duration {
+        self.total().get(Phase::Compute)
+    }
+
+    /// One-line per-stage report:
+    /// `join[compute=… comm=…] groupby[…] sort[…] add_scalar[…]`.
+    pub fn report(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms]",
+                    s.name,
+                    s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
+                    s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
+                    s.timers.get(Phase::Communication).as_secs_f64() * 1e3,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Run the benchmark pipeline on this rank's partitions:
+/// inner-join `left ⋈ right` on column 0, group the result by the key
+/// with `sum(col 1)` and `sum(col 3)`, globally sort by the key, then add
+/// `scalar` to the first aggregate column. Matches the serial reference
+/// `ops::join → ops::groupby → ops::sort → ops::add_scalar` up to row
+/// placement.
+pub fn pipeline(
+    left: &Table,
+    right: &Table,
+    scalar: f64,
+    env: &CylonEnv,
+) -> Result<PipelineReport> {
+    let mut stages = Vec::with_capacity(4);
+    let mut mark = env.metrics_snapshot();
+
+    let joined = join(left, right, &JoinOptions::inner(0, 0), env)?;
+    cut(&mut stages, "join", &mut mark, env);
+
+    // join co-partitioned the rows on column 0 — zero-comm groupby
+    let grouped = groupby_prepartitioned(
+        &joined,
+        &[0],
+        &[AggSpec::new(1, AggFun::Sum), AggSpec::new(3, AggFun::Sum)],
+        env,
+    )?;
+    cut(&mut stages, "groupby", &mut mark, env);
+
+    let sorted = sort(&grouped, &SortOptions::by(0), env)?;
+    cut(&mut stages, "sort", &mut mark, env);
+
+    let table = env.time(Phase::Compute, || ops::add_scalar(&sorted, 1, scalar))?;
+    cut(&mut stages, "add_scalar", &mut mark, env);
+
+    Ok(PipelineReport { table, stages })
+}
+
+/// Close a stage: attribute the timer delta since `mark` to `name`.
+fn cut(stages: &mut Vec<StageTiming>, name: &'static str, mark: &mut PhaseTimers, env: &CylonEnv) {
+    let now = env.metrics_snapshot();
+    stages.push(StageTiming {
+        name,
+        timers: now.saturating_diff(mark),
+    });
+    *mark = now;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+
+    #[test]
+    fn report_has_nonzero_comm_and_compute_phases() {
+        let p = 2;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let l = datagen::partition_for_rank(801, 4000, 0.9, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(802, 4000, 0.9, env.rank(), env.world_size());
+                pipeline(&l, &r, 1.5, env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        for rep in &out {
+            assert_eq!(rep.stages.len(), 4);
+            assert!(rep.comm_time() > Duration::ZERO, "no comm recorded");
+            assert!(rep.compute_time() > Duration::ZERO, "no compute recorded");
+            assert!(rep.report().contains("join["));
+        }
+    }
+
+    #[test]
+    fn matches_composed_local_reference() {
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let l = datagen::partition_for_rank(803, 3000, 0.9, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(804, 3000, 0.9, env.rank(), env.world_size());
+                pipeline(&l, &r, 5.0, env).map(|rep| rep.table)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let whole = |seed: u64| {
+            let parts: Vec<Table> = (0..p)
+                .map(|r| datagen::partition_for_rank(seed, 3000, 0.9, r, p))
+                .collect();
+            Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+        };
+        let j = ops::join(&whole(803), &whole(804), &JoinOptions::inner(0, 0)).unwrap();
+        let g = ops::groupby(
+            &j,
+            &[0],
+            &[AggSpec::new(1, AggFun::Sum), AggSpec::new(3, AggFun::Sum)],
+        )
+        .unwrap();
+        let s = ops::sort(&g, &SortOptions::by(0)).unwrap();
+        let reference = ops::add_scalar(&s, 1, 5.0).unwrap();
+        let all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(all.num_rows(), reference.num_rows());
+        // globally sorted: the rank-ordered concatenation is ordered
+        assert!(ops::sort::is_sorted(&all, &SortOptions::by(0)));
+    }
+}

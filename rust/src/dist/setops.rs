@@ -1,0 +1,132 @@
+//! Distributed whole-row set operators (paper Fig 3 operator families):
+//! distinct, union, intersect, difference.
+//!
+//! All of them reduce to one invariant: hash-shuffling on *every* column
+//! co-locates identical rows, after which the local kernels are exact.
+//! A local pre-distinct runs before each shuffle to shrink the payload
+//! (the same partial-then-exchange idea as the two-phase groupby).
+
+use super::shuffle_by_key;
+use crate::error::{Error, Result};
+use crate::executor::CylonEnv;
+use crate::metrics::Phase;
+use crate::ops::{self, distinct::distinct_with_hasher, setops};
+use crate::table::Table;
+
+fn all_cols(t: &Table) -> Result<Vec<usize>> {
+    if t.num_columns() == 0 {
+        return Err(Error::invalid("set operator on zero-column table"));
+    }
+    Ok((0..t.num_columns()).collect())
+}
+
+/// Local whole-row distinct, then shuffle the survivors by whole-row hash
+/// and dedupe again (duplicates from different ranks meet on one rank).
+fn distinct_exchange(t: &Table, env: &CylonEnv) -> Result<Table> {
+    let cols = all_cols(t)?;
+    let local = env.time(Phase::Compute, || {
+        distinct_with_hasher(t, &cols, env.hasher())
+    })?;
+    let shuffled = shuffle_by_key(&local, &cols, env)?;
+    env.time(Phase::Compute, || {
+        distinct_with_hasher(&shuffled, &cols, env.hasher())
+    })
+}
+
+/// Distributed whole-row distinct.
+pub fn distinct(t: &Table, env: &CylonEnv) -> Result<Table> {
+    distinct_exchange(t, env)
+}
+
+/// Distributed set union: every distinct row of `a ∪ b` exactly once.
+pub fn union_distinct(a: &Table, b: &Table, env: &CylonEnv) -> Result<Table> {
+    let u = env.time(Phase::Auxiliary, || ops::union_all(a, b))?;
+    distinct_exchange(&u, env)
+}
+
+/// Distributed intersect: distinct rows of `a` that also appear in `b`.
+pub fn intersect(a: &Table, b: &Table, env: &CylonEnv) -> Result<Table> {
+    a.schema().check_compatible(b.schema())?;
+    let (sa, sb) = co_shuffle(a, b, env)?;
+    env.time(Phase::Compute, || {
+        setops::intersect_with_hasher(&sa, &sb, env.hasher())
+    })
+}
+
+/// Distributed difference (SQL `EXCEPT`): distinct rows of `a` absent
+/// from `b`.
+pub fn difference(a: &Table, b: &Table, env: &CylonEnv) -> Result<Table> {
+    a.schema().check_compatible(b.schema())?;
+    let (sa, sb) = co_shuffle(a, b, env)?;
+    env.time(Phase::Compute, || {
+        setops::difference_with_hasher(&sa, &sb, env.hasher())
+    })
+}
+
+/// Pre-distinct both sides locally, then co-shuffle by whole-row hash so
+/// identical rows of `a` and `b` land on the same rank.
+fn co_shuffle(a: &Table, b: &Table, env: &CylonEnv) -> Result<(Table, Table)> {
+    let cols = all_cols(a)?;
+    let la = env.time(Phase::Compute, || {
+        distinct_with_hasher(a, &cols, env.hasher())
+    })?;
+    let lb = env.time(Phase::Compute, || {
+        distinct_with_hasher(b, &cols, env.hasher())
+    })?;
+    let sa = shuffle_by_key(&la, &cols, env)?;
+    let sb = shuffle_by_key(&lb, &cols, env)?;
+    Ok((sa, sb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+
+    fn whole(seed: u64, rows: usize, p: usize) -> Table {
+        let parts: Vec<Table> = (0..p)
+            .map(|r| {
+                datagen::partition_for_rank(seed, rows, 0.05, r, p)
+                    .project(&[0])
+                    .unwrap()
+            })
+            .collect();
+        Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn distinct_and_setops_match_local() {
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let a = datagen::partition_for_rank(601, 1500, 0.05, env.rank(), env.world_size())
+                    .project(&[0])?;
+                let b = datagen::partition_for_rank(602, 1500, 0.05, env.rank(), env.world_size())
+                    .project(&[0])?;
+                let d = distinct(&a, env)?;
+                let i = intersect(&a, &b, env)?;
+                let x = difference(&a, &b, env)?;
+                let u = union_distinct(&a, &b, env)?;
+                Ok((d, i, x, u))
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let (a, b) = (whole(601, 1500, p), whole(602, 1500, p));
+        let count = |f: fn(&(Table, Table, Table, Table)) -> &Table| -> usize {
+            out.iter().map(|o| f(o).num_rows()).sum()
+        };
+        assert_eq!(count(|o| &o.0), ops::distinct(&a, &[0]).unwrap().num_rows());
+        assert_eq!(count(|o| &o.1), ops::intersect(&a, &b).unwrap().num_rows());
+        assert_eq!(count(|o| &o.2), ops::difference(&a, &b).unwrap().num_rows());
+        assert_eq!(
+            count(|o| &o.3),
+            ops::union_distinct(&a, &b).unwrap().num_rows()
+        );
+        // algebra: intersect + difference partition distinct(a)
+        assert_eq!(count(|o| &o.1) + count(|o| &o.2), count(|o| &o.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! Distributed sample sort (paper Fig 8, third panel): oversample locally
+//! → allgather the sample → derive `p − 1` splitters → range-partition →
+//! all-to-all → local sort. After the exchange, rank `i` holds exactly
+//! the rows between splitters `i − 1` and `i`, so concatenating the rank
+//! outputs in rank order yields the globally sorted table.
+
+use crate::error::{Error, Result};
+use crate::executor::CylonEnv;
+use crate::metrics::Phase;
+use crate::ops::{self, SortOptions};
+use crate::table::Table;
+
+/// Rows each rank contributes to the splitter sample per peer (the
+/// oversampling factor; higher = tighter balance, larger allgather).
+const SAMPLE_PER_RANK: usize = 32;
+
+/// Distributed sort. Each rank passes its partition and receives its
+/// globally-ordered slice, locally sorted under `opts` (multi-key,
+/// per-key direction, nulls-first ascending — same semantics as
+/// [`ops::sort`]).
+pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
+    if opts.keys.is_empty() {
+        return Err(Error::invalid("dist::sort: empty key list"));
+    }
+    for k in &opts.keys {
+        t.column(k.col)?;
+    }
+    let p = env.world_size();
+    if p == 1 {
+        return env.time(Phase::Compute, || ops::sort(t, opts));
+    }
+    let key_cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
+    let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
+
+    // 1. Oversampled local sample (auxiliary), gathered everywhere.
+    let sample = env.time(Phase::Auxiliary, || {
+        ops::sample_rows(t, (SAMPLE_PER_RANK * p).max(64), 0x5a3d ^ env.rank() as u64)
+    });
+    let global_sample = env.comm().allgather(&sample)?;
+
+    // 2. Splitters: sort the global sample under the *real* options (so
+    // descending / multi-key orders produce correctly-directed ranges)
+    // and take p − 1 evenly spaced key rows.
+    let splitters = env.time(Phase::Auxiliary, || -> Result<Table> {
+        let idx = ops::sort::sort_indices(&global_sample, opts)?;
+        let sorted = global_sample.gather(&idx).project(&key_cols)?;
+        let n = sorted.num_rows();
+        if n == 0 {
+            return Ok(sorted.slice(0, 0));
+        }
+        let picks: Vec<u32> = (1..p).map(|i| ((i * n) / p).min(n - 1) as u32).collect();
+        Ok(sorted.gather(&picks))
+    })?;
+
+    // 3. Range partition under the directed order (splitter column i
+    // holds sort key i; ties always land in the same bucket, so equal
+    // rows never straddle a rank boundary inconsistently). Pad to p
+    // buckets when the sample was too small to produce p − 1 splitters.
+    let splitter_cols: Vec<usize> = (0..key_cols.len()).collect();
+    let mut parts = env.time(Phase::Auxiliary, || {
+        ops::partition_by_range_directed(t, &key_cols, &splitters, &splitter_cols, &dirs)
+    })?;
+    while parts.len() < p {
+        parts.push(t.slice(0, 0));
+    }
+
+    // 4. Exchange, then the core local sort on the received slice.
+    let mine = env.comm().shuffle(parts)?;
+    env.time(Phase::Compute, || ops::sort(&mine, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+    use crate::ops::SortKey;
+
+    #[test]
+    fn global_order_and_conservation() {
+        let p = 4;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let t = datagen::partition_for_rank(501, 4000, 0.9, env.rank(), env.world_size());
+                sort(&t, &SortOptions::by(0), env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let total: usize = out.iter().map(|t| t.num_rows()).sum();
+        assert_eq!(total, 4000);
+        let mut last = i64::MIN;
+        for t in &out {
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                assert!(k >= last, "global order violated");
+                last = k;
+            }
+        }
+    }
+
+    #[test]
+    fn multi_key_mixed_directions() {
+        let p = 3;
+        let opts = SortOptions {
+            keys: vec![SortKey::asc(0), SortKey::desc(1)],
+            stable: false,
+        };
+        let o2 = opts.clone();
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(move |env| {
+                let t = datagen::partition_for_rank(502, 3000, 0.05, env.rank(), env.world_size());
+                sort(&t, &o2, env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert!(ops::sort::is_sorted(&all, &opts), "concatenation not globally sorted");
+        assert_eq!(all.num_rows(), 3000);
+    }
+
+    #[test]
+    fn empty_partitions_are_fine() {
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                // only rank 0 holds data
+                let t = if env.rank() == 0 {
+                    datagen::uniform_table(7, 500, 0.9)
+                } else {
+                    datagen::uniform_table(7, 500, 0.9).slice(0, 0)
+                };
+                sort(&t, &SortOptions::by(0), env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.iter().map(|t| t.num_rows()).sum::<usize>(), 500);
+        let mut last = i64::MIN;
+        for t in &out {
+            for &k in t.column(0).unwrap().i64_values().unwrap() {
+                assert!(k >= last);
+                last = k;
+            }
+        }
+    }
+}

@@ -4,60 +4,88 @@
 //! are grouped by subsystem so callers (and tests) can match on failure
 //! classes — e.g. [`Error::Comm`] for transport faults vs [`Error::Schema`]
 //! for user errors.
+//!
+//! `Display`/`Error` are hand-implemented (no `thiserror`): the tier-1
+//! build must work with zero external dependencies in offline
+//! environments.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors produced by CylonFlow-RS subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Schema mismatch or invalid column reference in an operator call.
-    #[error("schema error: {0}")]
     Schema(String),
 
     /// Type mismatch between a requested operation and column dtype.
-    #[error("type error: {0}")]
     Type(String),
 
     /// Malformed argument (out-of-range index, empty key list, ...).
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Communication failure (socket, channel closed, rendezvous timeout).
-    #[error("communication error: {0}")]
     Comm(String),
 
     /// Wire-format (de)serialization failure.
-    #[error("serialization error: {0}")]
     Serde(String),
 
     /// Executor/cluster lifecycle failure (worker panic, double-reserve...).
-    #[error("executor error: {0}")]
     Executor(String),
 
     /// Object store failure (missing key, timeout, repartition mismatch).
-    #[error("store error: {0}")]
     Store(String),
 
     /// AMT scheduler failure (cycle in task graph, lost task...).
-    #[error("scheduler error: {0}")]
     Scheduler(String),
 
-    /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("pjrt runtime error: {0}")]
+    /// PJRT runtime failure (artifact missing, compile/execute error, or
+    /// the `pjrt` feature being disabled).
     Runtime(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors bubbled up from the `xla` crate.
-    #[error("xla error: {0}")]
+    /// Errors bubbled up from the `xla` crate (`pjrt` feature builds).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Schema(m) => write!(f, "schema error: {m}"),
+            Error::Type(m) => write!(f, "type error: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Comm(m) => write!(f, "communication error: {m}"),
+            Error::Serde(m) => write!(f, "serialization error: {m}"),
+            Error::Executor(m) => write!(f, "executor error: {m}"),
+            Error::Store(m) => write!(f, "store error: {m}"),
+            Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::Runtime(m) => write!(f, "pjrt runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -76,5 +104,20 @@ impl Error {
     /// Helper: invalid-argument error with formatted message.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidArgument(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_subsystem_prefixes() {
+        assert_eq!(Error::schema("x").to_string(), "schema error: x");
+        assert_eq!(Error::invalid("y").to_string(), "invalid argument: y");
+        assert_eq!(Error::comm("z").to_string(), "communication error: z");
+        let io: Error = std::io::Error::other("boom").into();
+        assert!(io.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&io).is_some());
     }
 }

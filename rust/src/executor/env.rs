@@ -59,6 +59,16 @@ impl CylonEnv {
         self.timers.borrow_mut().time(phase, f)
     }
 
+    /// Non-destructive snapshot of this actor's accumulated metrics
+    /// (local phases plus communication). [`crate::dist::pipeline()`] diffs
+    /// successive snapshots to attribute time to stages without stealing
+    /// the app-level report that [`CylonEnv::take_metrics`] consumes.
+    pub fn metrics_snapshot(&self) -> PhaseTimers {
+        let mut snap = self.timers.borrow().clone();
+        snap.merge(&self.comm.peek_timers());
+        snap
+    }
+
     /// Snapshot and reset this actor's metrics, folding in the
     /// communication timers.
     pub fn take_metrics(&self) -> PhaseTimers {

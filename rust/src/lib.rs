@@ -10,7 +10,10 @@
 //! The compute hot-spot (64-bit key hashing used by every key-based
 //! operator) is authored in JAX/Pallas, AOT-lowered to HLO text at build
 //! time (`make artifacts`), and executed from Rust through PJRT — Python is
-//! never on the request path. See `DESIGN.md` for the full system inventory.
+//! never on the request path. The PJRT path is behind the `pjrt` cargo
+//! feature (it needs the `xla` crate); the default build is
+//! dependency-free and uses the bit-identical native kernels. See
+//! `DESIGN.md` for the full system inventory.
 //!
 //! ## Layer map
 //!
@@ -24,7 +27,11 @@
 //!   Gloo/UCX-analog) backends and selectable collective algorithms.
 //! - [`executor`] — the paper's *stateful pseudo-BSP environment*: clusters,
 //!   placement groups (gang scheduling), `CylonExecutor` / `CylonEnv`.
-//! - [`dist`] — distributed DDF operators composed from `ops` × `comm`.
+//! - [`dist`] — distributed DDF operators composed from `ops` × `comm`:
+//!   shuffle join, groupby (shuffle-first / two-phase partial
+//!   aggregation / pre-partitioned), sample sort, set operators,
+//!   `describe`, `rebalance`, and the Fig 9 `pipeline` with per-stage
+//!   comm/compute timings.
 //! - [`amt`] — AMT baseline (central scheduler + object-store shuffle).
 //! - [`actor_mr`] — actor map-reduce baseline.
 //! - [`store`] — object store + `CylonStore` for inter-app data sharing.
@@ -38,22 +45,33 @@
 //!
 //! ## Quickstart
 //!
+//! Gang-schedule four stateful actors, then run a distributed join whose
+//! output feeds a zero-communication groupby (the join already
+//! co-partitioned the rows on the key):
+//!
 //! ```no_run
 //! use cylonflow::prelude::*;
 //!
 //! let cluster = Cluster::local(4).unwrap();
 //! let exec = CylonExecutor::new(&cluster, 4).unwrap();
-//! let out = exec
+//! let (out, breakdown) = exec
 //!     .run(|env| {
 //!         let df = datagen::uniform_table(env.rank() as u64, 1_000, 0.9);
 //!         let other = datagen::uniform_table(100 + env.rank() as u64, 1_000, 0.9);
-//!         dist::join(&df, &other, &JoinOptions::inner(0, 0), env)
+//!         let joined = dist::join(&df, &other, &JoinOptions::inner(0, 0), env)?;
+//!         dist::groupby_prepartitioned(
+//!             &joined,
+//!             &[0],
+//!             &[AggSpec::new(1, dist::AggFun::Sum)],
+//!             env,
+//!         )
 //!     })
 //!     .unwrap()
-//!     .wait()
+//!     .wait_with_metrics()
 //!     .unwrap();
-//! println!("partition row counts: {:?}",
+//! println!("partition group counts: {:?}",
 //!          out.iter().map(|t| t.num_rows()).collect::<Vec<_>>());
+//! println!("comm/compute breakdown: {}", breakdown.report());
 //! ```
 
 pub mod actor_mr;

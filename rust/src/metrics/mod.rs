@@ -77,6 +77,19 @@ impl PhaseTimers {
     pub fn reset(&mut self) {
         self.timers.clear();
     }
+
+    /// Per-phase `self − earlier`, clamped at zero — used to attribute a
+    /// monotonically accumulating timer snapshot to one pipeline stage.
+    pub fn saturating_diff(&self, earlier: &PhaseTimers) -> PhaseTimers {
+        let mut out = PhaseTimers::new();
+        for (p, d) in &self.timers {
+            let before = earlier.get(*p);
+            if *d > before {
+                out.add(*p, *d - before);
+            }
+        }
+        out
+    }
 }
 
 /// Aggregated comm/compute breakdown across a gang of workers.
@@ -163,6 +176,22 @@ mod tests {
         assert!((br.comm_fraction() - 0.25).abs() < 1e-9);
         assert_eq!(br.max(Phase::Compute), Duration::from_millis(30));
         assert!(br.report().contains("comm 25%"));
+    }
+
+    #[test]
+    fn saturating_diff_attributes_deltas() {
+        let mut before = PhaseTimers::new();
+        before.add(Phase::Compute, Duration::from_millis(10));
+        before.add(Phase::Communication, Duration::from_millis(4));
+        let mut after = before.clone();
+        after.add(Phase::Compute, Duration::from_millis(5));
+        after.add(Phase::Auxiliary, Duration::from_millis(2));
+        let d = after.saturating_diff(&before);
+        assert_eq!(d.get(Phase::Compute), Duration::from_millis(5));
+        assert_eq!(d.get(Phase::Auxiliary), Duration::from_millis(2));
+        assert_eq!(d.get(Phase::Communication), Duration::ZERO);
+        // clamped: diff against a later snapshot is zero, not negative
+        assert_eq!(before.saturating_diff(&after).total(), Duration::ZERO);
     }
 
     #[test]

@@ -25,11 +25,11 @@ pub use arith::{binary_op, compare, with_binary, BinOp, CmpOp};
 pub use describe::{describe, describe_table, ColumnStats};
 pub use distinct::distinct;
 pub use filter::{filter, filter_by_column};
-pub use groupby::{groupby, AggFun, AggSpec};
-pub use join::{join, JoinAlgo, JoinOptions, JoinType};
+pub use groupby::{groupby, groupby_with_hasher, AggFun, AggSpec};
+pub use join::{join, join_with_hasher, JoinAlgo, JoinOptions, JoinType};
 pub use kernels::{KeyHasher, NativeHasher};
 pub use merge::merge_sorted;
-pub use partition::{partition_by_hash, partition_by_range};
+pub use partition::{partition_by_hash, partition_by_range, partition_by_range_directed};
 pub use sample::{sample_rows, splitters_from_sample};
 pub use scalar::{add_scalar, mul_scalar};
 pub use select::{drop_columns, head, limit, rename, select, tail};

@@ -62,6 +62,37 @@ pub fn partition_by_range(
     splitters: &Table,
     splitter_cols: &[usize],
 ) -> Result<Vec<Table>> {
+    partition_by_range_directed(t, key_cols, splitters, splitter_cols, &vec![true; key_cols.len()])
+}
+
+/// [`partition_by_range`] with a per-key sort direction (`dirs[i]` true =
+/// ascending): "≥ the row key" is evaluated under the directed order, so
+/// descending / mixed-direction distributed sorts route correctly.
+/// `dirs.len()` must equal `key_cols.len()`.
+pub fn partition_by_range_directed(
+    t: &Table,
+    key_cols: &[usize],
+    splitters: &Table,
+    splitter_cols: &[usize],
+    dirs: &[bool],
+) -> Result<Vec<Table>> {
+    if dirs.len() != key_cols.len() || splitter_cols.len() != key_cols.len() {
+        return Err(Error::invalid(
+            "partition_by_range: key/splitter/direction lists must have equal length",
+        ));
+    }
+    let cmp_directed = |row: usize, srow: usize| -> std::cmp::Ordering {
+        for ((&kc, &sc), &asc) in key_cols.iter().zip(splitter_cols).zip(dirs) {
+            let mut ord = rows_cmp(t, row, &[kc], splitters, srow, &[sc]);
+            if !asc {
+                ord = ord.reverse();
+            }
+            if ord != std::cmp::Ordering::Equal {
+                return ord;
+            }
+        }
+        std::cmp::Ordering::Equal
+    };
     let p = splitters.num_rows() + 1;
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
     for row in 0..t.num_rows() {
@@ -69,9 +100,9 @@ pub fn partition_by_range(
         let (mut lo, mut hi) = (0usize, splitters.num_rows());
         while lo < hi {
             let mid = (lo + hi) / 2;
-            match rows_cmp(t, row, key_cols, splitters, mid, splitter_cols) {
-                std::cmp::Ordering::Less | std::cmp::Ordering::Equal => hi = mid,
+            match cmp_directed(row, mid) {
                 std::cmp::Ordering::Greater => lo = mid + 1,
+                _ => hi = mid,
             }
         }
         buckets[lo].push(row as u32);
@@ -150,6 +181,23 @@ mod tests {
         assert_eq!(parts[0].column(0).unwrap().i64_values().unwrap(), &[5, 10]); // ≤10
         assert_eq!(parts[1].column(0).unwrap().i64_values().unwrap(), &[15, 20]); // ≤20
         assert_eq!(parts[2].column(0).unwrap().i64_values().unwrap(), &[25]); // >20
+    }
+
+    #[test]
+    fn range_partition_directed_descending() {
+        let tab = Table::from_columns(vec![("k", Column::from_i64(vec![5, 15, 25, 10, 20]))])
+            .unwrap();
+        // splitters sorted under the DESCENDING order
+        let splitters =
+            Table::from_columns(vec![("k", Column::from_i64(vec![20, 10]))]).unwrap();
+        let parts =
+            partition_by_range_directed(&tab, &[0], &splitters, &[0], &[false]).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].column(0).unwrap().i64_values().unwrap(), &[25, 20]); // ≥20
+        assert_eq!(parts[1].column(0).unwrap().i64_values().unwrap(), &[15, 10]); // ≥10
+        assert_eq!(parts[2].column(0).unwrap().i64_values().unwrap(), &[5]); // rest
+        // direction-list length is validated
+        assert!(partition_by_range_directed(&tab, &[0], &splitters, &[0], &[]).is_err());
     }
 
     #[test]

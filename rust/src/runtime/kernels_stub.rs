@@ -1,0 +1,76 @@
+//! Stub kernel cache for builds without the `pjrt` feature (no `xla`
+//! crate available). Keeps the whole [`crate::runtime`] surface
+//! compiling; every execution entrypoint reports the PJRT path
+//! unavailable, and `artifacts_present` answers `false` so the `Auto`
+//! hash path (and the artifact-gated tests/benches) fall back to the
+//! bit-identical native implementations.
+
+use crate::error::{Error, Result};
+
+/// Always false without the `pjrt` feature: artifacts may exist on disk
+/// but this build cannot execute them.
+pub fn artifacts_present(_dir: &str) -> bool {
+    false
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT path unavailable: crate built without the `pjrt` feature (see rust/Cargo.toml)"
+            .into(),
+    )
+}
+
+/// Stand-in for the per-thread compiled kernel set.
+pub struct Kernels {
+    _private: (),
+}
+
+impl Kernels {
+    /// Always errors: no PJRT client in this build.
+    pub fn load(_dir: &str) -> Result<Kernels> {
+        Err(unavailable())
+    }
+
+    /// Always errors: no PJRT client in this build.
+    pub fn with<T>(_dir: &str, _f: impl FnOnce(&mut Kernels) -> Result<T>) -> Result<T> {
+        Err(unavailable())
+    }
+
+    /// No devices in the stub.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Always errors: no PJRT client in this build.
+    pub fn hash64(&mut self, _keys: &[i64], _out: &mut [i64]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    /// Always errors: no PJRT client in this build.
+    pub fn add_scalar_f64(&mut self, _xs: &[f64], _c: f64, _out: &mut [f64]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    /// Always errors: no PJRT client in this build.
+    pub fn colagg_f64(&mut self, _xs: &[f64]) -> Result<(f64, f64, f64)> {
+        Err(unavailable())
+    }
+
+    /// Always errors: no PJRT client in this build.
+    pub fn partition_hist(&mut self, _keys: &[i64]) -> Result<Vec<i64>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!artifacts_present("/anything"));
+        assert!(Kernels::load("/anything").is_err());
+        let r: Result<()> = Kernels::with("/anything", |_| Ok(()));
+        assert!(matches!(r, Err(Error::Runtime(_))));
+    }
+}

@@ -18,6 +18,14 @@
 //! keep-expensive-state-alive pattern as the communication context.
 
 mod hasher;
+// The real PJRT bridge needs the `xla` crate; offline/dependency-free
+// builds get a stub with the same surface that reports the path
+// unavailable (`make_hasher` then falls back to the bit-identical native
+// implementation).
+#[cfg(feature = "pjrt")]
+mod kernels;
+#[cfg(not(feature = "pjrt"))]
+#[path = "kernels_stub.rs"]
 mod kernels;
 
 pub use hasher::{make_hasher, PjrtHasher};

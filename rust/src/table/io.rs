@@ -11,15 +11,17 @@ use std::path::Path;
 
 /// Read a headered CSV file with an explicit schema.
 ///
-/// Empty fields parse as nulls. No quoting/escaping — the datasets this
-/// repo generates never contain commas in strings.
+/// Empty fields parse as nulls. Tolerates CRLF line endings (the `\r` is
+/// stripped, so the last field of each row parses cleanly) and a trailing
+/// newline. No quoting/escaping — the datasets this repo generates never
+/// contain commas in strings.
 pub fn read_csv(path: impl AsRef<Path>, schema: &Schema) -> Result<Table> {
     let f = std::fs::File::open(path.as_ref())?;
     let mut lines = BufReader::new(f).lines();
     let header = lines
         .next()
         .ok_or_else(|| Error::Serde("empty csv".into()))??;
-    let names: Vec<&str> = header.split(',').collect();
+    let names: Vec<&str> = header.trim_end_matches('\r').split(',').collect();
     if names.len() != schema.len() {
         return Err(Error::schema(format!(
             "csv has {} columns, schema {}",
@@ -34,6 +36,7 @@ pub fn read_csv(path: impl AsRef<Path>, schema: &Schema) -> Result<Table> {
         .collect();
     for line in lines {
         let line = line?;
+        let line = line.strip_suffix('\r').unwrap_or(line.as_str());
         if line.is_empty() {
             continue;
         }
@@ -113,6 +116,33 @@ mod tests {
         let back = read_csv(&p, t.schema()).unwrap();
         assert_eq!(back.num_rows(), 2);
         assert_eq!(back.value(1, 2).unwrap(), Value::Utf8("world".into()));
+    }
+
+    #[test]
+    fn csv_crlf_and_trailing_newline() {
+        let dir = std::env::temp_dir().join("cylonflow_csv_crlf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("crlf.csv");
+        // CRLF everywhere + trailing newline: the last field of every row
+        // must parse (numeric "2.5\r" used to fail, string "b\r" used to
+        // keep the carriage return)
+        std::fs::write(&p, "k,v,s\r\n1,2.5,a\r\n,3.5,b\r\n").unwrap();
+        let schema = Schema::from_pairs(&[
+            ("k", DType::Int64),
+            ("v", DType::Float64),
+            ("s", DType::Utf8),
+        ]);
+        let t = read_csv(&p, &schema).unwrap();
+        assert_eq!(t.num_rows(), 2);
+        assert_eq!(t.value(0, 1).unwrap(), Value::Float64(2.5));
+        assert_eq!(t.value(0, 2).unwrap(), Value::Utf8("a".into()));
+        assert_eq!(t.value(1, 0).unwrap(), Value::Null);
+        assert_eq!(t.value(1, 2).unwrap(), Value::Utf8("b".into()));
+        // CRLF null in the LAST column: "\r"-only field reads as null
+        let p2 = dir.join("crlf_null_last.csv");
+        std::fs::write(&p2, "k,v,s\r\n1,2.5,\r\n").unwrap();
+        let t2 = read_csv(&p2, &schema).unwrap();
+        assert_eq!(t2.value(0, 2).unwrap(), Value::Null);
     }
 
     #[test]

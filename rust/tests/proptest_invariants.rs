@@ -3,6 +3,8 @@
 //! equivalences, wire-format round-trips, store repartitioning.
 
 use cylonflow::column::Column;
+use cylonflow::dist;
+use cylonflow::executor::{Cluster, CylonExecutor};
 use cylonflow::ops::{self, AggSpec, JoinAlgo, JoinOptions, NativeHasher, SortOptions};
 use cylonflow::proptest_lite::{run_prop, Gen};
 use cylonflow::table::{table_from_bytes, table_to_bytes, Table};
@@ -436,6 +438,112 @@ fn prop_ipc_file_roundtrip() {
         write_table_file(&t, &p).unwrap();
         assert_eq!(read_table_file(&p).unwrap(), t);
         let _ = std::fs::remove_file(&p);
+    });
+}
+
+// ---- distribution invariance: dist::* over N partitions must equal the
+// ---- single-partition ops::* result on the concatenated table ---------
+
+/// Gang driver: run `f` on `p` ranks over an arbitrary (NOT key-aware)
+/// row-split of the inputs, returning per-rank outputs.
+fn run_gang_over_split<T, F>(p: usize, parts: Vec<Vec<Table>>, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(&[Table], &cylonflow::executor::CylonEnv) -> cylonflow::Result<T>
+        + Send
+        + Sync
+        + 'static,
+{
+    let c = Cluster::local(p).unwrap();
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    exec.run(move |env| {
+        let mine: Vec<Table> = parts.iter().map(|t| t[env.rank()].clone()).collect();
+        f(&mine, env)
+    })
+    .unwrap()
+    .wait()
+    .unwrap()
+}
+
+#[test]
+fn prop_dist_join_invariant_under_partitioning() {
+    run_prop("dist::join over N partitions ≡ ops::join on the whole", 8, |g| {
+        let l = random_table(g);
+        let r = random_table(g);
+        let p = g.usize_in(1, 4);
+        let opts = JoinOptions::inner(3, 3);
+        let reference = ops::join(&l, &r, &opts).unwrap();
+        let out = run_gang_over_split(
+            p,
+            vec![l.split_even(p), r.split_even(p)],
+            move |mine, env| dist::join(&mine[0], &mine[1], &JoinOptions::inner(3, 3), env),
+        );
+        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
+    });
+}
+
+#[test]
+fn prop_dist_groupby_invariant_under_partitioning() {
+    run_prop(
+        "dist::groupby (both strategies) ≡ ops::groupby on the whole",
+        6,
+        |g| {
+            let t = random_table(g);
+            let p = g.usize_in(1, 4);
+            let aggs = [
+                AggSpec::new(1, ops::AggFun::Sum),
+                AggSpec::new(1, ops::AggFun::Count),
+                AggSpec::new(1, ops::AggFun::Min),
+                AggSpec::new(1, ops::AggFun::Max),
+            ];
+            let reference = ops::groupby(&t, &[0], &aggs).unwrap();
+            for strategy in [dist::GroupbyStrategy::TwoPhase, dist::GroupbyStrategy::ShuffleFirst] {
+                let out = run_gang_over_split(
+                    p,
+                    vec![t.split_even(p)],
+                    move |mine, env| dist::groupby(&mine[0], &[0], &aggs, strategy, env),
+                );
+                let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+                assert_eq!(
+                    row_multiset(&dist_all),
+                    row_multiset(&reference),
+                    "strategy {strategy}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dist_sort_invariant_under_partitioning() {
+    run_prop("dist::sort ≡ ops::sort on the whole (order + multiset)", 6, |g| {
+        let t = random_table(g);
+        let p = g.usize_in(1, 4);
+        let out = run_gang_over_split(p, vec![t.split_even(p)], |mine, env| {
+            dist::sort(&mine[0], &SortOptions::by(0), env)
+        });
+        // rank-ordered concatenation is the globally sorted table
+        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&dist_all), row_multiset(&t), "row conservation");
+        assert!(
+            ops::sort::is_sorted(&dist_all, &SortOptions::by(0)),
+            "global order violated"
+        );
+    });
+}
+
+#[test]
+fn prop_dist_distinct_invariant_under_partitioning() {
+    run_prop("dist::distinct ≡ ops::distinct on the whole", 6, |g| {
+        let t = random_table(g).project(&[3]).unwrap();
+        let p = g.usize_in(1, 4);
+        let reference = ops::distinct(&t, &[0]).unwrap();
+        let out = run_gang_over_split(p, vec![t.split_even(p)], |mine, env| {
+            dist::distinct(&mine[0], env)
+        });
+        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
     });
 }
 
