@@ -42,7 +42,7 @@ fn main() -> Result<()> {
             let l = datagen::partition_for_rank(101, rows, card, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(102, rows, card, env.rank(), env.world_size());
             env.barrier()?; // exclude generation skew from the timing
-            dist::pipeline(&l, &r, 42.0, env)
+            dist::pipeline(l, r, 42.0, env)
         })?
         .wait_with_metrics()?;
     let cf_time = t0.elapsed().as_secs_f64();
@@ -82,8 +82,8 @@ fn main() -> Result<()> {
     );
 
     // ---- serial references ---------------------------------------------
-    let lall = Table::concat(&lparts.iter().collect::<Vec<_>>())?;
-    let rall = Table::concat(&rparts.iter().collect::<Vec<_>>())?;
+    let lall = Table::concat_owned(lparts)?;
+    let rall = Table::concat_owned(rparts)?;
     let t0 = Instant::now();
     let j = ops::join(&lall, &rall, &JoinOptions::inner(0, 0))?;
     let gb = ops::groupby(

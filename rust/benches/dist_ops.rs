@@ -57,7 +57,7 @@ fn main() {
             exec.run(move |env| {
                 let l = datagen::partition_for_rank(5, rows, 0.9, env.rank(), env.world_size());
                 let r = datagen::partition_for_rank(6, rows, 0.9, env.rank(), env.world_size());
-                dist::pipeline(&l, &r, 1.0, env).map(|rep| rep.table.num_rows())
+                dist::pipeline(l, r, 1.0, env).map(|rep| rep.table.num_rows())
             })
             .unwrap()
             .wait()

@@ -272,7 +272,7 @@ fn fig9(rows: usize) {
             let l = datagen::partition_for_rank(91, rows, CARD, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(92, rows, CARD, env.rank(), env.world_size());
             env.barrier()?;
-            dist::pipeline(&l, &r, 42.0, env).map(|rep| rep.table.num_rows())
+            dist::pipeline(l, r, 42.0, env).map(|rep| rep.table.num_rows())
         });
         let lparts = parts_for(91, rows, p);
         let rparts = parts_for(92, rows, p);

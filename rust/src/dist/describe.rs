@@ -121,7 +121,7 @@ mod tests {
         let parts: Vec<Table> = (0..p)
             .map(|r| datagen::partition_for_rank(701, 2400, 0.9, r, p))
             .collect();
-        let whole = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        let whole = Table::concat_owned(parts).unwrap();
         let reference = ops::describe(&whole).unwrap();
         for rank_stats in &out {
             assert_eq!(rank_stats.len(), reference.len());

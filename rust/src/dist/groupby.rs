@@ -195,7 +195,7 @@ mod tests {
         let parts: Vec<Table> = (0..p)
             .map(|r| datagen::partition_for_rank(seed, rows, card, r, p))
             .collect();
-        Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+        Table::concat_owned(parts).unwrap()
     }
 
     fn key_map(t: &Table, val_col: usize) -> BTreeMap<i64, crate::types::Value> {
@@ -228,7 +228,7 @@ mod tests {
             .unwrap()
             .wait()
             .unwrap();
-        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let dist_all = Table::concat_owned(out).unwrap();
         let reference = ops::groupby(&whole(401, 3000, 0.1, p), &[0], &aggs).unwrap();
         assert_eq!(dist_all.num_rows(), reference.num_rows());
         for v in 1..=aggs.len() {
@@ -255,7 +255,7 @@ mod tests {
                 .unwrap()
                 .wait()
                 .unwrap();
-            key_map(&Table::concat(&out.iter().collect::<Vec<_>>()).unwrap(), 1)
+            key_map(&Table::concat_owned(out).unwrap(), 1)
         };
         assert_eq!(run(GroupbyStrategy::TwoPhase), run(GroupbyStrategy::ShuffleFirst));
     }

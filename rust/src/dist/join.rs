@@ -12,18 +12,87 @@ use crate::executor::CylonEnv;
 use crate::metrics::Phase;
 use crate::ops::{self, JoinOptions};
 use crate::table::Table;
+use std::borrow::Cow;
+
+/// Which sides of a distributed join still need their key shuffle. The
+/// plan optimizer ([`crate::plan`]) passes anything other than
+/// [`ExchangeSides::Both`] when partitioning lineage proves a side is
+/// already hash-partitioned on exactly its join keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExchangeSides {
+    /// Shuffle both sides (no lineage information — the safe default).
+    #[default]
+    Both,
+    /// Shuffle only the left side; the right is already co-partitioned.
+    LeftOnly,
+    /// Shuffle only the right side; the left is already co-partitioned.
+    RightOnly,
+    /// Shuffle neither side — both are co-partitioned on the keys.
+    Neither,
+}
+
+impl ExchangeSides {
+    /// Does the left side still need its shuffle?
+    pub fn shuffles_left(&self) -> bool {
+        matches!(self, ExchangeSides::Both | ExchangeSides::LeftOnly)
+    }
+
+    /// Does the right side still need its shuffle?
+    pub fn shuffles_right(&self) -> bool {
+        matches!(self, ExchangeSides::Both | ExchangeSides::RightOnly)
+    }
+}
 
 /// Distributed join of two partitioned tables. Each rank passes its own
 /// partition; the result is the rank's partition of the joined table
-/// (co-partitioned by the left key columns).
+/// (co-partitioned by the left key columns for inner/left joins, the
+/// right key columns for right joins).
 pub fn join(left: &Table, right: &Table, opts: &JoinOptions, env: &CylonEnv) -> Result<Table> {
+    join_with_exchange(left, right, opts, ExchangeSides::Both, env)
+}
+
+/// [`join`] that elides both shuffles: correct when each side is already
+/// hash-partitioned on exactly its join key columns by the gang's shared
+/// hasher (e.g. the output of a previous [`join`] or shuffled groupby on
+/// the same keys).
+pub fn join_prepartitioned(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    env: &CylonEnv,
+) -> Result<Table> {
+    join_with_exchange(left, right, opts, ExchangeSides::Neither, env)
+}
+
+/// [`join`] with explicit control over which sides are exchanged — the
+/// entry point the plan lowering uses. A side may only skip its shuffle
+/// when its rows are already routed by `hash(keys) mod world_size` under
+/// the gang hasher; the caller (normally the lineage pass) is
+/// responsible for that proof.
+pub fn join_with_exchange(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    exchange: ExchangeSides,
+    env: &CylonEnv,
+) -> Result<Table> {
     if opts.left_on.is_empty() || opts.left_on.len() != opts.right_on.len() {
         return Err(Error::invalid(
             "dist::join requires equal, non-empty key column lists",
         ));
     }
-    let l = shuffle_by_key(left, &opts.left_on, env)?;
-    let r = shuffle_by_key(right, &opts.right_on, env)?;
+    // An elided side is used in place — no copy, that is the point of
+    // the elision.
+    let l: Cow<'_, Table> = if exchange.shuffles_left() {
+        Cow::Owned(shuffle_by_key(left, &opts.left_on, env)?)
+    } else {
+        Cow::Borrowed(left)
+    };
+    let r: Cow<'_, Table> = if exchange.shuffles_right() {
+        Cow::Owned(shuffle_by_key(right, &opts.right_on, env)?)
+    } else {
+        Cow::Borrowed(right)
+    };
     env.time(Phase::Compute, || {
         ops::join_with_hasher(&l, &r, opts, env.hasher())
     })
@@ -40,7 +109,7 @@ mod tests {
         let parts: Vec<Table> = (0..p)
             .map(|r| datagen::partition_for_rank(seed, rows, 0.5, r, p))
             .collect();
-        Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+        Table::concat_owned(parts).unwrap()
     }
 
     fn dist_rows(p: usize, jt: JoinType) -> usize {
@@ -68,6 +137,41 @@ mod tests {
                 .num_rows();
             assert_eq!(dist_rows(3, jt), reference, "{jt:?}");
         }
+    }
+
+    #[test]
+    fn partial_exchange_matches_full_shuffle() {
+        // A ⋈ B on key 0 leaves the result co-partitioned on key 0, so a
+        // second join against a fresh table only needs to shuffle that
+        // fresh (right) side.
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let a = datagen::partition_for_rank(311, 1500, 0.4, env.rank(), env.world_size());
+                let b = datagen::partition_for_rank(312, 1500, 0.4, env.rank(), env.world_size());
+                let cc = datagen::partition_for_rank(313, 1500, 0.4, env.rank(), env.world_size());
+                let ab = join(&a, &b, &JoinOptions::inner(0, 0), env)?;
+                let elided = join_with_exchange(
+                    &ab,
+                    &cc,
+                    &JoinOptions::inner(0, 0),
+                    ExchangeSides::RightOnly,
+                    env,
+                )?;
+                let full = join(&ab, &cc, &JoinOptions::inner(0, 0), env)?;
+                Ok((elided.num_rows(), full.num_rows()))
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let elided: usize = out.iter().map(|(e, _)| e).sum();
+        let full: usize = out.iter().map(|(_, f)| f).sum();
+        assert_eq!(elided, full, "shuffle elision changed the join result");
+        assert!(ExchangeSides::Both.shuffles_left() && ExchangeSides::Both.shuffles_right());
+        assert!(!ExchangeSides::Neither.shuffles_left());
+        assert!(!ExchangeSides::LeftOnly.shuffles_right());
     }
 
     #[test]

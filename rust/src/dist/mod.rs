@@ -28,6 +28,12 @@
 //! `tests/proptest_invariants.rs`): the key hasher is identical on every
 //! worker, so `hash(key) mod p` routes equal keys — from any table, on
 //! any rank — to the same partition.
+//!
+//! These operators are *eager*: each call pays for its own exchange.
+//! The lazy layer ([`crate::plan::DistFrame`]) builds a logical plan
+//! over them and elides exchanges from partitioning lineage; its
+//! lowering targets the `*_prepartitioned` / [`join_with_exchange`]
+//! entry points exposed here.
 
 pub mod describe;
 pub mod groupby;
@@ -38,10 +44,10 @@ pub mod sort;
 
 pub use describe::describe;
 pub use groupby::{groupby, groupby_prepartitioned, GroupbyStrategy};
-pub use join::join;
+pub use join::{join, join_prepartitioned, join_with_exchange, ExchangeSides};
 pub use pipeline::{pipeline, PipelineReport, StageTiming};
-pub use setops::{difference, distinct, intersect, union_distinct};
-pub use sort::sort;
+pub use setops::{difference, distinct, distinct_prepartitioned, intersect, union_distinct};
+pub use sort::{sort, sort_prepartitioned};
 
 // Re-exports so call sites (and the prelude) can name option types from
 // `dist` without importing `ops`.

@@ -1,124 +1,51 @@
 //! The paper's Fig 9 composite workload, `join → groupby → sort →
-//! add_scalar`, executed as one distributed pipeline with per-stage phase
-//! timings (the breakdown the paper's pipeline experiment reports).
+//! add_scalar`, expressed against the lazy planner
+//! ([`crate::plan::DistFrame`]) and executed as one distributed pipeline
+//! with per-stage phase timings (the breakdown the paper's pipeline
+//! experiment reports).
 //!
-//! The stages chain through the partitioning invariants: the join leaves
-//! both sides co-partitioned on the key, so the groupby elides its
-//! shuffle ([`super::groupby_prepartitioned`]); the sample sort then
-//! re-ranges the (much smaller) aggregate table; `add_scalar` is purely
-//! local.
+//! This used to hand-chain the partitioning invariants (calling
+//! [`super::groupby_prepartitioned`] because the join had co-partitioned
+//! the rows); it is now a thin wrapper over the plan optimizer, whose
+//! partitioning-lineage pass derives the same shuffle elision
+//! automatically — asserted by `elides_groupby_shuffle_automatically`
+//! below.
 
-use super::{groupby_prepartitioned, join, sort};
 use crate::error::Result;
 use crate::executor::CylonEnv;
-use crate::metrics::{Phase, PhaseTimers};
-use crate::ops::{self, AggFun, AggSpec, JoinOptions, SortOptions};
+use crate::ops::{AggFun, AggSpec, JoinOptions, SortOptions};
+use crate::plan::DistFrame;
 use crate::table::Table;
-use std::time::Duration;
 
-/// Phase timers attributed to one pipeline stage (delta of the actor's
-/// timers across the stage, communication included).
-#[derive(Debug, Clone)]
-pub struct StageTiming {
-    /// Stage label (`join`, `groupby`, `sort`, `add_scalar`).
-    pub name: &'static str,
-    /// Compute / auxiliary / communication spent inside the stage.
-    pub timers: PhaseTimers,
-}
-
-/// Result of [`pipeline`]: this rank's output partition plus the
-/// per-stage comm/compute breakdown.
-#[derive(Debug, Clone)]
-pub struct PipelineReport {
-    /// This rank's partition of the final (globally sorted) table.
-    pub table: Table,
-    /// Per-stage phase timings, in execution order.
-    pub stages: Vec<StageTiming>,
-}
-
-impl PipelineReport {
-    /// Timers summed across all stages.
-    pub fn total(&self) -> PhaseTimers {
-        let mut t = PhaseTimers::new();
-        for s in &self.stages {
-            t.merge(&s.timers);
-        }
-        t
-    }
-
-    /// Total communication time across stages.
-    pub fn comm_time(&self) -> Duration {
-        self.total().get(Phase::Communication)
-    }
-
-    /// Total core-compute time across stages.
-    pub fn compute_time(&self) -> Duration {
-        self.total().get(Phase::Compute)
-    }
-
-    /// One-line per-stage report:
-    /// `join[compute=… comm=…] groupby[…] sort[…] add_scalar[…]`.
-    pub fn report(&self) -> String {
-        self.stages
-            .iter()
-            .map(|s| {
-                format!(
-                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms]",
-                    s.name,
-                    s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
-                    s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
-                    s.timers.get(Phase::Communication).as_secs_f64() * 1e3,
-                )
-            })
-            .collect::<Vec<_>>()
-            .join(" ")
-    }
-}
+// Re-exported here for continuity: earlier revisions defined these types
+// in this module; they now live with the planner/metrics.
+pub use crate::metrics::StageTiming;
+pub use crate::plan::PlanReport as PipelineReport;
 
 /// Run the benchmark pipeline on this rank's partitions:
 /// inner-join `left ⋈ right` on column 0, group the result by the key
 /// with `sum(col 1)` and `sum(col 3)`, globally sort by the key, then add
 /// `scalar` to the first aggregate column. Matches the serial reference
 /// `ops::join → ops::groupby → ops::sort → ops::add_scalar` up to row
-/// placement.
+/// placement. Takes the partitions by value — they are consumed by the
+/// plan's scan leaves without a copy.
 pub fn pipeline(
-    left: &Table,
-    right: &Table,
+    left: Table,
+    right: Table,
     scalar: f64,
     env: &CylonEnv,
 ) -> Result<PipelineReport> {
-    let mut stages = Vec::with_capacity(4);
-    let mut mark = env.metrics_snapshot();
-
-    let joined = join(left, right, &JoinOptions::inner(0, 0), env)?;
-    cut(&mut stages, "join", &mut mark, env);
-
-    // join co-partitioned the rows on column 0 — zero-comm groupby
-    let grouped = groupby_prepartitioned(
-        &joined,
-        &[0],
-        &[AggSpec::new(1, AggFun::Sum), AggSpec::new(3, AggFun::Sum)],
-        env,
-    )?;
-    cut(&mut stages, "groupby", &mut mark, env);
-
-    let sorted = sort(&grouped, &SortOptions::by(0), env)?;
-    cut(&mut stages, "sort", &mut mark, env);
-
-    let table = env.time(Phase::Compute, || ops::add_scalar(&sorted, 1, scalar))?;
-    cut(&mut stages, "add_scalar", &mut mark, env);
-
-    Ok(PipelineReport { table, stages })
+    frame(left, right, scalar).execute(env)
 }
 
-/// Close a stage: attribute the timer delta since `mark` to `name`.
-fn cut(stages: &mut Vec<StageTiming>, name: &'static str, mark: &mut PhaseTimers, env: &CylonEnv) {
-    let now = env.metrics_snapshot();
-    stages.push(StageTiming {
-        name,
-        timers: now.saturating_diff(mark),
-    });
-    *mark = now;
+/// The Fig 9 workload as a lazy frame (shared with the
+/// `plan_pipeline` example, which EXPLAINs it before running).
+pub fn frame(left: Table, right: Table, scalar: f64) -> DistFrame {
+    DistFrame::scan_named("left", left)
+        .join(DistFrame::scan_named("right", right), JoinOptions::inner(0, 0))
+        .groupby(&[0], &[AggSpec::new(1, AggFun::Sum), AggSpec::new(3, AggFun::Sum)])
+        .sort(SortOptions::by(0))
+        .add_scalar(1, scalar)
 }
 
 #[cfg(test)]
@@ -126,6 +53,36 @@ mod tests {
     use super::*;
     use crate::datagen;
     use crate::executor::{Cluster, CylonExecutor};
+    use crate::ops;
+    use crate::plan::{GroupbyMode, PhysNode};
+    use std::time::Duration;
+
+    #[test]
+    fn elides_groupby_shuffle_automatically() {
+        // The acceptance criterion: no hand-written
+        // `groupby_prepartitioned` call remains here — the optimizer must
+        // derive the elision from the join's partitioning lineage.
+        let l = datagen::uniform_table(1, 10, 0.9);
+        let r = datagen::uniform_table(2, 10, 0.9);
+        let plan = frame(l, r, 1.0).optimized();
+        // plan shape: add_scalar → sort → groupby → join
+        let sort = match &plan.node {
+            PhysNode::AddScalar { input, .. } => input,
+            other => panic!("expected AddScalar root, got {other:?}"),
+        };
+        let groupby = match &sort.node {
+            PhysNode::Sort { input, .. } => input,
+            other => panic!("expected Sort, got {other:?}"),
+        };
+        match &groupby.node {
+            PhysNode::GroupBy { mode, .. } => {
+                assert_eq!(*mode, GroupbyMode::Prepartitioned, "groupby shuffle not elided")
+            }
+            other => panic!("expected GroupBy, got {other:?}"),
+        }
+        // join's 2 shuffles + sort's exchange; groupby contributes none
+        assert_eq!(plan.exchange_count(), 3);
+    }
 
     #[test]
     fn report_has_nonzero_comm_and_compute_phases() {
@@ -136,7 +93,7 @@ mod tests {
             .run(|env| {
                 let l = datagen::partition_for_rank(801, 4000, 0.9, env.rank(), env.world_size());
                 let r = datagen::partition_for_rank(802, 4000, 0.9, env.rank(), env.world_size());
-                pipeline(&l, &r, 1.5, env)
+                pipeline(l, r, 1.5, env)
             })
             .unwrap()
             .wait()
@@ -158,7 +115,7 @@ mod tests {
             .run(|env| {
                 let l = datagen::partition_for_rank(803, 3000, 0.9, env.rank(), env.world_size());
                 let r = datagen::partition_for_rank(804, 3000, 0.9, env.rank(), env.world_size());
-                pipeline(&l, &r, 5.0, env).map(|rep| rep.table)
+                pipeline(l, r, 5.0, env).map(|rep| rep.table)
             })
             .unwrap()
             .wait()
@@ -167,7 +124,7 @@ mod tests {
             let parts: Vec<Table> = (0..p)
                 .map(|r| datagen::partition_for_rank(seed, 3000, 0.9, r, p))
                 .collect();
-            Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+            Table::concat_owned(parts).unwrap()
         };
         let j = ops::join(&whole(803), &whole(804), &JoinOptions::inner(0, 0)).unwrap();
         let g = ops::groupby(
@@ -178,7 +135,7 @@ mod tests {
         .unwrap();
         let s = ops::sort(&g, &SortOptions::by(0)).unwrap();
         let reference = ops::add_scalar(&s, 1, 5.0).unwrap();
-        let all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let all = Table::concat_owned(out).unwrap();
         assert_eq!(all.num_rows(), reference.num_rows());
         // globally sorted: the rank-ordered concatenation is ordered
         assert!(ops::sort::is_sorted(&all, &SortOptions::by(0)));

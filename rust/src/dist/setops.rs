@@ -38,6 +38,17 @@ pub fn distinct(t: &Table, env: &CylonEnv) -> Result<Table> {
     distinct_exchange(t, env)
 }
 
+/// Distinct that elides the shuffle: a single local dedupe, correct when
+/// identical rows are already co-located — which *any* keyed partitioning
+/// guarantees (rows equal on every column are equal on the partition
+/// keys), e.g. the output of a distributed join, groupby or sort.
+pub fn distinct_prepartitioned(t: &Table, env: &CylonEnv) -> Result<Table> {
+    let cols = all_cols(t)?;
+    env.time(Phase::Compute, || {
+        distinct_with_hasher(t, &cols, env.hasher())
+    })
+}
+
 /// Distributed set union: every distinct row of `a ∪ b` exactly once.
 pub fn union_distinct(a: &Table, b: &Table, env: &CylonEnv) -> Result<Table> {
     let u = env.time(Phase::Auxiliary, || ops::union_all(a, b))?;
@@ -92,7 +103,36 @@ mod tests {
                     .unwrap()
             })
             .collect();
-        Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap()
+        Table::concat_owned(parts).unwrap()
+    }
+
+    #[test]
+    fn prepartitioned_distinct_after_groupby_matches_exchange() {
+        // groupby hash-partitions on its keys; identical whole rows agree
+        // on the keys, so they are co-located and one local dedupe is exact.
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let t = datagen::partition_for_rank(605, 1500, 0.05, env.rank(), env.world_size());
+                let g = super::super::groupby(
+                    &t,
+                    &[0],
+                    &[crate::ops::AggSpec::new(1, crate::ops::AggFun::Count)],
+                    super::super::GroupbyStrategy::TwoPhase,
+                    env,
+                )?;
+                let fast = distinct_prepartitioned(&g, env)?;
+                let slow = distinct(&g, env)?;
+                Ok((fast.num_rows(), slow.num_rows()))
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let fast: usize = out.iter().map(|(a, _)| a).sum();
+        let slow: usize = out.iter().map(|(_, b)| b).sum();
+        assert_eq!(fast, slow);
     }
 
     #[test]

@@ -19,12 +19,7 @@ const SAMPLE_PER_RANK: usize = 32;
 /// per-key direction, nulls-first ascending — same semantics as
 /// [`ops::sort`]).
 pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
-    if opts.keys.is_empty() {
-        return Err(Error::invalid("dist::sort: empty key list"));
-    }
-    for k in &opts.keys {
-        t.column(k.col)?;
-    }
+    check_sort_keys(t, opts)?;
     let p = env.world_size();
     if p == 1 {
         return env.time(Phase::Compute, || ops::sort(t, opts));
@@ -67,6 +62,29 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     // 4. Exchange, then the core local sort on the received slice.
     let mine = env.comm().shuffle(parts)?;
     env.time(Phase::Compute, || ops::sort(&mine, opts))
+}
+
+/// Sort that elides the sample/exchange entirely: a pure local sort,
+/// correct when the partitions are already *range-partitioned* in rank
+/// order on a key list prefix-compatible with `opts` (e.g. the output of
+/// a previous [`sort`] on the same leading keys and directions) — every
+/// row on rank `i` then precedes every row on rank `i+1` under `opts`,
+/// so the rank-ordered concatenation of the local sorts is globally
+/// sorted. The caller (normally the plan lineage pass) owns that proof.
+pub fn sort_prepartitioned(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
+    check_sort_keys(t, opts)?;
+    env.time(Phase::Compute, || ops::sort(t, opts))
+}
+
+/// Shared argument check: non-empty key list, all key columns present.
+fn check_sort_keys(t: &Table, opts: &SortOptions) -> Result<()> {
+    if opts.keys.is_empty() {
+        return Err(Error::invalid("dist::sort: empty key list"));
+    }
+    for k in &opts.keys {
+        t.column(k.col)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -118,9 +136,34 @@ mod tests {
             .unwrap()
             .wait()
             .unwrap();
-        let all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let all = Table::concat_owned(out).unwrap();
         assert!(ops::sort::is_sorted(&all, &opts), "concatenation not globally sorted");
         assert_eq!(all.num_rows(), 3000);
+    }
+
+    #[test]
+    fn prepartitioned_resort_preserves_global_order() {
+        // sort by [0↑,1↓] range-partitions on a [0↑] prefix; re-sorting by
+        // [0↑] alone needs no exchange.
+        let p = 3;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let t = datagen::partition_for_rank(503, 2000, 0.1, env.rank(), env.world_size());
+                let opts = SortOptions {
+                    keys: vec![SortKey::asc(0), SortKey::desc(1)],
+                    stable: false,
+                };
+                let s = sort(&t, &opts, env)?;
+                sort_prepartitioned(&s, &SortOptions::by(0), env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let all = Table::concat_owned(out).unwrap();
+        assert_eq!(all.num_rows(), 2000);
+        assert!(ops::sort::is_sorted(&all, &SortOptions::by(0)));
     }
 
     #[test]

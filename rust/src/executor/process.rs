@@ -70,7 +70,7 @@ pub fn run_named_app(name: &str, params: &AppParams, env: &CylonEnv) -> Result<S
         "pipeline" => {
             let l = datagen::partition_for_rank(51, rows, card, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(52, rows, card, env.rank(), env.world_size());
-            let rep = dist::pipeline(&l, &r, 1.0, env)?;
+            let rep = dist::pipeline(l, r, 1.0, env)?;
             Ok(format!("rows={}", rep.table.num_rows()))
         }
         // The paper's benchmark load path: each worker reads ITS partition

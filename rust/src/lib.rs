@@ -32,6 +32,11 @@
 //!   aggregation / pre-partitioned), sample sort, set operators,
 //!   `describe`, `rebalance`, and the Fig 9 `pipeline` with per-stage
 //!   comm/compute timings.
+//! - [`plan`] — the lazy layer over `dist`: `DistFrame` builds a
+//!   `LogicalPlan`, the optimizer pushes filters/projections below
+//!   shuffles and elides exchanges from partitioning lineage
+//!   (join→groupby, groupby→distinct, repeated joins, sort→sort), and
+//!   the executor lowers the optimized plan back onto `dist`.
 //! - [`amt`] — AMT baseline (central scheduler + object-store shuffle).
 //! - [`actor_mr`] — actor map-reduce baseline.
 //! - [`store`] — object store + `CylonStore` for inter-app data sharing.
@@ -88,6 +93,7 @@ pub mod error;
 pub mod executor;
 pub mod metrics;
 pub mod ops;
+pub mod plan;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod store;
@@ -108,6 +114,7 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::executor::{Cluster, CylonEnv, CylonExecutor, PlacementGroup};
     pub use crate::ops;
+    pub use crate::plan::DistFrame;
     pub use crate::store::CylonStore;
     pub use crate::table::Table;
     pub use crate::types::{DType, Schema, Value};

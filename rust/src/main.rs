@@ -202,7 +202,7 @@ fn op(args: &Args) -> Result<()> {
                     env,
                 )?,
                 "sort" => dist::sort(&l, &SortOptions::by(0), env)?,
-                "pipeline" => dist::pipeline(&l, &r, 1.0, env)?.table,
+                "pipeline" => dist::pipeline(l, r, 1.0, env)?.table,
                 _ => unreachable!(),
             };
             Ok(t.num_rows())

@@ -92,6 +92,19 @@ impl PhaseTimers {
     }
 }
 
+/// Phase timers attributed to one pipeline/plan stage (delta of the
+/// actor's monotonically accumulating timers across the stage,
+/// communication included). Emitted per executed plan node by
+/// [`crate::plan`]'s executor and surfaced through
+/// [`crate::dist::pipeline`]'s report.
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    /// Stage label (`join`, `groupby`, `sort`, `add_scalar`, …).
+    pub name: String,
+    /// Compute / auxiliary / communication spent inside the stage.
+    pub timers: PhaseTimers,
+}
+
 /// Aggregated comm/compute breakdown across a gang of workers.
 #[derive(Debug, Clone)]
 pub struct Breakdown {

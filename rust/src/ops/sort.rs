@@ -11,7 +11,7 @@ use crate::table::Table;
 use std::cmp::Ordering;
 
 /// One sort key.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SortKey {
     /// Column index.
     pub col: usize,

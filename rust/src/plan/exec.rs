@@ -1,0 +1,240 @@
+//! Plan execution: lower an optimized [`PhysPlan`] onto the existing
+//! [`crate::dist`] operators inside a [`CylonEnv`], attributing the
+//! actor's phase-timer deltas to one [`StageTiming`] per executed node
+//! (the paper's per-stage comm/compute breakdown, Fig 9).
+
+use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
+use crate::dist;
+use crate::error::Result;
+use crate::executor::CylonEnv;
+use crate::metrics::{Phase, PhaseTimers, StageTiming};
+use crate::ops;
+use crate::table::Table;
+use std::time::Duration;
+
+/// Result of executing a plan on one rank: the rank's output partition
+/// plus per-node stage timings in execution (post-order) order.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    /// This rank's partition of the plan's output table.
+    pub table: Table,
+    /// Per-stage phase timings, in execution order (scans excluded —
+    /// they do no work).
+    pub stages: Vec<StageTiming>,
+}
+
+impl PlanReport {
+    /// Timers summed across all stages.
+    pub fn total(&self) -> PhaseTimers {
+        let mut t = PhaseTimers::new();
+        for s in &self.stages {
+            t.merge(&s.timers);
+        }
+        t
+    }
+
+    /// Total communication time across stages.
+    pub fn comm_time(&self) -> Duration {
+        self.total().get(Phase::Communication)
+    }
+
+    /// Total core-compute time across stages.
+    pub fn compute_time(&self) -> Duration {
+        self.total().get(Phase::Compute)
+    }
+
+    /// One-line per-stage report:
+    /// `join[compute=… aux=… comm=…] groupby[…] …`.
+    pub fn report(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms]",
+                    s.name,
+                    s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
+                    s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
+                    s.timers.get(Phase::Communication).as_secs_f64() * 1e3,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Execute `plan` on this rank. Every rank of the gang must execute the
+/// same plan shape (the usual SPMD contract — only the scanned
+/// partitions differ per rank).
+pub fn execute(plan: PhysPlan, env: &CylonEnv) -> Result<PlanReport> {
+    let mut stages = Vec::new();
+    let mut mark = env.metrics_snapshot();
+    let table = eval(plan, env, &mut stages, &mut mark)?;
+    Ok(PlanReport { table, stages })
+}
+
+fn eval(
+    plan: PhysPlan,
+    env: &CylonEnv,
+    stages: &mut Vec<StageTiming>,
+    mark: &mut PhaseTimers,
+) -> Result<Table> {
+    let label = plan.label();
+    let out = match plan.node {
+        // Scans do no work: return the partition, emit no stage. When
+        // this plan holds the only reference (the usual build-and-run
+        // path) the table moves out without a copy.
+        PhysNode::Scan { table, .. } => {
+            return Ok(std::sync::Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone()))
+        }
+        PhysNode::Filter { input, pred } => {
+            let t = eval(*input, env, stages, mark)?;
+            env.time(Phase::Compute, || pred.apply(&t))?
+        }
+        PhysNode::Select { input, cols } => {
+            let t = eval(*input, env, stages, mark)?;
+            env.time(Phase::Auxiliary, || t.project(&cols))?
+        }
+        PhysNode::Join { left, right, opts, exchange } => {
+            let l = eval(*left, env, stages, mark)?;
+            let r = eval(*right, env, stages, mark)?;
+            dist::join_with_exchange(&l, &r, &opts, exchange, env)?
+        }
+        PhysNode::GroupBy { input, keys, aggs, mode } => {
+            let t = eval(*input, env, stages, mark)?;
+            match mode {
+                GroupbyMode::Prepartitioned => {
+                    dist::groupby_prepartitioned(&t, &keys, &aggs, env)?
+                }
+                GroupbyMode::Exchange(strategy) => {
+                    dist::groupby(&t, &keys, &aggs, strategy, env)?
+                }
+            }
+        }
+        PhysNode::Sort { input, opts, prepartitioned } => {
+            let t = eval(*input, env, stages, mark)?;
+            if prepartitioned {
+                dist::sort_prepartitioned(&t, &opts, env)?
+            } else {
+                dist::sort(&t, &opts, env)?
+            }
+        }
+        PhysNode::Distinct { input, prepartitioned } => {
+            let t = eval(*input, env, stages, mark)?;
+            if prepartitioned {
+                dist::setops::distinct_prepartitioned(&t, env)?
+            } else {
+                dist::distinct(&t, env)?
+            }
+        }
+        PhysNode::SetOp { left, right, kind } => {
+            let l = eval(*left, env, stages, mark)?;
+            let r = eval(*right, env, stages, mark)?;
+            match kind {
+                super::logical::SetOpKind::UnionDistinct => dist::union_distinct(&l, &r, env)?,
+                super::logical::SetOpKind::Intersect => dist::intersect(&l, &r, env)?,
+                super::logical::SetOpKind::Difference => dist::difference(&l, &r, env)?,
+            }
+        }
+        PhysNode::AddScalar { input, col, scalar } => {
+            let t = eval(*input, env, stages, mark)?;
+            env.time(Phase::Compute, || ops::add_scalar(&t, col, scalar))?
+        }
+        PhysNode::Rebalance { input } => {
+            let t = eval(*input, env, stages, mark)?;
+            dist::rebalance(&t, env)?.0
+        }
+    };
+    // Attribute the timer delta since the last cut to this node.
+    let now = env.metrics_snapshot();
+    stages.push(StageTiming {
+        name: label.to_string(),
+        timers: now.saturating_diff(mark),
+    });
+    *mark = now;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::datagen;
+    use crate::executor::{Cluster, CylonExecutor};
+    use crate::ops::{AggFun, AggSpec, CmpOp, JoinOptions, SortOptions};
+    use crate::plan::DistFrame;
+    use crate::types::Value;
+
+    #[test]
+    fn stage_order_is_execution_order_and_scans_are_skipped() {
+        let p = 2;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let l = datagen::partition_for_rank(701, 1000, 0.5, env.rank(), env.world_size());
+                let r = datagen::partition_for_rank(702, 1000, 0.5, env.rank(), env.world_size());
+                DistFrame::scan(l)
+                    .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+                    .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+                    .sort(SortOptions::by(0))
+                    .add_scalar(1, 1.0)
+                    .execute(env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        for rep in &out {
+            let names: Vec<&str> = rep.stages.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, ["join", "groupby", "sort", "add_scalar"]);
+            assert!(rep.report().contains("groupby["));
+        }
+    }
+
+    #[test]
+    fn filter_select_lower_locally() {
+        let c = Cluster::local(1).unwrap();
+        let exec = CylonExecutor::new(&c, 1).unwrap();
+        let out = exec
+            .run(|env| {
+                let t = Table::from_columns(vec![
+                    ("k", Column::from_i64(vec![1, 2, 3, 4])),
+                    ("v", Column::from_i64(vec![10, 20, 30, 40])),
+                ])?;
+                DistFrame::scan(t)
+                    .filter(0, CmpOp::Gt, Value::Int64(2))
+                    .select(&[1])
+                    .execute(env)
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let t = &out[0].table;
+        assert_eq!(t.num_columns(), 1);
+        assert_eq!(t.column(0).unwrap().i64_values().unwrap(), &[30, 40]);
+    }
+
+    #[test]
+    fn optimized_setops_match_eager_dist_calls() {
+        let p = 2;
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(|env| {
+                let a = datagen::partition_for_rank(703, 800, 0.05, env.rank(), env.world_size())
+                    .project(&[0])?;
+                let b = datagen::partition_for_rank(704, 800, 0.05, env.rank(), env.world_size())
+                    .project(&[0])?;
+                let lazy = DistFrame::scan(a.clone())
+                    .intersect(DistFrame::scan(b.clone()))
+                    .execute(env)?;
+                let eager = dist::intersect(&a, &b, env)?;
+                Ok((lazy.table.num_rows(), eager.num_rows()))
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let lazy: usize = out.iter().map(|(a, _)| a).sum();
+        let eager: usize = out.iter().map(|(_, b)| b).sum();
+        assert_eq!(lazy, eager);
+    }
+}

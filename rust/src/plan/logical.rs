@@ -1,0 +1,564 @@
+//! The lazy logical plan: what a [`DistFrame`] builds up before anything
+//! executes.
+//!
+//! A [`LogicalPlan`] is a pure description of a distributed dataframe
+//! query — no `CylonEnv`, no communication, no timing. Each node maps
+//! 1:1 onto a [`crate::dist`] operator (or a purely local `ops` call);
+//! the optimizer ([`crate::plan::optimizer`]) rewrites the tree and
+//! decides which exchanges are provably redundant, and the executor
+//! ([`crate::plan::exec`]) lowers the result onto the gang.
+
+use crate::error::{Error, Result};
+use crate::ops::{self, AggSpec, CmpOp, JoinOptions, SortOptions};
+use crate::table::Table;
+use crate::types::Value;
+use std::fmt;
+use std::sync::Arc;
+
+/// A column-vs-literal predicate (`t[col] OP value`) — the filter shape
+/// the planner understands and can push below shuffles. Rows with a null
+/// column slot never pass (SQL comparison semantics).
+#[derive(Debug, Clone)]
+pub struct FilterPred {
+    /// Column index the predicate reads.
+    pub col: usize,
+    /// Comparison operator.
+    pub op: CmpOp,
+    /// Literal to compare against.
+    pub value: Value,
+}
+
+impl FilterPred {
+    /// Evaluate the predicate against a partition: keep passing rows.
+    pub fn apply(&self, t: &Table) -> Result<Table> {
+        let c = t.column(self.col)?;
+        if !self.value.is_null() && self.value.dtype() != Some(c.dtype()) {
+            return Err(Error::Type(format!(
+                "filter literal {:?} does not match column dtype {}",
+                self.value,
+                c.dtype()
+            )));
+        }
+        Ok(ops::filter(t, |r| {
+            if !c.is_valid(r) || self.value.is_null() {
+                return false;
+            }
+            let ord = c.value(r).cmp_sql(&self.value);
+            use std::cmp::Ordering::*;
+            matches!(
+                (self.op, ord),
+                (CmpOp::Eq, Equal)
+                    | (CmpOp::Ne, Less | Greater)
+                    | (CmpOp::Lt, Less)
+                    | (CmpOp::Le, Less | Equal)
+                    | (CmpOp::Gt, Greater)
+                    | (CmpOp::Ge, Greater | Equal)
+            )
+        }))
+    }
+}
+
+impl fmt::Display for FilterPred {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let op = match self.op {
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        };
+        write!(f, "col {} {op} {:?}", self.col, self.value)
+    }
+}
+
+/// Whole-row set operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOpKind {
+    /// Every distinct row of `a ∪ b`.
+    UnionDistinct,
+    /// Distinct rows of `a` also present in `b`.
+    Intersect,
+    /// Distinct rows of `a` absent from `b` (SQL `EXCEPT`).
+    Difference,
+}
+
+impl SetOpKind {
+    /// Stable stage/report label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SetOpKind::UnionDistinct => "union",
+            SetOpKind::Intersect => "intersect",
+            SetOpKind::Difference => "difference",
+        }
+    }
+}
+
+/// One node of the lazy plan. Every variant corresponds to a `dist`
+/// operator (or a purely local operator) over this rank's partition(s).
+#[derive(Debug, Clone)]
+pub enum LogicalPlan {
+    /// A leaf: this rank's partition of a named input. The table sits
+    /// behind an `Arc` so cloning a plan (for EXPLAIN / `optimized()`)
+    /// never copies partition data.
+    Scan {
+        /// Human-readable input name (EXPLAIN only).
+        name: String,
+        /// The rank's partition.
+        table: Arc<Table>,
+    },
+    /// Keep rows passing `pred`.
+    Filter {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+        /// The predicate.
+        pred: FilterPred,
+    },
+    /// Project onto `cols` (in order).
+    Select {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+        /// Output column indices into the input schema.
+        cols: Vec<usize>,
+    },
+    /// Distributed join (output schema `left ++ right`).
+    Join {
+        /// Left input.
+        left: Box<LogicalPlan>,
+        /// Right input.
+        right: Box<LogicalPlan>,
+        /// Key columns / type / algorithm.
+        opts: JoinOptions,
+    },
+    /// Distributed groupby (output schema: keys, then one column per agg).
+    GroupBy {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+        /// Key column indices.
+        keys: Vec<usize>,
+        /// Aggregates.
+        aggs: Vec<AggSpec>,
+        /// Strategy used when the shuffle is *not* elided.
+        strategy: crate::dist::GroupbyStrategy,
+    },
+    /// Distributed (sample) sort.
+    Sort {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+        /// Sort keys and directions.
+        opts: SortOptions,
+    },
+    /// Distributed whole-row distinct.
+    Distinct {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+    },
+    /// Distributed whole-row set operation.
+    SetOp {
+        /// Left input.
+        left: Box<LogicalPlan>,
+        /// Right input.
+        right: Box<LogicalPlan>,
+        /// Which set operation.
+        kind: SetOpKind,
+    },
+    /// Local scalar add on one column.
+    AddScalar {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+        /// Target column.
+        col: usize,
+        /// Added value (truncated for int columns).
+        scalar: f64,
+    },
+    /// Redistribute rows to equal share per rank (±1), preserving order.
+    Rebalance {
+        /// Input plan.
+        input: Box<LogicalPlan>,
+    },
+}
+
+impl LogicalPlan {
+    /// Number of columns this node produces (no execution needed — the
+    /// planner uses this to remap column indices during pushdown).
+    pub fn out_arity(&self) -> usize {
+        match self {
+            LogicalPlan::Scan { table, .. } => table.num_columns(),
+            LogicalPlan::Filter { input, .. }
+            | LogicalPlan::Sort { input, .. }
+            | LogicalPlan::Distinct { input }
+            | LogicalPlan::AddScalar { input, .. }
+            | LogicalPlan::Rebalance { input } => input.out_arity(),
+            LogicalPlan::Select { cols, .. } => cols.len(),
+            LogicalPlan::Join { left, right, .. } => left.out_arity() + right.out_arity(),
+            LogicalPlan::GroupBy { keys, aggs, .. } => keys.len() + aggs.len(),
+            LogicalPlan::SetOp { left, .. } => left.out_arity(),
+        }
+    }
+
+    /// One-line description of this node (no children).
+    pub(crate) fn describe(&self) -> String {
+        match self {
+            LogicalPlan::Scan { name, table } => {
+                format!("scan \"{name}\" ({} cols)", table.num_columns())
+            }
+            LogicalPlan::Filter { pred, .. } => format!("filter {pred}"),
+            LogicalPlan::Select { cols, .. } => format!("select {cols:?}"),
+            LogicalPlan::Join { opts, .. } => format!(
+                "join {:?} on l{:?}=r{:?}",
+                opts.join_type, opts.left_on, opts.right_on
+            ),
+            LogicalPlan::GroupBy { keys, aggs, .. } => {
+                format!("groupby keys={keys:?} aggs=[{}]", fmt_aggs(aggs))
+            }
+            LogicalPlan::Sort { opts, .. } => format!("sort by=[{}]", fmt_sort_keys(opts)),
+            LogicalPlan::Distinct { .. } => "distinct".to_string(),
+            LogicalPlan::SetOp { kind, .. } => kind.label().to_string(),
+            LogicalPlan::AddScalar { col, scalar, .. } => {
+                format!("add_scalar col {col} += {scalar}")
+            }
+            LogicalPlan::Rebalance { .. } => "rebalance".to_string(),
+        }
+    }
+
+    fn children(&self) -> Vec<&LogicalPlan> {
+        match self {
+            LogicalPlan::Scan { .. } => vec![],
+            LogicalPlan::Filter { input, .. }
+            | LogicalPlan::Select { input, .. }
+            | LogicalPlan::GroupBy { input, .. }
+            | LogicalPlan::Sort { input, .. }
+            | LogicalPlan::Distinct { input }
+            | LogicalPlan::AddScalar { input, .. }
+            | LogicalPlan::Rebalance { input } => vec![input.as_ref()],
+            LogicalPlan::Join { left, right, .. } | LogicalPlan::SetOp { left, right, .. } => {
+                vec![left.as_ref(), right.as_ref()]
+            }
+        }
+    }
+}
+
+/// `sum(1), count(3)` — shared by logical and physical EXPLAIN output.
+pub(crate) fn fmt_aggs(aggs: &[AggSpec]) -> String {
+    aggs.iter()
+        .map(|a| format!("{}({})", a.fun.label(), a.col))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// `0↑, 1↓` — shared by logical and physical EXPLAIN output.
+pub(crate) fn fmt_sort_keys(opts: &SortOptions) -> String {
+    opts.keys
+        .iter()
+        .map(|k| format!("{}{}", k.col, if k.ascending { "↑" } else { "↓" }))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// A renderable plan node — implemented by [`LogicalPlan`] and the
+/// physical plan so both `Display` impls share one tree renderer and
+/// the two EXPLAIN outputs cannot drift apart.
+pub(crate) trait TreeNode {
+    /// One-line description of this node (no children).
+    fn describe_node(&self) -> String;
+    /// Child nodes in display order.
+    fn child_nodes(&self) -> Vec<&Self>;
+}
+
+impl TreeNode for LogicalPlan {
+    fn describe_node(&self) -> String {
+        self.describe()
+    }
+    fn child_nodes(&self) -> Vec<&Self> {
+        self.children()
+    }
+}
+
+/// Render a plan as an indented box-drawing tree.
+pub(crate) fn render_tree<N: TreeNode>(node: &N, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    fn go<N: TreeNode>(
+        node: &N,
+        f: &mut fmt::Formatter<'_>,
+        prefix: &str,
+        connector: &str,
+        child_prefix: &str,
+    ) -> fmt::Result {
+        writeln!(f, "{prefix}{connector}{}", node.describe_node())?;
+        let kids = node.child_nodes();
+        for (i, k) in kids.iter().enumerate() {
+            let last = i + 1 == kids.len();
+            let (c, cp) = if last {
+                ("└─ ", "   ")
+            } else {
+                ("├─ ", "│  ")
+            };
+            go(*k, f, &format!("{prefix}{child_prefix}"), c, cp)?;
+        }
+        Ok(())
+    }
+    go(node, f, "", "", "")
+}
+
+impl fmt::Display for LogicalPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        render_tree(self, f)
+    }
+}
+
+/// The lazy distributed dataframe: a builder over [`LogicalPlan`].
+///
+/// Nothing moves until [`DistFrame::execute`] runs inside a `CylonEnv`;
+/// until then the frame is a pure value that can be inspected
+/// ([`DistFrame::explain`]) and optimized. This is the deferred API the
+/// dataframe-systems literature argues for (Petersohn et al.): the
+/// eager `dist::*` calls stay available, but composing through a
+/// `DistFrame` lets the optimizer see the whole query and elide
+/// shuffles from partitioning lineage.
+///
+/// ```no_run
+/// use cylonflow::prelude::*;
+/// use cylonflow::ops::{AggFun, AggSpec};
+///
+/// let cluster = Cluster::local(2).unwrap();
+/// let exec = CylonExecutor::new(&cluster, 2).unwrap();
+/// let out = exec
+///     .run(|env| {
+///         let l = datagen::uniform_table(env.rank() as u64, 1000, 0.9);
+///         let r = datagen::uniform_table(99 + env.rank() as u64, 1000, 0.9);
+///         DistFrame::scan(l)
+///             .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+///             // same keys as the join: the optimizer elides this shuffle
+///             .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+///             .sort(SortOptions::by(0))
+///             .execute(env)
+///     })
+///     .unwrap()
+///     .wait()
+///     .unwrap();
+/// println!("rows: {}", out[0].table.num_rows());
+/// ```
+#[derive(Debug, Clone)]
+pub struct DistFrame {
+    plan: LogicalPlan,
+}
+
+impl DistFrame {
+    /// Leaf frame over this rank's partition.
+    pub fn scan(table: Table) -> DistFrame {
+        DistFrame::scan_named("scan", table)
+    }
+
+    /// Leaf frame with a name shown in EXPLAIN output.
+    pub fn scan_named(name: impl Into<String>, table: Table) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Scan {
+                name: name.into(),
+                table: Arc::new(table),
+            },
+        }
+    }
+
+    /// Wrap an explicit plan (for tests and programmatic rewrites).
+    pub fn from_plan(plan: LogicalPlan) -> DistFrame {
+        DistFrame { plan }
+    }
+
+    /// Keep rows where `col OP value` holds (nulls never pass).
+    pub fn filter(self, col: usize, op: CmpOp, value: Value) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Filter {
+                input: Box::new(self.plan),
+                pred: FilterPred { col, op, value },
+            },
+        }
+    }
+
+    /// Project onto `cols`, in order.
+    pub fn select(self, cols: &[usize]) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Select {
+                input: Box::new(self.plan),
+                cols: cols.to_vec(),
+            },
+        }
+    }
+
+    /// Distributed join against `right`.
+    pub fn join(self, right: DistFrame, opts: JoinOptions) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Join {
+                left: Box::new(self.plan),
+                right: Box::new(right.plan),
+                opts,
+            },
+        }
+    }
+
+    /// Distributed groupby with the default strategy.
+    pub fn groupby(self, keys: &[usize], aggs: &[AggSpec]) -> DistFrame {
+        self.groupby_with_strategy(keys, aggs, crate::dist::GroupbyStrategy::default())
+    }
+
+    /// Distributed groupby with an explicit exchange strategy (used only
+    /// when the optimizer cannot elide the shuffle).
+    pub fn groupby_with_strategy(
+        self,
+        keys: &[usize],
+        aggs: &[AggSpec],
+        strategy: crate::dist::GroupbyStrategy,
+    ) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::GroupBy {
+                input: Box::new(self.plan),
+                keys: keys.to_vec(),
+                aggs: aggs.to_vec(),
+                strategy,
+            },
+        }
+    }
+
+    /// Distributed sort.
+    pub fn sort(self, opts: SortOptions) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Sort { input: Box::new(self.plan), opts },
+        }
+    }
+
+    /// Distributed whole-row distinct.
+    pub fn distinct(self) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Distinct { input: Box::new(self.plan) },
+        }
+    }
+
+    /// Distributed set union (distinct rows of `self ∪ other`).
+    pub fn union_distinct(self, other: DistFrame) -> DistFrame {
+        self.setop(other, SetOpKind::UnionDistinct)
+    }
+
+    /// Distributed set intersection.
+    pub fn intersect(self, other: DistFrame) -> DistFrame {
+        self.setop(other, SetOpKind::Intersect)
+    }
+
+    /// Distributed set difference (`self` EXCEPT `other`).
+    pub fn difference(self, other: DistFrame) -> DistFrame {
+        self.setop(other, SetOpKind::Difference)
+    }
+
+    fn setop(self, other: DistFrame, kind: SetOpKind) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::SetOp {
+                left: Box::new(self.plan),
+                right: Box::new(other.plan),
+                kind,
+            },
+        }
+    }
+
+    /// Add `scalar` to column `col` (local, no communication).
+    pub fn add_scalar(self, col: usize, scalar: f64) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::AddScalar {
+                input: Box::new(self.plan),
+                col,
+                scalar,
+            },
+        }
+    }
+
+    /// Rebalance to equal rows per rank (±1), preserving global order.
+    pub fn rebalance(self) -> DistFrame {
+        DistFrame {
+            plan: LogicalPlan::Rebalance { input: Box::new(self.plan) },
+        }
+    }
+
+    /// The underlying logical plan.
+    pub fn plan(&self) -> &LogicalPlan {
+        &self.plan
+    }
+
+    /// Consume the frame, returning its logical plan.
+    pub fn into_plan(self) -> LogicalPlan {
+        self.plan
+    }
+
+    /// Run the optimizer (pushdown + partitioning lineage) and return the
+    /// physical plan it produced, without executing anything.
+    pub fn optimized(&self) -> super::PhysPlan {
+        super::optimizer::optimize(self.plan.clone())
+    }
+
+    /// EXPLAIN: the optimized plan rendered as an annotated tree.
+    pub fn explain(&self) -> String {
+        self.optimized().to_string()
+    }
+
+    /// Optimize, then execute on this rank inside `env`, returning the
+    /// rank's output partition and per-node stage timings.
+    pub fn execute(self, env: &crate::executor::CylonEnv) -> Result<super::PlanReport> {
+        super::exec::execute(super::optimizer::optimize(self.plan), env)
+    }
+
+    /// Execute without any optimization (every operator performs its full
+    /// exchange) — the reference path the equivalence property tests pit
+    /// the optimizer against.
+    pub fn execute_unoptimized(
+        self,
+        env: &crate::executor::CylonEnv,
+    ) -> Result<super::PlanReport> {
+        super::exec::execute(super::optimizer::unoptimized(self.plan), env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+
+    fn t() -> Table {
+        Table::from_columns(vec![
+            ("k", Column::from_i64(vec![1, 2, 3])),
+            ("v", Column::from_f64(vec![1.0, 2.0, 3.0])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn arity_tracks_schema_shape() {
+        let f = DistFrame::scan(t())
+            .join(DistFrame::scan(t()), JoinOptions::inner(0, 0))
+            .groupby(&[0], &[AggSpec::new(1, ops::AggFun::Sum)]);
+        assert_eq!(f.plan().out_arity(), 2);
+        let s = DistFrame::scan(t()).select(&[1]);
+        assert_eq!(s.plan().out_arity(), 1);
+    }
+
+    #[test]
+    fn filter_pred_applies_sql_semantics() {
+        let tab = Table::from_columns(vec![(
+            "k",
+            Column::from_opt_i64(&[Some(1), None, Some(5)]),
+        )])
+        .unwrap();
+        let pred = FilterPred { col: 0, op: CmpOp::Ge, value: Value::Int64(2) };
+        let out = pred.apply(&tab).unwrap();
+        assert_eq!(out.num_rows(), 1); // null never passes
+        let bad = FilterPred { col: 0, op: CmpOp::Eq, value: Value::Utf8("x".into()) };
+        assert!(bad.apply(&tab).is_err());
+        let null_lit = FilterPred { col: 0, op: CmpOp::Eq, value: Value::Null };
+        assert_eq!(null_lit.apply(&tab).unwrap().num_rows(), 0);
+    }
+
+    #[test]
+    fn display_renders_tree() {
+        let f = DistFrame::scan_named("left", t())
+            .join(DistFrame::scan_named("right", t()), JoinOptions::inner(0, 0))
+            .sort(SortOptions::by(0));
+        let s = f.plan().to_string();
+        assert!(s.contains("sort by=[0↑]"), "{s}");
+        assert!(s.contains("join Inner on l[0]=r[0]"), "{s}");
+        assert!(s.contains("scan \"left\""), "{s}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Lazy logical plans over distributed dataframes — the optimizer layer
+//! the dataframe-systems literature calls for (Petersohn et al.,
+//! "Towards Scalable Dataframe Systems") built on the partitioning
+//! invariants of the HP-DDF operator decomposition (Perera et al.).
+//!
+//! The eager [`crate::dist`] operators each pay for their own exchange.
+//! Composing a query through a [`DistFrame`] instead builds a
+//! [`LogicalPlan`] that nothing executes until
+//! [`DistFrame::execute`]; the optimizer then:
+//!
+//! 1. pushes filters/projections below shuffles (less data on the wire),
+//! 2. tracks **partitioning lineage** ([`Partitioning`]) through every
+//!    node's column mapping, and
+//! 3. elides every exchange the lineage proves redundant — join→groupby
+//!    on the join keys, groupby→distinct, repeated joins on one key,
+//!    sort→sort on compatible keys — lowering onto the
+//!    `*_prepartitioned` / [`crate::dist::join_with_exchange`] entry
+//!    points.
+//!
+//! The [`crate::dist::pipeline`] benchmark workload is a thin wrapper
+//! over this module: the shuffle elision it used to hand-code now falls
+//! out of the lineage pass.
+//!
+//! Layering: `plan::logical` (pure description) → `plan::optimizer`
+//! (rewrites + [`PhysPlan`]) → `plan::exec` (lowering onto `dist` inside
+//! a `CylonEnv`, with per-node [`crate::metrics::StageTiming`]s).
+
+pub mod exec;
+pub mod logical;
+pub mod optimizer;
+
+pub use exec::{execute, PlanReport};
+pub use logical::{DistFrame, FilterPred, LogicalPlan, SetOpKind};
+pub use optimizer::{optimize, unoptimized, GroupbyMode, Partitioning, PhysNode, PhysPlan};

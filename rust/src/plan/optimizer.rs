@@ -1,0 +1,964 @@
+//! The plan optimizer: filter/select pushdown plus **partitioning
+//! lineage** — the pass that turns the paper's hand-written shuffle
+//! elision (`dist::pipeline` calling `groupby_prepartitioned` after a
+//! co-keyed join) into a general rewrite.
+//!
+//! ## The `Partitioning` lattice
+//!
+//! Every physical node is annotated with what is known about the
+//! *placement* of its output rows across the gang:
+//!
+//! - [`Partitioning::Arbitrary`] — nothing known (bottom).
+//! - [`Partitioning::HashKeys`]`(cols)` — rows are routed by
+//!   `hash(cols) mod world_size` under the gang's shared hasher. Rows
+//!   that agree on `cols` are therefore on the same rank.
+//! - [`Partitioning::RangeKeys`]`(keys)` — rows are routed by a shared
+//!   monotone range function of `keys` (the sample-sort splitters):
+//!   every row on rank `i` precedes every row on rank `i+1` under the
+//!   directed key order, **and** rows equal on `keys` share a rank (the
+//!   range partitioner is a deterministic function of the key values).
+//!
+//! Both keyed forms imply co-location of rows that agree on the keys,
+//! which is exactly what single-input keyed operators (groupby,
+//! distinct) need; joins additionally need both sides routed by the
+//! *same* function, so they demand an exact hash-key match.
+//!
+//! ## Rewrite rules
+//!
+//! - join → groupby on the join keys: groupby shuffle elided
+//!   ([`crate::dist::groupby_prepartitioned`]).
+//! - groupby/join/sort → distinct: distinct shuffle elided (identical
+//!   rows agree on any key subset).
+//! - repeated joins on the same key: only the fresh side is shuffled
+//!   ([`crate::dist::join_with_exchange`]).
+//! - sort → sort on a prefix-compatible key list: the sample/exchange
+//!   is elided; a local sort suffices
+//!   ([`crate::dist::sort_prepartitioned`]).
+//! - filters and projections are pushed below joins, sorts, groupbys
+//!   and set ops so less data crosses the wire.
+
+use super::logical::{fmt_aggs, fmt_sort_keys, FilterPred, LogicalPlan, SetOpKind};
+use crate::dist::{ExchangeSides, GroupbyStrategy};
+use crate::ops::{AggSpec, JoinOptions, JoinType, SortKey, SortOptions};
+use crate::table::Table;
+use std::fmt;
+use std::sync::Arc;
+
+/// What is known about the cross-rank placement of a node's output rows
+/// (column indices refer to the node's *own* output schema).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Partitioning {
+    /// Nothing known: rows may be anywhere.
+    Arbitrary,
+    /// Rows routed by `hash(cols) mod world_size` (gang hasher).
+    HashKeys(Vec<usize>),
+    /// Rows routed by a shared monotone range function of the directed
+    /// keys: rank order equals key order, equal keys co-locate.
+    RangeKeys(Vec<SortKey>),
+}
+
+impl Partitioning {
+    /// True when rows agreeing on `cols` provably share a rank — the
+    /// requirement of single-input keyed operators (groupby, distinct).
+    /// Any keyed partitioning on a *subset* of `cols` suffices: rows
+    /// equal on `cols` are equal on the subset, hence routed together.
+    pub fn co_locates(&self, cols: &[usize]) -> bool {
+        match self {
+            Partitioning::Arbitrary => false,
+            Partitioning::HashKeys(k) => !k.is_empty() && k.iter().all(|c| cols.contains(c)),
+            Partitioning::RangeKeys(k) => {
+                !k.is_empty() && k.iter().all(|s| cols.contains(&s.col))
+            }
+        }
+    }
+
+    /// True when rows are routed by exactly `hash(keys)` in this key
+    /// order — the two-sided alignment a join shuffle elision needs.
+    pub fn hash_exact(&self, keys: &[usize]) -> bool {
+        matches!(self, Partitioning::HashKeys(k) if k == keys)
+    }
+
+    /// True when a sort on `keys` needs no exchange over this placement:
+    /// range-partitioned with the common key prefix identical (columns
+    /// *and* directions), one key list a prefix of the other. Rank order
+    /// then already agrees with the requested order.
+    pub fn range_prefix_compatible(&self, keys: &[SortKey]) -> bool {
+        match self {
+            Partitioning::RangeKeys(k) if !k.is_empty() && !keys.is_empty() => {
+                let n = k.len().min(keys.len());
+                k[..n] == keys[..n]
+            }
+            _ => false,
+        }
+    }
+
+    /// Remap column indices through a schema change (`f` maps an input
+    /// column to its output position, `None` if dropped). Losing any
+    /// partitioning column loses the lineage.
+    pub fn map_columns(&self, f: impl Fn(usize) -> Option<usize>) -> Partitioning {
+        match self {
+            Partitioning::Arbitrary => Partitioning::Arbitrary,
+            Partitioning::HashKeys(k) => k
+                .iter()
+                .map(|&c| f(c))
+                .collect::<Option<Vec<_>>>()
+                .map(Partitioning::HashKeys)
+                .unwrap_or(Partitioning::Arbitrary),
+            Partitioning::RangeKeys(k) => k
+                .iter()
+                .map(|s| f(s.col).map(|col| SortKey { col, ascending: s.ascending }))
+                .collect::<Option<Vec<_>>>()
+                .map(Partitioning::RangeKeys)
+                .unwrap_or(Partitioning::Arbitrary),
+        }
+    }
+}
+
+impl fmt::Display for Partitioning {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Partitioning::Arbitrary => f.write_str("arbitrary"),
+            Partitioning::HashKeys(k) => {
+                let cols: Vec<String> = k.iter().map(|c| c.to_string()).collect();
+                write!(f, "hash[{}]", cols.join(","))
+            }
+            Partitioning::RangeKeys(k) => {
+                let cols: Vec<String> = k
+                    .iter()
+                    .map(|s| format!("{}{}", s.col, if s.ascending { "↑" } else { "↓" }))
+                    .collect();
+                write!(f, "range[{}]", cols.join(","))
+            }
+        }
+    }
+}
+
+/// How the physical groupby moves data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupbyMode {
+    /// Shuffle under the given strategy (two-phase / shuffle-first).
+    Exchange(GroupbyStrategy),
+    /// Shuffle elided: the lineage pass proved the input co-partitioned
+    /// on the group keys.
+    Prepartitioned,
+}
+
+/// A physical plan node: the logical operator plus the exchange
+/// decisions the optimizer made for it.
+#[derive(Debug, Clone)]
+pub enum PhysNode {
+    /// Leaf partition (shared with the logical plan — never copied).
+    Scan {
+        /// Input name (EXPLAIN).
+        name: String,
+        /// The rank's partition.
+        table: Arc<Table>,
+    },
+    /// Local row filter.
+    Filter {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// Predicate.
+        pred: FilterPred,
+    },
+    /// Local projection.
+    Select {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// Projected columns.
+        cols: Vec<usize>,
+    },
+    /// Distributed join with per-side exchange decisions.
+    Join {
+        /// Left input.
+        left: Box<PhysPlan>,
+        /// Right input.
+        right: Box<PhysPlan>,
+        /// Join options.
+        opts: JoinOptions,
+        /// Which sides still shuffle.
+        exchange: ExchangeSides,
+    },
+    /// Distributed groupby.
+    GroupBy {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// Key columns.
+        keys: Vec<usize>,
+        /// Aggregates.
+        aggs: Vec<AggSpec>,
+        /// Exchange decision.
+        mode: GroupbyMode,
+    },
+    /// Distributed sort.
+    Sort {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// Sort options.
+        opts: SortOptions,
+        /// True when the sample/exchange is elided (local sort only).
+        prepartitioned: bool,
+    },
+    /// Distributed whole-row distinct.
+    Distinct {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// True when the shuffle is elided (local dedupe only).
+        prepartitioned: bool,
+    },
+    /// Distributed set operation (always exchanges).
+    SetOp {
+        /// Left input.
+        left: Box<PhysPlan>,
+        /// Right input.
+        right: Box<PhysPlan>,
+        /// Which set operation.
+        kind: SetOpKind,
+    },
+    /// Local scalar add.
+    AddScalar {
+        /// Input plan.
+        input: Box<PhysPlan>,
+        /// Target column.
+        col: usize,
+        /// Added value.
+        scalar: f64,
+    },
+    /// Order-preserving row rebalance.
+    Rebalance {
+        /// Input plan.
+        input: Box<PhysPlan>,
+    },
+}
+
+/// An optimized plan: a [`PhysNode`] annotated with the partitioning
+/// lineage of its output. `Display` renders the EXPLAIN tree.
+#[derive(Debug, Clone)]
+pub struct PhysPlan {
+    /// The operator and its exchange decisions.
+    pub node: PhysNode,
+    /// Placement lineage of this node's output.
+    pub partitioning: Partitioning,
+}
+
+impl PhysPlan {
+    /// Stage label used in reports (`join`, `groupby`, …).
+    pub fn label(&self) -> &'static str {
+        match &self.node {
+            PhysNode::Scan { .. } => "scan",
+            PhysNode::Filter { .. } => "filter",
+            PhysNode::Select { .. } => "select",
+            PhysNode::Join { .. } => "join",
+            PhysNode::GroupBy { .. } => "groupby",
+            PhysNode::Sort { .. } => "sort",
+            PhysNode::Distinct { .. } => "distinct",
+            PhysNode::SetOp { kind, .. } => kind.label(),
+            PhysNode::AddScalar { .. } => "add_scalar",
+            PhysNode::Rebalance { .. } => "rebalance",
+        }
+    }
+
+    /// Number of exchanges (shuffles) this plan performs end-to-end —
+    /// what the optimizer minimizes; exposed for tests and EXPLAIN.
+    pub fn exchange_count(&self) -> usize {
+        let own = match &self.node {
+            PhysNode::Join { exchange, .. } => {
+                usize::from(exchange.shuffles_left()) + usize::from(exchange.shuffles_right())
+            }
+            PhysNode::GroupBy { mode, .. } => {
+                usize::from(!matches!(mode, GroupbyMode::Prepartitioned))
+            }
+            PhysNode::Sort { prepartitioned, .. }
+            | PhysNode::Distinct { prepartitioned, .. } => usize::from(!prepartitioned),
+            PhysNode::SetOp { kind, .. } => match kind {
+                SetOpKind::UnionDistinct => 1,
+                SetOpKind::Intersect | SetOpKind::Difference => 2,
+            },
+            PhysNode::Rebalance { .. } => 1,
+            _ => 0,
+        };
+        own + self.children().iter().map(|c| c.exchange_count()).sum::<usize>()
+    }
+
+    fn children(&self) -> Vec<&PhysPlan> {
+        match &self.node {
+            PhysNode::Scan { .. } => vec![],
+            PhysNode::Filter { input, .. }
+            | PhysNode::Select { input, .. }
+            | PhysNode::GroupBy { input, .. }
+            | PhysNode::Sort { input, .. }
+            | PhysNode::Distinct { input, .. }
+            | PhysNode::AddScalar { input, .. }
+            | PhysNode::Rebalance { input } => vec![input.as_ref()],
+            PhysNode::Join { left, right, .. } | PhysNode::SetOp { left, right, .. } => {
+                vec![left.as_ref(), right.as_ref()]
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        let body = match &self.node {
+            PhysNode::Scan { name, table } => {
+                format!("scan \"{name}\" ({} cols)", table.num_columns())
+            }
+            PhysNode::Filter { pred, .. } => format!("filter {pred}"),
+            PhysNode::Select { cols, .. } => format!("select {cols:?}"),
+            PhysNode::Join { opts, exchange, .. } => {
+                let ex = match exchange {
+                    ExchangeSides::Both => "shuffle both sides".to_string(),
+                    ExchangeSides::LeftOnly => "shuffle left only (right elided)".to_string(),
+                    ExchangeSides::RightOnly => "shuffle right only (left elided)".to_string(),
+                    ExchangeSides::Neither => "shuffles elided".to_string(),
+                };
+                format!(
+                    "join {:?} on l{:?}=r{:?}, {ex}",
+                    opts.join_type, opts.left_on, opts.right_on
+                )
+            }
+            PhysNode::GroupBy { keys, aggs, mode, .. } => {
+                let m = match mode {
+                    GroupbyMode::Exchange(s) => format!("{s}"),
+                    GroupbyMode::Prepartitioned => "shuffle elided".to_string(),
+                };
+                format!("groupby keys={keys:?} aggs=[{}], {m}", fmt_aggs(aggs))
+            }
+            PhysNode::Sort { opts, prepartitioned, .. } => {
+                let m = if *prepartitioned { ", exchange elided (local sort)" } else { "" };
+                format!("sort by=[{}]{m}", fmt_sort_keys(opts))
+            }
+            PhysNode::Distinct { prepartitioned, .. } => {
+                if *prepartitioned {
+                    "distinct, shuffle elided".to_string()
+                } else {
+                    "distinct".to_string()
+                }
+            }
+            PhysNode::SetOp { kind, .. } => kind.label().to_string(),
+            PhysNode::AddScalar { col, scalar, .. } => {
+                format!("add_scalar col {col} += {scalar}")
+            }
+            PhysNode::Rebalance { .. } => "rebalance".to_string(),
+        };
+        format!("{body}  → {}", self.partitioning)
+    }
+}
+
+impl super::logical::TreeNode for PhysPlan {
+    fn describe_node(&self) -> String {
+        self.describe()
+    }
+    fn child_nodes(&self) -> Vec<&Self> {
+        self.children()
+    }
+}
+
+impl fmt::Display for PhysPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        super::logical::render_tree(self, f)
+    }
+}
+
+/// Optimize a logical plan: filter/select pushdown, then the
+/// partitioning-lineage pass that decides every exchange.
+pub fn optimize(plan: LogicalPlan) -> PhysPlan {
+    annotate(pushdown(plan))
+}
+
+/// The naive physical mapping — every operator performs its full
+/// exchange, no pushdown. The reference the equivalence tests pit
+/// [`optimize`] against.
+pub fn unoptimized(plan: LogicalPlan) -> PhysPlan {
+    let node = match plan {
+        LogicalPlan::Scan { name, table } => PhysNode::Scan { name, table },
+        LogicalPlan::Filter { input, pred } => PhysNode::Filter {
+            input: Box::new(unoptimized(*input)),
+            pred,
+        },
+        LogicalPlan::Select { input, cols } => PhysNode::Select {
+            input: Box::new(unoptimized(*input)),
+            cols,
+        },
+        LogicalPlan::Join { left, right, opts } => PhysNode::Join {
+            left: Box::new(unoptimized(*left)),
+            right: Box::new(unoptimized(*right)),
+            opts,
+            exchange: ExchangeSides::Both,
+        },
+        LogicalPlan::GroupBy { input, keys, aggs, strategy } => PhysNode::GroupBy {
+            input: Box::new(unoptimized(*input)),
+            keys,
+            aggs,
+            mode: GroupbyMode::Exchange(strategy),
+        },
+        LogicalPlan::Sort { input, opts } => PhysNode::Sort {
+            input: Box::new(unoptimized(*input)),
+            opts,
+            prepartitioned: false,
+        },
+        LogicalPlan::Distinct { input } => PhysNode::Distinct {
+            input: Box::new(unoptimized(*input)),
+            prepartitioned: false,
+        },
+        LogicalPlan::SetOp { left, right, kind } => PhysNode::SetOp {
+            left: Box::new(unoptimized(*left)),
+            right: Box::new(unoptimized(*right)),
+            kind,
+        },
+        LogicalPlan::AddScalar { input, col, scalar } => PhysNode::AddScalar {
+            input: Box::new(unoptimized(*input)),
+            col,
+            scalar,
+        },
+        LogicalPlan::Rebalance { input } => PhysNode::Rebalance {
+            input: Box::new(unoptimized(*input)),
+        },
+    };
+    PhysPlan { node, partitioning: Partitioning::Arbitrary }
+}
+
+// ---------------------------------------------------------------------
+// Pass 1: pushdown — move filters and projections as close to the scans
+// as possible so shuffles (and local kernels) see fewer rows/columns.
+// ---------------------------------------------------------------------
+
+fn pushdown(plan: LogicalPlan) -> LogicalPlan {
+    match plan {
+        LogicalPlan::Filter { input, pred } => {
+            let input = pushdown(*input);
+            push_filter(input, pred)
+        }
+        LogicalPlan::Select { input, cols } => {
+            let input = pushdown(*input);
+            push_select(input, cols)
+        }
+        LogicalPlan::Scan { .. } => plan,
+        LogicalPlan::Join { left, right, opts } => LogicalPlan::Join {
+            left: Box::new(pushdown(*left)),
+            right: Box::new(pushdown(*right)),
+            opts,
+        },
+        LogicalPlan::GroupBy { input, keys, aggs, strategy } => LogicalPlan::GroupBy {
+            input: Box::new(pushdown(*input)),
+            keys,
+            aggs,
+            strategy,
+        },
+        LogicalPlan::Sort { input, opts } => LogicalPlan::Sort {
+            input: Box::new(pushdown(*input)),
+            opts,
+        },
+        LogicalPlan::Distinct { input } => LogicalPlan::Distinct {
+            input: Box::new(pushdown(*input)),
+        },
+        LogicalPlan::SetOp { left, right, kind } => LogicalPlan::SetOp {
+            left: Box::new(pushdown(*left)),
+            right: Box::new(pushdown(*right)),
+            kind,
+        },
+        LogicalPlan::AddScalar { input, col, scalar } => LogicalPlan::AddScalar {
+            input: Box::new(pushdown(*input)),
+            col,
+            scalar,
+        },
+        LogicalPlan::Rebalance { input } => LogicalPlan::Rebalance {
+            input: Box::new(pushdown(*input)),
+        },
+    }
+}
+
+/// Push `pred` as deep below `input` as semantics allow.
+fn push_filter(input: LogicalPlan, pred: FilterPred) -> LogicalPlan {
+    match input {
+        // Through a join: a one-sided predicate moves into that side.
+        // Sound for the side whose rows the join preserves verbatim
+        // (inner: both; left join: left side; right join: right side).
+        // Outer-side predicates must stay above the null-filling join.
+        LogicalPlan::Join { left, right, opts } => {
+            let nleft = left.out_arity();
+            let push_left = pred.col < nleft
+                && matches!(opts.join_type, JoinType::Inner | JoinType::Left);
+            let push_right = pred.col >= nleft
+                && pred.col < nleft + right.out_arity()
+                && matches!(opts.join_type, JoinType::Inner | JoinType::Right);
+            if push_left {
+                LogicalPlan::Join { left: Box::new(push_filter(*left, pred)), right, opts }
+            } else if push_right {
+                let pred = FilterPred { col: pred.col - nleft, ..pred };
+                LogicalPlan::Join { left, right: Box::new(push_filter(*right, pred)), opts }
+            } else {
+                LogicalPlan::Filter {
+                    input: Box::new(LogicalPlan::Join { left, right, opts }),
+                    pred,
+                }
+            }
+        }
+        // A key predicate commutes with groupby: dropping whole groups
+        // by key equals dropping their rows by key first.
+        LogicalPlan::GroupBy { input, keys, aggs, strategy } if pred.col < keys.len() => {
+            let pred = FilterPred { col: keys[pred.col], ..pred };
+            LogicalPlan::GroupBy {
+                input: Box::new(push_filter(*input, pred)),
+                keys,
+                aggs,
+                strategy,
+            }
+        }
+        // Filters commute with (and shrink) sorts, dedupe and set ops.
+        LogicalPlan::Sort { input, opts } => LogicalPlan::Sort {
+            input: Box::new(push_filter(*input, pred)),
+            opts,
+        },
+        LogicalPlan::Distinct { input } => LogicalPlan::Distinct {
+            input: Box::new(push_filter(*input, pred)),
+        },
+        LogicalPlan::SetOp { left, right, kind } => LogicalPlan::SetOp {
+            left: Box::new(push_filter(*left, pred.clone())),
+            right: Box::new(push_filter(*right, pred)),
+            kind,
+        },
+        // Through another filter (conjunction order is irrelevant).
+        LogicalPlan::Filter { input, pred: outer } => LogicalPlan::Filter {
+            input: Box::new(push_filter(*input, pred)),
+            pred: outer,
+        },
+        // Through a projection: remap to the pre-projection column.
+        LogicalPlan::Select { input, cols } if pred.col < cols.len() => {
+            let pred = FilterPred { col: cols[pred.col], ..pred };
+            LogicalPlan::Select {
+                input: Box::new(push_filter(*input, pred)),
+                cols,
+            }
+        }
+        // Below add_scalar unless the predicate reads the mutated column.
+        LogicalPlan::AddScalar { input, col, scalar } if pred.col != col => {
+            LogicalPlan::AddScalar {
+                input: Box::new(push_filter(*input, pred)),
+                col,
+                scalar,
+            }
+        }
+        // Rebalance targets post-filter row counts: do not reorder.
+        other => LogicalPlan::Filter { input: Box::new(other), pred },
+    }
+}
+
+/// Push a projection as deep below `input` as semantics allow.
+fn push_select(input: LogicalPlan, cols: Vec<usize>) -> LogicalPlan {
+    match input {
+        // Below a sort whose keys all survive the projection.
+        LogicalPlan::Sort { input, opts }
+            if opts.keys.iter().all(|k| cols.contains(&k.col)) =>
+        {
+            let keys = opts
+                .keys
+                .iter()
+                .map(|k| SortKey {
+                    col: cols.iter().position(|&c| c == k.col).expect("checked"),
+                    ascending: k.ascending,
+                })
+                .collect();
+            LogicalPlan::Sort {
+                input: Box::new(push_select(*input, cols)),
+                opts: SortOptions { keys, stable: opts.stable },
+            }
+        }
+        // Below a filter whose column survives the projection.
+        LogicalPlan::Filter { input, pred } if cols.contains(&pred.col) => {
+            let col = cols.iter().position(|&c| c == pred.col).expect("checked");
+            LogicalPlan::Filter {
+                input: Box::new(push_select(*input, cols)),
+                pred: FilterPred { col, ..pred },
+            }
+        }
+        // Compose adjacent projections.
+        LogicalPlan::Select { input, cols: inner }
+            if cols.iter().all(|&c| c < inner.len()) =>
+        {
+            let composed = cols.iter().map(|&c| inner[c]).collect();
+            push_select(*input, composed)
+        }
+        // Below add_scalar; a projected-away add_scalar is dead code. A
+        // column projected *twice* pins the add_scalar above (pushing it
+        // would update only one copy).
+        LogicalPlan::AddScalar { input, col, scalar } => {
+            match cols.iter().filter(|&&c| c == col).count() {
+                0 => push_select(*input, cols),
+                1 => LogicalPlan::AddScalar {
+                    col: cols.iter().position(|&c| c == col).expect("checked"),
+                    input: Box::new(push_select(*input, cols)),
+                    scalar,
+                },
+                _ => LogicalPlan::Select {
+                    input: Box::new(LogicalPlan::AddScalar { input, col, scalar }),
+                    cols,
+                },
+            }
+        }
+        // Rebalance routes by row counts only: projection commutes.
+        LogicalPlan::Rebalance { input } => LogicalPlan::Rebalance {
+            input: Box::new(push_select(*input, cols)),
+        },
+        other => LogicalPlan::Select { input: Box::new(other), cols },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pass 2: partitioning lineage — propagate placement knowledge bottom-up
+// and decide every exchange.
+// ---------------------------------------------------------------------
+
+fn annotate(plan: LogicalPlan) -> PhysPlan {
+    match plan {
+        LogicalPlan::Scan { name, table } => PhysPlan {
+            node: PhysNode::Scan { name, table },
+            partitioning: Partitioning::Arbitrary,
+        },
+        // Filters keep a row subset in place: lineage unchanged.
+        LogicalPlan::Filter { input, pred } => {
+            let i = annotate(*input);
+            let partitioning = i.partitioning.clone();
+            PhysPlan {
+                node: PhysNode::Filter { input: Box::new(i), pred },
+                partitioning,
+            }
+        }
+        // Projections remap lineage columns; dropping one drops lineage.
+        LogicalPlan::Select { input, cols } => {
+            let i = annotate(*input);
+            let partitioning = i
+                .partitioning
+                .map_columns(|c| cols.iter().position(|&x| x == c));
+            PhysPlan {
+                node: PhysNode::Select { input: Box::new(i), cols },
+                partitioning,
+            }
+        }
+        LogicalPlan::Join { left, right, opts } => {
+            let nleft = left.out_arity();
+            let l = annotate(*left);
+            let r = annotate(*right);
+            let exchange = match (
+                l.partitioning.hash_exact(&opts.left_on),
+                r.partitioning.hash_exact(&opts.right_on),
+            ) {
+                (true, true) => ExchangeSides::Neither,
+                (true, false) => ExchangeSides::RightOnly,
+                (false, true) => ExchangeSides::LeftOnly,
+                (false, false) => ExchangeSides::Both,
+            };
+            // Output placement is the hash of the surviving side's keys.
+            // Full-outer output mixes rows routed by left-key and
+            // right-key hashes with nulls on the opposite side: no
+            // single column list describes it.
+            let partitioning = match opts.join_type {
+                JoinType::Inner | JoinType::Left => {
+                    Partitioning::HashKeys(opts.left_on.clone())
+                }
+                JoinType::Right => Partitioning::HashKeys(
+                    opts.right_on.iter().map(|&c| nleft + c).collect(),
+                ),
+                JoinType::FullOuter => Partitioning::Arbitrary,
+            };
+            PhysPlan {
+                node: PhysNode::Join {
+                    left: Box::new(l),
+                    right: Box::new(r),
+                    opts,
+                    exchange,
+                },
+                partitioning,
+            }
+        }
+        LogicalPlan::GroupBy { input, keys, aggs, strategy } => {
+            let i = annotate(*input);
+            let (mode, partitioning) = if i.partitioning.co_locates(&keys) {
+                // Keys become the leading output columns: remap lineage.
+                let part = i
+                    .partitioning
+                    .map_columns(|c| keys.iter().position(|&k| k == c));
+                (GroupbyMode::Prepartitioned, part)
+            } else {
+                (
+                    GroupbyMode::Exchange(strategy),
+                    Partitioning::HashKeys((0..keys.len()).collect()),
+                )
+            };
+            PhysPlan {
+                node: PhysNode::GroupBy { input: Box::new(i), keys, aggs, mode },
+                partitioning,
+            }
+        }
+        LogicalPlan::Sort { input, opts } => {
+            let i = annotate(*input);
+            let prepartitioned = i.partitioning.range_prefix_compatible(&opts.keys);
+            // When elided, placement is untouched (keep the *input*
+            // lineage — claiming `opts.keys` could overstate equal-key
+            // co-location when the input ranges on a longer key list).
+            let partitioning = if prepartitioned {
+                i.partitioning.clone()
+            } else {
+                Partitioning::RangeKeys(opts.keys.clone())
+            };
+            PhysPlan {
+                node: PhysNode::Sort { input: Box::new(i), opts, prepartitioned },
+                partitioning,
+            }
+        }
+        LogicalPlan::Distinct { input } => {
+            let all: Vec<usize> = (0..input.out_arity()).collect();
+            let i = annotate(*input);
+            let prepartitioned = i.partitioning.co_locates(&all);
+            let partitioning = if prepartitioned {
+                i.partitioning.clone()
+            } else {
+                Partitioning::HashKeys(all)
+            };
+            PhysPlan {
+                node: PhysNode::Distinct { input: Box::new(i), prepartitioned },
+                partitioning,
+            }
+        }
+        LogicalPlan::SetOp { left, right, kind } => {
+            let all: Vec<usize> = (0..left.out_arity()).collect();
+            let l = annotate(*left);
+            let r = annotate(*right);
+            PhysPlan {
+                node: PhysNode::SetOp {
+                    left: Box::new(l),
+                    right: Box::new(r),
+                    kind,
+                },
+                partitioning: Partitioning::HashKeys(all),
+            }
+        }
+        // In-place column mutation: lineage survives unless it named the
+        // mutated column (downstream consumers would route by the *new*
+        // values, which no longer match the placement).
+        LogicalPlan::AddScalar { input, col, scalar } => {
+            let i = annotate(*input);
+            let partitioning = i
+                .partitioning
+                .map_columns(|c| if c == col { None } else { Some(c) });
+            PhysPlan {
+                node: PhysNode::AddScalar { input: Box::new(i), col, scalar },
+                partitioning,
+            }
+        }
+        // Rebalance slices rows contiguously across ranks: any keyed
+        // placement is destroyed.
+        LogicalPlan::Rebalance { input } => PhysPlan {
+            node: PhysNode::Rebalance { input: Box::new(annotate(*input)) },
+            partitioning: Partitioning::Arbitrary,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::{AggFun, CmpOp};
+    use crate::plan::DistFrame;
+    use crate::types::Value;
+
+    fn t(cols: usize) -> Table {
+        let pairs: Vec<(String, Column)> = (0..cols)
+            .map(|i| (format!("c{i}"), Column::from_i64(vec![1, 2, 3])))
+            .collect();
+        let borrowed: Vec<(&str, Column)> =
+            pairs.iter().map(|(n, c)| (n.as_str(), c.clone())).collect();
+        Table::from_columns(borrowed).unwrap()
+    }
+
+    fn join_groupby(join_key: usize, group_key: usize) -> PhysPlan {
+        DistFrame::scan(t(2))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(join_key, join_key))
+            .groupby(&[group_key], &[AggSpec::new(1, AggFun::Sum)])
+            .optimized()
+    }
+
+    #[test]
+    fn groupby_shuffle_elided_after_cokeyed_join() {
+        // The acceptance-criterion shape: join on 0, group on 0 — the
+        // lineage pass must remove the groupby exchange automatically.
+        let p = join_groupby(0, 0);
+        match &p.node {
+            PhysNode::GroupBy { mode, .. } => {
+                assert_eq!(*mode, GroupbyMode::Prepartitioned, "shuffle not elided")
+            }
+            other => panic!("expected GroupBy root, got {other:?}"),
+        }
+        assert_eq!(p.partitioning, Partitioning::HashKeys(vec![0]));
+        // join(2 shuffles) + groupby(elided) = 2 exchanges total
+        assert_eq!(p.exchange_count(), 2);
+        assert!(p.to_string().contains("shuffle elided"), "{p}");
+    }
+
+    #[test]
+    fn groupby_on_other_key_still_shuffles() {
+        let p = join_groupby(0, 1);
+        match &p.node {
+            PhysNode::GroupBy { mode, .. } => {
+                assert!(matches!(mode, GroupbyMode::Exchange(_)), "must not elide")
+            }
+            other => panic!("expected GroupBy root, got {other:?}"),
+        }
+        assert_eq!(p.exchange_count(), 3);
+    }
+
+    #[test]
+    fn repeated_join_on_same_key_shuffles_fresh_side_only() {
+        let p = DistFrame::scan(t(2))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(0, 0))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(0, 0))
+            .optimized();
+        match &p.node {
+            PhysNode::Join { exchange, .. } => {
+                assert_eq!(*exchange, ExchangeSides::RightOnly)
+            }
+            other => panic!("expected Join root, got {other:?}"),
+        }
+        assert_eq!(p.exchange_count(), 3); // 2 (first join) + 1 (second)
+    }
+
+    #[test]
+    fn full_outer_join_breaks_lineage() {
+        let p = DistFrame::scan(t(2))
+            .join(
+                DistFrame::scan(t(2)),
+                JoinOptions::inner(0, 0).with_type(crate::ops::JoinType::FullOuter),
+            )
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+            .optimized();
+        match &p.node {
+            PhysNode::GroupBy { mode, .. } => {
+                assert!(matches!(mode, GroupbyMode::Exchange(_)))
+            }
+            other => panic!("expected GroupBy root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn distinct_elides_after_any_keyed_op() {
+        let p = DistFrame::scan(t(2))
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Count)])
+            .distinct()
+            .optimized();
+        match &p.node {
+            PhysNode::Distinct { prepartitioned, .. } => assert!(prepartitioned),
+            other => panic!("expected Distinct root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sort_after_sort_elides_exchange() {
+        let p = DistFrame::scan(t(2))
+            .sort(SortOptions {
+                keys: vec![SortKey::asc(0), SortKey::desc(1)],
+                stable: false,
+            })
+            .sort(SortOptions::by(0))
+            .optimized();
+        match &p.node {
+            PhysNode::Sort { prepartitioned, .. } => assert!(prepartitioned),
+            other => panic!("expected Sort root, got {other:?}"),
+        }
+        // elided sort keeps the *input* lineage, not its own keys
+        assert_eq!(
+            p.partitioning,
+            Partitioning::RangeKeys(vec![SortKey::asc(0), SortKey::desc(1)])
+        );
+        // mismatched direction must not elide
+        let p2 = DistFrame::scan(t(2))
+            .sort(SortOptions::by(0))
+            .sort(SortOptions::by_desc(0))
+            .optimized();
+        match &p2.node {
+            PhysNode::Sort { prepartitioned, .. } => assert!(!prepartitioned),
+            other => panic!("expected Sort root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn filter_pushes_below_inner_join_and_sort() {
+        let p = DistFrame::scan(t(2))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(0, 0))
+            .sort(SortOptions::by(0))
+            .filter(3, CmpOp::Gt, Value::Int64(1)) // col 3 = right side col 1
+            .optimized();
+        // filter must now sit under the join, on the right input
+        match &p.node {
+            PhysNode::Sort { input, .. } => match &input.node {
+                PhysNode::Join { right, .. } => match &right.node {
+                    PhysNode::Filter { pred, .. } => assert_eq!(pred.col, 1),
+                    other => panic!("filter not pushed into right side: {other:?}"),
+                },
+                other => panic!("expected Join under Sort, got {other:?}"),
+            },
+            other => panic!("expected Sort root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn filter_stays_above_outer_join_null_side() {
+        let p = DistFrame::scan(t(2))
+            .join(
+                DistFrame::scan(t(2)),
+                JoinOptions::inner(0, 0).with_type(crate::ops::JoinType::Left),
+            )
+            .filter(2, CmpOp::Eq, Value::Int64(1)) // right-side col: null-filled
+            .optimized();
+        assert!(
+            matches!(&p.node, PhysNode::Filter { .. }),
+            "right-side filter must not cross a left join: {p}"
+        );
+    }
+
+    #[test]
+    fn select_pushes_below_sort_and_remaps_lineage() {
+        let p = DistFrame::scan(t(3))
+            .groupby(&[1], &[AggSpec::new(2, AggFun::Sum)])
+            .select(&[0]) // keep the key only
+            .optimized();
+        // lineage survives the projection: hash[0] on the key
+        assert_eq!(p.partitioning, Partitioning::HashKeys(vec![0]));
+
+        let q = DistFrame::scan(t(3))
+            .sort(SortOptions::by(1))
+            .select(&[1, 0])
+            .optimized();
+        match &q.node {
+            PhysNode::Sort { input, opts, .. } => {
+                assert_eq!(opts.keys[0].col, 0, "sort key not remapped");
+                assert!(matches!(&input.node, PhysNode::Select { .. }));
+            }
+            other => panic!("expected Sort root after pushdown, got {other:?}"),
+        }
+        assert_eq!(q.partitioning, Partitioning::RangeKeys(vec![SortKey::asc(0)]));
+    }
+
+    #[test]
+    fn rebalance_and_addscalar_break_lineage_conservatively() {
+        let p = DistFrame::scan(t(2))
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+            .rebalance()
+            .optimized();
+        assert_eq!(p.partitioning, Partitioning::Arbitrary);
+
+        let keyed = DistFrame::scan(t(2)).groupby(&[0], &[AggSpec::new(1, AggFun::Sum)]);
+        let touched = keyed.clone().add_scalar(0, 1.0).optimized();
+        assert_eq!(touched.partitioning, Partitioning::Arbitrary);
+        let untouched = keyed.add_scalar(1, 1.0).optimized();
+        assert_eq!(untouched.partitioning, Partitioning::HashKeys(vec![0]));
+    }
+
+    #[test]
+    fn unoptimized_never_elides() {
+        let frame = DistFrame::scan(t(2))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(0, 0))
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)]);
+        let naive = unoptimized(frame.plan().clone());
+        assert_eq!(naive.exchange_count(), 3);
+        assert_eq!(frame.optimized().exchange_count(), 2);
+    }
+}

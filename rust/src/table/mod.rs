@@ -160,6 +160,16 @@ impl Table {
         })
     }
 
+    /// [`Table::concat`] over owned tables — saves call sites from
+    /// building `&parts.iter().collect::<Vec<_>>()` reference slices.
+    /// Single-element vectors are returned as-is (no copy).
+    pub fn concat_owned(mut tables: Vec<Table>) -> Result<Table> {
+        if tables.len() == 1 {
+            return Ok(tables.pop().expect("len checked"));
+        }
+        Table::concat(&tables.iter().collect::<Vec<_>>())
+    }
+
     /// Project onto the given column indices.
     pub fn project(&self, indices: &[usize]) -> Result<Table> {
         let schema = self.schema.project(indices)?;
@@ -264,6 +274,18 @@ mod tests {
         assert_eq!(parts.iter().map(|p| p.num_rows()).collect::<Vec<_>>(), vec![2, 1, 1]);
         let back = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
         assert_eq!(back.num_rows(), 4);
+    }
+
+    #[test]
+    fn concat_owned_matches_concat() {
+        let tab = t();
+        let parts = tab.split_even(3);
+        let by_ref = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        let owned = Table::concat_owned(parts).unwrap();
+        assert_eq!(owned, by_ref);
+        // single-element fast path returns the table unchanged
+        assert_eq!(Table::concat_owned(vec![tab.clone()]).unwrap(), tab);
+        assert!(Table::concat_owned(Vec::new()).is_err());
     }
 
     #[test]

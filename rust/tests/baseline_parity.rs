@@ -154,7 +154,7 @@ fn pipeline_parity_cylonflow_vs_mr_vs_naive() {
         .run(|env| {
             let l = datagen::partition_for_rank(201, ROWS, 0.9, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(202, ROWS, 0.9, env.rank(), env.world_size());
-            dist::pipeline(&l, &r, 7.0, env).map(|rep| rep.table)
+            dist::pipeline(l, r, 7.0, env).map(|rep| rep.table)
         })
         .unwrap()
         .wait()

@@ -56,7 +56,7 @@ fn dist_join_matches_local_all_backends() {
                 .unwrap()
                 .wait()
                 .unwrap();
-            let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+            let dist_all = Table::concat_owned(out).unwrap();
             let reference = ops::join(&lall, &rall, &JoinOptions::inner(0, 0)).unwrap();
             assert_eq!(
                 row_multiset(&dist_all),
@@ -95,7 +95,7 @@ fn dist_groupby_both_strategies_match_local() {
                 .unwrap()
                 .wait()
                 .unwrap();
-            let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+            let dist_all = Table::concat_owned(out).unwrap();
             let reference = ops::groupby(
                 &all,
                 &[0],
@@ -143,7 +143,7 @@ fn dist_sort_globally_ordered_and_complete() {
             }
         }
         assert_eq!(total, all.num_rows());
-        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let dist_all = Table::concat_owned(out).unwrap();
         assert_eq!(row_multiset(&dist_all), row_multiset(&all));
     }
 }
@@ -179,7 +179,7 @@ fn dist_pipeline_matches_composed_local_reference() {
         .run(move |env| {
             let l = datagen::partition_for_rank(51, 4000, 0.9, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(52, 4000, 0.9, env.rank(), env.world_size());
-            dist::pipeline(&l, &r, 10.0, env).map(|rep| rep.table)
+            dist::pipeline(l, r, 10.0, env).map(|rep| rep.table)
         })
         .unwrap()
         .wait()

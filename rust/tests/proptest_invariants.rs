@@ -5,7 +5,8 @@
 use cylonflow::column::Column;
 use cylonflow::dist;
 use cylonflow::executor::{Cluster, CylonExecutor};
-use cylonflow::ops::{self, AggSpec, JoinAlgo, JoinOptions, NativeHasher, SortOptions};
+use cylonflow::ops::{self, AggSpec, CmpOp, JoinAlgo, JoinOptions, NativeHasher, SortOptions};
+use cylonflow::plan::DistFrame;
 use cylonflow::proptest_lite::{run_prop, Gen};
 use cylonflow::table::{table_from_bytes, table_to_bytes, Table};
 use cylonflow::types::Value;
@@ -133,7 +134,7 @@ fn prop_join_partitioned_equals_whole() {
         for (a, b) in lp.iter().zip(&rp) {
             pieces.push(ops::join(a, b, &opts).unwrap());
         }
-        let merged = Table::concat(&pieces.iter().collect::<Vec<_>>()).unwrap();
+        let merged = Table::concat_owned(pieces).unwrap();
         let reference = ops::join(&l, &r, &opts).unwrap();
         assert_eq!(row_multiset(&merged), row_multiset(&reference));
     });
@@ -152,7 +153,7 @@ fn prop_groupby_partial_merge_equals_whole() {
             .iter()
             .map(|c| ops::groupby(c, &[0], &aggs).unwrap())
             .collect();
-        let all_partials = Table::concat(&partials.iter().collect::<Vec<_>>()).unwrap();
+        let all_partials = Table::concat_owned(partials).unwrap();
         let merged = ops::groupby(
             &all_partials,
             &[0],
@@ -290,7 +291,7 @@ fn prop_merge_sorted_equals_sort_of_concat() {
             })
             .collect();
         let merged = ops::merge_sorted(&runs.iter().collect::<Vec<_>>(), &opts).unwrap();
-        let concat = Table::concat(&runs.iter().collect::<Vec<_>>()).unwrap();
+        let concat = Table::concat_owned(runs).unwrap();
         let reference = ops::sort(&concat, &opts).unwrap();
         assert_eq!(row_multiset(&merged), row_multiset(&reference));
         assert!(ops::sort::is_sorted(&merged, &opts));
@@ -478,7 +479,7 @@ fn prop_dist_join_invariant_under_partitioning() {
             vec![l.split_even(p), r.split_even(p)],
             move |mine, env| dist::join(&mine[0], &mine[1], &JoinOptions::inner(3, 3), env),
         );
-        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let dist_all = Table::concat_owned(out).unwrap();
         assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
     });
 }
@@ -504,7 +505,7 @@ fn prop_dist_groupby_invariant_under_partitioning() {
                     vec![t.split_even(p)],
                     move |mine, env| dist::groupby(&mine[0], &[0], &aggs, strategy, env),
                 );
-                let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+                let dist_all = Table::concat_owned(out).unwrap();
                 assert_eq!(
                     row_multiset(&dist_all),
                     row_multiset(&reference),
@@ -524,7 +525,7 @@ fn prop_dist_sort_invariant_under_partitioning() {
             dist::sort(&mine[0], &SortOptions::by(0), env)
         });
         // rank-ordered concatenation is the globally sorted table
-        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let dist_all = Table::concat_owned(out).unwrap();
         assert_eq!(row_multiset(&dist_all), row_multiset(&t), "row conservation");
         assert!(
             ops::sort::is_sorted(&dist_all, &SortOptions::by(0)),
@@ -542,9 +543,130 @@ fn prop_dist_distinct_invariant_under_partitioning() {
         let out = run_gang_over_split(p, vec![t.split_even(p)], |mine, env| {
             dist::distinct(&mine[0], env)
         });
-        let dist_all = Table::concat(&out.iter().collect::<Vec<_>>()).unwrap();
+        let dist_all = Table::concat_owned(out).unwrap();
         assert_eq!(row_multiset(&dist_all), row_multiset(&reference));
     });
+}
+
+// ---- plan layer: for any row split, the optimized plan must equal the
+// ---- unoptimized plan and the composed serial ops::* reference --------
+
+#[test]
+fn prop_plan_optimized_equals_unoptimized_and_serial() {
+    run_prop(
+        "optimized plan ≡ unoptimized plan ≡ composed serial reference",
+        6,
+        |g| {
+            let l = random_table(g);
+            let r = random_table(g);
+            let p = g.usize_in(1, 4);
+            let aggs = [
+                AggSpec::new(1, ops::AggFun::Sum),
+                AggSpec::new(5, ops::AggFun::Count),
+            ];
+            // serial reference: ops::join → ops::groupby → ops::sort
+            let j = ops::join(&l, &r, &JoinOptions::inner(3, 3)).unwrap();
+            let gb = ops::groupby(&j, &[3], &aggs).unwrap();
+            let reference = ops::sort(&gb, &SortOptions::by(0)).unwrap();
+            let run = |optimized: bool| -> Table {
+                let out = run_gang_over_split(
+                    p,
+                    vec![l.split_even(p), r.split_even(p)],
+                    move |mine, env| {
+                        let f = DistFrame::scan(mine[0].clone())
+                            .join(DistFrame::scan(mine[1].clone()), JoinOptions::inner(3, 3))
+                            .groupby(&[3], &aggs)
+                            .sort(SortOptions::by(0));
+                        let rep = if optimized {
+                            f.execute(env)?
+                        } else {
+                            f.execute_unoptimized(env)?
+                        };
+                        Ok(rep.table)
+                    },
+                );
+                Table::concat_owned(out).unwrap()
+            };
+            let optimized = run(true);
+            let naive = run(false);
+            assert_eq!(
+                row_multiset(&optimized),
+                row_multiset(&reference),
+                "optimized plan vs serial reference"
+            );
+            assert_eq!(
+                row_multiset(&naive),
+                row_multiset(&reference),
+                "unoptimized plan vs serial reference"
+            );
+            // the optimized output must also arrive globally sorted
+            assert!(ops::sort::is_sorted(&optimized, &SortOptions::by(0)));
+        },
+    );
+}
+
+#[test]
+fn prop_plan_pushdown_preserves_results() {
+    run_prop("filter/select pushdown ≡ unpushed plan ≡ serial", 6, |g| {
+        let t = random_table(g);
+        let p = g.usize_in(1, 4);
+        let thresh = g.i64_in(-30, 30);
+        // serial reference of sort → filter(kd<thresh) → select[kd,v] →
+        // distinct (the sort cannot change the final multiset)
+        let keys: Vec<Option<i64>> = (0..t.num_rows())
+            .map(|r| t.value(r, 3).unwrap().as_i64())
+            .collect();
+        let f = ops::filter(&t, |r| keys[r].map(|k| k < thresh).unwrap_or(false));
+        let s = f.project(&[3, 1]).unwrap();
+        let reference = ops::distinct(&s, &[0, 1]).unwrap();
+        let run = |optimized: bool| -> Table {
+            let out = run_gang_over_split(p, vec![t.split_even(p)], move |mine, env| {
+                let f = DistFrame::scan(mine[0].clone())
+                    .sort(SortOptions::by(3))
+                    .filter(3, CmpOp::Lt, Value::Int64(thresh))
+                    .select(&[3, 1])
+                    .distinct();
+                let rep = if optimized {
+                    f.execute(env)?
+                } else {
+                    f.execute_unoptimized(env)?
+                };
+                Ok(rep.table)
+            });
+            Table::concat_owned(out).unwrap()
+        };
+        assert_eq!(
+            row_multiset(&run(true)),
+            row_multiset(&reference),
+            "optimized (pushed-down) plan vs serial"
+        );
+        assert_eq!(
+            row_multiset(&run(false)),
+            row_multiset(&reference),
+            "unoptimized plan vs serial"
+        );
+    });
+}
+
+#[test]
+fn optimizer_elides_groupby_shuffle_after_cokeyed_join() {
+    use cylonflow::plan::{GroupbyMode, PhysNode};
+    let t = Table::from_columns(vec![
+        ("k", Column::from_i64(vec![1, 2, 3])),
+        ("v", Column::from_i64(vec![4, 5, 6])),
+    ])
+    .unwrap();
+    let plan = DistFrame::scan(t.clone())
+        .join(DistFrame::scan(t), JoinOptions::inner(0, 0))
+        .groupby(&[0], &[AggSpec::new(1, ops::AggFun::Sum)])
+        .optimized();
+    match &plan.node {
+        PhysNode::GroupBy { mode, .. } => {
+            assert_eq!(*mode, GroupbyMode::Prepartitioned, "groupby shuffle must be elided");
+        }
+        other => panic!("expected GroupBy at plan root, got {other:?}"),
+    }
+    assert_eq!(plan.exchange_count(), 2, "only the join's two shuffles remain");
 }
 
 #[test]
