@@ -2,17 +2,40 @@
 //! written against the lazy planner: build a `DistFrame`, EXPLAIN the
 //! optimized plan (showing the shuffle the partitioning-lineage pass
 //! elides), execute it, and report the per-stage comm/compute breakdown
-//! against the unoptimized plan.
+//! (including exchange spill) against the unoptimized plan.
 //!
 //! ```bash
 //! cargo run --release --example plan_pipeline -- [rows] [workers]
 //! ```
+//!
+//! The exchanges stream through the out-of-core path: received shuffle
+//! frames beyond the spill budget wait on disk instead of aborting the
+//! run. Knobs (see `config::ExchangeConfig`):
+//!
+//! - `CYLONFLOW_SPILL_BUDGET` — in-memory bytes per exchange before
+//!   spilling (suffix `k`/`m`/`g` allowed; default 256m). Set it to a
+//!   few `k` to watch the `spill` column light up at any data size:
+//!   `CYLONFLOW_SPILL_BUDGET=8k cargo run --release --example
+//!   plan_pipeline -- 200000 4`
+//! - `CYLONFLOW_FRAME_BYTES` — wire-frame payload target (default 4m).
+//! - `CYLONFLOW_SPILL_DIR` — temp-file directory (default: the system
+//!   temp dir; files are created only on overflow and removed after the
+//!   exchange merges).
 
 use cylonflow::dist::pipeline::frame;
 use cylonflow::metrics::Phase;
 use cylonflow::plan::PlanReport;
 use cylonflow::prelude::*;
 use std::time::Instant;
+
+/// Human-readable byte count for the spill column.
+fn fmt_bytes(b: u64) -> String {
+    match b {
+        0..=1023 => format!("{b}B"),
+        1024..=1048575 => format!("{:.1}KiB", b as f64 / 1024.0),
+        _ => format!("{:.1}MiB", b as f64 / (1024.0 * 1024.0)),
+    }
+}
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -65,13 +88,24 @@ fn main() -> Result<()> {
     println!("=== per-stage breakdown (rank 0, optimized) ===");
     for s in &opt_reports[0].stages {
         println!(
-            "  {:<10} compute={:>7.1}ms aux={:>7.1}ms comm={:>7.1}ms",
+            "  {:<10} compute={:>7.1}ms aux={:>7.1}ms comm={:>7.1}ms spill={:>6}",
             s.name,
             s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
             s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
             s.timers.get(Phase::Communication).as_secs_f64() * 1e3,
+            fmt_bytes(s.spill.spilled_bytes),
         );
     }
+    let spill_total: u64 = opt_reports.iter().map(|r| r.spill().spilled_bytes).sum();
+    println!(
+        "exchange spill across ranks: {} ({})",
+        fmt_bytes(spill_total),
+        if spill_total == 0 {
+            "all exchanges fit the in-memory budget; try CYLONFLOW_SPILL_BUDGET=8k"
+        } else {
+            "out-of-core path engaged"
+        }
+    );
 
     let comm = |reports: &[PlanReport]| -> f64 {
         reports

@@ -73,7 +73,7 @@ pub fn sort_rows(rows: &mut [Row], key_col: usize) {
 }
 
 /// End-to-end row-oriented pipeline (join → groupby → sort → add scalar),
-/// mirroring [`crate::dist::pipeline`] for the serial bench.
+/// mirroring [`crate::dist::pipeline()`] for the serial bench.
 pub fn pipeline_rows(left: &Table, right: &Table, scalar: i64) -> Result<Vec<Row>> {
     let l = to_rows(left);
     let r = to_rows(right);

@@ -17,9 +17,27 @@
 //!
 //! All algorithms speak `Vec<Vec<u8>>` (one opaque payload per peer);
 //! table semantics live one layer up in [`super::collectives`].
+//!
+//! Each of the hot collectives also has a **streaming** form
+//! ([`all_to_all_streamed`], [`allgather_streamed`]) that moves framed
+//! chunks into a [`FrameSink`] as they arrive instead of materializing
+//! `Vec<Vec<u8>>` — the transport half of the out-of-core exchange path
+//! (the other half is [`crate::store::SpillBuffer`]).
 
 use super::Communicator;
-use crate::error::Result;
+use crate::error::{Error, Result};
+
+/// Shared argument check: collectives need exactly one payload per rank
+/// (also used by [`super::collectives`]'s table-level shuffles).
+pub(crate) fn check_one_part_per_rank(got: usize, world: usize, what: &str) -> Result<()> {
+    if got != world {
+        return Err(Error::invalid(format!(
+            "{what}: got {got} partitions for world size {world}; callers must \
+             pass exactly one partition per rank"
+        )));
+    }
+    Ok(())
+}
 
 /// All-to-all algorithm choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,8 +101,13 @@ impl AlgoSet {
 }
 
 /// Exchange `parts[j]` to rank `j`; returns what every rank sent to us
-/// (`out[j]` = payload from rank `j`). `parts.len()` must equal world size;
-/// `parts[rank]` round-trips locally without hitting the transport.
+/// (`out[j]` = payload from rank `j`). `parts[rank]` round-trips locally
+/// without hitting the transport.
+///
+/// # Errors
+/// Returns [`crate::error::Error::InvalidArgument`] when `parts.len()`
+/// differs from the world size — the SPMD contract every collective
+/// shares (and, being SPMD, every rank observes the same error).
 pub fn all_to_all(
     comm: &dyn Communicator,
     algo: AllToAllAlgo,
@@ -93,7 +116,7 @@ pub fn all_to_all(
 ) -> Result<Vec<Vec<u8>>> {
     let p = comm.world_size();
     let me = comm.rank();
-    assert_eq!(parts.len(), p, "all_to_all needs one part per rank");
+    check_one_part_per_rank(parts.len(), p, "all_to_all")?;
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); p];
     out[me] = std::mem::take(&mut parts[me]);
     if p == 1 {
@@ -311,7 +334,7 @@ pub fn scatter(
     let me = comm.rank();
     if me == root {
         let mut parts = parts.expect("root must provide scatter parts");
-        assert_eq!(parts.len(), p, "scatter needs one part per rank");
+        check_one_part_per_rank(parts.len(), p, "scatter")?;
         let mine = std::mem::take(&mut parts[me]);
         for (j, part) in parts.into_iter().enumerate() {
             if j != me {
@@ -347,6 +370,135 @@ pub fn gather(
         comm.send(root, tag, block)?;
         Ok(None)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming collectives: frames flow into a sink instead of Vec<Vec<u8>>.
+// ---------------------------------------------------------------------------
+
+/// Callback receiving `(source_rank, frame)` as frames arrive. Returns
+/// `Ok(true)` when the frame carried the source's end-of-stream marker
+/// (the `LAST` flag one layer up) — that is how the algorithms know a
+/// peer is done without a length prefix; frame semantics otherwise stay
+/// one layer up in [`super::collectives`].
+pub type FrameSink<'s> = dyn FnMut(usize, Vec<u8>) -> Result<bool> + 's;
+
+/// Streaming all-to-all: `streams[j]` yields the framed chunks destined
+/// for rank `j` (each stream must end with a frame the sink reports as
+/// final); arriving frames flow into `sink` without being gathered into
+/// per-source buffers first, so peak memory is the sink's budget plus
+/// one frame per direction, not the whole exchange.
+///
+/// Schedule: the local stream drains straight into the sink, then the
+/// pairwise partner schedule (XOR for power-of-two worlds, shifted ring
+/// otherwise — the same partners as [`AllToAllAlgo::Pairwise`]), with
+/// sends and receives interleaved per frame to bound in-flight data.
+/// There is deliberately no streamed Bruck: its store-and-forward
+/// message combining would force intermediate ranks to buffer entire
+/// relay payloads, defeating the bounded-memory point.
+///
+/// Consumes `p + 64` tags starting at `tag` (one lane per round; frames
+/// within a lane rely on the transport's per-`(rank, tag)` FIFO order).
+pub fn all_to_all_streamed<'a>(
+    comm: &dyn Communicator,
+    mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + 'a>>,
+    tag: u64,
+    sink: &mut FrameSink<'_>,
+) -> Result<()> {
+    let p = comm.world_size();
+    let me = comm.rank();
+    check_one_part_per_rank(streams.len(), p, "all_to_all_streamed")?;
+    // Local frames never touch the transport.
+    let mine = std::mem::replace(&mut streams[me], Box::new(std::iter::empty()));
+    drain_local(me, mine, sink)?;
+    for round in 1..p {
+        let (to, from) = if p.is_power_of_two() {
+            (me ^ round, me ^ round)
+        } else {
+            ((me + round) % p, (me + p - round) % p)
+        };
+        let lane = tag + round as u64;
+        let mut outbound = std::mem::replace(&mut streams[to], Box::new(std::iter::empty()));
+        let mut sending = true;
+        let mut receiving = true;
+        while sending || receiving {
+            if sending {
+                match outbound.next() {
+                    Some(frame) => comm.send(to, lane, frame)?,
+                    None => sending = false,
+                }
+            }
+            if receiving {
+                let frame = comm.recv(from, lane)?;
+                if sink(from, frame)? {
+                    receiving = false;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Streaming allgather: every rank contributes one frame stream; each
+/// frame is forwarded to all peers as soon as it is produced (linear
+/// fan-out — allgather payloads here are sort samples and stats tables,
+/// where per-frame latency dominates), then every peer's stream drains
+/// into the sink until its final frame.
+///
+/// Consumes 64 tags starting at `tag` (a single lane per sender; FIFO
+/// per `(rank, tag)` orders the frames).
+pub fn allgather_streamed<'a>(
+    comm: &dyn Communicator,
+    frames: Box<dyn Iterator<Item = Vec<u8>> + 'a>,
+    tag: u64,
+    sink: &mut FrameSink<'_>,
+) -> Result<()> {
+    let p = comm.world_size();
+    let me = comm.rank();
+    let mut local_done = false;
+    for frame in frames {
+        for j in 0..p {
+            if j != me {
+                comm.send(j, tag, frame.clone())?;
+            }
+        }
+        local_done = sink(me, frame)?;
+    }
+    if !local_done {
+        return Err(Error::comm(
+            "allgather_streamed: local frame stream ended without a final frame",
+        ));
+    }
+    for j in 0..p {
+        if j != me {
+            loop {
+                let frame = comm.recv(j, tag)?;
+                if sink(j, frame)? {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Drain a rank's own stream into the sink, checking the end-of-stream
+/// contract (every stream must end with a frame the sink reports final).
+fn drain_local(
+    me: usize,
+    stream: impl Iterator<Item = Vec<u8>>,
+    sink: &mut FrameSink<'_>,
+) -> Result<()> {
+    let mut done = false;
+    for frame in stream {
+        done = sink(me, frame)?;
+    }
+    if !done {
+        return Err(Error::comm(
+            "all_to_all_streamed: local frame stream ended without a final frame",
+        ));
+    }
+    Ok(())
 }
 
 /// Sum-allreduce a small i64 vector (linear gather at 0 + bcast — fine for

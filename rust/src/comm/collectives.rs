@@ -7,34 +7,70 @@
 //! `Cylon_env` communication context) and reused across operators —
 //! *"the state keeps this communication context alive for the duration of
 //! an application"* (§IV-A).
+//!
+//! The table collectives come in two forms:
+//!
+//! - **Materializing** ([`CommContext::shuffle`], [`CommContext::allgather`]):
+//!   every serialized payload and every received partition is held in
+//!   memory at once — simple, and the reference semantics.
+//! - **Streaming** ([`CommContext::shuffle_streamed`],
+//!   [`CommContext::allgather_streamed`]): tables are sliced into wire
+//!   frames ([`crate::table::FrameEncoder`]) that flow chunk-by-chunk
+//!   through the streamed algorithms into a [`SpillBuffer`]; received
+//!   frames beyond the configured memory budget spill to temp files and
+//!   replay chunk-at-a-time into the merged output
+//!   ([`Table::concat_stream`]). Identical results (bit-for-bit —
+//!   property tested); receiver overhead beyond the output partition is
+//!   bounded by the budget plus one frame. This is what the
+//!   [`crate::dist`] operators run on, so exchanges whose transient
+//!   buffers would exceed RAM complete.
 
 use super::algorithms::{self, AlgoSet};
 use super::Communicator;
+use crate::config::ExchangeConfig;
 use crate::error::Result;
-use crate::metrics::{Phase, PhaseTimers};
-use crate::table::{table_from_bytes, table_to_bytes, Table};
+use crate::metrics::{Phase, PhaseTimers, SpillStats};
+use crate::store::SpillBuffer;
+use crate::table::{frame_header, table_from_bytes, table_to_bytes, FrameEncoder, Table};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// A live communication context: transport + algorithms + tag allocation
-/// + comm-phase timing.
+/// + comm-phase timing + streaming-exchange (spill) configuration.
 pub struct CommContext {
     comm: Box<dyn Communicator>,
     algos: AlgoSet,
+    exchange: ExchangeConfig,
     // Collective ops consume tag ranges; every rank allocates in the same
     // order (SPMD), so counters stay aligned without coordination.
     next_tag: AtomicU64,
     timers: Mutex<PhaseTimers>,
+    spill: Mutex<SpillStats>,
 }
 
 impl CommContext {
-    /// Wrap a transport with an algorithm set.
+    /// Wrap a transport with an algorithm set and the default
+    /// [`ExchangeConfig`] (4 MiB frames, 256 MiB spill budget).
     pub fn new(comm: Box<dyn Communicator>, algos: AlgoSet) -> Self {
+        Self::with_exchange(comm, algos, ExchangeConfig::default())
+    }
+
+    /// Wrap a transport with an algorithm set and explicit streaming
+    /// exchange knobs (frame size, spill budget, spill directory) — the
+    /// constructor the executor uses to thread [`crate::config::Config`]
+    /// through.
+    pub fn with_exchange(
+        comm: Box<dyn Communicator>,
+        algos: AlgoSet,
+        exchange: ExchangeConfig,
+    ) -> Self {
         CommContext {
             comm,
             algos,
+            exchange,
             next_tag: AtomicU64::new(1 << 16),
             timers: Mutex::new(PhaseTimers::new()),
+            spill: Mutex::new(SpillStats::default()),
         }
     }
 
@@ -63,6 +99,11 @@ impl CommContext {
         self.algos
     }
 
+    /// The streaming-exchange configuration in force.
+    pub fn exchange_config(&self) -> &ExchangeConfig {
+        &self.exchange
+    }
+
     /// Snapshot and reset the accumulated communication timers.
     pub fn take_timers(&self) -> PhaseTimers {
         let mut t = self.timers.lock().expect("timers poisoned");
@@ -75,6 +116,26 @@ impl CommContext {
     /// (per-stage deltas peek without disturbing the app-level report).
     pub fn peek_timers(&self) -> PhaseTimers {
         self.timers.lock().expect("timers poisoned").clone()
+    }
+
+    /// Non-destructive snapshot of the accumulated spill counters
+    /// (monotonic; stage attribution diffs successive snapshots).
+    pub fn peek_spill_stats(&self) -> SpillStats {
+        *self.spill.lock().expect("spill stats poisoned")
+    }
+
+    /// Snapshot and reset the accumulated spill counters.
+    pub fn take_spill_stats(&self) -> SpillStats {
+        let mut s = self.spill.lock().expect("spill stats poisoned");
+        let snap = *s;
+        *s = SpillStats::default();
+        snap
+    }
+
+    fn record_spill(&self, stats: SpillStats) {
+        if !stats.is_zero() {
+            self.spill.lock().expect("spill stats poisoned").merge(&stats);
+        }
     }
 
     fn alloc_tags(&self, n: u64) -> u64 {
@@ -97,11 +158,20 @@ impl CommContext {
     }
 
     /// Shuffle: send `parts[j]` to rank `j`, receive one table per rank,
-    /// concatenated. THE collective of DDF systems (paper Fig 2's
-    /// "shuffle" box).
+    /// concatenated in rank order. THE collective of DDF systems (paper
+    /// Fig 2's "shuffle" box). This is the fully materializing form —
+    /// every payload lives in memory at once; use
+    /// [`CommContext::shuffle_streamed`] when the exchange may not fit.
+    ///
+    /// # Errors
+    /// [`crate::error::Error::InvalidArgument`] when
+    /// `parts.len() != world_size` (the
+    /// one-partition-per-rank contract — checked up front, so no rank
+    /// starts sending before the SPMD-identical error is raised
+    /// everywhere), plus any transport/serde error.
     pub fn shuffle(&self, parts: Vec<Table>) -> Result<Table> {
         let p = self.world_size();
-        assert_eq!(parts.len(), p, "shuffle needs one partition per rank");
+        algorithms::check_one_part_per_rank(parts.len(), p, "shuffle")?;
         // reserve a generous tag range (pairwise/bruck consume ≤ p + 64)
         let tag = self.alloc_tags(2 * p as u64 + 64);
         self.timed(|| {
@@ -113,6 +183,70 @@ impl CommContext {
                 .map(|b| table_from_bytes(&b))
                 .collect::<Result<_>>()?;
             Table::concat(&tables.iter().collect::<Vec<_>>())
+        })
+    }
+
+    /// Out-of-core shuffle: identical contract and result as
+    /// [`CommContext::shuffle`] (bit-for-bit — the rank-order, row-order
+    /// concatenation is preserved), but partitions are sliced into
+    /// bounded wire frames that stream through the pairwise exchange
+    /// into a [`SpillBuffer`]; received frames beyond the configured
+    /// memory budget wait on disk until merge. Spilled bytes/frames are
+    /// recorded in this context's [`SpillStats`]. Below the budget no
+    /// temp file is ever created and behavior is unchanged.
+    pub fn shuffle_streamed(&self, parts: Vec<Table>) -> Result<Table> {
+        let p = self.world_size();
+        algorithms::check_one_part_per_rank(parts.len(), p, "shuffle")?;
+        // lane per pairwise round (≤ p) + slack, mirroring `shuffle` so
+        // SPMD tag counters stay aligned across call sites.
+        let tag = self.alloc_tags(p as u64 + 64);
+        self.timed(|| {
+            let mut sink = SpillBuffer::new(
+                self.exchange.spill_budget_bytes,
+                &self.exchange.spill_dir,
+            );
+            {
+                let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
+                    Vec::with_capacity(parts.len());
+                for t in &parts {
+                    streams.push(Box::new(FrameEncoder::new(t, self.exchange.frame_bytes)));
+                }
+                let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                    let h = frame_header(&frame)?;
+                    sink.push(source, h.seq, frame)?;
+                    Ok(h.last)
+                };
+                algorithms::all_to_all_streamed(self.comm.as_ref(), streams, tag, &mut push)?;
+            }
+            self.record_spill(sink.stats());
+            // Bounded-memory merge: each replayed chunk drops as soon as
+            // its rows are appended to the output.
+            Table::concat_stream(sink.replay()?)
+        })
+    }
+
+    /// Out-of-core allgather: identical result as
+    /// [`CommContext::allgather`], with the contribution streamed as wire
+    /// frames and received frames buffered under the spill budget (same
+    /// sink/replay machinery as [`CommContext::shuffle_streamed`]).
+    pub fn allgather_streamed(&self, t: &Table) -> Result<Table> {
+        let tag = self.alloc_tags(self.world_size() as u64 + 64);
+        self.timed(|| {
+            let mut sink = SpillBuffer::new(
+                self.exchange.spill_budget_bytes,
+                &self.exchange.spill_dir,
+            );
+            {
+                let frames = Box::new(FrameEncoder::new(t, self.exchange.frame_bytes));
+                let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                    let h = frame_header(&frame)?;
+                    sink.push(source, h.seq, frame)?;
+                    Ok(h.last)
+                };
+                algorithms::allgather_streamed(self.comm.as_ref(), frames, tag, &mut push)?;
+            }
+            self.record_spill(sink.stats());
+            Table::concat_stream(sink.replay()?)
         })
     }
 
@@ -342,6 +476,113 @@ mod tests {
         });
         for o in outs {
             assert_eq!(o, vec![6, 4]);
+        }
+    }
+
+    fn spill_exchange(budget: usize) -> crate::config::ExchangeConfig {
+        crate::config::ExchangeConfig {
+            frame_bytes: 64, // force multi-frame streams
+            spill_budget_bytes: budget,
+            spill_dir: std::env::temp_dir()
+                .join(format!("cf-collectives-test-{}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+        }
+    }
+
+    fn streaming_contexts(p: usize, budget: usize) -> Vec<CommContext> {
+        MemoryFabric::create(p)
+            .into_iter()
+            .map(|c| {
+                CommContext::with_exchange(Box::new(c), AlgoSet::simple(), spill_exchange(budget))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shuffle_rejects_wrong_partition_count() {
+        let outs = run_gang(contexts(2, AlgoSet::simple()), |ctx| {
+            let t = Table::from_columns(vec![("v", Column::from_i64(vec![1]))]).unwrap();
+            let only_one = vec![t];
+            Ok((
+                ctx.shuffle(only_one.clone()).is_err(),
+                ctx.shuffle_streamed(only_one).is_err(),
+            ))
+        });
+        for (mem_err, stream_err) in outs {
+            assert!(mem_err, "shuffle must error, not panic, on wrong part count");
+            assert!(stream_err, "shuffle_streamed must share the contract");
+        }
+    }
+
+    #[test]
+    fn streamed_shuffle_matches_in_memory_bit_for_bit() {
+        for p in [1usize, 2, 3, 4, 5] {
+            // budget 0 forces every received frame through the spill file
+            let outs = run_gang(streaming_contexts(p, 0), move |ctx| {
+                let parts: Vec<Table> = (0..ctx.world_size())
+                    .map(|j| {
+                        let base = (ctx.rank() * 100 + j * 10) as i64;
+                        Table::from_columns(vec![(
+                            "v",
+                            Column::from_i64((base..base + 40).collect()),
+                        )])
+                        .unwrap()
+                    })
+                    .collect();
+                let reference = ctx.shuffle(parts.clone())?;
+                let streamed = ctx.shuffle_streamed(parts)?;
+                Ok((reference, streamed, ctx.peek_spill_stats()))
+            });
+            let mut spilled = 0;
+            for (reference, streamed, stats) in outs {
+                assert_eq!(
+                    crate::table::table_to_bytes(&reference),
+                    crate::table::table_to_bytes(&streamed),
+                    "streamed shuffle diverged at p={p}"
+                );
+                spilled += stats.spilled_bytes;
+            }
+            assert!(spilled > 0, "zero budget must engage the spill path");
+        }
+    }
+
+    #[test]
+    fn streamed_allgather_matches_in_memory() {
+        let outs = run_gang(streaming_contexts(3, 1 << 20), |ctx| {
+            let t = Table::from_columns(vec![(
+                "v",
+                Column::from_i64(vec![ctx.rank() as i64; 30]),
+            )])
+            .unwrap();
+            let reference = ctx.allgather(&t)?;
+            let streamed = ctx.allgather_streamed(&t)?;
+            Ok((reference, streamed, ctx.peek_spill_stats()))
+        });
+        for (reference, streamed, stats) in outs {
+            assert_eq!(reference, streamed);
+            // generous budget: streaming engaged, spilling did not
+            assert!(stats.is_zero());
+        }
+    }
+
+    #[test]
+    fn spill_stats_take_and_peek() {
+        let outs = run_gang(streaming_contexts(2, 0), |ctx| {
+            let parts: Vec<Table> = (0..2)
+                .map(|_| {
+                    Table::from_columns(vec![("v", Column::from_i64(vec![1; 64]))]).unwrap()
+                })
+                .collect();
+            ctx.shuffle_streamed(parts)?;
+            let peeked = ctx.peek_spill_stats();
+            let taken = ctx.take_spill_stats();
+            Ok((peeked, taken, ctx.peek_spill_stats()))
+        });
+        for (peeked, taken, after) in outs {
+            assert_eq!(peeked, taken, "peek must not consume");
+            assert!(taken.spill_count > 0);
+            assert!(after.is_zero(), "take must reset");
         }
     }
 

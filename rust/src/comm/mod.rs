@@ -5,7 +5,15 @@
 //! the collective routines the DDF operators need (shuffle/all-to-all,
 //! allgather, broadcast, gather, allreduce, barrier) — is implemented
 //! *generically* over the trait in [`collectives`], with selectable
-//! algorithms in [`algorithms`].
+//! algorithms in [`algorithms`]. The hot collectives additionally come
+//! in a **streaming** form (`shuffle_streamed`/`allgather_streamed` on
+//! [`CommContext`]): tables travel as bounded wire frames and received
+//! frames past a memory budget spill to disk
+//! ([`crate::store::SpillBuffer`]) and the merge streams chunks into the
+//! output one at a time — so an exchange whose transient buffers would
+//! exceed RAM completes (each rank still materializes its own output
+//! partition). The transport contract both forms rely on: sends are
+//! buffered/non-blocking and messages are FIFO per `(source, tag)` lane.
 //!
 //! Backends (the paper's OpenMPI / Gloo / UCX-UCC analogues, see
 //! DESIGN.md §4 for the substitution argument):

@@ -19,6 +19,31 @@ pub enum HashPath {
     Auto,
 }
 
+/// Knobs of the streaming exchange path (chunked wire frames + receiver
+/// spill-to-disk; see DESIGN.md §7). Held by [`crate::comm::CommContext`]
+/// and threaded there from [`Config`] by the executor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExchangeConfig {
+    /// Target serialized bytes per wire frame (row-granular; a single
+    /// huge row may exceed it).
+    pub frame_bytes: usize,
+    /// In-memory budget for received exchange frames per collective;
+    /// overflow spills to temp files under [`ExchangeConfig::spill_dir`].
+    pub spill_budget_bytes: usize,
+    /// Directory for spill temp files (created on first overflow only).
+    pub spill_dir: String,
+}
+
+impl Default for ExchangeConfig {
+    fn default() -> Self {
+        ExchangeConfig {
+            frame_bytes: 4 << 20,          // 4 MiB frames
+            spill_budget_bytes: 256 << 20, // 256 MiB per collective
+            spill_dir: std::env::temp_dir().to_string_lossy().into_owned(),
+        }
+    }
+}
+
 /// Global configuration for a CylonFlow run.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -30,6 +55,8 @@ pub struct Config {
     pub artifacts_dir: String,
     /// Rows per PJRT kernel block (must match the lowered block size).
     pub kernel_block_rows: usize,
+    /// Streaming-exchange knobs (frame size, spill budget, spill dir).
+    pub exchange: ExchangeConfig,
 }
 
 impl Default for Config {
@@ -39,6 +66,7 @@ impl Default for Config {
             hash_path: HashPath::Auto,
             artifacts_dir: default_artifacts_dir(),
             kernel_block_rows: 65_536,
+            exchange: ExchangeConfig::default(),
         }
     }
 }
@@ -46,7 +74,9 @@ impl Default for Config {
 impl Config {
     /// Config from environment variables:
     /// `CYLONFLOW_BACKEND` (memory|tcp|tcp-ucc), `CYLONFLOW_HASH`
-    /// (pjrt|native|auto), `CYLONFLOW_ARTIFACTS`.
+    /// (pjrt|native|auto), `CYLONFLOW_ARTIFACTS`,
+    /// `CYLONFLOW_FRAME_BYTES` / `CYLONFLOW_SPILL_BUDGET` (byte counts,
+    /// optional `k`/`m`/`g` suffix), `CYLONFLOW_SPILL_DIR`.
     pub fn from_env() -> Config {
         let mut c = Config::default();
         if let Ok(b) = std::env::var("CYLONFLOW_BACKEND") {
@@ -64,8 +94,36 @@ impl Config {
         if let Ok(d) = std::env::var("CYLONFLOW_ARTIFACTS") {
             c.artifacts_dir = d;
         }
+        if let Some(n) = env_bytes("CYLONFLOW_FRAME_BYTES") {
+            c.exchange.frame_bytes = n.max(1);
+        }
+        if let Some(n) = env_bytes("CYLONFLOW_SPILL_BUDGET") {
+            c.exchange.spill_budget_bytes = n;
+        }
+        if let Ok(d) = std::env::var("CYLONFLOW_SPILL_DIR") {
+            c.exchange.spill_dir = d;
+        }
         c
     }
+}
+
+/// Parse an env var as a byte count: a plain integer, optionally suffixed
+/// with `k`/`m`/`g` (case-insensitive, powers of 1024). Unparseable
+/// values are ignored (the default stands).
+fn env_bytes(var: &str) -> Option<usize> {
+    let raw = std::env::var(var).ok()?;
+    parse_bytes(raw.trim())
+}
+
+fn parse_bytes(s: &str) -> Option<usize> {
+    let (digits, shift) = match s.char_indices().last()? {
+        (i, 'k') | (i, 'K') => (&s[..i], 10),
+        (i, 'm') | (i, 'M') => (&s[..i], 20),
+        (i, 'g') | (i, 'G') => (&s[..i], 30),
+        _ => (s, 0),
+    };
+    let n: usize = digits.trim().parse().ok()?;
+    n.checked_mul(1usize << shift)
 }
 
 /// `artifacts/` next to the workspace root (env `CYLONFLOW_ARTIFACTS` wins).
@@ -87,5 +145,20 @@ mod tests {
         assert_eq!(c.hash_path, HashPath::Auto);
         assert_eq!(c.kernel_block_rows, 65_536);
         assert!(c.artifacts_dir.ends_with("artifacts"));
+        assert_eq!(c.exchange.frame_bytes, 4 << 20);
+        assert_eq!(c.exchange.spill_budget_bytes, 256 << 20);
+        assert!(!c.exchange.spill_dir.is_empty());
+    }
+
+    #[test]
+    fn byte_count_parsing() {
+        assert_eq!(parse_bytes("4096"), Some(4096));
+        assert_eq!(parse_bytes("8k"), Some(8 << 10));
+        assert_eq!(parse_bytes("4M"), Some(4 << 20));
+        assert_eq!(parse_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_bytes("16 k"), Some(16 << 10));
+        assert_eq!(parse_bytes(""), None);
+        assert_eq!(parse_bytes("nope"), None);
+        assert_eq!(parse_bytes("k"), None);
     }
 }

@@ -14,14 +14,14 @@ use crate::types::DType;
 
 /// Distributed column statistics: every rank returns the same global
 /// [`ColumnStats`] per column (count/nulls/sum/min/max/mean), equal to
-/// running [`ops::describe`] on the concatenated table.
+/// running [`fn@ops::describe`] on the concatenated table.
 pub fn describe(t: &Table, env: &CylonEnv) -> Result<Vec<ColumnStats>> {
     let local = env.time(Phase::Compute, || ops::describe(t))?;
     if env.world_size() == 1 {
         return Ok(local);
     }
     let stats_t = env.time(Phase::Auxiliary, || stats_to_table(&local))?;
-    let all = env.comm().allgather(&stats_t)?;
+    let all = env.comm().allgather_streamed(&stats_t)?;
     env.time(Phase::Auxiliary, || merge_stats(t, &all))
 }
 

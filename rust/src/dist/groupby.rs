@@ -39,7 +39,7 @@ impl fmt::Display for GroupbyStrategy {
 
 /// Distributed groupby: each rank passes its partition and receives the
 /// complete rows for the keys that hash to it. Output schema matches the
-/// local [`ops::groupby`]: key columns, then one `{fun}_{col}` column per
+/// local [`fn@ops::groupby`]: key columns, then one `{fun}_{col}` column per
 /// aggregate.
 pub fn groupby(
     t: &Table,
@@ -62,7 +62,7 @@ pub fn groupby(
 
 /// Groupby that elides the shuffle entirely: correct when the input is
 /// already co-partitioned on `key_cols` (e.g. the output of
-/// [`super::join`] keyed on the same columns) — the zero-communication
+/// [`fn@super::join`] keyed on the same columns) — the zero-communication
 /// reuse the paper's pipeline leans on.
 pub fn groupby_prepartitioned(
     t: &Table,

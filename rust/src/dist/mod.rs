@@ -9,14 +9,14 @@
 //!
 //! | operator | auxiliary | communication | core local |
 //! |----------|-----------|---------------|------------|
-//! | [`join`] | hash partition both sides | shuffle ×2 | `ops::join` |
-//! | [`groupby`] (shuffle-first) | hash partition | shuffle | `ops::groupby` |
-//! | [`groupby`] (two-phase) | — | shuffle of *partials* | `ops::groupby` ×2 + finalize |
-//! | [`sort`] | sample, splitters, range partition | allgather + shuffle | `ops::sort` |
+//! | [`fn@join`] | hash partition both sides | shuffle ×2 | `ops::join` |
+//! | [`fn@groupby`] (shuffle-first) | hash partition | shuffle | `ops::groupby` |
+//! | [`fn@groupby`] (two-phase) | — | shuffle of *partials* | `ops::groupby` ×2 + finalize |
+//! | [`fn@sort`] | sample, splitters, range partition | allgather + shuffle | `ops::sort` |
 //! | [`distinct`]/set ops | hash partition (whole row) | shuffle | `ops::distinct`/`ops::setops` |
-//! | [`describe`] | stats encode/merge | allgather | `ops::describe` |
+//! | [`fn@describe`] | stats encode/merge | allgather | `ops::describe` |
 //! | [`rebalance`] | contiguous slicing | allreduce + shuffle | — |
-//! | [`pipeline`] | all of the above | all of the above | chained |
+//! | [`fn@pipeline`] | all of the above | all of the above | chained |
 //!
 //! Every operator records its phases through the [`CylonEnv`] timers
 //! (compute / auxiliary locally, communication inside
@@ -34,6 +34,15 @@
 //! over them and elides exchanges from partitioning lineage; its
 //! lowering targets the `*_prepartitioned` / [`join_with_exchange`]
 //! entry points exposed here.
+//!
+//! All exchanges here run **out-of-core**: [`shuffle_by_key`], the sort
+//! exchange and `describe`'s allgather use the streaming collectives
+//! ([`crate::comm::CommContext::shuffle_streamed`]), which move bounded
+//! wire frames, spill past-budget receives to temp files via
+//! [`crate::store::SpillBuffer`], and merge chunk-at-a-time — so a
+//! join/groupby/sort whose shuffle would transiently exceed RAM
+//! completes (each rank still holds its own output partition), with
+//! spilled bytes reported in [`crate::metrics::SpillStats`].
 
 pub mod describe;
 pub mod groupby;
@@ -64,8 +73,13 @@ use crate::table::Table;
 /// *auxiliary* local operator; the all-to-all is a *communication*
 /// operator. At parallelism 1 this is the identity.
 ///
-/// This is the shared shuffle primitive under [`join`], [`groupby`] and
-/// the set operators.
+/// This is the shared shuffle primitive under [`fn@join`], [`fn@groupby`] and
+/// the set operators. It runs the **streaming** exchange
+/// ([`crate::comm::CommContext::shuffle_streamed`]): payloads move as
+/// bounded wire frames and received frames beyond the configured memory
+/// budget ([`crate::config::ExchangeConfig`]) spill to temp files, so a
+/// shuffle whose transient buffers would exceed RAM completes — with
+/// results identical to the materializing path.
 pub fn shuffle_by_key(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<Table> {
     let p = env.world_size();
     if p == 1 {
@@ -74,7 +88,7 @@ pub fn shuffle_by_key(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<T
     let parts = env.time(Phase::Auxiliary, || {
         ops::partition_by_hash(t, key_cols, p, env.hasher())
     })?;
-    env.comm().shuffle(parts)
+    env.comm().shuffle_streamed(parts)
 }
 
 /// Outcome of a [`rebalance`]: what this rank held and shipped.
@@ -128,7 +142,7 @@ pub fn rebalance(t: &Table, env: &CylonEnv) -> Result<(Table, RebalanceReport)> 
             .collect::<Vec<_>>()
     });
     let kept = parts[env.rank()].num_rows();
-    let balanced = env.comm().shuffle(parts)?;
+    let balanced = env.comm().shuffle_streamed(parts)?;
     let report = RebalanceReport {
         rows_before: n,
         rows_sent: n - kept,

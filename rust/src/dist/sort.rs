@@ -17,7 +17,7 @@ const SAMPLE_PER_RANK: usize = 32;
 /// Distributed sort. Each rank passes its partition and receives its
 /// globally-ordered slice, locally sorted under `opts` (multi-key,
 /// per-key direction, nulls-first ascending — same semantics as
-/// [`ops::sort`]).
+/// [`fn@ops::sort`]).
 pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     check_sort_keys(t, opts)?;
     let p = env.world_size();
@@ -31,7 +31,7 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     let sample = env.time(Phase::Auxiliary, || {
         ops::sample_rows(t, (SAMPLE_PER_RANK * p).max(64), 0x5a3d ^ env.rank() as u64)
     });
-    let global_sample = env.comm().allgather(&sample)?;
+    let global_sample = env.comm().allgather_streamed(&sample)?;
 
     // 2. Splitters: sort the global sample under the *real* options (so
     // descending / multi-key orders produce correctly-directed ranges)
@@ -59,8 +59,9 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
         parts.push(t.slice(0, 0));
     }
 
-    // 4. Exchange, then the core local sort on the received slice.
-    let mine = env.comm().shuffle(parts)?;
+    // 4. Exchange (streaming: oversized sorts spill at the receiver),
+    // then the core local sort on the received slice.
+    let mine = env.comm().shuffle_streamed(parts)?;
     env.time(Phase::Compute, || ops::sort(&mine, opts))
 }
 

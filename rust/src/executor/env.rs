@@ -69,6 +69,14 @@ impl CylonEnv {
         snap
     }
 
+    /// Non-destructive snapshot of this actor's accumulated spill
+    /// counters (bytes/frames the streaming exchanges pushed to disk).
+    /// Monotonic, like [`CylonEnv::metrics_snapshot`]; the plan executor
+    /// diffs successive snapshots to attribute spill to stages.
+    pub fn spill_snapshot(&self) -> crate::metrics::SpillStats {
+        self.comm.peek_spill_stats()
+    }
+
     /// Snapshot and reset this actor's metrics, folding in the
     /// communication timers.
     pub fn take_metrics(&self) -> PhaseTimers {

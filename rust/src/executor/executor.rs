@@ -59,17 +59,24 @@ impl CylonExecutor {
 
         // Build the communicator gang driver-side (the "expensive
         // Cylon_env instantiation" the paper keeps alive in actor state).
+        // Each context carries the cluster's streaming-exchange knobs
+        // (frame size, spill budget/dir) for the out-of-core collectives.
         let backend = config.backend;
+        let exchange = config.exchange.clone();
         let mut contexts: Vec<CommContext> = match backend {
             CommBackend::Memory => MemoryFabric::create(p)
                 .into_iter()
-                .map(|c| CommContext::new(Box::new(c), backend.algos()))
+                .map(|c| {
+                    CommContext::with_exchange(Box::new(c), backend.algos(), exchange.clone())
+                })
                 .collect(),
             CommBackend::Tcp | CommBackend::TcpUcc => {
                 let gang = format!("gang-{exec_id}");
                 TcpFabric::create(p, inner.kv.clone(), &gang)?
                     .into_iter()
-                    .map(|c| CommContext::new(Box::new(c), backend.algos()))
+                    .map(|c| {
+                        CommContext::with_exchange(Box::new(c), backend.algos(), exchange.clone())
+                    })
                     .collect()
             }
         };

@@ -106,10 +106,13 @@ pub fn run_worker(
     let kv = std::sync::Arc::new(FileKv::new(kv_dir)?);
     let comm = TcpComm::bind(rank, world, kv.clone(), gang)?;
     let backend = CommBackend::TcpUcc;
-    let ctx = CommContext::new(Box::new(comm), backend.algos());
+    // Worker processes inherit the leader's environment, so the
+    // env-driven spill/frame knobs apply per process.
+    let config = Config::from_env();
+    let ctx = CommContext::with_exchange(Box::new(comm), backend.algos(), config.exchange.clone());
     // process-local object store (cross-app sharing is in-process only)
     let store = CylonStore::new(ObjectStore::shared(), rank, world);
-    let hasher = crate::runtime::make_hasher(&Config::from_env());
+    let hasher = crate::runtime::make_hasher(&config);
     let env = CylonEnv::new(ctx, store, hasher);
     let outcome = run_named_app(app, params, &env);
     let (key, payload) = match &outcome {

@@ -39,7 +39,10 @@
 //!   the executor lowers the optimized plan back onto `dist`.
 //! - [`amt`] — AMT baseline (central scheduler + object-store shuffle).
 //! - [`actor_mr`] — actor map-reduce baseline.
-//! - [`store`] — object store + `CylonStore` for inter-app data sharing.
+//! - [`store`] — object store + `CylonStore` for inter-app data sharing,
+//!   plus the `SpillBuffer` behind the out-of-core streaming exchanges
+//!   (received frames beyond a memory budget spill to temp files, so an
+//!   exchange's transient footprint stays bounded).
 //! - [`stream`] — sharded micro-batch ingestion with bounded-queue
 //!   backpressure (the data-pipeline orchestrator).
 //! - [`executor::process`] — multi-process gangs (leader spawns workers,
@@ -78,6 +81,11 @@
 //!          out.iter().map(|t| t.num_rows()).collect::<Vec<_>>());
 //! println!("comm/compute breakdown: {}", breakdown.report());
 //! ```
+
+// Every public item must be documented: together with the CI `cargo doc`
+// step (RUSTDOCFLAGS="-D warnings") this turns missing docs and broken
+// intra-doc links into build failures.
+#![warn(missing_docs)]
 
 pub mod actor_mr;
 pub mod amt;

@@ -92,17 +92,56 @@ impl PhaseTimers {
     }
 }
 
+/// Out-of-core exchange counters: how much shuffle/allgather payload
+/// overflowed the in-memory budget onto disk (see
+/// [`crate::store::SpillBuffer`]). Like [`PhaseTimers`] these accumulate
+/// monotonically per worker and are attributed to stages by diffing
+/// snapshots.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Frame bytes written to spill files.
+    pub spilled_bytes: u64,
+    /// Number of frames that overflowed to disk.
+    pub spill_count: u64,
+}
+
+impl SpillStats {
+    /// True when nothing spilled.
+    pub fn is_zero(&self) -> bool {
+        self.spilled_bytes == 0 && self.spill_count == 0
+    }
+
+    /// Sum another snapshot into this one.
+    pub fn merge(&mut self, other: &SpillStats) {
+        self.spilled_bytes += other.spilled_bytes;
+        self.spill_count += other.spill_count;
+    }
+
+    /// Per-counter `self − earlier`, clamped at zero — attributes a
+    /// monotonically accumulating snapshot to one stage, exactly like
+    /// [`PhaseTimers::saturating_diff`].
+    pub fn saturating_diff(&self, earlier: &SpillStats) -> SpillStats {
+        SpillStats {
+            spilled_bytes: self.spilled_bytes.saturating_sub(earlier.spilled_bytes),
+            spill_count: self.spill_count.saturating_sub(earlier.spill_count),
+        }
+    }
+}
+
 /// Phase timers attributed to one pipeline/plan stage (delta of the
 /// actor's monotonically accumulating timers across the stage,
 /// communication included). Emitted per executed plan node by
 /// [`crate::plan`]'s executor and surfaced through
-/// [`crate::dist::pipeline`]'s report.
+/// [`crate::dist::pipeline()`]'s report.
 #[derive(Debug, Clone)]
 pub struct StageTiming {
     /// Stage label (`join`, `groupby`, `sort`, `add_scalar`, …).
     pub name: String,
     /// Compute / auxiliary / communication spent inside the stage.
     pub timers: PhaseTimers,
+    /// Exchange bytes/frames this stage spilled to disk (zero below the
+    /// memory budget).
+    pub spill: SpillStats,
 }
 
 /// Aggregated comm/compute breakdown across a gang of workers.
@@ -205,6 +244,22 @@ mod tests {
         assert_eq!(d.get(Phase::Communication), Duration::ZERO);
         // clamped: diff against a later snapshot is zero, not negative
         assert_eq!(before.saturating_diff(&after).total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn spill_stats_merge_and_diff() {
+        let mut a = SpillStats::default();
+        assert!(a.is_zero());
+        a.merge(&SpillStats { spilled_bytes: 100, spill_count: 2 });
+        a.merge(&SpillStats { spilled_bytes: 50, spill_count: 1 });
+        assert_eq!(a, SpillStats { spilled_bytes: 150, spill_count: 3 });
+        let earlier = SpillStats { spilled_bytes: 100, spill_count: 2 };
+        assert_eq!(
+            a.saturating_diff(&earlier),
+            SpillStats { spilled_bytes: 50, spill_count: 1 }
+        );
+        // clamped, never negative
+        assert!(earlier.saturating_diff(&a).is_zero());
     }
 
     #[test]

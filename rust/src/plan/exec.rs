@@ -7,7 +7,7 @@ use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
 use crate::dist;
 use crate::error::Result;
 use crate::executor::CylonEnv;
-use crate::metrics::{Phase, PhaseTimers, StageTiming};
+use crate::metrics::{Phase, PhaseTimers, SpillStats, StageTiming};
 use crate::ops;
 use crate::table::Table;
 use std::time::Duration;
@@ -43,14 +43,30 @@ impl PlanReport {
         self.total().get(Phase::Compute)
     }
 
+    /// Exchange spill summed across stages (zero when every shuffle fit
+    /// the in-memory budget).
+    pub fn spill(&self) -> SpillStats {
+        let mut s = SpillStats::default();
+        for st in &self.stages {
+            s.merge(&st.spill);
+        }
+        s
+    }
+
     /// One-line per-stage report:
-    /// `join[compute=… aux=… comm=…] groupby[…] …`.
+    /// `join[compute=… aux=… comm=…] groupby[…] …` (stages that spilled
+    /// append `spill=…B/…f`).
     pub fn report(&self) -> String {
         self.stages
             .iter()
             .map(|s| {
+                let spill = if s.spill.is_zero() {
+                    String::new()
+                } else {
+                    format!(" spill={}B/{}f", s.spill.spilled_bytes, s.spill.spill_count)
+                };
                 format!(
-                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms]",
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}]",
                     s.name,
                     s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
                     s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
@@ -62,12 +78,25 @@ impl PlanReport {
     }
 }
 
+/// Snapshot cut of the actor's monotonically accumulating counters
+/// (timers + spill) — diffed around each node to attribute the deltas.
+struct Mark {
+    timers: PhaseTimers,
+    spill: SpillStats,
+}
+
+impl Mark {
+    fn take(env: &CylonEnv) -> Mark {
+        Mark { timers: env.metrics_snapshot(), spill: env.spill_snapshot() }
+    }
+}
+
 /// Execute `plan` on this rank. Every rank of the gang must execute the
 /// same plan shape (the usual SPMD contract — only the scanned
 /// partitions differ per rank).
 pub fn execute(plan: PhysPlan, env: &CylonEnv) -> Result<PlanReport> {
     let mut stages = Vec::new();
-    let mut mark = env.metrics_snapshot();
+    let mut mark = Mark::take(env);
     let table = eval(plan, env, &mut stages, &mut mark)?;
     Ok(PlanReport { table, stages })
 }
@@ -76,7 +105,7 @@ fn eval(
     plan: PhysPlan,
     env: &CylonEnv,
     stages: &mut Vec<StageTiming>,
-    mark: &mut PhaseTimers,
+    mark: &mut Mark,
 ) -> Result<Table> {
     let label = plan.label();
     let out = match plan.node {
@@ -144,11 +173,12 @@ fn eval(
             dist::rebalance(&t, env)?.0
         }
     };
-    // Attribute the timer delta since the last cut to this node.
-    let now = env.metrics_snapshot();
+    // Attribute the timer/spill deltas since the last cut to this node.
+    let now = Mark::take(env);
     stages.push(StageTiming {
         name: label.to_string(),
-        timers: now.saturating_diff(mark),
+        timers: now.timers.saturating_diff(&mark.timers),
+        spill: now.spill.saturating_diff(&mark.spill),
     });
     *mark = now;
     Ok(out)

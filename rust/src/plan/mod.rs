@@ -17,13 +17,17 @@
 //!    `*_prepartitioned` / [`crate::dist::join_with_exchange`] entry
 //!    points.
 //!
-//! The [`crate::dist::pipeline`] benchmark workload is a thin wrapper
+//! The [`crate::dist::pipeline()`] benchmark workload is a thin wrapper
 //! over this module: the shuffle elision it used to hand-code now falls
 //! out of the lineage pass.
 //!
 //! Layering: `plan::logical` (pure description) → `plan::optimizer`
 //! (rewrites + [`PhysPlan`]) → `plan::exec` (lowering onto `dist` inside
-//! a `CylonEnv`, with per-node [`crate::metrics::StageTiming`]s).
+//! a `CylonEnv`, with per-node [`crate::metrics::StageTiming`]s). The
+//! exchanges the lowering *does* keep run out-of-core (see
+//! [`crate::dist::shuffle_by_key`]); each stage's timing carries the
+//! bytes/frames it spilled ([`crate::metrics::SpillStats`]), so an
+//! EXPLAIN-ed plan can be read next to a per-stage spill report.
 
 pub mod exec;
 pub mod logical;

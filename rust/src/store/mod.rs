@@ -1,10 +1,31 @@
-//! Object stores: the cluster-wide [`ObjectStore`] (Ray object store / NFS
-//! analogue) and the application-facing [`CylonStore`] (paper §IV-C) that
-//! shares partitioned DDFs between resource-partitioned applications,
-//! repartitioning when parallelisms differ.
+//! Storage services, from cluster-wide sharing down to per-exchange
+//! spill files.
+//!
+//! Three members, at three lifetimes:
+//!
+//! - [`ObjectStore`] — the cluster-wide object store (Ray object store /
+//!   NFS analogue): named, immutable table partitions shared by every
+//!   worker and baseline runtime.
+//! - [`CylonStore`] — the application-facing view (paper §IV-C) that
+//!   shares partitioned DDFs between resource-partitioned applications,
+//!   repartitioning when parallelisms differ.
+//! - [`SpillBuffer`] — the shortest-lived: the out-of-core sink behind
+//!   one streaming exchange. [`crate::comm::CommContext`] drives wire
+//!   frames into it as they arrive; frames beyond the configured memory
+//!   budget ([`crate::config::ExchangeConfig`]) spill to a temp file and
+//!   replay chunk-at-a-time at merge, so a shuffle whose transient
+//!   buffers would exceed RAM completes instead of aborting (the
+//!   receiving rank still materializes its output partition).
+//!
+//! Composition with the other layers: [`crate::ops`] computes on tables,
+//! [`crate::comm`] moves them (through `SpillBuffer` when streamed),
+//! [`crate::dist`] composes both into distributed operators, and the
+//! stores here are where tables live *between* those steps.
 
 mod cylon_store;
 mod object_store;
+mod spill;
 
 pub use cylon_store::CylonStore;
 pub use object_store::ObjectStore;
+pub use spill::{SpillBuffer, SpillReplay};

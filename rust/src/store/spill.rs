@@ -1,0 +1,296 @@
+//! [`SpillBuffer`] — the receiver-side sink of the streaming exchanges.
+//!
+//! A streamed collective ([`crate::comm::CommContext::shuffle_streamed`])
+//! delivers wire frames (`CYF1` chunks produced by
+//! [`crate::table::FrameEncoder`], decoded by
+//! [`crate::table::table_from_frame`]) tagged with their source rank.
+//! The buffer accumulates them in memory
+//! up to a configurable budget; every frame that would overflow the
+//! budget is appended to a temp file instead. At merge time
+//! [`SpillBuffer::replay`] yields the frames back as decoded [`Table`]
+//! chunks in `(source rank, frame seq)` order, so concatenating them
+//! reproduces exactly what the fully-in-memory exchange would have
+//! built — the spill path changes *where* bytes wait, never *what* the
+//! operator computes.
+//!
+//! Lifecycle: the temp file is created lazily on the first overflowing
+//! frame (below the budget no file ever exists), owned by the buffer,
+//! handed to the replay iterator on [`SpillBuffer::replay`], and deleted
+//! when whichever of the two owns it last is dropped.
+
+use crate::error::{Error, Result};
+use crate::metrics::SpillStats;
+use crate::table::{table_from_frame, Table};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counter so concurrent buffers never collide on a path.
+static SPILL_FILE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Where one buffered frame lives.
+enum Slot {
+    /// Still in memory.
+    Mem(Vec<u8>),
+    /// Spilled: `(byte offset, byte length)` within the spill file.
+    Disk(u64, u64),
+}
+
+/// An open spill file plus its deletion guard: removing the path on drop
+/// makes cleanup automatic for both the buffer and the replay iterator.
+struct SpillFile {
+    path: PathBuf,
+    file: File,
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Bounded-memory sink for exchange frames: in-memory up to a budget,
+/// spill-to-disk beyond it, ordered replay at merge time. See the
+/// module docs for the lifecycle.
+pub struct SpillBuffer {
+    budget_bytes: usize,
+    dir: PathBuf,
+    /// `(key, slot)` where `key = source_rank << 32 | seq` — sorting by
+    /// key at replay restores the deterministic rank-then-seq order the
+    /// in-memory collective produces.
+    frames: Vec<(u64, Slot)>,
+    mem_bytes: usize,
+    file: Option<SpillFile>,
+    write_offset: u64,
+    stats: SpillStats,
+}
+
+impl SpillBuffer {
+    /// Sink with an in-memory budget of `budget_bytes`; overflow goes to
+    /// a temp file under `dir` (created lazily, removed on drop).
+    pub fn new(budget_bytes: usize, dir: impl Into<PathBuf>) -> SpillBuffer {
+        SpillBuffer {
+            budget_bytes,
+            dir: dir.into(),
+            frames: Vec::new(),
+            mem_bytes: 0,
+            file: None,
+            write_offset: 0,
+            stats: SpillStats::default(),
+        }
+    }
+
+    /// Accept one wire frame from `source`. Frames from one source must
+    /// arrive in ascending `seq` (the FIFO transport lanes guarantee
+    /// this); sources may interleave arbitrarily.
+    pub fn push(&mut self, source: usize, seq: u32, frame: Vec<u8>) -> Result<()> {
+        let key = ((source as u64) << 32) | seq as u64;
+        if self.mem_bytes + frame.len() <= self.budget_bytes {
+            self.mem_bytes += frame.len();
+            self.frames.push((key, Slot::Mem(frame)));
+            return Ok(());
+        }
+        let offset = self.spill(&frame)?;
+        self.stats.spilled_bytes += frame.len() as u64;
+        self.stats.spill_count += 1;
+        self.frames.push((key, Slot::Disk(offset, frame.len() as u64)));
+        Ok(())
+    }
+
+    /// Append `frame` to the spill file (creating it first if needed) and
+    /// return the offset it was written at.
+    fn spill(&mut self, frame: &[u8]) -> Result<u64> {
+        if self.file.is_none() {
+            std::fs::create_dir_all(&self.dir)?;
+            let id = SPILL_FILE_ID.fetch_add(1, Ordering::Relaxed);
+            let path = self.dir.join(format!("cfspill-{}-{id}.bin", std::process::id()));
+            let file = File::options().create_new(true).read(true).write(true).open(&path)?;
+            self.file = Some(SpillFile { path, file });
+        }
+        let sf = self.file.as_mut().expect("spill file just ensured");
+        let offset = self.write_offset;
+        // One sequential write_all per frame; frames are MiB-sized, so a
+        // BufWriter would only add a copy.
+        sf.file.write_all(frame)?;
+        self.write_offset += frame.len() as u64;
+        Ok(offset)
+    }
+
+    /// Bytes currently held in memory (excludes spilled frames).
+    pub fn mem_bytes(&self) -> usize {
+        self.mem_bytes
+    }
+
+    /// Spill counters accumulated so far.
+    pub fn stats(&self) -> SpillStats {
+        self.stats
+    }
+
+    /// Path of the spill file, if any overflow has happened.
+    pub fn spill_path(&self) -> Option<&Path> {
+        self.file.as_ref().map(|f| f.path.as_path())
+    }
+
+    /// Finish accepting frames and replay them as decoded [`Table`]
+    /// chunks in `(source, seq)` order — the partition iterator the
+    /// merge step consumes. Takes ownership of the spill file; it is
+    /// deleted when the returned iterator drops.
+    pub fn replay(mut self) -> Result<SpillReplay> {
+        let mut file = self.file.take();
+        if let Some(sf) = file.as_mut() {
+            sf.file.flush()?;
+        }
+        let mut frames = std::mem::take(&mut self.frames);
+        frames.sort_by_key(|(key, _)| *key);
+        Ok(SpillReplay { frames: frames.into_iter(), file })
+    }
+}
+
+/// Ordered iterator over the frames a [`SpillBuffer`] accepted, decoding
+/// each into its [`Table`] chunk. Spilled frames are read back from the
+/// temp file, which is deleted when this iterator drops.
+pub struct SpillReplay {
+    frames: std::vec::IntoIter<(u64, Slot)>,
+    file: Option<SpillFile>,
+}
+
+impl SpillReplay {
+    fn read_back(&mut self, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let sf = self
+            .file
+            .as_mut()
+            .ok_or_else(|| Error::Store("spilled frame but no spill file".into()))?;
+        let mut buf = vec![0u8; len as usize];
+        sf.file.seek(SeekFrom::Start(offset))?;
+        sf.file.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+impl Iterator for SpillReplay {
+    type Item = Result<Table>;
+
+    fn next(&mut self) -> Option<Result<Table>> {
+        let (_, slot) = self.frames.next()?;
+        let bytes = match slot {
+            Slot::Mem(b) => b,
+            Slot::Disk(offset, len) => match self.read_back(offset, len) {
+                Ok(b) => b,
+                Err(e) => return Some(Err(e)),
+            },
+        };
+        Some(table_from_frame(&bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::table::frame_from_table;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cfspill-test-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn frame(vals: Vec<i64>, seq: u32, last: bool) -> Vec<u8> {
+        let t = Table::from_columns(vec![("v", Column::from_i64(vals))]).unwrap();
+        frame_from_table(&t, seq, last)
+    }
+
+    #[test]
+    fn below_budget_no_file_is_created() {
+        let dir = test_dir("below");
+        let mut b = SpillBuffer::new(1 << 20, &dir);
+        for seq in 0..4 {
+            b.push(0, seq, frame(vec![seq as i64], seq, seq == 3)).unwrap();
+        }
+        assert!(b.spill_path().is_none());
+        assert!(b.stats().is_zero());
+        assert!(!dir.exists(), "no spill dir should appear below budget");
+        let n: usize = b.replay().unwrap().map(|t| t.unwrap().num_rows()).sum();
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn overflow_spills_and_replays_in_source_seq_order() {
+        let dir = test_dir("overflow");
+        // budget of 0: every frame spills
+        let mut b = SpillBuffer::new(0, &dir);
+        // interleaved sources, pushed out of rank order
+        b.push(1, 0, frame(vec![10], 0, false)).unwrap();
+        b.push(0, 0, frame(vec![0], 0, false)).unwrap();
+        b.push(1, 1, frame(vec![11], 1, true)).unwrap();
+        b.push(0, 1, frame(vec![1], 1, true)).unwrap();
+        let stats = b.stats();
+        assert_eq!(stats.spill_count, 4);
+        assert!(stats.spilled_bytes > 0);
+        assert!(b.spill_path().is_some_and(|p| p.exists()));
+        let vals: Vec<i64> = b
+            .replay()
+            .unwrap()
+            .map(|t| t.unwrap().column(0).unwrap().i64_values().unwrap()[0])
+            .collect();
+        assert_eq!(vals, vec![0, 1, 10, 11], "replay must be (source, seq) ordered");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_removes_temp_file() {
+        let dir = test_dir("drop");
+        let path = {
+            let mut b = SpillBuffer::new(0, &dir);
+            b.push(0, 0, frame(vec![1, 2, 3], 0, true)).unwrap();
+            let p = b.spill_path().unwrap().to_path_buf();
+            assert!(p.exists());
+            p
+        };
+        assert!(!path.exists(), "SpillBuffer drop must delete its temp file");
+        // the same guarantee holds when the file moved into the replay
+        let path = {
+            let mut b = SpillBuffer::new(0, &dir);
+            b.push(0, 0, frame(vec![7], 0, true)).unwrap();
+            let p = b.spill_path().unwrap().to_path_buf();
+            let replay = b.replay().unwrap();
+            assert!(p.exists(), "replay keeps the file alive while iterating");
+            drop(replay);
+            p
+        };
+        assert!(!path.exists(), "SpillReplay drop must delete the temp file");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn partial_overflow_mixes_memory_and_disk() {
+        let dir = test_dir("mixed");
+        let f0 = frame(vec![1, 2, 3, 4], 0, false);
+        let budget = f0.len() + 8; // fits one frame, not two
+        let mut b = SpillBuffer::new(budget, &dir);
+        b.push(0, 0, f0).unwrap();
+        b.push(0, 1, frame(vec![5, 6, 7, 8], 1, false)).unwrap();
+        b.push(0, 2, frame(vec![9], 2, true)).unwrap();
+        assert_eq!(b.stats().spill_count, 2);
+        assert!(b.mem_bytes() <= budget);
+        let all: Vec<i64> = b
+            .replay()
+            .unwrap()
+            .flat_map(|t| t.unwrap().column(0).unwrap().i64_values().unwrap().to_vec())
+            .collect();
+        assert_eq!(all, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_spilled_frame_surfaces_as_error() {
+        let dir = test_dir("corrupt");
+        let mut b = SpillBuffer::new(0, &dir);
+        b.push(0, 0, vec![1, 2, 3]).unwrap(); // not a valid frame
+        let errs: Vec<Result<Table>> = b.replay().unwrap().collect();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -12,7 +12,10 @@ mod wire;
 
 pub use io::{read_csv, write_csv};
 pub use ipc::{read_dataset, read_partition, read_table_file, write_dataset, write_table_file};
-pub use wire::{table_from_bytes, table_to_bytes};
+pub use wire::{
+    frame_from_table, frame_header, table_from_bytes, table_from_frame, table_to_bytes,
+    FrameEncoder, FrameHeader, FRAME_HEADER_BYTES, FRAME_VERSION,
+};
 
 use crate::column::{Column, ColumnBuilder};
 use crate::error::{Error, Result};
@@ -170,6 +173,37 @@ impl Table {
         Table::concat(&tables.iter().collect::<Vec<_>>())
     }
 
+    /// [`Table::concat`] over a fallible stream of chunks, dropping each
+    /// chunk as soon as its rows are appended. This is the bounded-memory
+    /// merge under the streaming exchanges: peak memory is the output
+    /// plus one chunk, not the output plus every chunk at once. Errors on
+    /// an empty stream (like [`Table::concat`] on zero tables) and on the
+    /// first schema-incompatible or failed chunk.
+    pub fn concat_stream(chunks: impl Iterator<Item = Result<Table>>) -> Result<Table> {
+        let mut acc: Option<(Schema, Vec<ColumnBuilder>)> = None;
+        let mut num_rows = 0usize;
+        for chunk in chunks {
+            let chunk = chunk?;
+            let (schema, builders) = acc.get_or_insert_with(|| {
+                let builders = chunk
+                    .schema
+                    .fields()
+                    .iter()
+                    .map(|f| ColumnBuilder::new(f.dtype))
+                    .collect();
+                (chunk.schema.clone(), builders)
+            });
+            schema.check_compatible(&chunk.schema)?;
+            for (b, c) in builders.iter_mut().zip(&chunk.columns) {
+                b.extend_from(c, 0, c.len());
+            }
+            num_rows += chunk.num_rows;
+        }
+        let (schema, builders) = acc.ok_or_else(|| Error::invalid("concat of zero tables"))?;
+        let columns = builders.into_iter().map(|b| b.finish()).collect();
+        Ok(Table { schema, columns, num_rows })
+    }
+
     /// Project onto the given column indices.
     pub fn project(&self, indices: &[usize]) -> Result<Table> {
         let schema = self.schema.project(indices)?;
@@ -286,6 +320,19 @@ mod tests {
         // single-element fast path returns the table unchanged
         assert_eq!(Table::concat_owned(vec![tab.clone()]).unwrap(), tab);
         assert!(Table::concat_owned(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn concat_stream_matches_concat() {
+        let tab = t();
+        let parts = tab.split_even(3);
+        let by_ref = Table::concat(&parts.iter().collect::<Vec<_>>()).unwrap();
+        let streamed = Table::concat_stream(parts.into_iter().map(Ok)).unwrap();
+        assert_eq!(streamed, by_ref);
+        // empty stream errors; a failing chunk propagates
+        assert!(Table::concat_stream(std::iter::empty()).is_err());
+        let bad = std::iter::once(Err(Error::invalid("boom")));
+        assert!(Table::concat_stream(bad).is_err());
     }
 
     #[test]

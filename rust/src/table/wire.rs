@@ -1,6 +1,8 @@
 //! Table wire format — the unit the communicator sends between workers.
 //!
-//! Layout (all little-endian):
+//! Two layers (both little-endian, fully specified in DESIGN.md §7):
+//!
+//! **Table payload** (`CYT1`, [`table_to_bytes`] / [`table_from_bytes`]):
 //!
 //! ```text
 //! magic "CYT1" | u32 ncols | u64 nrows
@@ -12,9 +14,22 @@
 //!   Utf8:          (nrows+1) * 4 offset bytes | u64 data_len | data
 //! ```
 //!
-//! Mirrors Arrow IPC in spirit (buffer-oriented, no per-row encoding) so
-//! serialization cost is `memcpy`-bound — which matters for the Fig 6
-//! comm/compute breakdown to be honest.
+//! **Frame** (`CYF1`, [`frame_from_table`] / [`table_from_frame`]): a
+//! bounded-size chunk of a table — the unit the *streaming* exchanges
+//! ([`crate::comm::CommContext::shuffle_streamed`]) put on the wire and
+//! the unit [`crate::store::SpillBuffer`] spills to disk. Each frame is
+//! a 24-byte header followed by one `CYT1` payload holding a contiguous
+//! row slice; a stream of frames with ascending `seq` and a final `LAST`
+//! flag reassembles (by concatenation) into the original table:
+//!
+//! ```text
+//! magic "CYF1" | u8 version (=1) | u8 flags (bit0 = LAST) | u16 reserved (=0)
+//! u32 seq | u32 reserved (=0) | u64 payload_len | payload (CYT1 bytes)
+//! ```
+//!
+//! Both layers mirror Arrow IPC in spirit (buffer-oriented, no per-row
+//! encoding) so serialization cost is `memcpy`-bound — which matters for
+//! the Fig 6 comm/compute breakdown to be honest.
 
 use crate::buffer::Bitmap;
 use crate::column::{BoolColumn, Column, Float64Column, Int64Column, StringColumn};
@@ -27,6 +42,13 @@ const MAGIC: &[u8; 4] = b"CYT1";
 /// Serialize a table to bytes.
 pub fn table_to_bytes(t: &Table) -> Vec<u8> {
     let mut out = Vec::with_capacity(t.byte_size() + 64);
+    write_table(t, &mut out);
+    out
+}
+
+/// Append the `CYT1` encoding of `t` to `out` (shared by the whole-table
+/// and frame encoders).
+fn write_table(t: &Table, out: &mut Vec<u8>) {
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&(t.num_columns() as u32).to_le_bytes());
     out.extend_from_slice(&(t.num_rows() as u64).to_le_bytes());
@@ -67,7 +89,6 @@ pub fn table_to_bytes(t: &Table) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 struct Reader<'a> {
@@ -169,6 +190,167 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
     Table::new(Schema::new(fields), columns)
 }
 
+// ---------------------------------------------------------------------------
+// Frame layer: bounded-size chunks for streaming exchanges.
+// ---------------------------------------------------------------------------
+
+const FRAME_MAGIC: &[u8; 4] = b"CYF1";
+
+/// Current frame wire-format version (bumped on incompatible layout
+/// changes; decoders reject frames from a different version).
+pub const FRAME_VERSION: u8 = 1;
+
+/// Size of the fixed frame header preceding every `CYT1` payload.
+pub const FRAME_HEADER_BYTES: usize = 24;
+
+const FLAG_LAST: u8 = 0b0000_0001;
+
+/// Decoded header of one wire frame (see the module docs for the layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Wire-format version the frame was encoded with.
+    pub version: u8,
+    /// True on the final frame of a stream.
+    pub last: bool,
+    /// Zero-based position of this frame within its stream.
+    pub seq: u32,
+    /// Byte length of the `CYT1` payload that follows the header.
+    pub payload_len: u64,
+}
+
+/// Encode one table chunk as a wire frame: header + `CYT1` payload.
+/// `seq` is the frame's position in its stream; `last` marks the final
+/// frame (every stream has exactly one, even for empty tables).
+pub fn frame_from_table(t: &Table, seq: u32, last: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + t.byte_size() + 64);
+    out.extend_from_slice(FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(if last { FLAG_LAST } else { 0 });
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes()); // payload_len, patched below
+    write_table(t, &mut out);
+    let payload_len = (out.len() - FRAME_HEADER_BYTES) as u64;
+    out[16..24].copy_from_slice(&payload_len.to_le_bytes());
+    out
+}
+
+/// Decode and validate the header of a wire frame.
+pub fn frame_header(buf: &[u8]) -> Result<FrameHeader> {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Err(Error::Serde(format!(
+            "truncated frame: {} bytes, header needs {FRAME_HEADER_BYTES}",
+            buf.len()
+        )));
+    }
+    if &buf[0..4] != FRAME_MAGIC {
+        return Err(Error::Serde("bad frame magic".into()));
+    }
+    let version = buf[4];
+    if version != FRAME_VERSION {
+        return Err(Error::Serde(format!(
+            "frame version {version} unsupported (this build speaks {FRAME_VERSION})"
+        )));
+    }
+    let flags = buf[5];
+    let seq = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    if payload_len != (buf.len() - FRAME_HEADER_BYTES) as u64 {
+        return Err(Error::Serde(format!(
+            "frame payload length {payload_len} does not match {} trailing bytes",
+            buf.len() - FRAME_HEADER_BYTES
+        )));
+    }
+    Ok(FrameHeader { version, last: flags & FLAG_LAST != 0, seq, payload_len })
+}
+
+/// Decode the table chunk carried by one wire frame.
+pub fn table_from_frame(buf: &[u8]) -> Result<Table> {
+    frame_header(buf)?;
+    table_from_bytes(&buf[FRAME_HEADER_BYTES..])
+}
+
+/// Iterator slicing a table into wire frames of roughly `frame_bytes`
+/// payload each. Chunk boundaries follow the *cumulative* per-row
+/// serialized size (so skewed rows — e.g. a few huge strings — do not
+/// blow a frame past the target the way a rows-per-frame average would;
+/// row-granular still: a single over-budget row gets its own oversized
+/// frame). Always yields at least one frame — a zero-row table produces
+/// one empty `LAST` frame that carries the schema — and sets the `LAST`
+/// flag on the final frame, which is how streaming receivers detect
+/// end-of-stream without a length prefix.
+pub struct FrameEncoder<'a> {
+    table: &'a Table,
+    /// `cum[i]` = serialized payload bytes of rows `[0, i)` (buffer
+    /// bytes only; the small per-column header/validity overhead is not
+    /// counted).
+    cum: Vec<u64>,
+    frame_bytes: u64,
+    next_row: usize,
+    seq: u32,
+    done: bool,
+}
+
+impl<'a> FrameEncoder<'a> {
+    /// Frame `table` into chunks of about `frame_bytes` serialized bytes.
+    pub fn new(table: &'a Table, frame_bytes: usize) -> FrameEncoder<'a> {
+        let n = table.num_rows();
+        // Fixed per-row bytes across columns; Utf8 adds its payload per row.
+        let mut fixed = 0u64;
+        for c in table.columns() {
+            fixed += match c {
+                Column::Int64(_) | Column::Float64(_) => 8,
+                Column::Bool(_) => 1,
+                Column::Utf8(_) => 4,
+            };
+        }
+        let mut cum = Vec::with_capacity(n + 1);
+        cum.push(0u64);
+        for i in 0..n {
+            let mut row = fixed;
+            for c in table.columns() {
+                if let Column::Utf8(sc) = c {
+                    row += (sc.offsets[i + 1] - sc.offsets[i]) as u64;
+                }
+            }
+            cum.push(cum[i] + row);
+        }
+        FrameEncoder {
+            table,
+            cum,
+            frame_bytes: frame_bytes.max(1) as u64,
+            next_row: 0,
+            seq: 0,
+            done: false,
+        }
+    }
+}
+
+impl Iterator for FrameEncoder<'_> {
+    type Item = Vec<u8>;
+
+    fn next(&mut self) -> Option<Vec<u8>> {
+        if self.done {
+            return None;
+        }
+        let n = self.table.num_rows();
+        let start = self.next_row;
+        // Take rows while the chunk stays within budget, but at least one.
+        let mut end = (start + 1).min(n);
+        while end < n && self.cum[end + 1] - self.cum[start] <= self.frame_bytes {
+            end += 1;
+        }
+        let chunk = self.table.slice(start, end - start);
+        let last = end >= n;
+        let frame = frame_from_table(&chunk, self.seq, last);
+        self.next_row = end;
+        self.seq += 1;
+        self.done = last;
+        Some(frame)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +394,94 @@ mod tests {
         let mut bytes = table_to_bytes(&sample());
         bytes.truncate(bytes.len() - 3);
         assert!(table_from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_single() {
+        let t = sample();
+        let f = frame_from_table(&t, 0, true);
+        let h = frame_header(&f).unwrap();
+        assert!(h.last);
+        assert_eq!(h.seq, 0);
+        assert_eq!(h.version, FRAME_VERSION);
+        assert_eq!(h.payload_len as usize, f.len() - FRAME_HEADER_BYTES);
+        assert_eq!(table_from_frame(&f).unwrap(), t);
+    }
+
+    #[test]
+    fn encoder_chunks_reassemble_by_concat() {
+        let t = sample();
+        // tiny budget forces one row per frame
+        let frames: Vec<Vec<u8>> = FrameEncoder::new(&t, 1).collect();
+        assert_eq!(frames.len(), t.num_rows());
+        assert!(frame_header(frames.last().unwrap()).unwrap().last);
+        for (i, f) in frames.iter().enumerate() {
+            let h = frame_header(f).unwrap();
+            assert_eq!(h.seq as usize, i);
+            assert_eq!(h.last, i + 1 == frames.len());
+        }
+        let chunks: Vec<Table> = frames.iter().map(|f| table_from_frame(f).unwrap()).collect();
+        assert_eq!(Table::concat_owned(chunks).unwrap(), t);
+        // a generous budget produces exactly one frame
+        assert_eq!(FrameEncoder::new(&t, 1 << 20).count(), 1);
+    }
+
+    #[test]
+    fn encoder_tracks_cumulative_bytes_under_skew() {
+        // 63 tiny rows then one 8 KiB string: an average-row heuristic
+        // would pack ~32 rows per 4 KiB frame and blow the last frame to
+        // ~2x the budget; cumulative sizing keeps every frame near it.
+        let mut b = ColumnBuilder::new(DType::Utf8);
+        for _ in 0..63 {
+            b.push_str("x");
+        }
+        b.push_str(&"y".repeat(8 << 10));
+        let t = Table::from_columns(vec![("s", b.finish())]).unwrap();
+        let budget = 4 << 10;
+        let frames: Vec<Vec<u8>> = FrameEncoder::new(&t, budget).collect();
+        assert!(frames.len() >= 2, "skewed tail must split off");
+        for (i, f) in frames.iter().enumerate() {
+            let rows = table_from_frame(f).unwrap().num_rows();
+            // every multi-row frame stays within budget (+ header slack);
+            // only a single over-budget row may exceed it
+            if f.len() > budget + 256 {
+                assert_eq!(rows, 1, "frame {i} oversized with {rows} rows");
+            }
+        }
+        let back: Vec<Table> = frames.iter().map(|f| table_from_frame(f).unwrap()).collect();
+        assert_eq!(Table::concat_owned(back).unwrap(), t);
+    }
+
+    #[test]
+    fn empty_table_still_frames_with_schema() {
+        let t = Table::empty(sample().schema().clone());
+        let mut enc = FrameEncoder::new(&t, 1024);
+        let f = enc.next().unwrap();
+        assert!(enc.next().is_none());
+        assert!(frame_header(&f).unwrap().last);
+        let back = table_from_frame(&f).unwrap();
+        assert_eq!(back.num_rows(), 0);
+        assert_eq!(back.schema(), t.schema());
+    }
+
+    #[test]
+    fn frame_decoder_rejects_corruption() {
+        let t = sample();
+        let good = frame_from_table(&t, 0, true);
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(frame_header(&bad).is_err());
+        // unsupported version
+        let mut bad = good.clone();
+        bad[4] = FRAME_VERSION + 1;
+        assert!(frame_header(&bad).is_err());
+        // truncated payload no longer matches the declared length
+        let mut bad = good.clone();
+        bad.truncate(bad.len() - 1);
+        assert!(frame_header(&bad).is_err());
+        assert!(table_from_frame(&bad).is_err());
+        // too short for even a header
+        assert!(frame_header(&good[..10]).is_err());
     }
 }

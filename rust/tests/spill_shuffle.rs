@@ -1,0 +1,211 @@
+//! Out-of-core streaming shuffle tests: the spill path must be
+//! byte-identical to the fully in-memory exchange for arbitrary row
+//! splits and world sizes, engage (spilled bytes > 0) when the payload
+//! exceeds the memory budget, and leave no temp files behind — or ever
+//! create them below the budget.
+
+use cylonflow::column::Column;
+use cylonflow::comm::{AlgoSet, CommContext, MemoryFabric};
+use cylonflow::config::{Config, ExchangeConfig};
+use cylonflow::datagen;
+use cylonflow::dist;
+use cylonflow::executor::{Cluster, CylonExecutor};
+use cylonflow::metrics::SpillStats;
+use cylonflow::ops::JoinOptions;
+use cylonflow::proptest_lite::{run_prop, Gen};
+use cylonflow::table::{table_to_bytes, Table};
+use std::path::{Path, PathBuf};
+
+fn test_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cf-spill-it-{name}-{}", std::process::id()))
+}
+
+fn exchange(budget: usize, frame_bytes: usize, dir: &Path) -> ExchangeConfig {
+    ExchangeConfig {
+        frame_bytes,
+        spill_budget_bytes: budget,
+        spill_dir: dir.to_string_lossy().into_owned(),
+    }
+}
+
+/// Gang of streaming CommContexts over an in-process fabric.
+fn contexts(p: usize, ex: &ExchangeConfig) -> Vec<CommContext> {
+    MemoryFabric::create(p)
+        .into_iter()
+        .map(|c| CommContext::with_exchange(Box::new(c), AlgoSet::simple(), ex.clone()))
+        .collect()
+}
+
+/// Random table whose rows split arbitrarily into `p` destination parts.
+fn random_parts(g: &mut Gen, p: usize) -> Vec<Table> {
+    let n = g.usize_in(0, 300);
+    let keys: Vec<i64> = (0..n).map(|_| g.i64_in(-50, 50)).collect();
+    let strs: Vec<String> = (0..n).map(|_| g.string(8)).collect();
+    let t = Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("s", Column::from_strings(&strs)),
+    ])
+    .unwrap();
+    // arbitrary split points (possibly empty slices)
+    let mut cuts: Vec<usize> = (0..p - 1).map(|_| g.usize_in(0, n + 1)).collect();
+    cuts.sort_unstable();
+    let mut parts = Vec::with_capacity(p);
+    let mut start = 0;
+    for &c in &cuts {
+        parts.push(t.slice(start, c - start));
+        start = c;
+    }
+    parts.push(t.slice(start, n - start));
+    parts
+}
+
+#[test]
+fn prop_spill_shuffle_is_byte_identical_to_in_memory() {
+    run_prop("spill shuffle ≡ in-memory shuffle", 20, |g| {
+        let p = g.usize_in(1, 6);
+        // a few-KiB budget and tiny frames force multi-frame streams and
+        // routine spilling
+        let dir = test_dir("prop");
+        let ex = exchange(2 << 10, 256, &dir);
+        let per_rank: Vec<Vec<Table>> = (0..p).map(|_| random_parts(g, p)).collect();
+        let handles: Vec<_> = contexts(p, &ex)
+            .into_iter()
+            .zip(per_rank)
+            .map(|(ctx, parts)| {
+                std::thread::spawn(move || {
+                    let reference = ctx.shuffle(parts.clone()).unwrap();
+                    let streamed = ctx.shuffle_streamed(parts).unwrap();
+                    (reference, streamed)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (reference, streamed) = h.join().unwrap();
+            assert_eq!(
+                table_to_bytes(&reference),
+                table_to_bytes(&streamed),
+                "spill shuffle diverged from the in-memory path"
+            );
+        }
+    });
+}
+
+fn spill_cluster(p: usize, budget: usize, dir: &Path) -> Cluster {
+    let cfg = Config { exchange: exchange(budget, 512, dir), ..Config::default() };
+    Cluster::with_config(p, cfg).unwrap()
+}
+
+fn dist_join_rows_and_spill(cluster: &Cluster, p: usize) -> (usize, SpillStats) {
+    let exec = CylonExecutor::new(cluster, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let l = datagen::partition_for_rank(91, 4000, 0.4, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(92, 4000, 0.4, env.rank(), env.world_size());
+            let j = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+            Ok((j.num_rows(), env.spill_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let rows = out.iter().map(|(n, _)| n).sum();
+    let mut spill = SpillStats::default();
+    for (_, s) in &out {
+        spill.merge(s);
+    }
+    (rows, spill)
+}
+
+#[test]
+fn join_over_budget_spills_and_matches_in_memory_join() {
+    let p = 3;
+    let tight = test_dir("tight");
+    let roomy = test_dir("roomy");
+    // 4 KiB budget: the join shuffles far more than that per rank
+    let (rows_spilled, spill) = dist_join_rows_and_spill(&spill_cluster(p, 4 << 10, &tight), p);
+    assert!(spill.spilled_bytes > 0, "over-budget join must engage the spill path");
+    assert!(spill.spill_count > 0);
+    // same workload, effectively unbounded budget: no temp files at all
+    let (rows_mem, no_spill) = dist_join_rows_and_spill(&spill_cluster(p, 1 << 30, &roomy), p);
+    assert!(no_spill.is_zero(), "below budget nothing may spill");
+    assert!(
+        !roomy.exists() || std::fs::read_dir(&roomy).unwrap().next().is_none(),
+        "below budget no temp files may be created"
+    );
+    assert_eq!(rows_spilled, rows_mem, "spilling must not change the join result");
+    // replay/drop cleaned up after the spilled run too
+    assert!(
+        !tight.exists() || std::fs::read_dir(&tight).unwrap().next().is_none(),
+        "spill temp files must be deleted after the exchange"
+    );
+    for d in [tight, roomy] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn groupby_and_sort_survive_tiny_budgets() {
+    let p = 3;
+    let dir = test_dir("ops");
+    let cluster = spill_cluster(p, 1 << 10, &dir);
+    let exec = CylonExecutor::new(&cluster, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let t = datagen::partition_for_rank(93, 3000, 0.2, env.rank(), env.world_size());
+            let g = dist::groupby(
+                &t,
+                &[0],
+                &[dist::AggSpec::new(1, cylonflow::ops::AggFun::Sum)],
+                dist::GroupbyStrategy::ShuffleFirst,
+                env,
+            )?;
+            let s = dist::sort(&t, &cylonflow::ops::SortOptions::by(0), env)?;
+            Ok((g.num_rows(), s.num_rows(), env.spill_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let sorted_total: usize = out.iter().map(|(_, n, _)| n).sum();
+    assert_eq!(sorted_total, 3000, "sort must conserve rows under spilling");
+    let spilled: u64 = out.iter().map(|(_, _, s)| s.spilled_bytes).sum();
+    assert!(spilled > 0, "1 KiB budget must force spilling");
+    // groups must not be split across ranks even when frames spill
+    let groups: usize = out.iter().map(|(n, _, _)| n).sum();
+    let whole: Vec<Table> = (0..p)
+        .map(|r| datagen::partition_for_rank(93, 3000, 0.2, r, p))
+        .collect();
+    let reference = cylonflow::ops::groupby(
+        &Table::concat_owned(whole).unwrap(),
+        &[0],
+        &[dist::AggSpec::new(1, cylonflow::ops::AggFun::Sum)],
+    )
+    .unwrap();
+    assert_eq!(groups, reference.num_rows());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn plan_pipeline_reports_per_stage_spill() {
+    let p = 2;
+    let dir = test_dir("plan");
+    let cluster = spill_cluster(p, 1 << 10, &dir);
+    let exec = CylonExecutor::new(&cluster, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let l = datagen::partition_for_rank(94, 2000, 0.5, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(95, 2000, 0.5, env.rank(), env.world_size());
+            dist::pipeline(l, r, 1.0, env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    for rep in &out {
+        let total = rep.spill();
+        assert!(total.spilled_bytes > 0, "tiny budget must spill inside the plan");
+        // spill is attributed to exchanging stages; the join stage always
+        // shuffles both sides here
+        let join = rep.stages.iter().find(|s| s.name == "join").unwrap();
+        assert!(!join.spill.is_zero(), "join stage should carry its spill delta");
+        assert!(rep.report().contains("spill="), "report must surface spilling");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
