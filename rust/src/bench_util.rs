@@ -14,21 +14,34 @@ pub struct Measurement {
 }
 
 impl Measurement {
-    /// Median duration.
-    pub fn median(&self) -> Duration {
+    /// Median duration, `None` when no samples were recorded.
+    pub fn median_checked(&self) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut s = self.samples.clone();
         s.sort();
-        s[s.len() / 2]
+        Some(s[s.len() / 2])
     }
 
-    /// Mean duration.
+    /// Median duration; saturates to zero on an empty sample vec (an
+    /// empty measurement must not panic a whole bench run — callers that
+    /// need to distinguish use [`Measurement::median_checked`]).
+    pub fn median(&self) -> Duration {
+        self.median_checked().unwrap_or_default()
+    }
+
+    /// Mean duration (zero when empty).
     pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
         self.samples.iter().sum::<Duration>() / self.samples.len() as u32
     }
 
-    /// Min duration.
+    /// Min duration (zero when empty).
     pub fn min(&self) -> Duration {
-        *self.samples.iter().min().expect("non-empty")
+        self.samples.iter().min().copied().unwrap_or_default()
     }
 
     /// One-line report.
@@ -104,6 +117,111 @@ pub fn fmt_secs(d: Duration) -> String {
     }
 }
 
+/// Value of a space-separated `--name value` CLI flag — the one argv
+/// lookup the bench binaries (`bench_driver`, `bench_gate`) share.
+pub fn arg_value<'a>(argv: &'a [String], name: &str) -> Option<&'a String> {
+    argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1))
+}
+
+/// One row of the CI benchmark trajectory (`BENCH_ci.json` /
+/// `BENCH_baseline.json`): an operator benchmarked at a fixed seed and
+/// key distribution, with the skew subsystem's balance ratios. The
+/// regression gate (`bench_gate`) compares medians and ratios between a
+/// fresh run and the checked-in baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Operator name (`join`, `groupby`, `sort`, `shuffle`).
+    pub op: String,
+    /// Key distribution (`uniform`, `zipf`).
+    pub dist: String,
+    /// Total logical rows across the gang.
+    pub rows: u64,
+    /// Gang size.
+    pub world: u64,
+    /// Median wall time per run, nanoseconds (0 = unset: the gate skips
+    /// the timing comparison until a trusted runner refreshes it).
+    pub median_ns: u64,
+    /// Max/mean partition row ratio under plain hashing (0 = n/a).
+    pub max_mean_before: f64,
+    /// Max/mean partition row ratio under the skew plan (0 = n/a). In
+    /// the baseline this doubles as the ceiling the gate enforces.
+    pub max_mean_after: f64,
+}
+
+/// Render bench records as a stable, human-diffable JSON array (the
+/// format `parse_bench_records` reads back; no external crates).
+pub fn records_to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"dist\": \"{}\", \"rows\": {}, \"world\": {}, \
+             \"median_ns\": {}, \"max_mean_before\": {:.3}, \"max_mean_after\": {:.3}}}{sep}\n",
+            r.op, r.dist, r.rows, r.world, r.median_ns, r.max_mean_before, r.max_mean_after
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Parse a `BENCH_*.json` file produced by [`records_to_json`] (or
+/// hand-maintained in the same shape). A deliberately small scanner —
+/// flat array of flat objects, string and number values, unknown keys
+/// ignored — not a general JSON parser.
+pub fn parse_bench_records(text: &str) -> Result<Vec<BenchRecord>, String> {
+    let mut records = Vec::new();
+    let mut rest = text;
+    loop {
+        let Some(start) = rest.find('{') else { break };
+        let Some(len) = rest[start..].find('}') else {
+            return Err("unterminated object".into());
+        };
+        let body = &rest[start + 1..start + len];
+        records.push(parse_record(body)?);
+        rest = &rest[start + len + 1..];
+    }
+    Ok(records)
+}
+
+fn parse_record(body: &str) -> Result<BenchRecord, String> {
+    let mut r = BenchRecord {
+        op: String::new(),
+        dist: String::new(),
+        rows: 0,
+        world: 0,
+        median_ns: 0,
+        max_mean_before: 0.0,
+        max_mean_after: 0.0,
+    };
+    for field in body.split(',') {
+        let Some((key, value)) = field.split_once(':') else {
+            if field.trim().is_empty() {
+                continue;
+            }
+            return Err(format!("malformed field: {field:?}"));
+        };
+        let key = key.trim().trim_matches('"');
+        let value = value.trim();
+        let as_f64 = || -> Result<f64, String> {
+            value.parse::<f64>().map_err(|_| format!("bad number for {key}: {value:?}"))
+        };
+        match key {
+            "op" => r.op = value.trim_matches('"').to_string(),
+            "dist" => r.dist = value.trim_matches('"').to_string(),
+            "rows" => r.rows = as_f64()? as u64,
+            "world" => r.world = as_f64()? as u64,
+            "median_ns" => r.median_ns = as_f64()? as u64,
+            "max_mean_before" => r.max_mean_before = as_f64()?,
+            "max_mean_after" => r.max_mean_after = as_f64()?,
+            _ => {} // forward-compatible: unknown keys ignored
+        }
+    }
+    if r.op.is_empty() || r.dist.is_empty() {
+        return Err(format!("record missing op/dist: {body:?}"));
+    }
+    Ok(r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +238,63 @@ mod tests {
     fn fmt_paths() {
         assert!(fmt_secs(Duration::from_millis(1500)).ends_with('s'));
         assert!(fmt_secs(Duration::from_millis(5)).ends_with("ms"));
+    }
+
+    #[test]
+    fn arg_value_finds_flag_values() {
+        let argv: Vec<String> = ["--rows", "100", "--out"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(arg_value(&argv, "--rows").map(String::as_str), Some("100"));
+        assert_eq!(arg_value(&argv, "--out"), None, "trailing flag has no value");
+        assert_eq!(arg_value(&argv, "--missing"), None);
+    }
+
+    #[test]
+    fn empty_measurement_saturates_instead_of_panicking() {
+        let m = Measurement { name: "empty".into(), samples: vec![] };
+        assert_eq!(m.median_checked(), None);
+        assert_eq!(m.median(), Duration::ZERO);
+        assert_eq!(m.mean(), Duration::ZERO);
+        assert_eq!(m.min(), Duration::ZERO);
+        assert!(m.report().contains("n=0"));
+    }
+
+    fn record(op: &str, dist: &str, median: u64) -> BenchRecord {
+        BenchRecord {
+            op: op.into(),
+            dist: dist.into(),
+            rows: 65536,
+            world: 4,
+            median_ns: median,
+            max_mean_before: 2.614,
+            max_mean_after: 1.28,
+        }
+    }
+
+    #[test]
+    fn bench_records_roundtrip() {
+        let recs = vec![record("join", "zipf", 123_456), record("sort", "uniform", 9)];
+        let json = records_to_json(&recs);
+        let parsed = parse_bench_records(&json).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].op, "join");
+        assert_eq!(parsed[0].median_ns, 123_456);
+        assert!((parsed[0].max_mean_before - 2.614).abs() < 1e-9);
+        assert_eq!(parsed[1], record("sort", "uniform", 9));
+    }
+
+    #[test]
+    fn bench_records_parse_is_tolerant_and_strict_where_it_matters() {
+        // whitespace, reordered and unknown fields are fine
+        let text = r#"[
+            { "dist":"zipf" , "op": "join", "future_field": 7, "median_ns": 10 }
+        ]"#;
+        let r = &parse_bench_records(text).unwrap()[0];
+        assert_eq!((r.op.as_str(), r.dist.as_str(), r.median_ns), ("join", "zipf", 10));
+        // empty array is fine
+        assert_eq!(parse_bench_records("[]").unwrap().len(), 0);
+        // but missing identity or broken numbers are errors
+        assert!(parse_bench_records(r#"[{"median_ns": 1}]"#).is_err());
+        assert!(parse_bench_records(r#"[{"op":"j","dist":"u","rows": xx}]"#).is_err());
+        assert!(parse_bench_records("[{").is_err());
     }
 }

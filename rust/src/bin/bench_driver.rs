@@ -11,6 +11,12 @@
 //! bench_driver serial [--rows N]              serial columnar vs row-oriented
 //! bench_driver ablation [--rows N]            groupby strategy + skew ablations
 //! bench_driver all    [--rows N]
+//! bench_driver bench  [--rows N] [--world P] [--iters K]
+//!                     [--ops join,groupby,sort,shuffle] [--out FILE]
+//!                                             fixed-seed CI trajectory:
+//!                                             uniform + zipf keys, skew
+//!                                             subsystem on, emits
+//!                                             BENCH_ci.json for bench_gate
 //! ```
 //!
 //! Testbed note: this machine exposes a single core, so wall times do not
@@ -20,7 +26,7 @@
 
 use cylonflow::actor_mr::MrRuntime;
 use cylonflow::amt::{AmtDataFrame, AmtRuntime, TaskGraph};
-use cylonflow::bench_util::{fmt_secs, print_table, time_once};
+use cylonflow::bench_util::{fmt_secs, print_table, records_to_json, time_once, BenchRecord};
 use cylonflow::comm::CommBackend;
 use cylonflow::config::Config;
 use cylonflow::metrics::Phase;
@@ -426,19 +432,188 @@ fn ablation(rows: usize) {
     );
 }
 
+// ------------------------------------------------------------ CI bench
+
+/// Operators the CI trajectory covers, in run order.
+const BENCH_OPS: [&str; 4] = ["shuffle", "join", "groupby", "sort"];
+/// The skewed CI workload: zipf(1.2) over 64 keys puts ~29% of all rows
+/// on the hottest key — enough to trip the hot-key detector while
+/// leaving a realistic cold tail.
+const ZIPF_EXP: f64 = 1.2;
+const ZIPF_KEYS: usize = 64;
+
+fn bench_part(dist_name: &str, seed: u64, rows: usize, rank: usize, world: usize) -> Table {
+    if dist_name == "zipf" {
+        datagen::zipf_partition_for_rank(seed, rows, ZIPF_EXP, ZIPF_KEYS, rank, world)
+    } else {
+        datagen::partition_for_rank(seed, rows, CARD, rank, world)
+    }
+}
+
+/// One-row-per-key dimension table for the join benchmarks (a fact ⋈
+/// dimension shape keeps the output linear in the fact rows). Only rank
+/// 0 holds rows; the other ranks build the empty-schema table directly
+/// instead of filling and discarding the full domain.
+fn bench_dimension(dist_name: &str, rows: usize, rank: usize) -> Table {
+    let domain = if dist_name == "zipf" {
+        ZIPF_KEYS
+    } else {
+        ((rows as f64 * CARD).ceil() as usize).max(1)
+    };
+    let n = if rank == 0 { domain as i64 } else { 0 };
+    let keys: Vec<i64> = (0..n).collect();
+    let vals: Vec<i64> = (0..n).map(|k| k * 10).collect();
+    Table::from_columns(vec![
+        ("k", cylonflow::column::Column::from_i64(keys)),
+        ("d", cylonflow::column::Column::from_i64(vals)),
+    ])
+    .expect("dimension table")
+}
+
+/// Benchmark one (operator, distribution) cell on a fresh skew-enabled
+/// gang at fixed seeds: median wall time over `iters` runs plus the skew
+/// subsystem's max/mean balance ratios.
+fn bench_one(
+    op: &'static str,
+    dist_name: &'static str,
+    rows: usize,
+    world: usize,
+    iters: usize,
+) -> BenchRecord {
+    let mut cfg = Config::from_env();
+    cfg.exchange.skew.enabled = true;
+    let cluster = Cluster::with_config(world, cfg).expect("cluster");
+    let exec = CylonExecutor::new(&cluster, world).expect("executor");
+    exec.run(|env| env.barrier()).unwrap().wait().unwrap(); // warmup
+    // Generate the workload ONCE, outside the timed region: the gate
+    // watches the operators, and datagen in the loop would dilute a real
+    // operator regression below the 25% tolerance.
+    let parts: std::sync::Arc<Vec<Table>> = std::sync::Arc::new(
+        (0..world).map(|r| bench_part(dist_name, 7001, rows, r, world)).collect(),
+    );
+    let dims: std::sync::Arc<Vec<Table>> = std::sync::Arc::new(
+        (0..world).map(|r| bench_dimension(dist_name, rows, r)).collect(),
+    );
+    let run_once = || {
+        let parts = parts.clone();
+        let dims = dims.clone();
+        exec.run(move |env| {
+            let l = &parts[env.rank()];
+            let n = match op {
+                "shuffle" => dist::shuffle_by_key_balanced(l, &[0], env)?.num_rows(),
+                "join" => {
+                    let r = &dims[env.rank()];
+                    dist::join_skew(l, r, &JoinOptions::inner(0, 0), env)?.num_rows()
+                }
+                "groupby" => dist::groupby(
+                    l,
+                    &[0],
+                    &[AggSpec::new(1, AggFun::Sum)],
+                    dist::GroupbyStrategy::ShuffleFirst,
+                    env,
+                )?
+                .num_rows(),
+                "sort" => dist::sort_balanced(l, &SortOptions::by(0), env)?.num_rows(),
+                other => unreachable!("unknown bench op {other}"),
+            };
+            Ok(n)
+        })
+        .expect("submit")
+        .wait()
+        .expect("bench app failed")
+    };
+    let label = format!("{op}/{dist_name}");
+    let m = cylonflow::bench_util::bench(&label, 1, iters, || {
+        run_once();
+    });
+    // one extra pass reads the accumulated skew counters (ratios are
+    // max-merged, so the worst observed exchange is reported)
+    let stats = exec
+        .run(|env| Ok(env.skew_snapshot()))
+        .expect("submit")
+        .wait()
+        .expect("stats app failed");
+    let before = stats.iter().map(|s| s.ratio_before_milli).max().unwrap_or(0);
+    let after = stats.iter().map(|s| s.ratio_after_milli).max().unwrap_or(0);
+    println!("{}", m.report());
+    BenchRecord {
+        op: op.to_string(),
+        dist: dist_name.to_string(),
+        rows: rows as u64,
+        world: world as u64,
+        median_ns: m.median().as_nanos() as u64,
+        max_mean_before: before as f64 / 1000.0,
+        max_mean_after: after as f64 / 1000.0,
+    }
+}
+
+/// `bench_driver bench`: the fixed-seed CI trajectory. Runs the selected
+/// operators over uniform and zipf-skewed keys with the skew subsystem
+/// enabled, prints the measurements and writes them as JSON for the
+/// `bench_gate` regression check. Exits non-zero (without panicking)
+/// when an `--ops` filter matches nothing.
+fn bench_ci(argv: &[String]) -> i32 {
+    let flag = |name: &str| cylonflow::bench_util::arg_value(argv, name);
+    let rows: usize = flag("--rows").and_then(|v| v.parse().ok()).unwrap_or(1 << 16);
+    let world: usize = flag("--world").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let iters: usize = flag("--iters").and_then(|v| v.parse().ok()).unwrap_or(5);
+    let out = flag("--out").cloned().unwrap_or_else(|| "BENCH_ci.json".to_string());
+    let selected: Vec<&'static str> = match flag("--ops") {
+        None => BENCH_OPS.to_vec(),
+        Some(list) => {
+            let wanted: Vec<&str> =
+                list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+            BENCH_OPS.iter().copied().filter(|op| wanted.contains(op)).collect()
+        }
+    };
+    if selected.is_empty() {
+        let asked = flag("--ops").map(String::as_str).unwrap_or("");
+        eprintln!("bench: --ops '{asked}' matches none of {BENCH_OPS:?}; nothing to run");
+        return 2;
+    }
+    let mut records = Vec::new();
+    for dist_name in ["uniform", "zipf"] {
+        for &op in &selected {
+            records.push(bench_one(op, dist_name, rows, world, iters));
+        }
+    }
+    let table_rows: Vec<(String, Vec<String>)> = records
+        .iter()
+        .map(|r| {
+            (
+                format!("{}/{}", r.op, r.dist),
+                vec![
+                    format!("{}ns", r.median_ns),
+                    format!("{:.2}", r.max_mean_before),
+                    format!("{:.2}", r.max_mean_after),
+                ],
+            )
+        })
+        .collect();
+    print_table(
+        &format!("CI bench trajectory ({rows} rows, p={world}, skew on)"),
+        &["median", "max/mean before", "max/mean after"],
+        &table_rows,
+    );
+    if let Err(e) = std::fs::write(&out, records_to_json(&records)) {
+        eprintln!("bench: cannot write {out}: {e}");
+        return 1;
+    }
+    println!("\nwrote {out} ({} records)", records.len());
+    0
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().cloned().unwrap_or_else(|| "all".into());
     let flag = |name: &str| -> Option<usize> {
-        argv.iter()
-            .position(|a| a == name)
-            .and_then(|i| argv.get(i + 1))
-            .and_then(|v| v.parse().ok())
+        cylonflow::bench_util::arg_value(&argv, name).and_then(|v| v.parse().ok())
     };
     let rows = flag("--rows");
     let large = rows.unwrap_or(1 << 21); // "1B-row" analogue (scaled)
     let small = rows.unwrap_or(1 << 18); // "100M-row" (comm-bound) analogue
     match cmd.as_str() {
+        "bench" => std::process::exit(bench_ci(&argv[1..])),
         "fig6" => fig6(large),
         "fig7" => fig7(large),
         "fig8" => {
@@ -461,7 +636,9 @@ fn main() {
         }
         other => {
             eprintln!("unknown figure '{other}'");
-            eprintln!("usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|all> [--rows N]");
+            eprintln!(
+                "usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|bench|all> [--rows N]"
+            );
             std::process::exit(2);
         }
     }

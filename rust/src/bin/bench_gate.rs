@@ -1,0 +1,163 @@
+//! `bench_gate` — the CI benchmark regression gate.
+//!
+//! Compares a freshly measured `BENCH_ci.json` (written by
+//! `bench_driver bench`) against the checked-in `BENCH_baseline.json`
+//! and exits non-zero when the trajectory regresses:
+//!
+//! - **timing**: a record's median may not exceed the baseline median by
+//!   more than `--tolerance` (default 25%). Baseline medians of `0` mean
+//!   "not yet recorded on a trusted runner" and skip this check — refresh
+//!   them with `bench_driver bench --out BENCH_baseline.json` on the
+//!   reference machine and commit the result.
+//! - **balance**: a record's `max_mean_after` (the max/mean partition
+//!   row ratio the skew-aware exchange achieved) may not exceed the
+//!   baseline's value, which doubles as the enforced ceiling (e.g. 1.5
+//!   for the zipf workloads). No tolerance: the ratio is low-noise.
+//! - **coverage**: every baseline record must still be measured — a
+//!   benchmark silently disappearing fails the gate — and must have been
+//!   measured at the baseline's `rows`/`world` scale (comparing medians
+//!   across different workload sizes is meaningless).
+//!
+//! ```text
+//! bench_gate --current BENCH_ci.json --baseline ../BENCH_baseline.json \
+//!            [--tolerance 0.25]
+//! ```
+
+use cylonflow::bench_util::{arg_value, parse_bench_records, BenchRecord};
+
+fn load(path: &str) -> Result<Vec<BenchRecord>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_bench_records(&text).map_err(|e| format!("cannot parse {path}: {e}"))
+}
+
+/// Compare current records against the baseline; returns human-readable
+/// failure lines (empty = gate passes).
+fn gate(current: &[BenchRecord], baseline: &[BenchRecord], tolerance: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    for b in baseline {
+        let Some(c) = current.iter().find(|c| c.op == b.op && c.dist == b.dist) else {
+            failures.push(format!("{}/{}: benchmark missing from current run", b.op, b.dist));
+            continue;
+        };
+        if c.rows != b.rows || c.world != b.world {
+            failures.push(format!(
+                "{}/{}: workload drift — measured at rows={} world={} but baseline holds \
+                 rows={} world={}; refresh BENCH_baseline.json for the new scale",
+                b.op, b.dist, c.rows, c.world, b.rows, b.world
+            ));
+            continue;
+        }
+        if b.median_ns > 0 {
+            let limit = b.median_ns as f64 * (1.0 + tolerance);
+            if c.median_ns as f64 > limit {
+                failures.push(format!(
+                    "{}/{}: median {}ns exceeds baseline {}ns by more than {:.0}%",
+                    b.op,
+                    b.dist,
+                    c.median_ns,
+                    b.median_ns,
+                    tolerance * 100.0
+                ));
+            }
+        }
+        if b.max_mean_after > 0.0 && c.max_mean_after > b.max_mean_after {
+            failures.push(format!(
+                "{}/{}: max/mean partition ratio {:.3} exceeds the enforced ceiling {:.3}",
+                b.op, b.dist, c.max_mean_after, b.max_mean_after
+            ));
+        }
+    }
+    failures
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| arg_value(&argv, name);
+    let current_path = flag("--current").cloned().unwrap_or_else(|| "BENCH_ci.json".into());
+    let baseline_path =
+        flag("--baseline").cloned().unwrap_or_else(|| "BENCH_baseline.json".into());
+    let tolerance: f64 = flag("--tolerance").and_then(|v| v.parse().ok()).unwrap_or(0.25);
+
+    let (current, baseline) = match (load(&current_path), load(&baseline_path)) {
+        (Ok(c), Ok(b)) => (c, b),
+        (c, b) => {
+            for err in [c.err(), b.err()].into_iter().flatten() {
+                eprintln!("bench_gate: {err}");
+            }
+            std::process::exit(1);
+        }
+    };
+    if baseline.is_empty() {
+        eprintln!("bench_gate: baseline {baseline_path} holds no records");
+        std::process::exit(1);
+    }
+    let unset = baseline.iter().filter(|b| b.median_ns == 0).count();
+    if unset > 0 {
+        println!(
+            "bench_gate: note: {unset}/{} baseline medians are 0 (unset) — timing \
+             comparison skipped for them; refresh BENCH_baseline.json on a trusted runner",
+            baseline.len()
+        );
+    }
+    let failures = gate(&current, &baseline, tolerance);
+    if failures.is_empty() {
+        println!(
+            "bench_gate: OK — {} baseline records checked at {:.0}% tolerance",
+            baseline.len(),
+            tolerance * 100.0
+        );
+        return;
+    }
+    for f in &failures {
+        eprintln!("bench_gate: FAIL {f}");
+    }
+    std::process::exit(1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: &str, median: u64, after: f64) -> BenchRecord {
+        BenchRecord {
+            op: op.into(),
+            dist: "zipf".into(),
+            rows: 1,
+            world: 4,
+            median_ns: median,
+            max_mean_before: 0.0,
+            max_mean_after: after,
+        }
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_skips_unset() {
+        let baseline = vec![rec("join", 100, 1.5), rec("sort", 0, 0.0)];
+        let current = vec![rec("join", 124, 1.4), rec("sort", 999_999, 9.9)];
+        assert!(gate(&current, &baseline, 0.25).is_empty());
+    }
+
+    #[test]
+    fn gate_fails_on_regression_ratio_and_missing() {
+        let baseline = vec![rec("join", 100, 1.5), rec("sort", 100, 0.0)];
+        let slow = vec![rec("join", 126, 1.4)];
+        let fails = gate(&slow, &baseline, 0.25);
+        assert_eq!(fails.len(), 2, "{fails:?}"); // median regression + sort missing
+        assert!(fails[0].contains("median"));
+        assert!(fails[1].contains("missing"));
+        let unbalanced = vec![rec("join", 90, 1.9), rec("sort", 90, 0.0)];
+        let fails = gate(&unbalanced, &baseline, 0.25);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("ratio"));
+    }
+
+    #[test]
+    fn gate_rejects_workload_scale_drift() {
+        let baseline = vec![rec("join", 100, 1.5)];
+        let mut scaled = rec("join", 100, 1.4);
+        scaled.rows *= 2;
+        let fails = gate(&[scaled], &baseline, 0.25);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("workload drift"));
+    }
+}

@@ -487,6 +487,7 @@ mod tests {
                 .join(format!("cf-collectives-test-{}", std::process::id()))
                 .to_string_lossy()
                 .into_owned(),
+            skew: Default::default(),
         }
     }
 

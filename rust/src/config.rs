@@ -19,10 +19,48 @@ pub enum HashPath {
     Auto,
 }
 
+/// Knobs of the skew-aware repartitioning subsystem (hot-key detection
+/// and split-assignment routing; see DESIGN.md §8). A key is *hot* when
+/// its estimated share of the shuffled rows exceeds
+/// `hot_key_threshold × (1 / world_size)` — i.e. at the default `0.5`,
+/// when one key alone holds more than half an average rank's share.
+/// Detection runs on a `sample_per_rank`-rows-per-rank sample gathered
+/// with the same allgather the sample sort already uses.
+///
+/// Off by default: enabling it weakens the strict hash-co-location
+/// contract of skew-tolerant entry points ([`crate::dist::join_skew`],
+/// [`crate::dist::sort_balanced`], the shuffle-first groupby), which the
+/// plan optimizer tracks via the `balanced` partitioning-lineage flag.
+///
+/// Environment variables: `CYLONFLOW_SKEW` (`1`/`on`/`true` enables),
+/// `CYLONFLOW_HOT_KEY_THRESHOLD` (float), `CYLONFLOW_SKEW_SAMPLE`
+/// (rows sampled per rank).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkewConfig {
+    /// Master switch for skew-aware repartitioning.
+    pub enabled: bool,
+    /// Hot-key share threshold as a multiple of the fair per-rank share
+    /// `1/p`: a key is hot when `estimated_share > hot_key_threshold / p`.
+    pub hot_key_threshold: f64,
+    /// Rows each rank contributes to the frequency-estimation sample.
+    pub sample_per_rank: usize,
+}
+
+impl Default for SkewConfig {
+    fn default() -> Self {
+        SkewConfig {
+            enabled: false,
+            hot_key_threshold: 0.5,
+            sample_per_rank: 64,
+        }
+    }
+}
+
 /// Knobs of the streaming exchange path (chunked wire frames + receiver
-/// spill-to-disk; see DESIGN.md §7). Held by [`crate::comm::CommContext`]
-/// and threaded there from [`Config`] by the executor.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// spill-to-disk; see DESIGN.md §7) plus the skew-aware repartitioning
+/// switchboard (DESIGN.md §8). Held by [`crate::comm::CommContext`] and
+/// threaded there from [`Config`] by the executor.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExchangeConfig {
     /// Target serialized bytes per wire frame (row-granular; a single
     /// huge row may exceed it).
@@ -32,6 +70,8 @@ pub struct ExchangeConfig {
     pub spill_budget_bytes: usize,
     /// Directory for spill temp files (created on first overflow only).
     pub spill_dir: String,
+    /// Skew-aware repartitioning knobs (hot-key detection, salting).
+    pub skew: SkewConfig,
 }
 
 impl Default for ExchangeConfig {
@@ -40,6 +80,7 @@ impl Default for ExchangeConfig {
             frame_bytes: 4 << 20,          // 4 MiB frames
             spill_budget_bytes: 256 << 20, // 256 MiB per collective
             spill_dir: std::env::temp_dir().to_string_lossy().into_owned(),
+            skew: SkewConfig::default(),
         }
     }
 }
@@ -76,7 +117,10 @@ impl Config {
     /// `CYLONFLOW_BACKEND` (memory|tcp|tcp-ucc), `CYLONFLOW_HASH`
     /// (pjrt|native|auto), `CYLONFLOW_ARTIFACTS`,
     /// `CYLONFLOW_FRAME_BYTES` / `CYLONFLOW_SPILL_BUDGET` (byte counts,
-    /// optional `k`/`m`/`g` suffix), `CYLONFLOW_SPILL_DIR`.
+    /// optional `k`/`m`/`g` suffix), `CYLONFLOW_SPILL_DIR`,
+    /// `CYLONFLOW_SKEW` (`1`/`on`/`true` enables skew-aware
+    /// repartitioning), `CYLONFLOW_HOT_KEY_THRESHOLD` (float multiple of
+    /// the fair share `1/p`), `CYLONFLOW_SKEW_SAMPLE` (rows per rank).
     pub fn from_env() -> Config {
         let mut c = Config::default();
         if let Ok(b) = std::env::var("CYLONFLOW_BACKEND") {
@@ -103,8 +147,29 @@ impl Config {
         if let Ok(d) = std::env::var("CYLONFLOW_SPILL_DIR") {
             c.exchange.spill_dir = d;
         }
+        if let Ok(s) = std::env::var("CYLONFLOW_SKEW") {
+            c.exchange.skew.enabled = parse_switch(&s);
+        }
+        if let Ok(t) = std::env::var("CYLONFLOW_HOT_KEY_THRESHOLD") {
+            if let Ok(v) = t.trim().parse::<f64>() {
+                if v.is_finite() && v > 0.0 {
+                    c.exchange.skew.hot_key_threshold = v;
+                }
+            }
+        }
+        if let Ok(n) = std::env::var("CYLONFLOW_SKEW_SAMPLE") {
+            if let Ok(v) = n.trim().parse::<usize>() {
+                c.exchange.skew.sample_per_rank = v.max(1);
+            }
+        }
         c
     }
+}
+
+/// Parse a boolean-ish env switch: `1`, `on`, `true`, `yes` (any case)
+/// enable; everything else disables.
+fn parse_switch(s: &str) -> bool {
+    matches!(s.trim().to_ascii_lowercase().as_str(), "1" | "on" | "true" | "yes")
 }
 
 /// Parse an env var as a byte count: a plain integer, optionally suffixed
@@ -148,6 +213,20 @@ mod tests {
         assert_eq!(c.exchange.frame_bytes, 4 << 20);
         assert_eq!(c.exchange.spill_budget_bytes, 256 << 20);
         assert!(!c.exchange.spill_dir.is_empty());
+        assert!(!c.exchange.skew.enabled, "skew handling must be opt-in");
+        assert!((c.exchange.skew.hot_key_threshold - 0.5).abs() < 1e-12);
+        assert_eq!(c.exchange.skew.sample_per_rank, 64);
+    }
+
+    #[test]
+    fn switch_parsing() {
+        assert!(parse_switch("1"));
+        assert!(parse_switch("ON"));
+        assert!(parse_switch(" true "));
+        assert!(parse_switch("Yes"));
+        assert!(!parse_switch("0"));
+        assert!(!parse_switch("off"));
+        assert!(!parse_switch(""));
     }
 
     #[test]

@@ -62,6 +62,76 @@ pub fn skewed_table(seed: u64, rows: usize, hot_frac: f64) -> Table {
     .unwrap()
 }
 
+/// Zipf-distributed keys: key `k ∈ [0, n_keys)` is drawn with
+/// probability `∝ (k + 1)^{-exponent}` via inverse-CDF sampling over the
+/// precomputed cumulative weights. The workload of the skew-aware
+/// repartitioning experiments (paper §VI load imbalance): at
+/// `exponent = 1.2` over a small key domain, the top key alone holds an
+/// outsized share of the rows.
+pub fn zipf_table(seed: u64, rows: usize, exponent: f64, n_keys: usize) -> Table {
+    assert!(n_keys >= 1, "zipf_table needs at least one key");
+    assert!(exponent > 0.0 && exponent.is_finite());
+    let cum = zipf_cumulative(exponent, n_keys);
+    let total = *cum.last().expect("n_keys >= 1");
+    let mut rng = SplitMix64::new(seed);
+    let keys: Vec<i64> = (0..rows)
+        .map(|_| zipf_draw(&cum, total, rng.next_f64()))
+        .collect();
+    // Values bounded to 1e6: realistic payload domain, keeps i64 sums
+    // far from overflow and f64 aggregate accumulation exact.
+    let vals: Vec<i64> = (0..rows).map(|_| rng.next_bounded(1_000_000) as i64).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("v", Column::from_i64(vals)),
+    ])
+    .unwrap()
+}
+
+/// The per-worker slice of a logical `total_rows` zipf dataset (the
+/// skewed sibling of [`partition_for_rank`]): worker `rank` of `world`
+/// draws its own rows from the *same* global key distribution, so hot
+/// keys are hot on every partition and collide after a shuffle.
+pub fn zipf_partition_for_rank(
+    seed: u64,
+    total_rows: usize,
+    exponent: f64,
+    n_keys: usize,
+    rank: usize,
+    world: usize,
+) -> Table {
+    let base = total_rows / world;
+    let extra = total_rows % world;
+    let rows = base + usize::from(rank < extra);
+    zipf_table(seed ^ (rank as u64).wrapping_mul(0x9e37_79b9), rows, exponent, n_keys)
+}
+
+/// Cumulative (unnormalized) zipf weights: `cum[k] = Σ_{j≤k} (j+1)^-s`.
+fn zipf_cumulative(exponent: f64, n_keys: usize) -> Vec<f64> {
+    let mut cum = Vec::with_capacity(n_keys);
+    let mut acc = 0.0;
+    for k in 1..=n_keys {
+        acc += (k as f64).powf(-exponent);
+        cum.push(acc);
+    }
+    cum
+}
+
+/// Inverse-CDF draw: smallest key whose cumulative weight covers `u`.
+fn zipf_draw(cum: &[f64], total: f64, u: f64) -> i64 {
+    let target = u * total;
+    let mut lo = 0usize;
+    let mut hi = cum.len() - 1;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if cum[mid] < target {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as i64
+}
+
 /// The per-worker slice of a logical `total_rows` dataset: worker `rank` of
 /// `world` generates its own partition locally (the paper loads partitions
 /// directly on workers; generation stands in for Parquet reads).
@@ -129,6 +199,49 @@ mod tests {
         let keys = t.column(0).unwrap().i64_values().unwrap();
         let hot = keys.iter().filter(|&&k| k == 0).count();
         assert!((4_000..6_000).contains(&hot), "hot count {hot}");
+    }
+
+    #[test]
+    fn zipf_shares_match_theory() {
+        // zipf(1.2) over 4 keys: p(0) = 1/H ≈ 0.528 with
+        // H = 1 + 2^-1.2 + 3^-1.2 + 4^-1.2 ≈ 1.892
+        let n = 100_000;
+        let t = zipf_table(42, n, 1.2, 4);
+        assert_eq!(t.num_rows(), n);
+        let keys = t.column(0).unwrap().i64_values().unwrap();
+        assert!(keys.iter().all(|&k| (0..4).contains(&k)));
+        let top = keys.iter().filter(|&&k| k == 0).count() as f64 / n as f64;
+        assert!((0.50..0.56).contains(&top), "top-key share {top}");
+        let second = keys.iter().filter(|&&k| k == 1).count() as f64 / n as f64;
+        assert!((0.20..0.26).contains(&second), "second-key share {second}");
+        // deterministic
+        assert_eq!(zipf_table(42, 1000, 1.2, 4), zipf_table(42, 1000, 1.2, 4));
+        // near-flat exponent ≈ near-uniform shares
+        let flat = zipf_table(7, n, 0.01, 10);
+        let k0 = flat
+            .column(0)
+            .unwrap()
+            .i64_values()
+            .unwrap()
+            .iter()
+            .filter(|&&k| k == 0)
+            .count() as f64
+            / n as f64;
+        assert!((0.05..0.15).contains(&k0), "flat share {k0}");
+    }
+
+    #[test]
+    fn zipf_rank_partitions_cover_total_and_share_hot_key() {
+        let world = 4;
+        let total = 2003;
+        let mut rows = 0;
+        for r in 0..world {
+            let t = zipf_partition_for_rank(9, total, 1.2, 8, r, world);
+            // the hot key shows up on every rank's partition
+            assert!(t.column(0).unwrap().i64_values().unwrap().contains(&0), "rank {r}");
+            rows += t.num_rows();
+        }
+        assert_eq!(rows, total);
     }
 
     #[test]

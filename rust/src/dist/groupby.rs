@@ -51,6 +51,14 @@ pub fn groupby(
     check_keys(t, key_cols, "dist::groupby")?;
     match strategy {
         GroupbyStrategy::ShuffleFirst => {
+            // Skew-aware path (DESIGN.md §8): when enabled and hot keys
+            // are detected, the raw-row shuffle is salted for balance
+            // and hot groups are rebuilt via the two-phase machinery —
+            // the output keeps the co-location contract either way.
+            if let Some(out) = super::skew::groupby_shuffle_first_balanced(t, key_cols, aggs, env)?
+            {
+                return Ok(out);
+            }
             let shuffled = shuffle_by_key(t, key_cols, env)?;
             env.time(Phase::Compute, || {
                 ops::groupby_with_hasher(&shuffled, key_cols, aggs, env.hasher())
@@ -76,7 +84,11 @@ pub fn groupby_prepartitioned(
     })
 }
 
-fn groupby_two_phase(
+/// The two-phase core: partial-aggregate locally, shuffle the partials
+/// co-partitioned on the keys, merge, finalize. Also the *rebuild* step
+/// of the skew-aware shuffle-first groupby ([`crate::dist::skew`]),
+/// applied there to just the hot-key rows.
+pub(crate) fn groupby_two_phase(
     t: &Table,
     key_cols: &[usize],
     aggs: &[AggSpec],

@@ -43,12 +43,21 @@
 //! join/groupby/sort whose shuffle would transiently exceed RAM
 //! completes (each rank still holds its own output partition), with
 //! spilled bytes reported in [`crate::metrics::SpillStats`].
+//!
+//! Exchanges can additionally run **skew-aware** ([`skew`], DESIGN.md
+//! §8, opt-in via [`crate::config::SkewConfig`]): hot keys detected from
+//! an oversampled allgather are split across a contiguous rank range —
+//! [`join_skew`] / [`sort_balanced`] / [`shuffle_by_key_balanced`] and
+//! the shuffle-first [`fn@groupby`] route through the split-assignment
+//! plan, reporting what moved in [`crate::metrics::SkewStats`]. The
+//! strict entry points below keep their co-location contracts unchanged.
 
 pub mod describe;
 pub mod groupby;
 pub mod join;
 pub mod pipeline;
 pub mod setops;
+pub mod skew;
 pub mod sort;
 
 pub use describe::describe;
@@ -56,6 +65,7 @@ pub use groupby::{groupby, groupby_prepartitioned, GroupbyStrategy};
 pub use join::{join, join_prepartitioned, join_with_exchange, ExchangeSides};
 pub use pipeline::{pipeline, PipelineReport, StageTiming};
 pub use setops::{difference, distinct, distinct_prepartitioned, intersect, union_distinct};
+pub use skew::{join_skew, shuffle_by_key_balanced, sort_balanced, SkewPlan};
 pub use sort::{sort, sort_prepartitioned};
 
 // Re-exports so call sites (and the prelude) can name option types from

@@ -1,0 +1,910 @@
+//! Skew-aware repartitioning — the paper's §VI answer to "skewed
+//! datasets could starve some processes" (see also Perera et al.,
+//! arXiv:2209.06146, which attributes Cylon's edge on skewed keys to
+//! balanced partition construction).
+//!
+//! A plain hash shuffle routes every row of a key to `hash(key) mod p`;
+//! one dominant key therefore lands on one rank, and the BSP step waits
+//! on that rank. This module detects such *hot keys* from a cheap
+//! oversampled allgather (the same collective the sample sort already
+//! pays for), builds a [`SkewPlan`] — a split-assignment that salts each
+//! hot key across a **contiguous rank range** sized to its estimated
+//! share — and threads the plan through the exchanges:
+//!
+//! - [`shuffle_by_key_balanced`]: salted shuffle. Hot keys end up split
+//!   across their range; callers must not assume key co-location.
+//! - [`join_skew`]: salts the dominant side of each hot key and
+//!   **replicates** the other side's rows for that key across the same
+//!   range, so every match is still produced exactly once (the build
+//!   side is order-insensitive — no rebuild needed). When one side's hot
+//!   key dominates and the other side is small, it falls back to a
+//!   broadcast join: the small side is allgathered, the big skewed side
+//!   never crosses the wire.
+//! - the shuffle-first [`crate::dist::groupby()`] (via the crate-internal
+//!   `groupby_shuffle_first_balanced`):
+//!   salted raw shuffle, then a *rebuild*: cold keys aggregate directly
+//!   (all their rows co-located as usual), hot keys run the two-phase
+//!   partial/merge machinery so their final groups land back on their
+//!   owner rank — the output keeps the strict co-location contract.
+//!   Two-phase groupby needs no treatment at all: its partials carry at
+//!   most one row per key per rank, so the partial shuffle is balanced
+//!   by construction and the estimator finds nothing hot in it.
+//! - [`sort_balanced`]: run-aware splitter derivation keeps duplicate
+//!   splitters for hot runs, and the tie-spreading range partitioner
+//!   ([`crate::ops::partition_by_range_directed_spread`]) round-robins
+//!   tied rows across the bucket range those duplicates open — global
+//!   sortedness is preserved, co-location of equal keys is not.
+//!
+//! The plan optimizer records the weakened placement of skew-split
+//! exchanges through the `balanced` flag on
+//! [`crate::plan::Partitioning`], so shuffle elision never fires on an
+//! output whose hot keys may be split.
+//!
+//! Everything here is SPMD-safe by construction: every decision is
+//! derived from *globally identical* data (allgathered samples,
+//! allreduced counts), so all ranks take the same branches and call the
+//! same collectives in the same order. The whole subsystem is gated by
+//! [`crate::config::SkewConfig`] (`CYLONFLOW_SKEW` et al.) and reports
+//! what it did through [`crate::metrics::SkewStats`].
+
+use super::{check_keys, ExchangeSides};
+use crate::column::Column;
+use crate::error::{Error, Result};
+use crate::executor::CylonEnv;
+use crate::metrics::{Phase, SkewStats};
+use crate::ops::{self, JoinOptions, JoinType, KeyHasher, SortOptions};
+use crate::table::Table;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Minimum raw sample occurrences before a key may be declared hot —
+/// guards against a tiny sample promoting noise into a reroute plan.
+const MIN_HOT_SAMPLES: u64 = 4;
+
+/// Seed mixed into the per-rank frequency-estimation sample.
+const SAMPLE_SEED: u64 = 0x5eed_cafe;
+
+/// Where a hot key's rows go: the contiguous rank range
+/// `[start, start + span)`, filled round-robin by the salting
+/// partitioner (or entirely, by the replicating partitioner).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HotRange {
+    /// First rank of the range.
+    pub start: usize,
+    /// Number of consecutive ranks the key is split over.
+    pub span: usize,
+    /// Estimated share of the exchanged rows this key holds (for
+    /// reports; the routing itself only needs `start`/`span`).
+    pub share: f64,
+}
+
+/// A split-assignment plan: which key hashes are hot and which
+/// contiguous rank range each one is spread over. Identical on every
+/// rank (it is a pure function of the allgathered sample), which is what
+/// makes the salted routing SPMD-correct.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SkewPlan {
+    /// Hot key hash → assigned rank range.
+    pub hot: BTreeMap<i64, HotRange>,
+}
+
+impl SkewPlan {
+    /// True when nothing was flagged hot (plain hashing suffices).
+    pub fn is_empty(&self) -> bool {
+        self.hot.is_empty()
+    }
+
+    /// Number of hot key-hash groups in the plan.
+    pub fn len(&self) -> usize {
+        self.hot.len()
+    }
+}
+
+/// Per-key frequency estimate gathered from every rank's sample, with
+/// each sampled row weighted by the rows it represents (rank rows /
+/// rank sample size), so unequal partitions don't bias the shares.
+#[derive(Debug, Clone)]
+pub struct KeyEstimate {
+    /// Key hash → (estimated rows, raw sample occurrences).
+    counts: BTreeMap<i64, (f64, u64)>,
+    /// Estimated total rows across the gang (sum of weights).
+    total: f64,
+}
+
+impl KeyEstimate {
+    /// Estimated global row count.
+    pub fn total_rows(&self) -> f64 {
+        self.total
+    }
+
+    /// Estimated share of key hash `h` (0 when unseen).
+    pub fn share(&self, h: i64) -> f64 {
+        if self.total <= 0.0 {
+            return 0.0;
+        }
+        self.counts.get(&h).map(|(w, _)| w / self.total).unwrap_or(0.0)
+    }
+
+    /// Largest single-key share in the estimate.
+    pub fn max_share(&self) -> f64 {
+        if self.total <= 0.0 {
+            return 0.0;
+        }
+        self.counts
+            .values()
+            .map(|(w, _)| w / self.total)
+            .fold(0.0, f64::max)
+    }
+
+    /// Keys whose estimated share exceeds `threshold × (1/p)`, with
+    /// enough raw sample support to trust (`≥ MIN_HOT_SAMPLES`).
+    pub fn hot_keys(&self, threshold: f64, p: usize) -> Vec<(i64, f64)> {
+        if self.total <= 0.0 {
+            return Vec::new();
+        }
+        let cut = threshold / p as f64;
+        let mut hot: Vec<(i64, f64)> = self
+            .counts
+            .iter()
+            .filter(|(_, (_, raw))| *raw >= MIN_HOT_SAMPLES)
+            .map(|(h, (w, _))| (*h, w / self.total))
+            .filter(|(_, share)| *share > cut)
+            .collect();
+        sort_heaviest_first(&mut hot);
+        hot
+    }
+
+    /// Estimated *cold* rows landing on each rank under plain
+    /// `hash mod p` routing, excluding the keys in `hot` (those are
+    /// placed by the greedy assignment instead). Scaled to shares of the
+    /// total, so it composes with hot shares in the load model.
+    pub fn cold_shares(&self, hot: &BTreeSet<i64>, p: usize) -> Vec<f64> {
+        let mut load = vec![0.0; p];
+        if self.total <= 0.0 {
+            return load;
+        }
+        for (h, (w, _)) in &self.counts {
+            if !hot.contains(h) {
+                load[(*h as u64 % p as u64) as usize] += w / self.total;
+            }
+        }
+        load
+    }
+}
+
+/// Descending by share, hash tiebreak — the one comparator every rank
+/// must apply identically for the greedy assignment to be SPMD-safe.
+fn heavier_first(a: (i64, f64), b: (i64, f64)) -> std::cmp::Ordering {
+    let ord = b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal);
+    ord.then(a.0.cmp(&b.0))
+}
+
+/// Sort a hot-key list heaviest-first (see [`heavier_first`]).
+fn sort_heaviest_first(hot: &mut [(i64, f64)]) {
+    hot.sort_by(|a, b| heavier_first(*a, *b));
+}
+
+/// Estimate per-key frequencies of `t`'s shuffle keys across the gang:
+/// each rank samples `sample_per_rank` rows, hashes the key columns with
+/// the gang hasher, and allgathers `(hash, weight)` pairs. The result is
+/// identical on every rank. One collective; payload is a few KiB.
+pub fn estimate_keys(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<KeyEstimate> {
+    let cfg = &env.comm().exchange_config().skew;
+    let k = cfg.sample_per_rank.max(1);
+    let (hashes, weight) = env.time(Phase::Auxiliary, || -> Result<(Vec<i64>, f64)> {
+        let sample = ops::sample_rows(t, k, SAMPLE_SEED ^ env.rank() as u64);
+        let hashes = ops::kernels::row_hashes(&sample, key_cols, env.hasher())?;
+        let w = if sample.num_rows() == 0 {
+            0.0
+        } else {
+            t.num_rows() as f64 / sample.num_rows() as f64
+        };
+        Ok((hashes, w))
+    })?;
+    let n = hashes.len();
+    let local = Table::from_columns(vec![
+        ("h", Column::from_i64(hashes)),
+        ("w", Column::from_f64(vec![weight; n])),
+    ])?;
+    let global = env.comm().allgather_streamed(&local)?;
+    let hs = global.column(0)?.i64_values()?;
+    let ws = global.column(1)?.f64_values()?;
+    let mut counts: BTreeMap<i64, (f64, u64)> = BTreeMap::new();
+    let mut total = 0.0;
+    for (&h, &w) in hs.iter().zip(ws) {
+        let e = counts.entry(h).or_insert((0.0, 0));
+        e.0 += w;
+        e.1 += 1;
+        total += w;
+    }
+    Ok(KeyEstimate { counts, total })
+}
+
+/// Greedily place hot keys onto contiguous rank ranges over a base load
+/// (estimated cold rows per rank): heaviest key first, span proportional
+/// to its share (both `floor` and `ceil` of `share × p` are candidates —
+/// a narrower range concentrating slightly above the fair share often
+/// beats a wider one that must overlap other hot ranges), start chosen
+/// to minimize the resulting maximum load. Pure and deterministic —
+/// every rank computes the identical plan from the identical estimate.
+pub fn assign_ranges(hot: &[(i64, f64)], cold: &[f64], p: usize) -> SkewPlan {
+    let mut load = cold.to_vec();
+    load.resize(p, 0.0);
+    let mut plan = SkewPlan::default();
+    for &(h, share) in hot {
+        let ideal = share * p as f64;
+        let lo_span = (ideal.floor() as usize).clamp(1, p);
+        let hi_span = (ideal.ceil() as usize).clamp(1, p);
+        let mut best = (f64::INFINITY, 0usize, lo_span);
+        for span in lo_span..=hi_span {
+            let inc = share / span as f64;
+            for start in 0..=(p - span) {
+                let window_max =
+                    load[start..start + span].iter().fold(0.0f64, |a, &b| a.max(b));
+                let resulting = window_max + inc;
+                if resulting < best.0 - 1e-12 {
+                    best = (resulting, start, span);
+                }
+            }
+        }
+        let (_, start, span) = best;
+        let inc = share / span as f64;
+        for r in start..start + span {
+            load[r] += inc;
+        }
+        plan.hot.insert(h, HotRange { start, span, share });
+    }
+    plan
+}
+
+/// Estimate + hot-key selection + greedy assignment in one call (the
+/// single-table path used by the balanced shuffle and groupby).
+pub fn plan_for(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<SkewPlan> {
+    let cfg = env.comm().exchange_config().skew.clone();
+    let p = env.world_size();
+    let est = estimate_keys(t, key_cols, env)?;
+    let hot = est.hot_keys(cfg.hot_key_threshold, p);
+    if hot.is_empty() {
+        return Ok(SkewPlan::default());
+    }
+    let hot_set: BTreeSet<i64> = hot.iter().map(|(h, _)| *h).collect();
+    let cold = est.cold_shares(&hot_set, p);
+    Ok(assign_ranges(&hot, &cold, p))
+}
+
+/// Split `t` into `p` parts under `plan`: cold rows go to
+/// `hash mod p`, hot rows round-robin across their assigned range.
+/// Returns the parts, the per-rank row counts plain hashing *would* have
+/// produced (for the before/after balance report) and the number of
+/// rerouted rows.
+pub fn partition_salted(
+    t: &Table,
+    key_cols: &[usize],
+    plan: &SkewPlan,
+    p: usize,
+    hasher: &dyn KeyHasher,
+) -> Result<(Vec<Table>, Vec<i64>, u64)> {
+    let hashes = ops::kernels::row_hashes(t, key_cols, hasher)?;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
+    let mut before = vec![0i64; p];
+    let mut spin: BTreeMap<i64, usize> = BTreeMap::new();
+    let mut rerouted = 0u64;
+    for (row, &h) in hashes.iter().enumerate() {
+        let plain = (h as u64 % p as u64) as usize;
+        before[plain] += 1;
+        let dest = match plan.hot.get(&h) {
+            Some(r) => {
+                let c = spin.entry(h).or_insert(0);
+                let d = r.start + *c % r.span;
+                *c += 1;
+                rerouted += 1;
+                d
+            }
+            None => plain,
+        };
+        buckets[dest].push(row as u32);
+    }
+    let parts = buckets.into_iter().map(|b| t.gather(&b)).collect();
+    Ok((parts, before, rerouted))
+}
+
+/// Join-side partitioner: rows whose key is hot in `salt` round-robin
+/// across their range (this side is the salted/probe side for that key);
+/// rows hot in `repl` are **replicated** to every rank of the range (this
+/// side is the build side for that key — each of the other side's salted
+/// rows must find them locally); everything else routes `hash mod p`.
+/// `salt` and `repl` must have disjoint key sets.
+pub fn partition_salted_replicating(
+    t: &Table,
+    key_cols: &[usize],
+    salt: &SkewPlan,
+    repl: &SkewPlan,
+    p: usize,
+    hasher: &dyn KeyHasher,
+) -> Result<(Vec<Table>, Vec<i64>, u64)> {
+    let hashes = ops::kernels::row_hashes(t, key_cols, hasher)?;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
+    let mut before = vec![0i64; p];
+    let mut spin: BTreeMap<i64, usize> = BTreeMap::new();
+    let mut rerouted = 0u64;
+    for (row, &h) in hashes.iter().enumerate() {
+        let plain = (h as u64 % p as u64) as usize;
+        before[plain] += 1;
+        if let Some(r) = salt.hot.get(&h) {
+            let c = spin.entry(h).or_insert(0);
+            buckets[r.start + *c % r.span].push(row as u32);
+            *c += 1;
+            rerouted += 1;
+        } else if let Some(r) = repl.hot.get(&h) {
+            for d in r.start..r.start + r.span {
+                buckets[d].push(row as u32);
+            }
+            rerouted += r.span as u64;
+        } else {
+            buckets[plain].push(row as u32);
+        }
+    }
+    let parts = buckets.into_iter().map(|b| t.gather(&b)).collect();
+    Ok((parts, before, rerouted))
+}
+
+/// Allreduce the per-destination row counts of a (hypothetical) plain
+/// routing and the actual skew-aware routing, returning the global
+/// max/mean partition row ratios ×1000 (`(before, after)`).
+fn global_balance(env: &CylonEnv, before: &[i64], after: &[i64]) -> Result<(u64, u64)> {
+    let p = before.len();
+    let mut both = Vec::with_capacity(2 * p);
+    both.extend_from_slice(before);
+    both.extend_from_slice(after);
+    let summed = env.comm().allreduce_sum(&both)?;
+    Ok((ratio_milli(&summed[..p]), ratio_milli(&summed[p..])))
+}
+
+/// Max/mean of a count vector, ×1000; 1000 for an empty/zero vector.
+fn ratio_milli(counts: &[i64]) -> u64 {
+    let total: i64 = counts.iter().sum();
+    if total <= 0 || counts.is_empty() {
+        return 1000;
+    }
+    let mean = total as f64 / counts.len() as f64;
+    let max = counts.iter().copied().max().unwrap_or(0) as f64;
+    (max / mean * 1000.0).round() as u64
+}
+
+/// Hash-repartition with skew handling: like
+/// [`crate::dist::shuffle_by_key`], but hot keys are salted across a
+/// contiguous rank range by the split-assignment plan, so every rank
+/// receives a near-equal share even under a dominant key.
+///
+/// **Contract change vs the strict shuffle:** when hot keys are detected
+/// (and only then), their rows end up split across ranks — callers that
+/// need key co-location (a following `*_prepartitioned` call) must use
+/// the strict shuffle instead. With skew handling disabled, at `p = 1`,
+/// or when nothing is hot, this is exactly the strict shuffle.
+pub fn shuffle_by_key_balanced(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<Table> {
+    check_keys(t, key_cols, "dist::shuffle_by_key_balanced")?;
+    let p = env.world_size();
+    if p == 1 {
+        return Ok(t.clone());
+    }
+    if !env.comm().exchange_config().skew.enabled {
+        return super::shuffle_by_key(t, key_cols, env);
+    }
+    let plan = plan_for(t, key_cols, env)?;
+    if plan.is_empty() {
+        return super::shuffle_by_key(t, key_cols, env);
+    }
+    let (parts, before, rerouted) = env.time(Phase::Auxiliary, || {
+        partition_salted(t, key_cols, &plan, p, env.hasher())
+    })?;
+    let after: Vec<i64> = parts.iter().map(|t| t.num_rows() as i64).collect();
+    let (rb, ra) = global_balance(env, &before, &after)?;
+    env.record_skew(&SkewStats {
+        hot_keys: plan.len() as u64,
+        rows_rerouted: rerouted,
+        ratio_before_milli: rb,
+        ratio_after_milli: ra,
+    });
+    env.comm().shuffle_streamed(parts)
+}
+
+/// Skew-aware distributed join. Result rows are identical (as a global
+/// multiset) to [`crate::dist::join()`]; placement is not — hot-key output
+/// rows may be split across the key's rank range, so the output carries
+/// no hash co-location guarantee (the plan optimizer tracks this as a
+/// `balanced` hash partitioning and never elides downstream shuffles).
+///
+/// Strategy, decided identically on every rank from global estimates:
+///
+/// 1. **Fallthrough** — skew disabled, `p = 1`, full-outer join, or no
+///    hot keys: exactly [`crate::dist::join()`].
+/// 2. **Broadcast fallback** — one side's hottest key holds over half
+///    that side's rows *and* the other side is small enough that
+///    replicating it costs no more than shuffling the big side
+///    (`small × p ≤ big`): allgather the small side, keep the big
+///    skewed side in place, join locally. Zero bytes of the skewed side
+///    cross the wire. (Join type permitting: the kept side must be the
+///    row-preserving side of an outer join.)
+/// 3. **Salted exchange** — each hot key is salted on its heavier side
+///    and replicated on the other (a left/right outer join may only salt
+///    its row-preserving side, so null-extension still happens exactly
+///    once); cold keys hash as usual; then one local join per rank.
+pub fn join_skew(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    env: &CylonEnv,
+) -> Result<Table> {
+    if opts.left_on.is_empty() || opts.left_on.len() != opts.right_on.len() {
+        return Err(Error::invalid(
+            "dist::join_skew requires equal, non-empty key column lists",
+        ));
+    }
+    let p = env.world_size();
+    let cfg = env.comm().exchange_config().skew.clone();
+    if !cfg.enabled || p == 1 || opts.join_type == JoinType::FullOuter {
+        return super::join_with_exchange(left, right, opts, ExchangeSides::Both, env);
+    }
+    let lest = estimate_keys(left, &opts.left_on, env)?;
+    let rest = estimate_keys(right, &opts.right_on, env)?;
+    let hot_l = lest.hot_keys(cfg.hot_key_threshold, p);
+    let hot_r = rest.hot_keys(cfg.hot_key_threshold, p);
+    let totals = env
+        .comm()
+        .allreduce_sum(&[left.num_rows() as i64, right.num_rows() as i64])?;
+    let (l_tot, r_tot) = (totals[0].max(0) as f64, totals[1].max(0) as f64);
+
+    // --- broadcast-smaller-side fallback --------------------------------
+    // Dominance is judged from the *supported* hot-key list (≥ the
+    // minimum sample hits), not the raw max share, so a sparse sample
+    // cannot trigger an expensive broadcast on uniform data.
+    let dom_share = |hot: &[(i64, f64)]| hot.first().map(|(_, s)| *s).unwrap_or(0.0);
+    let bcast_right = dom_share(&hot_l) > 0.5
+        && r_tot * p as f64 <= l_tot
+        && matches!(opts.join_type, JoinType::Inner | JoinType::Left);
+    let bcast_left = !bcast_right
+        && dom_share(&hot_r) > 0.5
+        && l_tot * p as f64 <= r_tot
+        && matches!(opts.join_type, JoinType::Inner | JoinType::Right);
+    if bcast_right || bcast_left {
+        let (dom_hot, bcast_rows) = if bcast_right {
+            (&hot_l, right.num_rows())
+        } else {
+            (&hot_r, left.num_rows())
+        };
+        env.record_skew(&SkewStats {
+            hot_keys: dom_hot.len() as u64,
+            rows_rerouted: bcast_rows as u64,
+            ratio_before_milli: 0,
+            ratio_after_milli: 0,
+        });
+        return if bcast_right {
+            let r_all = env.comm().allgather_streamed(right)?;
+            env.time(Phase::Compute, || {
+                ops::join_with_hasher(left, &r_all, opts, env.hasher())
+            })
+        } else {
+            let l_all = env.comm().allgather_streamed(left)?;
+            env.time(Phase::Compute, || {
+                ops::join_with_hasher(&l_all, right, opts, env.hasher())
+            })
+        };
+    }
+
+    // --- per-key salt-side selection ------------------------------------
+    let combined = (l_tot + r_tot).max(1.0);
+    // (hash, combined share, salt-on-left) for the shared greedy pass
+    let mut entries: Vec<(i64, f64, bool)> = Vec::new();
+    let hot_l_set: BTreeSet<i64> = hot_l.iter().map(|(h, _)| *h).collect();
+    let hot_r_set: BTreeSet<i64> = hot_r.iter().map(|(h, _)| *h).collect();
+    for h in hot_l_set.union(&hot_r_set) {
+        let le = lest.share(*h) * l_tot;
+        let re = rest.share(*h) * r_tot;
+        let salt_left = match opts.join_type {
+            // only the row-preserving side may be salted: replicating it
+            // would null-extend its unmatched rows once per replica
+            JoinType::Left => {
+                if !hot_l_set.contains(h) {
+                    continue;
+                }
+                true
+            }
+            JoinType::Right => {
+                if !hot_r_set.contains(h) {
+                    continue;
+                }
+                false
+            }
+            _ => le >= re,
+        };
+        entries.push((*h, (le + re) / combined, salt_left));
+    }
+    if entries.is_empty() {
+        return super::join_with_exchange(left, right, opts, ExchangeSides::Both, env);
+    }
+    entries.sort_by(|a, b| heavier_first((a.0, a.1), (b.0, b.1)));
+    // shared cold-load model: both sides' non-treated keys, combined
+    let treated: BTreeSet<i64> = entries.iter().map(|(h, _, _)| *h).collect();
+    let mut cold = vec![0.0; p];
+    for (r, c) in cold.iter_mut().zip(lest.cold_shares(&treated, p)) {
+        *r += c * l_tot / combined;
+    }
+    for (r, c) in cold.iter_mut().zip(rest.cold_shares(&treated, p)) {
+        *r += c * r_tot / combined;
+    }
+    let flat: Vec<(i64, f64)> = entries.iter().map(|(h, s, _)| (*h, *s)).collect();
+    let shared = assign_ranges(&flat, &cold, p);
+    let mut plan_l = SkewPlan::default();
+    let mut plan_r = SkewPlan::default();
+    for (h, _, salt_left) in &entries {
+        let range = shared.hot[h];
+        if *salt_left {
+            plan_l.hot.insert(*h, range);
+        } else {
+            plan_r.hot.insert(*h, range);
+        }
+    }
+
+    // --- salted exchange + local join -----------------------------------
+    let (lparts, lbefore, lrer) = env.time(Phase::Auxiliary, || {
+        partition_salted_replicating(left, &opts.left_on, &plan_l, &plan_r, p, env.hasher())
+    })?;
+    let (rparts, rbefore, rrer) = env.time(Phase::Auxiliary, || {
+        partition_salted_replicating(right, &opts.right_on, &plan_r, &plan_l, p, env.hasher())
+    })?;
+    let before: Vec<i64> = lbefore.iter().zip(&rbefore).map(|(a, b)| a + b).collect();
+    let after: Vec<i64> = lparts
+        .iter()
+        .zip(&rparts)
+        .map(|(a, b)| (a.num_rows() + b.num_rows()) as i64)
+        .collect();
+    let (rb, ra) = global_balance(env, &before, &after)?;
+    env.record_skew(&SkewStats {
+        hot_keys: entries.len() as u64,
+        rows_rerouted: lrer + rrer,
+        ratio_before_milli: rb,
+        ratio_after_milli: ra,
+    });
+    let l = env.comm().shuffle_streamed(lparts)?;
+    let r = env.comm().shuffle_streamed(rparts)?;
+    env.time(Phase::Compute, || {
+        ops::join_with_hasher(&l, &r, opts, env.hasher())
+    })
+}
+
+/// Skew-aware distributed sort: identical global order and row multiset
+/// as [`crate::dist::sort()`], but hot keys no longer pile into one rank —
+/// the splitter derivation keeps duplicate splitters for runs longer
+/// than a bucket, and the tie-spreading range partitioner round-robins
+/// those rows across the bucket range the duplicates open.
+///
+/// Falls back to the strict sort when skew handling is disabled, at
+/// `p = 1`, or for **stable** sorts (spreading interleaves equal rows
+/// from different source ranks, losing their original relative order).
+/// After a balanced sort, equal keys may straddle adjacent ranks: rank
+/// order still agrees with the sort keys (so a later sort on the *same
+/// or fewer* keys can still skip its exchange — never one that extends
+/// the key list), but equal-key co-location is gone — both tracked by
+/// the optimizer's `balanced` range partitioning.
+pub fn sort_balanced(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
+    super::sort::check_sort_keys(t, opts)?;
+    let p = env.world_size();
+    if p == 1 {
+        return env.time(Phase::Compute, || ops::sort(t, opts));
+    }
+    let cfg = env.comm().exchange_config().skew.clone();
+    if !cfg.enabled || opts.stable {
+        return super::sort(t, opts, env);
+    }
+    let key_cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
+    let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
+
+    // Oversampled allgather, as in the strict sort (never fewer rows).
+    let per_rank = cfg.sample_per_rank.max(32);
+    let sample = env.time(Phase::Auxiliary, || {
+        ops::sample_rows(t, (per_rank * p).max(64), SAMPLE_SEED ^ env.rank() as u64)
+    });
+    let global_sample = env.comm().allgather_streamed(&sample)?;
+
+    // Run-aware splitters over the directed order: cuts snap to run
+    // boundaries for small runs, stay *inside* hot runs (duplicating the
+    // splitter once per bucket-worth of sampled mass).
+    let splitters = env.time(Phase::Auxiliary, || -> Result<Table> {
+        let idx = ops::sort::sort_indices(&global_sample, opts)?;
+        let sorted = global_sample.gather(&idx).project(&key_cols)?;
+        balanced_splitters(&sorted, p)
+    })?;
+    let splitter_cols: Vec<usize> = (0..key_cols.len()).collect();
+    let duplicates = duplicate_splitter_groups(&splitters);
+
+    let (mut parts, mut before) = env.time(Phase::Auxiliary, || {
+        ops::partition_by_range_directed_spread(t, &key_cols, &splitters, &splitter_cols, &dirs)
+    })?;
+    while parts.len() < p {
+        parts.push(t.slice(0, 0));
+    }
+    before.resize(p, 0);
+    // Balance report: `before` is what the non-spreading router would
+    // have done (computed in the same partitioning pass). The allreduce
+    // runs unconditionally — rows can tie a *unique* splitter too (tie
+    // range width 2), and whether any rank rerouted is not knowable
+    // locally, so gating the collective would deadlock the gang.
+    let after: Vec<i64> = parts.iter().map(|t| t.num_rows() as i64).collect();
+    let rerouted: u64 = parts
+        .iter()
+        .zip(&before)
+        .map(|(a, &b)| (a.num_rows() as i64 - b).unsigned_abs())
+        .sum::<u64>()
+        / 2;
+    let (rb, ra) = global_balance(env, &before, &after)?;
+    if duplicates > 0 || rerouted > 0 {
+        env.record_skew(&SkewStats {
+            hot_keys: duplicates,
+            rows_rerouted: rerouted,
+            ratio_before_milli: rb,
+            ratio_after_milli: ra,
+        });
+    }
+    let mine = env.comm().shuffle_streamed(parts)?;
+    env.time(Phase::Compute, || ops::sort(&mine, opts))
+}
+
+/// Derive `p − 1` splitters from the *sorted, keys-only* global sample,
+/// aware of equality runs: the equi-quantile cut positions are kept, but
+/// a cut landing in a run no longer than half a bucket is snapped to the
+/// run's end (whole small runs stay in one bucket), while cuts inside a
+/// longer (hot) run stay put — producing one duplicate splitter per
+/// bucket-worth of that run's mass, which is exactly what the
+/// tie-spreading partitioner needs to split the run across ranks.
+pub fn balanced_splitters(sorted: &Table, p: usize) -> Result<Table> {
+    let n = sorted.num_rows();
+    if p <= 1 || n == 0 {
+        return Ok(sorted.slice(0, 0));
+    }
+    let all_cols: Vec<usize> = (0..sorted.num_columns()).collect();
+    let cols = all_cols.as_slice();
+    let eq = |a: usize, b: usize| ops::kernels::rows_equal(sorted, a, cols, sorted, b, cols);
+    let small_run = (n / (2 * p)).max(1);
+    let mut picks: Vec<u32> = Vec::with_capacity(p - 1);
+    for i in 1..p {
+        let pos = ((i * n) / p).min(n - 1);
+        let mut run_start = pos;
+        while run_start > 0 && eq(run_start - 1, pos) {
+            run_start -= 1;
+        }
+        let mut run_end = pos + 1;
+        while run_end < n && eq(run_end, pos) {
+            run_end += 1;
+        }
+        let pick = if run_end - run_start <= small_run {
+            (run_end - 1) as u32
+        } else {
+            pos as u32
+        };
+        picks.push(pick);
+    }
+    Ok(sorted.gather(&picks))
+}
+
+/// Number of splitter values that appear more than once (each duplicate
+/// group marks one hot run the spreader will split across ranks).
+fn duplicate_splitter_groups(splitters: &Table) -> u64 {
+    let n = splitters.num_rows();
+    if n < 2 {
+        return 0;
+    }
+    let cols: Vec<usize> = (0..splitters.num_columns()).collect();
+    let mut groups = 0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && ops::kernels::rows_equal(splitters, i, &cols, splitters, j, &cols) {
+            j += 1;
+        }
+        if j - i > 1 {
+            groups += 1;
+        }
+        i = j;
+    }
+    groups
+}
+
+/// The shuffle-first groupby's skew path (called by
+/// [`crate::dist::groupby()`]): salted raw shuffle, then the *rebuild* —
+/// cold keys (fully co-located, as in the strict shuffle) aggregate
+/// directly; hot keys (split across their rank range) run the two-phase
+/// partial/merge machinery, which lands their final group on the owner
+/// rank. The concatenated output therefore keeps the strict groupby's
+/// co-location contract while the expensive raw-row exchange is
+/// balanced.
+///
+/// Returns `Ok(None)` when skew handling is disabled, at `p = 1`, or
+/// when nothing is hot — the caller then runs the plain path. The
+/// decision is made from the globally-identical estimate, so all ranks
+/// agree.
+pub(crate) fn groupby_shuffle_first_balanced(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[ops::AggSpec],
+    env: &CylonEnv,
+) -> Result<Option<Table>> {
+    let p = env.world_size();
+    if p == 1 || !env.comm().exchange_config().skew.enabled {
+        return Ok(None);
+    }
+    let plan = plan_for(t, key_cols, env)?;
+    if plan.is_empty() {
+        return Ok(None);
+    }
+    let (parts, before, rerouted) = env.time(Phase::Auxiliary, || {
+        partition_salted(t, key_cols, &plan, p, env.hasher())
+    })?;
+    let after: Vec<i64> = parts.iter().map(|t| t.num_rows() as i64).collect();
+    let (rb, ra) = global_balance(env, &before, &after)?;
+    env.record_skew(&SkewStats {
+        hot_keys: plan.len() as u64,
+        rows_rerouted: rerouted,
+        ratio_before_milli: rb,
+        ratio_after_milli: ra,
+    });
+    let mine = env.comm().shuffle_streamed(parts)?;
+
+    // Rebuild: split received rows into cold (complete groups) and hot
+    // (partial groups spread over the key's range).
+    let (cold_rows, hot_rows) = env.time(Phase::Auxiliary, || -> Result<(Table, Table)> {
+        let hashes = ops::kernels::row_hashes(&mine, key_cols, env.hasher())?;
+        let mut cold_idx = Vec::new();
+        let mut hot_idx = Vec::new();
+        for (row, h) in hashes.iter().enumerate() {
+            if plan.hot.contains_key(h) {
+                hot_idx.push(row as u32);
+            } else {
+                cold_idx.push(row as u32);
+            }
+        }
+        Ok((mine.gather(&cold_idx), mine.gather(&hot_idx)))
+    })?;
+    let cold_out = env.time(Phase::Compute, || {
+        ops::groupby_with_hasher(&cold_rows, key_cols, aggs, env.hasher())
+    })?;
+    let hot_out = super::groupby::groupby_two_phase(&hot_rows, key_cols, aggs, env)?;
+    Ok(Some(Table::concat_owned(vec![cold_out, hot_out])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::column::Column;
+    use crate::ops::NativeHasher;
+
+    #[test]
+    fn assign_ranges_spreads_and_packs() {
+        // zipf(1.2)-ish shares over 4 keys on 4 ranks, no cold mass
+        let hot = vec![(11i64, 0.53), (22, 0.23), (33, 0.14), (44, 0.10)];
+        let plan = assign_ranges(&hot, &[0.0; 4], 4);
+        let top = plan.hot[&11];
+        assert_eq!(top.span, 3, "53% of 4 ranks must span ceil(2.12)=3");
+        // simulate the resulting loads
+        let mut load = [0.0f64; 4];
+        for r in plan.hot.values() {
+            for l in load.iter_mut().skip(r.start).take(r.span) {
+                *l += r.share / r.span as f64;
+            }
+        }
+        let max = load.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max / 0.25 < 1.5, "greedy plan unbalanced: {load:?}");
+    }
+
+    #[test]
+    fn assign_ranges_respects_cold_load() {
+        // rank 0 already holds 30% cold mass: a 20% hot key must avoid it
+        let plan = assign_ranges(&[(7, 0.2)], &[0.3, 0.1, 0.1, 0.1], 4);
+        let r = plan.hot[&7];
+        assert_eq!(r.span, 1);
+        assert_ne!(r.start, 0, "greedy must not stack onto the loaded rank");
+    }
+
+    #[test]
+    fn salted_partition_splits_hot_key_evenly() {
+        let mut keys = vec![1i64, 2, 3];
+        keys.extend(vec![77i64; 90]);
+        let t = Table::from_columns(vec![("k", Column::from_i64(keys))]).unwrap();
+        let h = ops::kernels::row_hashes(&t, &[0], &NativeHasher).unwrap();
+        let hot_hash = h[3]; // hash of key 77
+        let mut plan = SkewPlan::default();
+        plan.hot.insert(hot_hash, HotRange { start: 1, span: 3, share: 0.9 });
+        let (parts, before, rerouted) =
+            partition_salted(&t, &[0], &plan, 4, &NativeHasher).unwrap();
+        assert_eq!(rerouted, 90);
+        assert_eq!(before.iter().sum::<i64>(), 93);
+        // 90 hot rows round-robin over ranks 1..=3 → 30 each
+        for r in 1..4 {
+            let hot_count = parts[r]
+                .column(0)
+                .unwrap()
+                .i64_values()
+                .unwrap()
+                .iter()
+                .filter(|&&k| k == 77)
+                .count();
+            assert_eq!(hot_count, 30, "rank {r}");
+        }
+        assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 93);
+    }
+
+    #[test]
+    fn replicating_partition_copies_hot_rows_across_range() {
+        let t =
+            Table::from_columns(vec![("k", Column::from_i64(vec![5, 5, 9]))]).unwrap();
+        let h = ops::kernels::row_hashes(&t, &[0], &NativeHasher).unwrap();
+        let mut repl = SkewPlan::default();
+        repl.hot.insert(h[0], HotRange { start: 0, span: 3, share: 0.5 });
+        let (parts, _, rerouted) = partition_salted_replicating(
+            &t,
+            &[0],
+            &SkewPlan::default(),
+            &repl,
+            4,
+            &NativeHasher,
+        )
+        .unwrap();
+        assert_eq!(rerouted, 6, "2 hot rows × span 3");
+        for r in 0..3 {
+            let fives = parts[r]
+                .column(0)
+                .unwrap()
+                .i64_values()
+                .unwrap()
+                .iter()
+                .filter(|&&k| k == 5)
+                .count();
+            assert_eq!(fives, 2, "rank {r} must hold both replicas");
+        }
+        // total = 2 rows × 3 replicas + 1 cold row
+        assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn balanced_splitters_duplicate_hot_runs_only() {
+        // sorted sample: 10 distinct small keys, then a 60-row hot run
+        let mut keys: Vec<i64> = (0..10).collect();
+        keys.extend(vec![50i64; 60]);
+        let t = Table::from_columns(vec![("k", Column::from_i64(keys))]).unwrap();
+        let sp = balanced_splitters(&t, 4).unwrap();
+        assert_eq!(sp.num_rows(), 3);
+        let vals = sp.column(0).unwrap().i64_values().unwrap();
+        // the hot run straddles all equi-quantile cuts except maybe the
+        // first → duplicated hot-key splitters appear
+        assert!(vals.iter().filter(|&&v| v == 50).count() >= 2, "{vals:?}");
+        assert_eq!(duplicate_splitter_groups(&sp), 1);
+        // non-skewed sample: all splitters distinct
+        let u: Vec<i64> = (0..100).collect();
+        let t = Table::from_columns(vec![("k", Column::from_i64(u))]).unwrap();
+        let sp = balanced_splitters(&t, 4).unwrap();
+        assert_eq!(duplicate_splitter_groups(&sp), 0);
+    }
+
+    #[test]
+    fn ratio_milli_math() {
+        assert_eq!(ratio_milli(&[10, 10, 10, 10]), 1000);
+        assert_eq!(ratio_milli(&[40, 0, 0, 0]), 4000);
+        assert_eq!(ratio_milli(&[]), 1000);
+        assert_eq!(ratio_milli(&[0, 0]), 1000);
+    }
+
+    #[test]
+    fn estimate_thresholds() {
+        let est = KeyEstimate {
+            counts: [(1i64, (600.0, 60u64)), (2, (250.0, 25)), (3, (150.0, 2))]
+                .into_iter()
+                .collect(),
+            total: 1000.0,
+        };
+        // p=4, threshold 0.5 → cut at 12.5%: keys 1 (60%) and 2 (25%)
+        // qualify; key 3 (15%) is over the cut but lacks sample support
+        let hot = est.hot_keys(0.5, 4);
+        assert_eq!(hot.iter().map(|(h, _)| *h).collect::<Vec<_>>(), vec![1, 2]);
+        assert!((est.max_share() - 0.6).abs() < 1e-12);
+        let cold = est.cold_shares(&[1i64, 2].into_iter().collect(), 4);
+        assert!((cold.iter().sum::<f64>() - 0.15).abs() < 1e-12);
+    }
+}

@@ -78,7 +78,7 @@ pub fn sort_prepartitioned(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Res
 }
 
 /// Shared argument check: non-empty key list, all key columns present.
-fn check_sort_keys(t: &Table, opts: &SortOptions) -> Result<()> {
+pub(crate) fn check_sort_keys(t: &Table, opts: &SortOptions) -> Result<()> {
     if opts.keys.is_empty() {
         return Err(Error::invalid("dist::sort: empty key list"));
     }

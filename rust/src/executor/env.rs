@@ -4,7 +4,7 @@
 //! store handle, the key-hasher and per-phase metrics.
 
 use crate::comm::CommContext;
-use crate::metrics::{Phase, PhaseTimers};
+use crate::metrics::{Phase, PhaseTimers, SkewStats};
 use crate::ops::KeyHasher;
 use crate::store::CylonStore;
 use std::cell::RefCell;
@@ -15,6 +15,7 @@ pub struct CylonEnv {
     store: CylonStore,
     hasher: Box<dyn KeyHasher>,
     timers: RefCell<PhaseTimers>,
+    skew: RefCell<SkewStats>,
 }
 
 impl CylonEnv {
@@ -25,6 +26,7 @@ impl CylonEnv {
             store,
             hasher,
             timers: RefCell::new(PhaseTimers::new()),
+            skew: RefCell::new(SkewStats::default()),
         }
     }
 
@@ -75,6 +77,25 @@ impl CylonEnv {
     /// diffs successive snapshots to attribute spill to stages.
     pub fn spill_snapshot(&self) -> crate::metrics::SpillStats {
         self.comm.peek_spill_stats()
+    }
+
+    /// Fold a skew-aware exchange's counters into this actor's running
+    /// [`SkewStats`] (called by the [`crate::dist::skew`] operators).
+    /// Counters accumulate; the balance ratios keep the latest
+    /// observation so per-stage snapshot diffs report each stage's own
+    /// exchange.
+    pub fn record_skew(&self, stats: &SkewStats) {
+        if !stats.is_zero() {
+            self.skew.borrow_mut().observe(stats);
+        }
+    }
+
+    /// Non-destructive snapshot of this actor's accumulated skew
+    /// counters (hot keys handled, rows rerouted, balance ratios).
+    /// Monotonic; the plan executor diffs successive snapshots to
+    /// attribute skew handling to stages.
+    pub fn skew_snapshot(&self) -> SkewStats {
+        *self.skew.borrow()
     }
 
     /// Snapshot and reset this actor's metrics, folding in the

@@ -128,6 +128,79 @@ impl SpillStats {
     }
 }
 
+/// Skew-aware repartitioning counters (see [`crate::dist::skew`]): what
+/// the hot-key detector found and how much the split-assignment plan
+/// moved. Like [`SpillStats`] these accumulate monotonically per worker
+/// ([`crate::executor::CylonEnv::record_skew`]) and are attributed to
+/// stages by diffing snapshots.
+///
+/// The ratio fields hold the **max/mean partition row ratio** of the
+/// exchange, `×1000` (so they stay integer, `Eq` and diff-able): `1000`
+/// means perfectly balanced, `4000` means the fullest rank received 4×
+/// the mean. `_before` simulates the plain `hash mod p` routing of the
+/// same rows; `_after` is the routing the skew plan actually performed.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SkewStats {
+    /// Distinct hot key-hash groups the estimator flagged.
+    pub hot_keys: u64,
+    /// Rows routed by the split-assignment (salted/replicated) path
+    /// instead of plain `hash mod p`.
+    pub rows_rerouted: u64,
+    /// Max/mean partition row ratio under plain hashing, ×1000.
+    pub ratio_before_milli: u64,
+    /// Max/mean partition row ratio under the skew plan, ×1000.
+    pub ratio_after_milli: u64,
+}
+
+impl SkewStats {
+    /// True when no skew handling engaged.
+    pub fn is_zero(&self) -> bool {
+        *self == SkewStats::default()
+    }
+
+    /// Fold another snapshot in for *aggregation* (across ranks or
+    /// stages): counters sum, ratios keep the worst (max) observation —
+    /// "how bad did it get before/after".
+    pub fn merge(&mut self, other: &SkewStats) {
+        self.hot_keys += other.hot_keys;
+        self.rows_rerouted += other.rows_rerouted;
+        self.ratio_before_milli = self.ratio_before_milli.max(other.ratio_before_milli);
+        self.ratio_after_milli = self.ratio_after_milli.max(other.ratio_after_milli);
+    }
+
+    /// Fold one exchange's counters into a worker's *running* stats
+    /// ([`crate::executor::CylonEnv::record_skew`]): counters sum, but
+    /// the ratio fields take the **latest** observation, so a stage
+    /// snapshot diff reports the ratios of that stage's own exchange
+    /// rather than the worst seen anywhere in the run.
+    pub fn observe(&mut self, obs: &SkewStats) {
+        self.hot_keys += obs.hot_keys;
+        self.rows_rerouted += obs.rows_rerouted;
+        self.ratio_before_milli = obs.ratio_before_milli;
+        self.ratio_after_milli = obs.ratio_after_milli;
+    }
+
+    /// Attribute a monotonic snapshot to one stage: counters subtract
+    /// (clamped); the ratio fields are carried from `self` only when the
+    /// stage actually engaged skew handling (counter delta non-zero) —
+    /// with [`SkewStats::observe`] accumulation they then hold the
+    /// stage's own most recent exchange, since ratios are per-exchange
+    /// observations, not running sums.
+    pub fn saturating_diff(&self, earlier: &SkewStats) -> SkewStats {
+        let hot_keys = self.hot_keys.saturating_sub(earlier.hot_keys);
+        let rows_rerouted = self.rows_rerouted.saturating_sub(earlier.rows_rerouted);
+        if hot_keys == 0 && rows_rerouted == 0 {
+            return SkewStats::default();
+        }
+        SkewStats {
+            hot_keys,
+            rows_rerouted,
+            ratio_before_milli: self.ratio_before_milli,
+            ratio_after_milli: self.ratio_after_milli,
+        }
+    }
+}
+
 /// Phase timers attributed to one pipeline/plan stage (delta of the
 /// actor's monotonically accumulating timers across the stage,
 /// communication included). Emitted per executed plan node by
@@ -142,6 +215,9 @@ pub struct StageTiming {
     /// Exchange bytes/frames this stage spilled to disk (zero below the
     /// memory budget).
     pub spill: SpillStats,
+    /// Hot keys / rerouted rows the skew subsystem handled in this stage
+    /// (zero when skew handling is disabled or found nothing).
+    pub skew: SkewStats,
 }
 
 /// Aggregated comm/compute breakdown across a gang of workers.
@@ -260,6 +336,68 @@ mod tests {
         );
         // clamped, never negative
         assert!(earlier.saturating_diff(&a).is_zero());
+    }
+
+    #[test]
+    fn skew_stats_merge_and_diff() {
+        let mut a = SkewStats::default();
+        assert!(a.is_zero());
+        a.merge(&SkewStats {
+            hot_keys: 2,
+            rows_rerouted: 100,
+            ratio_before_milli: 2600,
+            ratio_after_milli: 1300,
+        });
+        a.merge(&SkewStats {
+            hot_keys: 1,
+            rows_rerouted: 50,
+            ratio_before_milli: 1800,
+            ratio_after_milli: 1400,
+        });
+        // counters sum, ratios keep the worst observation
+        assert_eq!(a.hot_keys, 3);
+        assert_eq!(a.rows_rerouted, 150);
+        assert_eq!(a.ratio_before_milli, 2600);
+        assert_eq!(a.ratio_after_milli, 1400);
+        let earlier = SkewStats {
+            hot_keys: 2,
+            rows_rerouted: 100,
+            ratio_before_milli: 2600,
+            ratio_after_milli: 1300,
+        };
+        let d = a.saturating_diff(&earlier);
+        assert_eq!(d.hot_keys, 1);
+        assert_eq!(d.rows_rerouted, 50);
+        // stage engaged skew handling: latest ratios carried through
+        assert_eq!(d.ratio_before_milli, 2600);
+        // no counter delta → ratios zeroed, not attributed to the stage
+        assert!(a.saturating_diff(&a).is_zero());
+        assert!(earlier.saturating_diff(&a).is_zero());
+    }
+
+    #[test]
+    fn skew_stats_observe_keeps_latest_ratios_for_stage_attribution() {
+        // worker-style accumulation: two exchanges, the second milder
+        let mut running = SkewStats::default();
+        running.observe(&SkewStats {
+            hot_keys: 1,
+            rows_rerouted: 100,
+            ratio_before_milli: 4000,
+            ratio_after_milli: 1400,
+        });
+        let cut = running; // stage boundary snapshot
+        running.observe(&SkewStats {
+            hot_keys: 1,
+            rows_rerouted: 40,
+            ratio_before_milli: 1200,
+            ratio_after_milli: 1100,
+        });
+        // the second stage's diff must report ITS exchange, not the
+        // run-wide worst
+        let stage2 = running.saturating_diff(&cut);
+        assert_eq!(stage2.rows_rerouted, 40);
+        assert_eq!(stage2.ratio_before_milli, 1200);
+        assert_eq!(stage2.ratio_after_milli, 1100);
     }
 
     #[test]

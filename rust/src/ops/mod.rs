@@ -29,7 +29,10 @@ pub use groupby::{groupby, groupby_with_hasher, AggFun, AggSpec};
 pub use join::{join, join_with_hasher, JoinAlgo, JoinOptions, JoinType};
 pub use kernels::{KeyHasher, NativeHasher};
 pub use merge::merge_sorted;
-pub use partition::{partition_by_hash, partition_by_range, partition_by_range_directed};
+pub use partition::{
+    partition_by_hash, partition_by_range, partition_by_range_directed,
+    partition_by_range_directed_spread,
+};
 pub use sample::{sample_rows, splitters_from_sample};
 pub use scalar::{add_scalar, mul_scalar};
 pub use select::{drop_columns, head, limit, rename, select, tail};

@@ -65,6 +65,63 @@ pub fn partition_by_range(
     partition_by_range_directed(t, key_cols, splitters, splitter_cols, &vec![true; key_cols.len()])
 }
 
+/// Shared argument check for the directed range partitioners.
+fn check_range_args(key_cols: &[usize], splitter_cols: &[usize], dirs: &[bool]) -> Result<()> {
+    if dirs.len() != key_cols.len() || splitter_cols.len() != key_cols.len() {
+        return Err(Error::invalid(
+            "partition_by_range: key/splitter/direction lists must have equal length",
+        ));
+    }
+    Ok(())
+}
+
+/// Directed multi-key comparison of `t[row]` against `splitters[srow]` —
+/// the one definition both range partitioners route through, so the
+/// spreading variant's bucket bounds stay exactly equivalent to the
+/// plain router's.
+#[allow(clippy::too_many_arguments)]
+fn cmp_row_vs_splitter(
+    t: &Table,
+    row: usize,
+    key_cols: &[usize],
+    splitters: &Table,
+    srow: usize,
+    splitter_cols: &[usize],
+    dirs: &[bool],
+) -> std::cmp::Ordering {
+    for ((&kc, &sc), &asc) in key_cols.iter().zip(splitter_cols).zip(dirs) {
+        let mut ord = rows_cmp(t, row, &[kc], splitters, srow, &[sc]);
+        if !asc {
+            ord = ord.reverse();
+        }
+        if ord != std::cmp::Ordering::Equal {
+            return ord;
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+/// First splitter index whose row is ≥ `t[row]` under the directed order
+/// (= the plain router's destination bucket; ties land here).
+fn range_lower_bound(
+    t: &Table,
+    row: usize,
+    key_cols: &[usize],
+    splitters: &Table,
+    splitter_cols: &[usize],
+    dirs: &[bool],
+) -> usize {
+    let (mut lo, mut hi) = (0usize, splitters.num_rows());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        match cmp_row_vs_splitter(t, row, key_cols, splitters, mid, splitter_cols, dirs) {
+            std::cmp::Ordering::Greater => lo = mid + 1,
+            _ => hi = mid,
+        }
+    }
+    lo
+}
+
 /// [`partition_by_range`] with a per-key sort direction (`dirs[i]` true =
 /// ascending): "≥ the row key" is evaluated under the directed order, so
 /// descending / mixed-direction distributed sorts route correctly.
@@ -76,38 +133,80 @@ pub fn partition_by_range_directed(
     splitter_cols: &[usize],
     dirs: &[bool],
 ) -> Result<Vec<Table>> {
-    if dirs.len() != key_cols.len() || splitter_cols.len() != key_cols.len() {
-        return Err(Error::invalid(
-            "partition_by_range: key/splitter/direction lists must have equal length",
-        ));
-    }
-    let cmp_directed = |row: usize, srow: usize| -> std::cmp::Ordering {
-        for ((&kc, &sc), &asc) in key_cols.iter().zip(splitter_cols).zip(dirs) {
-            let mut ord = rows_cmp(t, row, &[kc], splitters, srow, &[sc]);
-            if !asc {
-                ord = ord.reverse();
-            }
-            if ord != std::cmp::Ordering::Equal {
-                return ord;
-            }
-        }
-        std::cmp::Ordering::Equal
-    };
+    check_range_args(key_cols, splitter_cols, dirs)?;
     let p = splitters.num_rows() + 1;
     let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
     for row in 0..t.num_rows() {
-        // binary search over splitters
-        let (mut lo, mut hi) = (0usize, splitters.num_rows());
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            match cmp_directed(row, mid) {
-                std::cmp::Ordering::Greater => lo = mid + 1,
-                _ => hi = mid,
-            }
-        }
+        let lo = range_lower_bound(t, row, key_cols, splitters, splitter_cols, dirs);
         buckets[lo].push(row as u32);
     }
     Ok(buckets.into_iter().map(|b| t.gather(&b)).collect())
+}
+
+/// [`partition_by_range_directed`] with **tie spreading** — the routing
+/// rule of the skew-aware sample sort (DESIGN.md §8). When the splitter
+/// table contains duplicate rows (the splitter derivation repeats a hot
+/// key once per bucket-worth of sampled mass), every bucket bounded by an
+/// equal splitter is a legal destination for a tied row: rows strictly
+/// below the key still land strictly below, rows strictly above strictly
+/// above, so the rank-ordered concatenation stays globally sorted no
+/// matter which bucket in the tie range each tied row picks. This
+/// partitioner round-robins tied rows across that contiguous bucket
+/// range, splitting a hot key over several ranks instead of piling it
+/// into the lowest one.
+///
+/// Only valid for non-stable sorts: spreading interleaves equal rows from
+/// different source ranks, so their original relative order is lost.
+///
+/// Also returns the per-bucket row counts the **non-spreading** router
+/// would have produced (every tie to its `lo` bucket) — the baseline of
+/// the skew balance report, computed in the same pass so the caller
+/// never needs a second full partition.
+pub fn partition_by_range_directed_spread(
+    t: &Table,
+    key_cols: &[usize],
+    splitters: &Table,
+    splitter_cols: &[usize],
+    dirs: &[bool],
+) -> Result<(Vec<Table>, Vec<i64>)> {
+    check_range_args(key_cols, splitter_cols, dirs)?;
+    let ns = splitters.num_rows();
+    let p = ns + 1;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); p];
+    let mut plain_counts = vec![0i64; p];
+    // Round-robin counter per tie range (lo..=hi); ranges are few (one
+    // per run of duplicate splitters), so a small map suffices.
+    let mut spin: std::collections::BTreeMap<(usize, usize), usize> =
+        std::collections::BTreeMap::new();
+    for row in 0..t.num_rows() {
+        // lo: first splitter ≥ the row key (the plain router's bucket —
+        // rows below any splitter get lo == hi == bucket).
+        let lo = range_lower_bound(t, row, key_cols, splitters, splitter_cols, dirs);
+        plain_counts[lo] += 1;
+        // hi: first splitter strictly > the row key; buckets lo..=hi are
+        // all bounded below by keys ≤ row and above by keys ≥ row.
+        let (mut a, mut b) = (lo, ns);
+        while a < b {
+            let mid = (a + b) / 2;
+            match cmp_row_vs_splitter(t, row, key_cols, splitters, mid, splitter_cols, dirs) {
+                std::cmp::Ordering::Less => b = mid,
+                _ => a = mid + 1,
+            }
+        }
+        let hi = a;
+        let width = hi - lo + 1;
+        let dest = if width == 1 {
+            lo
+        } else {
+            let c = spin.entry((lo, hi)).or_insert(0);
+            let d = lo + *c % width;
+            *c += 1;
+            d
+        };
+        buckets[dest].push(row as u32);
+    }
+    let parts = buckets.into_iter().map(|b| t.gather(&b)).collect();
+    Ok((parts, plain_counts))
 }
 
 #[cfg(test)]
@@ -198,6 +297,67 @@ mod tests {
         assert_eq!(parts[2].column(0).unwrap().i64_values().unwrap(), &[5]); // rest
         // direction-list length is validated
         assert!(partition_by_range_directed(&tab, &[0], &splitters, &[0], &[]).is_err());
+    }
+
+    #[test]
+    fn spread_partition_balances_ties_and_keeps_order() {
+        // 80 rows of the hot key 10, a few rows around it; duplicate
+        // splitters [10, 10, 20] open buckets 0..=2 for the ties.
+        let mut keys = vec![5, 25, 15];
+        keys.extend(vec![10i64; 80]);
+        let tab = Table::from_columns(vec![("k", Column::from_i64(keys))]).unwrap();
+        let splitters =
+            Table::from_columns(vec![("k", Column::from_i64(vec![10, 10, 20]))]).unwrap();
+        let (parts, plain_counts) =
+            partition_by_range_directed_spread(&tab, &[0], &splitters, &[0], &[true]).unwrap();
+        assert_eq!(parts.len(), 4);
+        // the baseline counts route every tie to its lowest bucket
+        assert_eq!(plain_counts, vec![81, 0, 1, 1]);
+        assert_eq!(parts.iter().map(|p| p.num_rows()).sum::<usize>(), 83);
+        // ties spread evenly over buckets 0..=2, none in bucket 3
+        for b in 0..3 {
+            let tens = parts[b]
+                .column(0)
+                .unwrap()
+                .i64_values()
+                .unwrap()
+                .iter()
+                .filter(|&&k| k == 10)
+                .count();
+            assert!((26..=28).contains(&tens), "bucket {b} got {tens} ties");
+        }
+        assert!(!parts[3].column(0).unwrap().i64_values().unwrap().contains(&10));
+        // non-tied rows still route by range: 5→0, 15→2, 25→3
+        assert!(parts[0].column(0).unwrap().i64_values().unwrap().contains(&5));
+        assert!(parts[2].column(0).unwrap().i64_values().unwrap().contains(&15));
+        assert!(parts[3].column(0).unwrap().i64_values().unwrap().contains(&25));
+        // the global order invariant survives: max(bucket i) ≤ min(bucket i+1)
+        for i in 0..3 {
+            let hi = parts[i].column(0).unwrap().i64_values().unwrap().iter().max();
+            let lo = parts[i + 1].column(0).unwrap().i64_values().unwrap().iter().min();
+            if let (Some(hi), Some(lo)) = (hi, lo) {
+                assert!(hi <= lo, "order broken between buckets {i} and {}", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn spread_without_ties_matches_plain() {
+        // even keys, odd splitters: no row ever equals a splitter, so the
+        // tie range is always a single bucket and routing is identical
+        let keys: Vec<i64> = (0..2_000).map(|i| i * 2).collect();
+        let tab = Table::from_columns(vec![("k", Column::from_i64(keys))]).unwrap();
+        let splitters = Table::from_columns(vec![(
+            "k",
+            Column::from_i64(vec![501, 1001, 1501]),
+        )])
+        .unwrap();
+        let plain = partition_by_range(&tab, &[0], &splitters, &[0]).unwrap();
+        let (spread, plain_counts) =
+            partition_by_range_directed_spread(&tab, &[0], &splitters, &[0], &[true]).unwrap();
+        assert_eq!(plain, spread);
+        let counts: Vec<i64> = plain.iter().map(|p| p.num_rows() as i64).collect();
+        assert_eq!(plain_counts, counts);
     }
 
     #[test]

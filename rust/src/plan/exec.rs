@@ -7,7 +7,7 @@ use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
 use crate::dist;
 use crate::error::Result;
 use crate::executor::CylonEnv;
-use crate::metrics::{Phase, PhaseTimers, SpillStats, StageTiming};
+use crate::metrics::{Phase, PhaseTimers, SkewStats, SpillStats, StageTiming};
 use crate::ops;
 use crate::table::Table;
 use std::time::Duration;
@@ -53,9 +53,20 @@ impl PlanReport {
         s
     }
 
+    /// Skew handling merged across stages (zero when the skew subsystem
+    /// is disabled or found nothing hot).
+    pub fn skew(&self) -> SkewStats {
+        let mut s = SkewStats::default();
+        for st in &self.stages {
+            s.merge(&st.skew);
+        }
+        s
+    }
+
     /// One-line per-stage report:
     /// `join[compute=… aux=… comm=…] groupby[…] …` (stages that spilled
-    /// append `spill=…B/…f`).
+    /// append `spill=…B/…f`; stages that handled skew append
+    /// `skew=…keys/…rows …→… max/mean`).
     pub fn report(&self) -> String {
         self.stages
             .iter()
@@ -65,8 +76,19 @@ impl PlanReport {
                 } else {
                     format!(" spill={}B/{}f", s.spill.spilled_bytes, s.spill.spill_count)
                 };
+                let skew = if s.skew.is_zero() {
+                    String::new()
+                } else {
+                    format!(
+                        " skew={}keys/{}rows {:.2}→{:.2} max/mean",
+                        s.skew.hot_keys,
+                        s.skew.rows_rerouted,
+                        s.skew.ratio_before_milli as f64 / 1000.0,
+                        s.skew.ratio_after_milli as f64 / 1000.0,
+                    )
+                };
                 format!(
-                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}]",
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}{skew}]",
                     s.name,
                     s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
                     s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
@@ -79,15 +101,21 @@ impl PlanReport {
 }
 
 /// Snapshot cut of the actor's monotonically accumulating counters
-/// (timers + spill) — diffed around each node to attribute the deltas.
+/// (timers + spill + skew) — diffed around each node to attribute the
+/// deltas.
 struct Mark {
     timers: PhaseTimers,
     spill: SpillStats,
+    skew: SkewStats,
 }
 
 impl Mark {
     fn take(env: &CylonEnv) -> Mark {
-        Mark { timers: env.metrics_snapshot(), spill: env.spill_snapshot() }
+        Mark {
+            timers: env.metrics_snapshot(),
+            spill: env.spill_snapshot(),
+            skew: env.skew_snapshot(),
+        }
     }
 }
 
@@ -123,10 +151,14 @@ fn eval(
             let t = eval(*input, env, stages, mark)?;
             env.time(Phase::Auxiliary, || t.project(&cols))?
         }
-        PhysNode::Join { left, right, opts, exchange } => {
+        PhysNode::Join { left, right, opts, exchange, skew_tolerant } => {
             let l = eval(*left, env, stages, mark)?;
             let r = eval(*right, env, stages, mark)?;
-            dist::join_with_exchange(&l, &r, &opts, exchange, env)?
+            if skew_tolerant {
+                dist::join_skew(&l, &r, &opts, env)?
+            } else {
+                dist::join_with_exchange(&l, &r, &opts, exchange, env)?
+            }
         }
         PhysNode::GroupBy { input, keys, aggs, mode } => {
             let t = eval(*input, env, stages, mark)?;
@@ -139,10 +171,12 @@ fn eval(
                 }
             }
         }
-        PhysNode::Sort { input, opts, prepartitioned } => {
+        PhysNode::Sort { input, opts, prepartitioned, skew_tolerant } => {
             let t = eval(*input, env, stages, mark)?;
             if prepartitioned {
                 dist::sort_prepartitioned(&t, &opts, env)?
+            } else if skew_tolerant {
+                dist::sort_balanced(&t, &opts, env)?
             } else {
                 dist::sort(&t, &opts, env)?
             }
@@ -173,12 +207,13 @@ fn eval(
             dist::rebalance(&t, env)?.0
         }
     };
-    // Attribute the timer/spill deltas since the last cut to this node.
+    // Attribute the timer/spill/skew deltas since the last cut to this node.
     let now = Mark::take(env);
     stages.push(StageTiming {
         name: label.to_string(),
         timers: now.timers.saturating_diff(&mark.timers),
         spill: now.spill.saturating_diff(&mark.spill),
+        skew: now.skew.saturating_diff(&mark.skew),
     });
     *mark = now;
     Ok(out)

@@ -485,9 +485,16 @@ impl DistFrame {
     }
 
     /// Run the optimizer (pushdown + partitioning lineage) and return the
-    /// physical plan it produced, without executing anything.
+    /// physical plan it produced, without executing anything. Uses the
+    /// default [`super::OptimizerOptions`] (no skew handling).
     pub fn optimized(&self) -> super::PhysPlan {
         super::optimizer::optimize(self.plan.clone())
+    }
+
+    /// [`DistFrame::optimized`] with explicit optimizer options (e.g. to
+    /// EXPLAIN the plan a skew-enabled gang would run).
+    pub fn optimized_with(&self, options: super::OptimizerOptions) -> super::PhysPlan {
+        super::optimizer::optimize_with(self.plan.clone(), options)
     }
 
     /// EXPLAIN: the optimized plan rendered as an annotated tree.
@@ -496,9 +503,16 @@ impl DistFrame {
     }
 
     /// Optimize, then execute on this rank inside `env`, returning the
-    /// rank's output partition and per-node stage timings.
+    /// rank's output partition and per-node stage timings. The optimizer
+    /// options are derived from the environment: on a skew-enabled gang
+    /// ([`crate::config::SkewConfig`]) exchanges lower onto the
+    /// skew-aware operators and the lineage pass tracks their weakened
+    /// (`balanced`) placement, so elision decisions stay sound.
     pub fn execute(self, env: &crate::executor::CylonEnv) -> Result<super::PlanReport> {
-        super::exec::execute(super::optimizer::optimize(self.plan), env)
+        let options = super::OptimizerOptions {
+            skew_aware: env.comm().exchange_config().skew.enabled,
+        };
+        super::exec::execute(super::optimizer::optimize_with(self.plan, options), env)
     }
 
     /// Execute without any optimization (every operator performs its full

@@ -35,4 +35,7 @@ pub mod optimizer;
 
 pub use exec::{execute, PlanReport};
 pub use logical::{DistFrame, FilterPred, LogicalPlan, SetOpKind};
-pub use optimizer::{optimize, unoptimized, GroupbyMode, Partitioning, PhysNode, PhysPlan};
+pub use optimizer::{
+    optimize, optimize_with, unoptimized, GroupbyMode, OptimizerOptions, Partitioning, PhysNode,
+    PhysPlan,
+};

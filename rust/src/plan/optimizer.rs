@@ -46,47 +46,96 @@ use std::sync::Arc;
 
 /// What is known about the cross-rank placement of a node's output rows
 /// (column indices refer to the node's *own* output schema).
+///
+/// The `balanced` flag on the keyed forms records that the exchange ran
+/// **skew-aware** ([`crate::dist::skew`]): hot keys may be split across
+/// a contiguous rank range, so equal-key co-location — the property
+/// shuffle elision rests on — no longer holds, even though the bulk of
+/// the rows still follows the keyed routing. A balanced placement is
+/// therefore informational (EXPLAIN, balance-aware consumers): it never
+/// licenses a co-location or hash-exact elision. Rank *order* on the
+/// placement keys is unaffected by tie spreading, so a balanced range
+/// partitioning still satisfies
+/// [`Partitioning::range_prefix_compatible`] for sorts on the same or
+/// fewer keys (never for sorts that extend the key list — straddled
+/// ties carry arbitrary trailing-column values).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Partitioning {
     /// Nothing known: rows may be anywhere.
     Arbitrary,
     /// Rows routed by `hash(cols) mod world_size` (gang hasher).
-    HashKeys(Vec<usize>),
+    HashKeys {
+        /// Hash key columns, in routing order.
+        cols: Vec<usize>,
+        /// True when hot keys may be skew-split across ranks.
+        balanced: bool,
+    },
     /// Rows routed by a shared monotone range function of the directed
-    /// keys: rank order equals key order, equal keys co-locate.
-    RangeKeys(Vec<SortKey>),
+    /// keys: rank order equals key order; equal keys co-locate unless
+    /// `balanced`.
+    RangeKeys {
+        /// Range keys with directions, most significant first.
+        keys: Vec<SortKey>,
+        /// True when tied hot keys may straddle adjacent ranks.
+        balanced: bool,
+    },
 }
 
 impl Partitioning {
+    /// Strict hash placement (the non-skew exchange's contract).
+    pub fn hash(cols: Vec<usize>) -> Partitioning {
+        Partitioning::HashKeys { cols, balanced: false }
+    }
+
+    /// Strict range placement (the non-skew sample sort's contract).
+    pub fn range(keys: Vec<SortKey>) -> Partitioning {
+        Partitioning::RangeKeys { keys, balanced: false }
+    }
+
     /// True when rows agreeing on `cols` provably share a rank — the
     /// requirement of single-input keyed operators (groupby, distinct).
     /// Any keyed partitioning on a *subset* of `cols` suffices: rows
     /// equal on `cols` are equal on the subset, hence routed together.
+    /// Never true for a `balanced` placement (hot keys may be split).
     pub fn co_locates(&self, cols: &[usize]) -> bool {
         match self {
             Partitioning::Arbitrary => false,
-            Partitioning::HashKeys(k) => !k.is_empty() && k.iter().all(|c| cols.contains(c)),
-            Partitioning::RangeKeys(k) => {
-                !k.is_empty() && k.iter().all(|s| cols.contains(&s.col))
+            Partitioning::HashKeys { cols: k, balanced } => {
+                !balanced && !k.is_empty() && k.iter().all(|c| cols.contains(c))
+            }
+            Partitioning::RangeKeys { keys: k, balanced } => {
+                !balanced && !k.is_empty() && k.iter().all(|s| cols.contains(&s.col))
             }
         }
     }
 
     /// True when rows are routed by exactly `hash(keys)` in this key
     /// order — the two-sided alignment a join shuffle elision needs.
+    /// Never true for a `balanced` placement.
     pub fn hash_exact(&self, keys: &[usize]) -> bool {
-        matches!(self, Partitioning::HashKeys(k) if k == keys)
+        matches!(
+            self,
+            Partitioning::HashKeys { cols, balanced: false } if cols == keys
+        )
     }
 
     /// True when a sort on `keys` needs no exchange over this placement:
     /// range-partitioned with the common key prefix identical (columns
     /// *and* directions), one key list a prefix of the other. Rank order
     /// then already agrees with the requested order.
+    ///
+    /// A `balanced` placement qualifies only when the requested list is
+    /// no **longer** than the placement's: tie spreading preserves rank
+    /// order on the placement keys (so sorting by the same or fewer keys
+    /// is fine), but ties of a hot key straddle ranks with arbitrary
+    /// trailing-column values, so a sort that *extends* the key list
+    /// must keep its exchange. The strict case is sound in both
+    /// directions because equal keys co-locate.
     pub fn range_prefix_compatible(&self, keys: &[SortKey]) -> bool {
         match self {
-            Partitioning::RangeKeys(k) if !k.is_empty() && !keys.is_empty() => {
+            Partitioning::RangeKeys { keys: k, balanced } if !k.is_empty() && !keys.is_empty() => {
                 let n = k.len().min(keys.len());
-                k[..n] == keys[..n]
+                k[..n] == keys[..n] && (!balanced || keys.len() <= k.len())
             }
             _ => false,
         }
@@ -94,21 +143,22 @@ impl Partitioning {
 
     /// Remap column indices through a schema change (`f` maps an input
     /// column to its output position, `None` if dropped). Losing any
-    /// partitioning column loses the lineage.
+    /// partitioning column loses the lineage; the `balanced` flag rides
+    /// along.
     pub fn map_columns(&self, f: impl Fn(usize) -> Option<usize>) -> Partitioning {
         match self {
             Partitioning::Arbitrary => Partitioning::Arbitrary,
-            Partitioning::HashKeys(k) => k
+            Partitioning::HashKeys { cols, balanced } => cols
                 .iter()
                 .map(|&c| f(c))
                 .collect::<Option<Vec<_>>>()
-                .map(Partitioning::HashKeys)
+                .map(|cols| Partitioning::HashKeys { cols, balanced: *balanced })
                 .unwrap_or(Partitioning::Arbitrary),
-            Partitioning::RangeKeys(k) => k
+            Partitioning::RangeKeys { keys, balanced } => keys
                 .iter()
                 .map(|s| f(s.col).map(|col| SortKey { col, ascending: s.ascending }))
                 .collect::<Option<Vec<_>>>()
-                .map(Partitioning::RangeKeys)
+                .map(|keys| Partitioning::RangeKeys { keys, balanced: *balanced })
                 .unwrap_or(Partitioning::Arbitrary),
         }
     }
@@ -118,19 +168,36 @@ impl fmt::Display for Partitioning {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Partitioning::Arbitrary => f.write_str("arbitrary"),
-            Partitioning::HashKeys(k) => {
-                let cols: Vec<String> = k.iter().map(|c| c.to_string()).collect();
-                write!(f, "hash[{}]", cols.join(","))
+            Partitioning::HashKeys { cols, balanced } => {
+                let cols: Vec<String> = cols.iter().map(|c| c.to_string()).collect();
+                let tag = if *balanced { " (balanced)" } else { "" };
+                write!(f, "hash[{}]{tag}", cols.join(","))
             }
-            Partitioning::RangeKeys(k) => {
-                let cols: Vec<String> = k
+            Partitioning::RangeKeys { keys, balanced } => {
+                let cols: Vec<String> = keys
                     .iter()
                     .map(|s| format!("{}{}", s.col, if s.ascending { "↑" } else { "↓" }))
                     .collect();
-                write!(f, "range[{}]", cols.join(","))
+                let tag = if *balanced { " (balanced)" } else { "" };
+                write!(f, "range[{}]{tag}", cols.join(","))
             }
         }
     }
+}
+
+/// Optimizer configuration. `skew_aware` must mirror the runtime
+/// [`crate::config::SkewConfig::enabled`] switch of the gang the plan
+/// will execute on: when set, un-elided joins and non-stable sorts are
+/// lowered onto the skew-tolerant operators ([`crate::dist::join_skew`],
+/// [`crate::dist::sort_balanced`]) and their output lineage is marked
+/// `balanced`, so no downstream elision relies on co-location that a
+/// skew split may have broken. [`super::DistFrame::execute`] derives
+/// this from the environment automatically.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptimizerOptions {
+    /// Lower exchanges onto the skew-aware operators and track the
+    /// weakened (`balanced`) placement lineage.
+    pub skew_aware: bool,
 }
 
 /// How the physical groupby moves data.
@@ -178,6 +245,10 @@ pub enum PhysNode {
         opts: JoinOptions,
         /// Which sides still shuffle.
         exchange: ExchangeSides,
+        /// Lower onto [`crate::dist::join_skew`]: hot keys may be
+        /// salted/broadcast, output co-location is not guaranteed (the
+        /// node's lineage is marked `balanced` accordingly).
+        skew_tolerant: bool,
     },
     /// Distributed groupby.
     GroupBy {
@@ -198,6 +269,9 @@ pub enum PhysNode {
         opts: SortOptions,
         /// True when the sample/exchange is elided (local sort only).
         prepartitioned: bool,
+        /// Lower onto [`crate::dist::sort_balanced`]: tied hot keys may
+        /// straddle ranks (lineage marked `balanced`).
+        skew_tolerant: bool,
     },
     /// Distributed whole-row distinct.
     Distinct {
@@ -303,15 +377,16 @@ impl PhysPlan {
             }
             PhysNode::Filter { pred, .. } => format!("filter {pred}"),
             PhysNode::Select { cols, .. } => format!("select {cols:?}"),
-            PhysNode::Join { opts, exchange, .. } => {
+            PhysNode::Join { opts, exchange, skew_tolerant, .. } => {
                 let ex = match exchange {
                     ExchangeSides::Both => "shuffle both sides".to_string(),
                     ExchangeSides::LeftOnly => "shuffle left only (right elided)".to_string(),
                     ExchangeSides::RightOnly => "shuffle right only (left elided)".to_string(),
                     ExchangeSides::Neither => "shuffles elided".to_string(),
                 };
+                let sk = if *skew_tolerant { ", skew-aware" } else { "" };
                 format!(
-                    "join {:?} on l{:?}=r{:?}, {ex}",
+                    "join {:?} on l{:?}=r{:?}, {ex}{sk}",
                     opts.join_type, opts.left_on, opts.right_on
                 )
             }
@@ -322,9 +397,10 @@ impl PhysPlan {
                 };
                 format!("groupby keys={keys:?} aggs=[{}], {m}", fmt_aggs(aggs))
             }
-            PhysNode::Sort { opts, prepartitioned, .. } => {
+            PhysNode::Sort { opts, prepartitioned, skew_tolerant, .. } => {
                 let m = if *prepartitioned { ", exchange elided (local sort)" } else { "" };
-                format!("sort by=[{}]{m}", fmt_sort_keys(opts))
+                let sk = if *skew_tolerant { ", skew-aware" } else { "" };
+                format!("sort by=[{}]{m}{sk}", fmt_sort_keys(opts))
             }
             PhysNode::Distinct { prepartitioned, .. } => {
                 if *prepartitioned {
@@ -359,9 +435,17 @@ impl fmt::Display for PhysPlan {
 }
 
 /// Optimize a logical plan: filter/select pushdown, then the
-/// partitioning-lineage pass that decides every exchange.
+/// partitioning-lineage pass that decides every exchange. Uses the
+/// default [`OptimizerOptions`] (no skew handling); plans meant to run
+/// on a skew-enabled gang must use [`optimize_with`] so lineage stays
+/// sound across skew-split exchanges.
 pub fn optimize(plan: LogicalPlan) -> PhysPlan {
-    annotate(pushdown(plan))
+    optimize_with(plan, OptimizerOptions::default())
+}
+
+/// [`optimize`] with explicit [`OptimizerOptions`].
+pub fn optimize_with(plan: LogicalPlan, options: OptimizerOptions) -> PhysPlan {
+    annotate(pushdown(plan), options)
 }
 
 /// The naive physical mapping — every operator performs its full
@@ -383,6 +467,7 @@ pub fn unoptimized(plan: LogicalPlan) -> PhysPlan {
             right: Box::new(unoptimized(*right)),
             opts,
             exchange: ExchangeSides::Both,
+            skew_tolerant: false,
         },
         LogicalPlan::GroupBy { input, keys, aggs, strategy } => PhysNode::GroupBy {
             input: Box::new(unoptimized(*input)),
@@ -394,6 +479,7 @@ pub fn unoptimized(plan: LogicalPlan) -> PhysPlan {
             input: Box::new(unoptimized(*input)),
             opts,
             prepartitioned: false,
+            skew_tolerant: false,
         },
         LogicalPlan::Distinct { input } => PhysNode::Distinct {
             input: Box::new(unoptimized(*input)),
@@ -607,7 +693,7 @@ fn push_select(input: LogicalPlan, cols: Vec<usize>) -> LogicalPlan {
 // and decide every exchange.
 // ---------------------------------------------------------------------
 
-fn annotate(plan: LogicalPlan) -> PhysPlan {
+fn annotate(plan: LogicalPlan, o: OptimizerOptions) -> PhysPlan {
     match plan {
         LogicalPlan::Scan { name, table } => PhysPlan {
             node: PhysNode::Scan { name, table },
@@ -615,7 +701,7 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
         },
         // Filters keep a row subset in place: lineage unchanged.
         LogicalPlan::Filter { input, pred } => {
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let partitioning = i.partitioning.clone();
             PhysPlan {
                 node: PhysNode::Filter { input: Box::new(i), pred },
@@ -624,7 +710,7 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
         }
         // Projections remap lineage columns; dropping one drops lineage.
         LogicalPlan::Select { input, cols } => {
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let partitioning = i
                 .partitioning
                 .map_columns(|c| cols.iter().position(|&x| x == c));
@@ -635,8 +721,8 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
         }
         LogicalPlan::Join { left, right, opts } => {
             let nleft = left.out_arity();
-            let l = annotate(*left);
-            let r = annotate(*right);
+            let l = annotate(*left, o);
+            let r = annotate(*right, o);
             let exchange = match (
                 l.partitioning.hash_exact(&opts.left_on),
                 r.partitioning.hash_exact(&opts.right_on),
@@ -646,17 +732,27 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
                 (false, true) => ExchangeSides::LeftOnly,
                 (false, false) => ExchangeSides::Both,
             };
-            // Output placement is the hash of the surviving side's keys.
-            // Full-outer output mixes rows routed by left-key and
+            // Skew handling only applies when both sides exchange (an
+            // elided side's placement must not be disturbed) and the
+            // join type permits salting/broadcast; full outer never
+            // qualifies.
+            let skew_tolerant = o.skew_aware
+                && exchange == ExchangeSides::Both
+                && opts.join_type != JoinType::FullOuter;
+            // Output placement is the hash of the surviving side's keys
+            // (weakened to `balanced` when the runtime may skew-split
+            // it). Full-outer output mixes rows routed by left-key and
             // right-key hashes with nulls on the opposite side: no
             // single column list describes it.
             let partitioning = match opts.join_type {
-                JoinType::Inner | JoinType::Left => {
-                    Partitioning::HashKeys(opts.left_on.clone())
-                }
-                JoinType::Right => Partitioning::HashKeys(
-                    opts.right_on.iter().map(|&c| nleft + c).collect(),
-                ),
+                JoinType::Inner | JoinType::Left => Partitioning::HashKeys {
+                    cols: opts.left_on.clone(),
+                    balanced: skew_tolerant,
+                },
+                JoinType::Right => Partitioning::HashKeys {
+                    cols: opts.right_on.iter().map(|&c| nleft + c).collect(),
+                    balanced: skew_tolerant,
+                },
                 JoinType::FullOuter => Partitioning::Arbitrary,
             };
             PhysPlan {
@@ -665,12 +761,13 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
                     right: Box::new(r),
                     opts,
                     exchange,
+                    skew_tolerant,
                 },
                 partitioning,
             }
         }
         LogicalPlan::GroupBy { input, keys, aggs, strategy } => {
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let (mode, partitioning) = if i.partitioning.co_locates(&keys) {
                 // Keys become the leading output columns: remap lineage.
                 let part = i
@@ -678,9 +775,12 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
                     .map_columns(|c| keys.iter().position(|&k| k == c));
                 (GroupbyMode::Prepartitioned, part)
             } else {
+                // The skew-aware shuffle-first groupby *rebuilds* hot
+                // groups onto their owner rank, so the output keeps the
+                // strict co-location contract either way.
                 (
                     GroupbyMode::Exchange(strategy),
-                    Partitioning::HashKeys((0..keys.len()).collect()),
+                    Partitioning::hash((0..keys.len()).collect()),
                 )
             };
             PhysPlan {
@@ -689,29 +789,41 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
             }
         }
         LogicalPlan::Sort { input, opts } => {
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let prepartitioned = i.partitioning.range_prefix_compatible(&opts.keys);
+            // Tie spreading is only sound for non-stable sorts (the
+            // runtime falls back for stable ones; marking them tolerant
+            // would weaken lineage for nothing).
+            let skew_tolerant = o.skew_aware && !prepartitioned && !opts.stable;
             // When elided, placement is untouched (keep the *input*
             // lineage — claiming `opts.keys` could overstate equal-key
             // co-location when the input ranges on a longer key list).
             let partitioning = if prepartitioned {
                 i.partitioning.clone()
             } else {
-                Partitioning::RangeKeys(opts.keys.clone())
+                Partitioning::RangeKeys {
+                    keys: opts.keys.clone(),
+                    balanced: skew_tolerant,
+                }
             };
             PhysPlan {
-                node: PhysNode::Sort { input: Box::new(i), opts, prepartitioned },
+                node: PhysNode::Sort {
+                    input: Box::new(i),
+                    opts,
+                    prepartitioned,
+                    skew_tolerant,
+                },
                 partitioning,
             }
         }
         LogicalPlan::Distinct { input } => {
             let all: Vec<usize> = (0..input.out_arity()).collect();
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let prepartitioned = i.partitioning.co_locates(&all);
             let partitioning = if prepartitioned {
                 i.partitioning.clone()
             } else {
-                Partitioning::HashKeys(all)
+                Partitioning::hash(all)
             };
             PhysPlan {
                 node: PhysNode::Distinct { input: Box::new(i), prepartitioned },
@@ -720,22 +832,22 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
         }
         LogicalPlan::SetOp { left, right, kind } => {
             let all: Vec<usize> = (0..left.out_arity()).collect();
-            let l = annotate(*left);
-            let r = annotate(*right);
+            let l = annotate(*left, o);
+            let r = annotate(*right, o);
             PhysPlan {
                 node: PhysNode::SetOp {
                     left: Box::new(l),
                     right: Box::new(r),
                     kind,
                 },
-                partitioning: Partitioning::HashKeys(all),
+                partitioning: Partitioning::hash(all),
             }
         }
         // In-place column mutation: lineage survives unless it named the
         // mutated column (downstream consumers would route by the *new*
         // values, which no longer match the placement).
         LogicalPlan::AddScalar { input, col, scalar } => {
-            let i = annotate(*input);
+            let i = annotate(*input, o);
             let partitioning = i
                 .partitioning
                 .map_columns(|c| if c == col { None } else { Some(c) });
@@ -747,7 +859,7 @@ fn annotate(plan: LogicalPlan) -> PhysPlan {
         // Rebalance slices rows contiguously across ranks: any keyed
         // placement is destroyed.
         LogicalPlan::Rebalance { input } => PhysPlan {
-            node: PhysNode::Rebalance { input: Box::new(annotate(*input)) },
+            node: PhysNode::Rebalance { input: Box::new(annotate(*input, o)) },
             partitioning: Partitioning::Arbitrary,
         },
     }
@@ -788,7 +900,7 @@ mod tests {
             }
             other => panic!("expected GroupBy root, got {other:?}"),
         }
-        assert_eq!(p.partitioning, Partitioning::HashKeys(vec![0]));
+        assert_eq!(p.partitioning, Partitioning::hash(vec![0]));
         // join(2 shuffles) + groupby(elided) = 2 exchanges total
         assert_eq!(p.exchange_count(), 2);
         assert!(p.to_string().contains("shuffle elided"), "{p}");
@@ -866,7 +978,7 @@ mod tests {
         // elided sort keeps the *input* lineage, not its own keys
         assert_eq!(
             p.partitioning,
-            Partitioning::RangeKeys(vec![SortKey::asc(0), SortKey::desc(1)])
+            Partitioning::range(vec![SortKey::asc(0), SortKey::desc(1)])
         );
         // mismatched direction must not elide
         let p2 = DistFrame::scan(t(2))
@@ -921,7 +1033,7 @@ mod tests {
             .select(&[0]) // keep the key only
             .optimized();
         // lineage survives the projection: hash[0] on the key
-        assert_eq!(p.partitioning, Partitioning::HashKeys(vec![0]));
+        assert_eq!(p.partitioning, Partitioning::hash(vec![0]));
 
         let q = DistFrame::scan(t(3))
             .sort(SortOptions::by(1))
@@ -934,7 +1046,7 @@ mod tests {
             }
             other => panic!("expected Sort root after pushdown, got {other:?}"),
         }
-        assert_eq!(q.partitioning, Partitioning::RangeKeys(vec![SortKey::asc(0)]));
+        assert_eq!(q.partitioning, Partitioning::range(vec![SortKey::asc(0)]));
     }
 
     #[test]
@@ -949,7 +1061,97 @@ mod tests {
         let touched = keyed.clone().add_scalar(0, 1.0).optimized();
         assert_eq!(touched.partitioning, Partitioning::Arbitrary);
         let untouched = keyed.add_scalar(1, 1.0).optimized();
-        assert_eq!(untouched.partitioning, Partitioning::HashKeys(vec![0]));
+        assert_eq!(untouched.partitioning, Partitioning::hash(vec![0]));
+    }
+
+    #[test]
+    fn balanced_placement_never_licenses_elision() {
+        let b = Partitioning::HashKeys { cols: vec![0], balanced: true };
+        assert!(!b.co_locates(&[0]), "skew-split hash must not co-locate");
+        assert!(!b.hash_exact(&[0]), "skew-split hash must not align joins");
+        let r = Partitioning::RangeKeys { keys: vec![SortKey::asc(0)], balanced: true };
+        assert!(!r.co_locates(&[0]));
+        // rank order survives tie spreading: re-sorting by the same (or
+        // fewer) keys stays elidable…
+        assert!(r.range_prefix_compatible(&[SortKey::asc(0)]));
+        // …but a sort EXTENDING the key list must keep its exchange:
+        // straddled hot-key ties carry arbitrary trailing-column values
+        assert!(!r.range_prefix_compatible(&[SortKey::asc(0), SortKey::asc(1)]));
+        // (the strict placement is sound in both directions)
+        let strict = Partitioning::range(vec![SortKey::asc(0)]);
+        assert!(strict.range_prefix_compatible(&[SortKey::asc(0), SortKey::asc(1)]));
+        let r2 = Partitioning::RangeKeys {
+            keys: vec![SortKey::asc(0), SortKey::desc(1)],
+            balanced: true,
+        };
+        assert!(r2.range_prefix_compatible(&[SortKey::asc(0)]));
+        assert!(b.to_string().contains("(balanced)"), "{b}");
+        assert!(r.to_string().contains("(balanced)"), "{r}");
+        // the flag rides through projections
+        let mapped = b.map_columns(Some);
+        assert_eq!(mapped, b);
+    }
+
+    #[test]
+    fn skew_aware_join_blocks_downstream_elision() {
+        let frame = DistFrame::scan(t(2))
+            .join(DistFrame::scan(t(2)), JoinOptions::inner(0, 0))
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)]);
+        let p = optimize_with(frame.plan().clone(), OptimizerOptions { skew_aware: true });
+        // the join output may be skew-split, so the co-keyed groupby must
+        // keep its exchange (contrast groupby_shuffle_elided_after_cokeyed_join)
+        let join = match &p.node {
+            PhysNode::GroupBy { mode, input, .. } => {
+                assert!(matches!(mode, GroupbyMode::Exchange(_)), "elision over balanced lineage");
+                input
+            }
+            other => panic!("expected GroupBy root, got {other:?}"),
+        };
+        match &join.node {
+            PhysNode::Join { skew_tolerant, exchange, .. } => {
+                assert!(*skew_tolerant);
+                assert_eq!(*exchange, ExchangeSides::Both);
+            }
+            other => panic!("expected Join, got {other:?}"),
+        }
+        assert_eq!(
+            join.partitioning,
+            Partitioning::HashKeys { cols: vec![0], balanced: true }
+        );
+        assert!(join.to_string().contains("skew-aware"), "{join}");
+        assert_eq!(p.exchange_count(), 3, "groupby exchange must be kept");
+    }
+
+    #[test]
+    fn skew_aware_sort_is_balanced_unless_stable_or_elided() {
+        let on = OptimizerOptions { skew_aware: true };
+        let p = optimize_with(DistFrame::scan(t(2)).sort(SortOptions::by(0)).plan().clone(), on);
+        match &p.node {
+            PhysNode::Sort { skew_tolerant, .. } => assert!(*skew_tolerant),
+            other => panic!("expected Sort root, got {other:?}"),
+        }
+        assert_eq!(
+            p.partitioning,
+            Partitioning::RangeKeys { keys: vec![SortKey::asc(0)], balanced: true }
+        );
+        // stable sorts never spread ties → not marked tolerant
+        let stable = SortOptions { keys: vec![SortKey::asc(0)], stable: true };
+        let p = optimize_with(DistFrame::scan(t(2)).sort(stable).plan().clone(), on);
+        match &p.node {
+            PhysNode::Sort { skew_tolerant, .. } => assert!(!skew_tolerant),
+            other => panic!("expected Sort root, got {other:?}"),
+        }
+        // an elided (prepartitioned) sort keeps the input lineage and is
+        // never lowered onto the balanced operator
+        let twice = DistFrame::scan(t(2)).sort(SortOptions::by(0)).sort(SortOptions::by(0));
+        let p = optimize_with(twice.plan().clone(), on);
+        match &p.node {
+            PhysNode::Sort { prepartitioned, skew_tolerant, .. } => {
+                assert!(*prepartitioned);
+                assert!(!*skew_tolerant);
+            }
+            other => panic!("expected Sort root, got {other:?}"),
+        }
     }
 
     #[test]

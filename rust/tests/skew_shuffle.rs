@@ -1,0 +1,401 @@
+//! Skew-aware repartitioning tests: the salted/balanced operators must
+//! produce globally identical results to the strict exchanges for
+//! arbitrary key distributions, and on genuinely skewed workloads they
+//! must actually balance the partitions (max/mean row ratio bounded)
+//! while the strict baseline degrades.
+
+use cylonflow::config::{Config, ExchangeConfig, SkewConfig};
+use cylonflow::datagen;
+use cylonflow::dist;
+use cylonflow::executor::{Cluster, CylonExecutor};
+use cylonflow::metrics::SkewStats;
+use cylonflow::ops::{self, AggFun, AggSpec, JoinOptions, JoinType, SortKey, SortOptions};
+use cylonflow::proptest_lite::run_prop;
+use cylonflow::table::{table_to_bytes, Table};
+
+fn skew_cluster(p: usize, enabled: bool) -> Cluster {
+    let cfg = Config {
+        exchange: ExchangeConfig {
+            skew: SkewConfig { enabled, ..SkewConfig::default() },
+            ..ExchangeConfig::default()
+        },
+        ..Config::default()
+    };
+    Cluster::with_config(p, cfg).unwrap()
+}
+
+/// Canonical byte form of a distributed result: concatenate all rank
+/// partitions and sort by every column, so placement and tie order drop
+/// out and only the global row multiset is compared.
+fn canonical_bytes(parts: Vec<Table>) -> Vec<u8> {
+    let all = Table::concat_owned(parts).unwrap();
+    let keys: Vec<SortKey> = (0..all.num_columns()).map(SortKey::asc).collect();
+    let sorted = ops::sort(&all, &SortOptions { keys, stable: false }).unwrap();
+    table_to_bytes(&sorted)
+}
+
+fn max_stats(stats: &[SkewStats]) -> SkewStats {
+    let mut out = SkewStats::default();
+    for s in stats {
+        out.merge(s);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Property: for ARBITRARY key distributions (hot fraction 0..0.8, any
+// join type, any world size) the skew-aware operators return exactly the
+// strict operators' global results.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_skew_ops_match_strict_results() {
+    run_prop("skew-aware ops ≡ strict ops", 6, |g| {
+        let p = g.usize_in(2, 4);
+        // both sides can share the hot key 0, so the inner join's hot
+        // cross product is quadratic in the hot rows — keep cases small
+        let rows = g.usize_in(150, 500);
+        let hot = g.f64() * 0.8;
+        let hot_r = g.f64() * 0.8; // independently skewed right side
+        let seed = g.u64() | 1;
+        let jt = [JoinType::Inner, JoinType::Left, JoinType::Right][g.usize_in(0, 3)];
+        let run = |enabled: bool| -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+            let c = skew_cluster(p, enabled);
+            let exec = CylonExecutor::new(&c, p).unwrap();
+            let out = exec
+                .run(move |env| {
+                    let l = datagen::skewed_table(seed ^ env.rank() as u64, rows, hot);
+                    let r = datagen::skewed_table(seed ^ 0xbeef ^ env.rank() as u64, rows, hot_r);
+                    let opts = JoinOptions::inner(0, 0).with_type(jt);
+                    let j = if enabled {
+                        dist::join_skew(&l, &r, &opts, env)?
+                    } else {
+                        dist::join(&l, &r, &opts, env)?
+                    };
+                    let gb = dist::groupby(
+                        &l,
+                        &[0],
+                        &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)],
+                        dist::GroupbyStrategy::ShuffleFirst,
+                        env,
+                    )?;
+                    let s = if enabled {
+                        dist::sort_balanced(&l, &SortOptions::by(0), env)?
+                    } else {
+                        dist::sort(&l, &SortOptions::by(0), env)?
+                    };
+                    Ok((j, gb, s))
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            let (js, gs, ss): (Vec<_>, Vec<_>, Vec<_>) = unzip3(out);
+            (canonical_bytes(js), canonical_bytes(gs), canonical_bytes(ss))
+        };
+        let skewed = run(true);
+        let strict = run(false);
+        assert_eq!(skewed.0, strict.0, "join diverged (p={p} hot={hot:.2} {jt:?})");
+        assert_eq!(skewed.1, strict.1, "groupby diverged (p={p} hot={hot:.2})");
+        assert_eq!(skewed.2, strict.2, "sort diverged (p={p} hot={hot:.2})");
+    });
+}
+
+/// `Vec<(A, B, C)> → (Vec<A>, Vec<B>, Vec<C>)`.
+fn unzip3<A, B, C>(v: Vec<(A, B, C)>) -> (Vec<A>, Vec<B>, Vec<C>) {
+    let mut a = Vec::with_capacity(v.len());
+    let mut b = Vec::with_capacity(v.len());
+    let mut c = Vec::with_capacity(v.len());
+    for (x, y, z) in v {
+        a.push(x);
+        b.push(y);
+        c.push(z);
+    }
+    (a, b, c)
+}
+
+// ---------------------------------------------------------------------
+// The acceptance workload: a zipf(1.2)-keyed join at 4 ranks.
+// ---------------------------------------------------------------------
+
+/// One-row-per-key dimension side so the join output stays linear.
+fn dimension(n_keys: i64, rank: usize) -> Table {
+    let keys: Vec<i64> = (0..n_keys).collect();
+    let vals: Vec<i64> = (0..n_keys).map(|k| k * 100).collect();
+    let t = Table::from_columns(vec![
+        ("k", cylonflow::column::Column::from_i64(keys)),
+        ("d", cylonflow::column::Column::from_i64(vals)),
+    ])
+    .unwrap();
+    if rank == 0 {
+        t
+    } else {
+        t.slice(0, 0)
+    }
+}
+
+fn zipf_join(p: usize, enabled: bool) -> (Vec<Table>, SkewStats) {
+    let c = skew_cluster(p, enabled);
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(move |env| {
+            let (rank, world) = (env.rank(), env.world_size());
+            let l = datagen::zipf_partition_for_rank(77, 20_000, 1.2, 4, rank, world);
+            let r = dimension(4, rank);
+            let opts = JoinOptions::inner(0, 0);
+            let j = if enabled {
+                dist::join_skew(&l, &r, &opts, env)?
+            } else {
+                dist::join(&l, &r, &opts, env)?
+            };
+            Ok((j, env.skew_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let mut tables = Vec::new();
+    let mut stats = Vec::new();
+    for (t, s) in out {
+        tables.push(t);
+        stats.push(s);
+    }
+    (tables, max_stats(&stats))
+}
+
+#[test]
+fn zipf_join_balances_partitions_with_identical_results() {
+    let p = 4;
+    let (balanced, stats) = zipf_join(p, true);
+    let (strict, strict_stats) = zipf_join(p, false);
+    // byte-identical global query result
+    assert_eq!(
+        canonical_bytes(balanced.clone()),
+        canonical_bytes(strict.clone()),
+        "skew-aware join changed the query result"
+    );
+    assert!(strict_stats.is_zero(), "strict run must not engage skew handling");
+    // the detector saw the dominant zipf key and engaged (either the
+    // broadcast fallback — the dimension side is tiny — or the salted
+    // exchange; both are correct and both must balance)
+    assert!(stats.hot_keys >= 1, "no hot keys found: {stats:?}");
+    assert!(stats.rows_rerouted > 0, "nothing rerouted: {stats:?}");
+    // each fact row joins exactly one dimension row, so output partition
+    // sizes mirror the fact-side placement: the strict hash join piles
+    // the ~53% hot key onto one rank (max/mean ≥ 2), the skew-aware join
+    // must stay under 1.5
+    let ratio = |parts: &[Table]| -> f64 {
+        let sizes: Vec<usize> = parts.iter().map(Table::num_rows).collect();
+        let total: usize = sizes.iter().sum();
+        *sizes.iter().max().unwrap() as f64 / (total as f64 / parts.len() as f64)
+    };
+    let strict_ratio = ratio(&strict);
+    let balanced_ratio = ratio(&balanced);
+    assert!(strict_ratio >= 2.0, "baseline not skewed enough: {strict_ratio}");
+    assert!(balanced_ratio <= 1.5, "skew-aware join still imbalanced: {balanced_ratio}");
+    assert!(balanced_ratio < strict_ratio);
+}
+
+#[test]
+fn dominant_hot_key_baseline_exceeds_2_5x_and_rebalances() {
+    // 55% of all rows share one key: the strict shuffle puts them on one
+    // rank (max/mean ≈ 2.65); the split-assignment plan spreads them.
+    let p = 4;
+    let run = |enabled: bool| -> (Vec<Table>, SkewStats) {
+        let c = skew_cluster(p, enabled);
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let out = exec
+            .run(move |env| {
+                let l = datagen::skewed_table(501 + env.rank() as u64, 5_000, 0.55);
+                let t = if enabled {
+                    dist::shuffle_by_key_balanced(&l, &[0], env)?
+                } else {
+                    dist::shuffle_by_key(&l, &[0], env)?
+                };
+                Ok((t, env.skew_snapshot()))
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let mut tables = Vec::new();
+        let mut stats = Vec::new();
+        for (t, s) in out {
+            tables.push(t);
+            stats.push(s);
+        }
+        (tables, max_stats(&stats))
+    };
+    let (balanced, stats) = run(true);
+    let (strict, _) = run(false);
+    assert_eq!(
+        canonical_bytes(balanced.clone()),
+        canonical_bytes(strict),
+        "balanced shuffle lost or duplicated rows"
+    );
+    assert!(stats.ratio_before_milli >= 2_500, "baseline ratio: {stats:?}");
+    assert!(stats.ratio_after_milli <= 1_500, "balanced ratio: {stats:?}");
+    // direct partition-size check, independent of the stats plumbing
+    let sizes: Vec<usize> = balanced.iter().map(Table::num_rows).collect();
+    let total: usize = sizes.iter().sum();
+    let max = *sizes.iter().max().unwrap();
+    assert!(
+        (max as f64) <= 1.5 * (total as f64 / p as f64),
+        "balanced sizes still skewed: {sizes:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Operator-specific contracts under skew handling.
+// ---------------------------------------------------------------------
+
+#[test]
+fn skew_groupby_keeps_groups_colocated_and_exact() {
+    let p = 4;
+    let c = skew_cluster(p, true);
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let (rank, world) = (env.rank(), env.world_size());
+            let t = datagen::zipf_partition_for_rank(31, 8_000, 1.2, 16, rank, world);
+            let g = dist::groupby(
+                &t,
+                &[0],
+                &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)],
+                dist::GroupbyStrategy::ShuffleFirst,
+                env,
+            )?;
+            Ok((g, env.skew_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let stats = max_stats(&out.iter().map(|(_, s)| *s).collect::<Vec<_>>());
+    assert!(stats.hot_keys >= 1, "zipf(1.2)/16 keys must trip the detector");
+    // the rebuild must land every group on exactly one rank
+    let mut seen = std::collections::BTreeSet::new();
+    for (g, _) in &out {
+        for &k in g.column(0).unwrap().i64_values().unwrap() {
+            assert!(seen.insert(k), "group {k} split across ranks");
+        }
+    }
+    // and the aggregates must match the serial reference exactly
+    let whole: Vec<Table> = (0..p)
+        .map(|r| datagen::zipf_partition_for_rank(31, 8_000, 1.2, 16, r, p))
+        .collect();
+    let reference = ops::groupby(
+        &Table::concat_owned(whole).unwrap(),
+        &[0],
+        &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)],
+    )
+    .unwrap();
+    let dist_all: Vec<Table> = out.into_iter().map(|(g, _)| g).collect();
+    assert_eq!(canonical_bytes(dist_all), canonical_bytes(vec![reference]));
+}
+
+#[test]
+fn skew_sort_spreads_hot_key_and_stays_globally_sorted() {
+    let p = 4;
+    let c = skew_cluster(p, true);
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let (rank, world) = (env.rank(), env.world_size());
+            let t = datagen::zipf_partition_for_rank(41, 12_000, 1.2, 4, rank, world);
+            let s = dist::sort_balanced(&t, &SortOptions::by(0), env)?;
+            Ok(s)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let sizes: Vec<usize> = out.iter().map(Table::num_rows).collect();
+    let total: usize = sizes.iter().sum();
+    assert_eq!(total, 12_000, "sort must conserve rows");
+    // ~53% of rows share one key; tie spreading must keep every rank
+    // under 1.5× the mean instead of piling them into one bucket
+    let max = *sizes.iter().max().unwrap();
+    assert!(
+        (max as f64) <= 1.5 * (total as f64 / p as f64),
+        "balanced sort sizes: {sizes:?}"
+    );
+    // rank-ordered concatenation is still globally sorted
+    let all = Table::concat_owned(out).unwrap();
+    assert!(ops::sort::is_sorted(&all, &SortOptions::by(0)));
+}
+
+#[test]
+fn stable_sort_falls_back_to_strict_path() {
+    let p = 3;
+    let c = skew_cluster(p, true);
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let (rank, world) = (env.rank(), env.world_size());
+            let t = datagen::zipf_partition_for_rank(51, 3_000, 1.2, 4, rank, world);
+            let opts = SortOptions { keys: vec![SortKey::asc(0)], stable: true };
+            let s = dist::sort_balanced(&t, &opts, env)?;
+            Ok((s.num_rows(), env.skew_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.iter().map(|(n, _)| n).sum::<usize>(), 3_000);
+    for (_, s) in &out {
+        assert!(s.is_zero(), "stable sorts must never engage tie spreading");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plan layer: a skew-enabled gang must keep lazy pipelines correct (the
+// optimizer may not elide over balanced lineage).
+// ---------------------------------------------------------------------
+
+#[test]
+fn lazy_pipeline_on_skew_enabled_gang_matches_serial_reference() {
+    use cylonflow::plan::DistFrame;
+    let p = 4;
+    let c = skew_cluster(p, true);
+    let exec = CylonExecutor::new(&c, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let (rank, world) = (env.rank(), env.world_size());
+            let l = datagen::zipf_partition_for_rank(61, 6_000, 1.2, 8, rank, world);
+            // high-cardinality right side: the join output stays linear
+            // while the left side's zipf hot keys trip the detector
+            let r = datagen::partition_for_rank(62, 6_000, 0.5, rank, world);
+            // join → groupby on the join key: with skew on, the groupby
+            // shuffle must NOT be elided (balanced lineage), and results
+            // must still be exact
+            DistFrame::scan(l)
+                .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+                .groupby(&[0], &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)])
+                .sort(SortOptions::by(0))
+                .execute(env)
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    for rep in &out {
+        let names: Vec<&str> = rep.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["join", "groupby", "sort"]);
+    }
+    let whole_l = {
+        let parts: Vec<Table> = (0..p)
+            .map(|r| datagen::zipf_partition_for_rank(61, 6_000, 1.2, 8, r, p))
+            .collect();
+        Table::concat_owned(parts).unwrap()
+    };
+    let whole_r = {
+        let parts: Vec<Table> = (0..p)
+            .map(|r| datagen::partition_for_rank(62, 6_000, 0.5, r, p))
+            .collect();
+        Table::concat_owned(parts).unwrap()
+    };
+    let j = ops::join(&whole_l, &whole_r, &JoinOptions::inner(0, 0)).unwrap();
+    let g = ops::groupby(
+        &j,
+        &[0],
+        &[AggSpec::new(1, AggFun::Sum), AggSpec::new(1, AggFun::Count)],
+    )
+    .unwrap();
+    let reference = ops::sort(&g, &SortOptions::by(0)).unwrap();
+    let dist_all: Vec<Table> = out.into_iter().map(|rep| rep.table).collect();
+    assert_eq!(canonical_bytes(dist_all), canonical_bytes(vec![reference]));
+}

@@ -25,6 +25,7 @@ fn exchange(budget: usize, frame_bytes: usize, dir: &Path) -> ExchangeConfig {
         frame_bytes,
         spill_budget_bytes: budget,
         spill_dir: dir.to_string_lossy().into_owned(),
+        skew: Default::default(),
     }
 }
 
