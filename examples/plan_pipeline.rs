@@ -21,6 +21,10 @@
 //! - `CYLONFLOW_SPILL_DIR` — temp-file directory (default: the system
 //!   temp dir; files are created only on overflow and removed after the
 //!   exchange merges).
+//! - `CYLONFLOW_OVERLAP=1` — route the shuffles through the nonblocking
+//!   double-buffered path (DESIGN.md §9): chunk k+1 encodes while chunk
+//!   k is on the wire; the overlap summary line lights up.
+//!   `CYLONFLOW_INFLIGHT_CHUNKS` sets the per-peer depth (default 2).
 
 use cylonflow::dist::pipeline::frame;
 use cylonflow::metrics::Phase;
@@ -106,6 +110,26 @@ fn main() -> Result<()> {
             "out-of-core path engaged"
         }
     );
+    let overlap_total = opt_reports.iter().fold(
+        cylonflow::metrics::OverlapStats::default(),
+        |mut acc, r| {
+            acc.merge(&r.overlap());
+            acc
+        },
+    );
+    if overlap_total.is_zero() {
+        println!(
+            "exchange overlap: off (set CYLONFLOW_OVERLAP=1 to double-buffer the shuffles)"
+        );
+    } else {
+        println!(
+            "exchange overlap: {} chunks, {:.1}ms of compute hidden under the wire, \
+             {:.1}ms of wire waits remaining",
+            overlap_total.chunks_overlapped,
+            overlap_total.hidden_nanos as f64 / 1e6,
+            overlap_total.wire_wait_nanos as f64 / 1e6,
+        );
+    }
 
     let comm = |reports: &[PlanReport]| -> f64 {
         reports

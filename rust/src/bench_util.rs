@@ -146,6 +146,10 @@ pub struct BenchRecord {
     /// Max/mean partition row ratio under the skew plan (0 = n/a). In
     /// the baseline this doubles as the ceiling the gate enforces.
     pub max_mean_after: f64,
+    /// Overlap efficiency for the `shuffle_overlap` pairs: blocking
+    /// median ÷ overlapped median on the same workload (>1 means the
+    /// overlapped path won; 0 = n/a for non-overlap benchmarks).
+    pub overlap_ratio: f64,
 }
 
 /// Render bench records as a stable, human-diffable JSON array (the
@@ -156,8 +160,16 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
         let sep = if i + 1 == records.len() { "" } else { "," };
         out.push_str(&format!(
             "  {{\"op\": \"{}\", \"dist\": \"{}\", \"rows\": {}, \"world\": {}, \
-             \"median_ns\": {}, \"max_mean_before\": {:.3}, \"max_mean_after\": {:.3}}}{sep}\n",
-            r.op, r.dist, r.rows, r.world, r.median_ns, r.max_mean_before, r.max_mean_after
+             \"median_ns\": {}, \"max_mean_before\": {:.3}, \"max_mean_after\": {:.3}, \
+             \"overlap_ratio\": {:.3}}}{sep}\n",
+            r.op,
+            r.dist,
+            r.rows,
+            r.world,
+            r.median_ns,
+            r.max_mean_before,
+            r.max_mean_after,
+            r.overlap_ratio
         ));
     }
     out.push_str("]\n");
@@ -192,6 +204,7 @@ fn parse_record(body: &str) -> Result<BenchRecord, String> {
         median_ns: 0,
         max_mean_before: 0.0,
         max_mean_after: 0.0,
+        overlap_ratio: 0.0,
     };
     for field in body.split(',') {
         let Some((key, value)) = field.split_once(':') else {
@@ -213,6 +226,7 @@ fn parse_record(body: &str) -> Result<BenchRecord, String> {
             "median_ns" => r.median_ns = as_f64()? as u64,
             "max_mean_before" => r.max_mean_before = as_f64()?,
             "max_mean_after" => r.max_mean_after = as_f64()?,
+            "overlap_ratio" => r.overlap_ratio = as_f64()?,
             _ => {} // forward-compatible: unknown keys ignored
         }
     }
@@ -267,6 +281,7 @@ mod tests {
             median_ns: median,
             max_mean_before: 2.614,
             max_mean_after: 1.28,
+            overlap_ratio: 1.125,
         }
     }
 

@@ -12,11 +12,14 @@
 //! bench_driver ablation [--rows N]            groupby strategy + skew ablations
 //! bench_driver all    [--rows N]
 //! bench_driver bench  [--rows N] [--world P] [--iters K]
-//!                     [--ops join,groupby,sort,shuffle] [--out FILE]
+//!                     [--ops join,groupby,sort,shuffle,shuffle_overlap]
+//!                     [--out FILE]
 //!                                             fixed-seed CI trajectory:
 //!                                             uniform + zipf keys, skew
-//!                                             subsystem on, emits
-//!                                             BENCH_ci.json for bench_gate
+//!                                             subsystem on, overlapped
+//!                                             vs blocking shuffle pair,
+//!                                             emits BENCH_ci.json for
+//!                                             bench_gate
 //! ```
 //!
 //! Testbed note: this machine exposes a single core, so wall times do not
@@ -434,8 +437,12 @@ fn ablation(rows: usize) {
 
 // ------------------------------------------------------------ CI bench
 
-/// Operators the CI trajectory covers, in run order.
-const BENCH_OPS: [&str; 4] = ["shuffle", "join", "groupby", "sort"];
+/// Operators the CI trajectory covers, in run order. `shuffle_overlap`
+/// is the on/off pair for the nonblocking double-buffered exchange: it
+/// measures the same strict shuffle with `CYLONFLOW_OVERLAP`-style
+/// config on and off over the TCP transport and records the overlapped
+/// median plus the blocking÷overlapped efficiency ratio.
+const BENCH_OPS: [&str; 5] = ["shuffle", "shuffle_overlap", "join", "groupby", "sort"];
 /// The skewed CI workload: zipf(1.2) over 64 keys puts ~29% of all rows
 /// on the hottest key — enough to trip the hot-key detector while
 /// leaving a realistic cold tail.
@@ -544,6 +551,86 @@ fn bench_one(
         median_ns: m.median().as_nanos() as u64,
         max_mean_before: before as f64 / 1000.0,
         max_mean_after: after as f64 / 1000.0,
+        overlap_ratio: 0.0,
+    }
+}
+
+/// Benchmark the overlapped exchange against its blocking twin: the same
+/// strict `dist::shuffle_by_key` workload on two otherwise-identical
+/// gangs, one with the nonblocking double-buffered path enabled. Runs
+/// over the TCP transport (real sockets — the memory fabric's "wire" is
+/// a memcpy, which leaves nothing for overlap to hide) with small frames
+/// so every partition streams as several chunks. Records the overlapped
+/// median and the blocking÷overlapped ratio, and warns (without
+/// panicking — the bench subcommand fails gracefully) when the overlap
+/// engine hid no chunks (`OverlapStats.chunks_overlapped == 0`).
+fn bench_overlap(
+    dist_name: &'static str,
+    rows: usize,
+    world: usize,
+    iters: usize,
+) -> BenchRecord {
+    let measure = |overlap: bool| {
+        let mut cfg = Config::from_env();
+        cfg.backend = CommBackend::Tcp;
+        cfg.exchange.frame_bytes = 16 << 10; // several frames per peer
+        cfg.exchange.overlap.enabled = overlap;
+        cfg.exchange.overlap.inflight_chunks = 2;
+        let cluster = Cluster::with_config(world, cfg).expect("cluster");
+        let exec = CylonExecutor::new(&cluster, world).expect("executor");
+        exec.run(|env| env.barrier()).unwrap().wait().unwrap(); // warmup
+        let parts: std::sync::Arc<Vec<Table>> = std::sync::Arc::new(
+            (0..world).map(|r| bench_part(dist_name, 7001, rows, r, world)).collect(),
+        );
+        let label = format!(
+            "shuffle_overlap/{dist_name} ({})",
+            if overlap { "overlapped" } else { "blocking" }
+        );
+        let m = cylonflow::bench_util::bench(&label, 1, iters, || {
+            let parts = parts.clone();
+            exec.run(move |env| dist::shuffle_by_key(&parts[env.rank()], &[0], env))
+                .expect("submit")
+                .wait()
+                .expect("bench app failed");
+        });
+        let stats = exec
+            .run(|env| Ok(env.overlap_snapshot()))
+            .expect("submit")
+            .wait()
+            .expect("stats app failed");
+        println!("{}", m.report());
+        (m, stats)
+    };
+    let (blocking, off_stats) = measure(false);
+    let (overlapped, on_stats) = measure(true);
+    let hidden: u64 = on_stats.iter().map(|s| s.chunks_overlapped).sum();
+    // Diagnose rather than panic: the bench subcommand promises graceful
+    // failures, and degenerate workloads (world=1, tiny rows) legitimately
+    // leave nothing to overlap. The record is still written either way so
+    // the trajectory shows the zero.
+    if !off_stats.iter().all(|s| s.is_zero()) {
+        eprintln!("bench: warning: blocking shuffle_overlap pair touched the overlap path");
+    }
+    if hidden == 0 {
+        eprintln!(
+            "bench: warning: shuffle_overlap/{dist_name} hid no chunks \
+             (world={world}, rows={rows} — nothing to overlap at this scale?)"
+        );
+    }
+    let ratio = blocking.median().as_nanos() as f64 / overlapped.median().as_nanos().max(1) as f64;
+    println!(
+        "shuffle_overlap/{dist_name}: blocking/overlapped = {ratio:.3} \
+         ({hidden} chunks overlapped across ranks)"
+    );
+    BenchRecord {
+        op: "shuffle_overlap".to_string(),
+        dist: dist_name.to_string(),
+        rows: rows as u64,
+        world: world as u64,
+        median_ns: overlapped.median().as_nanos() as u64,
+        max_mean_before: 0.0,
+        max_mean_after: 0.0,
+        overlap_ratio: ratio,
     }
 }
 
@@ -574,7 +661,11 @@ fn bench_ci(argv: &[String]) -> i32 {
     let mut records = Vec::new();
     for dist_name in ["uniform", "zipf"] {
         for &op in &selected {
-            records.push(bench_one(op, dist_name, rows, world, iters));
+            records.push(if op == "shuffle_overlap" {
+                bench_overlap(dist_name, rows, world, iters)
+            } else {
+                bench_one(op, dist_name, rows, world, iters)
+            });
         }
     }
     let table_rows: Vec<(String, Vec<String>)> = records
@@ -586,13 +677,18 @@ fn bench_ci(argv: &[String]) -> i32 {
                     format!("{}ns", r.median_ns),
                     format!("{:.2}", r.max_mean_before),
                     format!("{:.2}", r.max_mean_after),
+                    if r.overlap_ratio > 0.0 {
+                        format!("{:.2}", r.overlap_ratio)
+                    } else {
+                        "-".into()
+                    },
                 ],
             )
         })
         .collect();
     print_table(
         &format!("CI bench trajectory ({rows} rows, p={world}, skew on)"),
-        &["median", "max/mean before", "max/mean after"],
+        &["median", "max/mean before", "max/mean after", "overlap x"],
         &table_rows,
     );
     if let Err(e) = std::fs::write(&out, records_to_json(&records)) {

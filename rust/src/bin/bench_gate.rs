@@ -17,6 +17,11 @@
 //!   benchmark silently disappearing fails the gate — and must have been
 //!   measured at the baseline's `rows`/`world` scale (comparing medians
 //!   across different workload sizes is meaningless).
+//! - **bootstrapping rows**: a baseline row with *no* populated field
+//!   (median 0 and ceiling 0) was added ahead of its first
+//!   trusted-runner refresh and enforces nothing — not even coverage —
+//!   until refreshed. Rows with any populated field keep the full
+//!   checks.
 //!
 //! ```text
 //! bench_gate --current BENCH_ci.json --baseline ../BENCH_baseline.json \
@@ -30,21 +35,35 @@ fn load(path: &str) -> Result<Vec<BenchRecord>, String> {
     parse_bench_records(&text).map_err(|e| format!("cannot parse {path}: {e}"))
 }
 
+/// A baseline row with no populated field at all is *bootstrapping*: it
+/// was added ahead of a trusted-runner refresh and enforces nothing yet.
+/// The gate skips such rows entirely (missing/drift checks included —
+/// there is nothing being protected), WITHOUT loosening anything for
+/// rows that do hold a median or a balance ceiling.
+fn is_bootstrapping(b: &BenchRecord) -> bool {
+    b.median_ns == 0 && b.max_mean_after == 0.0
+}
+
 /// Compare current records against the baseline; returns human-readable
 /// failure lines (empty = gate passes).
 fn gate(current: &[BenchRecord], baseline: &[BenchRecord], tolerance: f64) -> Vec<String> {
     let mut failures = Vec::new();
     for b in baseline {
         let Some(c) = current.iter().find(|c| c.op == b.op && c.dist == b.dist) else {
-            failures.push(format!("{}/{}: benchmark missing from current run", b.op, b.dist));
+            if !is_bootstrapping(b) {
+                failures
+                    .push(format!("{}/{}: benchmark missing from current run", b.op, b.dist));
+            }
             continue;
         };
         if c.rows != b.rows || c.world != b.world {
-            failures.push(format!(
-                "{}/{}: workload drift — measured at rows={} world={} but baseline holds \
-                 rows={} world={}; refresh BENCH_baseline.json for the new scale",
-                b.op, b.dist, c.rows, c.world, b.rows, b.world
-            ));
+            if !is_bootstrapping(b) {
+                failures.push(format!(
+                    "{}/{}: workload drift — measured at rows={} world={} but baseline holds \
+                     rows={} world={}; refresh BENCH_baseline.json for the new scale",
+                    b.op, b.dist, c.rows, c.world, b.rows, b.world
+                ));
+            }
             continue;
         }
         if b.median_ns > 0 {
@@ -99,6 +118,14 @@ fn main() {
             baseline.len()
         );
     }
+    let bootstrapping = baseline.iter().filter(|b| is_bootstrapping(b)).count();
+    if bootstrapping > 0 {
+        println!(
+            "bench_gate: note: {bootstrapping}/{} baseline rows are still bootstrapping \
+             (all fields unset) — they enforce nothing until refreshed",
+            baseline.len()
+        );
+    }
     let failures = gate(&current, &baseline, tolerance);
     if failures.is_empty() {
         println!(
@@ -127,6 +154,7 @@ mod tests {
             median_ns: median,
             max_mean_before: 0.0,
             max_mean_after: after,
+            overlap_ratio: 0.0,
         }
     }
 
@@ -159,5 +187,31 @@ mod tests {
         let fails = gate(&[scaled], &baseline, 0.25);
         assert_eq!(fails.len(), 1, "{fails:?}");
         assert!(fails[0].contains("workload drift"));
+    }
+
+    #[test]
+    fn bootstrapping_rows_enforce_nothing_yet() {
+        // an all-zero row is pre-refresh: absent from the current run or
+        // measured at a different scale, the gate stays green
+        let baseline = vec![rec("shuffle_overlap", 0, 0.0), rec("join", 100, 1.5)];
+        let current = vec![rec("join", 100, 1.4)];
+        assert!(gate(&current, &baseline, 0.25).is_empty(), "missing bootstrap row must pass");
+        let mut scaled = rec("shuffle_overlap", 123, 0.0);
+        scaled.rows *= 2;
+        let current = vec![scaled, rec("join", 100, 1.4)];
+        assert!(gate(&current, &baseline, 0.25).is_empty(), "drifted bootstrap row must pass");
+    }
+
+    #[test]
+    fn populated_rows_keep_full_enforcement() {
+        // a row with only a ceiling (median still 0) is NOT bootstrapping:
+        // missing coverage and ceiling breaches must still fail
+        let baseline = vec![rec("shuffle", 0, 1.5)];
+        let fails = gate(&[], &baseline, 0.25);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("missing"));
+        let fails = gate(&[rec("shuffle", 50, 1.9)], &baseline, 0.25);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("ratio"));
     }
 }

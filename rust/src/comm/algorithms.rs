@@ -24,8 +24,12 @@
 //! `Vec<Vec<u8>>` — the transport half of the out-of-core exchange path
 //! (the other half is [`crate::store::SpillBuffer`]).
 
+use super::nb::{CommRequest, ProgressEngine};
 use super::Communicator;
 use crate::error::{Error, Result};
+use crate::metrics::OverlapStats;
+use std::collections::VecDeque;
+use std::time::Instant;
 
 /// Shared argument check: collectives need exactly one payload per rank
 /// (also used by [`super::collectives`]'s table-level shuffles).
@@ -410,7 +414,7 @@ pub fn all_to_all_streamed<'a>(
     check_one_part_per_rank(streams.len(), p, "all_to_all_streamed")?;
     // Local frames never touch the transport.
     let mine = std::mem::replace(&mut streams[me], Box::new(std::iter::empty()));
-    drain_local(me, mine, sink)?;
+    drain_local("all_to_all_streamed", me, mine, sink)?;
     for round in 1..p {
         let (to, from) = if p.is_power_of_two() {
             (me ^ round, me ^ round)
@@ -485,6 +489,7 @@ pub fn allgather_streamed<'a>(
 /// Drain a rank's own stream into the sink, checking the end-of-stream
 /// contract (every stream must end with a frame the sink reports final).
 fn drain_local(
+    what: &str,
     me: usize,
     stream: impl Iterator<Item = Vec<u8>>,
     sink: &mut FrameSink<'_>,
@@ -494,11 +499,305 @@ fn drain_local(
         done = sink(me, frame)?;
     }
     if !done {
-        return Err(Error::comm(
-            "all_to_all_streamed: local frame stream ended without a final frame",
-        ));
+        return Err(Error::comm(format!(
+            "{what}: local frame stream ended without a final frame"
+        )));
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Overlapped streaming collectives: the nonblocking, double-buffered forms.
+// ---------------------------------------------------------------------------
+
+/// True while the wire is *demonstrably* active: a submitted send has
+/// not been reaped (its transfer is pending, or finished concurrently
+/// with the work since submission), or a posted receive has completed
+/// and awaits decode (its payload arrived while the worker was busy
+/// elsewhere). A merely-posted, unmatched receive does NOT count —
+/// otherwise every encode in any p > 1 exchange would tautologically
+/// count as "overlap" and the stats could not distinguish working
+/// overlap from none.
+fn wire_busy(sends: &[VecDeque<CommRequest>], recvs: &[Option<CommRequest>]) -> bool {
+    sends.iter().any(|q| !q.is_empty()) || recvs.iter().flatten().any(CommRequest::test)
+}
+
+/// Reap completed sends front-first (submission order per lane),
+/// surfacing transport errors. Returns true when anything completed.
+fn reap_sends(sends: &mut [VecDeque<CommRequest>]) -> Result<bool> {
+    let mut reaped = false;
+    for q in sends.iter_mut() {
+        while q.front().is_some_and(CommRequest::test) {
+            q.pop_front().expect("front checked").wait()?;
+            reaped = true;
+        }
+    }
+    Ok(reaped)
+}
+
+/// Reap completed receives: decode/spill each arrived frame through the
+/// sink, mark `LAST` lanes done and repost the rest (repost submission
+/// time counts toward `wire_wait_nanos` — identically in both overlapped
+/// collectives). Returns true when anything completed.
+fn reap_recvs(
+    engine: &ProgressEngine,
+    tag: u64,
+    sends: &[VecDeque<CommRequest>],
+    recvs: &mut [Option<CommRequest>],
+    recv_done: &mut [bool],
+    stats: &mut OverlapStats,
+    sink: &mut FrameSink<'_>,
+) -> Result<bool> {
+    let mut reaped = false;
+    for j in 0..recvs.len() {
+        if recvs[j].as_ref().is_some_and(CommRequest::test) {
+            let req = recvs[j].take().expect("presence checked");
+            let frame = req.wait()?.expect("irecv resolves to a payload");
+            let busy = wire_busy(sends, recvs);
+            let t0 = Instant::now();
+            let last = sink(j, frame)?;
+            if busy {
+                stats.hidden_nanos += t0.elapsed().as_nanos() as u64;
+                stats.chunks_overlapped += 1;
+            }
+            if last {
+                recv_done[j] = true;
+            } else {
+                let t1 = Instant::now();
+                recvs[j] = Some(engine.irecv(j, tag)?);
+                stats.wire_wait_nanos += t1.elapsed().as_nanos() as u64;
+            }
+            reaped = true;
+        }
+    }
+    Ok(reaped)
+}
+
+/// Park the worker until any outstanding wire request completes; the
+/// blocked time counts toward `wire_wait_nanos`. Errors when nothing is
+/// in flight — the loop would otherwise spin forever on a contract bug.
+fn park_on_wire(
+    what: &str,
+    sends: &[VecDeque<CommRequest>],
+    recvs: &[Option<CommRequest>],
+    stats: &mut OverlapStats,
+) -> Result<()> {
+    let waitlist: Vec<&CommRequest> = sends
+        .iter()
+        .filter_map(VecDeque::front)
+        .chain(recvs.iter().flatten())
+        .collect();
+    if waitlist.is_empty() {
+        return Err(Error::comm(format!("{what}: stalled with nothing in flight")));
+    }
+    let t0 = Instant::now();
+    CommRequest::wait_any_ref(&waitlist)?;
+    stats.wire_wait_nanos += t0.elapsed().as_nanos() as u64;
+    Ok(())
+}
+
+/// Overlapped streaming all-to-all: same contract, frame flow and result
+/// as [`all_to_all_streamed`] (the sink observes the same `(source,
+/// frame)` multiset, so a `(source, seq)`-ordered replay is bit-identical
+/// — property-tested), but driven through a [`ProgressEngine`] so the
+/// three halves of the exchange pipeline instead of serializing:
+///
+/// - **encode**: while up to `inflight` frames per destination are in
+///   flight, the worker keeps pulling (slicing + serializing) the *next*
+///   frame from each stream — chunk k+1 is encoded while chunk k is on
+///   the wire (the double buffer; `inflight` ≥ 1, clamped);
+/// - **wire**: the progress thread moves submitted frames; one posted
+///   `irecv` per source (reposted until that source's `LAST` frame)
+///   keeps every inbound lane live simultaneously — unlike the pairwise
+///   schedule there are no rounds, all peers progress at once;
+/// - **decode/spill**: completed receives drain into the sink between
+///   encode steps, so spill I/O also hides under the wire.
+///
+/// Ordering: sends are submitted in frame order per destination and the
+/// engine services them FIFO, so the transport's per-`(source, tag)`
+/// FIFO keeps `seq` ascending per lane — the only ordering the streamed
+/// contract needs. The worker blocks only when it can make no progress
+/// at all; that blocked time (plus submission overhead) is what the
+/// returned [`OverlapStats`] reports as `wire_wait_nanos`, next to the
+/// compute it managed to hide.
+///
+/// Consumes a single data lane at `tag` (source rank disambiguates);
+/// callers reserve the same range as [`all_to_all_streamed`] so SPMD tag
+/// counters stay aligned whichever path a gang runs.
+pub fn all_to_all_overlapped<'a>(
+    engine: &ProgressEngine,
+    mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + 'a>>,
+    tag: u64,
+    inflight: usize,
+    sink: &mut FrameSink<'_>,
+) -> Result<OverlapStats> {
+    let p = engine.comm().world_size();
+    let me = engine.comm().rank();
+    check_one_part_per_rank(streams.len(), p, "all_to_all_overlapped")?;
+    let inflight = inflight.max(1);
+    let mut stats = OverlapStats::default();
+    let mut local = std::mem::replace(&mut streams[me], Box::new(std::iter::empty()));
+    if p == 1 {
+        drain_local("all_to_all_overlapped", me, local, sink)?;
+        return Ok(stats);
+    }
+
+    let mut send_done: Vec<bool> = (0..p).map(|j| j == me).collect();
+    let mut sends: Vec<VecDeque<CommRequest>> = (0..p).map(|_| VecDeque::new()).collect();
+    let mut recvs: Vec<Option<CommRequest>> = Vec::with_capacity(p);
+    for j in 0..p {
+        recvs.push(if j == me { None } else { Some(engine.irecv(j, tag)?) });
+    }
+    let mut recv_done: Vec<bool> = (0..p).map(|j| j == me).collect();
+    let mut local_done = false;
+
+    loop {
+        let mut made_progress = reap_sends(&mut sends)?;
+        made_progress |=
+            reap_recvs(engine, tag, &sends, &mut recvs, &mut recv_done, &mut stats, sink)?;
+
+        // Pump outbound streams: encode the next frame for every
+        // destination with a free in-flight slot.
+        for j in 0..p {
+            if send_done[j] || sends[j].len() >= inflight {
+                continue;
+            }
+            let busy = wire_busy(&sends, &recvs);
+            let t0 = Instant::now();
+            match streams[j].next() {
+                Some(frame) => {
+                    if busy {
+                        stats.hidden_nanos += t0.elapsed().as_nanos() as u64;
+                        stats.chunks_overlapped += 1;
+                    }
+                    let t1 = Instant::now();
+                    sends[j].push_back(engine.isend(j, tag, frame)?);
+                    stats.wire_wait_nanos += t1.elapsed().as_nanos() as u64;
+                }
+                None => send_done[j] = true,
+            }
+            made_progress = true;
+        }
+
+        // Pump the local stream one frame at a time so it interleaves
+        // with the wire work instead of front-running it.
+        if !local_done {
+            let busy = wire_busy(&sends, &recvs);
+            let t0 = Instant::now();
+            match local.next() {
+                Some(frame) => {
+                    let last = sink(me, frame)?;
+                    if busy {
+                        stats.hidden_nanos += t0.elapsed().as_nanos() as u64;
+                        stats.chunks_overlapped += 1;
+                    }
+                    local_done = last;
+                }
+                None => {
+                    return Err(Error::comm(
+                        "all_to_all_overlapped: local frame stream ended without a final frame",
+                    ))
+                }
+            }
+            made_progress = true;
+        }
+
+        if local_done
+            && send_done.iter().all(|&d| d)
+            && sends.iter().all(VecDeque::is_empty)
+            && recv_done.iter().all(|&d| d)
+        {
+            return Ok(stats);
+        }
+
+        // Stalled: every slot full, nothing reaped, nothing local left —
+        // park until *any* wire request completes.
+        if !made_progress {
+            park_on_wire("all_to_all_overlapped", &sends, &recvs, &mut stats)?;
+        }
+    }
+}
+
+/// Overlapped streaming allgather: same contract and result as
+/// [`allgather_streamed`] (linear fan-out of the local frame stream, one
+/// inbound lane per peer), but nonblocking: the next local frame is
+/// encoded while up to `inflight` copies per peer are still in flight,
+/// and completed receives drain into the sink between encode steps.
+/// Consumes a single lane at `tag`; callers reserve the same range as
+/// the blocking form for SPMD tag alignment.
+pub fn allgather_overlapped<'a>(
+    engine: &ProgressEngine,
+    mut frames: Box<dyn Iterator<Item = Vec<u8>> + 'a>,
+    tag: u64,
+    inflight: usize,
+    sink: &mut FrameSink<'_>,
+) -> Result<OverlapStats> {
+    let p = engine.comm().world_size();
+    let me = engine.comm().rank();
+    let inflight = inflight.max(1);
+    let mut stats = OverlapStats::default();
+    if p == 1 {
+        drain_local("allgather_overlapped", me, frames, sink)?;
+        return Ok(stats);
+    }
+
+    let mut sends: Vec<VecDeque<CommRequest>> = (0..p).map(|_| VecDeque::new()).collect();
+    let mut recvs: Vec<Option<CommRequest>> = Vec::with_capacity(p);
+    for j in 0..p {
+        recvs.push(if j == me { None } else { Some(engine.irecv(j, tag)?) });
+    }
+    let mut recv_done: Vec<bool> = (0..p).map(|j| j == me).collect();
+    let mut local_done = false;
+
+    loop {
+        let mut made_progress = reap_sends(&mut sends)?;
+        made_progress |=
+            reap_recvs(engine, tag, &sends, &mut recvs, &mut recv_done, &mut stats, sink)?;
+
+        // Produce the next local frame once every peer lane has a free
+        // in-flight slot (the per-peer double-buffer bound).
+        if !local_done
+            && sends
+                .iter()
+                .enumerate()
+                .all(|(j, q)| j == me || q.len() < inflight)
+        {
+            let busy = wire_busy(&sends, &recvs);
+            let t0 = Instant::now();
+            match frames.next() {
+                Some(frame) => {
+                    for (j, q) in sends.iter_mut().enumerate() {
+                        if j != me {
+                            q.push_back(engine.isend(j, tag, frame.clone())?);
+                        }
+                    }
+                    let last = sink(me, frame)?;
+                    if busy {
+                        stats.hidden_nanos += t0.elapsed().as_nanos() as u64;
+                        stats.chunks_overlapped += 1;
+                    }
+                    local_done = last;
+                }
+                None => {
+                    return Err(Error::comm(
+                        "allgather_overlapped: local frame stream ended without a final frame",
+                    ))
+                }
+            }
+            made_progress = true;
+        }
+
+        if local_done
+            && sends.iter().all(VecDeque::is_empty)
+            && recv_done.iter().all(|&d| d)
+        {
+            return Ok(stats);
+        }
+
+        if !made_progress {
+            park_on_wire("allgather_overlapped", &sends, &recvs, &mut stats)?;
+        }
+    }
 }
 
 /// Sum-allreduce a small i64 vector (linear gather at 0 + bcast — fine for

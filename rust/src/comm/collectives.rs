@@ -24,21 +24,35 @@
 //!   bounded by the budget plus one frame. This is what the
 //!   [`crate::dist`] operators run on, so exchanges whose transient
 //!   buffers would exceed RAM complete.
+//!
+//! The streaming forms additionally run **overlapped** when
+//! [`crate::config::OverlapConfig`] enables it (`CYLONFLOW_OVERLAP`,
+//! off by default): the same frames flow through the nonblocking
+//! progress engine ([`crate::comm::nb`]) so encoding of chunk k+1
+//! overlaps chunk k's wire time and received frames decode/spill
+//! concurrently — still bit-identical, with the achieved overlap
+//! recorded in [`OverlapStats`].
 
 use super::algorithms::{self, AlgoSet};
+use super::nb::{CommRequest, ProgressEngine};
 use super::Communicator;
 use crate::config::ExchangeConfig;
 use crate::error::Result;
-use crate::metrics::{Phase, PhaseTimers, SpillStats};
+use crate::metrics::{OverlapStats, Phase, PhaseTimers, SpillStats};
 use crate::store::SpillBuffer;
 use crate::table::{frame_header, table_from_bytes, table_to_bytes, FrameEncoder, Table};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// A live communication context: transport + algorithms + tag allocation
-/// + comm-phase timing + streaming-exchange (spill) configuration.
+/// + comm-phase timing + streaming-exchange (spill/overlap)
+/// configuration, plus the lazily-started nonblocking progress engine
+/// ([`crate::comm::nb`]).
 pub struct CommContext {
-    comm: Box<dyn Communicator>,
+    // Arc, not Box: the progress engine's thread shares the transport
+    // handle with the worker thread (`Communicator` is `Sync`).
+    comm: Arc<dyn Communicator>,
     algos: AlgoSet,
     exchange: ExchangeConfig,
     // Collective ops consume tag ranges; every rank allocates in the same
@@ -46,6 +60,10 @@ pub struct CommContext {
     next_tag: AtomicU64,
     timers: Mutex<PhaseTimers>,
     spill: Mutex<SpillStats>,
+    overlap: Mutex<OverlapStats>,
+    // Started on first nonblocking use; dropping the context shuts it
+    // down (outstanding requests error, thread joins — never leaks).
+    engine: OnceLock<ProgressEngine>,
 }
 
 impl CommContext {
@@ -56,21 +74,23 @@ impl CommContext {
     }
 
     /// Wrap a transport with an algorithm set and explicit streaming
-    /// exchange knobs (frame size, spill budget, spill directory) — the
-    /// constructor the executor uses to thread [`crate::config::Config`]
-    /// through.
+    /// exchange knobs (frame size, spill budget, spill directory,
+    /// overlap) — the constructor the executor uses to thread
+    /// [`crate::config::Config`] through.
     pub fn with_exchange(
         comm: Box<dyn Communicator>,
         algos: AlgoSet,
         exchange: ExchangeConfig,
     ) -> Self {
         CommContext {
-            comm,
+            comm: Arc::from(comm),
             algos,
             exchange,
             next_tag: AtomicU64::new(1 << 16),
             timers: Mutex::new(PhaseTimers::new()),
             spill: Mutex::new(SpillStats::default()),
+            overlap: Mutex::new(OverlapStats::default()),
+            engine: OnceLock::new(),
         }
     }
 
@@ -132,10 +152,59 @@ impl CommContext {
         snap
     }
 
+    /// Non-destructive snapshot of the accumulated overlap counters
+    /// (monotonic, like [`CommContext::peek_spill_stats`]; all zero
+    /// while the overlap path is disabled).
+    pub fn peek_overlap_stats(&self) -> OverlapStats {
+        *self.overlap.lock().expect("overlap stats poisoned")
+    }
+
+    /// Snapshot and reset the accumulated overlap counters.
+    pub fn take_overlap_stats(&self) -> OverlapStats {
+        let mut s = self.overlap.lock().expect("overlap stats poisoned");
+        let snap = *s;
+        *s = OverlapStats::default();
+        snap
+    }
+
     fn record_spill(&self, stats: SpillStats) {
         if !stats.is_zero() {
             self.spill.lock().expect("spill stats poisoned").merge(&stats);
         }
+    }
+
+    fn record_overlap(&self, stats: OverlapStats) {
+        if !stats.is_zero() {
+            self.overlap.lock().expect("overlap stats poisoned").merge(&stats);
+        }
+    }
+
+    /// The nonblocking progress engine of this context, started on first
+    /// use (one dedicated progress thread per rank; see
+    /// [`crate::comm::nb`]). Shares the transport handle with the
+    /// blocking collectives; shut down when the context drops.
+    pub fn nb(&self) -> &ProgressEngine {
+        self.engine.get_or_init(|| {
+            // Send backpressure bound: the overlapped collectives keep at
+            // most `inflight` frames per peer outstanding, so this only
+            // binds direct isend users that race far ahead.
+            let bound = (self.exchange.overlap.inflight_chunks.max(1) * self.world_size()).max(8);
+            ProgressEngine::new(self.comm.clone(), bound)
+        })
+    }
+
+    /// Post a nonblocking send through this context's progress engine
+    /// (see [`ProgressEngine::isend`]). Use tags below `1 << 16`; higher
+    /// tags are reserved for the collective allocator.
+    pub fn isend(&self, to: usize, tag: u64, data: Vec<u8>) -> Result<CommRequest> {
+        self.nb().isend(to, tag, data)
+    }
+
+    /// Post a nonblocking receive through this context's progress engine
+    /// (see [`ProgressEngine::irecv`]). Same tag discipline as
+    /// [`CommContext::isend`].
+    pub fn irecv(&self, from: usize, tag: u64) -> Result<CommRequest> {
+        self.nb().irecv(from, tag)
     }
 
     fn alloc_tags(&self, n: u64) -> u64 {
@@ -143,13 +212,22 @@ impl CommContext {
     }
 
     fn timed<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
-        let start = std::time::Instant::now();
+        let start = Instant::now();
         let out = f();
         self.timers
             .lock()
             .expect("timers poisoned")
             .add(Phase::Communication, start.elapsed());
         out
+    }
+
+    /// Add a pre-measured duration to one phase — the overlapped
+    /// exchanges apportion their wall time between Communication (actual
+    /// wire waits) and Auxiliary (encode/decode/spill that ran
+    /// concurrently with the wire) instead of billing everything to
+    /// Communication the way the blocking `timed` wrapper must.
+    fn add_phase(&self, phase: Phase, d: Duration) {
+        self.timers.lock().expect("timers poisoned").add(phase, d);
     }
 
     /// Synchronize the gang.
@@ -194,12 +272,25 @@ impl CommContext {
     /// memory budget wait on disk until merge. Spilled bytes/frames are
     /// recorded in this context's [`SpillStats`]. Below the budget no
     /// temp file is ever created and behavior is unchanged.
+    ///
+    /// With [`crate::config::OverlapConfig`] enabled (`CYLONFLOW_OVERLAP`,
+    /// off by default) the exchange instead runs **overlapped** through
+    /// the progress engine
+    /// ([`algorithms::all_to_all_overlapped`]): chunk k+1 is partitioned
+    /// and encoded while chunk k's frames are on the wire and received
+    /// frames decode/spill concurrently — still bit-identical (the spill
+    /// buffer replays `(source, seq)`-ordered either way), with the
+    /// overlap achieved recorded in this context's [`OverlapStats`].
     pub fn shuffle_streamed(&self, parts: Vec<Table>) -> Result<Table> {
         let p = self.world_size();
         algorithms::check_one_part_per_rank(parts.len(), p, "shuffle")?;
         // lane per pairwise round (≤ p) + slack, mirroring `shuffle` so
-        // SPMD tag counters stay aligned across call sites.
+        // SPMD tag counters stay aligned across call sites (the
+        // overlapped path uses a single lane from the same range).
         let tag = self.alloc_tags(p as u64 + 64);
+        if self.exchange.overlap.enabled {
+            return self.shuffle_overlapped(parts, tag);
+        }
         self.timed(|| {
             let mut sink = SpillBuffer::new(
                 self.exchange.spill_budget_bytes,
@@ -225,12 +316,70 @@ impl CommContext {
         })
     }
 
+    /// The overlapped body of [`CommContext::shuffle_streamed`]. Phase
+    /// attribution is the satellite fix for multi-threaded wire use:
+    /// only genuine wire waits (plus submission overhead) bill to
+    /// `Communication`; encode/decode/spill that ran concurrently with
+    /// the wire bills to `Auxiliary` — the blocking path's
+    /// wall-clock-equals-communication assumption would double-count the
+    /// hidden compute.
+    fn shuffle_overlapped(&self, parts: Vec<Table>, tag: u64) -> Result<Table> {
+        let wall = Instant::now();
+        let mut sink =
+            SpillBuffer::new(self.exchange.spill_budget_bytes, &self.exchange.spill_dir);
+        let stats = {
+            let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
+                Vec::with_capacity(parts.len());
+            for t in &parts {
+                streams.push(Box::new(FrameEncoder::new(t, self.exchange.frame_bytes)));
+            }
+            let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                let h = frame_header(&frame)?;
+                sink.push(source, h.seq, frame)?;
+                Ok(h.last)
+            };
+            algorithms::all_to_all_overlapped(
+                self.nb(),
+                streams,
+                tag,
+                self.exchange.overlap.inflight_chunks,
+                &mut push,
+            )?
+        };
+        self.finish_overlapped(wall, stats, sink)
+    }
+
+    /// Shared tail of the overlapped exchanges: record the counters,
+    /// merge the sink, and split the wall time between Communication
+    /// (wire waits + submission overhead) and Auxiliary (everything the
+    /// worker computed meanwhile).
+    fn finish_overlapped(
+        &self,
+        wall: Instant,
+        stats: OverlapStats,
+        sink: SpillBuffer,
+    ) -> Result<Table> {
+        self.record_overlap(stats);
+        self.record_spill(sink.stats());
+        let out = Table::concat_stream(sink.replay()?);
+        let total = wall.elapsed();
+        let comm = Duration::from_nanos(stats.wire_wait_nanos).min(total);
+        self.add_phase(Phase::Communication, comm);
+        self.add_phase(Phase::Auxiliary, total - comm);
+        out
+    }
+
     /// Out-of-core allgather: identical result as
     /// [`CommContext::allgather`], with the contribution streamed as wire
     /// frames and received frames buffered under the spill budget (same
-    /// sink/replay machinery as [`CommContext::shuffle_streamed`]).
+    /// sink/replay machinery as [`CommContext::shuffle_streamed`], and
+    /// the same opt-in overlapped form behind
+    /// [`crate::config::OverlapConfig`]).
     pub fn allgather_streamed(&self, t: &Table) -> Result<Table> {
         let tag = self.alloc_tags(self.world_size() as u64 + 64);
+        if self.exchange.overlap.enabled {
+            return self.allgather_overlapped(t, tag);
+        }
         self.timed(|| {
             let mut sink = SpillBuffer::new(
                 self.exchange.spill_budget_bytes,
@@ -248,6 +397,30 @@ impl CommContext {
             self.record_spill(sink.stats());
             Table::concat_stream(sink.replay()?)
         })
+    }
+
+    /// The overlapped body of [`CommContext::allgather_streamed`]; same
+    /// phase-attribution rules as [`CommContext::shuffle_overlapped`].
+    fn allgather_overlapped(&self, t: &Table, tag: u64) -> Result<Table> {
+        let wall = Instant::now();
+        let mut sink =
+            SpillBuffer::new(self.exchange.spill_budget_bytes, &self.exchange.spill_dir);
+        let stats = {
+            let frames = Box::new(FrameEncoder::new(t, self.exchange.frame_bytes));
+            let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                let h = frame_header(&frame)?;
+                sink.push(source, h.seq, frame)?;
+                Ok(h.last)
+            };
+            algorithms::allgather_overlapped(
+                self.nb(),
+                frames,
+                tag,
+                self.exchange.overlap.inflight_chunks,
+                &mut push,
+            )?
+        };
+        self.finish_overlapped(wall, stats, sink)
     }
 
     /// Allgather: every rank contributes a table, every rank receives the
@@ -488,6 +661,7 @@ mod tests {
                 .to_string_lossy()
                 .into_owned(),
             skew: Default::default(),
+            overlap: Default::default(),
         }
     }
 
@@ -583,6 +757,103 @@ mod tests {
         for (peeked, taken, after) in outs {
             assert_eq!(peeked, taken, "peek must not consume");
             assert!(taken.spill_count > 0);
+            assert!(after.is_zero(), "take must reset");
+        }
+    }
+
+    fn overlap_contexts(p: usize, budget: usize, inflight: usize) -> Vec<CommContext> {
+        let mut ex = spill_exchange(budget);
+        ex.overlap = crate::config::OverlapConfig { enabled: true, inflight_chunks: inflight };
+        MemoryFabric::create(p)
+            .into_iter()
+            .map(|c| CommContext::with_exchange(Box::new(c), AlgoSet::simple(), ex.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn overlapped_shuffle_matches_in_memory_bit_for_bit() {
+        for (p, inflight) in [(1usize, 1usize), (2, 1), (3, 2), (4, 4)] {
+            let outs = run_gang(overlap_contexts(p, 0, inflight), move |ctx| {
+                let parts: Vec<Table> = (0..ctx.world_size())
+                    .map(|j| {
+                        let base = (ctx.rank() * 100 + j * 10) as i64;
+                        Table::from_columns(vec![(
+                            "v",
+                            Column::from_i64((base..base + 40).collect()),
+                        )])
+                        .unwrap()
+                    })
+                    .collect();
+                let reference = ctx.shuffle(parts.clone())?;
+                let overlapped = ctx.shuffle_streamed(parts)?; // routed via overlap
+                Ok((reference, overlapped, ctx.peek_overlap_stats()))
+            });
+            for (reference, overlapped, stats) in outs {
+                assert_eq!(
+                    crate::table::table_to_bytes(&reference),
+                    crate::table::table_to_bytes(&overlapped),
+                    "overlapped shuffle diverged at p={p} inflight={inflight}"
+                );
+                if p > 1 {
+                    assert!(
+                        stats.chunks_overlapped > 0,
+                        "multi-frame overlapped exchange must overlap chunks (p={p})"
+                    );
+                    assert!(stats.wire_wait_nanos > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_allgather_matches_in_memory() {
+        let outs = run_gang(overlap_contexts(3, 1 << 20, 2), |ctx| {
+            let t = Table::from_columns(vec![(
+                "v",
+                Column::from_i64((0..50).map(|i| ctx.rank() as i64 * 1000 + i).collect()),
+            )])
+            .unwrap();
+            let reference = ctx.allgather(&t)?;
+            let overlapped = ctx.allgather_streamed(&t)?; // routed via overlap
+            Ok((reference, overlapped))
+        });
+        for (reference, overlapped) in outs {
+            assert_eq!(reference, overlapped);
+        }
+    }
+
+    #[test]
+    fn overlap_disabled_by_default_records_nothing() {
+        let outs = run_gang(streaming_contexts(2, 1 << 20), |ctx| {
+            let parts: Vec<Table> = (0..2)
+                .map(|_| {
+                    Table::from_columns(vec![("v", Column::from_i64(vec![1; 64]))]).unwrap()
+                })
+                .collect();
+            ctx.shuffle_streamed(parts)?;
+            Ok(ctx.peek_overlap_stats())
+        });
+        for stats in outs {
+            assert!(stats.is_zero(), "default-off overlap must leave stats untouched");
+        }
+    }
+
+    #[test]
+    fn overlap_stats_take_and_peek() {
+        let outs = run_gang(overlap_contexts(2, 1 << 20, 2), |ctx| {
+            let parts: Vec<Table> = (0..2)
+                .map(|_| {
+                    Table::from_columns(vec![("v", Column::from_i64(vec![7; 64]))]).unwrap()
+                })
+                .collect();
+            ctx.shuffle_streamed(parts)?;
+            let peeked = ctx.peek_overlap_stats();
+            let taken = ctx.take_overlap_stats();
+            Ok((peeked, taken, ctx.peek_overlap_stats()))
+        });
+        for (peeked, taken, after) in outs {
+            assert_eq!(peeked, taken, "peek must not consume");
+            assert!(taken.wire_wait_nanos > 0);
             assert!(after.is_zero(), "take must reset");
         }
     }

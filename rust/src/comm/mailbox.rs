@@ -8,21 +8,33 @@ use std::time::Duration;
 /// How long a recv waits before declaring the gang dead.
 pub(crate) const RECV_TIMEOUT: Duration = Duration::from_secs(120);
 
+struct Slots {
+    queues: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
+    /// Monotonic push counter: the activity stamp the nonblocking
+    /// progress engine ([`crate::comm::nb`]) uses to sleep between polls
+    /// without missing an arrival (see [`Mailbox::wait_newer`]).
+    generation: u64,
+}
+
 /// FIFO message queues keyed by `(from_rank, tag)` with blocking pop.
 pub(crate) struct Mailbox {
-    slots: Mutex<HashMap<(usize, u64), VecDeque<Vec<u8>>>>,
+    slots: Mutex<Slots>,
     cv: Condvar,
 }
 
 impl Mailbox {
     pub(crate) fn new() -> Self {
-        Mailbox { slots: Mutex::new(HashMap::new()), cv: Condvar::new() }
+        Mailbox {
+            slots: Mutex::new(Slots { queues: HashMap::new(), generation: 0 }),
+            cv: Condvar::new(),
+        }
     }
 
     /// Enqueue a message (wakes blocked receivers).
     pub(crate) fn push(&self, from: usize, tag: u64, data: Vec<u8>) {
         let mut s = self.slots.lock().expect("mailbox poisoned");
-        s.entry((from, tag)).or_default().push_back(data);
+        s.queues.entry((from, tag)).or_default().push_back(data);
+        s.generation += 1;
         self.cv.notify_all();
     }
 
@@ -31,7 +43,7 @@ impl Mailbox {
         let deadline = std::time::Instant::now() + RECV_TIMEOUT;
         let mut s = self.slots.lock().expect("mailbox poisoned");
         loop {
-            if let Some(q) = s.get_mut(&(from, tag)) {
+            if let Some(q) = s.queues.get_mut(&(from, tag)) {
                 if let Some(m) = q.pop_front() {
                     return Ok(m);
                 }
@@ -48,5 +60,76 @@ impl Mailbox {
                 .expect("mailbox poisoned");
             s = guard;
         }
+    }
+
+    /// Non-blocking dequeue: `Some` if a matching message is already
+    /// queued, `None` otherwise. Never waits — the progress engine polls
+    /// many `(from, tag)` lanes from one thread with this.
+    pub(crate) fn try_pop(&self, from: usize, tag: u64) -> Option<Vec<u8>> {
+        let mut s = self.slots.lock().expect("mailbox poisoned");
+        s.queues.get_mut(&(from, tag)).and_then(|q| q.pop_front())
+    }
+
+    /// Current activity stamp: bumped on every push. Capture it *before*
+    /// a poll sweep; a later [`Mailbox::wait_newer`] with that stamp then
+    /// cannot sleep through an arrival that raced the sweep.
+    pub(crate) fn stamp(&self) -> u64 {
+        self.slots.lock().expect("mailbox poisoned").generation
+    }
+
+    /// Block until the activity stamp moves past `stamp` or `timeout`
+    /// elapses — the idle wait between progress-engine poll sweeps.
+    pub(crate) fn wait_newer(&self, stamp: u64, timeout: Duration) {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = self.slots.lock().expect("mailbox poisoned");
+        while s.generation == stamp {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, deadline - now)
+                .expect("mailbox poisoned");
+            s = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn try_pop_never_blocks_and_preserves_fifo() {
+        let m = Mailbox::new();
+        assert!(m.try_pop(0, 1).is_none());
+        m.push(0, 1, vec![1]);
+        m.push(0, 1, vec![2]);
+        assert_eq!(m.try_pop(0, 1), Some(vec![1]));
+        assert_eq!(m.try_pop(0, 1), Some(vec![2]));
+        assert!(m.try_pop(0, 1).is_none());
+    }
+
+    #[test]
+    fn stamp_moves_on_push_and_wait_newer_wakes() {
+        let m = std::sync::Arc::new(Mailbox::new());
+        let s0 = m.stamp();
+        m.push(0, 7, vec![9]);
+        assert_ne!(m.stamp(), s0, "push must bump the stamp");
+        // a stale stamp returns immediately
+        let t0 = std::time::Instant::now();
+        m.wait_newer(s0, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // a current stamp waits until a push arrives
+        let s1 = m.stamp();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            m2.push(1, 1, vec![0]);
+        });
+        m.wait_newer(s1, Duration::from_secs(5));
+        assert_ne!(m.stamp(), s1);
+        h.join().unwrap();
     }
 }

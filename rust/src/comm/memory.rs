@@ -70,6 +70,21 @@ impl Communicator for MemoryComm {
         self.fabric.mailboxes[self.rank].pop(from, tag)
     }
 
+    fn try_recv(&self, from: usize, tag: u64) -> Result<Option<Vec<u8>>> {
+        if from >= self.fabric.world_size {
+            return Err(Error::comm(format!("recv from invalid rank {from}")));
+        }
+        Ok(self.fabric.mailboxes[self.rank].try_pop(from, tag))
+    }
+
+    fn activity_stamp(&self) -> u64 {
+        self.fabric.mailboxes[self.rank].stamp()
+    }
+
+    fn wait_activity(&self, stamp: u64, timeout: std::time::Duration) {
+        self.fabric.mailboxes[self.rank].wait_newer(stamp, timeout);
+    }
+
     fn barrier(&self) -> Result<()> {
         self.fabric.barrier.wait();
         Ok(())
@@ -148,5 +163,17 @@ mod tests {
         let comms = MemoryFabric::create(1);
         assert!(comms[0].send(5, 0, vec![]).is_err());
         assert!(comms[0].recv(5, 0).is_err());
+        assert!(comms[0].try_recv(5, 0).is_err());
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let comms = MemoryFabric::create(2);
+        assert_eq!(comms[1].try_recv(0, 3).unwrap(), None);
+        let stamp = comms[1].activity_stamp();
+        comms[0].send(1, 3, vec![5]).unwrap();
+        assert_ne!(comms[1].activity_stamp(), stamp, "arrival must move the stamp");
+        assert_eq!(comms[1].try_recv(0, 3).unwrap(), Some(vec![5]));
+        assert_eq!(comms[1].try_recv(0, 3).unwrap(), None);
     }
 }

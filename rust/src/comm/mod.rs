@@ -15,6 +15,15 @@
 //! partition). The transport contract both forms rely on: sends are
 //! buffered/non-blocking and messages are FIFO per `(source, tag)` lane.
 //!
+//! On top of the blocking trait sits the **nonblocking request layer**
+//! ([`nb`]): `isend`/`irecv` return [`CommRequest`] handles serviced by
+//! a per-[`CommContext`] [`ProgressEngine`] thread, and the overlapped
+//! streaming collectives
+//! ([`algorithms::all_to_all_overlapped`]) double-buffer wire frames so
+//! partitioning/encoding of chunk k+1 runs while chunk k is in flight
+//! (opt-in via `CYLONFLOW_OVERLAP`, see
+//! [`crate::config::OverlapConfig`]).
+//!
 //! Backends (the paper's OpenMPI / Gloo / UCX-UCC analogues, see
 //! DESIGN.md §4 for the substitution argument):
 //!
@@ -35,15 +44,18 @@ pub mod collectives;
 pub mod kv;
 pub(crate) mod mailbox;
 pub mod memory;
+pub mod nb;
 pub mod tcp;
 
 pub use algorithms::{AlgoSet, AllGatherAlgo, AllToAllAlgo, BcastAlgo};
 pub use collectives::CommContext;
 pub use kv::{FileKv, InMemoryKv, KvStore};
 pub use memory::MemoryFabric;
+pub use nb::{CommRequest, ProgressEngine};
 pub use tcp::TcpFabric;
 
 use crate::error::Result;
+use std::time::Duration;
 
 /// Backend selector (paper Fig 7's x-axis sweeps these).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,6 +115,31 @@ pub trait Communicator: Send + Sync {
 
     /// Block until a message from `from` under `tag` arrives.
     fn recv(&self, from: usize, tag: u64) -> Result<Vec<u8>>;
+
+    /// Non-blocking receive: `Ok(Some(bytes))` when a matching message is
+    /// already queued, `Ok(None)` otherwise — never waits. The
+    /// nonblocking progress engine ([`nb::ProgressEngine`]) polls many
+    /// `(from, tag)` lanes from one thread with this, which a blocking
+    /// [`Communicator::recv`] cannot express.
+    fn try_recv(&self, from: usize, tag: u64) -> Result<Option<Vec<u8>>>;
+
+    /// Monotonic stamp that advances whenever a new inbound message
+    /// becomes visible. Capture it *before* a [`Communicator::try_recv`]
+    /// poll sweep; [`Communicator::wait_activity`] with that stamp then
+    /// cannot sleep through an arrival that raced the sweep. The default
+    /// (a constant) degrades [`Communicator::wait_activity`] to a plain
+    /// bounded sleep — correct, just poll-y.
+    fn activity_stamp(&self) -> u64 {
+        0
+    }
+
+    /// Block until the activity stamp moves past `stamp` or `timeout`
+    /// elapses — the progress engine's idle wait between poll sweeps.
+    /// The default sleeps a short bounded slice (correct for any
+    /// transport; override for prompt wakeups).
+    fn wait_activity(&self, _stamp: u64, timeout: Duration) {
+        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    }
 
     /// Synchronize all ranks.
     fn barrier(&self) -> Result<()>;

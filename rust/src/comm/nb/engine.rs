@@ -1,0 +1,379 @@
+//! [`ProgressEngine`] — the dedicated per-rank progress thread that
+//! services nonblocking requests.
+//!
+//! One engine wraps one shared [`Communicator`] handle. The worker
+//! thread posts operations ([`ProgressEngine::isend`] /
+//! [`ProgressEngine::irecv`]) and immediately gets a [`CommRequest`]
+//! back; the progress thread moves the bytes:
+//!
+//! - **Sends** are serviced strictly in submission order from one FIFO
+//!   queue, so the transport's per-`(source, tag)` FIFO guarantee
+//!   extends to nonblocking senders. The number of accepted-but-unsent
+//!   sends is bounded (`max_pending_sends`): past the bound `isend`
+//!   blocks the submitter, which is the backpressure that keeps an
+//!   encoder from racing arbitrarily far ahead of the wire.
+//! - **Receives** are polled with [`Communicator::try_recv`] — never a
+//!   blocking `recv`, so one slow lane cannot stall every other
+//!   operation (the deadlock a naive one-op-at-a-time engine hits when
+//!   two ranks each post a receive before their sends). Posted receives
+//!   on the same lane complete in posted order. A receive that stays
+//!   unmatched past the transport's recv timeout completes with an
+//!   error.
+//! - **Idle waits** use the transport's activity stamp
+//!   ([`Communicator::activity_stamp`] captured *before* each poll
+//!   sweep), so an arrival that races the sweep wakes the engine
+//!   immediately instead of costing a full poll interval.
+//!
+//! Shutdown is part of the contract: dropping the engine (which happens
+//! when its owning [`crate::comm::CommContext`] drops) completes every
+//! outstanding request with an error and joins the thread — a gang torn
+//! down mid-exchange unblocks instead of hanging, and no thread leaks.
+
+use super::request::{CommRequest, Notifier, RequestState};
+use crate::comm::mailbox::RECV_TIMEOUT;
+use crate::comm::Communicator;
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Upper bound on one idle sleep while receives are posted: arrivals cut
+/// it short via the activity stamp; a racing `isend` waits at most this.
+const RECV_POLL: Duration = Duration::from_micros(200);
+
+/// Idle sleep when the engine has nothing posted at all (woken early by
+/// submissions and shutdown through the queue condvar).
+const IDLE_WAIT: Duration = Duration::from_millis(5);
+
+struct SendOp {
+    to: usize,
+    tag: u64,
+    data: Vec<u8>,
+    state: Arc<RequestState>,
+}
+
+struct RecvOp {
+    from: usize,
+    tag: u64,
+    posted: Instant,
+    state: Arc<RequestState>,
+}
+
+struct Queue {
+    sends: VecDeque<SendOp>,
+    /// Scanned front-to-back, so multiple receives on one `(from, tag)`
+    /// lane match arrivals in posted order.
+    recvs: Vec<RecvOp>,
+    /// Sends accepted but not yet completed (queued + in service) — the
+    /// backpressure counter `isend` blocks on.
+    pending_sends: usize,
+}
+
+struct Shared {
+    comm: Arc<dyn Communicator>,
+    queue: Mutex<Queue>,
+    /// Wakes the progress thread on submissions/shutdown and blocked
+    /// `isend` callers when send slots free up.
+    queue_cv: Condvar,
+    notifier: Arc<Notifier>,
+    shutdown: AtomicBool,
+    max_pending_sends: usize,
+}
+
+/// Per-rank nonblocking progress engine over a shared transport handle.
+/// See the module docs for the servicing rules; see
+/// [`crate::comm::CommContext::isend`] for the usual entry point.
+pub struct ProgressEngine {
+    shared: Arc<Shared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ProgressEngine {
+    /// Spawn the progress thread for `comm`, accepting at most
+    /// `max_pending_sends` incomplete sends before `isend` blocks the
+    /// submitter (clamped to ≥ 1).
+    pub fn new(comm: Arc<dyn Communicator>, max_pending_sends: usize) -> ProgressEngine {
+        let name = format!("cf-progress-{}", comm.rank());
+        let shared = Arc::new(Shared {
+            comm,
+            queue: Mutex::new(Queue {
+                sends: VecDeque::new(),
+                recvs: Vec::new(),
+                pending_sends: 0,
+            }),
+            queue_cv: Condvar::new(),
+            notifier: Notifier::new(),
+            shutdown: AtomicBool::new(false),
+            max_pending_sends: max_pending_sends.max(1),
+        });
+        let thread = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || {
+                    run(&shared);
+                    drain_all(&shared);
+                })
+                .expect("spawn comm progress thread")
+        };
+        ProgressEngine { shared, thread: Some(thread) }
+    }
+
+    /// The transport this engine progresses (rank / world-size queries).
+    pub fn comm(&self) -> &dyn Communicator {
+        self.shared.comm.as_ref()
+    }
+
+    /// Post a nonblocking send of `data` to rank `to` under `tag`.
+    /// Returns immediately unless the engine already holds
+    /// `max_pending_sends` incomplete sends, in which case the caller
+    /// blocks until a slot frees (bounded in-flight depth).
+    pub fn isend(&self, to: usize, tag: u64, data: Vec<u8>) -> Result<CommRequest> {
+        if to >= self.shared.comm.world_size() {
+            return Err(Error::comm(format!("isend to invalid rank {to}")));
+        }
+        let state = RequestState::new(self.shared.notifier.clone());
+        let mut q = self.shared.queue.lock().expect("engine queue poisoned");
+        while q.pending_sends >= self.shared.max_pending_sends {
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return Err(Error::comm("isend on a shut-down progress engine"));
+            }
+            let (guard, _) = self
+                .shared
+                .queue_cv
+                .wait_timeout(q, IDLE_WAIT)
+                .expect("engine queue poisoned");
+            q = guard;
+        }
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(Error::comm("isend on a shut-down progress engine"));
+        }
+        q.sends.push_back(SendOp { to, tag, data, state: state.clone() });
+        q.pending_sends += 1;
+        drop(q);
+        self.shared.queue_cv.notify_all();
+        Ok(CommRequest::new(state))
+    }
+
+    /// Post a nonblocking receive from rank `from` under `tag`. The
+    /// returned request completes with the message payload when a match
+    /// arrives (or with an error on timeout/shutdown).
+    pub fn irecv(&self, from: usize, tag: u64) -> Result<CommRequest> {
+        if from >= self.shared.comm.world_size() {
+            return Err(Error::comm(format!("irecv from invalid rank {from}")));
+        }
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(Error::comm("irecv on a shut-down progress engine"));
+        }
+        let state = RequestState::new(self.shared.notifier.clone());
+        let mut q = self.shared.queue.lock().expect("engine queue poisoned");
+        q.recvs.push(RecvOp { from, tag, posted: Instant::now(), state: state.clone() });
+        drop(q);
+        self.shared.queue_cv.notify_all();
+        Ok(CommRequest::new(state))
+    }
+}
+
+impl Drop for ProgressEngine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.queue_cv.notify_all();
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+        // Normally the thread drained on its way out; if it panicked
+        // mid-iteration this still unblocks every waiter.
+        drain_all(&self.shared);
+    }
+}
+
+/// The progress loop: service sends FIFO, poll receives, idle-wait on
+/// transport activity. Runs until shutdown.
+fn run(shared: &Shared) {
+    while !shared.shutdown.load(Ordering::Acquire) {
+        let mut made_progress = false;
+
+        // Sends: strict submission order, transport call made without
+        // holding the queue lock so submitters never wait on the wire.
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let op = {
+                let mut q = shared.queue.lock().expect("engine queue poisoned");
+                q.sends.pop_front()
+            };
+            let Some(op) = op else { break };
+            let result = shared.comm.send(op.to, op.tag, op.data);
+            op.state.complete(result.map(|()| None));
+            {
+                let mut q = shared.queue.lock().expect("engine queue poisoned");
+                q.pending_sends -= 1;
+            }
+            shared.queue_cv.notify_all();
+            made_progress = true;
+        }
+
+        // Receives: capture the activity stamp BEFORE the sweep so an
+        // arrival racing it cuts the idle wait short.
+        let stamp = shared.comm.activity_stamp();
+        {
+            let mut q = shared.queue.lock().expect("engine queue poisoned");
+            let mut i = 0;
+            while i < q.recvs.len() {
+                let (from, tag) = (q.recvs[i].from, q.recvs[i].tag);
+                match shared.comm.try_recv(from, tag) {
+                    Ok(Some(data)) => {
+                        let op = q.recvs.remove(i);
+                        op.state.complete(Ok(Some(data)));
+                        made_progress = true;
+                    }
+                    Ok(None) => {
+                        if q.recvs[i].posted.elapsed() >= RECV_TIMEOUT {
+                            let op = q.recvs.remove(i);
+                            op.state.complete(Err(Error::comm(format!(
+                                "irecv timeout waiting for rank {from} tag {tag}"
+                            ))));
+                            made_progress = true;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    Err(e) => {
+                        let op = q.recvs.remove(i);
+                        op.state.complete(Err(e));
+                        made_progress = true;
+                    }
+                }
+            }
+        }
+
+        if made_progress {
+            continue;
+        }
+
+        // Idle: new sends wake us through the queue condvar; arrivals
+        // through the transport stamp.
+        let (has_sends, has_recvs) = {
+            let q = shared.queue.lock().expect("engine queue poisoned");
+            (!q.sends.is_empty(), !q.recvs.is_empty())
+        };
+        if has_sends {
+            continue;
+        }
+        if has_recvs {
+            shared.comm.wait_activity(stamp, RECV_POLL);
+        } else {
+            let q = shared.queue.lock().expect("engine queue poisoned");
+            if q.sends.is_empty()
+                && q.recvs.is_empty()
+                && !shared.shutdown.load(Ordering::Acquire)
+            {
+                let _ = shared
+                    .queue_cv
+                    .wait_timeout(q, IDLE_WAIT)
+                    .expect("engine queue poisoned");
+            }
+        }
+    }
+}
+
+/// Complete every queued operation with a shutdown error (idempotent).
+fn drain_all(shared: &Shared) {
+    let (sends, recvs) = {
+        let mut q = shared.queue.lock().expect("engine queue poisoned");
+        q.pending_sends = 0;
+        (std::mem::take(&mut q.sends), std::mem::take(&mut q.recvs))
+    };
+    for op in sends {
+        op.state.complete(Err(Error::comm("progress engine shut down with send pending")));
+    }
+    for op in recvs {
+        op.state.complete(Err(Error::comm("progress engine shut down with recv pending")));
+    }
+    shared.queue_cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::memory::MemoryFabric;
+
+    fn engines(p: usize) -> Vec<ProgressEngine> {
+        MemoryFabric::create(p)
+            .into_iter()
+            .map(|c| ProgressEngine::new(Arc::new(c), 8))
+            .collect()
+    }
+
+    #[test]
+    fn isend_irecv_roundtrip() {
+        let mut es = engines(2);
+        let e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        let send = e0.isend(1, 7, vec![1, 2, 3]).unwrap();
+        let recv = e1.irecv(0, 7).unwrap();
+        assert_eq!(recv.wait().unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(send.wait().unwrap(), None, "sends resolve to an empty payload");
+    }
+
+    #[test]
+    fn same_lane_recvs_complete_in_posted_order() {
+        let mut es = engines(2);
+        let e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        let r1 = e1.irecv(0, 4).unwrap();
+        let r2 = e1.irecv(0, 4).unwrap();
+        e0.isend(1, 4, vec![1]).unwrap().wait().unwrap();
+        e0.isend(1, 4, vec![2]).unwrap().wait().unwrap();
+        assert_eq!(r1.wait().unwrap(), Some(vec![1]));
+        assert_eq!(r2.wait().unwrap(), Some(vec![2]));
+    }
+
+    #[test]
+    fn test_polls_and_wait_any_picks_the_completed_one() {
+        let mut es = engines(2);
+        let e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        let never = e1.irecv(0, 100).unwrap(); // nothing ever sent on 100
+        let soon = e1.irecv(0, 101).unwrap();
+        assert!(!never.test());
+        e0.isend(1, 101, vec![9]).unwrap();
+        let mut reqs = vec![never, soon];
+        let (idx, payload) = CommRequest::wait_any(&mut reqs).unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(payload, Some(vec![9]));
+        assert_eq!(reqs.len(), 1, "completed request is removed");
+    }
+
+    #[test]
+    fn invalid_ranks_rejected_at_submission() {
+        let es = engines(1);
+        assert!(es[0].isend(5, 0, vec![]).is_err());
+        assert!(es[0].irecv(5, 0).is_err());
+    }
+
+    #[test]
+    fn drop_completes_pending_requests_with_errors_promptly() {
+        let mut es = engines(2);
+        let _e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        let dangling = e0.irecv(1, 42).unwrap(); // rank 1 never sends
+        let t0 = Instant::now();
+        drop(e0);
+        assert!(t0.elapsed() < Duration::from_secs(5), "drop must not hang");
+        assert!(dangling.test(), "shutdown must complete the request");
+        assert!(dangling.wait().is_err(), "shutdown resolves pending recvs to errors");
+    }
+
+    #[test]
+    fn submissions_after_shutdown_error() {
+        let mut es = engines(2);
+        let _e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        e0.shared.shutdown.store(true, Ordering::Release);
+        assert!(e0.irecv(1, 1).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Nonblocking request subsystem over the [`crate::comm::Communicator`]
+//! trait — the layer that lets one rank keep the wire and the CPU busy
+//! at the same time (DESIGN.md §9).
+//!
+//! Every exchange in the blocking collectives is a synchronous step:
+//! `recv` parks the worker, so each rank serializes
+//! partition → send → recv → merge, the wire idles while the CPU
+//! partitions, and the CPU idles while frames are in flight. This module
+//! supplies the missing primitive:
+//!
+//! - [`ProgressEngine`] — a dedicated progress thread per rank (one per
+//!   [`crate::comm::CommContext`], spawned on first use) servicing a
+//!   bounded queue of operations against the shared transport handle.
+//! - [`ProgressEngine::isend`] / [`ProgressEngine::irecv`] — post an
+//!   operation, get a [`CommRequest`] back immediately.
+//! - [`CommRequest::wait`] / [`CommRequest::wait_any`] /
+//!   [`CommRequest::test`] — MPI-style completion: block for one, block
+//!   for the first of many, or poll.
+//!
+//! The overlapped streaming collectives
+//! ([`crate::comm::algorithms::all_to_all_overlapped`],
+//! [`crate::comm::algorithms::allgather_overlapped`]) drive this engine
+//! to double-buffer [`crate::table::FrameEncoder`] chunks: while chunk
+//! k's `CYF1` frames are on the wire, chunk k+1 is being encoded and
+//! received frames are decoded/spilled — with results bit-identical to
+//! the blocking streamed path, because the
+//! [`crate::store::SpillBuffer`] replays frames in `(source, seq)` order
+//! regardless of arrival interleaving.
+//!
+//! Lifecycle guarantees (tested in `tests/overlap_shuffle.rs`): requests
+//! are completed exactly once; dropping the engine — e.g. dropping a
+//! `CommContext` mid-exchange — completes every outstanding request with
+//! an error and joins the progress thread, so teardown never hangs and
+//! never leaks the thread.
+
+mod engine;
+mod request;
+
+pub use engine::ProgressEngine;
+pub use request::CommRequest;

@@ -1,0 +1,179 @@
+//! [`CommRequest`] — the completion handle of a nonblocking operation.
+//!
+//! A request is a one-shot slot the progress thread fills exactly once
+//! (`Ok(None)` for a finished send, `Ok(Some(bytes))` for a matched
+//! receive, `Err` on transport failure, timeout or engine shutdown).
+//! The worker side observes it with [`CommRequest::test`] (poll),
+//! [`CommRequest::wait`] (block for one) or [`CommRequest::wait_any`]
+//! (block for the first of many). All requests of one
+//! [`super::ProgressEngine`] share a single completion notifier, which is
+//! what makes `wait_any` a real blocking wait instead of a poll loop.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// What a completed operation resolved to: `None` payload for sends,
+/// `Some(bytes)` for receives.
+pub(crate) type Completion = Result<Option<Vec<u8>>>;
+
+/// Engine-wide completion signal shared by every request of one engine.
+pub(crate) struct Notifier {
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    pub(crate) fn new() -> Arc<Notifier> {
+        Arc::new(Notifier { lock: Mutex::new(()), cv: Condvar::new() })
+    }
+}
+
+/// Shared state of one in-flight operation: a done flag plus the result
+/// slot. The progress thread completes it; the worker consumes it.
+pub(crate) struct RequestState {
+    done: AtomicBool,
+    slot: Mutex<Option<Completion>>,
+    notifier: Arc<Notifier>,
+}
+
+impl RequestState {
+    pub(crate) fn new(notifier: Arc<Notifier>) -> Arc<RequestState> {
+        Arc::new(RequestState {
+            done: AtomicBool::new(false),
+            slot: Mutex::new(None),
+            notifier,
+        })
+    }
+
+    /// Fill the slot and wake every waiter of this engine. Called exactly
+    /// once per request, by the progress thread (or the engine teardown).
+    pub(crate) fn complete(&self, result: Completion) {
+        *self.slot.lock().expect("request slot poisoned") = Some(result);
+        // done is set BEFORE taking the notifier lock: a waiter that
+        // observed !done under that lock is guaranteed to reach cv.wait
+        // before this notify_all can run, so no wakeup is lost.
+        self.done.store(true, Ordering::Release);
+        let _guard = self.notifier.lock.lock().expect("notifier poisoned");
+        self.notifier.cv.notify_all();
+    }
+
+    fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    fn take(&self) -> Completion {
+        self.slot
+            .lock()
+            .expect("request slot poisoned")
+            .take()
+            .expect("completed request must hold a result")
+    }
+}
+
+/// Handle to one nonblocking send/receive posted on a
+/// [`super::ProgressEngine`] (the subsystem's `MPI_Request` analogue).
+///
+/// Dropping a handle does **not** cancel the underlying operation: the
+/// engine still performs it (a matched receive's payload is then
+/// discarded). Requests are completed with an error when their engine
+/// shuts down, so a drop of the owning [`crate::comm::CommContext`]
+/// mid-exchange unblocks every waiter instead of hanging it.
+pub struct CommRequest {
+    state: Arc<RequestState>,
+}
+
+impl CommRequest {
+    pub(crate) fn new(state: Arc<RequestState>) -> CommRequest {
+        CommRequest { state }
+    }
+
+    /// Non-blocking completion check (MPI `Test`): true once the
+    /// operation has finished — successfully or not. The result itself
+    /// is consumed by [`CommRequest::wait`].
+    pub fn test(&self) -> bool {
+        self.state.is_done()
+    }
+
+    /// Block until the operation completes and return its result:
+    /// `Ok(None)` for a send, `Ok(Some(bytes))` for a receive.
+    pub fn wait(self) -> Result<Option<Vec<u8>>> {
+        loop {
+            if self.state.is_done() {
+                return self.state.take();
+            }
+            let guard = self.state.notifier.lock.lock().expect("notifier poisoned");
+            if self.state.is_done() {
+                continue;
+            }
+            // Timed only as a belt: the completion protocol above cannot
+            // lose the wakeup.
+            let _ = self
+                .state
+                .notifier
+                .cv
+                .wait_timeout(guard, Duration::from_millis(100))
+                .expect("notifier poisoned");
+        }
+    }
+
+    /// Block until *any* of `reqs` completes; removes it from the vec and
+    /// returns `(its former index, its payload)`. All requests must come
+    /// from the same engine (they then share one notifier; mixed sets
+    /// still complete correctly via the bounded fallback sleep, just with
+    /// polling latency).
+    pub fn wait_any(reqs: &mut Vec<CommRequest>) -> Result<(usize, Option<Vec<u8>>)> {
+        if reqs.is_empty() {
+            return Err(Error::invalid("wait_any: empty request set"));
+        }
+        loop {
+            if let Some(i) = reqs.iter().position(|r| r.test()) {
+                let req = reqs.remove(i);
+                return req.wait().map(|payload| (i, payload));
+            }
+            let refs: Vec<&CommRequest> = reqs.iter().collect();
+            Self::block_until_any(&refs);
+        }
+    }
+
+    /// Block until at least one of the referenced requests is complete
+    /// (none is consumed — re-test afterwards). The overlapped
+    /// collectives use this to park the worker only while *nothing* on
+    /// the wire has progressed.
+    pub fn wait_any_ref(reqs: &[&CommRequest]) -> Result<()> {
+        if reqs.is_empty() {
+            return Err(Error::invalid("wait_any_ref: empty request set"));
+        }
+        if !reqs.iter().any(|r| r.test()) {
+            Self::block_until_any(reqs);
+        }
+        Ok(())
+    }
+
+    fn block_until_any(reqs: &[&CommRequest]) {
+        let notifier = reqs[0].state.notifier.clone();
+        let same_engine = reqs
+            .iter()
+            .all(|r| Arc::ptr_eq(&r.state.notifier, &notifier));
+        loop {
+            if reqs.iter().any(|r| r.test()) {
+                return;
+            }
+            if same_engine {
+                let guard = notifier.lock.lock().expect("notifier poisoned");
+                if reqs.iter().any(|r| r.test()) {
+                    return;
+                }
+                let _ = notifier
+                    .cv
+                    .wait_timeout(guard, Duration::from_millis(100))
+                    .expect("notifier poisoned");
+            } else {
+                // Requests from different engines share no notifier; fall
+                // back to a bounded poll so completion is still observed.
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+}

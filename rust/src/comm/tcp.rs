@@ -48,6 +48,14 @@ struct Shared {
     shutdown: AtomicBool,
 }
 
+/// One cached outbound socket, shared by every sender thread.
+type SharedStream = Arc<Mutex<TcpStream>>;
+
+/// Per-peer connection slot: the slot's own lock serializes the
+/// first-connect so exactly one socket per peer ever exists, without
+/// holding the whole outbound map hostage during rendezvous.
+type PeerSlot = Arc<Mutex<Option<SharedStream>>>;
+
 /// Per-rank TCP communicator.
 pub struct TcpComm {
     rank: usize,
@@ -55,7 +63,7 @@ pub struct TcpComm {
     gang: String,
     kv: Arc<dyn KvStore>,
     shared: Arc<Shared>,
-    outbound: Mutex<HashMap<usize, Arc<Mutex<TcpStream>>>>,
+    outbound: Mutex<HashMap<usize, PeerSlot>>,
     bytes_sent: AtomicU64,
     barrier_epoch: AtomicU64,
     acceptor: Option<std::thread::JoinHandle<()>>,
@@ -97,8 +105,21 @@ impl TcpComm {
         })
     }
 
-    fn stream_to(&self, to: usize) -> Result<Arc<Mutex<TcpStream>>> {
-        if let Some(s) = self.outbound.lock().expect("outbound poisoned").get(&to) {
+    fn stream_to(&self, to: usize) -> Result<SharedStream> {
+        // Concurrent senders (the worker and the progress thread): a
+        // check-then-connect race on the bare map would open TWO sockets
+        // to the same peer, and the per-`(source, tag)` FIFO guarantee
+        // the streaming exchanges rely on only holds within one socket.
+        // The map lock is held just long enough to clone the per-peer
+        // slot; the slot's own lock then serializes the first connect —
+        // one connection per peer, ever, while sends to other
+        // (already-connected) peers proceed during a slow rendezvous.
+        let slot: PeerSlot = {
+            let mut outbound = self.outbound.lock().expect("outbound poisoned");
+            outbound.entry(to).or_default().clone()
+        };
+        let mut slot = slot.lock().expect("peer slot poisoned");
+        if let Some(s) = slot.as_ref() {
             return Ok(s.clone());
         }
         // Resolve the peer address through the rendezvous store, connect,
@@ -113,10 +134,7 @@ impl TcpComm {
         stream.write_all(&HANDSHAKE_MAGIC.to_le_bytes())?;
         stream.write_all(&(self.rank as u64).to_le_bytes())?;
         let arc = Arc::new(Mutex::new(stream));
-        self.outbound
-            .lock()
-            .expect("outbound poisoned")
-            .insert(to, arc.clone());
+        *slot = Some(arc.clone());
         Ok(arc)
     }
 }
@@ -199,6 +217,10 @@ impl Communicator for TcpComm {
         frame.extend_from_slice(&(data.len() as u64).to_le_bytes());
         frame.extend_from_slice(&data);
         s.write_all(&frame)?;
+        // Counted while the stream lock is held: concurrent senders (the
+        // worker and the progress thread) then observe a `bytes_sent`
+        // that is consistent with the bytes actually on the socket, not
+        // one that can lag a racing writer's frame.
         self.bytes_sent
             .fetch_add(frame.len() as u64, Ordering::Relaxed);
         Ok(())
@@ -209,6 +231,21 @@ impl Communicator for TcpComm {
             return Err(Error::comm(format!("recv from invalid rank {from}")));
         }
         self.shared.mailbox.pop(from, tag)
+    }
+
+    fn try_recv(&self, from: usize, tag: u64) -> Result<Option<Vec<u8>>> {
+        if from >= self.world_size {
+            return Err(Error::comm(format!("recv from invalid rank {from}")));
+        }
+        Ok(self.shared.mailbox.try_pop(from, tag))
+    }
+
+    fn activity_stamp(&self) -> u64 {
+        self.shared.mailbox.stamp()
+    }
+
+    fn wait_activity(&self, stamp: u64, timeout: Duration) {
+        self.shared.mailbox.wait_newer(stamp, timeout);
     }
 
     fn barrier(&self) -> Result<()> {
@@ -295,6 +332,37 @@ mod tests {
         });
         c0.send(1, 1, data).unwrap();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_senders_keep_per_lane_fifo() {
+        // Two threads race sends to the same peer (the worker +
+        // progress-thread shape). The first sends race stream_to: without
+        // one-connection-per-peer, a loser thread's later frames land on
+        // a different socket than its first and the (source, tag) FIFO
+        // breaks across the two reader threads.
+        let mut comms = gang(2, "t_conc");
+        let c1 = comms.pop().unwrap();
+        let c0 = Arc::new(comms.pop().unwrap());
+        let n = 200u64;
+        let spawn = |c: Arc<TcpComm>, tag: u64| {
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    c.send(1, tag, i.to_le_bytes().to_vec()).unwrap();
+                }
+            })
+        };
+        let ha = spawn(c0.clone(), 1);
+        let hb = spawn(c0.clone(), 2);
+        for tag in [1, 2] {
+            for i in 0..n {
+                let m = c1.recv(0, tag).unwrap();
+                assert_eq!(m, i.to_le_bytes().to_vec(), "lane (0,{tag}) reordered");
+            }
+        }
+        ha.join().unwrap();
+        hb.join().unwrap();
+        assert_eq!(c0.bytes_sent(), 2 * n * (16 + 8));
     }
 
     #[test]

@@ -56,10 +56,41 @@ impl Default for SkewConfig {
     }
 }
 
+/// Knobs of the overlapped (nonblocking, double-buffered) exchange path
+/// (see [`crate::comm::nb`] and DESIGN.md §9). When enabled, the
+/// streaming collectives ([`crate::comm::CommContext::shuffle_streamed`]
+/// / `allgather_streamed`) route through the per-context progress engine
+/// so frame encoding, wire transfer and decode/spill overlap; results
+/// stay bit-identical to the blocking streamed path.
+///
+/// Off by default: the overlap spends one extra thread per rank and only
+/// pays off when exchanges are large enough (multiple frames per peer)
+/// for pipelining to matter.
+///
+/// Environment variables: `CYLONFLOW_OVERLAP` (`1`/`on`/`true` enables),
+/// `CYLONFLOW_INFLIGHT_CHUNKS` (outstanding frames per peer, ≥ 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapConfig {
+    /// Master switch for the overlapped exchange path.
+    pub enabled: bool,
+    /// Bound on outstanding (submitted, incomplete) send frames per
+    /// destination — the double-buffer depth. `1` still overlaps (chunk
+    /// k+1 encodes while chunk k is in flight); larger values deepen the
+    /// pipeline at the cost of more frames buffered in the engine.
+    pub inflight_chunks: usize,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        OverlapConfig { enabled: false, inflight_chunks: 2 }
+    }
+}
+
 /// Knobs of the streaming exchange path (chunked wire frames + receiver
 /// spill-to-disk; see DESIGN.md §7) plus the skew-aware repartitioning
-/// switchboard (DESIGN.md §8). Held by [`crate::comm::CommContext`] and
-/// threaded there from [`Config`] by the executor.
+/// switchboard (DESIGN.md §8) and the overlapped-exchange switchboard
+/// (DESIGN.md §9). Held by [`crate::comm::CommContext`] and threaded
+/// there from [`Config`] by the executor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExchangeConfig {
     /// Target serialized bytes per wire frame (row-granular; a single
@@ -72,6 +103,8 @@ pub struct ExchangeConfig {
     pub spill_dir: String,
     /// Skew-aware repartitioning knobs (hot-key detection, salting).
     pub skew: SkewConfig,
+    /// Overlapped (nonblocking, double-buffered) exchange knobs.
+    pub overlap: OverlapConfig,
 }
 
 impl Default for ExchangeConfig {
@@ -81,6 +114,7 @@ impl Default for ExchangeConfig {
             spill_budget_bytes: 256 << 20, // 256 MiB per collective
             spill_dir: std::env::temp_dir().to_string_lossy().into_owned(),
             skew: SkewConfig::default(),
+            overlap: OverlapConfig::default(),
         }
     }
 }
@@ -114,18 +148,27 @@ impl Default for Config {
 
 impl Config {
     /// Config from environment variables:
-    /// `CYLONFLOW_BACKEND` (memory|tcp|tcp-ucc), `CYLONFLOW_HASH`
+    /// `CYLONFLOW_BACKEND` (memory|tcp|tcp-ucc; `CYLONFLOW_COMM` is an
+    /// accepted alias), `CYLONFLOW_HASH`
     /// (pjrt|native|auto), `CYLONFLOW_ARTIFACTS`,
     /// `CYLONFLOW_FRAME_BYTES` / `CYLONFLOW_SPILL_BUDGET` (byte counts,
     /// optional `k`/`m`/`g` suffix), `CYLONFLOW_SPILL_DIR`,
     /// `CYLONFLOW_SKEW` (`1`/`on`/`true` enables skew-aware
     /// repartitioning), `CYLONFLOW_HOT_KEY_THRESHOLD` (float multiple of
-    /// the fair share `1/p`), `CYLONFLOW_SKEW_SAMPLE` (rows per rank).
+    /// the fair share `1/p`), `CYLONFLOW_SKEW_SAMPLE` (rows per rank),
+    /// `CYLONFLOW_OVERLAP` (`1`/`on`/`true` enables the overlapped
+    /// exchange path), `CYLONFLOW_INFLIGHT_CHUNKS` (frames in flight per
+    /// peer, ≥ 1).
     pub fn from_env() -> Config {
         let mut c = Config::default();
-        if let Ok(b) = std::env::var("CYLONFLOW_BACKEND") {
-            if let Some(parsed) = CommBackend::parse(&b) {
-                c.backend = parsed;
+        // CYLONFLOW_BACKEND is canonical; CYLONFLOW_COMM is the alias the
+        // CI matrix and older scripts use.
+        for var in ["CYLONFLOW_BACKEND", "CYLONFLOW_COMM"] {
+            if let Ok(b) = std::env::var(var) {
+                if let Some(parsed) = CommBackend::parse(&b) {
+                    c.backend = parsed;
+                    break;
+                }
             }
         }
         if let Ok(h) = std::env::var("CYLONFLOW_HASH") {
@@ -160,6 +203,14 @@ impl Config {
         if let Ok(n) = std::env::var("CYLONFLOW_SKEW_SAMPLE") {
             if let Ok(v) = n.trim().parse::<usize>() {
                 c.exchange.skew.sample_per_rank = v.max(1);
+            }
+        }
+        if let Ok(s) = std::env::var("CYLONFLOW_OVERLAP") {
+            c.exchange.overlap.enabled = parse_switch(&s);
+        }
+        if let Ok(n) = std::env::var("CYLONFLOW_INFLIGHT_CHUNKS") {
+            if let Ok(v) = n.trim().parse::<usize>() {
+                c.exchange.overlap.inflight_chunks = v.max(1);
             }
         }
         c
@@ -216,6 +267,8 @@ mod tests {
         assert!(!c.exchange.skew.enabled, "skew handling must be opt-in");
         assert!((c.exchange.skew.hot_key_threshold - 0.5).abs() < 1e-12);
         assert_eq!(c.exchange.skew.sample_per_rank, 64);
+        assert!(!c.exchange.overlap.enabled, "overlap must be opt-in");
+        assert_eq!(c.exchange.overlap.inflight_chunks, 2);
     }
 
     #[test]

@@ -79,6 +79,15 @@ impl CylonEnv {
         self.comm.peek_spill_stats()
     }
 
+    /// Non-destructive snapshot of this actor's accumulated
+    /// communication/computation overlap counters (chunks and time the
+    /// nonblocking exchanges hid under compute; all zero unless
+    /// `CYLONFLOW_OVERLAP` is on). Monotonic; the plan executor diffs
+    /// successive snapshots to attribute overlap to stages.
+    pub fn overlap_snapshot(&self) -> crate::metrics::OverlapStats {
+        self.comm.peek_overlap_stats()
+    }
+
     /// Fold a skew-aware exchange's counters into this actor's running
     /// [`SkewStats`] (called by the [`crate::dist::skew`] operators).
     /// Counters accumulate; the balance ratios keep the latest

@@ -24,7 +24,9 @@
 //!   hash partition.
 //! - [`comm`] — the paper's *modularized communicator*: a [`comm::Communicator`]
 //!   trait with in-process (`memory`, MPI-analog) and TCP (`tcp`,
-//!   Gloo/UCX-analog) backends and selectable collective algorithms.
+//!   Gloo/UCX-analog) backends, selectable collective algorithms, and a
+//!   nonblocking request layer (`comm::nb`) whose progress engine drives
+//!   the overlapped double-buffered exchanges (`CYLONFLOW_OVERLAP`).
 //! - [`executor`] — the paper's *stateful pseudo-BSP environment*: clusters,
 //!   placement groups (gang scheduling), `CylonExecutor` / `CylonEnv`.
 //! - [`dist`] — distributed DDF operators composed from `ops` × `comm`:

@@ -128,6 +128,57 @@ impl SpillStats {
     }
 }
 
+/// Overlapped-exchange counters (see [`crate::comm::nb`] and
+/// [`crate::comm::algorithms::all_to_all_overlapped`]): how much of an
+/// exchange's compute ran while wire requests were in flight — the
+/// communication/computation overlap the double-buffered path exists to
+/// create. Like [`SpillStats`] these accumulate monotonically per worker
+/// and are attributed to stages by diffing snapshots. All zero when the
+/// overlap path is disabled (the default).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapStats {
+    /// Frames encoded or delivered to the spill sink while the wire was
+    /// demonstrably active — a submitted send not yet reaped, or an
+    /// arrived frame awaiting decode. These are the chunks whose compute
+    /// the blocking path would have serialized against the wire.
+    /// (A merely-posted, unmatched receive does not count, so the number
+    /// stays zero when there is genuinely nothing to overlap.)
+    pub chunks_overlapped: u64,
+    /// Nanoseconds of encode/decode/spill work performed while the wire
+    /// was busy (same definition as `chunks_overlapped`): wire-idle time
+    /// the overlap hid under compute.
+    pub hidden_nanos: u64,
+    /// Nanoseconds spent submitting, reaping and *blocking on* wire
+    /// requests: compute-idle time the overlap could not hide. With
+    /// perfect overlap this approaches the bare submission overhead.
+    pub wire_wait_nanos: u64,
+}
+
+impl OverlapStats {
+    /// True when no overlapped exchange ran.
+    pub fn is_zero(&self) -> bool {
+        *self == OverlapStats::default()
+    }
+
+    /// Sum another snapshot into this one.
+    pub fn merge(&mut self, other: &OverlapStats) {
+        self.chunks_overlapped += other.chunks_overlapped;
+        self.hidden_nanos += other.hidden_nanos;
+        self.wire_wait_nanos += other.wire_wait_nanos;
+    }
+
+    /// Per-counter `self − earlier`, clamped at zero — attributes a
+    /// monotonically accumulating snapshot to one stage, exactly like
+    /// [`SpillStats::saturating_diff`].
+    pub fn saturating_diff(&self, earlier: &OverlapStats) -> OverlapStats {
+        OverlapStats {
+            chunks_overlapped: self.chunks_overlapped.saturating_sub(earlier.chunks_overlapped),
+            hidden_nanos: self.hidden_nanos.saturating_sub(earlier.hidden_nanos),
+            wire_wait_nanos: self.wire_wait_nanos.saturating_sub(earlier.wire_wait_nanos),
+        }
+    }
+}
+
 /// Skew-aware repartitioning counters (see [`crate::dist::skew`]): what
 /// the hot-key detector found and how much the split-assignment plan
 /// moved. Like [`SpillStats`] these accumulate monotonically per worker
@@ -218,6 +269,9 @@ pub struct StageTiming {
     /// Hot keys / rerouted rows the skew subsystem handled in this stage
     /// (zero when skew handling is disabled or found nothing).
     pub skew: SkewStats,
+    /// Communication/computation overlap this stage's exchanges achieved
+    /// (zero when the overlap path is disabled, the default).
+    pub overlap: OverlapStats,
 }
 
 /// Aggregated comm/compute breakdown across a gang of workers.
@@ -333,6 +387,26 @@ mod tests {
         assert_eq!(
             a.saturating_diff(&earlier),
             SpillStats { spilled_bytes: 50, spill_count: 1 }
+        );
+        // clamped, never negative
+        assert!(earlier.saturating_diff(&a).is_zero());
+    }
+
+    #[test]
+    fn overlap_stats_merge_and_diff() {
+        let mut a = OverlapStats::default();
+        assert!(a.is_zero());
+        a.merge(&OverlapStats { chunks_overlapped: 4, hidden_nanos: 900, wire_wait_nanos: 100 });
+        a.merge(&OverlapStats { chunks_overlapped: 1, hidden_nanos: 100, wire_wait_nanos: 50 });
+        assert_eq!(
+            a,
+            OverlapStats { chunks_overlapped: 5, hidden_nanos: 1000, wire_wait_nanos: 150 }
+        );
+        let earlier =
+            OverlapStats { chunks_overlapped: 4, hidden_nanos: 900, wire_wait_nanos: 100 };
+        assert_eq!(
+            a.saturating_diff(&earlier),
+            OverlapStats { chunks_overlapped: 1, hidden_nanos: 100, wire_wait_nanos: 50 }
         );
         // clamped, never negative
         assert!(earlier.saturating_diff(&a).is_zero());

@@ -7,7 +7,7 @@ use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
 use crate::dist;
 use crate::error::Result;
 use crate::executor::CylonEnv;
-use crate::metrics::{Phase, PhaseTimers, SkewStats, SpillStats, StageTiming};
+use crate::metrics::{OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats, StageTiming};
 use crate::ops;
 use crate::table::Table;
 use std::time::Duration;
@@ -63,10 +63,21 @@ impl PlanReport {
         s
     }
 
+    /// Communication/computation overlap summed across stages (zero when
+    /// the overlapped exchange path is disabled, the default).
+    pub fn overlap(&self) -> OverlapStats {
+        let mut s = OverlapStats::default();
+        for st in &self.stages {
+            s.merge(&st.overlap);
+        }
+        s
+    }
+
     /// One-line per-stage report:
     /// `join[compute=… aux=… comm=…] groupby[…] …` (stages that spilled
     /// append `spill=…B/…f`; stages that handled skew append
-    /// `skew=…keys/…rows …→… max/mean`).
+    /// `skew=…keys/…rows …→… max/mean`; stages whose exchanges
+    /// overlapped append `overlap=…ch hidden=…ms`).
     pub fn report(&self) -> String {
         self.stages
             .iter()
@@ -87,8 +98,17 @@ impl PlanReport {
                         s.skew.ratio_after_milli as f64 / 1000.0,
                     )
                 };
+                let overlap = if s.overlap.is_zero() {
+                    String::new()
+                } else {
+                    format!(
+                        " overlap={}ch hidden={:.1}ms",
+                        s.overlap.chunks_overlapped,
+                        s.overlap.hidden_nanos as f64 / 1e6,
+                    )
+                };
                 format!(
-                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}{skew}]",
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}{skew}{overlap}]",
                     s.name,
                     s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
                     s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
@@ -107,6 +127,7 @@ struct Mark {
     timers: PhaseTimers,
     spill: SpillStats,
     skew: SkewStats,
+    overlap: OverlapStats,
 }
 
 impl Mark {
@@ -115,6 +136,7 @@ impl Mark {
             timers: env.metrics_snapshot(),
             spill: env.spill_snapshot(),
             skew: env.skew_snapshot(),
+            overlap: env.overlap_snapshot(),
         }
     }
 }
@@ -214,6 +236,7 @@ fn eval(
         timers: now.timers.saturating_diff(&mark.timers),
         spill: now.spill.saturating_diff(&mark.spill),
         skew: now.skew.saturating_diff(&mark.skew),
+        overlap: now.overlap.saturating_diff(&mark.overlap),
     });
     *mark = now;
     Ok(out)

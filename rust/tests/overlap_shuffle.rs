@@ -1,0 +1,219 @@
+//! Overlapped-exchange tests (DESIGN.md §9): the nonblocking
+//! double-buffered shuffle/allgather must be byte-identical to the
+//! blocking streamed path for arbitrary row splits, world sizes,
+//! in-flight depths and spill budgets (overlap × spill composed); the
+//! distributed operators must inherit the path transparently; and
+//! tearing a `CommContext` down mid-exchange must neither hang nor leak
+//! the progress thread.
+
+use cylonflow::column::Column;
+use cylonflow::comm::{AlgoSet, CommContext, MemoryFabric};
+use cylonflow::config::{Config, ExchangeConfig, OverlapConfig};
+use cylonflow::datagen;
+use cylonflow::dist;
+use cylonflow::executor::{Cluster, CylonExecutor};
+use cylonflow::ops::{AggFun, AggSpec, JoinOptions, SortOptions};
+use cylonflow::proptest_lite::{run_prop, Gen};
+use cylonflow::table::{table_to_bytes, Table};
+use std::path::{Path, PathBuf};
+
+fn test_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cf-overlap-it-{name}-{}", std::process::id()))
+}
+
+fn exchange(budget: usize, frame_bytes: usize, inflight: usize, dir: &Path) -> ExchangeConfig {
+    ExchangeConfig {
+        frame_bytes,
+        spill_budget_bytes: budget,
+        spill_dir: dir.to_string_lossy().into_owned(),
+        skew: Default::default(),
+        overlap: OverlapConfig { enabled: true, inflight_chunks: inflight },
+    }
+}
+
+/// Gang of overlap-enabled CommContexts over an in-process fabric.
+fn contexts(p: usize, ex: &ExchangeConfig) -> Vec<CommContext> {
+    MemoryFabric::create(p)
+        .into_iter()
+        .map(|c| CommContext::with_exchange(Box::new(c), AlgoSet::simple(), ex.clone()))
+        .collect()
+}
+
+/// Random table whose rows split arbitrarily into `p` destination parts.
+fn random_parts(g: &mut Gen, p: usize) -> Vec<Table> {
+    let n = g.usize_in(0, 300);
+    let keys: Vec<i64> = (0..n).map(|_| g.i64_in(-50, 50)).collect();
+    let strs: Vec<String> = (0..n).map(|_| g.string(8)).collect();
+    let t = Table::from_columns(vec![
+        ("k", Column::from_i64(keys)),
+        ("s", Column::from_strings(&strs)),
+    ])
+    .unwrap();
+    let mut cuts: Vec<usize> = (0..p - 1).map(|_| g.usize_in(0, n + 1)).collect();
+    cuts.sort_unstable();
+    let mut parts = Vec::with_capacity(p);
+    let mut start = 0;
+    for &c in &cuts {
+        parts.push(t.slice(start, c - start));
+        start = c;
+    }
+    parts.push(t.slice(start, n - start));
+    parts
+}
+
+#[test]
+fn prop_overlapped_shuffle_and_allgather_are_byte_identical() {
+    run_prop("overlapped exchange ≡ blocking exchange", 20, |g| {
+        let p = g.usize_in(1, 6);
+        let inflight = [1, 2, 4][g.usize_in(0, 3)];
+        // half the cases run with a zero budget so every received frame
+        // spills: overlap and spill composed
+        let budget = if g.bool(0.5) { 0 } else { 2 << 10 };
+        let dir = test_dir("prop");
+        let ex = exchange(budget, 256, inflight, &dir);
+        let per_rank: Vec<Vec<Table>> = (0..p).map(|_| random_parts(g, p)).collect();
+        let handles: Vec<_> = contexts(p, &ex)
+            .into_iter()
+            .zip(per_rank)
+            .map(|(ctx, parts)| {
+                std::thread::spawn(move || {
+                    // the materializing shuffle is the reference
+                    // semantics; shuffle_streamed routes through the
+                    // overlapped path under this config
+                    let reference = ctx.shuffle(parts.clone()).unwrap();
+                    let overlapped = ctx.shuffle_streamed(parts.clone()).unwrap();
+                    let ag_ref = ctx.allgather(&parts[0]).unwrap();
+                    let ag_over = ctx.allgather_streamed(&parts[0]).unwrap();
+                    (reference, overlapped, ag_ref, ag_over)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (reference, overlapped, ag_ref, ag_over) = h.join().unwrap();
+            assert_eq!(
+                table_to_bytes(&reference),
+                table_to_bytes(&overlapped),
+                "overlapped shuffle diverged from the blocking path"
+            );
+            assert_eq!(
+                table_to_bytes(&ag_ref),
+                table_to_bytes(&ag_over),
+                "overlapped allgather diverged from the blocking path"
+            );
+        }
+    });
+}
+
+#[test]
+fn teardown_mid_exchange_neither_hangs_nor_leaks() {
+    // A posted receive that will never match: dropping the context must
+    // shut the progress engine down, complete the request with an error
+    // and join the thread — promptly.
+    let mut ctxs = contexts(2, &exchange(1 << 20, 256, 2, &test_dir("teardown")));
+    let _peer = ctxs.pop().unwrap(); // never sends
+    let ctx = ctxs.pop().unwrap();
+    let dangling = ctx.irecv(1, 7).unwrap();
+    let sent = ctx.isend(1, 8, vec![1, 2, 3]).unwrap();
+    let t0 = std::time::Instant::now();
+    drop(ctx);
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "dropping a CommContext mid-exchange must not hang"
+    );
+    assert!(dangling.test(), "shutdown must complete outstanding requests");
+    assert!(dangling.wait().is_err(), "an unmatched recv resolves to an error");
+    // the send may have completed before shutdown; either way it resolved
+    let _ = sent.wait();
+}
+
+fn overlap_cluster(p: usize, budget: usize, inflight: usize, dir: &Path) -> Cluster {
+    let cfg = Config { exchange: exchange(budget, 512, inflight, dir), ..Config::default() };
+    Cluster::with_config(p, cfg).unwrap()
+}
+
+fn strict_cluster(p: usize) -> Cluster {
+    Cluster::with_config(p, Config::default()).unwrap()
+}
+
+/// Run join→groupby→sort on a gang and return each rank's result bytes.
+fn run_ops(cluster: &Cluster, p: usize) -> Vec<(Vec<u8>, Vec<u8>, Vec<u8>)> {
+    let exec = CylonExecutor::new(cluster, p).unwrap();
+    exec.run(|env| {
+        let l = datagen::partition_for_rank(71, 3000, 0.4, env.rank(), env.world_size());
+        let r = datagen::partition_for_rank(72, 3000, 0.4, env.rank(), env.world_size());
+        let j = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+        let g = dist::groupby(
+            &l,
+            &[0],
+            &[AggSpec::new(1, AggFun::Sum)],
+            dist::GroupbyStrategy::ShuffleFirst,
+            env,
+        )?;
+        let s = dist::sort(&l, &SortOptions::by(0), env)?;
+        Ok((table_to_bytes(&j), table_to_bytes(&g), table_to_bytes(&s)))
+    })
+    .unwrap()
+    .wait()
+    .unwrap()
+}
+
+#[test]
+fn dist_operators_inherit_overlap_and_match_strict_results() {
+    let p = 3;
+    let dir = test_dir("dist");
+    // tiny budget: overlap and spill engage together under the operators
+    let overlapped = run_ops(&overlap_cluster(p, 1 << 10, 2, &dir), p);
+    let strict = run_ops(&strict_cluster(p), p);
+    assert_eq!(overlapped, strict, "operators must be byte-identical under overlap");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn overlap_stats_engage_and_reach_stage_reports() {
+    let p = 4;
+    let dir = test_dir("stats");
+    let cluster = overlap_cluster(p, 1 << 20, 2, &dir);
+    let exec = CylonExecutor::new(&cluster, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let l = datagen::partition_for_rank(81, 4000, 0.5, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(82, 4000, 0.5, env.rank(), env.world_size());
+            let rep = dist::pipeline(l, r, 1.0, env)?;
+            Ok((rep, env.overlap_snapshot()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (rep, snapshot) in &out {
+        assert!(
+            snapshot.chunks_overlapped > 0,
+            "multi-frame exchanges must overlap chunks"
+        );
+        assert!(snapshot.wire_wait_nanos > 0);
+        let total = rep.overlap();
+        assert!(total.chunks_overlapped > 0, "PlanReport must aggregate overlap");
+        // the join stage always shuffles both sides here
+        let join = rep.stages.iter().find(|s| s.name == "join").unwrap();
+        assert!(!join.overlap.is_zero(), "join stage should carry its overlap delta");
+        assert!(rep.report().contains("overlap="), "report must surface overlap");
+    }
+}
+
+#[test]
+fn default_off_leaves_overlap_stats_zero() {
+    let p = 2;
+    let cluster = strict_cluster(p);
+    let exec = CylonExecutor::new(&cluster, p).unwrap();
+    let out = exec
+        .run(|env| {
+            let t = datagen::partition_for_rank(91, 1000, 0.5, env.rank(), env.world_size());
+            dist::shuffle_by_key(&t, &[0], env)?;
+            Ok(env.overlap_snapshot())
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    for snapshot in out {
+        assert!(snapshot.is_zero(), "default-off behavior must be unchanged");
+    }
+}

@@ -26,6 +26,7 @@ fn exchange(budget: usize, frame_bytes: usize, dir: &Path) -> ExchangeConfig {
         spill_budget_bytes: budget,
         spill_dir: dir.to_string_lossy().into_owned(),
         skew: Default::default(),
+        overlap: Default::default(),
     }
 }
 
