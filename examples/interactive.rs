@@ -120,6 +120,11 @@ fn main() -> Result<()> {
             Err(e) => println!("error: {e}"),
         }
     }
+    // Exit report: one unified metrics line for the whole session
+    // (rank 0's view — phases, spill, skew, overlap, counters).
+    if let Some(snap) = exec.run(|env| Ok(env.snapshot()))?.wait()?.into_iter().next() {
+        println!("{}", snap.summary());
+    }
     println!("bye");
     Ok(())
 }

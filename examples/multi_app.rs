@@ -56,5 +56,11 @@ fn main() -> Result<()> {
     println!("joined training table: {joined} rows");
     assert_eq!(pre_rows, aux_rows, "store must hand over every row");
     println!("\nmulti-app store handoff OK");
+    // Exit report: one unified metrics line per application gang.
+    for (name, app) in [("preprocess", &preprocess), ("main_app", &main_app)] {
+        if let Some(snap) = app.run(|env| Ok(env.snapshot()))?.wait()?.into_iter().next() {
+            println!("{name}: {}", snap.summary());
+        }
+    }
     Ok(())
 }

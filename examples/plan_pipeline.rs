@@ -25,6 +25,11 @@
 //!   double-buffered path (DESIGN.md §9): chunk k+1 encodes while chunk
 //!   k is on the wire; the overlap summary line lights up.
 //!   `CYLONFLOW_INFLIGHT_CHUNKS` sets the per-peer depth (default 2).
+//! - `CYLONFLOW_TRACE=1` — record a per-rank event trace of the
+//!   optimized run (stage spans, collective spans, spill and skew
+//!   events) and export the merged cross-rank timeline to
+//!   `plan_pipeline.trace.json`, loadable at `chrome://tracing` or
+//!   <https://ui.perfetto.dev> (DESIGN.md §10).
 
 use cylonflow::dist::pipeline::frame;
 use cylonflow::metrics::Phase;
@@ -86,6 +91,18 @@ fn main() -> Result<()> {
     };
 
     let (opt_reports, opt_time) = run(true)?;
+
+    // With CYLONFLOW_TRACE=1: gather every rank's event buffer, align
+    // clocks, and export the merged timeline of the optimized run
+    // (before the unoptimized pass muddies the buffers).
+    let timelines = exec.run(|env| env.trace_snapshot())?.wait()?;
+    if let Some(timeline) = timelines.into_iter().next().flatten() {
+        let out = "plan_pipeline.trace.json";
+        std::fs::write(out, cylonflow::trace::chrome::chrome_trace_json(&timeline))?;
+        println!("{}", cylonflow::trace::chrome::text_summary(&timeline));
+        println!("wrote {out} ({} events) — open in chrome://tracing\n", timeline.events.len());
+    }
+
     let (naive_reports, naive_time) = run(false)?;
 
     let out_rows: usize = opt_reports.iter().map(|r| r.table.num_rows()).sum();

@@ -11,6 +11,12 @@
 //! bench_driver serial [--rows N]              serial columnar vs row-oriented
 //! bench_driver ablation [--rows N]            groupby strategy + skew ablations
 //! bench_driver all    [--rows N]
+//! bench_driver trace  [--rows N] [--world P] [--out FILE]
+//!                                             traced pipeline run: exports
+//!                                             the merged cross-rank timeline
+//!                                             as Chrome-trace JSON
+//!                                             (chrome://tracing) plus a
+//!                                             text summary
 //! bench_driver bench  [--rows N] [--world P] [--iters K]
 //!                     [--ops join,groupby,sort,shuffle,shuffle_overlap]
 //!                     [--out FILE]
@@ -536,7 +542,7 @@ fn bench_one(
     // one extra pass reads the accumulated skew counters (ratios are
     // max-merged, so the worst observed exchange is reported)
     let stats = exec
-        .run(|env| Ok(env.skew_snapshot()))
+        .run(|env| Ok(env.snapshot().skew))
         .expect("submit")
         .wait()
         .expect("stats app failed");
@@ -594,7 +600,7 @@ fn bench_overlap(
                 .expect("bench app failed");
         });
         let stats = exec
-            .run(|env| Ok(env.overlap_snapshot()))
+            .run(|env| Ok(env.snapshot().overlap))
             .expect("submit")
             .wait()
             .expect("stats app failed");
@@ -632,6 +638,54 @@ fn bench_overlap(
         max_mean_after: 0.0,
         overlap_ratio: ratio,
     }
+}
+
+/// `bench_driver trace`: run one pipeline workload with tracing forced
+/// on (plus overlap, small frames and a tiny spill budget so the
+/// nb-request and spill subsystems leave events), export the merged
+/// cross-rank timeline as Chrome-trace JSON and print the text summary.
+/// Load the file at `chrome://tracing` / <https://ui.perfetto.dev>.
+fn trace_run(argv: &[String]) -> i32 {
+    let flag = |name: &str| cylonflow::bench_util::arg_value(argv, name);
+    let rows: usize = flag("--rows").and_then(|v| v.parse().ok()).unwrap_or(1 << 14);
+    let world: usize = flag("--world").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let out = flag("--out").cloned().unwrap_or_else(|| "bench_driver.trace.json".to_string());
+    let mut cfg = Config::from_env();
+    cfg.trace.enabled = true;
+    cfg.backend = CommBackend::Tcp;
+    cfg.exchange.frame_bytes = 16 << 10; // several frames per peer
+    cfg.exchange.spill_budget_bytes = 32 << 10; // force some spill events
+    cfg.exchange.overlap.enabled = true; // exercise the nb engine
+    let cluster = Cluster::with_config(world, cfg).expect("cluster");
+    let exec = CylonExecutor::new(&cluster, world).expect("executor");
+    let timelines = exec
+        .run(move |env| {
+            let l = datagen::partition_for_rank(9001, rows, 0.5, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(9002, rows, 0.5, env.rank(), env.world_size());
+            let rep = DistFrame::scan(l)
+                .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+                .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+                .sort(SortOptions::by(0))
+                .execute(env)?;
+            println!("rank {}: {}", env.rank(), env.snapshot().summary());
+            let _ = rep;
+            env.trace_snapshot()
+        })
+        .expect("submit")
+        .wait()
+        .expect("trace app failed");
+    let Some(timeline) = timelines.into_iter().next().flatten() else {
+        eprintln!("trace: no timeline produced (tracing disabled?)");
+        return 1;
+    };
+    let json = cylonflow::trace::chrome::chrome_trace_json(&timeline);
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("trace: cannot write {out}: {e}");
+        return 1;
+    }
+    println!("{}", cylonflow::trace::chrome::text_summary(&timeline));
+    println!("wrote {out} ({} events)", timeline.events.len());
+    0
 }
 
 /// `bench_driver bench`: the fixed-seed CI trajectory. Runs the selected
@@ -710,6 +764,7 @@ fn main() {
     let small = rows.unwrap_or(1 << 18); // "100M-row" (comm-bound) analogue
     match cmd.as_str() {
         "bench" => std::process::exit(bench_ci(&argv[1..])),
+        "trace" => std::process::exit(trace_run(&argv[1..])),
         "fig6" => fig6(large),
         "fig7" => fig7(large),
         "fig8" => {
@@ -733,7 +788,7 @@ fn main() {
         other => {
             eprintln!("unknown figure '{other}'");
             eprintln!(
-                "usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|bench|all> [--rows N]"
+                "usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|bench|trace|all> [--rows N]"
             );
             std::process::exit(2);
         }

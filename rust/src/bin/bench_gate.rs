@@ -44,6 +44,23 @@ fn is_bootstrapping(b: &BenchRecord) -> bool {
     b.median_ns == 0 && b.max_mean_after == 0.0
 }
 
+/// One warning line per all-zero bootstrap baseline row, naming the row
+/// (`op/dist`) it skips — an aggregate count hides *which* benchmarks
+/// are unprotected.
+fn bootstrap_warnings(baseline: &[BenchRecord]) -> Vec<String> {
+    baseline
+        .iter()
+        .filter(|b| is_bootstrapping(b))
+        .map(|b| {
+            format!(
+                "bench_gate: warning: baseline row {}/{} is all-zero (bootstrapping) — \
+                 it enforces nothing until refreshed on a trusted runner",
+                b.op, b.dist
+            )
+        })
+        .collect()
+}
+
 /// Compare current records against the baseline; returns human-readable
 /// failure lines (empty = gate passes).
 fn gate(current: &[BenchRecord], baseline: &[BenchRecord], tolerance: f64) -> Vec<String> {
@@ -118,13 +135,8 @@ fn main() {
             baseline.len()
         );
     }
-    let bootstrapping = baseline.iter().filter(|b| is_bootstrapping(b)).count();
-    if bootstrapping > 0 {
-        println!(
-            "bench_gate: note: {bootstrapping}/{} baseline rows are still bootstrapping \
-             (all fields unset) — they enforce nothing until refreshed",
-            baseline.len()
-        );
+    for w in bootstrap_warnings(&baseline) {
+        println!("{w}");
     }
     let failures = gate(&current, &baseline, tolerance);
     if failures.is_empty() {
@@ -200,6 +212,21 @@ mod tests {
         scaled.rows *= 2;
         let current = vec![scaled, rec("join", 100, 1.4)];
         assert!(gate(&current, &baseline, 0.25).is_empty(), "drifted bootstrap row must pass");
+    }
+
+    #[test]
+    fn bootstrap_warnings_name_each_skipped_row() {
+        let baseline = vec![
+            rec("shuffle_overlap", 0, 0.0), // bootstrapping
+            rec("join", 100, 1.5),          // populated
+            rec("groupby", 0, 0.0),         // bootstrapping
+        ];
+        let warnings = bootstrap_warnings(&baseline);
+        assert_eq!(warnings.len(), 2, "{warnings:?}");
+        assert!(warnings[0].contains("shuffle_overlap/zipf"));
+        assert!(warnings[1].contains("groupby/zipf"));
+        // a row with any populated field gets no warning
+        assert!(!warnings.iter().any(|w| w.contains("join/")));
     }
 
     #[test]

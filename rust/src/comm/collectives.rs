@@ -41,6 +41,7 @@ use crate::error::Result;
 use crate::metrics::{OverlapStats, Phase, PhaseTimers, SpillStats};
 use crate::store::SpillBuffer;
 use crate::table::{frame_header, table_from_bytes, table_to_bytes, FrameEncoder, Table};
+use crate::trace::{TraceCat, TraceSink};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -64,6 +65,10 @@ pub struct CommContext {
     // Started on first nonblocking use; dropping the context shuts it
     // down (outstanding requests error, thread joins — never leaks).
     engine: OnceLock<ProgressEngine>,
+    // This rank's event sink (the disabled no-op sink unless the
+    // executor threaded an enabled one through via `with_trace`). Shared
+    // with the progress engine and the spill buffers.
+    trace: Arc<TraceSink>,
 }
 
 impl CommContext {
@@ -91,7 +96,22 @@ impl CommContext {
             spill: Mutex::new(SpillStats::default()),
             overlap: Mutex::new(OverlapStats::default()),
             engine: OnceLock::new(),
+            trace: TraceSink::disabled(),
         }
+    }
+
+    /// Attach an event sink (builder-style; the executor threads
+    /// [`crate::config::TraceConfig`] through here). Must be called
+    /// before the first nonblocking use — the progress engine captures
+    /// the sink when it starts.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = sink;
+        self
+    }
+
+    /// This rank's event sink (the no-op sink when tracing is off).
+    pub fn trace(&self) -> &Arc<TraceSink> {
+        &self.trace
     }
 
     /// This worker's rank.
@@ -189,7 +209,7 @@ impl CommContext {
             // most `inflight` frames per peer outstanding, so this only
             // binds direct isend users that race far ahead.
             let bound = (self.exchange.overlap.inflight_chunks.max(1) * self.world_size()).max(8);
-            ProgressEngine::new(self.comm.clone(), bound)
+            ProgressEngine::with_trace(self.comm.clone(), bound, self.trace.clone())
         })
     }
 
@@ -232,7 +252,25 @@ impl CommContext {
 
     /// Synchronize the gang.
     pub fn barrier(&self) -> Result<()> {
+        let _span = self.trace.span(TraceCat::Comm, "barrier");
         self.timed(|| self.comm.barrier())
+    }
+
+    /// Barrier that bills nothing to the communication timers and emits
+    /// no trace event — the clock-alignment handshakes of
+    /// [`crate::trace::merge::snapshot_global`] must not perturb the run
+    /// they observe.
+    pub fn barrier_untimed(&self) -> Result<()> {
+        self.comm.barrier()
+    }
+
+    /// Raw-bytes allgather (`out[j]` = rank j's block), untimed and
+    /// untraced for the same reason as [`CommContext::barrier_untimed`]:
+    /// the trace snapshot gathers rank buffers through here without
+    /// appearing in its own timeline or in the phase timers.
+    pub fn allgather_bytes(&self, block: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        let tag = self.alloc_tags(self.world_size() as u64 + 64);
+        algorithms::allgather(self.comm.as_ref(), self.algos.allgather, block, tag)
     }
 
     /// Shuffle: send `parts[j]` to rank `j`, receive one table per rank,
@@ -250,6 +288,8 @@ impl CommContext {
     pub fn shuffle(&self, parts: Vec<Table>) -> Result<Table> {
         let p = self.world_size();
         algorithms::check_one_part_per_rank(parts.len(), p, "shuffle")?;
+        let mut span = self.trace.span(TraceCat::Comm, "shuffle");
+        span.set_args(p as u64, 0);
         // reserve a generous tag range (pairwise/bruck consume ≤ p + 64)
         let tag = self.alloc_tags(2 * p as u64 + 64);
         self.timed(|| {
@@ -291,19 +331,32 @@ impl CommContext {
         if self.exchange.overlap.enabled {
             return self.shuffle_overlapped(parts, tag);
         }
+        let mut span = self.trace.span(TraceCat::Comm, "shuffle_streamed");
+        span.set_args(p as u64, 0);
         self.timed(|| {
-            let mut sink = SpillBuffer::new(
+            let mut sink = SpillBuffer::with_trace(
                 self.exchange.spill_budget_bytes,
                 &self.exchange.spill_dir,
+                self.trace.clone(),
             );
             {
                 let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
                     Vec::with_capacity(parts.len());
-                for t in &parts {
-                    streams.push(Box::new(FrameEncoder::new(t, self.exchange.frame_bytes)));
+                for (j, t) in parts.iter().enumerate() {
+                    streams.push(Box::new(TracedFrames {
+                        inner: FrameEncoder::new(t, self.exchange.frame_bytes),
+                        trace: self.trace.as_ref(),
+                        dest: j as u64,
+                    }));
                 }
                 let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
                     let h = frame_header(&frame)?;
+                    self.trace.event(
+                        TraceCat::Comm,
+                        "frame_recv",
+                        source as u64,
+                        frame.len() as u64,
+                    );
                     sink.push(source, h.seq, frame)?;
                     Ok(h.last)
                 };
@@ -324,17 +377,31 @@ impl CommContext {
     /// wall-clock-equals-communication assumption would double-count the
     /// hidden compute.
     fn shuffle_overlapped(&self, parts: Vec<Table>, tag: u64) -> Result<Table> {
+        let mut span = self.trace.span(TraceCat::Comm, "shuffle_overlapped");
+        span.set_args(self.world_size() as u64, 0);
         let wall = Instant::now();
-        let mut sink =
-            SpillBuffer::new(self.exchange.spill_budget_bytes, &self.exchange.spill_dir);
+        let mut sink = SpillBuffer::with_trace(
+            self.exchange.spill_budget_bytes,
+            &self.exchange.spill_dir,
+            self.trace.clone(),
+        );
         let stats = {
             let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
                 Vec::with_capacity(parts.len());
             for t in &parts {
+                // no TracedFrames here: overlapped sends go through the
+                // nonblocking engine, whose `isend_posted` events already
+                // record each outgoing frame.
                 streams.push(Box::new(FrameEncoder::new(t, self.exchange.frame_bytes)));
             }
             let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
                 let h = frame_header(&frame)?;
+                self.trace.event(
+                    TraceCat::Comm,
+                    "frame_recv",
+                    source as u64,
+                    frame.len() as u64,
+                );
                 sink.push(source, h.seq, frame)?;
                 Ok(h.last)
             };
@@ -380,15 +447,31 @@ impl CommContext {
         if self.exchange.overlap.enabled {
             return self.allgather_overlapped(t, tag);
         }
+        let mut span = self.trace.span(TraceCat::Comm, "allgather_streamed");
+        span.set_args(self.world_size() as u64, 0);
         self.timed(|| {
-            let mut sink = SpillBuffer::new(
+            let mut sink = SpillBuffer::with_trace(
                 self.exchange.spill_budget_bytes,
                 &self.exchange.spill_dir,
+                self.trace.clone(),
             );
             {
-                let frames = Box::new(FrameEncoder::new(t, self.exchange.frame_bytes));
+                let frames = Box::new(TracedFrames {
+                    inner: FrameEncoder::new(t, self.exchange.frame_bytes),
+                    trace: self.trace.as_ref(),
+                    // broadcast-style stream: every other rank receives
+                    // each frame, so mark the destination as the world
+                    // size rather than a single peer.
+                    dest: self.world_size() as u64,
+                });
                 let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
                     let h = frame_header(&frame)?;
+                    self.trace.event(
+                        TraceCat::Comm,
+                        "frame_recv",
+                        source as u64,
+                        frame.len() as u64,
+                    );
                     sink.push(source, h.seq, frame)?;
                     Ok(h.last)
                 };
@@ -402,13 +485,24 @@ impl CommContext {
     /// The overlapped body of [`CommContext::allgather_streamed`]; same
     /// phase-attribution rules as [`CommContext::shuffle_overlapped`].
     fn allgather_overlapped(&self, t: &Table, tag: u64) -> Result<Table> {
+        let mut span = self.trace.span(TraceCat::Comm, "allgather_overlapped");
+        span.set_args(self.world_size() as u64, 0);
         let wall = Instant::now();
-        let mut sink =
-            SpillBuffer::new(self.exchange.spill_budget_bytes, &self.exchange.spill_dir);
+        let mut sink = SpillBuffer::with_trace(
+            self.exchange.spill_budget_bytes,
+            &self.exchange.spill_dir,
+            self.trace.clone(),
+        );
         let stats = {
             let frames = Box::new(FrameEncoder::new(t, self.exchange.frame_bytes));
             let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
                 let h = frame_header(&frame)?;
+                self.trace.event(
+                    TraceCat::Comm,
+                    "frame_recv",
+                    source as u64,
+                    frame.len() as u64,
+                );
                 sink.push(source, h.seq, frame)?;
                 Ok(h.last)
             };
@@ -428,6 +522,8 @@ impl CommContext {
     /// tables).
     pub fn allgather(&self, t: &Table) -> Result<Table> {
         let tag = self.alloc_tags(self.world_size() as u64 + 64);
+        let mut span = self.trace.span(TraceCat::Comm, "allgather");
+        span.set_args(self.world_size() as u64, t.num_rows() as u64);
         self.timed(|| {
             let blocks = algorithms::allgather(
                 self.comm.as_ref(),
@@ -446,6 +542,8 @@ impl CommContext {
     /// Broadcast a table from `root` to all ranks.
     pub fn bcast(&self, t: Option<&Table>, root: usize) -> Result<Table> {
         let tag = self.alloc_tags(64);
+        let mut span = self.trace.span(TraceCat::Comm, "bcast");
+        span.set_args(root as u64, 0);
         self.timed(|| {
             let payload = t.map(table_to_bytes);
             let out = algorithms::bcast(self.comm.as_ref(), self.algos.bcast, payload, root, tag)?;
@@ -457,6 +555,8 @@ impl CommContext {
     /// workers load path); every rank returns its partition.
     pub fn scatter(&self, parts: Option<Vec<Table>>, root: usize) -> Result<Table> {
         let tag = self.alloc_tags(64);
+        let mut span = self.trace.span(TraceCat::Comm, "scatter");
+        span.set_args(root as u64, 0);
         self.timed(|| {
             let payloads = parts.map(|ps| ps.iter().map(table_to_bytes).collect());
             let mine = algorithms::scatter(self.comm.as_ref(), payloads, root, tag)?;
@@ -467,6 +567,8 @@ impl CommContext {
     /// Gather all partitions at `root` (None on non-root ranks).
     pub fn gather(&self, t: &Table, root: usize) -> Result<Option<Table>> {
         let tag = self.alloc_tags(64);
+        let mut span = self.trace.span(TraceCat::Comm, "gather");
+        span.set_args(root as u64, t.num_rows() as u64);
         self.timed(|| {
             let blocks = algorithms::gather(self.comm.as_ref(), table_to_bytes(t), root, tag)?;
             match blocks {
@@ -486,9 +588,31 @@ impl CommContext {
     /// merging).
     pub fn allreduce_sum(&self, values: &[i64]) -> Result<Vec<i64>> {
         let tag = self.alloc_tags(64);
+        let mut span = self.trace.span(TraceCat::Comm, "allreduce_sum");
+        span.set_args(values.len() as u64, 0);
         self.timed(|| {
             algorithms::allreduce_sum_i64(self.comm.as_ref(), values, self.algos.bcast, tag)
         })
+    }
+}
+
+/// Iterator adapter that records one `frame_send` instant per frame a
+/// streamed algorithm pulls from a [`FrameEncoder`] (a0 = destination
+/// rank — or the world size for broadcast-style allgather streams,
+/// where every peer receives the frame; a1 = frame length in bytes).
+struct TracedFrames<'a, I> {
+    inner: I,
+    trace: &'a TraceSink,
+    dest: u64,
+}
+
+impl<I: Iterator<Item = Vec<u8>>> Iterator for TracedFrames<'_, I> {
+    type Item = Vec<u8>;
+
+    fn next(&mut self) -> Option<Vec<u8>> {
+        let frame = self.inner.next()?;
+        self.trace.event(TraceCat::Comm, "frame_send", self.dest, frame.len() as u64);
+        Some(frame)
     }
 }
 

@@ -33,6 +33,7 @@ use super::request::{CommRequest, Notifier, RequestState};
 use crate::comm::mailbox::RECV_TIMEOUT;
 use crate::comm::Communicator;
 use crate::error::{Error, Result};
+use crate::trace::{TraceCat, TraceSink};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -80,6 +81,10 @@ struct Shared {
     notifier: Arc<Notifier>,
     shutdown: AtomicBool,
     max_pending_sends: usize,
+    /// Trace sink shared with the owning context: request-lifecycle
+    /// events (`isend_posted` → `send_wire` → `recv_complete`) land in
+    /// the same per-rank ring as everything else.
+    trace: Arc<TraceSink>,
 }
 
 /// Per-rank nonblocking progress engine over a shared transport handle.
@@ -95,6 +100,18 @@ impl ProgressEngine {
     /// `max_pending_sends` incomplete sends before `isend` blocks the
     /// submitter (clamped to ≥ 1).
     pub fn new(comm: Arc<dyn Communicator>, max_pending_sends: usize) -> ProgressEngine {
+        ProgressEngine::with_trace(comm, max_pending_sends, TraceSink::disabled())
+    }
+
+    /// [`ProgressEngine::new`] with a trace sink attached: every request
+    /// leaves `isend_posted`/`irecv_posted` instants at submission, a
+    /// `send_wire` span around the transport send on the progress
+    /// thread, and a `recv_complete` instant when a receive matches.
+    pub fn with_trace(
+        comm: Arc<dyn Communicator>,
+        max_pending_sends: usize,
+        trace: Arc<TraceSink>,
+    ) -> ProgressEngine {
         let name = format!("cf-progress-{}", comm.rank());
         let shared = Arc::new(Shared {
             comm,
@@ -107,6 +124,7 @@ impl ProgressEngine {
             notifier: Notifier::new(),
             shutdown: AtomicBool::new(false),
             max_pending_sends: max_pending_sends.max(1),
+            trace,
         });
         let thread = {
             let shared = shared.clone();
@@ -150,6 +168,9 @@ impl ProgressEngine {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(Error::comm("isend on a shut-down progress engine"));
         }
+        self.shared
+            .trace
+            .event(TraceCat::Nb, "isend_posted", to as u64, data.len() as u64);
         q.sends.push_back(SendOp { to, tag, data, state: state.clone() });
         q.pending_sends += 1;
         drop(q);
@@ -167,6 +188,7 @@ impl ProgressEngine {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(Error::comm("irecv on a shut-down progress engine"));
         }
+        self.shared.trace.event(TraceCat::Nb, "irecv_posted", from as u64, tag);
         let state = RequestState::new(self.shared.notifier.clone());
         let mut q = self.shared.queue.lock().expect("engine queue poisoned");
         q.recvs.push(RecvOp { from, tag, posted: Instant::now(), state: state.clone() });
@@ -206,7 +228,12 @@ fn run(shared: &Shared) {
                 q.sends.pop_front()
             };
             let Some(op) = op else { break };
+            // `op.data` is moved into the transport, so capture its
+            // length (and the wire-span start) before the call.
+            let wire_len = op.data.len() as u64;
+            let t0 = shared.trace.now_nanos();
             let result = shared.comm.send(op.to, op.tag, op.data);
+            shared.trace.span_since(TraceCat::Nb, "send_wire", t0, op.to as u64, wire_len);
             op.state.complete(result.map(|()| None));
             {
                 let mut q = shared.queue.lock().expect("engine queue poisoned");
@@ -226,6 +253,12 @@ fn run(shared: &Shared) {
                 let (from, tag) = (q.recvs[i].from, q.recvs[i].tag);
                 match shared.comm.try_recv(from, tag) {
                     Ok(Some(data)) => {
+                        shared.trace.event(
+                            TraceCat::Nb,
+                            "recv_complete",
+                            from as u64,
+                            data.len() as u64,
+                        );
                         let op = q.recvs.remove(i);
                         op.state.complete(Ok(Some(data)));
                         made_progress = true;

@@ -8,6 +8,12 @@
 //! (block for the first of many). All requests of one
 //! [`super::ProgressEngine`] share a single completion notifier, which is
 //! what makes `wait_any` a real blocking wait instead of a poll loop.
+//!
+//! When tracing is enabled (see [`crate::trace`]), the lifecycle behind a
+//! request is visible on the timeline as `Nb` events emitted by the
+//! engine: `isend_posted`/`irecv_posted` instants at submission, a
+//! `send_wire` span while the progress thread holds the transport, and a
+//! `recv_complete` instant when a receive matches.
 
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -86,6 +86,35 @@ impl Default for OverlapConfig {
     }
 }
 
+/// Knobs of the event-trace subsystem (see [`crate::trace`] and
+/// DESIGN.md §10). When enabled, every rank records timestamped spans
+/// and instant events from the instrumented hot layers into a bounded
+/// ring buffer; [`crate::executor::CylonEnv::trace_snapshot`] merges the
+/// per-rank buffers into one clock-aligned timeline exportable as
+/// Chrome-trace JSON.
+///
+/// Off by default: with tracing off every instrumentation site takes a
+/// compiled-in no-op path (one branch on an immutable bool — no clock
+/// read, no lock, no allocation), so the hot layers pay nothing.
+///
+/// Environment variables: `CYLONFLOW_TRACE` (`1`/`on`/`true` enables),
+/// `CYLONFLOW_TRACE_EVENTS` (ring capacity in events per rank, optional
+/// `k`/`m`/`g` suffix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Master switch for event tracing.
+    pub enabled: bool,
+    /// Ring-buffer capacity in events per rank; the oldest events are
+    /// evicted (and counted) beyond it.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, capacity: crate::trace::DEFAULT_CAPACITY }
+    }
+}
+
 /// Knobs of the streaming exchange path (chunked wire frames + receiver
 /// spill-to-disk; see DESIGN.md §7) plus the skew-aware repartitioning
 /// switchboard (DESIGN.md §8) and the overlapped-exchange switchboard
@@ -132,6 +161,8 @@ pub struct Config {
     pub kernel_block_rows: usize,
     /// Streaming-exchange knobs (frame size, spill budget, spill dir).
     pub exchange: ExchangeConfig,
+    /// Event-trace knobs (off by default; `CYLONFLOW_TRACE`).
+    pub trace: TraceConfig,
 }
 
 impl Default for Config {
@@ -142,6 +173,7 @@ impl Default for Config {
             artifacts_dir: default_artifacts_dir(),
             kernel_block_rows: 65_536,
             exchange: ExchangeConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -158,7 +190,9 @@ impl Config {
     /// the fair share `1/p`), `CYLONFLOW_SKEW_SAMPLE` (rows per rank),
     /// `CYLONFLOW_OVERLAP` (`1`/`on`/`true` enables the overlapped
     /// exchange path), `CYLONFLOW_INFLIGHT_CHUNKS` (frames in flight per
-    /// peer, ≥ 1).
+    /// peer, ≥ 1), `CYLONFLOW_TRACE` (`1`/`on`/`true` enables event
+    /// tracing), `CYLONFLOW_TRACE_EVENTS` (ring capacity in events per
+    /// rank, optional `k`/`m`/`g` suffix).
     pub fn from_env() -> Config {
         let mut c = Config::default();
         // CYLONFLOW_BACKEND is canonical; CYLONFLOW_COMM is the alias the
@@ -212,6 +246,12 @@ impl Config {
             if let Ok(v) = n.trim().parse::<usize>() {
                 c.exchange.overlap.inflight_chunks = v.max(1);
             }
+        }
+        if let Ok(s) = std::env::var("CYLONFLOW_TRACE") {
+            c.trace.enabled = parse_switch(&s);
+        }
+        if let Some(n) = env_bytes("CYLONFLOW_TRACE_EVENTS") {
+            c.trace.capacity = n.max(1);
         }
         c
     }
@@ -269,6 +309,8 @@ mod tests {
         assert_eq!(c.exchange.skew.sample_per_rank, 64);
         assert!(!c.exchange.overlap.enabled, "overlap must be opt-in");
         assert_eq!(c.exchange.overlap.inflight_chunks, 2);
+        assert!(!c.trace.enabled, "tracing must be opt-in");
+        assert_eq!(c.trace.capacity, crate::trace::DEFAULT_CAPACITY);
     }
 
     #[test]

@@ -266,6 +266,15 @@ pub fn plan_for(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<SkewPla
     if hot.is_empty() {
         return Ok(SkewPlan::default());
     }
+    // Record the detection decision itself, not just its effect: the
+    // routing counters land later via `record_skew`, but a timeline
+    // reader wants to see *when* the estimator flagged hot keys.
+    env.trace().event(
+        crate::trace::TraceCat::Skew,
+        "skew_detected",
+        hot.len() as u64,
+        t.num_rows() as u64,
+    );
     let hot_set: BTreeSet<i64> = hot.iter().map(|(h, _)| *h).collect();
     let cold = est.cold_shares(&hot_set, p);
     Ok(assign_ranges(&hot, &cold, p))

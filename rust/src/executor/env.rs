@@ -4,10 +4,13 @@
 //! store handle, the key-hasher and per-phase metrics.
 
 use crate::comm::CommContext;
-use crate::metrics::{Phase, PhaseTimers, SkewStats};
+use crate::metrics::{MetricsSnapshot, Phase, PhaseTimers, SkewStats};
 use crate::ops::KeyHasher;
 use crate::store::CylonStore;
+use crate::trace::merge::GlobalTimeline;
+use crate::trace::{TraceCat, TraceSink};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Per-actor execution environment.
 pub struct CylonEnv {
@@ -55,56 +58,102 @@ impl CylonEnv {
         self.hasher.as_ref()
     }
 
+    /// This actor's trace sink (shared with the communication context
+    /// and nonblocking engine; the no-op disabled sink unless
+    /// `CYLONFLOW_TRACE` / [`crate::config::TraceConfig`] enabled it).
+    pub fn trace(&self) -> &Arc<TraceSink> {
+        self.comm.trace()
+    }
+
     /// Time `f` under `phase` (compute/auxiliary; communication is timed
     /// inside [`CommContext`]).
     pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
         self.timers.borrow_mut().time(phase, f)
     }
 
-    /// Non-destructive snapshot of this actor's accumulated metrics
-    /// (local phases plus communication). [`crate::dist::pipeline()`] diffs
-    /// successive snapshots to attribute time to stages without stealing
-    /// the app-level report that [`CylonEnv::take_metrics`] consumes.
+    /// Non-destructive unified snapshot of every metrics family this
+    /// actor accumulates — phase timers (local plus communication),
+    /// spill, skew, overlap, and the named-counter registry
+    /// (`bytes_sent` from the transport, `trace_events_recorded` /
+    /// `trace_events_dropped` from the trace sink). Monotonic: the plan
+    /// executor attributes windows to stages by diffing successive
+    /// snapshots with [`MetricsSnapshot::saturating_diff`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut timers = self.timers.borrow().clone();
+        timers.merge(&self.comm.peek_timers());
+        let sink = self.comm.trace();
+        MetricsSnapshot {
+            timers,
+            spill: self.comm.peek_spill_stats(),
+            skew: *self.skew.borrow(),
+            overlap: self.comm.peek_overlap_stats(),
+            counters: vec![
+                ("bytes_sent".to_string(), self.comm.bytes_sent()),
+                ("trace_events_dropped".to_string(), sink.overflow_count()),
+                ("trace_events_recorded".to_string(), sink.recorded_count()),
+            ],
+        }
+    }
+
+    /// Gather every rank's trace buffer into one clock-aligned, merged
+    /// [`GlobalTimeline`] (see [`crate::trace::merge`]). Returns
+    /// `Ok(None)` without communicating when tracing is disabled — safe
+    /// under the uniform-config SPMD assumption, since every rank then
+    /// skips the collective together. When tracing is enabled this IS a
+    /// collective: every rank of the gang must call it, and every rank
+    /// receives the identical timeline. Non-destructive; call
+    /// [`TraceSink::reset`] afterwards to start a fresh window.
+    pub fn trace_snapshot(&self) -> crate::error::Result<Option<GlobalTimeline>> {
+        if !self.comm.trace().enabled() {
+            return Ok(None);
+        }
+        crate::trace::merge::snapshot_global(&self.comm).map(Some)
+    }
+
+    /// Non-destructive snapshot of this actor's accumulated phase timers
+    /// (local phases plus communication).
+    #[deprecated(since = "0.6.0", note = "use `snapshot().timers` instead")]
     pub fn metrics_snapshot(&self) -> PhaseTimers {
-        let mut snap = self.timers.borrow().clone();
-        snap.merge(&self.comm.peek_timers());
-        snap
+        self.snapshot().timers
     }
 
     /// Non-destructive snapshot of this actor's accumulated spill
-    /// counters (bytes/frames the streaming exchanges pushed to disk).
-    /// Monotonic, like [`CylonEnv::metrics_snapshot`]; the plan executor
-    /// diffs successive snapshots to attribute spill to stages.
+    /// counters.
+    #[deprecated(since = "0.6.0", note = "use `snapshot().spill` instead")]
     pub fn spill_snapshot(&self) -> crate::metrics::SpillStats {
-        self.comm.peek_spill_stats()
+        self.snapshot().spill
     }
 
     /// Non-destructive snapshot of this actor's accumulated
-    /// communication/computation overlap counters (chunks and time the
-    /// nonblocking exchanges hid under compute; all zero unless
-    /// `CYLONFLOW_OVERLAP` is on). Monotonic; the plan executor diffs
-    /// successive snapshots to attribute overlap to stages.
+    /// communication/computation overlap counters.
+    #[deprecated(since = "0.6.0", note = "use `snapshot().overlap` instead")]
     pub fn overlap_snapshot(&self) -> crate::metrics::OverlapStats {
-        self.comm.peek_overlap_stats()
+        self.snapshot().overlap
     }
 
     /// Fold a skew-aware exchange's counters into this actor's running
     /// [`SkewStats`] (called by the [`crate::dist::skew`] operators).
     /// Counters accumulate; the balance ratios keep the latest
     /// observation so per-stage snapshot diffs report each stage's own
-    /// exchange.
+    /// exchange. Also leaves a `skew_routed` instant in the trace
+    /// (a0 = hot keys, a1 = rows rerouted).
     pub fn record_skew(&self, stats: &SkewStats) {
         if !stats.is_zero() {
+            self.comm.trace().event(
+                TraceCat::Skew,
+                "skew_routed",
+                stats.hot_keys,
+                stats.rows_rerouted,
+            );
             self.skew.borrow_mut().observe(stats);
         }
     }
 
     /// Non-destructive snapshot of this actor's accumulated skew
-    /// counters (hot keys handled, rows rerouted, balance ratios).
-    /// Monotonic; the plan executor diffs successive snapshots to
-    /// attribute skew handling to stages.
+    /// counters.
+    #[deprecated(since = "0.6.0", note = "use `snapshot().skew` instead")]
     pub fn skew_snapshot(&self) -> SkewStats {
-        *self.skew.borrow()
+        self.snapshot().skew
     }
 
     /// Snapshot and reset this actor's metrics, folding in the

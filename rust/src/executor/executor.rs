@@ -63,11 +63,16 @@ impl CylonExecutor {
         // (frame size, spill budget/dir) for the out-of-core collectives.
         let backend = config.backend;
         let exchange = config.exchange.clone();
+        // One trace sink per rank (no-op unless CYLONFLOW_TRACE enabled
+        // it), attached before any nonblocking use so the progress
+        // engine shares it.
+        let trace_cfg = config.trace;
         let mut contexts: Vec<CommContext> = match backend {
             CommBackend::Memory => MemoryFabric::create(p)
                 .into_iter()
                 .map(|c| {
                     CommContext::with_exchange(Box::new(c), backend.algos(), exchange.clone())
+                        .with_trace(crate::trace::TraceSink::from_config(&trace_cfg))
                 })
                 .collect(),
             CommBackend::Tcp | CommBackend::TcpUcc => {
@@ -76,6 +81,7 @@ impl CylonExecutor {
                     .into_iter()
                     .map(|c| {
                         CommContext::with_exchange(Box::new(c), backend.algos(), exchange.clone())
+                            .with_trace(crate::trace::TraceSink::from_config(&trace_cfg))
                     })
                     .collect()
             }

@@ -51,7 +51,11 @@
 //!   file-KV rendezvous, TCP) and [`executor::checkpoint`] — coarse
 //!   fault tolerance (paper §VI).
 //! - [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` kernels.
-//! - [`metrics`] — phase timers for the comm/compute breakdown experiments.
+//! - [`metrics`] — phase timers for the comm/compute breakdown experiments,
+//!   unified per-actor [`metrics::MetricsSnapshot`].
+//! - [`trace`] — opt-in (`CYLONFLOW_TRACE`) per-rank event tracing:
+//!   bounded ring of spans/instants through the hot layers, cross-rank
+//!   clock-aligned merge, Chrome-trace JSON export.
 //!
 //! ## Quickstart
 //!
@@ -109,6 +113,7 @@ pub mod runtime;
 pub mod store;
 pub mod stream;
 pub mod table;
+pub mod trace;
 pub mod types;
 pub mod util;
 

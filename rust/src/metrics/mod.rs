@@ -274,6 +274,117 @@ pub struct StageTiming {
     pub overlap: OverlapStats,
 }
 
+/// One worker's unified metrics view at a point in time: every
+/// monotonically accumulating counter family the runtime keeps (phase
+/// timers, spill, skew, overlap) plus a free-form named-counter
+/// registry, snapshotted together. This is what
+/// [`crate::executor::CylonEnv::snapshot`] returns — the single
+/// replacement for the former per-family accessors — and what the plan
+/// executor diffs across stage boundaries.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsSnapshot {
+    /// Compute / auxiliary / communication wall time.
+    pub timers: PhaseTimers,
+    /// Out-of-core exchange counters.
+    pub spill: SpillStats,
+    /// Skew-aware repartitioning counters.
+    pub skew: SkewStats,
+    /// Communication/computation overlap counters.
+    pub overlap: OverlapStats,
+    /// Named counters that don't belong to a structured family
+    /// (`bytes_sent`, `trace_events_recorded`, …), sorted by name so the
+    /// JSON emit is deterministic.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl MetricsSnapshot {
+    /// Look up a named counter (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Attribute the window between two snapshots: every family diffs
+    /// with its own `saturating_diff` rules; named counters are matched
+    /// by name and clamped at zero (a counter absent from `earlier`
+    /// diffs against 0).
+    pub fn saturating_diff(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            timers: self.timers.saturating_diff(&earlier.timers),
+            spill: self.spill.saturating_diff(&earlier.spill),
+            skew: self.skew.saturating_diff(&earlier.skew),
+            overlap: self.overlap.saturating_diff(&earlier.overlap),
+            counters: self
+                .counters
+                .iter()
+                .map(|(n, v)| (n.clone(), v.saturating_sub(earlier.counter(n))))
+                .collect(),
+        }
+    }
+
+    /// Machine-readable JSON object, hand-rolled in the same stable
+    /// flat-key style as the bench records (every value an integer, keys
+    /// never reordered):
+    ///
+    /// ```json
+    /// {"compute_ns": 0, "auxiliary_ns": 0, "communication_ns": 0,
+    ///  "spilled_bytes": 0, "spill_count": 0,
+    ///  "hot_keys": 0, "rows_rerouted": 0,
+    ///  "ratio_before_milli": 0, "ratio_after_milli": 0,
+    ///  "chunks_overlapped": 0, "hidden_ns": 0, "wire_wait_ns": 0,
+    ///  "counters": {"bytes_sent": 0}}
+    /// ```
+    pub fn to_json(&self) -> String {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(n, v)| format!("\"{n}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            concat!(
+                "{{\"compute_ns\": {}, \"auxiliary_ns\": {}, \"communication_ns\": {}, ",
+                "\"spilled_bytes\": {}, \"spill_count\": {}, ",
+                "\"hot_keys\": {}, \"rows_rerouted\": {}, ",
+                "\"ratio_before_milli\": {}, \"ratio_after_milli\": {}, ",
+                "\"chunks_overlapped\": {}, \"hidden_ns\": {}, \"wire_wait_ns\": {}, ",
+                "\"counters\": {{{}}}}}"
+            ),
+            self.timers.get(Phase::Compute).as_nanos(),
+            self.timers.get(Phase::Auxiliary).as_nanos(),
+            self.timers.get(Phase::Communication).as_nanos(),
+            self.spill.spilled_bytes,
+            self.spill.spill_count,
+            self.skew.hot_keys,
+            self.skew.rows_rerouted,
+            self.skew.ratio_before_milli,
+            self.skew.ratio_after_milli,
+            self.overlap.chunks_overlapped,
+            self.overlap.hidden_nanos,
+            self.overlap.wire_wait_nanos,
+            counters,
+        )
+    }
+
+    /// One-line human summary (what the examples print at exit).
+    pub fn summary(&self) -> String {
+        format!(
+            "metrics: compute={:.1}ms auxiliary={:.1}ms communication={:.1}ms \
+             spilled={}B skew_rerouted={} overlapped={} bytes_sent={}",
+            self.timers.get(Phase::Compute).as_secs_f64() * 1e3,
+            self.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
+            self.timers.get(Phase::Communication).as_secs_f64() * 1e3,
+            self.spill.spilled_bytes,
+            self.skew.rows_rerouted,
+            self.overlap.chunks_overlapped,
+            self.counter("bytes_sent"),
+        )
+    }
+}
+
 /// Aggregated comm/compute breakdown across a gang of workers.
 #[derive(Debug, Clone)]
 pub struct Breakdown {
@@ -472,6 +583,26 @@ mod tests {
         assert_eq!(stage2.rows_rerouted, 40);
         assert_eq!(stage2.ratio_before_milli, 1200);
         assert_eq!(stage2.ratio_after_milli, 1100);
+    }
+
+    #[test]
+    fn metrics_snapshot_diff_and_json() {
+        let mut now = MetricsSnapshot::default();
+        now.timers.add(Phase::Compute, Duration::from_nanos(500));
+        now.spill = SpillStats { spilled_bytes: 128, spill_count: 2 };
+        now.counters = vec![("bytes_sent".into(), 100), ("frames".into(), 7)];
+        let mut earlier = MetricsSnapshot::default();
+        earlier.counters = vec![("bytes_sent".into(), 40)];
+        let d = now.saturating_diff(&earlier);
+        assert_eq!(d.counter("bytes_sent"), 60);
+        assert_eq!(d.counter("frames"), 7, "counter absent earlier diffs against 0");
+        assert_eq!(d.counter("missing"), 0);
+        assert_eq!(d.spill.spilled_bytes, 128);
+        let json = now.to_json();
+        assert!(json.contains("\"compute_ns\": 500"));
+        assert!(json.contains("\"spilled_bytes\": 128"));
+        assert!(json.contains("\"counters\": {\"bytes_sent\": 100, \"frames\": 7}"));
+        assert!(now.summary().contains("spilled=128B"));
     }
 
     #[test]

@@ -7,9 +7,12 @@ use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
 use crate::dist;
 use crate::error::Result;
 use crate::executor::CylonEnv;
-use crate::metrics::{OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats, StageTiming};
+use crate::metrics::{
+    MetricsSnapshot, OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats, StageTiming,
+};
 use crate::ops;
 use crate::table::Table;
+use crate::trace::TraceCat;
 use std::time::Duration;
 
 /// Result of executing a plan on one rank: the rank's output partition
@@ -120,33 +123,12 @@ impl PlanReport {
     }
 }
 
-/// Snapshot cut of the actor's monotonically accumulating counters
-/// (timers + spill + skew) — diffed around each node to attribute the
-/// deltas.
-struct Mark {
-    timers: PhaseTimers,
-    spill: SpillStats,
-    skew: SkewStats,
-    overlap: OverlapStats,
-}
-
-impl Mark {
-    fn take(env: &CylonEnv) -> Mark {
-        Mark {
-            timers: env.metrics_snapshot(),
-            spill: env.spill_snapshot(),
-            skew: env.skew_snapshot(),
-            overlap: env.overlap_snapshot(),
-        }
-    }
-}
-
 /// Execute `plan` on this rank. Every rank of the gang must execute the
 /// same plan shape (the usual SPMD contract — only the scanned
 /// partitions differ per rank).
 pub fn execute(plan: PhysPlan, env: &CylonEnv) -> Result<PlanReport> {
     let mut stages = Vec::new();
-    let mut mark = Mark::take(env);
+    let mut mark = env.snapshot();
     let table = eval(plan, env, &mut stages, &mut mark)?;
     Ok(PlanReport { table, stages })
 }
@@ -155,9 +137,13 @@ fn eval(
     plan: PhysPlan,
     env: &CylonEnv,
     stages: &mut Vec<StageTiming>,
-    mark: &mut Mark,
+    mark: &mut MetricsSnapshot,
 ) -> Result<Table> {
     let label = plan.label();
+    // One trace span per executed node, opened before the match so it
+    // encloses the recursive input evaluation: on the timeline a join's
+    // span contains its children's spans, mirroring the plan tree.
+    let _span = env.trace().span(TraceCat::Stage, label);
     let out = match plan.node {
         // Scans do no work: return the partition, emit no stage. When
         // this plan holds the only reference (the usual build-and-run
@@ -230,13 +216,14 @@ fn eval(
         }
     };
     // Attribute the timer/spill/skew deltas since the last cut to this node.
-    let now = Mark::take(env);
+    let now = env.snapshot();
+    let delta = now.saturating_diff(mark);
     stages.push(StageTiming {
         name: label.to_string(),
-        timers: now.timers.saturating_diff(&mark.timers),
-        spill: now.spill.saturating_diff(&mark.spill),
-        skew: now.skew.saturating_diff(&mark.skew),
-        overlap: now.overlap.saturating_diff(&mark.overlap),
+        timers: delta.timers,
+        spill: delta.spill,
+        skew: delta.skew,
+        overlap: delta.overlap,
     });
     *mark = now;
     Ok(out)

@@ -21,10 +21,12 @@
 use crate::error::{Error, Result};
 use crate::metrics::SpillStats;
 use crate::table::{table_from_frame, Table};
+use crate::trace::{TraceCat, TraceSink};
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Process-wide counter so concurrent buffers never collide on a path.
 static SPILL_FILE_ID: AtomicU64 = AtomicU64::new(0);
@@ -64,12 +66,25 @@ pub struct SpillBuffer {
     file: Option<SpillFile>,
     write_offset: u64,
     stats: SpillStats,
+    trace: Arc<TraceSink>,
 }
 
 impl SpillBuffer {
     /// Sink with an in-memory budget of `budget_bytes`; overflow goes to
     /// a temp file under `dir` (created lazily, removed on drop).
     pub fn new(budget_bytes: usize, dir: impl Into<PathBuf>) -> SpillBuffer {
+        SpillBuffer::with_trace(budget_bytes, dir, TraceSink::disabled())
+    }
+
+    /// [`SpillBuffer::new`] with a trace sink attached: every spilled
+    /// frame leaves a `spill_write` instant, and every read-back during
+    /// replay a `spill_read` instant (a0 = frame bytes, a1 = file
+    /// offset).
+    pub fn with_trace(
+        budget_bytes: usize,
+        dir: impl Into<PathBuf>,
+        trace: Arc<TraceSink>,
+    ) -> SpillBuffer {
         SpillBuffer {
             budget_bytes,
             dir: dir.into(),
@@ -78,6 +93,7 @@ impl SpillBuffer {
             file: None,
             write_offset: 0,
             stats: SpillStats::default(),
+            trace,
         }
     }
 
@@ -92,6 +108,7 @@ impl SpillBuffer {
             return Ok(());
         }
         let offset = self.spill(&frame)?;
+        self.trace.event(TraceCat::Spill, "spill_write", frame.len() as u64, offset);
         self.stats.spilled_bytes += frame.len() as u64;
         self.stats.spill_count += 1;
         self.frames.push((key, Slot::Disk(offset, frame.len() as u64)));
@@ -143,7 +160,7 @@ impl SpillBuffer {
         }
         let mut frames = std::mem::take(&mut self.frames);
         frames.sort_by_key(|(key, _)| *key);
-        Ok(SpillReplay { frames: frames.into_iter(), file })
+        Ok(SpillReplay { frames: frames.into_iter(), file, trace: self.trace.clone() })
     }
 }
 
@@ -153,6 +170,7 @@ impl SpillBuffer {
 pub struct SpillReplay {
     frames: std::vec::IntoIter<(u64, Slot)>,
     file: Option<SpillFile>,
+    trace: Arc<TraceSink>,
 }
 
 impl SpillReplay {
@@ -164,6 +182,7 @@ impl SpillReplay {
         let mut buf = vec![0u8; len as usize];
         sf.file.seek(SeekFrom::Start(offset))?;
         sf.file.read_exact(&mut buf)?;
+        self.trace.event(TraceCat::Spill, "spill_read", len, offset);
         Ok(buf)
     }
 }

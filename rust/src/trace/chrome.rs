@@ -1,0 +1,401 @@
+//! Chrome-trace-event export of a merged [`GlobalTimeline`], the
+//! matching hand-rolled parser (the CI round-trip check), and a
+//! terminal text summary.
+//!
+//! Field mapping (the [Trace Event Format] subset used):
+//!
+//! | timeline field        | JSON field | notes                                  |
+//! |-----------------------|------------|----------------------------------------|
+//! | span                  | `ph: "X"`  | complete event with `ts` + `dur`       |
+//! | instant               | `ph: "i"`  | `s: "t"` (thread-scoped)               |
+//! | `name`                | `name`     | static instrumentation-site name       |
+//! | `cat.label()`         | `cat`      | `stage`/`comm`/`nb`/`spill`/`skew`/`app` |
+//! | `rank`                | `pid`      | one "process" lane per rank            |
+//! | `tid`                 | `tid`      | recording thread's lane                |
+//! | `t_nanos`             | `ts`       | microseconds, 3 decimals (exact ns)    |
+//! | `dur_nanos`           | `dur`      | microseconds, 3 decimals               |
+//! | `a0`/`a1`             | `args`     | `{"a0": …, "a1": …}`                   |
+//!
+//! Timeline-level metadata rides in `cylonflowWorld` /
+//! `cylonflowOffsets` / `cylonflowOverflow` / `cylonflowRecorded` keys,
+//! which trace viewers ignore and [`parse_chrome_trace`] reads back.
+//! Like [`crate::bench_util::parse_bench_records`], the parser is a
+//! deliberately small scanner for exactly the shape [`chrome_trace_json`]
+//! emits (plus whitespace tolerance) — not a general JSON parser.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use super::merge::{GlobalEvent, GlobalTimeline};
+use super::{EventKind, TraceCat};
+
+/// Render a merged timeline as Chrome-trace-event JSON, loadable in
+/// `chrome://tracing` or [Perfetto](https://ui.perfetto.dev).
+pub fn chrome_trace_json(tl: &GlobalTimeline) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("\"displayTimeUnit\": \"ms\",\n");
+    out.push_str(&format!("\"cylonflowWorld\": {},\n", tl.world));
+    out.push_str(&format!("\"cylonflowOffsets\": {},\n", join_i64(&tl.offsets_nanos)));
+    out.push_str(&format!("\"cylonflowOverflow\": {},\n", join_u64(&tl.overflow)));
+    out.push_str(&format!("\"cylonflowRecorded\": {},\n", join_u64(&tl.recorded)));
+    out.push_str("\"traceEvents\": [\n");
+    for (i, ev) in tl.events.iter().enumerate() {
+        let sep = if i + 1 == tl.events.len() { "" } else { "," };
+        let ts = ev.t_nanos as f64 / 1e3;
+        match ev.kind {
+            EventKind::Span => out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \"pid\": {}, \
+                 \"tid\": {}, \"ts\": {ts:.3}, \"dur\": {:.3}, \
+                 \"args\": {{\"a0\": {}, \"a1\": {}}}}}{sep}\n",
+                ev.name,
+                ev.cat.label(),
+                ev.rank,
+                ev.tid,
+                ev.dur_nanos as f64 / 1e3,
+                ev.a0,
+                ev.a1,
+            )),
+            EventKind::Instant => out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \
+                 \"pid\": {}, \"tid\": {}, \"ts\": {ts:.3}, \
+                 \"args\": {{\"a0\": {}, \"a1\": {}}}}}{sep}\n",
+                ev.name,
+                ev.cat.label(),
+                ev.rank,
+                ev.tid,
+                ev.a0,
+                ev.a1,
+            )),
+        }
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+fn join_i64(v: &[i64]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn join_u64(v: &[u64]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Parse JSON produced by [`chrome_trace_json`] back into a
+/// [`GlobalTimeline`] — the round-trip check that keeps the export
+/// format honest without external crates.
+pub fn parse_chrome_trace(text: &str) -> Result<GlobalTimeline, String> {
+    let world = find_number(text, "cylonflowWorld").unwrap_or(0.0) as usize;
+    let offsets_nanos = find_int_array(text, "cylonflowOffsets")?;
+    let overflow: Vec<u64> =
+        find_int_array(text, "cylonflowOverflow")?.into_iter().map(|x| x as u64).collect();
+    let recorded: Vec<u64> =
+        find_int_array(text, "cylonflowRecorded")?.into_iter().map(|x| x as u64).collect();
+    let body = find_array_body(text, "traceEvents").ok_or("missing traceEvents array")?;
+    let mut events = Vec::new();
+    let mut rest = body;
+    while let Some((obj, after)) = next_object(rest)? {
+        events.push(parse_event(obj)?);
+        rest = after;
+    }
+    Ok(GlobalTimeline { world, events, offsets_nanos, overflow, recorded })
+}
+
+/// Slice of `text` between the `[` and `]` following `"key":`.
+fn find_array_body<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)?;
+    let rest = &text[at + pat.len()..];
+    let open = rest.find('[')?;
+    let mut depth = 0usize;
+    for (i, c) in rest[open..].char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&rest[open + 1..open + i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn find_int_array(text: &str, key: &str) -> Result<Vec<i64>, String> {
+    let Some(body) = find_array_body(text, key) else {
+        return Err(format!("missing {key} array"));
+    };
+    body.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<i64>().map_err(|_| format!("bad integer in {key}: {s:?}")))
+        .collect()
+}
+
+fn find_number(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)?;
+    let rest = text[at + pat.len()..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Next `{…}` object in `rest` (brace-depth aware — event objects nest
+/// an `args` object): `Some((body_without_outer_braces, remainder))`.
+fn next_object(rest: &str) -> Result<Option<(&str, &str)>, String> {
+    let Some(open) = rest.find('{') else { return Ok(None) };
+    let mut depth = 0usize;
+    for (i, c) in rest[open..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(Some((
+                        &rest[open + 1..open + i],
+                        &rest[open + i + 1..],
+                    )));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unterminated object".into())
+}
+
+fn parse_event(body: &str) -> Result<GlobalEvent, String> {
+    // Split the nested args object off first so the flat field scan
+    // never sees its commas.
+    let (flat, args) = match body.find("\"args\"") {
+        None => (body.to_string(), String::new()),
+        Some(at) => {
+            let rest = &body[at..];
+            let open = rest.find('{').ok_or("args without object")?;
+            let close = rest[open..].find('}').ok_or("unterminated args")?;
+            let args = rest[open + 1..open + close].to_string();
+            (format!("{}{}", &body[..at], &rest[open + close + 1..]), args)
+        }
+    };
+    let mut name = String::new();
+    let mut cat = None;
+    let mut ph = String::new();
+    let mut pid = 0usize;
+    let mut tid = 0u64;
+    let mut ts_nanos = 0u64;
+    let mut dur_nanos = 0u64;
+    let scan = |src: &str, f: &mut dyn FnMut(&str, &str) -> Result<(), String>| {
+        for field in src.split(',') {
+            if field.trim().is_empty() {
+                continue;
+            }
+            let Some((key, value)) = field.split_once(':') else {
+                return Err(format!("malformed field: {field:?}"));
+            };
+            f(key.trim().trim_matches('"'), value.trim())?;
+        }
+        Ok(())
+    };
+    let micros_to_nanos = |v: &str, key: &str| -> Result<u64, String> {
+        let f: f64 = v.parse().map_err(|_| format!("bad number for {key}: {v:?}"))?;
+        Ok((f * 1e3).round() as u64)
+    };
+    scan(&flat, &mut |key, value| {
+        match key {
+            "name" => name = value.trim_matches('"').to_string(),
+            "cat" => {
+                let label = value.trim_matches('"');
+                cat = Some(
+                    TraceCat::parse(label).ok_or_else(|| format!("unknown cat {label:?}"))?,
+                );
+            }
+            "ph" => ph = value.trim_matches('"').to_string(),
+            "pid" => {
+                pid = value.parse().map_err(|_| format!("bad pid: {value:?}"))?;
+            }
+            "tid" => {
+                tid = value.parse().map_err(|_| format!("bad tid: {value:?}"))?;
+            }
+            "ts" => ts_nanos = micros_to_nanos(value, "ts")?,
+            "dur" => dur_nanos = micros_to_nanos(value, "dur")?,
+            _ => {} // "s" scope and unknown keys: ignored
+        }
+        Ok(())
+    })?;
+    let mut a0 = 0u64;
+    let mut a1 = 0u64;
+    scan(&args, &mut |key, value| {
+        match key {
+            "a0" => a0 = value.parse().map_err(|_| format!("bad a0: {value:?}"))?,
+            "a1" => a1 = value.parse().map_err(|_| format!("bad a1: {value:?}"))?,
+            _ => {}
+        }
+        Ok(())
+    })?;
+    let kind = match ph.as_str() {
+        "X" => EventKind::Span,
+        "i" => EventKind::Instant,
+        other => return Err(format!("unsupported ph {other:?}")),
+    };
+    if name.is_empty() {
+        return Err(format!("event missing name: {body:?}"));
+    }
+    Ok(GlobalEvent {
+        rank: pid,
+        tid,
+        t_nanos: ts_nanos,
+        dur_nanos,
+        kind,
+        cat: cat.ok_or("event missing cat")?,
+        name,
+        a0,
+        a1,
+    })
+}
+
+/// Terminal digest of a merged timeline: per-rank event/category counts,
+/// overflow, offsets, wall span. One header line plus one line per rank.
+pub fn text_summary(tl: &GlobalTimeline) -> String {
+    let mut out = format!(
+        "trace: world={} events={} span={:.2}ms dropped={}\n",
+        tl.world,
+        tl.events.len(),
+        tl.span_nanos() as f64 / 1e6,
+        tl.total_overflow(),
+    );
+    for rank in 0..tl.world {
+        let mut counts = [0usize; 6];
+        let mut n = 0usize;
+        for ev in tl.rank_events(rank) {
+            n += 1;
+            counts[match ev.cat {
+                TraceCat::Stage => 0,
+                TraceCat::Comm => 1,
+                TraceCat::Nb => 2,
+                TraceCat::Spill => 3,
+                TraceCat::Skew => 4,
+                TraceCat::App => 5,
+            }] += 1;
+        }
+        out.push_str(&format!(
+            "  rank {rank}: {n} events (stage={} comm={} nb={} spill={} skew={} app={}) \
+             offset={}ns overflow={}\n",
+            counts[0],
+            counts[1],
+            counts[2],
+            counts[3],
+            counts[4],
+            counts[5],
+            tl.offsets_nanos.get(rank).copied().unwrap_or(0),
+            tl.overflow.get(rank).copied().unwrap_or(0),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_timeline() -> GlobalTimeline {
+        GlobalTimeline {
+            world: 2,
+            events: vec![
+                GlobalEvent {
+                    rank: 0,
+                    tid: 1,
+                    t_nanos: 0,
+                    dur_nanos: 2_500,
+                    kind: EventKind::Span,
+                    cat: TraceCat::Stage,
+                    name: "join".into(),
+                    a0: 0,
+                    a1: 0,
+                },
+                GlobalEvent {
+                    rank: 1,
+                    tid: 2,
+                    t_nanos: 1_000,
+                    dur_nanos: 0,
+                    kind: EventKind::Instant,
+                    cat: TraceCat::Spill,
+                    name: "spill_write".into(),
+                    a0: 4096,
+                    a1: 7,
+                },
+                GlobalEvent {
+                    rank: 1,
+                    tid: 2,
+                    t_nanos: 2_000,
+                    dur_nanos: 500,
+                    kind: EventKind::Span,
+                    cat: TraceCat::Nb,
+                    name: "send_wire".into(),
+                    a0: 0,
+                    a1: 128,
+                },
+            ],
+            offsets_nanos: vec![0, -42],
+            overflow: vec![0, 3],
+            recorded: vec![1, 5],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let tl = sample_timeline();
+        let json = chrome_trace_json(&tl);
+        let back = parse_chrome_trace(&json).unwrap();
+        assert_eq!(back.world, tl.world);
+        assert_eq!(back.offsets_nanos, tl.offsets_nanos);
+        assert_eq!(back.overflow, tl.overflow);
+        assert_eq!(back.recorded, tl.recorded);
+        assert_eq!(back.events, tl.events);
+    }
+
+    #[test]
+    fn exported_json_has_chrome_fields() {
+        let json = chrome_trace_json(&sample_timeline());
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\": \"X\""));
+        assert!(json.contains("\"ph\": \"i\""));
+        assert!(json.contains("\"cat\": \"spill\""));
+        assert!(json.contains("\"pid\": 1"));
+        assert!(json.contains("\"args\": {\"a0\": 4096, \"a1\": 7}"));
+    }
+
+    #[test]
+    fn empty_timeline_roundtrips() {
+        let tl = GlobalTimeline {
+            world: 1,
+            events: vec![],
+            offsets_nanos: vec![0],
+            overflow: vec![0],
+            recorded: vec![0],
+        };
+        let back = parse_chrome_trace(&chrome_trace_json(&tl)).unwrap();
+        assert!(back.events.is_empty());
+        assert_eq!(back.world, 1);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_input() {
+        assert!(parse_chrome_trace("{}").is_err());
+        assert!(parse_chrome_trace("{\"traceEvents\": [ {\"ph\": \"X\"} ]}").is_err());
+        let json = chrome_trace_json(&sample_timeline());
+        assert!(parse_chrome_trace(&json[..json.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn summary_names_every_rank() {
+        let s = text_summary(&sample_timeline());
+        assert!(s.starts_with("trace: world=2 events=3"));
+        assert!(s.contains("rank 0: 1 events"));
+        assert!(s.contains("rank 1: 2 events"));
+        assert!(s.contains("dropped=3"));
+        assert!(s.contains("offset=-42ns"));
+    }
+}

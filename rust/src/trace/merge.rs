@@ -1,0 +1,204 @@
+//! Cross-rank trace merge: gather every rank's buffer, align clocks,
+//! produce one sorted [`GlobalTimeline`].
+//!
+//! Each [`crate::trace::TraceSink`] timestamps against its own epoch
+//! (the `Instant` captured at sink creation), so raw `t_nanos` values
+//! are not comparable across ranks. [`snapshot_global`] fixes that with
+//! **offset estimation from barrier handshakes**: every rank stamps its
+//! local clock immediately after each of [`OFFSET_ROUNDS`] barriers
+//! returns — a moment all ranks pass within one barrier-exit skew of
+//! each other — and allgathers the stamps. `offset[r]` is the median
+//! over rounds of `stamp_r − stamp_0`; subtracting it maps rank *r*'s
+//! timestamps onto rank 0's timebase, with error bounded by the barrier
+//! exit skew (microseconds on the in-process and local-TCP fabrics the
+//! repo runs on). Every rank gathers the same stamps, so every rank
+//! computes identical offsets and an identical merged timeline — the
+//! snapshot is SPMD-deterministic.
+//!
+//! The snapshot itself is a collective (every rank of the gang must
+//! call it) and deliberately runs on **untimed, untraced** context
+//! helpers ([`crate::comm::CommContext::allgather_bytes`] /
+//! `barrier_untimed`), so observing a run perturbs neither its phase
+//! timers nor its own event buffer.
+
+use super::{decode_events, encode_events, EventKind, TraceCat};
+use crate::comm::CommContext;
+use crate::error::Result;
+
+/// Barrier-handshake rounds used for clock-offset estimation; the
+/// per-rank offset is the median over these rounds.
+pub const OFFSET_ROUNDS: usize = 5;
+
+/// One event of the merged timeline: a [`crate::trace::WireEvent`] with
+/// its recording rank attached and its timestamp aligned to the common
+/// (rank 0, shifted-to-zero) timebase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GlobalEvent {
+    /// Recording rank (Chrome's `pid`).
+    pub rank: usize,
+    /// Recording thread's lane id (Chrome's `tid`).
+    pub tid: u64,
+    /// Aligned start time: nanoseconds since the earliest event in the
+    /// merged timeline.
+    pub t_nanos: u64,
+    /// Duration in nanoseconds (0 for instants).
+    pub dur_nanos: u64,
+    /// Span or instant.
+    pub kind: EventKind,
+    /// Subsystem category.
+    pub cat: TraceCat,
+    /// Event name.
+    pub name: String,
+    /// First argument slot.
+    pub a0: u64,
+    /// Second argument slot.
+    pub a1: u64,
+}
+
+/// The merged, clock-aligned, time-sorted view of one gang's trace
+/// buffers — what [`crate::trace::chrome`] exports.
+#[derive(Debug, Clone)]
+pub struct GlobalTimeline {
+    /// Gang size the snapshot was taken over.
+    pub world: usize,
+    /// All events, sorted by `(t_nanos, rank, tid)`.
+    pub events: Vec<GlobalEvent>,
+    /// Estimated clock offset of each rank relative to rank 0
+    /// (`offset[0] == 0`), in nanoseconds — positive means that rank's
+    /// sink epoch clock reads ahead of rank 0's.
+    pub offsets_nanos: Vec<i64>,
+    /// Per-rank ring-buffer eviction counts at snapshot time.
+    pub overflow: Vec<u64>,
+    /// Per-rank total events recorded (retained + evicted).
+    pub recorded: Vec<u64>,
+}
+
+impl GlobalTimeline {
+    /// Events recorded by `rank`.
+    pub fn rank_events(&self, rank: usize) -> impl Iterator<Item = &GlobalEvent> {
+        self.events.iter().filter(move |e| e.rank == rank)
+    }
+
+    /// Wall span of the merged timeline in nanoseconds (end of the
+    /// latest event; 0 when empty).
+    pub fn span_nanos(&self) -> u64 {
+        self.events.iter().map(|e| e.t_nanos + e.dur_nanos).max().unwrap_or(0)
+    }
+
+    /// Total events dropped to ring eviction across ranks.
+    pub fn total_overflow(&self) -> u64 {
+        self.overflow.iter().sum()
+    }
+}
+
+/// Estimate per-rank clock offsets from barrier handshakes (see the
+/// module docs). Returns `offset[r]` in nanoseconds relative to rank 0;
+/// identical on every rank. Collective — every rank must call it.
+pub fn estimate_offsets(ctx: &CommContext) -> Result<Vec<i64>> {
+    let p = ctx.world_size();
+    let sink = ctx.trace();
+    let mut samples: Vec<Vec<i64>> = vec![Vec::with_capacity(OFFSET_ROUNDS); p];
+    for _ in 0..OFFSET_ROUNDS {
+        ctx.barrier_untimed()?;
+        // All ranks pass this point within one barrier-exit skew. Read
+        // the epoch clock unconditionally: offsets are well-defined even
+        // for a disabled sink (its epoch exists), and `now_nanos`'s
+        // disabled fast path would return 0.
+        let stamp = sink.epoch_elapsed_nanos();
+        let blobs = ctx.allgather_bytes(stamp.to_le_bytes().to_vec())?;
+        let stamps: Vec<i64> = blobs
+            .iter()
+            .map(|b| {
+                let arr: [u8; 8] = b.as_slice().try_into().map_err(|_| {
+                    crate::error::Error::comm("clock-offset stamp has wrong length")
+                })?;
+                Ok(u64::from_le_bytes(arr) as i64)
+            })
+            .collect::<Result<_>>()?;
+        for r in 0..p {
+            samples[r].push(stamps[r] - stamps[0]);
+        }
+    }
+    Ok(samples.into_iter().map(|s| median(s)).collect())
+}
+
+fn median(mut v: Vec<i64>) -> i64 {
+    if v.is_empty() {
+        return 0;
+    }
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
+/// Gather every rank's buffer, align clocks and merge (see the module
+/// docs). Collective — every rank of the gang must call it; every rank
+/// returns the identical timeline. The local sink keeps its events
+/// (snapshotting is non-destructive; use
+/// [`crate::trace::TraceSink::reset`] between independent windows).
+pub fn snapshot_global(ctx: &CommContext) -> Result<GlobalTimeline> {
+    let p = ctx.world_size();
+    let sink = ctx.trace();
+    let offsets = estimate_offsets(ctx)?;
+
+    // Snapshot BEFORE the gather so the snapshot's own traffic can never
+    // appear in the timeline it produces.
+    let local = sink.events();
+    let payload = encode_events(&local, sink.overflow_count(), sink.recorded_count());
+    let blobs = ctx.allgather_bytes(payload)?;
+
+    let mut overflow = vec![0u64; p];
+    let mut recorded = vec![0u64; p];
+    // Aligned-but-unshifted events (signed: a rank whose epoch started
+    // after rank 0's can map to negative rank-0-relative times).
+    let mut staged: Vec<(i64, GlobalEvent)> = Vec::new();
+    for (rank, blob) in blobs.iter().enumerate() {
+        let (events, ovf, rec) = decode_events(blob)?;
+        overflow[rank] = ovf;
+        recorded[rank] = rec;
+        for ev in events {
+            let aligned = ev.t_nanos as i64 - offsets[rank];
+            staged.push((
+                aligned,
+                GlobalEvent {
+                    rank,
+                    tid: ev.tid,
+                    t_nanos: 0, // filled after the global shift below
+                    dur_nanos: ev.dur_nanos,
+                    kind: ev.kind,
+                    cat: ev.cat,
+                    name: ev.name,
+                    a0: ev.a0,
+                    a1: ev.a1,
+                },
+            ));
+        }
+    }
+
+    // Shift the whole timeline so it starts at zero, then sort.
+    let min_t = staged.iter().map(|(t, _)| *t).min().unwrap_or(0);
+    let mut events: Vec<GlobalEvent> = staged
+        .into_iter()
+        .map(|(t, mut ev)| {
+            ev.t_nanos = (t - min_t) as u64;
+            ev
+        })
+        .collect();
+    events.sort_by(|a, b| {
+        (a.t_nanos, a.rank, a.tid, a.dur_nanos).cmp(&(b.t_nanos, b.rank, b.tid, b.dur_nanos))
+    });
+
+    Ok(GlobalTimeline { world: p, events, offsets_nanos: offsets, overflow, recorded })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_order_insensitive() {
+        assert_eq!(median(vec![5, 1, 3]), 3);
+        assert_eq!(median(vec![2, 2, 9, 2, 2]), 2);
+        assert_eq!(median(vec![]), 0);
+        assert_eq!(median(vec![-7]), -7);
+    }
+}

@@ -1,0 +1,611 @@
+//! Event-level tracing — per-rank timelines behind the aggregate Fig 6
+//! phase breakdown.
+//!
+//! The metrics layer ([`crate::metrics`]) answers *how much* time each
+//! phase cost; diagnosing *why* an exchange stalled — a slow peer, a
+//! spill burst, an idle progress thread — needs timestamped events with
+//! rank and thread attached. Each rank owns one [`TraceSink`]: a
+//! lock-light bounded ring buffer of spans (operations with a duration)
+//! and instant events, filled by the instrumented hot layers (plan
+//! executor stages, streamed/overlapped collectives, the nonblocking
+//! progress engine, spill write/replay, skew decisions).
+//!
+//! Lifecycle of a traced run:
+//!
+//! 1. **Record.** [`TraceSink::span`] returns an RAII guard that records
+//!    one [`TraceEvent`] on drop; [`TraceSink::event`] records an
+//!    instant. Each push takes one short mutex critical section (a
+//!    `VecDeque` push plus at most one pop); timestamps are nanoseconds
+//!    since the sink's own epoch — no cross-rank clock is assumed while
+//!    recording. When the ring is full the **oldest** event is evicted
+//!    and [`TraceSink::overflow_count`] grows, so a bounded buffer
+//!    always holds the most recent window.
+//! 2. **Align + merge.** [`merge::snapshot_global`] gathers every
+//!    rank's buffer with the existing allgather, estimates per-rank
+//!    clock offsets from barrier handshakes, and merges everything into
+//!    one sorted [`merge::GlobalTimeline`] on rank 0's timebase.
+//! 3. **Export.** [`chrome::chrome_trace_json`] renders the timeline as
+//!    Chrome-trace-event JSON (loadable in `chrome://tracing` /
+//!    Perfetto), [`chrome::parse_chrome_trace`] reads it back (the
+//!    round-trip the CI leg checks), and [`chrome::text_summary`]
+//!    prints a terminal-friendly digest.
+//!
+//! Off by default: the executor threads [`crate::config::TraceConfig`]
+//! (`CYLONFLOW_TRACE`, `CYLONFLOW_TRACE_EVENTS`) into every
+//! [`crate::comm::CommContext`]. A disabled sink takes the zero-cost
+//! path — every helper returns after one branch on an immutable `bool`;
+//! no clock read, no lock, no allocation — so always-on call sites cost
+//! nothing when tracing is off (verified by the `trace_timeline` test
+//! that a traced-off suite records zero events).
+
+pub mod chrome;
+pub mod merge;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default ring capacity (events per rank) when `CYLONFLOW_TRACE` is on
+/// but `CYLONFLOW_TRACE_EVENTS` is not set.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Process-wide lane counter backing [`current_tid`]: worker and
+/// progress threads get distinct, stable lane ids so spans recorded by
+/// different threads never interleave within one timeline lane.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The calling thread's trace lane id (assigned on first use, process-wide
+/// unique). Chrome's `tid` field; spans nest per `(rank, tid)` lane.
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Subsystem a trace event belongs to (Chrome's `cat` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceCat {
+    /// Plan-executor stage (one span per executed plan node).
+    Stage,
+    /// Collective bodies and frame send/recv in the streamed exchanges.
+    Comm,
+    /// Nonblocking request lifecycle in the progress engine.
+    Nb,
+    /// Spill write/replay in the out-of-core exchange sink.
+    Spill,
+    /// Skew-aware repartitioning decisions.
+    Skew,
+    /// Application-defined events (free for user code).
+    App,
+}
+
+impl TraceCat {
+    /// Stable label used in exports (`cat` in Chrome trace JSON).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceCat::Stage => "stage",
+            TraceCat::Comm => "comm",
+            TraceCat::Nb => "nb",
+            TraceCat::Spill => "spill",
+            TraceCat::Skew => "skew",
+            TraceCat::App => "app",
+        }
+    }
+
+    /// Parse a label produced by [`TraceCat::label`].
+    pub fn parse(s: &str) -> Option<TraceCat> {
+        Some(match s {
+            "stage" => TraceCat::Stage,
+            "comm" => TraceCat::Comm,
+            "nb" => TraceCat::Nb,
+            "spill" => TraceCat::Spill,
+            "skew" => TraceCat::Skew,
+            "app" => TraceCat::App,
+            _ => return None,
+        })
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            TraceCat::Stage => 0,
+            TraceCat::Comm => 1,
+            TraceCat::Nb => 2,
+            TraceCat::Spill => 3,
+            TraceCat::Skew => 4,
+            TraceCat::App => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<TraceCat> {
+        Some(match b {
+            0 => TraceCat::Stage,
+            1 => TraceCat::Comm,
+            2 => TraceCat::Nb,
+            3 => TraceCat::Spill,
+            4 => TraceCat::Skew,
+            5 => TraceCat::App,
+            _ => return None,
+        })
+    }
+}
+
+/// Whether an event is a span (has a duration) or an instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A completed operation: `t_nanos` is its start, `dur_nanos` its
+    /// length. Recorded *at end time* (guard drop), so a span is always
+    /// well-formed — no dangling begin/end pairs survive ring eviction.
+    Span,
+    /// A point event (`dur_nanos == 0`).
+    Instant,
+}
+
+/// One recorded event, timestamped relative to its sink's epoch.
+///
+/// `name` is `&'static str` so the record path never allocates; the two
+/// `a0`/`a1` argument slots carry site-specific numbers (bytes, peer
+/// rank, sequence …) documented at each instrumentation site.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Start time: nanoseconds since the owning sink's epoch.
+    pub t_nanos: u64,
+    /// Duration in nanoseconds (0 for instants).
+    pub dur_nanos: u64,
+    /// Recording thread's lane id ([`current_tid`]).
+    pub tid: u64,
+    /// Span or instant.
+    pub kind: EventKind,
+    /// Subsystem category.
+    pub cat: TraceCat,
+    /// Event name (static — the record path never allocates).
+    pub name: &'static str,
+    /// First argument slot (site-specific; e.g. peer rank or bytes).
+    pub a0: u64,
+    /// Second argument slot (site-specific).
+    pub a1: u64,
+}
+
+/// The bounded ring behind one sink.
+struct Ring {
+    buf: VecDeque<TraceEvent>,
+    capacity: usize,
+    /// Events evicted oldest-first because the ring was full.
+    overflow: u64,
+    /// Total events accepted (retained + evicted).
+    recorded: u64,
+}
+
+/// Per-rank, lock-light bounded event buffer. See the module docs for
+/// the record → align/merge → export lifecycle. Shared as an `Arc`
+/// between the worker thread, the progress engine and the spill sinks of
+/// one rank; all methods take `&self`.
+pub struct TraceSink {
+    enabled: bool,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl TraceSink {
+    /// An enabled sink retaining at most `capacity` events (clamped to
+    /// ≥ 1); beyond that the oldest events are evicted and counted in
+    /// [`TraceSink::overflow_count`].
+    pub fn new(capacity: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            enabled: true,
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: VecDeque::new(),
+                capacity: capacity.max(1),
+                overflow: 0,
+                recorded: 0,
+            }),
+        })
+    }
+
+    /// The no-op sink: every helper returns after one branch — no clock
+    /// read, no lock, no allocation. This is what every instrumented
+    /// layer holds when `CYLONFLOW_TRACE` is off.
+    pub fn disabled() -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            enabled: false,
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { buf: VecDeque::new(), capacity: 1, overflow: 0, recorded: 0 }),
+        })
+    }
+
+    /// From config: enabled sinks get the configured capacity, disabled
+    /// config yields the zero-cost no-op sink.
+    pub fn from_config(cfg: &crate::config::TraceConfig) -> Arc<TraceSink> {
+        if cfg.enabled {
+            TraceSink::new(cfg.capacity)
+        } else {
+            TraceSink::disabled()
+        }
+    }
+
+    /// Whether this sink records anything at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Nanoseconds since this sink's epoch (0 when disabled — pair with
+    /// [`TraceSink::span_since`] for guard-free span recording).
+    #[inline]
+    pub fn now_nanos(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Nanoseconds since this sink's epoch, read unconditionally (no
+    /// disabled fast path) — the clock-alignment handshakes need a real
+    /// stamp even from a disabled sink. Hot paths should prefer
+    /// [`TraceSink::now_nanos`].
+    pub fn epoch_elapsed_nanos(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record an instant event (the `event!`-style helper).
+    #[inline]
+    pub fn event(&self, cat: TraceCat, name: &'static str, a0: u64, a1: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.epoch.elapsed().as_nanos() as u64;
+        self.push(TraceEvent {
+            t_nanos: t,
+            dur_nanos: 0,
+            tid: current_tid(),
+            kind: EventKind::Instant,
+            cat,
+            name,
+            a0,
+            a1,
+        });
+    }
+
+    /// Open a span (the `span!`-style helper): the returned RAII guard
+    /// records one [`EventKind::Span`] event when dropped. Guards on one
+    /// thread nest like scopes, so per-lane spans always nest in the
+    /// merged timeline.
+    #[inline]
+    pub fn span<'a>(&'a self, cat: TraceCat, name: &'static str) -> TraceSpan<'a> {
+        let start = if self.enabled { self.epoch.elapsed().as_nanos() as u64 } else { 0 };
+        TraceSpan { sink: self, cat, name, start_nanos: start, a0: 0, a1: 0 }
+    }
+
+    /// Record a span from an explicit start stamp ([`TraceSink::now_nanos`])
+    /// to now — for call sites where an RAII guard's borrow is awkward
+    /// (e.g. around a transport call that consumes its buffer).
+    #[inline]
+    pub fn span_since(
+        &self,
+        cat: TraceCat,
+        name: &'static str,
+        start_nanos: u64,
+        a0: u64,
+        a1: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.epoch.elapsed().as_nanos() as u64;
+        self.push(TraceEvent {
+            t_nanos: start_nanos,
+            dur_nanos: now.saturating_sub(start_nanos),
+            tid: current_tid(),
+            kind: EventKind::Span,
+            cat,
+            name,
+            a0,
+            a1,
+        });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().expect("trace ring poisoned");
+        if ring.buf.len() == ring.capacity {
+            ring.buf.pop_front();
+            ring.overflow += 1;
+        }
+        ring.buf.push_back(ev);
+        ring.recorded += 1;
+    }
+
+    /// Snapshot the retained events in insertion (record) order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring.lock().expect("trace ring poisoned").buf.iter().copied().collect()
+    }
+
+    /// Events evicted oldest-first because the ring was full.
+    pub fn overflow_count(&self) -> u64 {
+        self.ring.lock().expect("trace ring poisoned").overflow
+    }
+
+    /// Total events accepted (retained + evicted).
+    pub fn recorded_count(&self) -> u64 {
+        self.ring.lock().expect("trace ring poisoned").recorded
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("trace ring poisoned").buf.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().expect("trace ring poisoned").capacity
+    }
+
+    /// Drop all retained events and zero the counters (the ring keeps its
+    /// capacity). Lets one gang take several independent snapshots.
+    pub fn reset(&self) {
+        let mut ring = self.ring.lock().expect("trace ring poisoned");
+        ring.buf.clear();
+        ring.overflow = 0;
+        ring.recorded = 0;
+    }
+}
+
+/// RAII span guard from [`TraceSink::span`]: records one span event from
+/// construction to drop. [`TraceSpan::set_args`] attaches the two
+/// argument slots before the guard closes.
+pub struct TraceSpan<'a> {
+    sink: &'a TraceSink,
+    cat: TraceCat,
+    name: &'static str,
+    start_nanos: u64,
+    a0: u64,
+    a1: u64,
+}
+
+impl TraceSpan<'_> {
+    /// Set the span's argument slots (recorded at drop).
+    pub fn set_args(&mut self, a0: u64, a1: u64) {
+        self.a0 = a0;
+        self.a1 = a1;
+    }
+}
+
+impl Drop for TraceSpan<'_> {
+    fn drop(&mut self) {
+        self.sink.span_since(self.cat, self.name, self.start_nanos, self.a0, self.a1);
+    }
+}
+
+// ---- wire form (what the cross-rank gather moves) ----------------------
+
+/// An event decoded from another rank's gathered buffer: same shape as
+/// [`TraceEvent`] but with an owned name (static strings do not cross
+/// the wire) and without alignment applied yet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireEvent {
+    /// Start nanoseconds since the *recording rank's* epoch (unaligned).
+    pub t_nanos: u64,
+    /// Duration in nanoseconds (0 for instants).
+    pub dur_nanos: u64,
+    /// Recording thread's lane id.
+    pub tid: u64,
+    /// Span or instant.
+    pub kind: EventKind,
+    /// Subsystem category.
+    pub cat: TraceCat,
+    /// Event name.
+    pub name: String,
+    /// First argument slot.
+    pub a0: u64,
+    /// Second argument slot.
+    pub a1: u64,
+}
+
+/// Serialize one rank's buffer (plus its overflow/recorded counters) for
+/// the cross-rank gather. Little-endian, length-prefixed; decoded by
+/// [`decode_events`].
+pub fn encode_events(events: &[TraceEvent], overflow: u64, recorded: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + events.len() * 64);
+    out.extend_from_slice(&overflow.to_le_bytes());
+    out.extend_from_slice(&recorded.to_le_bytes());
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for ev in events {
+        out.extend_from_slice(&ev.t_nanos.to_le_bytes());
+        out.extend_from_slice(&ev.dur_nanos.to_le_bytes());
+        out.extend_from_slice(&ev.tid.to_le_bytes());
+        out.push(match ev.kind {
+            EventKind::Span => 0,
+            EventKind::Instant => 1,
+        });
+        out.push(ev.cat.to_u8());
+        let name = ev.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&ev.a0.to_le_bytes());
+        out.extend_from_slice(&ev.a1.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a buffer produced by [`encode_events`]:
+/// `(events, overflow_count, recorded_count)`.
+pub fn decode_events(data: &[u8]) -> crate::error::Result<(Vec<WireEvent>, u64, u64)> {
+    use crate::error::Error;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> crate::error::Result<&[u8]> {
+        if *pos + n > data.len() {
+            return Err(Error::invalid("truncated trace buffer"));
+        }
+        let s = &data[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let rd_u64 = |pos: &mut usize| -> crate::error::Result<u64> {
+        Ok(u64::from_le_bytes(take(pos, 8)?.try_into().expect("8 bytes")))
+    };
+    let overflow = rd_u64(&mut pos)?;
+    let recorded = rd_u64(&mut pos)?;
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().expect("4 bytes")) as usize;
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t_nanos = rd_u64(&mut pos)?;
+        let dur_nanos = rd_u64(&mut pos)?;
+        let tid = rd_u64(&mut pos)?;
+        let kind = match take(&mut pos, 1)?[0] {
+            0 => EventKind::Span,
+            1 => EventKind::Instant,
+            b => return Err(Error::invalid(format!("bad trace event kind {b}"))),
+        };
+        let cat = TraceCat::from_u8(take(&mut pos, 1)?[0])
+            .ok_or_else(|| Error::invalid("bad trace category"))?;
+        let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().expect("2 bytes")) as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|_| Error::invalid("trace event name not utf-8"))?;
+        let a0 = rd_u64(&mut pos)?;
+        let a1 = rd_u64(&mut pos)?;
+        events.push(WireEvent { t_nanos, dur_nanos, tid, kind, cat, name, a0, a1 });
+    }
+    Ok((events, overflow, recorded))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let s = TraceSink::disabled();
+        assert!(!s.enabled());
+        s.event(TraceCat::App, "x", 1, 2);
+        {
+            let _g = s.span(TraceCat::App, "y");
+        }
+        s.span_since(TraceCat::App, "z", 0, 0, 0);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.recorded_count(), 0);
+        assert_eq!(s.overflow_count(), 0);
+        assert_eq!(s.now_nanos(), 0);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first_and_counts_overflow() {
+        let s = TraceSink::new(4);
+        for i in 0..10u64 {
+            s.event(TraceCat::App, "e", i, 0);
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.recorded_count(), 10);
+        assert_eq!(s.overflow_count(), 6);
+        let kept: Vec<u64> = s.events().iter().map(|e| e.a0).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "the newest window survives");
+    }
+
+    #[test]
+    fn below_capacity_no_event_is_dropped() {
+        let s = TraceSink::new(64);
+        for i in 0..64u64 {
+            s.event(TraceCat::Comm, "e", i, 0);
+        }
+        assert_eq!(s.len(), 64);
+        assert_eq!(s.overflow_count(), 0);
+        assert_eq!(s.recorded_count(), 64);
+    }
+
+    #[test]
+    fn span_guard_records_duration_and_args() {
+        let s = TraceSink::new(8);
+        {
+            let mut g = s.span(TraceCat::Comm, "op");
+            g.set_args(3, 99);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let evs = s.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, EventKind::Span);
+        assert_eq!(evs[0].name, "op");
+        assert_eq!((evs[0].a0, evs[0].a1), (3, 99));
+        assert!(evs[0].dur_nanos >= 1_000_000, "sleep must be covered by the span");
+    }
+
+    #[test]
+    fn timestamps_are_monotone_per_thread() {
+        let s = TraceSink::new(16);
+        for _ in 0..5 {
+            s.event(TraceCat::App, "tick", 0, 0);
+        }
+        let ts: Vec<u64> = s.events().iter().map(|e| e.t_nanos).collect();
+        let mut sorted = ts.clone();
+        sorted.sort_unstable();
+        assert_eq!(ts, sorted);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_everything() {
+        let s = TraceSink::new(8);
+        s.event(TraceCat::Spill, "spill_write", 4096, 7);
+        {
+            let mut g = s.span(TraceCat::Nb, "send_wire");
+            g.set_args(1, 2048);
+        }
+        let evs = s.events();
+        let bytes = encode_events(&evs, 5, 7);
+        let (decoded, overflow, recorded) = decode_events(&bytes).unwrap();
+        assert_eq!(overflow, 5);
+        assert_eq!(recorded, 7);
+        assert_eq!(decoded.len(), evs.len());
+        for (d, e) in decoded.iter().zip(evs.iter()) {
+            assert_eq!(d.t_nanos, e.t_nanos);
+            assert_eq!(d.dur_nanos, e.dur_nanos);
+            assert_eq!(d.tid, e.tid);
+            assert_eq!(d.kind, e.kind);
+            assert_eq!(d.cat, e.cat);
+            assert_eq!(d.name, e.name);
+            assert_eq!((d.a0, d.a1), (e.a0, e.a1));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_events(&[1, 2, 3]).is_err());
+        let mut ok = encode_events(&[], 0, 0);
+        ok.truncate(10);
+        assert!(decode_events(&ok).is_err());
+    }
+
+    #[test]
+    fn reset_clears_events_and_counters() {
+        let s = TraceSink::new(2);
+        for i in 0..5u64 {
+            s.event(TraceCat::App, "e", i, 0);
+        }
+        assert!(s.overflow_count() > 0);
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.overflow_count(), 0);
+        assert_eq!(s.recorded_count(), 0);
+        assert_eq!(s.capacity(), 2);
+    }
+
+    #[test]
+    fn cat_labels_roundtrip() {
+        for cat in [
+            TraceCat::Stage,
+            TraceCat::Comm,
+            TraceCat::Nb,
+            TraceCat::Spill,
+            TraceCat::Skew,
+            TraceCat::App,
+        ] {
+            assert_eq!(TraceCat::parse(cat.label()), Some(cat));
+            assert_eq!(TraceCat::from_u8(cat.to_u8()), Some(cat));
+        }
+        assert_eq!(TraceCat::parse("nope"), None);
+        assert_eq!(TraceCat::from_u8(99), None);
+    }
+}

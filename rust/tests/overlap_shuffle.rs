@@ -179,7 +179,7 @@ fn overlap_stats_engage_and_reach_stage_reports() {
             let l = datagen::partition_for_rank(81, 4000, 0.5, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(82, 4000, 0.5, env.rank(), env.world_size());
             let rep = dist::pipeline(l, r, 1.0, env)?;
-            Ok((rep, env.overlap_snapshot()))
+            Ok((rep, env.snapshot().overlap))
         })
         .unwrap()
         .wait()
@@ -208,7 +208,7 @@ fn default_off_leaves_overlap_stats_zero() {
         .run(|env| {
             let t = datagen::partition_for_rank(91, 1000, 0.5, env.rank(), env.world_size());
             dist::shuffle_by_key(&t, &[0], env)?;
-            Ok(env.overlap_snapshot())
+            Ok(env.snapshot().overlap)
         })
         .unwrap()
         .wait()

@@ -147,7 +147,7 @@ fn zipf_join(p: usize, enabled: bool) -> (Vec<Table>, SkewStats) {
             } else {
                 dist::join(&l, &r, &opts, env)?
             };
-            Ok((j, env.skew_snapshot()))
+            Ok((j, env.snapshot().skew))
         })
         .unwrap()
         .wait()
@@ -210,7 +210,7 @@ fn dominant_hot_key_baseline_exceeds_2_5x_and_rebalances() {
                 } else {
                     dist::shuffle_by_key(&l, &[0], env)?
                 };
-                Ok((t, env.skew_snapshot()))
+                Ok((t, env.snapshot().skew))
             })
             .unwrap()
             .wait()
@@ -262,7 +262,7 @@ fn skew_groupby_keeps_groups_colocated_and_exact() {
                 dist::GroupbyStrategy::ShuffleFirst,
                 env,
             )?;
-            Ok((g, env.skew_snapshot()))
+            Ok((g, env.snapshot().skew))
         })
         .unwrap()
         .wait()
@@ -331,7 +331,7 @@ fn stable_sort_falls_back_to_strict_path() {
             let t = datagen::zipf_partition_for_rank(51, 3_000, 1.2, 4, rank, world);
             let opts = SortOptions { keys: vec![SortKey::asc(0)], stable: true };
             let s = dist::sort_balanced(&t, &opts, env)?;
-            Ok((s.num_rows(), env.skew_snapshot()))
+            Ok((s.num_rows(), env.snapshot().skew))
         })
         .unwrap()
         .wait()

@@ -104,7 +104,7 @@ fn dist_join_rows_and_spill(cluster: &Cluster, p: usize) -> (usize, SpillStats) 
             let l = datagen::partition_for_rank(91, 4000, 0.4, env.rank(), env.world_size());
             let r = datagen::partition_for_rank(92, 4000, 0.4, env.rank(), env.world_size());
             let j = dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
-            Ok((j.num_rows(), env.spill_snapshot()))
+            Ok((j.num_rows(), env.snapshot().spill))
         })
         .unwrap()
         .wait()
@@ -161,7 +161,7 @@ fn groupby_and_sort_survive_tiny_budgets() {
                 env,
             )?;
             let s = dist::sort(&t, &cylonflow::ops::SortOptions::by(0), env)?;
-            Ok((g.num_rows(), s.num_rows(), env.spill_snapshot()))
+            Ok((g.num_rows(), s.num_rows(), env.snapshot().spill))
         })
         .unwrap()
         .wait()

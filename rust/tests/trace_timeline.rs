@@ -1,0 +1,326 @@
+//! Trace subsystem integration tests: cross-rank merge ordering, span
+//! nesting, ring-buffer loss accounting, clock-offset alignment, the
+//! zero-cost disabled path, and the Chrome-trace JSON round-trip from a
+//! real traced run.
+
+use cylonflow::column::Column;
+use cylonflow::comm::{AlgoSet, CommContext, MemoryFabric};
+use cylonflow::config::Config;
+use cylonflow::datagen;
+use cylonflow::executor::{Cluster, CylonExecutor};
+use cylonflow::ops::{AggFun, AggSpec, JoinOptions};
+use cylonflow::plan::DistFrame;
+use cylonflow::proptest_lite::run_prop;
+use cylonflow::table::Table;
+use cylonflow::trace::chrome::{chrome_trace_json, parse_chrome_trace, text_summary};
+use cylonflow::trace::merge::{snapshot_global, GlobalTimeline};
+use cylonflow::trace::{EventKind, TraceCat, TraceSink};
+use std::sync::Arc;
+
+/// Gang of CommContexts over an in-process fabric, each with its own
+/// enabled sink of `capacity` events.
+fn traced_contexts(p: usize, capacity: usize) -> Vec<CommContext> {
+    MemoryFabric::create(p)
+        .into_iter()
+        .map(|c| {
+            CommContext::new(Box::new(c), AlgoSet::simple())
+                .with_trace(TraceSink::new(capacity))
+        })
+        .collect()
+}
+
+fn small_parts(rank: usize, p: usize) -> Vec<Table> {
+    (0..p)
+        .map(|j| {
+            Table::from_columns(vec![(
+                "k",
+                Column::from_i64(vec![rank as i64, j as i64, 7]),
+            )])
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Spans on one (rank, lane) either nest or are disjoint — RAII guards
+/// and the sequential progress thread cannot partially overlap.
+fn assert_lane_spans_nest(tl: &GlobalTimeline) {
+    let mut lanes: std::collections::BTreeMap<(usize, u64), Vec<(u64, u64, &str)>> =
+        std::collections::BTreeMap::new();
+    for e in &tl.events {
+        if e.kind == EventKind::Span {
+            lanes.entry((e.rank, e.tid)).or_default().push((
+                e.t_nanos,
+                e.t_nanos + e.dur_nanos,
+                e.name.as_str(),
+            ));
+        }
+    }
+    for ((rank, tid), mut spans) in lanes {
+        spans.sort_by_key(|&(start, end, _)| (start, std::cmp::Reverse(end)));
+        for w in spans.windows(2) {
+            let (a_start, a_end, a_name) = w[0];
+            let (b_start, b_end, b_name) = w[1];
+            assert!(
+                b_start >= a_end || b_end <= a_end,
+                "partial span overlap on rank {rank} lane {tid}: \
+                 {a_name} [{a_start},{a_end}) vs {b_name} [{b_start},{b_end})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_merged_timeline_is_sorted_nested_and_lossless_below_capacity() {
+    run_prop("merged timeline invariants over world 1–4", 8, |g| {
+        let p = g.usize_in(1, 4);
+        let handles: Vec<_> = traced_contexts(p, 1 << 16)
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ctx)| {
+                std::thread::spawn(move || {
+                    ctx.barrier().unwrap();
+                    ctx.shuffle(small_parts(rank, p)).unwrap();
+                    ctx.trace().event(TraceCat::App, "probe", rank as u64, 0);
+                    snapshot_global(&ctx).unwrap()
+                })
+            })
+            .collect();
+        let timelines: Vec<GlobalTimeline> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // SPMD-deterministic: every rank computed the identical merge.
+        for tl in &timelines[1..] {
+            assert_eq!(tl.events, timelines[0].events, "ranks must agree on the timeline");
+        }
+        let tl = &timelines[0];
+        assert_eq!(tl.world, p);
+        assert_eq!(tl.offsets_nanos.len(), p);
+        assert_eq!(tl.offsets_nanos[0], 0, "rank 0 is the reference timebase");
+
+        // Sorted by aligned start time.
+        for w in tl.events.windows(2) {
+            assert!(w[0].t_nanos <= w[1].t_nanos, "merged timeline must be time-sorted");
+        }
+        // Every rank contributed (at least its barrier span and probe).
+        for r in 0..p {
+            assert!(
+                tl.rank_events(r).any(|e| e.name == "probe" && e.a0 == r as u64),
+                "rank {r} events missing from the merge"
+            );
+            assert!(tl.rank_events(r).any(|e| e.name == "barrier"));
+        }
+        // Below capacity: nothing dropped, counts reconcile exactly.
+        assert_eq!(tl.total_overflow(), 0);
+        for r in 0..p {
+            assert_eq!(
+                tl.recorded[r] as usize,
+                tl.rank_events(r).count(),
+                "recorded count must equal retained events when nothing overflowed"
+            );
+        }
+        assert_lane_spans_nest(tl);
+    });
+}
+
+#[test]
+fn ring_eviction_is_oldest_first_and_counted_in_the_timeline() {
+    let ctx = traced_contexts(1, 4).pop().unwrap();
+    for i in 0..10u64 {
+        ctx.trace().event(TraceCat::App, "tick", i, 0);
+    }
+    let tl = snapshot_global(&ctx).unwrap();
+    let kept: Vec<u64> = tl.events.iter().map(|e| e.a0).collect();
+    assert_eq!(kept, vec![6, 7, 8, 9], "eviction must drop the oldest events first");
+    assert_eq!(tl.overflow, vec![6]);
+    assert_eq!(tl.recorded, vec![10]);
+    assert_eq!(tl.total_overflow(), 6);
+}
+
+#[test]
+fn clock_offsets_align_ranks_with_staggered_epochs() {
+    const STAGGER: u64 = 30_000_000; // 30ms between sink epochs
+    let p = 2;
+    let mut contexts = Vec::new();
+    for c in MemoryFabric::create(p) {
+        let ctx = CommContext::new(Box::new(c), AlgoSet::simple())
+            .with_trace(TraceSink::new(1 << 12));
+        // rank 1's sink epoch starts ~30ms after rank 0's, so its raw
+        // stamps run behind by that much until alignment corrects them
+        std::thread::sleep(std::time::Duration::from_nanos(STAGGER));
+        contexts.push(ctx);
+    }
+    let handles: Vec<_> = contexts
+        .into_iter()
+        .enumerate()
+        .map(|(rank, ctx)| {
+            std::thread::spawn(move || {
+                // all ranks pass the barrier within its exit skew, then
+                // stamp a probe — a true cross-rank simultaneous moment
+                ctx.barrier().unwrap();
+                ctx.trace().event(TraceCat::App, "sync_probe", rank as u64, 0);
+                snapshot_global(&ctx).unwrap()
+            })
+        })
+        .collect();
+    let tl = handles.into_iter().map(|h| h.join().unwrap()).next().unwrap();
+
+    // The estimated offset must surface the stagger: rank 1's epoch
+    // started later, so its raw stamps read LOWER than rank 0's.
+    assert!(
+        tl.offsets_nanos[1] < -((STAGGER / 2) as i64),
+        "offset {}ns does not reflect the ~{}ns epoch stagger",
+        tl.offsets_nanos[1],
+        STAGGER
+    );
+    // After alignment the simultaneous probes land close together —
+    // far closer than the stagger that separates the raw stamps.
+    let probe = |r: usize| {
+        tl.rank_events(r)
+            .find(|e| e.name == "sync_probe")
+            .map(|e| e.t_nanos as i64)
+            .expect("probe recorded")
+    };
+    let gap = (probe(0) - probe(1)).abs();
+    assert!(
+        gap < (STAGGER / 2) as i64,
+        "aligned probes {}ns apart — clock alignment failed to absorb the stagger",
+        gap
+    );
+}
+
+#[test]
+fn tracing_off_records_zero_events_and_snapshot_returns_none() {
+    // Default config: CYLONFLOW_TRACE unset, sinks are the no-op path.
+    let mut cfg = Config::default();
+    cfg.trace.enabled = false;
+    let cluster = Cluster::with_config(2, cfg).unwrap();
+    let exec = CylonExecutor::new(&cluster, 2).unwrap();
+    let out = exec
+        .run(|env| {
+            let l = datagen::partition_for_rank(11, 2000, 0.5, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(12, 2000, 0.5, env.rank(), env.world_size());
+            let j = cylonflow::dist::join(&l, &r, &JoinOptions::inner(0, 0), env)?;
+            let snap = env.trace_snapshot()?;
+            Ok((j.num_rows(), snap.is_none(), env.trace().recorded_count()))
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (rows, snap_is_none, recorded) in out {
+        assert!(rows > 0);
+        assert!(snap_is_none, "disabled tracing must yield no timeline");
+        assert_eq!(recorded, 0, "disabled sink must record zero events");
+    }
+}
+
+/// End-to-end: a traced multi-stage plan over an executor gang produces
+/// stage spans from every rank for every pipeline stage plus spill
+/// events, and the exported Chrome JSON round-trips losslessly through
+/// the hand-rolled parser.
+#[test]
+fn traced_pipeline_exports_chrome_json_that_roundtrips() {
+    let p = 2;
+    let mut cfg = Config::default();
+    cfg.trace.enabled = true;
+    cfg.exchange.frame_bytes = 4 << 10; // several frames per peer
+    cfg.exchange.spill_budget_bytes = 1 << 10; // force spill events
+    let cluster = Cluster::with_config(p, cfg).unwrap();
+    let exec = CylonExecutor::new(&cluster, p).unwrap();
+    let timelines = exec
+        .run(|env| {
+            let l = datagen::partition_for_rank(21, 3000, 0.5, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(22, 3000, 0.5, env.rank(), env.world_size());
+            DistFrame::scan(l)
+                .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+                .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+                .execute(env)?;
+            env.trace_snapshot()
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let tl = timelines
+        .into_iter()
+        .next()
+        .flatten()
+        .expect("enabled tracing must yield a timeline");
+
+    for rank in 0..p {
+        for stage in ["join", "groupby"] {
+            assert!(
+                tl.rank_events(rank).any(|e| e.kind == EventKind::Span
+                    && e.cat == TraceCat::Stage
+                    && e.name == stage),
+                "rank {rank} missing stage span '{stage}'"
+            );
+        }
+        assert!(
+            tl.rank_events(rank).any(|e| e.cat == TraceCat::Spill),
+            "rank {rank} missing spill events despite the tiny budget"
+        );
+        assert!(
+            tl.rank_events(rank).any(|e| e.name == "frame_send"),
+            "rank {rank} missing frame_send events"
+        );
+    }
+
+    // Chrome JSON round-trip: every field survives the export/parse pair.
+    let json = chrome_trace_json(&tl);
+    let parsed = parse_chrome_trace(&json).expect("exported JSON must parse");
+    assert_eq!(parsed.world, tl.world);
+    assert_eq!(parsed.offsets_nanos, tl.offsets_nanos);
+    assert_eq!(parsed.overflow, tl.overflow);
+    assert_eq!(parsed.recorded, tl.recorded);
+    assert_eq!(parsed.events, tl.events, "round-trip must be lossless");
+
+    // The text summary names every rank.
+    let summary = text_summary(&tl);
+    for rank in 0..p {
+        assert!(summary.contains(&format!("rank {rank}")), "summary missing rank {rank}");
+    }
+}
+
+/// The deprecated per-family accessors are thin wrappers over the
+/// unified snapshot — pin that equivalence until they are removed.
+#[test]
+#[allow(deprecated)]
+fn deprecated_accessors_match_unified_snapshot() {
+    let cluster = Cluster::local(1).unwrap();
+    let exec = CylonExecutor::new(&cluster, 1).unwrap();
+    exec.run(|env| {
+        let t = datagen::partition_for_rank(31, 500, 0.5, env.rank(), env.world_size());
+        cylonflow::dist::shuffle_by_key(&t, &[0], env)?;
+        let unified = env.snapshot();
+        assert_eq!(env.spill_snapshot(), unified.spill);
+        assert_eq!(env.skew_snapshot(), unified.skew);
+        assert_eq!(env.overlap_snapshot(), unified.overlap);
+        assert_eq!(env.metrics_snapshot().total(), unified.timers.total());
+        Ok(())
+    })
+    .unwrap()
+    .wait()
+    .unwrap();
+}
+
+/// `Arc<TraceSink>` sharing across threads: concurrent recorders never
+/// lose events below capacity (the lock-light path is still correct).
+#[test]
+fn concurrent_recorders_lose_nothing_below_capacity() {
+    let sink: Arc<TraceSink> = TraceSink::new(1 << 14);
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let sink = sink.clone();
+            std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    sink.event(TraceCat::App, "w", t as u64, i);
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    assert_eq!(sink.recorded_count(), 4000);
+    assert_eq!(sink.overflow_count(), 0);
+    assert_eq!(sink.len(), 4000);
+}
