@@ -150,6 +150,10 @@ pub struct BenchRecord {
     /// median ÷ overlapped median on the same workload (>1 means the
     /// overlapped path won; 0 = n/a for non-overlap benchmarks).
     pub overlap_ratio: f64,
+    /// Intra-rank speedup for the `local_*` pairs: serial median ÷
+    /// parallel median on the same workload under the morsel pool (>1
+    /// means the pool won; 0 = n/a for non-local benchmarks).
+    pub speedup: f64,
 }
 
 /// Render bench records as a stable, human-diffable JSON array (the
@@ -161,7 +165,7 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
         out.push_str(&format!(
             "  {{\"op\": \"{}\", \"dist\": \"{}\", \"rows\": {}, \"world\": {}, \
              \"median_ns\": {}, \"max_mean_before\": {:.3}, \"max_mean_after\": {:.3}, \
-             \"overlap_ratio\": {:.3}}}{sep}\n",
+             \"overlap_ratio\": {:.3}, \"speedup\": {:.3}}}{sep}\n",
             r.op,
             r.dist,
             r.rows,
@@ -169,7 +173,8 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
             r.median_ns,
             r.max_mean_before,
             r.max_mean_after,
-            r.overlap_ratio
+            r.overlap_ratio,
+            r.speedup
         ));
     }
     out.push_str("]\n");
@@ -205,6 +210,7 @@ fn parse_record(body: &str) -> Result<BenchRecord, String> {
         max_mean_before: 0.0,
         max_mean_after: 0.0,
         overlap_ratio: 0.0,
+        speedup: 0.0,
     };
     for field in body.split(',') {
         let Some((key, value)) = field.split_once(':') else {
@@ -227,6 +233,7 @@ fn parse_record(body: &str) -> Result<BenchRecord, String> {
             "max_mean_before" => r.max_mean_before = as_f64()?,
             "max_mean_after" => r.max_mean_after = as_f64()?,
             "overlap_ratio" => r.overlap_ratio = as_f64()?,
+            "speedup" => r.speedup = as_f64()?,
             _ => {} // forward-compatible: unknown keys ignored
         }
     }
@@ -282,6 +289,7 @@ mod tests {
             max_mean_before: 2.614,
             max_mean_after: 1.28,
             overlap_ratio: 1.125,
+            speedup: 2.75,
         }
     }
 
@@ -294,6 +302,7 @@ mod tests {
         assert_eq!(parsed[0].op, "join");
         assert_eq!(parsed[0].median_ns, 123_456);
         assert!((parsed[0].max_mean_before - 2.614).abs() < 1e-9);
+        assert!((parsed[0].speedup - 2.75).abs() < 1e-9);
         assert_eq!(parsed[1], record("sort", "uniform", 9));
     }
 

@@ -18,12 +18,18 @@
 //!                                             (chrome://tracing) plus a
 //!                                             text summary
 //! bench_driver bench  [--rows N] [--world P] [--iters K]
-//!                     [--ops join,groupby,sort,shuffle,shuffle_overlap]
+//!                     [--ops join,groupby,sort,shuffle,shuffle_overlap,
+//!                            local_join,local_groupby,local_sort,local_filter]
 //!                     [--out FILE]
 //!                                             fixed-seed CI trajectory:
 //!                                             uniform + zipf keys, skew
 //!                                             subsystem on, overlapped
 //!                                             vs blocking shuffle pair,
+//!                                             local_* = serial-vs-morsel-pool
+//!                                             pairs recording the speedup
+//!                                             ratio (a trailing-underscore
+//!                                             --ops entry like `local_`
+//!                                             selects the whole family),
 //!                                             emits BENCH_ci.json for
 //!                                             bench_gate
 //! ```
@@ -448,7 +454,17 @@ fn ablation(rows: usize) {
 /// measures the same strict shuffle with `CYLONFLOW_OVERLAP`-style
 /// config on and off over the TCP transport and records the overlapped
 /// median plus the blocking÷overlapped efficiency ratio.
-const BENCH_OPS: [&str; 5] = ["shuffle", "shuffle_overlap", "join", "groupby", "sort"];
+const BENCH_OPS: [&str; 9] = [
+    "shuffle",
+    "shuffle_overlap",
+    "join",
+    "groupby",
+    "sort",
+    "local_join",
+    "local_groupby",
+    "local_sort",
+    "local_filter",
+];
 /// The skewed CI workload: zipf(1.2) over 64 keys puts ~29% of all rows
 /// on the hottest key — enough to trip the hot-key detector while
 /// leaving a realistic cold tail.
@@ -558,6 +574,88 @@ fn bench_one(
         max_mean_before: before as f64 / 1000.0,
         max_mean_after: after as f64 / 1000.0,
         overlap_ratio: 0.0,
+        speedup: 0.0,
+    }
+}
+
+/// Benchmark one intra-rank operator serial vs parallel in-process (no
+/// gang): the same fixed-seed workload runs once through the disabled
+/// morsel pool and once through a pool sized from `CYLONFLOW_PARALLEL`
+/// (falling back to the machine's core count when the knob is unset, so
+/// the pair is meaningful on any runner). Asserts the two outputs are
+/// identical — the pool's determinism contract, DESIGN.md §11 — and
+/// records the serial÷parallel median speedup plus the parallel median.
+fn bench_local(
+    op: &'static str,
+    dist_name: &'static str,
+    rows: usize,
+    iters: usize,
+) -> BenchRecord {
+    use cylonflow::executor::MorselPool;
+    use cylonflow::trace::TraceSink;
+    let cfg = Config::from_env();
+    let threads = if cfg.parallel.threads > 1 {
+        cfg.parallel.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+    let l = bench_part(dist_name, 7001, rows, 0, 1);
+    let dim = bench_dimension(dist_name, rows, 0);
+    let run = |pool: &MorselPool| -> Table {
+        match op {
+            "local_join" => {
+                ops::join_with_pool(&l, &dim, &JoinOptions::inner(0, 0), &ops::NativeHasher, pool)
+                    .expect("local join")
+            }
+            "local_groupby" => ops::groupby_with_pool(
+                &l,
+                &[0],
+                &[AggSpec::new(1, AggFun::Sum)],
+                &ops::NativeHasher,
+                pool,
+            )
+            .expect("local groupby"),
+            "local_sort" => ops::sort_with_pool(&l, &SortOptions::by(0), pool).expect("local sort"),
+            "local_filter" => {
+                let c = l.column(0).expect("key column");
+                ops::filter_with_pool(&l, |r| c.is_valid(r) && r % 3 != 0, pool)
+            }
+            other => unreachable!("unknown local bench op {other}"),
+        }
+    };
+    let serial_pool = MorselPool::disabled();
+    let par_pool = MorselPool::new(threads, cfg.parallel.morsel_bytes, TraceSink::disabled());
+    let serial_out = run(&serial_pool);
+    let parallel_out = run(&par_pool);
+    assert!(
+        serial_out == parallel_out,
+        "{op}/{dist_name}: parallel output diverged from serial"
+    );
+    let ms = cylonflow::bench_util::bench(&format!("{op}/{dist_name} (serial)"), 1, iters, || {
+        run(&serial_pool);
+    });
+    let mp = cylonflow::bench_util::bench(
+        &format!("{op}/{dist_name} (parallel x{threads})"),
+        1,
+        iters,
+        || {
+            run(&par_pool);
+        },
+    );
+    println!("{}", ms.report());
+    println!("{}", mp.report());
+    let speedup = ms.median().as_nanos() as f64 / mp.median().as_nanos().max(1) as f64;
+    println!("{op}/{dist_name}: serial/parallel = {speedup:.3}");
+    BenchRecord {
+        op: op.to_string(),
+        dist: dist_name.to_string(),
+        rows: rows as u64,
+        world: 1,
+        median_ns: mp.median().as_nanos() as u64,
+        max_mean_before: 0.0,
+        max_mean_after: 0.0,
+        overlap_ratio: 0.0,
+        speedup,
     }
 }
 
@@ -637,6 +735,7 @@ fn bench_overlap(
         max_mean_before: 0.0,
         max_mean_after: 0.0,
         overlap_ratio: ratio,
+        speedup: 0.0,
     }
 }
 
@@ -704,7 +803,15 @@ fn bench_ci(argv: &[String]) -> i32 {
         Some(list) => {
             let wanted: Vec<&str> =
                 list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
-            BENCH_OPS.iter().copied().filter(|op| wanted.contains(op)).collect()
+            // An entry ending in '_' selects a family by prefix
+            // (`--ops local_` runs every local_* pair).
+            BENCH_OPS
+                .iter()
+                .copied()
+                .filter(|op| {
+                    wanted.iter().any(|w| w == op || (w.ends_with('_') && op.starts_with(w)))
+                })
+                .collect()
         }
     };
     if selected.is_empty() {
@@ -717,6 +824,8 @@ fn bench_ci(argv: &[String]) -> i32 {
         for &op in &selected {
             records.push(if op == "shuffle_overlap" {
                 bench_overlap(dist_name, rows, world, iters)
+            } else if op.starts_with("local_") {
+                bench_local(op, dist_name, rows, iters)
             } else {
                 bench_one(op, dist_name, rows, world, iters)
             });
@@ -736,13 +845,18 @@ fn bench_ci(argv: &[String]) -> i32 {
                     } else {
                         "-".into()
                     },
+                    if r.speedup > 0.0 {
+                        format!("{:.2}", r.speedup)
+                    } else {
+                        "-".into()
+                    },
                 ],
             )
         })
         .collect();
     print_table(
         &format!("CI bench trajectory ({rows} rows, p={world}, skew on)"),
-        &["median", "max/mean before", "max/mean after", "overlap x"],
+        &["median", "max/mean before", "max/mean after", "overlap x", "local x"],
         &table_rows,
     );
     if let Err(e) = std::fs::write(&out, records_to_json(&records)) {
@@ -750,6 +864,19 @@ fn bench_ci(argv: &[String]) -> i32 {
         return 1;
     }
     println!("\nwrote {out} ({} records)", records.len());
+    // A real measured run always takes > 0 ns, so a zero median means the
+    // record collected no samples (e.g. `--iters 0`). Fail loudly — a
+    // silently-empty trajectory would neuter the regression gate — but
+    // only after writing the file, so the partial data stays inspectable.
+    let empty: Vec<String> = records
+        .iter()
+        .filter(|r| r.median_ns == 0)
+        .map(|r| format!("{}/{}", r.op, r.dist))
+        .collect();
+    if !empty.is_empty() {
+        eprintln!("bench: records with no samples: {}", empty.join(", "));
+        return 1;
+    }
     0
 }
 

@@ -54,7 +54,8 @@ fn bootstrap_warnings(baseline: &[BenchRecord]) -> Vec<String> {
         .map(|b| {
             format!(
                 "bench_gate: warning: baseline row {}/{} is all-zero (bootstrapping) — \
-                 it enforces nothing until refreshed on a trusted runner",
+                 it enforces nothing until refreshed on a trusted runner \
+                 (refresh: `bench_driver bench --out BENCH_baseline.json`)",
                 b.op, b.dist
             )
         })
@@ -167,6 +168,7 @@ mod tests {
             max_mean_before: 0.0,
             max_mean_after: after,
             overlap_ratio: 0.0,
+            speedup: 0.0,
         }
     }
 
@@ -224,6 +226,7 @@ mod tests {
         let warnings = bootstrap_warnings(&baseline);
         assert_eq!(warnings.len(), 2, "{warnings:?}");
         assert!(warnings[0].contains("shuffle_overlap/zipf"));
+        assert!(warnings[0].contains("bench_driver bench --out BENCH_baseline.json"));
         assert!(warnings[1].contains("groupby/zipf"));
         // a row with any populated field gets no warning
         assert!(!warnings.iter().any(|w| w.contains("join/")));

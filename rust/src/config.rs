@@ -86,6 +86,37 @@ impl Default for OverlapConfig {
     }
 }
 
+/// Knobs of the morsel-driven intra-rank executor (see
+/// [`crate::executor::MorselPool`] and DESIGN.md §11). When `threads > 1`
+/// each rank splits its local-operator inputs into cache-sized morsels
+/// and runs the hot kernels (hash build/probe, aggregation, run-sort,
+/// filter, partition hashing, materialization) across a scoped worker
+/// pool — with results byte-identical to the serial path for any thread
+/// count or morsel size.
+///
+/// Off by default (`threads == 1`): every local operator takes the exact
+/// single-threaded code path it always had — one morsel covering the
+/// whole partition, no threads spawned, no atomics touched.
+///
+/// Environment variables: `CYLONFLOW_PARALLEL` (worker threads per rank,
+/// ≥ 1; `1` disables), `CYLONFLOW_MORSEL_BYTES` (target bytes of input
+/// per morsel, optional `k`/`m`/`g` suffix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads per rank for intra-rank morsel parallelism
+    /// (`1` = serial, the default).
+    pub threads: usize,
+    /// Target input bytes per morsel; the pool derives rows-per-morsel
+    /// from the table's mean row width (≥ 1 row per morsel).
+    pub morsel_bytes: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { threads: 1, morsel_bytes: 256 << 10 }
+    }
+}
+
 /// Knobs of the event-trace subsystem (see [`crate::trace`] and
 /// DESIGN.md §10). When enabled, every rank records timestamped spans
 /// and instant events from the instrumented hot layers into a bounded
@@ -163,6 +194,9 @@ pub struct Config {
     pub exchange: ExchangeConfig,
     /// Event-trace knobs (off by default; `CYLONFLOW_TRACE`).
     pub trace: TraceConfig,
+    /// Morsel-driven intra-rank parallelism knobs (off by default;
+    /// `CYLONFLOW_PARALLEL`).
+    pub parallel: ParallelConfig,
 }
 
 impl Default for Config {
@@ -174,6 +208,7 @@ impl Default for Config {
             kernel_block_rows: 65_536,
             exchange: ExchangeConfig::default(),
             trace: TraceConfig::default(),
+            parallel: ParallelConfig::default(),
         }
     }
 }
@@ -192,7 +227,10 @@ impl Config {
     /// exchange path), `CYLONFLOW_INFLIGHT_CHUNKS` (frames in flight per
     /// peer, ≥ 1), `CYLONFLOW_TRACE` (`1`/`on`/`true` enables event
     /// tracing), `CYLONFLOW_TRACE_EVENTS` (ring capacity in events per
-    /// rank, optional `k`/`m`/`g` suffix).
+    /// rank, optional `k`/`m`/`g` suffix), `CYLONFLOW_PARALLEL` (morsel
+    /// worker threads per rank, ≥ 1; `1` disables), and
+    /// `CYLONFLOW_MORSEL_BYTES` (target input bytes per morsel, optional
+    /// `k`/`m`/`g` suffix).
     pub fn from_env() -> Config {
         let mut c = Config::default();
         // CYLONFLOW_BACKEND is canonical; CYLONFLOW_COMM is the alias the
@@ -253,6 +291,14 @@ impl Config {
         if let Some(n) = env_bytes("CYLONFLOW_TRACE_EVENTS") {
             c.trace.capacity = n.max(1);
         }
+        if let Ok(n) = std::env::var("CYLONFLOW_PARALLEL") {
+            if let Ok(v) = n.trim().parse::<usize>() {
+                c.parallel.threads = v.max(1);
+            }
+        }
+        if let Some(n) = env_bytes("CYLONFLOW_MORSEL_BYTES") {
+            c.parallel.morsel_bytes = n.max(1);
+        }
         c
     }
 }
@@ -311,6 +357,8 @@ mod tests {
         assert_eq!(c.exchange.overlap.inflight_chunks, 2);
         assert!(!c.trace.enabled, "tracing must be opt-in");
         assert_eq!(c.trace.capacity, crate::trace::DEFAULT_CAPACITY);
+        assert_eq!(c.parallel.threads, 1, "intra-rank parallelism must be opt-in");
+        assert_eq!(c.parallel.morsel_bytes, 256 << 10);
     }
 
     #[test]

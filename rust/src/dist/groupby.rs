@@ -61,7 +61,7 @@ pub fn groupby(
             }
             let shuffled = shuffle_by_key(t, key_cols, env)?;
             env.time(Phase::Compute, || {
-                ops::groupby_with_hasher(&shuffled, key_cols, aggs, env.hasher())
+                ops::groupby_with_pool(&shuffled, key_cols, aggs, env.hasher(), env.pool())
             })
         }
         GroupbyStrategy::TwoPhase => groupby_two_phase(t, key_cols, aggs, env),
@@ -80,7 +80,7 @@ pub fn groupby_prepartitioned(
 ) -> Result<Table> {
     check_keys(t, key_cols, "dist::groupby_prepartitioned")?;
     env.time(Phase::Compute, || {
-        ops::groupby_with_hasher(t, key_cols, aggs, env.hasher())
+        ops::groupby_with_pool(t, key_cols, aggs, env.hasher(), env.pool())
     })
 }
 
@@ -108,7 +108,7 @@ pub(crate) fn groupby_two_phase(
 
     // Phase 1: local partial aggregation (core local operator).
     let partial = env.time(Phase::Compute, || {
-        ops::groupby_with_hasher(t, key_cols, &expanded, env.hasher())
+        ops::groupby_with_pool(t, key_cols, &expanded, env.hasher(), env.pool())
     })?;
 
     // Phase 2: shuffle the partials on the (now leading) key columns.
@@ -122,7 +122,7 @@ pub(crate) fn groupby_two_phase(
         .map(|(j, s)| AggSpec::new(nk + j, ops::groupby::merge_fun(s.fun)))
         .collect();
     let merged = env.time(Phase::Compute, || {
-        ops::groupby_with_hasher(&shuffled, &key_idx, &merge_specs, env.hasher())
+        ops::groupby_with_pool(&shuffled, &key_idx, &merge_specs, env.hasher(), env.pool())
     })?;
 
     // Phase 4: finalize — rename pass-through partials and compute the

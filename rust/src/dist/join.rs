@@ -94,7 +94,7 @@ pub fn join_with_exchange(
         Cow::Borrowed(right)
     };
     env.time(Phase::Compute, || {
-        ops::join_with_hasher(&l, &r, opts, env.hasher())
+        ops::join_with_pool(&l, &r, opts, env.hasher(), env.pool())
     })
 }
 

@@ -96,7 +96,7 @@ pub fn shuffle_by_key(t: &Table, key_cols: &[usize], env: &CylonEnv) -> Result<T
         return Ok(t.clone());
     }
     let parts = env.time(Phase::Auxiliary, || {
-        ops::partition_by_hash(t, key_cols, p, env.hasher())
+        ops::partition_by_hash_with_pool(t, key_cols, p, env.hasher(), env.pool())
     })?;
     env.comm().shuffle_streamed(parts)
 }

@@ -489,12 +489,12 @@ pub fn join_skew(
         return if bcast_right {
             let r_all = env.comm().allgather_streamed(right)?;
             env.time(Phase::Compute, || {
-                ops::join_with_hasher(left, &r_all, opts, env.hasher())
+                ops::join_with_pool(left, &r_all, opts, env.hasher(), env.pool())
             })
         } else {
             let l_all = env.comm().allgather_streamed(left)?;
             env.time(Phase::Compute, || {
-                ops::join_with_hasher(&l_all, right, opts, env.hasher())
+                ops::join_with_pool(&l_all, right, opts, env.hasher(), env.pool())
             })
         };
     }
@@ -576,7 +576,7 @@ pub fn join_skew(
     let l = env.comm().shuffle_streamed(lparts)?;
     let r = env.comm().shuffle_streamed(rparts)?;
     env.time(Phase::Compute, || {
-        ops::join_with_hasher(&l, &r, opts, env.hasher())
+        ops::join_with_pool(&l, &r, opts, env.hasher(), env.pool())
     })
 }
 
@@ -598,7 +598,7 @@ pub fn sort_balanced(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Ta
     super::sort::check_sort_keys(t, opts)?;
     let p = env.world_size();
     if p == 1 {
-        return env.time(Phase::Compute, || ops::sort(t, opts));
+        return env.time(Phase::Compute, || ops::sort_with_pool(t, opts, env.pool()));
     }
     let cfg = env.comm().exchange_config().skew.clone();
     if !cfg.enabled || opts.stable {
@@ -654,7 +654,7 @@ pub fn sort_balanced(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Ta
         });
     }
     let mine = env.comm().shuffle_streamed(parts)?;
-    env.time(Phase::Compute, || ops::sort(&mine, opts))
+    env.time(Phase::Compute, || ops::sort_with_pool(&mine, opts, env.pool()))
 }
 
 /// Derive `p − 1` splitters from the *sorted, keys-only* global sample,
@@ -773,7 +773,7 @@ pub(crate) fn groupby_shuffle_first_balanced(
         Ok((mine.gather(&cold_idx), mine.gather(&hot_idx)))
     })?;
     let cold_out = env.time(Phase::Compute, || {
-        ops::groupby_with_hasher(&cold_rows, key_cols, aggs, env.hasher())
+        ops::groupby_with_pool(&cold_rows, key_cols, aggs, env.hasher(), env.pool())
     })?;
     let hot_out = super::groupby::groupby_two_phase(&hot_rows, key_cols, aggs, env)?;
     Ok(Some(Table::concat_owned(vec![cold_out, hot_out])?))

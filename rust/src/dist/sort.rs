@@ -22,7 +22,7 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     check_sort_keys(t, opts)?;
     let p = env.world_size();
     if p == 1 {
-        return env.time(Phase::Compute, || ops::sort(t, opts));
+        return env.time(Phase::Compute, || ops::sort_with_pool(t, opts, env.pool()));
     }
     let key_cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
     let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
@@ -62,7 +62,7 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     // 4. Exchange (streaming: oversized sorts spill at the receiver),
     // then the core local sort on the received slice.
     let mine = env.comm().shuffle_streamed(parts)?;
-    env.time(Phase::Compute, || ops::sort(&mine, opts))
+    env.time(Phase::Compute, || ops::sort_with_pool(&mine, opts, env.pool()))
 }
 
 /// Sort that elides the sample/exchange entirely: a pure local sort,
@@ -74,7 +74,7 @@ pub fn sort(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
 /// sorted. The caller (normally the plan lineage pass) owns that proof.
 pub fn sort_prepartitioned(t: &Table, opts: &SortOptions, env: &CylonEnv) -> Result<Table> {
     check_sort_keys(t, opts)?;
-    env.time(Phase::Compute, || ops::sort(t, opts))
+    env.time(Phase::Compute, || ops::sort_with_pool(t, opts, env.pool()))
 }
 
 /// Shared argument check: non-empty key list, all key columns present.

@@ -3,6 +3,7 @@
 //! alive in actor state across calls — the pseudo-BSP statefulness), the
 //! store handle, the key-hasher and per-phase metrics.
 
+use super::pool::MorselPool;
 use crate::comm::CommContext;
 use crate::metrics::{MetricsSnapshot, Phase, PhaseTimers, SkewStats};
 use crate::ops::KeyHasher;
@@ -17,20 +18,38 @@ pub struct CylonEnv {
     comm: CommContext,
     store: CylonStore,
     hasher: Box<dyn KeyHasher>,
+    pool: Arc<MorselPool>,
     timers: RefCell<PhaseTimers>,
     skew: RefCell<SkewStats>,
 }
 
 impl CylonEnv {
     /// Assemble an environment (called once per actor at gang start).
+    /// Starts with the serial [`MorselPool`]; the executor swaps in the
+    /// configured pool via [`CylonEnv::with_pool`] when
+    /// `CYLONFLOW_PARALLEL` > 1.
     pub fn new(comm: CommContext, store: CylonStore, hasher: Box<dyn KeyHasher>) -> Self {
         CylonEnv {
             comm,
             store,
             hasher,
+            pool: MorselPool::disabled(),
             timers: RefCell::new(PhaseTimers::new()),
             skew: RefCell::new(SkewStats::default()),
         }
+    }
+
+    /// Replace the intra-rank worker pool (builder style; the executor
+    /// calls this once per actor with the config-built pool).
+    pub fn with_pool(mut self, pool: Arc<MorselPool>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// The intra-rank morsel pool local operators parallelize on
+    /// (the serial pool unless `CYLONFLOW_PARALLEL` > 1).
+    pub fn pool(&self) -> &MorselPool {
+        &self.pool
     }
 
     /// This actor's rank within the gang.
@@ -87,6 +106,7 @@ impl CylonEnv {
             spill: self.comm.peek_spill_stats(),
             skew: *self.skew.borrow(),
             overlap: self.comm.peek_overlap_stats(),
+            local: self.pool.stats(),
             counters: vec![
                 ("bytes_sent".to_string(), self.comm.bytes_sent()),
                 ("trace_events_dropped".to_string(), sink.overflow_count()),

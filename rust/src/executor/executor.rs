@@ -88,13 +88,18 @@ impl CylonExecutor {
         };
 
         // Instantiate the actor (env) on each reserved worker.
+        let parallel_cfg = config.parallel;
         for rank in (0..p).rev() {
             let comm = contexts.pop().expect("one context per rank");
             let store = CylonStore::new(inner.store.clone(), rank, p);
             let hasher = crate::runtime::make_hasher(&config);
             let worker_id = pg.worker_ids()[rank];
             inner.workers[worker_id].submit(Box::new(move |state| {
-                let env = CylonEnv::new(comm, store, hasher);
+                // Each actor gets its own morsel pool wired to its trace
+                // sink so worker spans land in that rank's timeline.
+                let pool =
+                    crate::executor::MorselPool::from_config(&parallel_cfg, comm.trace().clone());
+                let env = CylonEnv::new(comm, store, hasher).with_pool(pool);
                 state.actors.insert(
                     exec_id,
                     Box::new(ActorInstance { env, executable: None }),

@@ -27,6 +27,7 @@ mod env;
 #[allow(clippy::module_inception)]
 mod executor;
 mod placement;
+mod pool;
 pub mod process;
 mod worker;
 
@@ -36,4 +37,5 @@ pub use cluster::Cluster;
 pub use env::CylonEnv;
 pub use executor::{CylonExecutor, Executable};
 pub use placement::PlacementGroup;
+pub use pool::MorselPool;
 pub use process::{launch_process_gang, run_named_app, run_worker};

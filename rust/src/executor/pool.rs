@@ -1,0 +1,283 @@
+//! [`MorselPool`] — morsel-driven intra-rank parallelism (the paper's
+//! "operators exploit all cores of a worker" leg of the 30x claim).
+//!
+//! One pool lives in each [`crate::executor::CylonEnv`]. Operators split
+//! their partition into cache-sized **morsels** ([`MorselPool::ranges`])
+//! and hand the per-morsel kernel to [`MorselPool::run`], which drains
+//! the morsel queue with a work-stealing cursor across
+//! `CYLONFLOW_PARALLEL` scoped threads. Results come back **indexed by
+//! morsel**, so the caller reassembles them in morsel order and the
+//! output is independent of which worker ran which morsel — the
+//! scheduling is nondeterministic, the answer never is (DESIGN.md §11).
+//!
+//! Off by default: with `threads == 1` (the [`crate::config::ParallelConfig`]
+//! default) every helper takes the serial path — `ranges` returns one
+//! whole-partition morsel and `run` is a plain loop on the calling
+//! thread — so the disabled pool reproduces the pre-pool serial
+//! algorithms bit for bit and records no `local_*` stats.
+
+use crate::config::ParallelConfig;
+use crate::metrics::LocalStats;
+use crate::trace::{TraceCat, TraceSink};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-env worker pool scheduling cache-sized morsels across cores.
+/// Shared as an `Arc` so `dist` operators and the plan executor reuse
+/// one pool (and one set of `local_*` counters) per actor.
+pub struct MorselPool {
+    threads: usize,
+    morsel_bytes: usize,
+    trace: Arc<TraceSink>,
+    morsels: AtomicU64,
+    busy_nanos: AtomicU64,
+    idle_nanos: AtomicU64,
+}
+
+impl std::fmt::Debug for MorselPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MorselPool")
+            .field("threads", &self.threads)
+            .field("morsel_bytes", &self.morsel_bytes)
+            .finish()
+    }
+}
+
+impl MorselPool {
+    /// A pool with `threads` workers and `morsel_bytes` target morsel
+    /// size (both clamped to ≥ 1). `threads == 1` is the serial pool.
+    pub fn new(threads: usize, morsel_bytes: usize, trace: Arc<TraceSink>) -> Arc<MorselPool> {
+        Arc::new(MorselPool {
+            threads: threads.max(1),
+            morsel_bytes: morsel_bytes.max(1),
+            trace,
+            morsels: AtomicU64::new(0),
+            busy_nanos: AtomicU64::new(0),
+            idle_nanos: AtomicU64::new(0),
+        })
+    }
+
+    /// The serial pool (`threads == 1`): every `run` is a plain loop on
+    /// the calling thread. This is what the `*_with_pool` serial
+    /// wrappers and every default-configured env hold.
+    pub fn disabled() -> Arc<MorselPool> {
+        MorselPool::new(1, ParallelConfig::default().morsel_bytes, TraceSink::disabled())
+    }
+
+    /// Build from config: `CYLONFLOW_PARALLEL` / `CYLONFLOW_MORSEL_BYTES`
+    /// via [`crate::config::Config::from_env`]. Worker spans go to
+    /// `trace` (the env's sink) under [`TraceCat::Local`].
+    pub fn from_config(cfg: &ParallelConfig, trace: Arc<TraceSink>) -> Arc<MorselPool> {
+        MorselPool::new(cfg.threads, cfg.morsel_bytes, trace)
+    }
+
+    /// Whether [`MorselPool::run`] may use worker threads.
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Configured worker count (≥ 1; 1 means serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Target morsel size in bytes.
+    pub fn morsel_bytes(&self) -> usize {
+        self.morsel_bytes
+    }
+
+    /// Split `num_rows` rows into morsel `(start, len)` ranges sized so
+    /// each covers about [`MorselPool::morsel_bytes`] of data at
+    /// `bytes_per_row` bytes per row (both clamped to ≥ 1 row). The
+    /// serial pool returns one whole-partition range, so callers that
+    /// iterate ranges take literally the old serial loop. Ranges are
+    /// contiguous, ascending and exactly cover `0..num_rows`.
+    pub fn ranges(&self, num_rows: usize, bytes_per_row: usize) -> Vec<(usize, usize)> {
+        if num_rows == 0 {
+            return vec![(0, 0)];
+        }
+        if !self.is_parallel() {
+            return vec![(0, num_rows)];
+        }
+        let rows_per = (self.morsel_bytes / bytes_per_row.max(1)).max(1);
+        let mut out = Vec::with_capacity(num_rows.div_ceil(rows_per));
+        let mut start = 0;
+        while start < num_rows {
+            let len = rows_per.min(num_rows - start);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// Split `n` items into at most `parts` contiguous, near-even
+    /// `(start, len)` ranges (for run-sort, where ranges should match
+    /// worker count rather than cache size). Empty ranges are omitted;
+    /// `n == 0` yields one empty range.
+    pub fn even_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+        if n == 0 {
+            return vec![(0, 0)];
+        }
+        let parts = parts.clamp(1, n);
+        let base = n / parts;
+        let extra = n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0;
+        for i in 0..parts {
+            let len = base + usize::from(i < extra);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// Run `f(i)` for every morsel index `0..count` and return the
+    /// results **in index order**, regardless of which worker ran which
+    /// morsel. Serial pools (and `count <= 1`) run a plain loop on the
+    /// calling thread and record no stats; parallel pools drain a shared
+    /// atomic cursor across `min(threads, count)` scoped workers, each
+    /// recording one [`TraceCat::Local`] `morsel_worker` span
+    /// (a0 = morsels run, a1 = busy nanos) and feeding the pool's
+    /// `local_*` counters ([`MorselPool::stats`]).
+    ///
+    /// Panics in `f` propagate to the caller (no worker is left
+    /// detached — the pool uses scoped threads).
+    pub fn run<T: Send>(&self, count: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        if !self.is_parallel() || count <= 1 {
+            return (0..count).map(f).collect();
+        }
+        let workers = self.threads.min(count);
+        let cursor = AtomicUsize::new(0);
+        let wall = Instant::now();
+        let mut per_worker: Vec<(Vec<(usize, T)>, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut out = Vec::new();
+                        let mut span = self.trace.span(TraceCat::Local, "morsel_worker");
+                        let start = Instant::now();
+                        let mut ran = 0u64;
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= count {
+                                break;
+                            }
+                            out.push((i, f(i)));
+                            ran += 1;
+                        }
+                        let busy = start.elapsed().as_nanos() as u64;
+                        span.set_args(ran, busy);
+                        (out, busy)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+                .collect()
+        });
+        let wall_nanos = wall.elapsed().as_nanos() as u64;
+        let busy: u64 = per_worker.iter().map(|(_, b)| *b).sum();
+        self.morsels.fetch_add(count as u64, Ordering::Relaxed);
+        self.busy_nanos.fetch_add(busy, Ordering::Relaxed);
+        self.idle_nanos
+            .fetch_add((workers as u64 * wall_nanos).saturating_sub(busy), Ordering::Relaxed);
+        // Reassemble in morsel order: scheduling decided who computed
+        // each slot, never what the slot holds or where it lands.
+        let mut slots: Vec<Option<T>> = (0..count).map(|_| None).collect();
+        for (chunk, _) in per_worker.iter_mut() {
+            for (i, v) in chunk.drain(..) {
+                slots[i] = Some(v);
+            }
+        }
+        slots.into_iter().map(|o| o.expect("every morsel index was drained")).collect()
+    }
+
+    /// Monotonic `local_*` counters: morsels run, worker busy nanos and
+    /// worker idle nanos accumulated by every parallel
+    /// [`MorselPool::run`] on this pool (zero while serial).
+    pub fn stats(&self) -> LocalStats {
+        LocalStats {
+            morsels: self.morsels.load(Ordering::Relaxed),
+            busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
+            idle_nanos: self.idle_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pool_takes_one_morsel_and_records_nothing() {
+        let p = MorselPool::disabled();
+        assert!(!p.is_parallel());
+        assert_eq!(p.ranges(1000, 8), vec![(0, 1000)]);
+        let out = p.run(4, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert!(p.stats().is_zero());
+    }
+
+    #[test]
+    fn ranges_cover_exactly_and_respect_morsel_bytes() {
+        let p = MorselPool::new(3, 64, TraceSink::disabled());
+        let r = p.ranges(100, 8); // 8 rows per morsel
+        assert_eq!(r.len(), 13);
+        assert_eq!(r[0], (0, 8));
+        assert_eq!(r[12], (96, 4));
+        let covered: usize = r.iter().map(|(_, l)| l).sum();
+        assert_eq!(covered, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0, "contiguous ascending");
+        }
+        // 1-row morsels when a row is bigger than the budget
+        assert_eq!(p.ranges(3, 1 << 20).len(), 3);
+        assert_eq!(p.ranges(0, 8), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn even_ranges_split_near_evenly() {
+        assert_eq!(MorselPool::even_ranges(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(MorselPool::even_ranges(2, 4), vec![(0, 1), (1, 1)]);
+        assert_eq!(MorselPool::even_ranges(0, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn parallel_run_returns_index_order_and_counts() {
+        let p = MorselPool::new(4, 1, TraceSink::disabled());
+        assert!(p.is_parallel());
+        let out = p.run(257, |i| i as i64 * 3);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as i64 * 3);
+        }
+        let s = p.stats();
+        assert_eq!(s.morsels, 257);
+        assert!(s.busy_nanos > 0);
+    }
+
+    #[test]
+    fn repeated_parallel_runs_are_identical() {
+        let p = MorselPool::new(4, 1, TraceSink::disabled());
+        let a = p.run(100, |i| i * i);
+        let b = p.run(100, |i| i * i);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_spans_land_in_the_trace() {
+        let sink = TraceSink::new(64);
+        let p = MorselPool::new(3, 1, sink.clone());
+        p.run(10, |i| i);
+        let evs = sink.events();
+        assert!(!evs.is_empty());
+        let morsels: u64 = evs
+            .iter()
+            .filter(|e| e.cat == TraceCat::Local && e.name == "morsel_worker")
+            .map(|e| e.a0)
+            .sum();
+        assert_eq!(morsels, 10, "worker spans account for every morsel");
+    }
+}

@@ -28,7 +28,10 @@
 //!   nonblocking request layer (`comm::nb`) whose progress engine drives
 //!   the overlapped double-buffered exchanges (`CYLONFLOW_OVERLAP`).
 //! - [`executor`] — the paper's *stateful pseudo-BSP environment*: clusters,
-//!   placement groups (gang scheduling), `CylonExecutor` / `CylonEnv`.
+//!   placement groups (gang scheduling), `CylonExecutor` / `CylonEnv`, and
+//!   the per-env [`executor::MorselPool`] for morsel-driven intra-rank
+//!   parallelism (`CYLONFLOW_PARALLEL`; results stay byte-identical to
+//!   the serial path).
 //! - [`dist`] — distributed DDF operators composed from `ops` × `comm`:
 //!   shuffle join, groupby (shuffle-first / two-phase partial
 //!   aggregation / pre-partitioned), sample sort, set operators,

@@ -252,6 +252,50 @@ impl SkewStats {
     }
 }
 
+/// Morsel-executor counters (see [`crate::executor::MorselPool`] and
+/// DESIGN.md §11): how much work the intra-rank worker pool ran and how
+/// well it kept its workers fed. Like [`SpillStats`] these accumulate
+/// monotonically per worker and are attributed to stages by diffing
+/// snapshots. All zero when the pool is disabled (the default) — the
+/// serial path never touches them.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LocalStats {
+    /// Morsels (parallel task units) executed by the pool.
+    pub morsels: u64,
+    /// Nanoseconds pool workers spent running morsel bodies, summed
+    /// across workers (can exceed wall time — that is the point).
+    pub busy_nanos: u64,
+    /// Nanoseconds pool workers spent idle inside parallel regions
+    /// (region wall × workers − busy): scheduling overhead plus
+    /// tail-of-region starvation.
+    pub idle_nanos: u64,
+}
+
+impl LocalStats {
+    /// True when the pool ran nothing.
+    pub fn is_zero(&self) -> bool {
+        *self == LocalStats::default()
+    }
+
+    /// Sum another snapshot into this one.
+    pub fn merge(&mut self, other: &LocalStats) {
+        self.morsels += other.morsels;
+        self.busy_nanos += other.busy_nanos;
+        self.idle_nanos += other.idle_nanos;
+    }
+
+    /// Per-counter `self − earlier`, clamped at zero — attributes a
+    /// monotonically accumulating snapshot to one stage, exactly like
+    /// [`SpillStats::saturating_diff`].
+    pub fn saturating_diff(&self, earlier: &LocalStats) -> LocalStats {
+        LocalStats {
+            morsels: self.morsels.saturating_sub(earlier.morsels),
+            busy_nanos: self.busy_nanos.saturating_sub(earlier.busy_nanos),
+            idle_nanos: self.idle_nanos.saturating_sub(earlier.idle_nanos),
+        }
+    }
+}
+
 /// Phase timers attributed to one pipeline/plan stage (delta of the
 /// actor's monotonically accumulating timers across the stage,
 /// communication included). Emitted per executed plan node by
@@ -272,6 +316,9 @@ pub struct StageTiming {
     /// Communication/computation overlap this stage's exchanges achieved
     /// (zero when the overlap path is disabled, the default).
     pub overlap: OverlapStats,
+    /// Morsel-pool work this stage's local operators ran across cores
+    /// (zero when intra-rank parallelism is disabled, the default).
+    pub local: LocalStats,
 }
 
 /// One worker's unified metrics view at a point in time: every
@@ -291,6 +338,8 @@ pub struct MetricsSnapshot {
     pub skew: SkewStats,
     /// Communication/computation overlap counters.
     pub overlap: OverlapStats,
+    /// Morsel-executor (intra-rank parallelism) counters.
+    pub local: LocalStats,
     /// Named counters that don't belong to a structured family
     /// (`bytes_sent`, `trace_events_recorded`, …), sorted by name so the
     /// JSON emit is deterministic.
@@ -317,6 +366,7 @@ impl MetricsSnapshot {
             spill: self.spill.saturating_diff(&earlier.spill),
             skew: self.skew.saturating_diff(&earlier.skew),
             overlap: self.overlap.saturating_diff(&earlier.overlap),
+            local: self.local.saturating_diff(&earlier.local),
             counters: self
                 .counters
                 .iter()
@@ -335,6 +385,7 @@ impl MetricsSnapshot {
     ///  "hot_keys": 0, "rows_rerouted": 0,
     ///  "ratio_before_milli": 0, "ratio_after_milli": 0,
     ///  "chunks_overlapped": 0, "hidden_ns": 0, "wire_wait_ns": 0,
+    ///  "local_morsels": 0, "local_busy_ns": 0, "local_idle_ns": 0,
     ///  "counters": {"bytes_sent": 0}}
     /// ```
     pub fn to_json(&self) -> String {
@@ -351,6 +402,7 @@ impl MetricsSnapshot {
                 "\"hot_keys\": {}, \"rows_rerouted\": {}, ",
                 "\"ratio_before_milli\": {}, \"ratio_after_milli\": {}, ",
                 "\"chunks_overlapped\": {}, \"hidden_ns\": {}, \"wire_wait_ns\": {}, ",
+                "\"local_morsels\": {}, \"local_busy_ns\": {}, \"local_idle_ns\": {}, ",
                 "\"counters\": {{{}}}}}"
             ),
             self.timers.get(Phase::Compute).as_nanos(),
@@ -365,6 +417,9 @@ impl MetricsSnapshot {
             self.overlap.chunks_overlapped,
             self.overlap.hidden_nanos,
             self.overlap.wire_wait_nanos,
+            self.local.morsels,
+            self.local.busy_nanos,
+            self.local.idle_nanos,
             counters,
         )
     }
@@ -373,13 +428,14 @@ impl MetricsSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "metrics: compute={:.1}ms auxiliary={:.1}ms communication={:.1}ms \
-             spilled={}B skew_rerouted={} overlapped={} bytes_sent={}",
+             spilled={}B skew_rerouted={} overlapped={} morsels={} bytes_sent={}",
             self.timers.get(Phase::Compute).as_secs_f64() * 1e3,
             self.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
             self.timers.get(Phase::Communication).as_secs_f64() * 1e3,
             self.spill.spilled_bytes,
             self.skew.rows_rerouted,
             self.overlap.chunks_overlapped,
+            self.local.morsels,
             self.counter("bytes_sent"),
         )
     }
@@ -583,6 +639,22 @@ mod tests {
         assert_eq!(stage2.rows_rerouted, 40);
         assert_eq!(stage2.ratio_before_milli, 1200);
         assert_eq!(stage2.ratio_after_milli, 1100);
+    }
+
+    #[test]
+    fn local_stats_merge_and_diff() {
+        let mut a = LocalStats::default();
+        assert!(a.is_zero());
+        a.merge(&LocalStats { morsels: 8, busy_nanos: 900, idle_nanos: 100 });
+        a.merge(&LocalStats { morsels: 2, busy_nanos: 100, idle_nanos: 50 });
+        assert_eq!(a, LocalStats { morsels: 10, busy_nanos: 1000, idle_nanos: 150 });
+        let earlier = LocalStats { morsels: 8, busy_nanos: 900, idle_nanos: 100 };
+        assert_eq!(
+            a.saturating_diff(&earlier),
+            LocalStats { morsels: 2, busy_nanos: 100, idle_nanos: 50 }
+        );
+        // clamped, never negative
+        assert!(earlier.saturating_diff(&a).is_zero());
     }
 
     #[test]

@@ -1,20 +1,53 @@
 //! Filter / selection operators.
 
+use super::kernels::{approx_row_bytes, gather_table};
 use crate::column::Column;
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
 
 /// Keep rows where `pred(row)` is true (slow generic path).
-pub fn filter(t: &Table, pred: impl Fn(usize) -> bool) -> Table {
-    let idx: Vec<u32> = (0..t.num_rows())
-        .filter(|&r| pred(r))
-        .map(|r| r as u32)
-        .collect();
-    t.gather(&idx)
+pub fn filter(t: &Table, pred: impl Fn(usize) -> bool + Sync) -> Table {
+    filter_with_pool(t, pred, &MorselPool::disabled())
+}
+
+/// [`filter`] on a morsel pool: each morsel evaluates the predicate over
+/// its row range into a local selection vector; the vectors concatenate
+/// in morsel (= row) order, so the kept-row order — and hence the output
+/// table — is identical to the serial pass.
+pub fn filter_with_pool(
+    t: &Table,
+    pred: impl Fn(usize) -> bool + Sync,
+    pool: &MorselPool,
+) -> Table {
+    let ranges = pool.ranges(t.num_rows(), approx_row_bytes(t));
+    let chunks = pool.run(ranges.len(), |m| {
+        let (start, len) = ranges[m];
+        (start..start + len)
+            .filter(|&r| pred(r))
+            .map(|r| r as u32)
+            .collect::<Vec<u32>>()
+    });
+    let mut idx = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    for ch in chunks {
+        idx.extend(ch);
+    }
+    gather_table(t, &idx, pool)
 }
 
 /// Keep rows where a bool column is true (nulls drop) — the vectorized path.
 pub fn filter_by_column(t: &Table, mask_col: usize) -> Result<Table> {
+    filter_by_column_with_pool(t, mask_col, &MorselPool::disabled())
+}
+
+/// [`filter_by_column`] on a morsel pool (same selection-vector
+/// composition as [`filter_with_pool`], with the mask column driving the
+/// per-morsel inner loop).
+pub fn filter_by_column_with_pool(
+    t: &Table,
+    mask_col: usize,
+    pool: &MorselPool,
+) -> Result<Table> {
     let col = t.column(mask_col)?;
     let mask = match col {
         Column::Bool(c) => c,
@@ -25,13 +58,22 @@ pub fn filter_by_column(t: &Table, mask_col: usize) -> Result<Table> {
             )))
         }
     };
-    let mut idx = Vec::new();
-    for (r, &m) in mask.values.iter().enumerate() {
-        if m && col.is_valid(r) {
-            idx.push(r as u32);
+    let ranges = pool.ranges(t.num_rows(), approx_row_bytes(t));
+    let chunks = pool.run(ranges.len(), |m| {
+        let (start, len) = ranges[m];
+        let mut sel = Vec::new();
+        for r in start..start + len {
+            if mask.values[r] && col.is_valid(r) {
+                sel.push(r as u32);
+            }
         }
+        sel
+    });
+    let mut idx = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    for ch in chunks {
+        idx.extend(ch);
     }
-    Ok(t.gather(&idx))
+    Ok(gather_table(t, &idx, pool))
 }
 
 #[cfg(test)]

@@ -5,12 +5,15 @@
 //! instead runs a *partial* local groupby, shuffles the much smaller
 //! partials, and finalizes — the classic two-phase optimization.
 
-use super::kernels::{row_hashes, rows_equal, KeyHasher, NativeHasher};
+use super::kernels::{
+    approx_row_bytes, row_hashes_range, rows_equal, utf8_dict_encode, KeyHasher, NativeHasher,
+};
 use crate::column::{Column, ColumnBuilder};
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
 use crate::types::DType;
-use std::collections::HashMap;
+use crate::util::hash::{fast_map_with_capacity, FastMap};
 
 /// Aggregate functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,6 +137,38 @@ pub fn groupby_with_hasher(
     aggs: &[AggSpec],
     hasher: &dyn KeyHasher,
 ) -> Result<Table> {
+    groupby_with_pool(t, key_cols, aggs, hasher, &MorselPool::disabled())
+}
+
+/// Per-morsel local grouping result: the distinct keys seen in the morsel
+/// (as first-occurrence global row ids, in first-occurrence order) plus
+/// each morsel row's local group id.
+struct LocalGroups {
+    reps: Vec<u32>,
+    gid_of: Vec<u32>,
+}
+
+/// [`groupby_with_hasher`] on a morsel pool — the deterministic two-phase
+/// parallel aggregation (DESIGN.md §11):
+///
+/// 1. every morsel groups its rows locally in parallel (thread-local
+///    dictionaries — the "partials");
+/// 2. the local dictionaries merge serially **in morsel order**, which
+///    reproduces the serial first-occurrence group numbering exactly;
+/// 3. rows are stably scattered by group id, and workers accumulate
+///    disjoint group ranges in parallel — each accumulator still sees its
+///    rows in ascending row order, so even float sums are bitwise equal
+///    to the serial pass.
+///
+/// With the serial pool every phase degenerates to the classic one-pass
+/// hash groupby.
+pub fn groupby_with_pool(
+    t: &Table,
+    key_cols: &[usize],
+    aggs: &[AggSpec],
+    hasher: &dyn KeyHasher,
+    pool: &MorselPool,
+) -> Result<Table> {
     if key_cols.is_empty() {
         return Err(Error::invalid("groupby: empty key column list"));
     }
@@ -148,80 +183,238 @@ pub fn groupby_with_hasher(
         }
     }
     let n = t.num_rows();
-    let mut group_of = vec![0u32; n];
-    let mut reps: Vec<u32> = Vec::new();
 
-    // Fast path: single non-null int64 key — direct value-keyed map, no
-    // per-group bucket Vecs, no generic row comparisons (§Perf L3 iter 1:
-    // this path took groupby from 0.2x to >1x vs the row-wise baseline).
-    let fast = match (key_cols, t.column(key_cols[0])?) {
-        ([_], crate::column::Column::Int64(c)) if c.validity.is_none() => Some(&c.values),
+    // ---- phase 1+2: group ids (first-occurrence order) + rep rows ----
+    //
+    // Unified i64 key representation so one grouping loop serves three
+    // key shapes: single non-null int64 keys group on the value itself
+    // (§Perf L3 iter 1), single string keys group on dictionary codes
+    // (null → -1, its own group — the same "nulls group together"
+    // semantics as the hash path), everything else groups on row hashes
+    // with rows_equal resolving collisions.
+    let dict_codes: Option<Vec<i64>> = match (key_cols, t.column(key_cols[0])?) {
+        ([_], Column::Utf8(c)) => Some(utf8_dict_encode(c).1),
         _ => None,
     };
-    if let Some(keys) = fast {
-        let mut map: crate::util::hash::FastMap<i64, u32> =
-            crate::util::hash::fast_map_with_capacity(n);
-        for (i, &k) in keys.iter().enumerate() {
-            let gid = *map.entry(k).or_insert_with(|| {
-                reps.push(i as u32);
-                (reps.len() - 1) as u32
-            });
-            group_of[i] = gid;
-        }
+    let exact: Option<&[i64]> = match (key_cols, t.column(key_cols[0])?) {
+        ([_], Column::Int64(c)) if c.validity.is_none() => Some(&c.values),
+        _ => dict_codes.as_deref(),
+    };
+    let hashes: Option<Vec<i64>> = if exact.is_some() {
+        None
     } else {
-        // generic path: hash rows, chain per hash bucket, compare keys
-        let hashes = row_hashes(t, key_cols, hasher)?;
-        let mut head: HashMap<i64, Vec<u32>> = HashMap::new();
-        for i in 0..n {
-            let bucket = head.entry(hashes[i]).or_default();
-            let mut gid = u32::MAX;
-            for &cand in bucket.iter() {
-                if rows_equal(t, reps[cand as usize] as usize, key_cols, t, i, key_cols) {
-                    gid = cand;
-                    break;
-                }
-            }
-            if gid == u32::MAX {
-                gid = reps.len() as u32;
-                reps.push(i as u32);
-                bucket.push(gid);
-            }
-            group_of[i] = gid;
+        let ranges = pool.ranges(n, approx_row_bytes(t));
+        let chunks = pool.run(ranges.len(), |m| {
+            let (start, len) = ranges[m];
+            row_hashes_range(t, key_cols, hasher, start, len)
+        });
+        let mut h = Vec::with_capacity(n);
+        for ch in chunks {
+            h.extend(ch?);
         }
-    }
+        Some(h)
+    };
+
+    // Local grouping over one row range (the whole table when serial).
+    let group_range = |start: usize, len: usize| -> LocalGroups {
+        let mut reps: Vec<u32> = Vec::new();
+        let mut gid_of: Vec<u32> = Vec::with_capacity(len);
+        if let Some(keys) = exact {
+            let mut map: FastMap<i64, u32> = fast_map_with_capacity(len);
+            for row in start..start + len {
+                let gid = *map.entry(keys[row]).or_insert_with(|| {
+                    reps.push(row as u32);
+                    (reps.len() - 1) as u32
+                });
+                gid_of.push(gid);
+            }
+        } else {
+            let hashes = hashes.as_ref().expect("generic path has hashes");
+            let mut buckets: FastMap<i64, Vec<u32>> = FastMap::default();
+            for row in start..start + len {
+                let bucket = buckets.entry(hashes[row]).or_default();
+                let mut gid = u32::MAX;
+                for &cand in bucket.iter() {
+                    if rows_equal(t, reps[cand as usize] as usize, key_cols, t, row, key_cols) {
+                        gid = cand;
+                        break;
+                    }
+                }
+                if gid == u32::MAX {
+                    gid = reps.len() as u32;
+                    reps.push(row as u32);
+                    bucket.push(gid);
+                }
+                gid_of.push(gid);
+            }
+        }
+        LocalGroups { reps, gid_of }
+    };
+
+    let ranges = pool.ranges(n, approx_row_bytes(t));
+    let locals = pool.run(ranges.len(), |m| {
+        let (start, len) = ranges[m];
+        group_range(start, len)
+    });
+
+    // Merge local dictionaries in morsel order. Iterating morsels
+    // ascending and each morsel's reps in local first-occurrence order
+    // visits every key first at its global first occurrence, so global
+    // gids and reps equal the serial single-pass assignment.
+    let (reps, group_of): (Vec<u32>, Vec<u32>) = if locals.len() == 1 {
+        let l = locals.into_iter().next().expect("one morsel");
+        (l.reps, l.gid_of)
+    } else {
+        let mut reps: Vec<u32> = Vec::new();
+        let mut group_of: Vec<u32> = Vec::with_capacity(n);
+        let mut exact_map: FastMap<i64, u32> = FastMap::default();
+        let mut hash_map: FastMap<i64, Vec<u32>> = FastMap::default();
+        for l in locals {
+            let mut remap: Vec<u32> = Vec::with_capacity(l.reps.len());
+            for &rep in &l.reps {
+                let gid = if let Some(keys) = exact {
+                    *exact_map.entry(keys[rep as usize]).or_insert_with(|| {
+                        reps.push(rep);
+                        (reps.len() - 1) as u32
+                    })
+                } else {
+                    let hashes = hashes.as_ref().expect("generic path has hashes");
+                    let bucket = hash_map.entry(hashes[rep as usize]).or_default();
+                    let mut gid = u32::MAX;
+                    for &cand in bucket.iter() {
+                        if rows_equal(
+                            t,
+                            reps[cand as usize] as usize,
+                            key_cols,
+                            t,
+                            rep as usize,
+                            key_cols,
+                        ) {
+                            gid = cand;
+                            break;
+                        }
+                    }
+                    if gid == u32::MAX {
+                        gid = reps.len() as u32;
+                        reps.push(rep);
+                        bucket.push(gid);
+                    }
+                    gid
+                };
+                remap.push(gid);
+            }
+            group_of.extend(l.gid_of.iter().map(|&lg| remap[lg as usize]));
+        }
+        (reps, group_of)
+    };
     let ngroups = reps.len();
 
-    // Accumulate per (group, agg).
-    let mut accs = vec![Acc::new(); ngroups * aggs.len()];
-    for (ai, a) in aggs.iter().enumerate() {
-        let col = t.column(a.col)?;
-        match col {
-            Column::Int64(c) => {
-                for i in 0..n {
-                    if col.is_valid(i) {
-                        accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i] as f64);
-                    }
-                }
-            }
-            Column::Float64(c) => {
-                for i in 0..n {
-                    if col.is_valid(i) {
-                        accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i]);
-                    }
-                }
-            }
-            _ => unreachable!("validated numeric"),
+    // ---- phase 3: accumulate per (group, agg) ----
+    let agg_cols: Vec<&Column> = {
+        let mut v = Vec::with_capacity(aggs.len());
+        for a in aggs {
+            v.push(t.column(a.col)?);
         }
-    }
+        v
+    };
+    let accs: Vec<Acc> = if pool.is_parallel() && ngroups > 1 {
+        // Stable scatter rows by gid: rows of each group land contiguous
+        // and ascending, so each group's accumulator sees the same value
+        // sequence as the serial row-order pass.
+        let mut counts = vec![0u32; ngroups];
+        for &g in &group_of {
+            counts[g as usize] += 1;
+        }
+        let mut offsets = vec![0u32; ngroups + 1];
+        for g in 0..ngroups {
+            offsets[g + 1] = offsets[g] + counts[g];
+        }
+        let mut order = vec![0u32; n];
+        let mut cursor = offsets[..ngroups].to_vec();
+        for (row, &g) in group_of.iter().enumerate() {
+            order[cursor[g as usize] as usize] = row as u32;
+            cursor[g as usize] += 1;
+        }
+        // Chunk groups so each task covers roughly equal row mass.
+        let target = n.div_ceil(pool.threads()).max(1);
+        let mut tasks: Vec<(usize, usize)> = Vec::new();
+        let (mut g0, mut mass) = (0usize, 0usize);
+        for g in 0..ngroups {
+            mass += counts[g] as usize;
+            if mass >= target || g + 1 == ngroups {
+                tasks.push((g0, g + 1));
+                g0 = g + 1;
+                mass = 0;
+            }
+        }
+        let chunks = pool.run(tasks.len(), |ti| {
+            let (lo, hi) = tasks[ti];
+            let mut local = vec![Acc::new(); (hi - lo) * aggs.len()];
+            for (ai, _) in aggs.iter().enumerate() {
+                let col = agg_cols[ai];
+                for g in lo..hi {
+                    let rows = &order[offsets[g] as usize..offsets[g + 1] as usize];
+                    let acc = &mut local[(g - lo) * aggs.len() + ai];
+                    match col {
+                        Column::Int64(c) => {
+                            for &row in rows {
+                                if col.is_valid(row as usize) {
+                                    acc.update(c.values[row as usize] as f64);
+                                }
+                            }
+                        }
+                        Column::Float64(c) => {
+                            for &row in rows {
+                                if col.is_valid(row as usize) {
+                                    acc.update(c.values[row as usize]);
+                                }
+                            }
+                        }
+                        _ => unreachable!("validated numeric"),
+                    }
+                }
+            }
+            local
+        });
+        let mut accs = Vec::with_capacity(ngroups * aggs.len());
+        for ch in chunks {
+            accs.extend(ch);
+        }
+        accs
+    } else {
+        let mut accs = vec![Acc::new(); ngroups * aggs.len()];
+        for (ai, _) in aggs.iter().enumerate() {
+            let col = agg_cols[ai];
+            match col {
+                Column::Int64(c) => {
+                    for i in 0..n {
+                        if col.is_valid(i) {
+                            accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i] as f64);
+                        }
+                    }
+                }
+                Column::Float64(c) => {
+                    for i in 0..n {
+                        if col.is_valid(i) {
+                            accs[group_of[i] as usize * aggs.len() + ai].update(c.values[i]);
+                        }
+                    }
+                }
+                _ => unreachable!("validated numeric"),
+            }
+        }
+        accs
+    };
 
-    // Materialize: gather key columns at rep rows + build agg columns.
-    let mut columns: Vec<Column> = Vec::with_capacity(key_cols.len() + aggs.len());
+    // ---- phase 4: materialize keys + per-agg output columns ----
     let mut schema = crate::types::Schema::default();
+    let mut columns: Vec<Column> = Vec::with_capacity(key_cols.len() + aggs.len());
     for &kc in key_cols {
         schema = schema.with_field(t.schema().field(kc)?.clone());
         columns.push(t.column(kc)?.gather(&reps));
     }
-    for (ai, a) in aggs.iter().enumerate() {
+    let mut out_dtypes = Vec::with_capacity(aggs.len());
+    for a in aggs {
         let src_name = &t.schema().field(a.col)?.name;
         let name = format!("{}_{}", a.fun.label(), src_name);
         let src_dtype = t.schema().dtype(a.col)?;
@@ -232,9 +425,16 @@ pub fn groupby_with_hasher(
             (_, DType::Int64) => DType::Int64,
             _ => DType::Float64,
         };
+        out_dtypes.push(out_dtype);
+        schema = schema.with_field(crate::types::Field::new(name, out_dtype));
+    }
+    // One output column per aggregate — independent builds, so they run
+    // as parallel tasks without changing any cell.
+    let agg_columns = pool.run(aggs.len(), |ai| {
+        let out_dtype = out_dtypes[ai];
         let mut b = ColumnBuilder::with_capacity(out_dtype, ngroups);
         for g in 0..ngroups {
-            match accs[g * aggs.len() + ai].finish(a.fun) {
+            match accs[g * aggs.len() + ai].finish(aggs[ai].fun) {
                 None => b.push_null(),
                 Some(v) => match out_dtype {
                     DType::Int64 => b.push_i64(v as i64),
@@ -243,9 +443,9 @@ pub fn groupby_with_hasher(
                 },
             }
         }
-        schema = schema.with_field(crate::types::Field::new(name, out_dtype));
-        columns.push(b.finish());
-    }
+        b.finish()
+    });
+    columns.extend(agg_columns);
     Table::new(schema, columns)
 }
 
@@ -279,6 +479,7 @@ pub fn merge_fun(fun: AggFun) -> AggFun {
 mod tests {
     use super::*;
     use crate::types::Value;
+    use std::collections::HashMap;
 
     fn t() -> Table {
         Table::from_columns(vec![

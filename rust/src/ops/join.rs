@@ -5,12 +5,16 @@
 //! key columns first, then each worker runs this local join on its
 //! co-partitioned pair.
 
-use super::kernels::{row_hashes, rows_cmp, rows_equal, KeyHasher, NativeHasher};
+use super::kernels::{
+    approx_row_bytes, row_hashes_range, rows_cmp, rows_equal, utf8_dict_encode, utf8_dict_lookup,
+    KeyHasher, NativeHasher,
+};
 use crate::column::Column;
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
+use crate::util::hash::{fast_map_with_capacity, partition_of, FastMap};
 use std::cmp::Ordering;
-use std::collections::HashMap;
 
 /// Join type (SQL semantics; nulls never match nulls).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,12 +112,29 @@ pub fn join_with_hasher(
     opts: &JoinOptions,
     hasher: &dyn KeyHasher,
 ) -> Result<Table> {
+    join_with_pool(left, right, opts, hasher, &MorselPool::disabled())
+}
+
+/// [`join_with_hasher`] on a morsel pool. The hash join partitions the
+/// build side by key hash, builds one hash table per partition in
+/// parallel (stable ascending scatter keeps every chain's LIFO order
+/// identical to the serial build), then probes in parallel morsels whose
+/// match lists concatenate in morsel (= probe row) order — so the output
+/// is byte-identical to the serial join (DESIGN.md §11). Sort-merge joins
+/// stay serial.
+pub fn join_with_pool(
+    left: &Table,
+    right: &Table,
+    opts: &JoinOptions,
+    hasher: &dyn KeyHasher,
+    pool: &MorselPool,
+) -> Result<Table> {
     opts.validate(left, right)?;
     let (lidx, ridx) = match opts.algo {
-        JoinAlgo::Hash => hash_join_indices(left, right, opts, hasher)?,
+        JoinAlgo::Hash => hash_join_indices(left, right, opts, hasher, pool)?,
         JoinAlgo::SortMerge => sort_merge_indices(left, right, opts)?,
     };
-    materialize(left, right, &lidx, &ridx)
+    materialize(left, right, &lidx, &ridx, pool)
 }
 
 /// A row is a valid join key only if *no* key column is null (SQL).
@@ -121,118 +142,174 @@ fn row_key_valid(t: &Table, row: usize, cols: &[usize]) -> bool {
     cols.iter().all(|&c| t.columns()[c].is_valid(row))
 }
 
+/// How the per-row i64 key representation relates to key equality.
+///
+/// `Exact`/`Dict`: i64 equality *is* key equality (single non-null int64
+/// keys, or single string keys dictionary-encoded against the build
+/// side). `Hashed`: the i64 is a row hash — collisions are resolved with
+/// [`rows_equal`] and null keys are filtered via [`row_key_valid`].
+enum KeyRep<'a> {
+    Exact { b: &'a [i64], p: &'a [i64] },
+    Dict { b: Vec<i64>, p: Vec<i64> },
+    Hashed { b: Vec<i64>, p: Vec<i64> },
+}
+
 fn hash_join_indices(
     left: &Table,
     right: &Table,
     opts: &JoinOptions,
     hasher: &dyn KeyHasher,
+    pool: &MorselPool,
 ) -> Result<(Vec<u32>, Vec<u32>)> {
     // Build on the smaller side; probe from the larger. For Right/Left we
     // keep orientation fixed (build=right for Left, build=left for Right)
     // so the outer side streams.
-    let (build_left, swap_back) = match opts.join_type {
-        JoinType::Inner | JoinType::FullOuter => (left.num_rows() <= right.num_rows(), false),
-        JoinType::Left => (false, false),
-        JoinType::Right => (true, false),
+    let build_left = match opts.join_type {
+        JoinType::Inner | JoinType::FullOuter => left.num_rows() <= right.num_rows(),
+        JoinType::Left => false,
+        JoinType::Right => true,
     };
-    let _ = swap_back;
     let (bt, bcols, pt, pcols) = if build_left {
         (left, &opts.left_on, right, &opts.right_on)
     } else {
         (right, &opts.right_on, left, &opts.left_on)
     };
-
-    let mut build_idx: Vec<u32> = Vec::new();
-    let mut probe_idx: Vec<u32> = Vec::new();
-    let mut build_matched = vec![false; bt.num_rows()];
     let emit_unmatched_probe = matches!(
         (opts.join_type, build_left),
         (JoinType::Left, false) | (JoinType::Right, true) | (JoinType::FullOuter, _)
     );
     let emit_unmatched_build = matches!(opts.join_type, JoinType::FullOuter);
 
-    // Fast path: single non-null int64 keys on both sides — map keyed by
-    // the value itself, no row-hash pass, no generic equality (§Perf L3
-    // iter 2).
-    let fast = match (bcols.as_slice(), pcols.as_slice()) {
+    // Key representation. Single non-null int64 keys join on the value
+    // itself — no row-hash pass, no generic equality (§Perf L3 iter 2).
+    // Single string keys dictionary-encode the build side and translate
+    // probe strings to codes (negative = null or absent from the build,
+    // i.e. unmatchable). Everything else falls back to row hashes.
+    let rep: KeyRep = match (bcols.as_slice(), pcols.as_slice()) {
         ([bc], [pc]) => match (&bt.columns()[*bc], &pt.columns()[*pc]) {
-            (crate::column::Column::Int64(b), crate::column::Column::Int64(p))
+            (Column::Int64(b), Column::Int64(p))
                 if b.validity.is_none() && p.validity.is_none() =>
             {
-                Some((&b.values, &p.values))
+                KeyRep::Exact { b: &b.values, p: &p.values }
             }
-            _ => None,
+            (Column::Utf8(b), Column::Utf8(p)) => {
+                let (dict, bcodes) = utf8_dict_encode(b);
+                let pcodes = utf8_dict_lookup(p, &dict);
+                KeyRep::Dict { b: bcodes, p: pcodes }
+            }
+            _ => hashed_rep(bt, bcols, pt, pcols, hasher, pool)?,
         },
-        _ => None,
+        _ => hashed_rep(bt, bcols, pt, pcols, hasher, pool)?,
+    };
+    let (bkeys, pkeys): (&[i64], &[i64]) = match &rep {
+        KeyRep::Exact { b, p } => (b, p),
+        KeyRep::Dict { b, p } => (b, p),
+        KeyRep::Hashed { b, p } => (b, p),
+    };
+    let exact = !matches!(rep, KeyRep::Hashed { .. });
+    // Whether a build row may enter the table / a probe row may look up.
+    let b_usable = |row: usize| match &rep {
+        KeyRep::Exact { .. } => true,
+        KeyRep::Dict { b, .. } => b[row] >= 0,
+        KeyRep::Hashed { .. } => row_key_valid(bt, row, bcols),
+    };
+    let p_usable = |row: usize| match &rep {
+        KeyRep::Exact { .. } => true,
+        KeyRep::Dict { p, .. } => p[row] >= 0,
+        KeyRep::Hashed { .. } => row_key_valid(pt, row, pcols),
     };
 
-    if let Some((bkeys, pkeys)) = fast {
-        let mut head: crate::util::hash::FastMap<i64, u32> =
-            crate::util::hash::fast_map_with_capacity(bt.num_rows());
-        let mut next: Vec<u32> = vec![u32::MAX; bt.num_rows()];
-        for (i, &k) in bkeys.iter().enumerate() {
-            let e = head.entry(k).or_insert(u32::MAX);
-            next[i] = *e;
-            *e = i as u32;
+    // Partitioned build. Usable build rows scatter stably (ascending row
+    // order) into P key-hash partitions; each partition builds its own
+    // head map + LIFO chain over local positions. All rows of one key
+    // land in one partition with their ascending order intact, so every
+    // chain links exactly the rows the serial single-table build links,
+    // in the same (descending-row) order.
+    let parts = if pool.is_parallel() { pool.threads() } else { 1 };
+    let bn = bt.num_rows();
+    let mut counts = vec![0u32; parts];
+    let pid_of = |key: i64| if parts == 1 { 0 } else { partition_of(key, parts) };
+    for row in 0..bn {
+        if b_usable(row) {
+            counts[pid_of(bkeys[row])] += 1;
         }
-        for (p, &k) in pkeys.iter().enumerate() {
-            let mut matched = false;
-            let mut b = head.get(&k).copied().unwrap_or(u32::MAX);
-            while b != u32::MAX {
-                // exact key equality guaranteed: map is keyed by the value
-                build_idx.push(b);
-                probe_idx.push(p as u32);
-                build_matched[b as usize] = true;
-                matched = true;
-                b = next[b as usize];
-            }
-            if !matched && emit_unmatched_probe {
-                build_idx.push(u32::MAX);
-                probe_idx.push(p as u32);
-            }
+    }
+    let mut offsets = vec![0usize; parts + 1];
+    for p in 0..parts {
+        offsets[p + 1] = offsets[p] + counts[p] as usize;
+    }
+    let mut order = vec![0u32; offsets[parts]];
+    let mut cursor = offsets[..parts].to_vec();
+    for row in 0..bn {
+        if b_usable(row) {
+            let p = pid_of(bkeys[row]);
+            order[cursor[p]] = row as u32;
+            cursor[p] += 1;
         }
-    } else {
-        let bh = row_hashes(bt, bcols, hasher)?;
-        let ph = row_hashes(pt, pcols, hasher)?;
+    }
+    // head: key -> local position of chain head; next: local position ->
+    // previous local position with the same key (u32::MAX terminates).
+    let tables: Vec<(FastMap<i64, u32>, Vec<u32>)> = pool.run(parts, |p| {
+        let rows = &order[offsets[p]..offsets[p + 1]];
+        let mut head: FastMap<i64, u32> = fast_map_with_capacity(rows.len());
+        let mut next: Vec<u32> = vec![u32::MAX; rows.len()];
+        for (local, &row) in rows.iter().enumerate() {
+            let e = head.entry(bkeys[row as usize]).or_insert(u32::MAX);
+            next[local] = *e;
+            *e = local as u32;
+        }
+        (head, next)
+    });
 
-        // hash -> chain of build-side row ids (head map + next array).
-        let mut head: HashMap<i64, u32> = HashMap::with_capacity(bt.num_rows());
-        let mut next: Vec<u32> = vec![u32::MAX; bt.num_rows()];
-        for (i, &h) in bh.iter().enumerate() {
-            if !row_key_valid(bt, i, bcols) {
-                continue; // null keys never match
-            }
-            let e = head.entry(h).or_insert(u32::MAX);
-            next[i] = *e;
-            *e = i as u32;
-        }
-        for (p, &h) in ph.iter().enumerate() {
+    // Parallel probe: each morsel emits its (build, probe) match pairs in
+    // probe-row order; chunks concatenate in morsel order, reproducing
+    // the serial probe loop's emission order exactly.
+    let ranges = pool.ranges(pt.num_rows(), approx_row_bytes(pt));
+    let chunks = pool.run(ranges.len(), |m| {
+        let (start, len) = ranges[m];
+        let mut bi: Vec<u32> = Vec::new();
+        let mut pi: Vec<u32> = Vec::new();
+        for p in start..start + len {
             let mut matched = false;
-            if row_key_valid(pt, p, pcols) {
-                let mut b = head.get(&h).copied().unwrap_or(u32::MAX);
-                while b != u32::MAX {
-                    if rows_equal(bt, b as usize, bcols, pt, p, pcols) {
-                        build_idx.push(b);
-                        probe_idx.push(p as u32);
-                        build_matched[b as usize] = true;
+            if p_usable(p) {
+                let k = pkeys[p];
+                let pid = pid_of(k);
+                let (head, next) = &tables[pid];
+                let mut local = head.get(&k).copied().unwrap_or(u32::MAX);
+                while local != u32::MAX {
+                    let b = order[offsets[pid] + local as usize];
+                    if exact || rows_equal(bt, b as usize, bcols, pt, p, pcols) {
+                        bi.push(b);
+                        pi.push(p as u32);
                         matched = true;
                     }
-                    b = next[b as usize];
+                    local = next[local as usize];
                 }
             }
             if !matched && emit_unmatched_probe {
-                build_idx.push(u32::MAX);
-                probe_idx.push(p as u32);
+                bi.push(u32::MAX);
+                pi.push(p as u32);
             }
         }
+        (bi, pi)
+    });
+
+    let mut build_idx: Vec<u32> = Vec::new();
+    let mut probe_idx: Vec<u32> = Vec::new();
+    let mut build_matched = vec![false; bn];
+    for (bi, pi) in chunks {
+        for &b in &bi {
+            if b != u32::MAX {
+                build_matched[b as usize] = true;
+            }
+        }
+        build_idx.extend(bi);
+        probe_idx.extend(pi);
     }
     if emit_unmatched_build {
+        // null-keyed build rows still appear in a full outer join
         for (b, m) in build_matched.iter().enumerate() {
-            if !m && row_key_valid(bt, b, bcols) {
-                build_idx.push(b as u32);
-                probe_idx.push(u32::MAX);
-            } else if !m {
-                // null-keyed build rows still appear in a full outer join
+            if !m {
                 build_idx.push(b as u32);
                 probe_idx.push(u32::MAX);
             }
@@ -245,6 +322,33 @@ fn hash_join_indices(
     } else {
         Ok((probe_idx, build_idx))
     }
+}
+
+/// Row-hash [`KeyRep`] for the generic path, hashed in parallel morsels.
+fn hashed_rep<'a>(
+    bt: &Table,
+    bcols: &[usize],
+    pt: &Table,
+    pcols: &[usize],
+    hasher: &dyn KeyHasher,
+    pool: &MorselPool,
+) -> Result<KeyRep<'a>> {
+    let mut sides: Vec<Vec<i64>> = Vec::with_capacity(2);
+    for (t, cols) in [(bt, bcols), (pt, pcols)] {
+        let ranges = pool.ranges(t.num_rows(), approx_row_bytes(t));
+        let chunks = pool.run(ranges.len(), |m| {
+            let (start, len) = ranges[m];
+            row_hashes_range(t, cols, hasher, start, len)
+        });
+        let mut h = Vec::with_capacity(t.num_rows());
+        for ch in chunks {
+            h.extend(ch?);
+        }
+        sides.push(h);
+    }
+    let p = sides.pop().expect("two sides");
+    let b = sides.pop().expect("two sides");
+    Ok(KeyRep::Hashed { b, p })
 }
 
 fn sort_merge_indices(
@@ -339,15 +443,23 @@ fn sort_merge_indices(
     Ok((lidx, ridx))
 }
 
-fn materialize(left: &Table, right: &Table, lidx: &[u32], ridx: &[u32]) -> Result<Table> {
+fn materialize(
+    left: &Table,
+    right: &Table,
+    lidx: &[u32],
+    ridx: &[u32],
+    pool: &MorselPool,
+) -> Result<Table> {
     let schema = left.schema().merge_for_join(right.schema());
-    let mut columns: Vec<Column> = Vec::with_capacity(schema.len());
-    for c in left.columns() {
-        columns.push(c.gather_opt(lidx));
-    }
-    for c in right.columns() {
-        columns.push(c.gather_opt(ridx));
-    }
+    // Output columns are independent gathers — one parallel task each.
+    let nl = left.num_columns();
+    let columns: Vec<Column> = pool.run(nl + right.num_columns(), |ci| {
+        if ci < nl {
+            left.columns()[ci].gather_opt(lidx)
+        } else {
+            right.columns()[ci - nl].gather_opt(ridx)
+        }
+    });
     Table::new(schema, columns)
 }
 

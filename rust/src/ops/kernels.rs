@@ -40,14 +40,23 @@ impl KeyHasher for NativeHasher {
     }
 }
 
-/// Per-row hashes of one column (nulls hash to a fixed sentinel).
-fn column_hashes(col: &Column, hasher: &dyn KeyHasher, out: &mut [i64]) -> Result<()> {
+/// Hashes of one column over the row range `start..start + out.len()`
+/// (nulls hash to a fixed sentinel). Batch-columnar: every dtype hashes a
+/// contiguous value slice — the Utf8 path walks the offsets/data buffers
+/// directly rather than materializing (and UTF-8-validating) one `&str`
+/// per row, so a morsel runs one vectorized inner loop per column.
+fn column_hashes_range(
+    col: &Column,
+    hasher: &dyn KeyHasher,
+    start: usize,
+    out: &mut [i64],
+) -> Result<()> {
+    let len = out.len();
     match col {
-        Column::Int64(c) => hasher.hash_i64(&c.values, out)?,
+        Column::Int64(c) => hasher.hash_i64(&c.values[start..start + len], out)?,
         Column::Float64(c) => {
             // Hash the bit pattern; canonicalize -0.0 and NaNs first.
-            let bits: Vec<i64> = c
-                .values
+            let bits: Vec<i64> = c.values[start..start + len]
                 .iter()
                 .map(|&f| {
                     let f = if f == 0.0 { 0.0 } else { f };
@@ -58,16 +67,21 @@ fn column_hashes(col: &Column, hasher: &dyn KeyHasher, out: &mut [i64]) -> Resul
             hasher.hash_i64(&bits, out)?;
         }
         Column::Bool(c) => {
-            let bits: Vec<i64> = c.values.iter().map(|&b| b as i64).collect();
+            let bits: Vec<i64> =
+                c.values[start..start + len].iter().map(|&b| b as i64).collect();
             hasher.hash_i64(&bits, out)?;
         }
         Column::Utf8(c) => {
-            // FNV-1a over bytes, then one splitmix64 avalanche round so the
-            // partitioner sees well-mixed high bits.
+            // FNV-1a over the raw byte slice, then one splitmix64
+            // avalanche round so the partitioner sees well-mixed high
+            // bits. Identical bytes ⇒ identical hash, so skipping the
+            // per-row str conversion cannot change any result.
             for (i, o) in out.iter_mut().enumerate() {
-                let s = c.get(i);
+                let row = start + i;
+                let lo = c.offsets[row] as usize;
+                let hi = c.offsets[row + 1] as usize;
                 let mut h = 0xcbf29ce484222325u64;
-                for &b in s.as_bytes() {
+                for &b in &c.data[lo..hi] {
                     h = (h ^ b as u64).wrapping_mul(0x100000001b3);
                 }
                 *o = hash64(h as i64);
@@ -77,7 +91,7 @@ fn column_hashes(col: &Column, hasher: &dyn KeyHasher, out: &mut [i64]) -> Resul
     // Null slots overwrite with the sentinel.
     if let Some(v) = col.validity() {
         for (i, o) in out.iter_mut().enumerate() {
-            if !v.get(i) {
+            if !v.get(start + i) {
                 *o = NULL_HASH;
             }
         }
@@ -87,22 +101,105 @@ fn column_hashes(col: &Column, hasher: &dyn KeyHasher, out: &mut [i64]) -> Resul
 
 /// Per-row combined hash over multiple key columns.
 pub fn row_hashes(t: &Table, key_cols: &[usize], hasher: &dyn KeyHasher) -> Result<Vec<i64>> {
+    row_hashes_range(t, key_cols, hasher, 0, t.num_rows())
+}
+
+/// [`row_hashes`] over the row range `start..start + len` — the morsel
+/// form: each worker hashes its own range and the concatenation over
+/// ascending ranges equals the whole-table pass bit for bit.
+pub fn row_hashes_range(
+    t: &Table,
+    key_cols: &[usize],
+    hasher: &dyn KeyHasher,
+    start: usize,
+    len: usize,
+) -> Result<Vec<i64>> {
     if key_cols.is_empty() {
         return Err(Error::invalid("row_hashes: empty key column list"));
     }
-    let n = t.num_rows();
-    let mut acc = vec![0i64; n];
-    column_hashes(t.column(key_cols[0])?, hasher, &mut acc)?;
+    let mut acc = vec![0i64; len];
+    column_hashes_range(t.column(key_cols[0])?, hasher, start, &mut acc)?;
     if key_cols.len() > 1 {
-        let mut tmp = vec![0i64; n];
+        let mut tmp = vec![0i64; len];
         for &kc in &key_cols[1..] {
-            column_hashes(t.column(kc)?, hasher, &mut tmp)?;
+            column_hashes_range(t.column(kc)?, hasher, start, &mut tmp)?;
             for (a, &b) in acc.iter_mut().zip(&tmp) {
                 *a = combine(*a, b);
             }
         }
     }
     Ok(acc)
+}
+
+/// Dictionary-encode a string column: distinct byte-strings get dense
+/// codes in first-occurrence order, null rows get code `-1`. Grouping or
+/// probing on the codes is exactly grouping/probing on the strings (equal
+/// bytes ⇔ equal code), which turns the string-keyed groupby/join inner
+/// loops into the i64 fast path.
+pub fn utf8_dict_encode(
+    c: &crate::column::StringColumn,
+) -> (crate::util::hash::FastMap<&[u8], i64>, Vec<i64>) {
+    let n = c.offsets.len().saturating_sub(1);
+    let mut dict: crate::util::hash::FastMap<&[u8], i64> =
+        crate::util::hash::fast_map_with_capacity(n);
+    let mut codes = Vec::with_capacity(n);
+    for row in 0..n {
+        if let Some(v) = &c.validity {
+            if !v.get(row) {
+                codes.push(-1);
+                continue;
+            }
+        }
+        let bytes = &c.data[c.offsets[row] as usize..c.offsets[row + 1] as usize];
+        let next = dict.len() as i64;
+        codes.push(*dict.entry(bytes).or_insert(next));
+    }
+    (dict, codes)
+}
+
+/// Probe-side codes against a build-side dictionary from
+/// [`utf8_dict_encode`]: null rows and strings absent from the dictionary
+/// both get `-1` (a join probe treats either as "no match").
+pub fn utf8_dict_lookup(
+    c: &crate::column::StringColumn,
+    dict: &crate::util::hash::FastMap<&[u8], i64>,
+) -> Vec<i64> {
+    let n = c.offsets.len().saturating_sub(1);
+    let mut codes = Vec::with_capacity(n);
+    for row in 0..n {
+        if let Some(v) = &c.validity {
+            if !v.get(row) {
+                codes.push(-1);
+                continue;
+            }
+        }
+        let bytes = &c.data[c.offsets[row] as usize..c.offsets[row + 1] as usize];
+        codes.push(dict.get(bytes).copied().unwrap_or(-1));
+    }
+    codes
+}
+
+/// Average bytes per row — the morsel sizing estimate
+/// ([`crate::executor::MorselPool::ranges`] divides the morsel budget by
+/// this). 1 for empty tables so callers never divide by zero.
+pub(crate) fn approx_row_bytes(t: &Table) -> usize {
+    (t.byte_size() / t.num_rows().max(1)).max(1)
+}
+
+/// Gather rows by index with per-column parallelism: each column's gather
+/// is one independent task (column results depend only on `(column,
+/// indices)`, so scheduling cannot change the output).
+pub(crate) fn gather_table(
+    t: &Table,
+    indices: &[u32],
+    pool: &crate::executor::MorselPool,
+) -> Table {
+    if !pool.is_parallel() {
+        return t.gather(indices);
+    }
+    let cols = t.columns();
+    let gathered = pool.run(cols.len(), |ci| cols[ci].gather(indices));
+    Table::new(t.schema().clone(), gathered).expect("gather preserves schema")
 }
 
 /// Row equality on key columns across two tables (SQL semantics for the

@@ -24,17 +24,21 @@ pub mod sort;
 pub use arith::{binary_op, compare, with_binary, BinOp, CmpOp};
 pub use describe::{describe, describe_table, ColumnStats};
 pub use distinct::distinct;
-pub use filter::{filter, filter_by_column};
-pub use groupby::{groupby, groupby_with_hasher, AggFun, AggSpec};
-pub use join::{join, join_with_hasher, JoinAlgo, JoinOptions, JoinType};
-pub use kernels::{KeyHasher, NativeHasher};
+pub use filter::{filter, filter_by_column, filter_by_column_with_pool, filter_with_pool};
+pub use groupby::{groupby, groupby_with_hasher, groupby_with_pool, AggFun, AggSpec};
+pub use join::{join, join_with_hasher, join_with_pool, JoinAlgo, JoinOptions, JoinType};
+pub use kernels::{utf8_dict_encode, utf8_dict_lookup, KeyHasher, NativeHasher};
 pub use merge::merge_sorted;
 pub use partition::{
-    partition_by_hash, partition_by_range, partition_by_range_directed,
-    partition_by_range_directed_spread,
+    partition_by_hash, partition_by_hash_with_pool, partition_by_range,
+    partition_by_range_directed, partition_by_range_directed_spread,
 };
 pub use sample::{sample_rows, splitters_from_sample};
 pub use scalar::{add_scalar, mul_scalar};
-pub use select::{drop_columns, head, limit, rename, select, tail};
+pub use select::{
+    drop_columns, head, limit, project_with_pool, rename, select, select_with_pool, tail,
+};
 pub use setops::{difference, intersect, union_all, union_distinct};
-pub use sort::{sort, SortKey, SortOptions};
+pub use sort::{
+    sort, sort_indices, sort_indices_with_pool, sort_with_pool, SortKey, SortOptions,
+};

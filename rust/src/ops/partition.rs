@@ -5,8 +5,9 @@
 //! over the key columns and scatters rows to `p` output tables; range
 //! partitioning (for distributed sort) routes by splitter comparison.
 
-use super::kernels::{row_hashes, rows_cmp, KeyHasher};
+use super::kernels::{approx_row_bytes, row_hashes_range, rows_cmp, KeyHasher};
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
 
 /// Split `t` into `p` tables by key hash: row `i` goes to partition
@@ -19,13 +20,36 @@ pub fn partition_by_hash(
     p: usize,
     hasher: &dyn KeyHasher,
 ) -> Result<Vec<Table>> {
+    partition_by_hash_with_pool(t, key_cols, p, hasher, &MorselPool::disabled())
+}
+
+/// [`partition_by_hash`] on a morsel pool: key hashing runs one columnar
+/// batch kernel per morsel and each output partition gathers on its own
+/// worker. The row→partition assignment and the stable within-partition
+/// row order are pool-independent, so serial and parallel outputs are
+/// identical tables.
+pub fn partition_by_hash_with_pool(
+    t: &Table,
+    key_cols: &[usize],
+    p: usize,
+    hasher: &dyn KeyHasher,
+    pool: &MorselPool,
+) -> Result<Vec<Table>> {
     if p == 0 {
         return Err(Error::invalid("partition_by_hash: p must be > 0"));
     }
     if p == 1 {
         return Ok(vec![t.clone()]);
     }
-    let hashes = row_hashes(t, key_cols, hasher)?;
+    let ranges = pool.ranges(t.num_rows(), approx_row_bytes(t));
+    let chunks = pool.run(ranges.len(), |m| {
+        let (start, len) = ranges[m];
+        row_hashes_range(t, key_cols, hasher, start, len)
+    });
+    let mut hashes: Vec<i64> = Vec::with_capacity(t.num_rows());
+    for ch in chunks {
+        hashes.extend(ch?);
+    }
     // two-pass scatter: histogram then fill — avoids per-partition Vec grow.
     let mut counts = vec![0u32; p];
     let pids: Vec<u32> = hashes
@@ -45,12 +69,10 @@ pub fn partition_by_hash(
         order[cursor[pid as usize] as usize] = row as u32;
         cursor[pid as usize] += 1;
     }
-    let mut out = Vec::with_capacity(p);
-    for i in 0..p {
+    Ok(pool.run(p, |i| {
         let slice = &order[offsets[i] as usize..offsets[i + 1] as usize];
-        out.push(t.gather(slice));
-    }
-    Ok(out)
+        t.gather(slice)
+    }))
 }
 
 /// Split `t` into `splitters.num_rows() + 1` tables by range: row goes to

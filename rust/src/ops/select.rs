@@ -3,6 +3,7 @@
 //! scaffolding every dataframe user expects.
 
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
 use crate::types::{Field, Schema};
 
@@ -61,11 +62,31 @@ pub fn drop_columns(t: &Table, names: &[&str]) -> Result<Table> {
 
 /// Select columns by name, in the given order.
 pub fn select(t: &Table, names: &[&str]) -> Result<Table> {
+    select_with_pool(t, names, &MorselPool::disabled())
+}
+
+/// [`select`] on a morsel pool ([`project_with_pool`] by resolved index).
+pub fn select_with_pool(t: &Table, names: &[&str], pool: &MorselPool) -> Result<Table> {
     let mut idx = Vec::with_capacity(names.len());
     for n in names {
         idx.push(t.schema().index_of(n)?);
     }
-    t.project(&idx)
+    project_with_pool(t, &idx, pool)
+}
+
+/// [`Table::project`] on a morsel pool: each selected column clones as
+/// its own parallel task (the clone *is* the unit of work — column order,
+/// and therefore the output table, never depends on scheduling).
+pub fn project_with_pool(t: &Table, idx: &[usize], pool: &MorselPool) -> Result<Table> {
+    if !pool.is_parallel() || idx.len() <= 1 {
+        return t.project(idx);
+    }
+    let mut fields = Vec::with_capacity(idx.len());
+    for &c in idx {
+        fields.push(t.schema().field(c)?.clone());
+    }
+    let columns = pool.run(idx.len(), |i| t.columns()[idx[i]].clone());
+    Table::new(Schema::new(fields), columns)
 }
 
 #[cfg(test)]

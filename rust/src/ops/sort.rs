@@ -4,9 +4,10 @@
 //! → broadcast splitters → range partition ([`super::partition_by_range`]) →
 //! all-to-all → this local sort per worker.
 
-use super::kernels::rows_cmp;
+use super::kernels::{gather_table, rows_cmp};
 use crate::column::Column;
 use crate::error::{Error, Result};
+use crate::executor::MorselPool;
 use crate::table::Table;
 use std::cmp::Ordering;
 
@@ -58,51 +59,108 @@ impl SortOptions {
 /// Sort a table. Nulls sort first under ascending order (pandas
 /// `na_position='first'` analogue), last under descending.
 pub fn sort(t: &Table, opts: &SortOptions) -> Result<Table> {
+    sort_with_pool(t, opts, &MorselPool::disabled())
+}
+
+/// [`sort`] on a morsel pool: parallel run-sort + k-way merge
+/// ([`sort_indices_with_pool`]) followed by a per-column parallel gather.
+pub fn sort_with_pool(t: &Table, opts: &SortOptions, pool: &MorselPool) -> Result<Table> {
     if opts.keys.is_empty() {
         return Err(Error::invalid("sort: empty key list"));
     }
     for k in &opts.keys {
         t.column(k.col)?;
     }
-    let indices = sort_indices(t, opts)?;
-    Ok(t.gather(&indices))
+    let indices = sort_indices_with_pool(t, opts, pool)?;
+    Ok(gather_table(t, &indices, pool))
+}
+
+/// The sorting comparator with the row-index tie-break that makes the
+/// sort permutation *unique*: no two indices ever compare Equal, so the
+/// serial sort, every run-sort and the k-way merge all converge on the
+/// one same permutation (equal keys end up in input order — i.e. the
+/// non-stable path now yields the stable answer too).
+fn cmp_with_tiebreak(t: &Table, opts: &SortOptions, a: u32, b: u32) -> Ordering {
+    for k in &opts.keys {
+        let ord = rows_cmp(t, a as usize, &[k.col], t, b as usize, &[k.col]);
+        let ord = if k.ascending { ord } else { ord.reverse() };
+        if ord != Ordering::Equal {
+            return ord;
+        }
+    }
+    a.cmp(&b)
 }
 
 /// The permutation that sorts `t` (exposed for merge/splitter logic).
 pub fn sort_indices(t: &Table, opts: &SortOptions) -> Result<Vec<u32>> {
-    // Fast path: single int64 ascending non-null key — the benchmark shape.
-    if opts.keys.len() == 1 && opts.keys[0].ascending {
-        if let Column::Int64(c) = t.column(opts.keys[0].col)? {
-            if c.validity.is_none() {
-                let mut idx: Vec<u32> = (0..t.num_rows() as u32).collect();
-                if opts.stable {
-                    idx.sort_by_key(|&i| c.values[i as usize]);
-                } else {
-                    idx.sort_unstable_by_key(|&i| c.values[i as usize]);
-                }
-                return Ok(idx);
-            }
+    sort_indices_with_pool(t, opts, &MorselPool::disabled())
+}
+
+/// [`sort_indices`] on a morsel pool. Parallel pools sort
+/// `min(threads, n)` contiguous runs concurrently, then merge under the
+/// same tie-broken total order; because that order is strict (no equal
+/// elements), the merged permutation is the unique sorted one regardless
+/// of run count — serial and parallel outputs are identical.
+pub fn sort_indices_with_pool(
+    t: &Table,
+    opts: &SortOptions,
+    pool: &MorselPool,
+) -> Result<Vec<u32>> {
+    let n = t.num_rows();
+    // Fast path: single int64 ascending non-null key — the benchmark
+    // shape. The (value, index) key realizes the tie-break for free.
+    let fast = if opts.keys.len() == 1 && opts.keys[0].ascending {
+        match t.column(opts.keys[0].col)? {
+            Column::Int64(c) if c.validity.is_none() => Some(&c.values),
+            _ => None,
         }
-    }
-    let cols: Vec<usize> = opts.keys.iter().map(|k| k.col).collect();
-    let dirs: Vec<bool> = opts.keys.iter().map(|k| k.ascending).collect();
-    let cmp = |&a: &u32, &b: &u32| -> Ordering {
-        for (i, &c) in cols.iter().enumerate() {
-            let ord = rows_cmp(t, a as usize, &[c], t, b as usize, &[c]);
-            let ord = if dirs[i] { ord } else { ord.reverse() };
-            if ord != Ordering::Equal {
-                return ord;
-            }
-        }
-        Ordering::Equal
-    };
-    let mut idx: Vec<u32> = (0..t.num_rows() as u32).collect();
-    if opts.stable {
-        idx.sort_by(cmp);
     } else {
-        idx.sort_unstable_by(cmp);
+        None
+    };
+    let sort_run = |range: (usize, usize)| -> Vec<u32> {
+        let (start, len) = range;
+        let mut idx: Vec<u32> = (start as u32..(start + len) as u32).collect();
+        if let Some(vals) = fast {
+            idx.sort_unstable_by_key(|&i| (vals[i as usize], i));
+        } else {
+            idx.sort_unstable_by(|&a, &b| cmp_with_tiebreak(t, opts, a, b));
+        }
+        idx
+    };
+    if !pool.is_parallel() || n < 2 {
+        return Ok(sort_run((0, n)));
     }
-    Ok(idx)
+    let ranges = MorselPool::even_ranges(n, pool.threads());
+    let runs = pool.run(ranges.len(), |m| sort_run(ranges[m]));
+    // K-way merge by linear scan over the (few, = thread count) run
+    // heads. Strict total order ⇒ exactly one minimal head each step.
+    let mut out = Vec::with_capacity(n);
+    let mut heads = vec![0usize; runs.len()];
+    for _ in 0..n {
+        let mut best: Option<usize> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if heads[r] >= run.len() {
+                continue;
+            }
+            best = match best {
+                None => Some(r),
+                Some(b) => {
+                    let cand = run[heads[r]];
+                    let cur = runs[b][heads[b]];
+                    let less = if let Some(vals) = fast {
+                        (vals[cand as usize], cand) < (vals[cur as usize], cur)
+                    } else {
+                        cmp_with_tiebreak(t, opts, cand, cur) == Ordering::Less
+                    };
+                    Some(if less { r } else { b })
+                }
+            };
+        }
+        let b = best.expect("n elements across runs");
+        out.push(runs[b][heads[b]]);
+        heads[b] += 1;
+    }
+    Ok(out)
 }
 
 /// Check whether `t` is sorted under `opts` (test/verification helper).

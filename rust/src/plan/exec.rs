@@ -8,7 +8,8 @@ use crate::dist;
 use crate::error::Result;
 use crate::executor::CylonEnv;
 use crate::metrics::{
-    MetricsSnapshot, OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats, StageTiming,
+    LocalStats, MetricsSnapshot, OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats,
+    StageTiming,
 };
 use crate::ops;
 use crate::table::Table;
@@ -76,6 +77,16 @@ impl PlanReport {
         s
     }
 
+    /// Morsel-pool activity summed across stages (zero when intra-rank
+    /// parallelism is off, the default).
+    pub fn local(&self) -> LocalStats {
+        let mut s = LocalStats::default();
+        for st in &self.stages {
+            s.merge(&st.local);
+        }
+        s
+    }
+
     /// One-line per-stage report:
     /// `join[compute=… aux=… comm=…] groupby[…] …` (stages that spilled
     /// append `spill=…B/…f`; stages that handled skew append
@@ -110,8 +121,17 @@ impl PlanReport {
                         s.overlap.hidden_nanos as f64 / 1e6,
                     )
                 };
+                let local = if s.local.is_zero() {
+                    String::new()
+                } else {
+                    format!(
+                        " local={}morsels busy={:.1}ms",
+                        s.local.morsels,
+                        s.local.busy_nanos as f64 / 1e6,
+                    )
+                };
                 format!(
-                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}{skew}{overlap}]",
+                    "{}[compute={:.1}ms aux={:.1}ms comm={:.1}ms{spill}{skew}{overlap}{local}]",
                     s.name,
                     s.timers.get(Phase::Compute).as_secs_f64() * 1e3,
                     s.timers.get(Phase::Auxiliary).as_secs_f64() * 1e3,
@@ -153,11 +173,13 @@ fn eval(
         }
         PhysNode::Filter { input, pred } => {
             let t = eval(*input, env, stages, mark)?;
-            env.time(Phase::Compute, || pred.apply(&t))?
+            env.time(Phase::Compute, || pred.apply_with_pool(&t, env.pool()))?
         }
         PhysNode::Select { input, cols } => {
             let t = eval(*input, env, stages, mark)?;
-            env.time(Phase::Auxiliary, || t.project(&cols))?
+            env.time(Phase::Auxiliary, || {
+                ops::project_with_pool(&t, &cols, env.pool())
+            })?
         }
         PhysNode::Join { left, right, opts, exchange, skew_tolerant } => {
             let l = eval(*left, env, stages, mark)?;
@@ -224,6 +246,7 @@ fn eval(
         spill: delta.spill,
         skew: delta.skew,
         overlap: delta.overlap,
+        local: delta.local,
     });
     *mark = now;
     Ok(out)

@@ -31,6 +31,16 @@ pub struct FilterPred {
 impl FilterPred {
     /// Evaluate the predicate against a partition: keep passing rows.
     pub fn apply(&self, t: &Table) -> Result<Table> {
+        self.apply_with_pool(t, &crate::executor::MorselPool::disabled())
+    }
+
+    /// [`FilterPred::apply`] on a morsel pool (parallel predicate morsels
+    /// via [`ops::filter_with_pool`]).
+    pub fn apply_with_pool(
+        &self,
+        t: &Table,
+        pool: &crate::executor::MorselPool,
+    ) -> Result<Table> {
         let c = t.column(self.col)?;
         if !self.value.is_null() && self.value.dtype() != Some(c.dtype()) {
             return Err(Error::Type(format!(
@@ -39,22 +49,26 @@ impl FilterPred {
                 c.dtype()
             )));
         }
-        Ok(ops::filter(t, |r| {
-            if !c.is_valid(r) || self.value.is_null() {
-                return false;
-            }
-            let ord = c.value(r).cmp_sql(&self.value);
-            use std::cmp::Ordering::*;
-            matches!(
-                (self.op, ord),
-                (CmpOp::Eq, Equal)
-                    | (CmpOp::Ne, Less | Greater)
-                    | (CmpOp::Lt, Less)
-                    | (CmpOp::Le, Less | Equal)
-                    | (CmpOp::Gt, Greater)
-                    | (CmpOp::Ge, Greater | Equal)
-            )
-        }))
+        Ok(ops::filter_with_pool(
+            t,
+            |r| {
+                if !c.is_valid(r) || self.value.is_null() {
+                    return false;
+                }
+                let ord = c.value(r).cmp_sql(&self.value);
+                use std::cmp::Ordering::*;
+                matches!(
+                    (self.op, ord),
+                    (CmpOp::Eq, Equal)
+                        | (CmpOp::Ne, Less | Greater)
+                        | (CmpOp::Lt, Less)
+                        | (CmpOp::Le, Less | Equal)
+                        | (CmpOp::Gt, Greater)
+                        | (CmpOp::Ge, Greater | Equal)
+                )
+            },
+            pool,
+        ))
     }
 }
 

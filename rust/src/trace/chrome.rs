@@ -267,7 +267,7 @@ pub fn text_summary(tl: &GlobalTimeline) -> String {
         tl.total_overflow(),
     );
     for rank in 0..tl.world {
-        let mut counts = [0usize; 6];
+        let mut counts = [0usize; 7];
         let mut n = 0usize;
         for ev in tl.rank_events(rank) {
             n += 1;
@@ -278,10 +278,11 @@ pub fn text_summary(tl: &GlobalTimeline) -> String {
                 TraceCat::Spill => 3,
                 TraceCat::Skew => 4,
                 TraceCat::App => 5,
+                TraceCat::Local => 6,
             }] += 1;
         }
         out.push_str(&format!(
-            "  rank {rank}: {n} events (stage={} comm={} nb={} spill={} skew={} app={}) \
+            "  rank {rank}: {n} events (stage={} comm={} nb={} spill={} skew={} app={} local={}) \
              offset={}ns overflow={}\n",
             counts[0],
             counts[1],
@@ -289,6 +290,7 @@ pub fn text_summary(tl: &GlobalTimeline) -> String {
             counts[3],
             counts[4],
             counts[5],
+            counts[6],
             tl.offsets_nanos.get(rank).copied().unwrap_or(0),
             tl.overflow.get(rank).copied().unwrap_or(0),
         ));

@@ -80,6 +80,10 @@ pub enum TraceCat {
     Skew,
     /// Application-defined events (free for user code).
     App,
+    /// Morsel-driven worker activity in the intra-rank pool
+    /// ([`crate::executor::MorselPool`]): one span per worker drain,
+    /// with morsel count and busy nanos in the argument slots.
+    Local,
 }
 
 impl TraceCat {
@@ -92,6 +96,7 @@ impl TraceCat {
             TraceCat::Spill => "spill",
             TraceCat::Skew => "skew",
             TraceCat::App => "app",
+            TraceCat::Local => "local",
         }
     }
 
@@ -104,6 +109,7 @@ impl TraceCat {
             "spill" => TraceCat::Spill,
             "skew" => TraceCat::Skew,
             "app" => TraceCat::App,
+            "local" => TraceCat::Local,
             _ => return None,
         })
     }
@@ -116,6 +122,7 @@ impl TraceCat {
             TraceCat::Spill => 3,
             TraceCat::Skew => 4,
             TraceCat::App => 5,
+            TraceCat::Local => 6,
         }
     }
 
@@ -127,6 +134,7 @@ impl TraceCat {
             3 => TraceCat::Spill,
             4 => TraceCat::Skew,
             5 => TraceCat::App,
+            6 => TraceCat::Local,
             _ => return None,
         })
     }
@@ -601,6 +609,7 @@ mod tests {
             TraceCat::Spill,
             TraceCat::Skew,
             TraceCat::App,
+            TraceCat::Local,
         ] {
             assert_eq!(TraceCat::parse(cat.label()), Some(cat));
             assert_eq!(TraceCat::from_u8(cat.to_u8()), Some(cat));

@@ -1,0 +1,238 @@
+//! Property tests for the morsel-driven parallel operators (DESIGN.md
+//! §11). The contract under test is strict: for every operator, thread
+//! count (1–4) and morsel size — including one-row morsels and morsels
+//! larger than the whole partition — the parallel result must be
+//! **byte-identical** (`Table` equality, which compares validity bitmaps
+//! and raw values, so float comparisons are bitwise) to the serial
+//! result, and repeated parallel runs must be identical to each other
+//! (scheduling nondeterminism must never leak into the answer).
+
+use cylonflow::column::Column;
+use cylonflow::config::{Config, ParallelConfig};
+use cylonflow::executor::{Cluster, CylonExecutor, MorselPool};
+use cylonflow::ops::{
+    self, AggFun, AggSpec, JoinOptions, JoinType, NativeHasher, SortOptions,
+};
+use cylonflow::proptest_lite::{run_prop, Gen};
+use cylonflow::table::Table;
+use cylonflow::trace::TraceSink;
+use std::sync::Arc;
+
+/// Random table with every key shape the parallel reps must handle:
+/// `k` nullable int64 (hashed rep), `v` int64 values, `s` short strings
+/// (dictionary rep), `kd` dense non-null int64 (exact rep), `f` floats
+/// (aggregation bit-equality). Key ranges are narrow so duplicates and
+/// hash-chain collisions are common.
+fn random_table(g: &mut Gen) -> Table {
+    let n = g.usize_in(0, 200);
+    let keys: Vec<i64> = (0..n).map(|_| g.i64_in(-30, 30)).collect();
+    let vals: Vec<i64> = (0..n).map(|_| g.i64_in(-1000, 1000)).collect();
+    let mut nullable = Vec::with_capacity(n);
+    for &k in &keys {
+        nullable.push(if g.bool(0.1) { None } else { Some(k) });
+    }
+    let strs: Vec<String> = (0..n).map(|_| g.string(3)).collect();
+    let floats: Vec<f64> = (0..n).map(|_| g.i64_in(-1000, 1000) as f64 / 7.0).collect();
+    Table::from_columns(vec![
+        ("k", Column::from_opt_i64(&nullable)),
+        ("v", Column::from_i64(vals)),
+        ("s", Column::from_strings(&strs)),
+        ("kd", Column::from_i64(keys)),
+        ("f", Column::from_f64(floats)),
+    ])
+    .unwrap()
+}
+
+/// A genuinely parallel pool: 2–4 threads and a morsel size drawn from
+/// {1 byte → one-row morsels, 64 → a handful of rows, 1 MiB → one
+/// morsel larger than any generated partition}.
+fn par_pool(g: &mut Gen) -> Arc<MorselPool> {
+    let threads = g.usize_in(2, 5);
+    let morsel_bytes = [1usize, 64, 1 << 20][g.usize_in(0, 3)];
+    MorselPool::new(threads, morsel_bytes, TraceSink::disabled())
+}
+
+#[test]
+fn prop_parallel_join_identical_to_serial() {
+    // key columns cover all three key representations: (3,3) exact
+    // int64, (0,0) hashed (nullable), (2,2) dictionary-encoded strings,
+    // and a multi-column hashed key.
+    run_prop("parallel join ≡ serial join, all types and key reps", 10, |g| {
+        let l = random_table(g);
+        let r = random_table(g);
+        let serial = MorselPool::disabled();
+        let parallel = par_pool(g);
+        for keys in [vec![3usize], vec![0], vec![2], vec![0, 3]] {
+            for jt in
+                [JoinType::Inner, JoinType::Left, JoinType::Right, JoinType::FullOuter]
+            {
+                let mut opts = JoinOptions::inner(keys[0], keys[0]).with_type(jt);
+                opts.left_on = keys.clone();
+                opts.right_on = keys.clone();
+                let want = ops::join_with_pool(&l, &r, &opts, &NativeHasher, &serial).unwrap();
+                let got = ops::join_with_pool(&l, &r, &opts, &NativeHasher, &parallel).unwrap();
+                assert_eq!(got, want, "keys {keys:?} type {jt:?}");
+                let again =
+                    ops::join_with_pool(&l, &r, &opts, &NativeHasher, &parallel).unwrap();
+                assert_eq!(again, got, "parallel join nondeterministic: {keys:?} {jt:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_groupby_identical_to_serial() {
+    // float aggregates (Mean/Var/Std and Sum over the f64 column) make
+    // this a bitwise FP-accumulation-order check, not just a logical one.
+    run_prop("parallel groupby ≡ serial groupby, bitwise", 12, |g| {
+        let t = random_table(g);
+        let aggs = [
+            AggSpec::new(1, AggFun::Sum),
+            AggSpec::new(1, AggFun::Count),
+            AggSpec::new(4, AggFun::Sum),
+            AggSpec::new(4, AggFun::Mean),
+            AggSpec::new(4, AggFun::Min),
+            AggSpec::new(4, AggFun::Max),
+            AggSpec::new(4, AggFun::Var),
+            AggSpec::new(4, AggFun::Std),
+        ];
+        let serial = MorselPool::disabled();
+        let parallel = par_pool(g);
+        for keys in [vec![3usize], vec![0], vec![2], vec![2, 3]] {
+            let want =
+                ops::groupby_with_pool(&t, &keys, &aggs, &NativeHasher, &serial).unwrap();
+            let got =
+                ops::groupby_with_pool(&t, &keys, &aggs, &NativeHasher, &parallel).unwrap();
+            assert_eq!(got, want, "keys {keys:?}");
+            let again =
+                ops::groupby_with_pool(&t, &keys, &aggs, &NativeHasher, &parallel).unwrap();
+            assert_eq!(again, got, "parallel groupby nondeterministic: keys {keys:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_sort_identical_to_serial() {
+    // narrow key ranges mean heavy duplication: the row-index tie-break
+    // (unique total order) is what keeps run-sort + k-way merge equal to
+    // the serial permutation, and this is the test that would catch its
+    // loss.
+    run_prop("parallel sort ≡ serial sort under duplicate keys", 14, |g| {
+        let t = random_table(g);
+        let serial = MorselPool::disabled();
+        let parallel = par_pool(g);
+        for opts in [SortOptions::by(0), SortOptions::by_desc(3), SortOptions::by(2)] {
+            let want = ops::sort_with_pool(&t, &opts, &serial).unwrap();
+            let got = ops::sort_with_pool(&t, &opts, &parallel).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(ops::sort_with_pool(&t, &opts, &parallel).unwrap(), got);
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_filter_identical_to_serial() {
+    run_prop("parallel filter ≡ serial filter", 14, |g| {
+        let t = random_table(g);
+        let thresh = g.i64_in(-30, 30);
+        let keys: Vec<Option<i64>> =
+            (0..t.num_rows()).map(|r| t.value(r, 0).unwrap().as_i64()).collect();
+        let pred = |r: usize| keys[r].map(|k| k < thresh).unwrap_or(false);
+        let want = ops::filter_with_pool(&t, pred, &MorselPool::disabled());
+        let parallel = par_pool(g);
+        let got = ops::filter_with_pool(&t, pred, &parallel);
+        assert_eq!(got, want);
+        assert_eq!(ops::filter_with_pool(&t, pred, &parallel), got);
+    });
+}
+
+#[test]
+fn prop_parallel_partition_identical_to_serial() {
+    run_prop("parallel hash partition ≡ serial hash partition", 10, |g| {
+        let t = random_table(g);
+        let p = g.usize_in(1, 9);
+        let parallel = par_pool(g);
+        for keys in [vec![3usize], vec![0, 2]] {
+            let want = ops::partition_by_hash_with_pool(
+                &t,
+                &keys,
+                p,
+                &NativeHasher,
+                &MorselPool::disabled(),
+            )
+            .unwrap();
+            let got =
+                ops::partition_by_hash_with_pool(&t, &keys, p, &NativeHasher, &parallel)
+                    .unwrap();
+            assert_eq!(got, want, "keys {keys:?} over {p} partitions");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_select_identical_to_serial() {
+    run_prop("parallel projection ≡ serial projection", 14, |g| {
+        let t = random_table(g);
+        let parallel = par_pool(g);
+        let want = t.project(&[4, 0, 2]).unwrap();
+        assert_eq!(ops::project_with_pool(&t, &[4, 0, 2], &parallel).unwrap(), want);
+        // empty projection must keep the row count (regression guard for
+        // the serial-delegation edge case)
+        assert_eq!(
+            ops::project_with_pool(&t, &[], &parallel).unwrap().num_rows(),
+            t.num_rows()
+        );
+    });
+}
+
+#[test]
+fn parallel_runs_feed_local_stats() {
+    let mut g = Gen::new(7);
+    let t = random_table(&mut g);
+    let pool = MorselPool::new(3, 1, TraceSink::disabled());
+    let _ = ops::sort_with_pool(&t, &SortOptions::by(3), &pool).unwrap();
+    let s = pool.stats();
+    assert!(s.morsels > 0, "parallel sort recorded no morsels");
+    assert!(s.busy_nanos > 0, "parallel sort recorded no busy time");
+    // the serial pool must stay silent
+    let serial = MorselPool::disabled();
+    let _ = ops::sort_with_pool(&t, &SortOptions::by(3), &serial).unwrap();
+    assert!(serial.stats().is_zero(), "serial pool recorded stats");
+}
+
+#[test]
+fn executor_gang_inherits_parallel_config_and_matches_serial() {
+    // A gang built from a Config with `parallel.threads = 3` must hand
+    // every env a live pool, and the distributed result must equal the
+    // serial-config gang's byte for byte.
+    let mut g = Gen::new(42);
+    let l = random_table(&mut g);
+    let r = random_table(&mut g);
+    let p = 2;
+    let run = |cfg: Config, expect_parallel: bool| -> Table {
+        let c = Cluster::with_config(p, cfg).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        let (lp, rp) = (l.split_even(p), r.split_even(p));
+        let out = exec
+            .run(move |env| {
+                assert_eq!(env.pool().is_parallel(), expect_parallel);
+                cylonflow::dist::join(
+                    &lp[env.rank()],
+                    &rp[env.rank()],
+                    &JoinOptions::inner(3, 3),
+                    env,
+                )
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        Table::concat_owned(out).unwrap()
+    };
+    let parallel_cfg = Config {
+        parallel: ParallelConfig { threads: 3, morsel_bytes: 256 },
+        ..Config::default()
+    };
+    let serial = run(Config::default(), false);
+    let parallel = run(parallel_cfg, true);
+    assert_eq!(parallel, serial);
+}
