@@ -152,4 +152,60 @@ mod tests {
         assert!(kv.wait("y", Duration::from_millis(30)).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    #[test]
+    fn file_kv_concurrent_create_and_get_never_sees_partial_values() {
+        // Rendezvous edge: many writers hammering put() against readers
+        // polling get()/wait() on the same keys. The atomic
+        // write-temp-then-rename contract means a reader sees either
+        // nothing or a COMPLETE value — never a half-written file (which
+        // would parse as a garbage peer address during bootstrap).
+        let dir = std::env::temp_dir()
+            .join(format!("cylonflow_kv_race_{}", std::process::id()));
+        let kv = Arc::new(FileKv::new(&dir).unwrap());
+        let payload = |k: usize, v: usize| format!("value-{k}-rev{v:04}").into_bytes();
+        let writers: Vec<_> = (0..4)
+            .map(|k| {
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    for rev in 0..50 {
+                        kv.put(&format!("race/{k}"), &payload(k, rev)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let readers: Vec<_> = (0..4)
+            .map(|k| {
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    let mut observed = 0u32;
+                    for _ in 0..200 {
+                        if let Some(v) = kv.get(&format!("race/{k}")) {
+                            let s = String::from_utf8(v).expect("torn value: bad utf8");
+                            assert!(
+                                s.starts_with(&format!("value-{k}-rev")) && s.len() == 15,
+                                "torn or cross-key value observed: {s:?}"
+                            );
+                            observed += 1;
+                        }
+                    }
+                    observed
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        // after the dust settles every key holds its final revision
+        for k in 0..4 {
+            assert_eq!(
+                kv.wait(&format!("race/{k}"), Duration::from_secs(2)).unwrap(),
+                payload(k, 49)
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -20,6 +20,11 @@ struct Slots {
 pub(crate) struct Mailbox {
     slots: Mutex<Slots>,
     cv: Condvar,
+    /// Forced-race step points (`mailbox.push` / `mailbox.wait_newer.entry`);
+    /// the production constructor installs the no-op. The stamp protocol
+    /// itself is model-checked in [`crate::sched_test::mailbox_model`].
+    #[cfg(test)]
+    steps: crate::sched_test::StepPoints,
 }
 
 impl Mailbox {
@@ -27,11 +32,24 @@ impl Mailbox {
         Mailbox {
             slots: Mutex::new(Slots { queues: HashMap::new(), generation: 0 }),
             cv: Condvar::new(),
+            #[cfg(test)]
+            steps: crate::sched_test::StepPoints::disabled(),
         }
+    }
+
+    /// Test-only constructor with injectable step points.
+    #[cfg(test)]
+    pub(crate) fn with_steps(steps: crate::sched_test::StepPoints) -> Self {
+        let mut m = Mailbox::new();
+        m.steps = steps;
+        m
     }
 
     /// Enqueue a message (wakes blocked receivers).
     pub(crate) fn push(&self, from: usize, tag: u64, data: Vec<u8>) {
+        // reached before the lock: a gated hook must not pin the mailbox
+        #[cfg(test)]
+        self.steps.reach("mailbox.push");
         let mut s = self.slots.lock().expect("mailbox poisoned");
         s.queues.entry((from, tag)).or_default().push_back(data);
         s.generation += 1;
@@ -80,6 +98,10 @@ impl Mailbox {
     /// Block until the activity stamp moves past `stamp` or `timeout`
     /// elapses — the idle wait between progress-engine poll sweeps.
     pub(crate) fn wait_newer(&self, stamp: u64, timeout: Duration) {
+        // the forced-race window: a push landing right here is exactly
+        // what the captured stamp protects against
+        #[cfg(test)]
+        self.steps.reach("mailbox.wait_newer.entry");
         let deadline = std::time::Instant::now() + timeout;
         let mut s = self.slots.lock().expect("mailbox poisoned");
         while s.generation == stamp {
@@ -131,5 +153,55 @@ mod tests {
         m.wait_newer(s1, Duration::from_secs(5));
         assert_ne!(m.stamp(), s1);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn forced_push_between_sweep_and_wait_cannot_be_slept_through() {
+        // The race the stamp protocol closes, forced deterministically:
+        // the consumer captures the stamp, sweeps (empty), and is pinned
+        // at the entry of wait_newer by a step gate; a push lands in
+        // exactly that window; the released wait must return immediately
+        // (generation moved past the captured stamp) instead of sleeping
+        // out its timeout with the message queued.
+        use crate::sched_test::{StepGate, StepPoints};
+        use std::sync::Arc;
+
+        let gate = StepGate::new();
+        let points = {
+            let gate = gate.clone();
+            StepPoints::install(move |p| {
+                if p == "mailbox.wait_newer.entry" {
+                    gate.arrive_and_wait();
+                }
+            })
+        };
+        let m = Arc::new(Mailbox::with_steps(points.clone()));
+        let consumer = {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let stamp = m.stamp();
+                assert!(m.try_pop(3, 9).is_none(), "sweep must find nothing yet");
+                let t0 = std::time::Instant::now();
+                m.wait_newer(stamp, Duration::from_secs(30));
+                let waited = t0.elapsed();
+                let msg = m.try_pop(3, 9);
+                (waited, msg)
+            })
+        };
+        assert!(
+            gate.await_arrival(Duration::from_secs(10)),
+            "consumer never reached wait_newer"
+        );
+        // the racing push, landing between the sweep and the wait
+        m.push(3, 9, vec![42]);
+        gate.release();
+        let (waited, msg) = consumer.join().unwrap();
+        assert!(
+            waited < Duration::from_secs(5),
+            "wait_newer slept through the racing push ({waited:?})"
+        );
+        assert_eq!(msg, Some(vec![42]), "the raced message must be deliverable");
+        assert_eq!(points.count("mailbox.wait_newer.entry"), 1);
+        assert_eq!(points.count("mailbox.push"), 1);
     }
 }

@@ -85,6 +85,11 @@ struct Shared {
     /// events (`isend_posted` → `send_wire` → `recv_complete`) land in
     /// the same per-rank ring as everything else.
     trace: Arc<TraceSink>,
+    /// Forced-race step points (`engine.pre_idle_wait`); the send-queue
+    /// FIFO + backpressure protocol itself is model-checked in
+    /// [`crate::sched_test::engine_model`].
+    #[cfg(test)]
+    steps: crate::sched_test::StepPoints,
 }
 
 /// Per-rank nonblocking progress engine over a shared transport handle.
@@ -112,7 +117,6 @@ impl ProgressEngine {
         max_pending_sends: usize,
         trace: Arc<TraceSink>,
     ) -> ProgressEngine {
-        let name = format!("cf-progress-{}", comm.rank());
         let shared = Arc::new(Shared {
             comm,
             queue: Mutex::new(Queue {
@@ -125,7 +129,40 @@ impl ProgressEngine {
             shutdown: AtomicBool::new(false),
             max_pending_sends: max_pending_sends.max(1),
             trace,
+            #[cfg(test)]
+            steps: crate::sched_test::StepPoints::disabled(),
         });
+        ProgressEngine::spawn(shared)
+    }
+
+    /// Test-only constructor with injectable step points on the progress
+    /// thread.
+    #[cfg(test)]
+    fn with_steps(
+        comm: Arc<dyn Communicator>,
+        max_pending_sends: usize,
+        steps: crate::sched_test::StepPoints,
+    ) -> ProgressEngine {
+        let shared = Arc::new(Shared {
+            comm,
+            queue: Mutex::new(Queue {
+                sends: VecDeque::new(),
+                recvs: Vec::new(),
+                pending_sends: 0,
+            }),
+            queue_cv: Condvar::new(),
+            notifier: Notifier::new(),
+            shutdown: AtomicBool::new(false),
+            max_pending_sends: max_pending_sends.max(1),
+            trace: TraceSink::disabled(),
+            steps,
+        });
+        ProgressEngine::spawn(shared)
+    }
+
+    /// Spawn the progress thread over already-built shared state.
+    fn spawn(shared: Arc<Shared>) -> ProgressEngine {
+        let name = format!("cf-progress-{}", shared.comm.rank());
         let thread = {
             let shared = shared.clone();
             std::thread::Builder::new()
@@ -297,6 +334,11 @@ fn run(shared: &Shared) {
             continue;
         }
         if has_recvs {
+            // the stamp race window: an arrival landing between the sweep
+            // above and this wait is exactly what the pre-sweep stamp
+            // capture protects against
+            #[cfg(test)]
+            shared.steps.reach("engine.pre_idle_wait");
             shared.comm.wait_activity(stamp, RECV_POLL);
         } else {
             let q = shared.queue.lock().expect("engine queue poisoned");
@@ -408,5 +450,78 @@ mod tests {
         let e0 = es.pop().unwrap();
         e0.shared.shutdown.store(true, Ordering::Release);
         assert!(e0.irecv(1, 1).is_err());
+    }
+
+    #[test]
+    fn forced_arrival_in_idle_window_cuts_the_wait_short() {
+        // The stamp race, forced deterministically: the progress thread
+        // sweeps its posted receive (no match), captures the activity
+        // stamp, and is pinned right before its idle wait; the matching
+        // send then lands in exactly that window. The released wait must
+        // see the moved stamp and complete the receive promptly instead
+        // of sleeping blind.
+        use crate::sched_test::{StepGate, StepPoints};
+
+        let gate = StepGate::new();
+        let points = {
+            let gate = gate.clone();
+            StepPoints::install(move |p| {
+                if p == "engine.pre_idle_wait" {
+                    gate.arrive_and_wait();
+                }
+            })
+        };
+        let mut comms = MemoryFabric::create(2);
+        let c1 = comms.pop().unwrap();
+        let c0 = comms.pop().unwrap();
+        let e1 = ProgressEngine::with_steps(Arc::new(c1), 8, points.clone());
+        let e0 = ProgressEngine::new(Arc::new(c0), 8);
+
+        let recv = e1.irecv(0, 5).unwrap();
+        assert!(
+            gate.await_arrival(Duration::from_secs(10)),
+            "progress thread never reached its idle wait"
+        );
+        // the racing arrival, landing after the sweep but before the wait
+        e0.isend(1, 5, vec![9]).unwrap().wait().unwrap();
+        let t0 = Instant::now();
+        gate.release();
+        assert_eq!(recv.wait().unwrap(), Some(vec![9]));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "engine slept through an arrival that raced its poll sweep"
+        );
+        assert!(points.count("engine.pre_idle_wait") >= 1);
+    }
+
+    #[test]
+    fn teardown_mid_wait_any_errors_instead_of_hanging() {
+        // Regression for the engine Drop contract: a worker blocked in
+        // wait_any on receives that will never match must be completed
+        // with shutdown errors when the engine is dropped — promptly,
+        // not after the 120 s recv timeout.
+        let mut es = engines(2);
+        let _e1 = es.pop().unwrap();
+        let e0 = es.pop().unwrap();
+        let r1 = e0.irecv(1, 50).unwrap(); // rank 1 never sends
+        let r2 = e0.irecv(1, 51).unwrap();
+        let waiter = std::thread::spawn(move || {
+            let mut reqs = vec![r1, r2];
+            CommRequest::wait_any(&mut reqs)
+        });
+        // give the waiter time to park inside wait_any
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        drop(e0);
+        let out = waiter.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "wait_any must unblock on engine teardown"
+        );
+        let err = out.expect_err("teardown resolves pending receives to errors");
+        assert!(
+            err.to_string().contains("shut down"),
+            "error should name the shutdown: {err}"
+        );
     }
 }

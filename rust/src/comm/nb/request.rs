@@ -42,6 +42,11 @@ pub(crate) struct RequestState {
     done: AtomicBool,
     slot: Mutex<Option<Completion>>,
     notifier: Arc<Notifier>,
+    /// Forced-race step points (`request.complete.pre_notify` /
+    /// `request.wait.pre_lock`); the handshake itself is model-checked in
+    /// [`crate::sched_test::request_model`].
+    #[cfg(test)]
+    steps: crate::sched_test::StepPoints,
 }
 
 impl RequestState {
@@ -50,6 +55,22 @@ impl RequestState {
             done: AtomicBool::new(false),
             slot: Mutex::new(None),
             notifier,
+            #[cfg(test)]
+            steps: crate::sched_test::StepPoints::disabled(),
+        })
+    }
+
+    /// Test-only constructor with injectable step points.
+    #[cfg(test)]
+    pub(crate) fn with_steps(
+        notifier: Arc<Notifier>,
+        steps: crate::sched_test::StepPoints,
+    ) -> Arc<RequestState> {
+        Arc::new(RequestState {
+            done: AtomicBool::new(false),
+            slot: Mutex::new(None),
+            notifier,
+            steps,
         })
     }
 
@@ -61,6 +82,10 @@ impl RequestState {
         // observed !done under that lock is guaranteed to reach cv.wait
         // before this notify_all can run, so no wakeup is lost.
         self.done.store(true, Ordering::Release);
+        // the window the recheck-under-lock closes: a waiter past its
+        // fast check but not yet holding the notifier lock
+        #[cfg(test)]
+        self.steps.reach("request.complete.pre_notify");
         let _guard = self.notifier.lock.lock().expect("notifier poisoned");
         self.notifier.cv.notify_all();
     }
@@ -109,6 +134,11 @@ impl CommRequest {
             if self.state.is_done() {
                 return self.state.take();
             }
+            // the fast check above said "not done"; a completion landing
+            // right here is exactly what the recheck under the notifier
+            // lock below exists for
+            #[cfg(test)]
+            self.state.steps.reach("request.wait.pre_lock");
             let guard = self.state.notifier.lock.lock().expect("notifier poisoned");
             if self.state.is_done() {
                 continue;
@@ -181,5 +211,65 @@ impl CommRequest {
                 std::thread::sleep(Duration::from_micros(200));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched_test::{StepGate, StepPoints};
+    use std::time::Instant;
+
+    #[test]
+    fn complete_then_wait_hands_over_the_result_once() {
+        let state = RequestState::new(Notifier::new());
+        state.complete(Ok(Some(vec![1, 2])));
+        let req = CommRequest::new(state);
+        assert!(req.test());
+        assert_eq!(req.wait().unwrap(), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn forced_completion_in_wait_window_is_not_lost() {
+        // The lost-wakeup window, forced deterministically: the waiter
+        // fails its fast done-check and is pinned *before* it takes the
+        // notifier lock; complete() then runs to the end (slot filled,
+        // done set, notify_all fired — an unspent notify the waiter never
+        // heard). The released waiter must return promptly through the
+        // recheck-under-lock path, not sleep out the belt timeouts.
+        let gate = StepGate::new();
+        let points = {
+            let gate = gate.clone();
+            StepPoints::install(move |p| {
+                if p == "request.wait.pre_lock" {
+                    gate.arrive_and_wait();
+                }
+            })
+        };
+        let state = RequestState::with_steps(Notifier::new(), points.clone());
+        let waiter = {
+            let req = CommRequest::new(state.clone());
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let out = req.wait();
+                (t0.elapsed(), out)
+            })
+        };
+        assert!(
+            gate.await_arrival(Duration::from_secs(10)),
+            "waiter never reached the pre-lock window"
+        );
+        // the completion lands entirely inside the waiter's blind spot
+        state.complete(Ok(Some(vec![7])));
+        let t_release = Instant::now();
+        gate.release();
+        let (_, out) = waiter.join().unwrap();
+        assert_eq!(out.unwrap(), Some(vec![7]));
+        assert!(
+            t_release.elapsed() < Duration::from_secs(5),
+            "waiter slept through a completion that raced its fast check"
+        );
+        assert!(points.count("request.wait.pre_lock") >= 1);
+        assert_eq!(points.count("request.complete.pre_notify"), 1);
     }
 }

@@ -67,6 +67,11 @@ pub struct TcpComm {
     bytes_sent: AtomicU64,
     barrier_epoch: AtomicU64,
     acceptor: Option<std::thread::JoinHandle<()>>,
+    /// Forced-race step points (`tcp.stream_to.first_connect`); the slot
+    /// lock protocol itself is model-checked in
+    /// [`crate::sched_test::tcp_model`].
+    #[cfg(test)]
+    steps: crate::sched_test::StepPoints,
 }
 
 impl TcpComm {
@@ -102,7 +107,15 @@ impl TcpComm {
             bytes_sent: AtomicU64::new(0),
             barrier_epoch: AtomicU64::new(0),
             acceptor: Some(acceptor),
+            #[cfg(test)]
+            steps: crate::sched_test::StepPoints::disabled(),
         })
+    }
+
+    /// Test-only: swap in step points after construction.
+    #[cfg(test)]
+    fn set_steps(&mut self, steps: crate::sched_test::StepPoints) {
+        self.steps = steps;
     }
 
     fn stream_to(&self, to: usize) -> Result<SharedStream> {
@@ -133,6 +146,12 @@ impl TcpComm {
         stream.set_nodelay(true)?;
         stream.write_all(&HANDSHAKE_MAGIC.to_le_bytes())?;
         stream.write_all(&(self.rank as u64).to_le_bytes())?;
+        // Deliberately INSIDE the slot lock: a gate pinning this point
+        // holds the lock, which is exactly the single-socket serialization
+        // the forced-race test asserts (a racing sender must block here,
+        // not connect again).
+        #[cfg(test)]
+        self.steps.reach("tcp.stream_to.first_connect");
         let arc = Arc::new(Mutex::new(stream));
         *slot = Some(arc.clone());
         Ok(arc)
@@ -363,6 +382,74 @@ mod tests {
         ha.join().unwrap();
         hb.join().unwrap();
         assert_eq!(c0.bytes_sent(), 2 * n * (16 + 8));
+    }
+
+    #[test]
+    fn forced_first_connect_race_opens_exactly_one_socket() {
+        // The first-connect race, forced deterministically: sender A is
+        // pinned mid-first-connect (handshake written, slot not yet
+        // filled) while still holding the per-peer slot lock; sender B
+        // races a send to the same peer and must block on that lock
+        // instead of opening a second socket. After release, both sends
+        // travel the single connection and the lane FIFO holds.
+        use crate::sched_test::{StepGate, StepPoints};
+
+        let gate = StepGate::new();
+        let points = {
+            let gate = gate.clone();
+            StepPoints::install(move |p| {
+                if p == "tcp.stream_to.first_connect" {
+                    gate.arrive_and_wait();
+                }
+            })
+        };
+        let mut comms = gang(2, "t_race");
+        let c1 = comms.pop().unwrap();
+        let mut c0 = comms.pop().unwrap();
+        c0.set_steps(points.clone());
+        let c0 = Arc::new(c0);
+
+        let a = {
+            let c = c0.clone();
+            std::thread::spawn(move || {
+                for i in 0..3u64 {
+                    c.send(1, 1, i.to_le_bytes().to_vec()).unwrap();
+                }
+            })
+        };
+        assert!(
+            gate.await_arrival(Duration::from_secs(10)),
+            "sender A never reached the first-connect window"
+        );
+        // sender B races into stream_to while A holds the slot lock
+        let b = {
+            let c = c0.clone();
+            std::thread::spawn(move || {
+                for i in 0..3u64 {
+                    c.send(1, 2, i.to_le_bytes().to_vec()).unwrap();
+                }
+            })
+        };
+        // B cannot make progress (nor connect a second time) until the
+        // gate releases A's lock-holding connect.
+        std::thread::sleep(Duration::from_millis(50));
+        gate.release();
+        a.join().unwrap();
+        b.join().unwrap();
+        for tag in [1, 2] {
+            for i in 0..3u64 {
+                assert_eq!(
+                    c1.recv(0, tag).unwrap(),
+                    i.to_le_bytes().to_vec(),
+                    "lane (0,{tag}) reordered"
+                );
+            }
+        }
+        assert_eq!(
+            points.count("tcp.stream_to.first_connect"),
+            1,
+            "the racing senders must share one first-connect"
+        );
     }
 
     #[test]

@@ -20,12 +20,22 @@ impl<T> AppHandle<T> {
         for _ in 0..self.parallelism {
             slots.push(None);
         }
+        let mut reported = vec![false; self.parallelism];
         let mut first_err: Option<Error> = None;
         for _ in 0..self.parallelism {
-            let (rank, result, timers) = self
-                .rx
-                .recv_timeout(self.timeout)
-                .map_err(|e| Error::Executor(format!("app result channel: {e}")))?;
+            let (rank, result, timers) = self.rx.recv_timeout(self.timeout).map_err(|e| {
+                // name the stuck ranks, not just the channel state: "rank 2
+                // never reported" points straight at the hung actor
+                let stuck: Vec<usize> = (0..self.parallelism)
+                    .filter(|&r| !reported[r])
+                    .collect();
+                Error::Executor(format!(
+                    "app result channel: {e}; rank(s) {stuck:?} never reported \
+                     (of {} total)",
+                    self.parallelism
+                ))
+            })?;
+            reported[rank] = true;
             match result {
                 Ok(v) => slots[rank] = Some((v, timers)),
                 Err(e) => {
@@ -52,5 +62,28 @@ impl<T> AppHandle<T> {
     /// Block for all ranks; rank-ordered results.
     pub fn wait(self) -> Result<Vec<T>> {
         Ok(self.wait_with_metrics()?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn join_timeout_names_the_stuck_ranks() {
+        let (tx, rx) = channel();
+        // ranks 0 and 2 of a 3-rank app report; rank 1 hangs
+        tx.send((0usize, Ok(10i64), PhaseTimers::default())).unwrap();
+        tx.send((2usize, Ok(30i64), PhaseTimers::default())).unwrap();
+        let handle = AppHandle {
+            rx,
+            parallelism: 3,
+            timeout: Duration::from_millis(50),
+        };
+        let err = handle.wait_with_metrics().expect_err("rank 1 never reports");
+        let msg = err.to_string();
+        assert!(msg.contains("[1]"), "must name the stuck rank, got: {msg}");
+        assert!(!msg.contains("[0"), "reported ranks must not be listed: {msg}");
     }
 }

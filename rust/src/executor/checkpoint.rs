@@ -144,6 +144,28 @@ mod tests {
     }
 
     #[test]
+    fn truncated_part_file_errors_instead_of_panicking() {
+        // Crash-recovery edge: a worker died mid-write (or the filesystem
+        // tore the file) and the part file is a prefix of the real
+        // encoding. Restore must surface a decode error for EVERY
+        // truncation point — a panic here would take down the recovering
+        // gang instead of letting it fall back to a full restart.
+        let ck = Checkpointer::new(tmpdir("trunc")).unwrap();
+        let t = datagen::uniform_table(5, 200, 0.9);
+        ck.save("tr", 0, 1, &t).unwrap();
+        let part = ck.part_path("tr", 0);
+        let full = std::fs::read(&part).unwrap();
+        for cut in [0, 3, 4, 15, 16, full.len() / 2, full.len() - 1] {
+            std::fs::write(&part, &full[..cut]).unwrap();
+            let r = ck.restore("tr", 0, 1);
+            assert!(r.is_err(), "restore of a {cut}-byte part file must error");
+        }
+        // restored bytes restore the checkpoint
+        std::fs::write(&part, &full).unwrap();
+        assert_eq!(ck.restore("tr", 0, 1).unwrap(), t);
+    }
+
+    #[test]
     fn delete_removes() {
         let ck = Checkpointer::new(tmpdir("del")).unwrap();
         let t = datagen::uniform_table(4, 10, 0.9);

@@ -88,6 +88,20 @@ pub fn run_named_app(name: &str, params: &AppParams, env: &CylonEnv) -> Result<S
             let t = dist::join(&l, &r, &crate::ops::JoinOptions::inner(0, 0), env)?;
             Ok(format!("rows={}", t.num_rows()))
         }
+        // Fault-injection app for the worker-death-during-barrier test:
+        // rank 0 exits with an error while every other rank is already
+        // parked in a barrier that can now never complete. The leader must
+        // surface rank 0's failure promptly (and reap the stuck ranks)
+        // instead of waiting out the full comm timeout.
+        "barrier-exit" => {
+            if env.rank() == 0 {
+                return Err(Error::Executor(
+                    "injected worker failure before barrier".into(),
+                ));
+            }
+            env.barrier()?;
+            Ok("barrier-completed".into())
+        }
         other => Err(Error::invalid(format!("unknown named app '{other}'"))),
     }
 }

@@ -59,6 +59,12 @@
 //! - [`trace`] — opt-in (`CYLONFLOW_TRACE`) per-rank event tracing:
 //!   bounded ring of spans/instants through the hot layers, cross-rank
 //!   clock-aligned merge, Chrome-trace JSON export.
+//! - [`sched_test`] — the verification layer over the concurrency core:
+//!   a dependency-free bounded schedule explorer (loom/kani-style) with
+//!   explicit-step models of the mailbox stamp protocol, the request
+//!   completion handshake, the engine send queue + backpressure and the
+//!   TCP first-connect slot lock, plus the injectable step points the
+//!   comm modules expose behind `#[cfg(test)]` for forced-race tests.
 //!
 //! ## Quickstart
 //!
@@ -113,6 +119,7 @@ pub mod ops;
 pub mod plan;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod sched_test;
 pub mod store;
 pub mod stream;
 pub mod table;

@@ -1,0 +1,204 @@
+//! Model of the progress engine's FIFO send queue + backpressure
+//! ([`crate::comm::nb::ProgressEngine`]).
+//!
+//! Three threads: two **submitters** each posting `sends_per_submitter`
+//! sends (an `isend` blocks while `pending_sends == max_pending` — the
+//! bounded-depth backpressure), and the **progress thread**, which pops
+//! the queue strictly FIFO and services each send in two steps — the
+//! wire send (made outside the queue lock in the real code) and the
+//! completion + slot release.
+//!
+//! Invariants checked after every step:
+//! - **FIFO**: the wire order is a prefix of the submission order, and
+//!   completions are a prefix of the wire order (per-`(source, tag)`
+//!   FIFO extends to nonblocking senders only if this holds).
+//! - **Backpressure**: accepted-but-uncompleted sends never exceed
+//!   `max_pending` (an encoder can never race more than the bound ahead
+//!   of the wire).
+//! - **Exactly once**: every accepted send is completed exactly once
+//!   (prefix structure + the final check).
+//!
+//! [`EngineBug::EarlySlotRelease`] frees the backpressure slot when the
+//! send is *popped* rather than when it *completes* — the overcommit the
+//! explorer must catch as a broken bound, not a deadlock.
+
+use super::explore::Model;
+use std::collections::VecDeque;
+
+/// Seeded mutations of the send-servicing protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineBug {
+    /// Decrement `pending_sends` at pop time instead of completion time:
+    /// a submitter is admitted while `max_pending` sends are still
+    /// genuinely outstanding.
+    EarlySlotRelease,
+}
+
+/// See the module docs. Threads 0 and 1 submit; thread 2 is the
+/// progress thread.
+#[derive(Debug)]
+pub struct EngineModel {
+    bug: Option<EngineBug>,
+    max_pending: usize,
+    sends_per_submitter: usize,
+    // shared engine state
+    queue: VecDeque<u32>,
+    pending: usize,
+    // history for the invariants
+    log: Vec<u32>,
+    wire: Vec<u32>,
+    completed: Vec<u32>,
+    // thread programs
+    submitted: [usize; 2],
+    in_service: Option<u32>,
+}
+
+impl EngineModel {
+    /// Model with the given backpressure bound and per-submitter send
+    /// count; `bug` optionally seeds a mutation.
+    pub fn new(
+        max_pending: usize,
+        sends_per_submitter: usize,
+        bug: Option<EngineBug>,
+    ) -> EngineModel {
+        EngineModel {
+            bug,
+            max_pending,
+            sends_per_submitter,
+            queue: VecDeque::new(),
+            pending: 0,
+            log: Vec::new(),
+            wire: Vec::new(),
+            completed: Vec::new(),
+            submitted: [0, 0],
+            in_service: None,
+        }
+    }
+}
+
+impl Model for EngineModel {
+    fn reset(&mut self) {
+        self.queue.clear();
+        self.pending = 0;
+        self.log.clear();
+        self.wire.clear();
+        self.completed.clear();
+        self.submitted = [0, 0];
+        self.in_service = None;
+    }
+
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        match tid {
+            0 | 1 => self.submitted[tid] == self.sends_per_submitter,
+            _ => {
+                self.submitted == [self.sends_per_submitter; 2]
+                    && self.queue.is_empty()
+                    && self.in_service.is_none()
+            }
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            // isend blocks while the backpressure bound is reached (no
+            // timeout in the model: a bound that never frees is deadlock)
+            0 | 1 => self.pending < self.max_pending,
+            _ => self.in_service.is_some() || !self.queue.is_empty(),
+        }
+    }
+
+    fn step(&mut self, tid: usize) {
+        match tid {
+            0 | 1 => {
+                // one atomic enqueue under the queue lock
+                let id = (tid as u32) * 100 + self.submitted[tid] as u32;
+                self.queue.push_back(id);
+                self.log.push(id);
+                self.pending += 1;
+                self.submitted[tid] += 1;
+            }
+            _ => {
+                if let Some(id) = self.in_service.take() {
+                    // completion: complete the request, free the slot
+                    self.completed.push(id);
+                    if self.bug != Some(EngineBug::EarlySlotRelease) {
+                        self.pending -= 1;
+                    }
+                } else {
+                    // pop + wire send (outside the queue lock)
+                    let id = self.queue.pop_front().expect("progress stepped on empty queue");
+                    self.wire.push(id);
+                    if self.bug == Some(EngineBug::EarlySlotRelease) {
+                        self.pending -= 1;
+                    }
+                    self.in_service = Some(id);
+                }
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.wire.as_slice() != &self.log[..self.wire.len()] {
+            return Err(format!(
+                "send FIFO broken: wire order {:?} is not a prefix of submission order {:?}",
+                self.wire, self.log
+            ));
+        }
+        if self.completed.as_slice() != &self.wire[..self.completed.len()] {
+            return Err(format!(
+                "completion order {:?} is not a prefix of wire order {:?}",
+                self.completed, self.wire
+            ));
+        }
+        let outstanding = self.log.len() - self.completed.len();
+        if outstanding > self.max_pending {
+            return Err(format!(
+                "backpressure overcommitted: {outstanding} sends accepted but \
+                 uncompleted, bound is {}",
+                self.max_pending
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.completed != self.log {
+            return Err(format!(
+                "terminated with completions {:?} != submissions {:?}",
+                self.completed, self.log
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched_test::explore::{replay, Explorer};
+
+    #[test]
+    fn correct_protocol_is_exhaustively_clean() {
+        let mut m = EngineModel::new(2, 2, None);
+        let report = Explorer::default().explore(&mut m).unwrap_or_else(|v| {
+            panic!("correct engine protocol violated: {v}");
+        });
+        assert_eq!(report.truncated, 0, "engine model must be exhaustively enumerated");
+        assert!(report.paths > 50, "suspiciously few interleavings: {}", report.paths);
+    }
+
+    #[test]
+    fn early_slot_release_mutation_breaks_the_bound() {
+        let mut m = EngineModel::new(2, 2, Some(EngineBug::EarlySlotRelease));
+        let v = Explorer::default()
+            .explore(&mut m)
+            .expect_err("early slot release must overcommit");
+        assert!(v.message.contains("overcommitted"), "got: {v}");
+        let again = replay(&mut m, &v.schedule).expect_err("schedule must reproduce");
+        assert!(again.message.contains("overcommitted"));
+    }
+}

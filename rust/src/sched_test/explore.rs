@@ -1,0 +1,443 @@
+//! Bounded schedule exploration over explicit-step concurrency models.
+//!
+//! A [`Model`] is a deterministic state machine: a handful of logical
+//! threads, each advanced one atomic step at a time by an external
+//! scheduler. The [`Explorer`] *is* that scheduler — it enumerates every
+//! interleaving up to a depth bound by depth-first search (re-executing
+//! the schedule prefix from `reset` for each branch, which is cheap
+//! because models are tiny), and completes deeper runs with
+//! seeded-random choices so long tails still get coverage.
+//!
+//! After every step the model's invariants are checked
+//! ([`Model::check`]); when all threads are done, [`Model::check_final`]
+//! runs. A state where some thread is unfinished but *no* thread is
+//! enabled is a deadlock — and because the models deliberately omit the
+//! production code's timeout belts, a lost wakeup shows up as exactly
+//! this deadlock instead of hiding behind a 100 ms recovery poll.
+//!
+//! Violations carry the schedule that produced them as a dot-separated
+//! thread-id string (`"0.1.1.0"`); [`replay`] re-runs one and must
+//! reproduce the violation, which is what makes explorer failures
+//! debuggable instead of anecdotal.
+
+use crate::util::SplitMix64;
+
+/// An explicit-step model of a concurrent protocol. Thread ids are
+/// `0..threads()`; the explorer only calls [`Model::step`] on a thread
+/// that is neither [`Model::done`] nor disabled.
+pub trait Model {
+    /// Restore the initial state. Called before every schedule.
+    fn reset(&mut self);
+    /// Number of logical threads.
+    fn threads(&self) -> usize;
+    /// Whether thread `tid` has finished its program.
+    fn done(&self, tid: usize) -> bool;
+    /// Whether thread `tid` can take a step right now (a thread blocked
+    /// on a lock or a condition it models is disabled, not done).
+    fn enabled(&self, tid: usize) -> bool;
+    /// Advance thread `tid` by one atomic step.
+    fn step(&mut self, tid: usize);
+    /// Invariants that must hold after every step.
+    fn check(&self) -> Result<(), String>;
+    /// Invariants that must hold once every thread is done.
+    fn check_final(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// A schedule that broke the model, with the failed invariant (or the
+/// deadlock description). `schedule` feeds straight back into [`replay`].
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Dot-separated thread ids, in execution order (e.g. `"0.1.1.0"`).
+    pub schedule: String,
+    /// What went wrong at the end of that schedule.
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [replay schedule: \"{}\"]", self.message, self.schedule)
+    }
+}
+
+/// Coverage accounting for one exploration.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Complete executions observed (exhaustive + random-completed).
+    pub paths: u64,
+    /// Total steps executed across all paths (includes prefix replays).
+    pub steps: u64,
+    /// Prefixes that hit `max_depth` and were finished randomly instead
+    /// of enumerated. Zero means the model was explored exhaustively.
+    pub truncated: u64,
+    /// Longest schedule executed.
+    pub deepest: usize,
+    /// True when `max_paths` stopped the enumeration early.
+    pub capped: bool,
+}
+
+/// Deterministic schedule enumerator. Exhaustive (DFS over every enabled
+/// thread) up to [`Explorer::max_depth`]; prefixes that reach the bound
+/// are completed with seeded-random choices, and
+/// [`Explorer::random_runs`] extra full-random schedules run afterwards
+/// for long-tail coverage.
+#[derive(Debug, Clone)]
+pub struct Explorer {
+    /// Exhaustive-enumeration depth bound.
+    pub max_depth: usize,
+    /// Hard cap on one schedule's length (guards against livelock bugs
+    /// turning exploration into an infinite run).
+    pub max_steps: usize,
+    /// Extra seeded-random full schedules after the DFS.
+    pub random_runs: usize,
+    /// Safety cap on enumerated paths.
+    pub max_paths: u64,
+    /// Seed for every random choice (same seed → same exploration).
+    pub seed: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Explorer {
+        Explorer {
+            max_depth: 24,
+            max_steps: 10_000,
+            random_runs: 64,
+            max_paths: 500_000,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+fn fnv(xs: &[usize]) -> u64 {
+    xs.iter()
+        .fold(0xcbf29ce484222325u64, |h, &x| (h ^ x as u64).wrapping_mul(0x100000001b3))
+}
+
+fn schedule_string(steps: &[usize]) -> String {
+    steps.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(".")
+}
+
+/// Parse a dot-separated schedule string back into thread ids.
+pub fn parse_schedule(s: &str) -> Result<Vec<usize>, String> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.trim()
+        .split('.')
+        .map(|p| p.trim().parse::<usize>().map_err(|e| format!("bad schedule step '{p}': {e}")))
+        .collect()
+}
+
+fn enabled_threads(model: &dyn Model) -> Vec<usize> {
+    (0..model.threads()).filter(|&t| !model.done(t) && model.enabled(t)).collect()
+}
+
+fn deadlock_violation(model: &dyn Model, schedule: &[usize]) -> Violation {
+    let blocked: Vec<usize> =
+        (0..model.threads()).filter(|&t| !model.done(t)).collect();
+    Violation {
+        schedule: schedule_string(schedule),
+        message: format!(
+            "deadlock: threads {blocked:?} are unfinished but none is enabled \
+             (a lost wakeup strands a waiter in exactly this state)"
+        ),
+    }
+}
+
+impl Explorer {
+    /// Enumerate schedules of `model`, returning coverage on success or
+    /// the first [`Violation`] found.
+    pub fn explore(&self, model: &mut dyn Model) -> Result<Report, Violation> {
+        let mut report = Report::default();
+        // DFS over schedule prefixes; each branch re-executes its prefix
+        // from reset() (models are a few dozen steps, so this is cheap
+        // and keeps Model free of any undo obligation).
+        let mut stack: Vec<Vec<usize>> = vec![Vec::new()];
+        while let Some(prefix) = stack.pop() {
+            if report.paths >= self.max_paths {
+                report.capped = true;
+                break;
+            }
+            self.run_prefix(model, &prefix, &mut report)?;
+            report.deepest = report.deepest.max(prefix.len());
+            if (0..model.threads()).all(|t| model.done(t)) {
+                model
+                    .check_final()
+                    .map_err(|m| Violation { schedule: schedule_string(&prefix), message: m })?;
+                report.paths += 1;
+                continue;
+            }
+            let enabled = enabled_threads(model);
+            if enabled.is_empty() {
+                return Err(deadlock_violation(model, &prefix));
+            }
+            if prefix.len() >= self.max_depth {
+                report.truncated += 1;
+                self.random_finish(model, prefix, &mut report)?;
+                report.paths += 1;
+                continue;
+            }
+            // Reverse push so thread 0's branch is explored first.
+            for &t in enabled.iter().rev() {
+                let mut next = prefix.clone();
+                next.push(t);
+                stack.push(next);
+            }
+        }
+        // Long-tail coverage: full-random schedules from the start.
+        for run in 0..self.random_runs {
+            model.reset();
+            let mut schedule = Vec::new();
+            let mut rng = SplitMix64::new(self.seed ^ (run as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            self.finish_random(model, &mut schedule, &mut rng, &mut report)?;
+            report.paths += 1;
+            report.deepest = report.deepest.max(schedule.len());
+        }
+        Ok(report)
+    }
+
+    /// Re-execute `prefix` from reset, checking invariants at every step.
+    fn run_prefix(
+        &self,
+        model: &mut dyn Model,
+        prefix: &[usize],
+        report: &mut Report,
+    ) -> Result<(), Violation> {
+        model.reset();
+        for (i, &tid) in prefix.iter().enumerate() {
+            debug_assert!(!model.done(tid) && model.enabled(tid), "explorer stepped a blocked thread");
+            model.step(tid);
+            report.steps += 1;
+            model.check().map_err(|m| Violation {
+                schedule: schedule_string(&prefix[..=i]),
+                message: m,
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Finish the current (post-prefix) state with seeded-random choices.
+    fn random_finish(
+        &self,
+        model: &mut dyn Model,
+        prefix: Vec<usize>,
+        report: &mut Report,
+    ) -> Result<(), Violation> {
+        let mut schedule = prefix;
+        let mut rng = SplitMix64::new(self.seed ^ fnv(&schedule));
+        self.finish_random(model, &mut schedule, &mut rng, report)
+    }
+
+    fn finish_random(
+        &self,
+        model: &mut dyn Model,
+        schedule: &mut Vec<usize>,
+        rng: &mut SplitMix64,
+        report: &mut Report,
+    ) -> Result<(), Violation> {
+        loop {
+            if (0..model.threads()).all(|t| model.done(t)) {
+                return model
+                    .check_final()
+                    .map_err(|m| Violation { schedule: schedule_string(schedule), message: m });
+            }
+            let enabled = enabled_threads(model);
+            if enabled.is_empty() {
+                return Err(deadlock_violation(model, schedule));
+            }
+            if schedule.len() >= self.max_steps {
+                return Err(Violation {
+                    schedule: schedule_string(schedule),
+                    message: format!(
+                        "no termination within {} steps (livelock?)",
+                        self.max_steps
+                    ),
+                });
+            }
+            let tid = enabled[rng.range(0, enabled.len())];
+            model.step(tid);
+            schedule.push(tid);
+            report.steps += 1;
+            report.deepest = report.deepest.max(schedule.len());
+            model.check().map_err(|m| Violation {
+                schedule: schedule_string(schedule),
+                message: m,
+            })?;
+        }
+    }
+}
+
+/// Re-run a printed schedule against a fresh model. Returns the
+/// reproduced [`Violation`] (invariant failure mid-schedule, or the
+/// deadlock/final-check state the schedule ends in), or `Ok(())` if the
+/// schedule completes cleanly — which for a schedule copied from a real
+/// violation means the model has changed.
+pub fn replay(model: &mut dyn Model, schedule: &str) -> Result<(), Violation> {
+    let steps = parse_schedule(schedule)
+        .map_err(|m| Violation { schedule: schedule.to_string(), message: m })?;
+    model.reset();
+    for (i, &tid) in steps.iter().enumerate() {
+        if tid >= model.threads() || model.done(tid) || !model.enabled(tid) {
+            return Err(Violation {
+                schedule: schedule_string(&steps[..=i]),
+                message: format!("schedule invalid at step {i}: thread {tid} is not runnable"),
+            });
+        }
+        model.step(tid);
+        model.check().map_err(|m| Violation {
+            schedule: schedule_string(&steps[..=i]),
+            message: m,
+        })?;
+    }
+    if (0..model.threads()).all(|t| model.done(t)) {
+        return model
+            .check_final()
+            .map_err(|m| Violation { schedule: schedule.to_string(), message: m });
+    }
+    if enabled_threads(model).is_empty() {
+        return Err(deadlock_violation(model, &steps));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads, `per_thread` independent steps each, no blocking: the
+    /// explorer must enumerate exactly C(2n, n) interleavings.
+    struct FreeModel {
+        per_thread: usize,
+        taken: [usize; 2],
+    }
+
+    impl FreeModel {
+        fn new(per_thread: usize) -> FreeModel {
+            FreeModel { per_thread, taken: [0, 0] }
+        }
+    }
+
+    impl Model for FreeModel {
+        fn reset(&mut self) {
+            self.taken = [0, 0];
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn done(&self, tid: usize) -> bool {
+            self.taken[tid] == self.per_thread
+        }
+        fn enabled(&self, _tid: usize) -> bool {
+            true
+        }
+        fn step(&mut self, tid: usize) {
+            self.taken[tid] += 1;
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    /// A model that deadlocks iff thread 1 runs both its steps before
+    /// thread 0 runs any (thread 0 then blocks forever).
+    struct TrapModel {
+        t0_steps: usize,
+        t1_steps: usize,
+    }
+
+    impl Model for TrapModel {
+        fn reset(&mut self) {
+            self.t0_steps = 0;
+            self.t1_steps = 0;
+        }
+        fn threads(&self) -> usize {
+            2
+        }
+        fn done(&self, tid: usize) -> bool {
+            [self.t0_steps, self.t1_steps][tid] >= 2
+        }
+        fn enabled(&self, tid: usize) -> bool {
+            // thread 0 is blocked once thread 1 has finished before it
+            // started — the planted "lost wakeup".
+            !(tid == 0 && self.t0_steps == 0 && self.t1_steps == 2)
+        }
+        fn step(&mut self, tid: usize) {
+            if tid == 0 {
+                self.t0_steps += 1;
+            } else {
+                self.t1_steps += 1;
+            }
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn exhaustive_enumeration_counts_all_interleavings() {
+        // 3 steps each → C(6,3) = 20 interleavings, none truncated.
+        let mut m = FreeModel::new(3);
+        let report = Explorer { random_runs: 0, ..Explorer::default() }
+            .explore(&mut m)
+            .expect("free model has no violations");
+        assert_eq!(report.paths, 20);
+        assert_eq!(report.truncated, 0);
+        assert_eq!(report.deepest, 6);
+        assert!(!report.capped);
+    }
+
+    #[test]
+    fn depth_bound_truncates_and_random_completion_still_finishes() {
+        let mut m = FreeModel::new(4);
+        let report = Explorer { max_depth: 3, random_runs: 0, ..Explorer::default() }
+            .explore(&mut m)
+            .expect("free model has no violations");
+        // every depth-3 prefix (2^3 = 8) was finished randomly
+        assert_eq!(report.truncated, 8);
+        assert_eq!(report.paths, 8);
+        assert_eq!(report.deepest, 8, "random completion must reach full length");
+    }
+
+    #[test]
+    fn deadlock_is_found_and_schedule_replays() {
+        let mut m = TrapModel { t0_steps: 0, t1_steps: 0 };
+        let v = Explorer::default()
+            .explore(&mut m)
+            .expect_err("trap model must deadlock under some schedule");
+        assert!(v.message.contains("deadlock"), "unexpected violation: {v}");
+        assert_eq!(v.schedule, "1.1", "DFS finds the minimal deadlocking schedule");
+        // the printed schedule reproduces the violation
+        let again = replay(&mut m, &v.schedule).expect_err("replay must reproduce");
+        assert!(again.message.contains("deadlock"));
+    }
+
+    #[test]
+    fn schedule_strings_roundtrip() {
+        assert_eq!(parse_schedule("0.1.1.0").unwrap(), vec![0, 1, 1, 0]);
+        assert_eq!(parse_schedule("").unwrap(), Vec::<usize>::new());
+        assert_eq!(schedule_string(&[2, 0, 1]), "2.0.1");
+        assert!(parse_schedule("0.x.1").is_err());
+    }
+
+    #[test]
+    fn replay_rejects_schedules_that_step_blocked_threads() {
+        let mut m = TrapModel { t0_steps: 0, t1_steps: 0 };
+        let v = replay(&mut m, "1.1.0").expect_err("thread 0 is blocked after 1.1");
+        assert!(v.message.contains("not runnable"), "got: {}", v.message);
+    }
+
+    #[test]
+    fn same_seed_same_exploration() {
+        let run = || {
+            let mut m = FreeModel::new(5);
+            Explorer { max_depth: 4, random_runs: 8, ..Explorer::default() }
+                .explore(&mut m)
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.paths, b.paths);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.deepest, b.deepest);
+    }
+}

@@ -1,0 +1,215 @@
+//! Injectable step points for deterministic forced-race tests.
+//!
+//! A [`StepPoints`] handle is threaded (behind `#[cfg(test)]` fields, so
+//! release builds carry nothing) into the concurrency-critical comm
+//! structures. Production constructors install [`StepPoints::disabled`],
+//! which makes every [`StepPoints::reach`] a no-op on a `None`; tests
+//! install a hook that can park a thread at a named point — typically
+//! through a [`StepGate`] — to force exactly the interleaving a
+//! regression is about, instead of hoping a sleep loses the race the
+//! right way.
+//!
+//! Every reach is also counted, so a test can assert *how many times* a
+//! point was hit (e.g. the TCP first-connect path must run exactly once
+//! no matter how many senders race it).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner {
+    hook: Box<dyn Fn(&str) + Send + Sync>,
+    counts: Mutex<HashMap<String, u64>>,
+}
+
+/// A cloneable set of named step points. Disabled by default; see the
+/// module docs.
+pub struct StepPoints {
+    inner: Option<Arc<Inner>>,
+}
+
+impl StepPoints {
+    /// The production no-op: `reach` does nothing, `count` is always 0.
+    pub fn disabled() -> StepPoints {
+        StepPoints { inner: None }
+    }
+
+    /// Install `hook`, called synchronously from [`StepPoints::reach`]
+    /// with the point name. The hook runs on the reaching thread and may
+    /// block it (that is the point).
+    pub fn install<F: Fn(&str) + Send + Sync + 'static>(hook: F) -> StepPoints {
+        StepPoints {
+            inner: Some(Arc::new(Inner { hook: Box::new(hook), counts: Mutex::new(HashMap::new()) })),
+        }
+    }
+
+    /// Count-only instrumentation: every reach is tallied, nothing blocks.
+    pub fn counting() -> StepPoints {
+        StepPoints::install(|_| {})
+    }
+
+    /// Mark that execution reached `point`: bump its count, then run the
+    /// installed hook. Call sites must not hold unrelated locks a blocked
+    /// hook would then pin.
+    pub fn reach(&self, point: &str) {
+        if let Some(inner) = &self.inner {
+            {
+                let mut counts = inner.counts.lock().expect("step counts poisoned");
+                *counts.entry(point.to_string()).or_insert(0) += 1;
+            }
+            (inner.hook)(point);
+        }
+    }
+
+    /// How many times `point` has been reached.
+    pub fn count(&self, point: &str) -> u64 {
+        match &self.inner {
+            None => 0,
+            Some(inner) => inner
+                .counts
+                .lock()
+                .expect("step counts poisoned")
+                .get(point)
+                .copied()
+                .unwrap_or(0),
+        }
+    }
+
+    /// Whether a hook is installed (i.e. this is not the production
+    /// no-op).
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl Clone for StepPoints {
+    fn clone(&self) -> StepPoints {
+        StepPoints { inner: self.inner.clone() }
+    }
+}
+
+impl Default for StepPoints {
+    fn default() -> StepPoints {
+        StepPoints::disabled()
+    }
+}
+
+impl std::fmt::Debug for StepPoints {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StepPoints").field("active", &self.is_active()).finish()
+    }
+}
+
+struct GateState {
+    arrivals: u64,
+    released: bool,
+}
+
+/// One-shot rendezvous for forced races: a thread that calls
+/// [`StepGate::arrive_and_wait`] (usually from a [`StepPoints`] hook)
+/// parks until [`StepGate::release`]; the orchestrating test observes the
+/// arrival with [`StepGate::await_arrival`], runs the racing action while
+/// the victim is pinned mid-protocol, then releases it. After `release`
+/// the gate is open for good — later arrivals pass straight through.
+pub struct StepGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+impl StepGate {
+    /// New closed gate.
+    pub fn new() -> Arc<StepGate> {
+        Arc::new(StepGate {
+            state: Mutex::new(GateState { arrivals: 0, released: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Record an arrival and block until the gate is released. Safe to
+    /// call after release (passes through immediately).
+    pub fn arrive_and_wait(&self) {
+        let mut s = self.state.lock().expect("gate poisoned");
+        s.arrivals += 1;
+        self.cv.notify_all();
+        while !s.released {
+            s = self.cv.wait(s).expect("gate poisoned");
+        }
+    }
+
+    /// Block until at least one thread has arrived (or `timeout` passes);
+    /// returns whether an arrival was seen.
+    pub fn await_arrival(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().expect("gate poisoned");
+        while s.arrivals == 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, deadline - now)
+                .expect("gate poisoned");
+            s = guard;
+        }
+        true
+    }
+
+    /// Open the gate: every parked and future arrival proceeds.
+    pub fn release(&self) {
+        let mut s = self.state.lock().expect("gate poisoned");
+        s.released = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_points_do_nothing() {
+        let p = StepPoints::disabled();
+        p.reach("anything");
+        assert_eq!(p.count("anything"), 0);
+        assert!(!p.is_active());
+    }
+
+    #[test]
+    fn counting_points_tally_reaches() {
+        let p = StepPoints::counting();
+        p.reach("a");
+        p.reach("a");
+        p.reach("b");
+        assert_eq!(p.count("a"), 2);
+        assert_eq!(p.count("b"), 1);
+        assert_eq!(p.count("c"), 0);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn gate_parks_until_release_then_passes_through() {
+        let gate = StepGate::new();
+        let points = {
+            let gate = gate.clone();
+            StepPoints::install(move |p| {
+                if p == "critical" {
+                    gate.arrive_and_wait();
+                }
+            })
+        };
+        let worker = {
+            let points = points.clone();
+            std::thread::spawn(move || {
+                points.reach("critical");
+                points.reach("critical"); // post-release: passes through
+            })
+        };
+        assert!(gate.await_arrival(Duration::from_secs(10)), "worker never arrived");
+        assert_eq!(points.count("critical"), 1, "worker must be parked at the gate");
+        gate.release();
+        worker.join().unwrap();
+        assert_eq!(points.count("critical"), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Model of the mailbox activity-stamp protocol
+//! ([`crate::comm::mailbox`] + the progress loop's poll sweep).
+//!
+//! Two threads. A **producer** pushes `msgs` sequenced messages; each
+//! push atomically enqueues, bumps the generation stamp and notifies
+//! (that is one critical section in the real code). A **consumer** runs
+//! the progress engine's protocol: capture the stamp, sweep `try_pop`,
+//! and if the sweep found nothing, `wait_newer(stamp)` — which blocks
+//! exactly while `generation == stamp`.
+//!
+//! The model has **no timeout belt**, so the race the stamp protocol
+//! exists to close — a push landing between the sweep and the wait —
+//! turns a lost wakeup into a hard deadlock the explorer detects. The
+//! [`MailboxBug::StampAfterSweep`] mutation reorders the capture after
+//! the sweep, reintroducing precisely that bug; the explorer must find a
+//! schedule where the consumer sleeps on a stamp that already includes
+//! the last push while the message sits in the queue.
+
+use super::explore::Model;
+use std::collections::VecDeque;
+
+/// Seeded mutations of the mailbox protocol (the "teeth" checks: the
+/// explorer must catch each of these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MailboxBug {
+    /// Capture the activity stamp *after* the poll sweep instead of
+    /// before it — the historical lost-wakeup bug the engine's protocol
+    /// comment warns about.
+    StampAfterSweep,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Pc {
+    Capture,
+    Sweep,
+    Check,
+    Wait,
+    Done,
+}
+
+/// See the module docs. Thread 0 is the producer, thread 1 the consumer.
+#[derive(Debug)]
+pub struct MailboxModel {
+    bug: Option<MailboxBug>,
+    msgs: u64,
+    // shared mailbox state
+    queue: VecDeque<u64>,
+    generation: u64,
+    pushed: u64,
+    // consumer-local state
+    stamp: u64,
+    received: Vec<u64>,
+    pc: Pc,
+}
+
+impl MailboxModel {
+    /// Model delivering `msgs` messages; `bug` optionally seeds a
+    /// mutation the explorer is expected to catch.
+    pub fn new(msgs: u64, bug: Option<MailboxBug>) -> MailboxModel {
+        let mut m = MailboxModel {
+            bug,
+            msgs,
+            queue: VecDeque::new(),
+            generation: 0,
+            pushed: 0,
+            stamp: 0,
+            received: Vec::new(),
+            pc: Pc::Capture,
+        };
+        m.reset();
+        m
+    }
+
+    fn start_pc(&self) -> Pc {
+        match self.bug {
+            // The mutated protocol sweeps first, then captures the stamp.
+            Some(MailboxBug::StampAfterSweep) => Pc::Sweep,
+            None => Pc::Capture,
+        }
+    }
+}
+
+impl Model for MailboxModel {
+    fn reset(&mut self) {
+        self.queue.clear();
+        self.generation = 0;
+        self.pushed = 0;
+        self.stamp = 0;
+        self.received.clear();
+        self.pc = self.start_pc();
+    }
+
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.pushed == self.msgs,
+            _ => self.pc == Pc::Done,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 => true,
+            // wait_newer blocks exactly while generation == stamp; there
+            // is no timeout in the model, so a stale stamp means blocked.
+            _ => self.pc != Pc::Wait || self.generation != self.stamp,
+        }
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid == 0 {
+            // push: enqueue + bump generation + notify, one critical section
+            self.queue.push_back(self.pushed);
+            self.pushed += 1;
+            self.generation += 1;
+            return;
+        }
+        let buggy = self.bug == Some(MailboxBug::StampAfterSweep);
+        match self.pc {
+            Pc::Capture => {
+                self.stamp = self.generation;
+                self.pc = if buggy { Pc::Check } else { Pc::Sweep };
+            }
+            Pc::Sweep => {
+                while let Some(m) = self.queue.pop_front() {
+                    self.received.push(m);
+                }
+                self.pc = if buggy { Pc::Capture } else { Pc::Check };
+            }
+            Pc::Check => {
+                self.pc = if self.received.len() as u64 == self.msgs {
+                    Pc::Done
+                } else {
+                    Pc::Wait
+                };
+            }
+            Pc::Wait => {
+                // woken: generation moved past the captured stamp
+                self.pc = self.start_pc();
+            }
+            Pc::Done => unreachable!("stepped a finished consumer"),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        // per-(source, tag) FIFO: the single lane must deliver 0,1,2,...
+        for (i, &m) in self.received.iter().enumerate() {
+            if m != i as u64 {
+                return Err(format!(
+                    "FIFO broken: position {i} delivered message {m} (received {:?})",
+                    self.received
+                ));
+            }
+        }
+        if self.received.len() as u64 > self.msgs {
+            return Err(format!(
+                "delivered {} messages but only {} were pushed",
+                self.received.len(),
+                self.msgs
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.received.len() as u64 != self.msgs {
+            return Err(format!(
+                "terminated with {}/{} messages delivered",
+                self.received.len(),
+                self.msgs
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched_test::explore::{replay, Explorer};
+
+    #[test]
+    fn correct_protocol_is_exhaustively_clean() {
+        let mut m = MailboxModel::new(2, None);
+        let report = Explorer::default().explore(&mut m).unwrap_or_else(|v| {
+            panic!("correct mailbox protocol violated: {v}");
+        });
+        assert_eq!(report.truncated, 0, "2-message model must be exhaustively enumerated");
+        assert!(report.paths > 10, "suspiciously few interleavings: {}", report.paths);
+    }
+
+    #[test]
+    fn stamp_after_sweep_mutation_is_caught_and_replays() {
+        let mut m = MailboxModel::new(2, Some(MailboxBug::StampAfterSweep));
+        let v = Explorer::default()
+            .explore(&mut m)
+            .expect_err("stamp-after-sweep must lose a wakeup");
+        assert!(v.message.contains("deadlock"), "expected a deadlock, got: {v}");
+        let again = replay(&mut m, &v.schedule).expect_err("schedule must reproduce");
+        assert!(again.message.contains("deadlock"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Deterministic concurrency exploration for the nonblocking core
+//! (DESIGN.md §12).
+//!
+//! The comm layer's correctness rests on a handful of small lock/condvar
+//! protocols — the mailbox activity stamp, the request completion
+//! handshake, the engine's FIFO send queue with bounded backpressure,
+//! and the TCP per-peer first-connect slot lock. Randomized wall-clock
+//! tests exercise them, but cannot *enumerate* them. This module is an
+//! in-repo, dependency-free bounded model checker in the loom/kani
+//! style (the build environment is offline):
+//!
+//! - [`explore`] — the [`explore::Model`] trait (explicit-step state
+//!   machines) and the [`explore::Explorer`] schedule enumerator:
+//!   exhaustive DFS to a depth bound, seeded-random completion beyond
+//!   it, deadlock detection (which doubles as lost-wakeup detection —
+//!   the models omit the production timeout belts on purpose), and
+//!   schedule-string replay.
+//! - [`mailbox_model`], [`request_model`], [`engine_model`],
+//!   [`tcp_model`] — the four protocol models, each carrying seeded
+//!   `*Bug` mutations that reintroduce a historical race so the test
+//!   suite can prove the harness has teeth.
+//! - [`hooks`] — [`hooks::StepPoints`] / [`hooks::StepGate`]: injectable
+//!   step points behind `#[cfg(test)]` fields in the *real* comm code,
+//!   for forcing the modeled races on real threads in unit tests.
+//!
+//! The exhaustive suite runs from `tests/sched_explore.rs` (the CI
+//! `concurrency` leg), including a mutation smoke check driven by
+//! `CYLONFLOW_SCHED_MUTATION`.
+
+pub mod engine_model;
+pub mod explore;
+pub mod hooks;
+pub mod mailbox_model;
+pub mod request_model;
+pub mod tcp_model;
+
+pub use engine_model::{EngineBug, EngineModel};
+pub use explore::{parse_schedule, replay, Explorer, Model, Report, Violation};
+pub use hooks::{StepGate, StepPoints};
+pub use mailbox_model::{MailboxBug, MailboxModel};
+pub use request_model::{RequestBug, RequestModel};
+pub use tcp_model::{TcpBug, TcpModel};

@@ -1,0 +1,276 @@
+//! Model of the one-shot request completion lifecycle
+//! ([`crate::comm::nb::CommRequest`] / its `RequestState`).
+//!
+//! Two threads over explicitly-modeled primitives (a notifier mutex, a
+//! condvar park flag, an atomic done flag, the result slot). The
+//! **completer** (thread 0, standing in for the progress thread) runs
+//! `complete()`: fill the slot, store `done`, take the notifier lock,
+//! notify. The **waiter** (thread 1) runs `wait()`: fast-path check,
+//! else take the notifier lock, re-check `done` under it, park
+//! (atomically releasing the lock), and on wakeup reacquire + re-check.
+//!
+//! The production code's documented no-lost-wakeup protocol is exactly
+//! the combination the two mutations break:
+//! [`RequestBug::DoneAfterNotify`] stores `done` only after the notify
+//! (so a waiter can re-check, see false, and park after the only notify
+//! already fired), and [`RequestBug::NoRecheckUnderLock`] parks without
+//! the under-lock re-check (so a completion racing the fast check is
+//! missed). With no timeout in the model, both are deadlocks the
+//! explorer must find. The checked invariant besides no-deadlock is
+//! *completes exactly once*: the waiter's `take` must find a filled
+//! slot, and must run exactly once.
+
+use super::explore::Model;
+
+/// Seeded mutations of the completion protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestBug {
+    /// `complete()` notifies before storing `done` — the waiter can park
+    /// against an already-spent notify.
+    DoneAfterNotify,
+    /// `wait()` parks without re-checking `done` under the notifier lock
+    /// — the classic check-then-park race.
+    NoRecheckUnderLock,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CPc {
+    SetSlot,
+    SetDone,
+    AcqLock,
+    Notify,
+    RelLock,
+    Done,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WPc {
+    CheckFast,
+    AcqLock,
+    Recheck,
+    Park,
+    Parked,
+    Reacquire,
+    RelLockTake,
+    Take,
+    Done,
+}
+
+/// See the module docs. Thread 0 completes, thread 1 waits.
+#[derive(Debug)]
+pub struct RequestModel {
+    bug: Option<RequestBug>,
+    // shared request state
+    slot: Option<u64>,
+    done: bool,
+    lock: Option<usize>,
+    parked: bool,
+    // thread programs
+    cpc: CPc,
+    wpc: WPc,
+    first_attempt: bool,
+    taken: Option<u64>,
+    takes: u32,
+    took_empty: bool,
+}
+
+impl RequestModel {
+    /// Fresh model; `bug` optionally seeds a protocol mutation.
+    pub fn new(bug: Option<RequestBug>) -> RequestModel {
+        let mut m = RequestModel {
+            bug,
+            slot: None,
+            done: false,
+            lock: None,
+            parked: false,
+            cpc: CPc::SetSlot,
+            wpc: WPc::CheckFast,
+            first_attempt: true,
+            taken: None,
+            takes: 0,
+            took_empty: false,
+        };
+        m.reset();
+        m
+    }
+}
+
+impl Model for RequestModel {
+    fn reset(&mut self) {
+        self.slot = None;
+        self.done = false;
+        self.lock = None;
+        self.parked = false;
+        self.cpc = CPc::SetSlot;
+        self.wpc = WPc::CheckFast;
+        self.first_attempt = true;
+        self.taken = None;
+        self.takes = 0;
+        self.took_empty = false;
+    }
+
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.cpc == CPc::Done,
+            _ => self.wpc == WPc::Done,
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.cpc != CPc::AcqLock || self.lock.is_none(),
+            _ => match self.wpc {
+                WPc::AcqLock | WPc::Reacquire => self.lock.is_none(),
+                // parked on the condvar: runnable only once notified
+                WPc::Parked => !self.parked,
+                _ => true,
+            },
+        }
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid == 0 {
+            let done_after_notify = self.bug == Some(RequestBug::DoneAfterNotify);
+            match self.cpc {
+                CPc::SetSlot => {
+                    self.slot = Some(7);
+                    self.cpc = if done_after_notify { CPc::AcqLock } else { CPc::SetDone };
+                }
+                CPc::SetDone => {
+                    self.done = true;
+                    self.cpc = if done_after_notify { CPc::Done } else { CPc::AcqLock };
+                }
+                CPc::AcqLock => {
+                    self.lock = Some(0);
+                    self.cpc = CPc::Notify;
+                }
+                CPc::Notify => {
+                    // a notify with nobody parked is spent, not queued —
+                    // real condvar semantics, and the whole point
+                    if self.parked {
+                        self.parked = false;
+                    }
+                    self.cpc = CPc::RelLock;
+                }
+                CPc::RelLock => {
+                    self.lock = None;
+                    self.cpc = if done_after_notify { CPc::SetDone } else { CPc::Done };
+                }
+                CPc::Done => unreachable!("stepped a finished completer"),
+            }
+            return;
+        }
+        match self.wpc {
+            WPc::CheckFast => {
+                self.wpc = if self.done { WPc::Take } else { WPc::AcqLock };
+            }
+            WPc::AcqLock => {
+                self.lock = Some(1);
+                self.wpc = WPc::Recheck;
+            }
+            WPc::Recheck => {
+                if self.bug == Some(RequestBug::NoRecheckUnderLock) && self.first_attempt {
+                    // mutated wait(): straight to the park, no re-check
+                    self.first_attempt = false;
+                    self.wpc = WPc::Park;
+                } else if self.done {
+                    self.wpc = WPc::RelLockTake;
+                } else {
+                    self.first_attempt = false;
+                    self.wpc = WPc::Park;
+                }
+            }
+            WPc::Park => {
+                // condvar wait: release the lock and park atomically
+                self.lock = None;
+                self.parked = true;
+                self.wpc = WPc::Parked;
+            }
+            WPc::Parked => {
+                // notified; go reacquire the lock like cv.wait does
+                self.wpc = WPc::Reacquire;
+            }
+            WPc::Reacquire => {
+                self.lock = Some(1);
+                self.wpc = WPc::Recheck;
+            }
+            WPc::RelLockTake => {
+                self.lock = None;
+                self.wpc = WPc::Take;
+            }
+            WPc::Take => {
+                match self.slot.take() {
+                    Some(v) => {
+                        self.taken = Some(v);
+                        self.takes += 1;
+                    }
+                    None => self.took_empty = true,
+                }
+                self.wpc = WPc::Done;
+            }
+            WPc::Done => unreachable!("stepped a finished waiter"),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.took_empty {
+            return Err("take on a done request found an empty slot \
+                        (completed more or less than exactly once)"
+                .to_string());
+        }
+        if self.takes > 1 {
+            return Err(format!("result taken {} times", self.takes));
+        }
+        if self.done && self.takes == 0 && self.slot.is_none() {
+            return Err("done is set but the slot is empty and nothing was taken".to_string());
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.takes != 1 || self.taken != Some(7) {
+            return Err(format!(
+                "waiter finished without consuming the completion exactly once \
+                 (takes={}, taken={:?})",
+                self.takes, self.taken
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched_test::explore::{replay, Explorer};
+
+    #[test]
+    fn correct_protocol_is_exhaustively_clean() {
+        let mut m = RequestModel::new(None);
+        let report = Explorer::default().explore(&mut m).unwrap_or_else(|v| {
+            panic!("correct completion protocol violated: {v}");
+        });
+        assert_eq!(report.truncated, 0, "request model must be exhaustively enumerated");
+        assert!(report.paths > 5, "suspiciously few interleavings: {}", report.paths);
+    }
+
+    #[test]
+    fn done_after_notify_mutation_deadlocks() {
+        let mut m = RequestModel::new(Some(RequestBug::DoneAfterNotify));
+        let v = Explorer::default().explore(&mut m).expect_err("must lose the wakeup");
+        assert!(v.message.contains("deadlock"), "got: {v}");
+        assert!(replay(&mut m, &v.schedule).is_err(), "schedule must reproduce");
+    }
+
+    #[test]
+    fn no_recheck_under_lock_mutation_deadlocks() {
+        let mut m = RequestModel::new(Some(RequestBug::NoRecheckUnderLock));
+        let v = Explorer::default().explore(&mut m).expect_err("must lose the wakeup");
+        assert!(v.message.contains("deadlock"), "got: {v}");
+        assert!(replay(&mut m, &v.schedule).is_err(), "schedule must reproduce");
+    }
+}

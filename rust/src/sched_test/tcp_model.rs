@@ -1,0 +1,231 @@
+//! Model of the TCP per-peer first-connect slot lock
+//! ([`crate::comm::tcp`]'s `stream_to`).
+//!
+//! Two sender threads (the worker and the progress thread in the real
+//! system) race sends to the same peer. Each send resolves the shared
+//! connection slot first: take the slot lock, connect if the slot is
+//! empty, release, then write the frame on the resolved connection.
+//!
+//! The per-`(source, tag)` FIFO guarantee of the transport only holds
+//! *within one socket*: if a check-then-connect race ever opens two
+//! sockets to one peer, frames from one sender split across two reader
+//! threads and arrive in arbitrary relative order. The invariant is
+//! therefore **at most one connection is ever created**, and every frame
+//! travels on it. [`TcpBug::NoSlotLock`] removes the slot lock, turning
+//! the connect into a racy read-check-connect triple the explorer must
+//! catch double-connecting.
+
+use super::explore::Model;
+
+/// Seeded mutations of the connection-establishment protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TcpBug {
+    /// Skip the per-peer slot lock: both senders can observe "no
+    /// connection" and each open their own socket.
+    NoSlotLock,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SPc {
+    /// locked protocol: acquire the slot lock
+    Acq,
+    /// locked protocol: connect-if-empty under the lock
+    ConnectLocked,
+    /// locked protocol: release the slot lock
+    Rel,
+    /// racy protocol: read the slot without the lock
+    ReadSlot,
+    /// racy protocol: connect based on the stale read
+    ConnectRacy,
+    /// write the frame on the resolved connection
+    Send,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Sender {
+    sent: usize,
+    pc: SPc,
+    conn: Option<usize>,
+    saw_empty: bool,
+}
+
+/// See the module docs. Threads 0 and 1 are racing senders.
+#[derive(Debug)]
+pub struct TcpModel {
+    bug: Option<TcpBug>,
+    msgs_per_sender: usize,
+    // shared per-peer state
+    slot: Option<usize>,
+    slot_lock: Option<usize>,
+    connections: usize,
+    /// (sender, seq, connection) in wire order.
+    wire: Vec<(usize, usize, usize)>,
+    senders: [Sender; 2],
+}
+
+impl TcpModel {
+    /// Model with `msgs_per_sender` sends per thread; `bug` optionally
+    /// removes the slot lock.
+    pub fn new(msgs_per_sender: usize, bug: Option<TcpBug>) -> TcpModel {
+        let mut m = TcpModel {
+            bug,
+            msgs_per_sender,
+            slot: None,
+            slot_lock: None,
+            connections: 0,
+            wire: Vec::new(),
+            senders: [Sender { sent: 0, pc: SPc::Acq, conn: None, saw_empty: false }; 2],
+        };
+        m.reset();
+        m
+    }
+
+    fn start_pc(&self) -> SPc {
+        if self.bug == Some(TcpBug::NoSlotLock) {
+            SPc::ReadSlot
+        } else {
+            SPc::Acq
+        }
+    }
+}
+
+impl Model for TcpModel {
+    fn reset(&mut self) {
+        self.slot = None;
+        self.slot_lock = None;
+        self.connections = 0;
+        self.wire.clear();
+        let pc = self.start_pc();
+        self.senders = [Sender { sent: 0, pc, conn: None, saw_empty: false }; 2];
+    }
+
+    fn threads(&self) -> usize {
+        2
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        self.senders[tid].sent == self.msgs_per_sender
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match self.senders[tid].pc {
+            SPc::Acq => self.slot_lock.is_none(),
+            _ => true,
+        }
+    }
+
+    fn step(&mut self, tid: usize) {
+        let pc = self.senders[tid].pc;
+        match pc {
+            SPc::Acq => {
+                self.slot_lock = Some(tid);
+                self.senders[tid].pc = SPc::ConnectLocked;
+            }
+            SPc::ConnectLocked => {
+                // under the slot lock: check-then-connect is atomic with
+                // respect to the other sender
+                if self.slot.is_none() {
+                    self.slot = Some(tid);
+                    self.connections += 1;
+                }
+                self.senders[tid].conn = self.slot;
+                self.senders[tid].pc = SPc::Rel;
+            }
+            SPc::Rel => {
+                self.slot_lock = None;
+                self.senders[tid].pc = SPc::Send;
+            }
+            SPc::ReadSlot => {
+                self.senders[tid].saw_empty = self.slot.is_none();
+                self.senders[tid].conn = self.slot;
+                self.senders[tid].pc = SPc::ConnectRacy;
+            }
+            SPc::ConnectRacy => {
+                if self.senders[tid].saw_empty {
+                    // acting on the stale read: open "my own" socket
+                    self.slot = Some(tid);
+                    self.connections += 1;
+                    self.senders[tid].conn = Some(tid);
+                }
+                self.senders[tid].pc = SPc::Send;
+            }
+            SPc::Send => {
+                let conn = self.senders[tid].conn.expect("send without a connection");
+                let seq = self.senders[tid].sent;
+                self.wire.push((tid, seq, conn));
+                self.senders[tid].sent += 1;
+                self.senders[tid].pc = self.start_pc();
+            }
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        if self.connections > 1 {
+            return Err(format!(
+                "{} sockets opened to one peer: per-(source, tag) FIFO no longer \
+                 holds across the two reader threads",
+                self.connections
+            ));
+        }
+        // per-sender sequence numbers must hit the wire in order
+        for s in 0..2 {
+            let seqs: Vec<usize> =
+                self.wire.iter().filter(|(t, _, _)| *t == s).map(|&(_, q, _)| q).collect();
+            for (i, &q) in seqs.iter().enumerate() {
+                if q != i {
+                    return Err(format!("sender {s} frames reordered on the wire: {seqs:?}"));
+                }
+            }
+        }
+        // ... and every frame must travel on the single connection
+        if let Some((t, q, c)) = self
+            .wire
+            .iter()
+            .find(|&&(_, _, c)| Some(c) != self.slot)
+        {
+            return Err(format!(
+                "frame ({t},{q}) sent on connection {c} but the peer slot holds {:?}",
+                self.slot
+            ));
+        }
+        Ok(())
+    }
+
+    fn check_final(&self) -> Result<(), String> {
+        if self.wire.len() != 2 * self.msgs_per_sender {
+            return Err(format!(
+                "terminated with {}/{} frames sent",
+                self.wire.len(),
+                2 * self.msgs_per_sender
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched_test::explore::{replay, Explorer};
+
+    #[test]
+    fn slot_lock_protocol_is_exhaustively_clean() {
+        let mut m = TcpModel::new(2, None);
+        let report = Explorer::default().explore(&mut m).unwrap_or_else(|v| {
+            panic!("slot-lock protocol violated: {v}");
+        });
+        assert_eq!(report.truncated, 0, "tcp model must be exhaustively enumerated");
+        assert!(report.paths > 50, "suspiciously few interleavings: {}", report.paths);
+    }
+
+    #[test]
+    fn no_slot_lock_mutation_double_connects() {
+        let mut m = TcpModel::new(1, Some(TcpBug::NoSlotLock));
+        let v = Explorer::default()
+            .explore(&mut m)
+            .expect_err("lockless connect must double-connect");
+        assert!(v.message.contains("sockets opened"), "got: {v}");
+        let again = replay(&mut m, &v.schedule).expect_err("schedule must reproduce");
+        assert!(again.message.contains("sockets opened"));
+    }
+}

@@ -303,6 +303,29 @@ mod tests {
     }
 
     #[test]
+    fn truncated_spill_file_surfaces_as_error_not_panic() {
+        // Disk-full / torn-write edge: the spill file on disk is shorter
+        // than the offsets the buffer recorded. Replay must yield Err for
+        // the frames past the truncation (read_exact fails) and a decode
+        // error for a frame cut mid-payload — never a panic.
+        let dir = test_dir("truncated");
+        let mut b = SpillBuffer::new(0, &dir);
+        b.push(0, 0, frame(vec![1, 2, 3], 0, false)).unwrap();
+        b.push(0, 1, frame(vec![4, 5, 6], 1, true)).unwrap();
+        let path = b.spill_path().unwrap().to_path_buf();
+        let full = std::fs::read(&path).unwrap();
+        // cut into the middle of the second frame's payload
+        let f = File::options().write(true).open(&path).unwrap();
+        f.set_len(full.len() as u64 - 10).unwrap();
+        drop(f);
+        let results: Vec<Result<Table>> = b.replay().unwrap().collect();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].is_ok(), "frames before the cut still replay");
+        assert!(results[1].is_err(), "the torn frame must surface an error");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn corrupt_spilled_frame_surfaces_as_error() {
         let dir = test_dir("corrupt");
         let mut b = SpillBuffer::new(0, &dir);

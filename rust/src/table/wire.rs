@@ -97,8 +97,13 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // compared against `remaining` (never `pos + n`): a garbage
+        // length field must produce this error, not an overflow panic
+        if n > self.remaining() {
             return Err(Error::Serde(format!(
                 "truncated table buffer: need {n} bytes at {}, have {}",
                 self.pos,
@@ -130,7 +135,27 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
         return Err(Error::Serde("bad table magic".into()));
     }
     let ncols = r.u32()? as usize;
-    let nrows = r.u64()? as usize;
+    let nrows_raw = r.u64()?;
+    let nrows = usize::try_from(nrows_raw)
+        .map_err(|_| Error::Serde(format!("row count {nrows_raw} exceeds address space")))?;
+    // Sanity-bound the declared counts against the bytes actually present
+    // BEFORE allocating anything sized by them: a corrupt header must
+    // yield a decode error, never a capacity-overflow abort or a huge
+    // speculative allocation. Every column costs >= 4 header bytes; any
+    // row costs >= 1 byte in any column (validity words amortize to
+    // 1 bit/row, data to >= 1 byte/row for every dtype).
+    if ncols > r.remaining() / 4 {
+        return Err(Error::Serde(format!(
+            "column count {ncols} impossible for {} remaining bytes",
+            r.remaining()
+        )));
+    }
+    if ncols > 0 && nrows / 8 > r.remaining() {
+        return Err(Error::Serde(format!(
+            "row count {nrows} impossible for {} remaining bytes",
+            r.remaining()
+        )));
+    }
     let mut fields = Vec::with_capacity(ncols);
     let mut columns = Vec::with_capacity(ncols);
     for _ in 0..ncols {
@@ -144,6 +169,12 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
         let has_validity = r.u8()? == 1;
         let validity = if has_validity {
             let nwords = nrows.div_ceil(64);
+            if nwords > r.remaining() / 8 {
+                return Err(Error::Serde(format!(
+                    "truncated table buffer: validity needs {nwords} words, have {} bytes",
+                    r.remaining()
+                )));
+            }
             let mut words = Vec::with_capacity(nwords);
             for _ in 0..nwords {
                 words.push(r.u64()?);
@@ -152,9 +183,13 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
         } else {
             None
         };
+        let checked_size = |n: usize, per: usize, what: &str| -> Result<usize> {
+            n.checked_mul(per)
+                .ok_or_else(|| Error::Serde(format!("{what} size overflows for {n} rows")))
+        };
         let col = match dtype {
             DType::Int64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take(checked_size(nrows, 8, "int64 column")?)?;
                 let values = raw
                     .chunks_exact(8)
                     .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
@@ -162,7 +197,7 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
                 Column::Int64(Int64Column::new(values, validity))
             }
             DType::Float64 => {
-                let raw = r.take(nrows * 8)?;
+                let raw = r.take(checked_size(nrows, 8, "float64 column")?)?;
                 let values = raw
                     .chunks_exact(8)
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
@@ -174,7 +209,10 @@ pub fn table_from_bytes(buf: &[u8]) -> Result<Table> {
                 Column::Bool(BoolColumn::new(raw.iter().map(|&b| b != 0).collect(), validity))
             }
             DType::Utf8 => {
-                let raw = r.take((nrows + 1) * 4)?;
+                let noffs = nrows
+                    .checked_add(1)
+                    .ok_or_else(|| Error::Serde("utf8 offset count overflows".into()))?;
+                let raw = r.take(checked_size(noffs, 4, "utf8 offsets")?)?;
                 let offsets: Vec<i32> = raw
                     .chunks_exact(4)
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
@@ -394,6 +432,49 @@ mod tests {
         let mut bytes = table_to_bytes(&sample());
         bytes.truncate(bytes.len() - 3);
         assert!(table_from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn every_truncation_prefix_errors_instead_of_panicking() {
+        // The checkpoint/spill recovery contract: a file cut short at ANY
+        // byte boundary (half-written part file, torn spill frame) decodes
+        // to Err — never a panic, never a bogus table.
+        let bytes = table_to_bytes(&sample());
+        for cut in 0..bytes.len() {
+            assert!(
+                table_from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes decoded successfully",
+                bytes.len()
+            );
+        }
+        let frame = frame_from_table(&sample(), 3, true);
+        for cut in 0..frame.len() {
+            assert!(
+                table_from_frame(&frame[..cut]).is_err(),
+                "frame prefix of {cut}/{} bytes decoded successfully",
+                frame.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_counts_error_without_huge_allocations() {
+        // Garbage ncols/nrows fields must be rejected by the plausibility
+        // bounds before anything is allocated from them (a u64::MAX row
+        // count would otherwise overflow `nrows * 8` or abort inside
+        // Vec::with_capacity).
+        let good = table_to_bytes(&sample());
+        // ncols lives at [4, 8)
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(table_from_bytes(&bad).is_err());
+        // nrows lives at [8, 16)
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(table_from_bytes(&bad).is_err());
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(table_from_bytes(&bad).is_err());
     }
 
     #[test]

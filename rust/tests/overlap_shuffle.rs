@@ -4,7 +4,17 @@
 //! in-flight depths and spill budgets (overlap × spill composed); the
 //! distributed operators must inherit the path transparently; and
 //! tearing a `CommContext` down mid-exchange must neither hang nor leak
-//! the progress thread.
+//! the progress thread. (The teardown protocol itself — requests
+//! completed with errors while a worker is mid-`wait_any` — has a
+//! dedicated forced regression in `comm::nb::engine`'s unit tests, and
+//! the underlying handshake is model-checked in
+//! `cylonflow::sched_test`.)
+//!
+//! Properties run under the shrinking harness
+//! ([`cylonflow::proptest_lite::run_prop`]): failures are minimized over
+//! their recorded choice tape and reported with `CYLONFLOW_PROP_SEED=` /
+//! `CYLONFLOW_PROP_TAPE=` replay lines; `CYLONFLOW_PROP_SALT` varies the
+//! CI seed matrix.
 
 use cylonflow::column::Column;
 use cylonflow::comm::{AlgoSet, CommContext, MemoryFabric};

@@ -6,6 +6,13 @@
 //! and raw values, so float comparisons are bitwise) to the serial
 //! result, and repeated parallel runs must be identical to each other
 //! (scheduling nondeterminism must never leak into the answer).
+//!
+//! Properties run under the shrinking harness
+//! ([`cylonflow::proptest_lite::run_prop`]): a failure is automatically
+//! minimized over its recorded choice tape and reported with
+//! copy-pasteable `CYLONFLOW_PROP_SEED=...` / `CYLONFLOW_PROP_TAPE=...`
+//! replay lines; `CYLONFLOW_PROP_SALT` varies the seed sweep (the CI
+//! seed matrix), `CYLONFLOW_PROP_CASES` the case count.
 
 use cylonflow::column::Column;
 use cylonflow::config::{Config, ParallelConfig};

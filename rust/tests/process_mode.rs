@@ -71,6 +71,37 @@ fn process_gang_joins_on_disk_datasets() {
 }
 
 #[test]
+fn worker_exit_during_barrier_fails_fast_with_the_culprit_named() {
+    // Fault edge: rank 0 dies while ranks 1..n are parked inside a
+    // barrier that can now never complete. The leader must report rank
+    // 0's failure promptly — well under the 120 s comm timeout the stuck
+    // ranks would otherwise ride out — and name the failing worker.
+    let t0 = std::time::Instant::now();
+    let err = launch_process_gang(
+        binary(),
+        3,
+        "barrier-exit",
+        &AppParams::new(),
+        Duration::from_secs(120),
+    )
+    .expect_err("rank 0's injected failure must fail the gang");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("worker 0 failed"),
+        "error must name the failing rank, got: {msg}"
+    );
+    assert!(
+        msg.contains("injected worker failure"),
+        "error must carry the worker's own message, got: {msg}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "leader took {:?} to surface a failure it could see immediately",
+        t0.elapsed()
+    );
+}
+
+#[test]
 fn process_gang_unknown_app_fails_cleanly() {
     let err = launch_process_gang(
         binary(),

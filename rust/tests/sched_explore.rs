@@ -1,0 +1,172 @@
+//! The exhaustive concurrency-exploration suite (CI `concurrency` leg).
+//!
+//! Runs the bounded schedule explorer over the four protocol models of
+//! `cylonflow::sched_test` — DESIGN.md §12. The clean models must pass
+//! *exhaustively* (zero truncated schedules at the default bound: every
+//! interleaving of the modeled steps is enumerated); each seeded `*Bug`
+//! mutation must be caught, and the violation's printed schedule string
+//! must reproduce it on replay. `CYLONFLOW_SCHED_MUTATION=stamp-after-sweep`
+//! additionally drives the CI mutation smoke: proof the harness still has
+//! teeth, not just green lights.
+
+use cylonflow::sched_test::{
+    replay, EngineBug, EngineModel, Explorer, MailboxBug, MailboxModel, RequestBug, RequestModel,
+    TcpBug, TcpModel, Violation,
+};
+
+/// The four clean models under the default explorer: no violation, and —
+/// the acceptance bar — full exhaustion (nothing truncated at the depth
+/// bound, so the pass is a proof over the model, not a sample).
+#[test]
+fn mailbox_stamp_protocol_exhaustive() {
+    let mut m = MailboxModel::new(2, None);
+    let report = Explorer::default()
+        .explore(&mut m)
+        .unwrap_or_else(|v| panic!("mailbox stamp protocol violated: {v}"));
+    assert_eq!(report.truncated, 0, "mailbox model must be fully enumerated");
+    assert!(report.paths > 10, "suspiciously few interleavings: {}", report.paths);
+}
+
+#[test]
+fn request_completion_handshake_exhaustive() {
+    let mut m = RequestModel::new(None);
+    let report = Explorer::default()
+        .explore(&mut m)
+        .unwrap_or_else(|v| panic!("request handshake violated: {v}"));
+    assert_eq!(report.truncated, 0, "request model must be fully enumerated");
+    assert!(report.paths > 5, "suspiciously few interleavings: {}", report.paths);
+}
+
+#[test]
+fn engine_send_queue_exhaustive() {
+    let mut m = EngineModel::new(2, 2, None);
+    let report = Explorer::default()
+        .explore(&mut m)
+        .unwrap_or_else(|v| panic!("engine send queue violated: {v}"));
+    assert_eq!(report.truncated, 0, "engine model must be fully enumerated");
+    assert!(report.paths > 50, "suspiciously few interleavings: {}", report.paths);
+}
+
+#[test]
+fn tcp_first_connect_exhaustive() {
+    let mut m = TcpModel::new(2, None);
+    let report = Explorer::default()
+        .explore(&mut m)
+        .unwrap_or_else(|v| panic!("tcp slot-lock protocol violated: {v}"));
+    assert_eq!(report.truncated, 0, "tcp model must be fully enumerated");
+    assert!(report.paths > 50, "suspiciously few interleavings: {}", report.paths);
+}
+
+/// Catch a seeded bug and prove the printed schedule replays to the same
+/// class of violation — the debugging contract of the harness.
+fn catch_and_replay<M: cylonflow::sched_test::Model>(
+    model: &mut M,
+    expect_fragment: &str,
+) -> Violation {
+    let v = Explorer::default()
+        .explore(model)
+        .expect_err("seeded mutation must be caught");
+    assert!(
+        v.message.contains(expect_fragment),
+        "expected a '{expect_fragment}' violation, got: {v}"
+    );
+    let again = replay(model, &v.schedule)
+        .expect_err("the printed schedule must reproduce the violation");
+    assert!(
+        again.message.contains(expect_fragment),
+        "replay diverged from the original violation: {again}"
+    );
+    v
+}
+
+#[test]
+fn mutation_stamp_after_sweep_is_caught() {
+    // The historical mailbox race: capturing the activity stamp AFTER the
+    // poll sweep lets a push land in between, and the idle wait sleeps
+    // through it — a lost wakeup the explorer sees as a deadlock (the
+    // model deliberately has no timeout belt).
+    let mut m = MailboxModel::new(2, Some(MailboxBug::StampAfterSweep));
+    catch_and_replay(&mut m, "deadlock");
+}
+
+#[test]
+fn mutation_done_after_notify_is_caught() {
+    let mut m = RequestModel::new(Some(RequestBug::DoneAfterNotify));
+    catch_and_replay(&mut m, "deadlock");
+}
+
+#[test]
+fn mutation_no_recheck_under_lock_is_caught() {
+    let mut m = RequestModel::new(Some(RequestBug::NoRecheckUnderLock));
+    catch_and_replay(&mut m, "deadlock");
+}
+
+#[test]
+fn mutation_early_slot_release_is_caught() {
+    let mut m = EngineModel::new(2, 2, Some(EngineBug::EarlySlotRelease));
+    catch_and_replay(&mut m, "backpressure overcommitted");
+}
+
+#[test]
+fn mutation_no_slot_lock_is_caught() {
+    let mut m = TcpModel::new(1, Some(TcpBug::NoSlotLock));
+    catch_and_replay(&mut m, "sockets opened");
+}
+
+/// The CI mutation smoke: the `concurrency` leg runs this once normally
+/// (it passes trivially) and once with `CYLONFLOW_SCHED_MUTATION=
+/// stamp-after-sweep`, where the clean-suite assertion is inverted — the
+/// explorer must FAIL on the mutated protocol, proving a harness that
+/// stopped looking would turn CI red rather than silently green.
+#[test]
+fn mutation_env_smoke() {
+    let bug = match std::env::var("CYLONFLOW_SCHED_MUTATION").ok().as_deref() {
+        Some("stamp-after-sweep") => Some(MailboxBug::StampAfterSweep),
+        Some(other) => panic!("unknown CYLONFLOW_SCHED_MUTATION '{other}'"),
+        None => None,
+    };
+    let mutated = bug.is_some();
+    let mut m = MailboxModel::new(2, bug);
+    match Explorer::default().explore(&mut m) {
+        Ok(report) => {
+            assert!(
+                !mutated,
+                "explorer has lost its teeth: the seeded stamp-after-sweep \
+                 mutation survived {} exhaustive paths",
+                report.paths
+            );
+        }
+        Err(v) => {
+            assert!(mutated, "clean mailbox protocol flagged: {v}");
+            assert!(v.message.contains("deadlock"), "unexpected violation class: {v}");
+        }
+    }
+}
+
+/// Determinism of the harness itself: same model, same explorer seed →
+/// byte-identical violation (message AND schedule). Replay lines printed
+/// in one CI run stay valid in the next.
+#[test]
+fn violations_are_deterministic_across_runs() {
+    let run = || {
+        let mut m = RequestModel::new(Some(RequestBug::NoRecheckUnderLock));
+        Explorer::default().explore(&mut m).expect_err("mutation must be caught")
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.schedule, b.schedule);
+    assert_eq!(a.message, b.message);
+}
+
+/// Beyond the depth bound the explorer degrades to seeded-random tail
+/// completion instead of silently shrinking coverage: truncation is
+/// reported, and deeper models still find their bugs.
+#[test]
+fn truncated_exploration_still_catches_bugs() {
+    let shallow = Explorer { max_depth: 6, ..Explorer::default() };
+    let mut m = TcpModel::new(2, Some(TcpBug::NoSlotLock));
+    let v = shallow.explore(&mut m).expect_err("bug must be found despite truncation");
+    assert!(v.message.contains("sockets opened"), "got: {v}");
+    // the reported schedule replays regardless of how it was discovered
+    let again = replay(&mut m, &v.schedule).expect_err("schedule must reproduce");
+    assert!(again.message.contains("sockets opened"));
+}

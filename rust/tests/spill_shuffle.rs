@@ -3,6 +3,12 @@
 //! splits and world sizes, engage (spilled bytes > 0) when the payload
 //! exceeds the memory budget, and leave no temp files behind — or ever
 //! create them below the budget.
+//!
+//! Properties run under the shrinking harness
+//! ([`cylonflow::proptest_lite::run_prop`]): failures are minimized over
+//! their recorded choice tape and reported with `CYLONFLOW_PROP_SEED=` /
+//! `CYLONFLOW_PROP_TAPE=` replay lines; `CYLONFLOW_PROP_SALT` varies the
+//! CI seed matrix.
 
 use cylonflow::column::Column;
 use cylonflow::comm::{AlgoSet, CommContext, MemoryFabric};
