@@ -144,6 +144,14 @@ impl CommContext {
         &self.exchange
     }
 
+    /// A shared handle to the underlying transport. Used by the elastic
+    /// worker's heartbeat thread to piggyback the transport's activity
+    /// stamp onto the published beat (a rank mid-collective keeps
+    /// beating without touching the worker thread).
+    pub fn communicator(&self) -> Arc<dyn Communicator> {
+        self.comm.clone()
+    }
+
     /// Snapshot and reset the accumulated communication timers.
     pub fn take_timers(&self) -> PhaseTimers {
         let mut t = self.timers.lock().expect("timers poisoned");

@@ -154,6 +154,91 @@ mod tests {
     }
 
     #[test]
+    fn file_kv_heartbeat_stillness_is_observable_and_republish_resumes() {
+        // The elastic driver's lease semantics reduced to the kv contract:
+        // a heartbeat writer that dies leaves its key perfectly still (the
+        // last atomic rename wins, nothing ever tears), a watcher diffing
+        // successive get()s can prove the stillness, and a respawned
+        // writer's re-publish is observed as a fresh value change.
+        let dir = std::env::temp_dir().join(format!("cylonflow_kv_lease_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let kv = Arc::new(FileKv::new(&dir).unwrap());
+        let key = "eg/heartbeat/0";
+
+        // writer publishes a few beats, then "dies" (thread ends)
+        let w = {
+            let kv = kv.clone();
+            std::thread::spawn(move || {
+                for seq in 0..5 {
+                    kv.put(key, format!("0 {seq} {seq}").as_bytes()).unwrap();
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        w.join().unwrap();
+        let last = kv.get(key).expect("beats were published");
+        assert_eq!(last, b"0 4 4", "last atomic rename wins");
+
+        // watcher: the value must now sit perfectly still (expired lease)
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(kv.get(key).unwrap(), last, "dead writer leaves the key still");
+
+        // respawn: a new writer at the next generation is observed as a change
+        kv.put(key, b"1 0 9").unwrap();
+        let resumed = kv.get(key).unwrap();
+        assert_ne!(resumed, last, "re-publish after respawn must be observable");
+        assert_eq!(resumed, b"1 0 9");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_kv_wait_survives_a_writer_dying_mid_stream() {
+        // A reader blocked in wait() while its writer dies after an
+        // unknown number of puts must either see a COMPLETE value or time
+        // out — never a torn one (the elastic driver waits on result keys
+        // of ranks that may be SIGKILLed at any moment).
+        let dir = std::env::temp_dir()
+            .join(format!("cylonflow_kv_dying_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let kv = Arc::new(FileKv::new(&dir).unwrap());
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let kv = kv.clone();
+                std::thread::spawn(move || match kv.wait("dying/x", Duration::from_secs(2)) {
+                    Ok(v) => {
+                        let s = String::from_utf8(v).expect("torn value: bad utf8");
+                        assert!(
+                            s.starts_with("rev-") && s.len() == 8,
+                            "torn value observed: {s:?}"
+                        );
+                        true
+                    }
+                    Err(_) => false,
+                })
+            })
+            .collect();
+        // writer: a burst of revisions, then abrupt death (no final value,
+        // no cleanup — the temp files of unfinished puts never surface)
+        let kv2 = kv.clone();
+        std::thread::spawn(move || {
+            for rev in 0..25 {
+                kv2.put("dying/x", format!("rev-{rev:04}").as_bytes()).unwrap();
+            }
+            // thread "dies" here with no signal to the readers
+        })
+        .join()
+        .unwrap();
+        let observed: Vec<bool> = readers.into_iter().map(|r| r.join().unwrap()).collect();
+        assert!(
+            observed.iter().all(|&b| b),
+            "writer published before dying, so every waiter must have seen a value"
+        );
+        // no temp-file debris may be mistaken for a key
+        assert_eq!(kv.get("dying/x").unwrap(), b"rev-0024");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn file_kv_concurrent_create_and_get_never_sees_partial_values() {
         // Rendezvous edge: many writers hammering put() against readers
         // polling get()/wait() on the same keys. The atomic

@@ -8,12 +8,27 @@ use std::time::Duration;
 /// How long a recv waits before declaring the gang dead.
 pub(crate) const RECV_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// Why a mailbox was poisoned: the dead peer and the kv generation the
+/// survivors must rejoin at (see [`Mailbox::poison`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Poison {
+    /// The rank the elastic driver declared dead.
+    pub rank: usize,
+    /// The new gang generation published by the driver.
+    pub generation: u64,
+}
+
 struct Slots {
     queues: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
     /// Monotonic push counter: the activity stamp the nonblocking
     /// progress engine ([`crate::comm::nb`]) uses to sleep between polls
     /// without missing an arrival (see [`Mailbox::wait_newer`]).
     generation: u64,
+    /// Set once by the generation-fence watcher when the gang epoch is
+    /// killed; every blocked and future receive then fails fast with
+    /// [`crate::error::Error::RankFailed`] instead of riding out
+    /// [`RECV_TIMEOUT`] against a peer that will never send.
+    poison: Option<Poison>,
 }
 
 /// FIFO message queues keyed by `(from_rank, tag)` with blocking pop.
@@ -30,7 +45,7 @@ pub(crate) struct Mailbox {
 impl Mailbox {
     pub(crate) fn new() -> Self {
         Mailbox {
-            slots: Mutex::new(Slots { queues: HashMap::new(), generation: 0 }),
+            slots: Mutex::new(Slots { queues: HashMap::new(), generation: 0, poison: None }),
             cv: Condvar::new(),
             #[cfg(test)]
             steps: crate::sched_test::StepPoints::disabled(),
@@ -56,11 +71,35 @@ impl Mailbox {
         self.cv.notify_all();
     }
 
+    /// Fence this mailbox: every blocked [`Mailbox::pop`] wakes with
+    /// [`Error::RankFailed`], and all future receives fail the same way.
+    /// Idempotent (the first poison wins); bumps the activity stamp so
+    /// idle waiters ([`Mailbox::wait_newer`]) wake immediately.
+    pub(crate) fn poison(&self, rank: usize, generation: u64) {
+        let mut s = self.slots.lock().expect("mailbox poisoned");
+        if s.poison.is_none() {
+            s.poison = Some(Poison { rank, generation });
+        }
+        s.generation += 1;
+        self.cv.notify_all();
+    }
+
+    /// The poison record, if the epoch was fenced.
+    pub(crate) fn poisoned(&self) -> Option<Poison> {
+        self.slots.lock().expect("mailbox poisoned").poison
+    }
+
     /// Blocking dequeue of the next message matching `(from, tag)`.
     pub(crate) fn pop(&self, from: usize, tag: u64) -> Result<Vec<u8>> {
         let deadline = std::time::Instant::now() + RECV_TIMEOUT;
         let mut s = self.slots.lock().expect("mailbox poisoned");
         loop {
+            // Poison outranks queued data: frames from a fenced epoch are
+            // unusable (their producer gang is gone), so fail fast even
+            // when a matching message is sitting in the queue.
+            if let Some(p) = s.poison {
+                return Err(Error::RankFailed { rank: p.rank, generation: p.generation });
+            }
             if let Some(q) = s.queues.get_mut(&(from, tag)) {
                 if let Some(m) = q.pop_front() {
                     return Ok(m);
@@ -152,6 +191,54 @@ mod tests {
         });
         m.wait_newer(s1, Duration::from_secs(5));
         assert_ne!(m.stamp(), s1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn poison_fails_blocked_and_future_pops_fast() {
+        use crate::error::Error;
+        let m = std::sync::Arc::new(Mailbox::new());
+        let m2 = m.clone();
+        // a receiver parked on an empty lane, poisoned from another thread
+        let h = std::thread::spawn(move || m2.pop(1, 4));
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        m.poison(1, 7);
+        let err = h.join().unwrap().expect_err("poison must fail the blocked pop");
+        assert!(t0.elapsed() < Duration::from_secs(5), "pop rode out the timeout");
+        match err {
+            Error::RankFailed { rank, generation } => {
+                assert_eq!((rank, generation), (1, 7));
+            }
+            other => panic!("expected RankFailed, got {other}"),
+        }
+        // queued data does not mask the fence, and the first poison wins
+        m.push(0, 1, vec![1]);
+        m.poison(2, 9);
+        match m.pop(0, 1) {
+            Err(Error::RankFailed { rank, generation }) => {
+                assert_eq!((rank, generation), (1, 7));
+            }
+            other => panic!("expected the original poison, got {other:?}"),
+        }
+        assert_eq!(m.poisoned(), Some(Poison { rank: 1, generation: 7 }));
+    }
+
+    #[test]
+    fn poison_wakes_idle_wait_newer() {
+        let m = std::sync::Arc::new(Mailbox::new());
+        let stamp = m.stamp();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            m2.poison(0, 1);
+        });
+        let t0 = std::time::Instant::now();
+        m.wait_newer(stamp, Duration::from_secs(30));
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "poison must bump the stamp and wake idle waiters"
+        );
         h.join().unwrap();
     }
 

@@ -52,7 +52,7 @@ pub use collectives::CommContext;
 pub use kv::{FileKv, InMemoryKv, KvStore};
 pub use memory::MemoryFabric;
 pub use nb::{CommRequest, ProgressEngine};
-pub use tcp::TcpFabric;
+pub use tcp::{FenceConfig, TcpFabric};
 
 use crate::error::Result;
 use std::time::Duration;

@@ -312,6 +312,14 @@ fn run(shared: &Shared) {
                         }
                     }
                     Err(e) => {
+                        // Transport-level failure completes the request
+                        // immediately. This is also how a fenced epoch
+                        // drains: the generation-fence watcher poisons the
+                        // mailbox, `try_recv` starts returning
+                        // `Error::RankFailed`, and every posted receive —
+                        // including ones waiting on healthy peers — fails
+                        // fast here so the exchange unwinds instead of
+                        // riding out RECV_TIMEOUT against a dead rank.
                         let op = q.recvs.remove(i);
                         op.state.complete(Err(e));
                         made_progress = true;

@@ -27,6 +27,36 @@ const HANDSHAKE_MAGIC: u64 = 0x43594c4f_4e464c4f; // "CYLONFLO"
 /// Rendezvous timeout for peer addresses.
 const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Generation fence for elastic gangs (see [`crate::executor::elastic`]).
+///
+/// The elastic driver publishes `"{generation} {failed_rank}"` under a
+/// well-known kv key and bumps the generation when it declares a rank
+/// dead. A fenced communicator ([`TcpComm::bind_fenced`]) watches that
+/// key from a background thread; the moment the published generation
+/// moves past its own, it poisons the mailbox so every receive — blocked,
+/// polled, or future — fails fast with
+/// [`crate::error::Error::RankFailed`] instead of riding out the recv
+/// timeout against a peer that is gone.
+#[derive(Debug, Clone)]
+pub struct FenceConfig {
+    /// KV key the driver publishes the generation under.
+    pub key: String,
+    /// The generation this communicator was built for.
+    pub generation: u64,
+    /// Poll interval of the watcher thread.
+    pub poll: Duration,
+}
+
+/// Parse a fence value `"{generation} {failed_rank}"` (`failed_rank` may
+/// be `-` when no rank has failed, e.g. at generation 0).
+pub(crate) fn parse_fence(value: &[u8]) -> Option<(u64, Option<usize>)> {
+    let s = std::str::from_utf8(value).ok()?;
+    let mut it = s.split_whitespace();
+    let generation: u64 = it.next()?.parse().ok()?;
+    let failed = it.next().and_then(|r| r.parse().ok());
+    Some((generation, failed))
+}
+
 /// Factory for TCP gangs.
 pub struct TcpFabric;
 
@@ -67,6 +97,8 @@ pub struct TcpComm {
     bytes_sent: AtomicU64,
     barrier_epoch: AtomicU64,
     acceptor: Option<std::thread::JoinHandle<()>>,
+    /// Generation-fence watcher thread ([`TcpComm::bind_fenced`] only).
+    fence_watcher: Option<std::thread::JoinHandle<()>>,
     /// Forced-race step points (`tcp.stream_to.first_connect`); the slot
     /// lock protocol itself is model-checked in
     /// [`crate::sched_test::tcp_model`].
@@ -107,9 +139,33 @@ impl TcpComm {
             bytes_sent: AtomicU64::new(0),
             barrier_epoch: AtomicU64::new(0),
             acceptor: Some(acceptor),
+            fence_watcher: None,
             #[cfg(test)]
             steps: crate::sched_test::StepPoints::disabled(),
         })
+    }
+
+    /// [`TcpComm::bind`] plus a generation-fence watcher: a background
+    /// thread polls `fence.key` in the rendezvous store and poisons the
+    /// mailbox the moment the published generation moves past
+    /// `fence.generation` — abandoning every in-flight collective with
+    /// [`Error::RankFailed`] so elastic workers rejoin the next epoch
+    /// instead of hanging against a dead peer.
+    pub fn bind_fenced(
+        rank: usize,
+        world_size: usize,
+        kv: Arc<dyn KvStore>,
+        gang: &str,
+        fence: FenceConfig,
+    ) -> Result<TcpComm> {
+        let mut comm = TcpComm::bind(rank, world_size, kv.clone(), gang)?;
+        let shared = comm.shared.clone();
+        let watcher = std::thread::Builder::new()
+            .name(format!("tcp-fence-{gang}-{rank}"))
+            .spawn(move || fence_loop(kv, fence, shared))
+            .map_err(|e| Error::comm(format!("spawn fence watcher: {e}")))?;
+        comm.fence_watcher = Some(watcher);
+        Ok(comm)
     }
 
     /// Test-only: swap in step points after construction.
@@ -136,10 +192,10 @@ impl TcpComm {
             return Ok(s.clone());
         }
         // Resolve the peer address through the rendezvous store, connect,
-        // handshake with our rank so the peer can demux.
-        let addr_bytes = self
-            .kv
-            .wait(&format!("{}/addr/{to}", self.gang), BOOTSTRAP_TIMEOUT)?;
+        // handshake with our rank so the peer can demux. The wait is
+        // fence-aware: a peer that died before publishing its address
+        // would otherwise pin us here for the whole bootstrap timeout.
+        let addr_bytes = self.kv_wait_fenced(&format!("{}/addr/{to}", self.gang))?;
         let addr = String::from_utf8(addr_bytes)
             .map_err(|e| Error::comm(format!("bad addr utf8: {e}")))?;
         let mut stream = TcpStream::connect(&addr)?;
@@ -155,6 +211,46 @@ impl TcpComm {
         let arc = Arc::new(Mutex::new(stream));
         *slot = Some(arc.clone());
         Ok(arc)
+    }
+
+    /// Bootstrap-rendezvous wait that aborts promptly when the epoch is
+    /// fenced mid-wait (poll slices instead of one blocking kv wait).
+    fn kv_wait_fenced(&self, key: &str) -> Result<Vec<u8>> {
+        let deadline = std::time::Instant::now() + BOOTSTRAP_TIMEOUT;
+        loop {
+            if let Some(p) = self.shared.mailbox.poisoned() {
+                return Err(Error::RankFailed { rank: p.rank, generation: p.generation });
+            }
+            if let Some(v) = self.kv.get(key) {
+                return Ok(v);
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::comm(format!("kv rendezvous timeout on '{key}'")));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Generation-fence watcher body: poll the fence key until shutdown; on a
+/// newer generation, poison the mailbox (naming the failed rank when the
+/// driver published one) and exit.
+fn fence_loop(kv: Arc<dyn KvStore>, fence: FenceConfig, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(v) = kv.get(&fence.key) {
+            if let Some((generation, failed)) = parse_fence(&v) {
+                if generation > fence.generation {
+                    shared
+                        .mailbox
+                        .poison(failed.unwrap_or(usize::MAX), generation);
+                    return;
+                }
+            }
+        }
+        std::thread::sleep(fence.poll);
     }
 }
 
@@ -256,6 +352,12 @@ impl Communicator for TcpComm {
         if from >= self.world_size {
             return Err(Error::comm(format!("recv from invalid rank {from}")));
         }
+        // Fail fast on a fenced epoch: the nb progress engine polls this
+        // from its sweep, and an Err here errors the posted request
+        // immediately — the RECV_TIMEOUT path never has to run out.
+        if let Some(p) = self.shared.mailbox.poisoned() {
+            return Err(Error::RankFailed { rank: p.rank, generation: p.generation });
+        }
         Ok(self.shared.mailbox.try_pop(from, tag))
     }
 
@@ -302,6 +404,9 @@ impl Drop for TcpComm {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Relaxed);
         if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.fence_watcher.take() {
             let _ = h.join();
         }
     }
@@ -450,6 +555,79 @@ mod tests {
             1,
             "the racing senders must share one first-connect"
         );
+    }
+
+    #[test]
+    fn fence_value_parsing() {
+        assert_eq!(parse_fence(b"0 -"), Some((0, None)));
+        assert_eq!(parse_fence(b"3 1"), Some((3, Some(1))));
+        assert_eq!(parse_fence(b"7"), Some((7, None)));
+        assert_eq!(parse_fence(b""), None);
+        assert_eq!(parse_fence(b"x y"), None);
+    }
+
+    #[test]
+    fn fenced_recv_abandons_the_epoch_promptly() {
+        // A rank parked in recv against a peer that will never send; the
+        // driver bumps the generation; the blocked recv must surface
+        // RankFailed within a couple of poll intervals — nowhere near the
+        // 120 s comm timeout it would otherwise ride out.
+        let kv = InMemoryKv::shared();
+        kv.put("eg/generation", b"0 -").unwrap();
+        let fence = |generation| FenceConfig {
+            key: "eg/generation".into(),
+            generation,
+            poll: Duration::from_millis(5),
+        };
+        let c0 =
+            TcpComm::bind_fenced(0, 2, kv.clone(), "t_fence", fence(0)).unwrap();
+        let _c1 =
+            TcpComm::bind_fenced(1, 2, kv.clone(), "t_fence", fence(0)).unwrap();
+        let h = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let err = c0.recv(1, 1).expect_err("fenced recv must fail");
+            (t0.elapsed(), err)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        kv.put("eg/generation", b"1 1").unwrap();
+        let (elapsed, err) = h.join().unwrap();
+        assert!(
+            elapsed < Duration::from_secs(10),
+            "fenced recv took {elapsed:?} to abandon the epoch"
+        );
+        match err {
+            Error::RankFailed { rank, generation } => {
+                assert_eq!((rank, generation), (1, 1));
+            }
+            other => panic!("expected RankFailed, got {other}"),
+        }
+    }
+
+    #[test]
+    fn fenced_try_recv_errors_instead_of_polling_forever() {
+        let kv = InMemoryKv::shared();
+        // generation already moved past this communicator's epoch
+        kv.put("eg2/generation", b"2 0").unwrap();
+        let fence = FenceConfig {
+            key: "eg2/generation".into(),
+            generation: 1,
+            poll: Duration::from_millis(5),
+        };
+        let c = TcpComm::bind_fenced(1, 2, kv, "t_fence2", fence).unwrap();
+        // give the watcher a beat to observe the stale generation
+        let t0 = std::time::Instant::now();
+        loop {
+            match c.try_recv(0, 9) {
+                Err(Error::RankFailed { rank, generation }) => {
+                    assert_eq!((rank, generation), (0, 2));
+                    break;
+                }
+                Ok(None) if t0.elapsed() < Duration::from_secs(10) => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                other => panic!("expected RankFailed, got {other:?}"),
+            }
+        }
     }
 
     #[test]

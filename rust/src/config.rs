@@ -146,6 +146,63 @@ impl Default for TraceConfig {
     }
 }
 
+/// Knobs of the elastic process-gang driver (see
+/// [`crate::executor::elastic`] and DESIGN.md §13). The driver launches
+/// real OS worker processes, watches per-rank heartbeats published
+/// through the file-KV store, and on a missed lease or process exit
+/// fences the epoch (generation bump), respawns the dead rank, and
+/// replays from the last completed stage checkpoint.
+///
+/// Environment variables: `CYLONFLOW_HEARTBEAT_MS` (beat interval in
+/// milliseconds), `CYLONFLOW_LEASE_MISSES` (beats a rank may miss before
+/// its lease expires), `CYLONFLOW_MAX_RESTARTS` (epoch restarts before
+/// the driver gives up), `CYLONFLOW_STAGE_CKPT` (`1`/`on`/`true` enables
+/// stage checkpointing, required for replay recovery), and
+/// `CYLONFLOW_CKPT_DIR` (shared checkpoint directory; defaults to the
+/// system temp dir).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ElasticConfig {
+    /// Heartbeat publish interval in milliseconds (the lease TTL is
+    /// `heartbeat_ms × lease_misses`).
+    pub heartbeat_ms: u64,
+    /// Beats a rank may miss before the driver declares it dead.
+    pub lease_misses: u32,
+    /// Epoch restarts the driver attempts before failing the job.
+    pub max_restarts: u32,
+    /// When set, exchange-crossing plan stages persist their output as
+    /// named stage checkpoints, and recovery replays from the first
+    /// uncovered stage instead of recomputing the whole pipeline.
+    pub stage_ckpt: bool,
+    /// Directory stage checkpoints are written under (must be shared by
+    /// every rank — the NFS analogue, like the kv dir).
+    pub ckpt_dir: String,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            heartbeat_ms: 250,
+            lease_misses: 5,
+            max_restarts: 2,
+            stage_ckpt: false,
+            ckpt_dir: std::env::temp_dir().to_string_lossy().into_owned(),
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// The beat interval as a [`std::time::Duration`].
+    pub fn heartbeat(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.heartbeat_ms.max(1))
+    }
+
+    /// The lease TTL: how long without a fresh beat before a rank is
+    /// declared dead (`heartbeat × lease_misses`).
+    pub fn lease(&self) -> std::time::Duration {
+        self.heartbeat() * self.lease_misses.max(1)
+    }
+}
+
 /// Knobs of the streaming exchange path (chunked wire frames + receiver
 /// spill-to-disk; see DESIGN.md §7) plus the skew-aware repartitioning
 /// switchboard (DESIGN.md §8) and the overlapped-exchange switchboard
@@ -197,6 +254,9 @@ pub struct Config {
     /// Morsel-driven intra-rank parallelism knobs (off by default;
     /// `CYLONFLOW_PARALLEL`).
     pub parallel: ParallelConfig,
+    /// Elastic process-gang knobs (heartbeat lease, restart budget,
+    /// stage checkpointing; `CYLONFLOW_HEARTBEAT_MS` et al.).
+    pub elastic: ElasticConfig,
 }
 
 impl Default for Config {
@@ -209,6 +269,7 @@ impl Default for Config {
             exchange: ExchangeConfig::default(),
             trace: TraceConfig::default(),
             parallel: ParallelConfig::default(),
+            elastic: ElasticConfig::default(),
         }
     }
 }
@@ -228,9 +289,14 @@ impl Config {
     /// peer, ≥ 1), `CYLONFLOW_TRACE` (`1`/`on`/`true` enables event
     /// tracing), `CYLONFLOW_TRACE_EVENTS` (ring capacity in events per
     /// rank, optional `k`/`m`/`g` suffix), `CYLONFLOW_PARALLEL` (morsel
-    /// worker threads per rank, ≥ 1; `1` disables), and
+    /// worker threads per rank, ≥ 1; `1` disables),
     /// `CYLONFLOW_MORSEL_BYTES` (target input bytes per morsel, optional
-    /// `k`/`m`/`g` suffix).
+    /// `k`/`m`/`g` suffix), `CYLONFLOW_HEARTBEAT_MS` (elastic heartbeat
+    /// interval, ms), `CYLONFLOW_LEASE_MISSES` (missable beats before a
+    /// rank is declared dead), `CYLONFLOW_MAX_RESTARTS` (epoch restarts
+    /// before the elastic driver gives up), `CYLONFLOW_STAGE_CKPT`
+    /// (`1`/`on`/`true` enables stage checkpointing), and
+    /// `CYLONFLOW_CKPT_DIR` (shared stage-checkpoint directory).
     pub fn from_env() -> Config {
         let mut c = Config::default();
         // CYLONFLOW_BACKEND is canonical; CYLONFLOW_COMM is the alias the
@@ -299,6 +365,27 @@ impl Config {
         if let Some(n) = env_bytes("CYLONFLOW_MORSEL_BYTES") {
             c.parallel.morsel_bytes = n.max(1);
         }
+        if let Ok(n) = std::env::var("CYLONFLOW_HEARTBEAT_MS") {
+            if let Ok(v) = n.trim().parse::<u64>() {
+                c.elastic.heartbeat_ms = v.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("CYLONFLOW_LEASE_MISSES") {
+            if let Ok(v) = n.trim().parse::<u32>() {
+                c.elastic.lease_misses = v.max(1);
+            }
+        }
+        if let Ok(n) = std::env::var("CYLONFLOW_MAX_RESTARTS") {
+            if let Ok(v) = n.trim().parse::<u32>() {
+                c.elastic.max_restarts = v;
+            }
+        }
+        if let Ok(s) = std::env::var("CYLONFLOW_STAGE_CKPT") {
+            c.elastic.stage_ckpt = parse_switch(&s);
+        }
+        if let Ok(d) = std::env::var("CYLONFLOW_CKPT_DIR") {
+            c.elastic.ckpt_dir = d;
+        }
         c
     }
 }
@@ -359,6 +446,12 @@ mod tests {
         assert_eq!(c.trace.capacity, crate::trace::DEFAULT_CAPACITY);
         assert_eq!(c.parallel.threads, 1, "intra-rank parallelism must be opt-in");
         assert_eq!(c.parallel.morsel_bytes, 256 << 10);
+        assert_eq!(c.elastic.heartbeat_ms, 250);
+        assert_eq!(c.elastic.lease_misses, 5);
+        assert_eq!(c.elastic.max_restarts, 2);
+        assert!(!c.elastic.stage_ckpt, "stage checkpointing must be opt-in");
+        assert!(!c.elastic.ckpt_dir.is_empty());
+        assert_eq!(c.elastic.lease(), std::time::Duration::from_millis(1250));
     }
 
     #[test]

@@ -29,6 +29,18 @@ pub enum Error {
     /// Communication failure (socket, channel closed, rendezvous timeout).
     Comm(String),
 
+    /// A gang member died and the epoch was fenced: the elastic driver
+    /// bumped the generation counter, so every collective in flight on
+    /// the old generation must be abandoned (the surviving ranks rejoin
+    /// at `generation` instead of riding out `RECV_TIMEOUT` against a
+    /// dead peer). Carries the failed rank and the new generation.
+    RankFailed {
+        /// The rank the driver declared dead (missed lease or exit).
+        rank: usize,
+        /// The generation survivors must rejoin at.
+        generation: u64,
+    },
+
     /// Wire-format (de)serialization failure.
     Serde(String),
 
@@ -59,6 +71,10 @@ impl fmt::Display for Error {
             Error::Type(m) => write!(f, "type error: {m}"),
             Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
             Error::Comm(m) => write!(f, "communication error: {m}"),
+            Error::RankFailed { rank, generation } => write!(
+                f,
+                "rank {rank} failed; epoch fenced, rejoin at generation {generation}"
+            ),
             Error::Serde(m) => write!(f, "serialization error: {m}"),
             Error::Executor(m) => write!(f, "executor error: {m}"),
             Error::Store(m) => write!(f, "store error: {m}"),
@@ -119,5 +135,13 @@ mod tests {
         let io: Error = std::io::Error::other("boom").into();
         assert!(io.to_string().starts_with("io error:"));
         assert!(std::error::Error::source(&io).is_some());
+    }
+
+    #[test]
+    fn rank_failed_names_rank_and_generation() {
+        let e = Error::RankFailed { rank: 2, generation: 3 };
+        let s = e.to_string();
+        assert!(s.contains("rank 2"), "got: {s}");
+        assert!(s.contains("generation 3"), "got: {s}");
     }
 }

@@ -9,7 +9,9 @@
 //! repartition the CylonStore uses.
 
 use crate::error::{Error, Result};
-use crate::table::{table_from_bytes, table_to_bytes, Table};
+use crate::table::{
+    table_from_bytes, table_from_frame, table_to_bytes, FrameEncoder, Table, FRAME_HEADER_BYTES,
+};
 use std::path::{Path, PathBuf};
 
 /// Directory-backed checkpoint store.
@@ -29,20 +31,51 @@ impl Checkpointer {
         self.dir.join(format!("{name}.part{rank}.cyt"))
     }
 
+    /// `CYF1`-framed part file of a *stage* checkpoint (see
+    /// [`Checkpointer::save_frames`]) — distinct extension so the two
+    /// encodings can never be confused for each other.
+    fn frame_part_path(&self, name: &str, rank: usize) -> PathBuf {
+        self.dir.join(format!("{name}.part{rank}.cyf"))
+    }
+
     fn meta_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{name}.meta"))
     }
 
-    /// Persist rank `rank`'s partition of checkpoint `name` (atomic
-    /// write-rename). Rank 0 also records the world size.
+    /// Atomic file write: `<target>.tmp` then rename, so a writer killed
+    /// mid-write leaves only an orphaned `.tmp` — never a torn file under
+    /// the real name that a recovery replay would then trust.
+    fn write_atomic(target: &Path, bytes: &[u8]) -> Result<()> {
+        let mut tmp = target.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, target)?;
+        Ok(())
+    }
+
+    /// Persist rank `rank`'s partition of checkpoint `name`: write to
+    /// `<name>.part<rank>.cyt.tmp`, then atomically rename. Rank 0 also
+    /// records the world size (same tmp+rename discipline — the meta file
+    /// is what gates [`Checkpointer::exists`], so a torn meta would be
+    /// just as dangerous as a torn part).
     pub fn save(&self, name: &str, rank: usize, world: usize, t: &Table) -> Result<()> {
-        let tmp = self.dir.join(format!(".tmp.{name}.{rank}.{}", std::process::id()));
-        std::fs::write(&tmp, table_to_bytes(t))?;
-        std::fs::rename(&tmp, self.part_path(name, rank))?;
+        Self::write_atomic(&self.part_path(name, rank), &table_to_bytes(t))?;
         if rank == 0 {
-            std::fs::write(self.meta_path(name), world.to_string())?;
+            self.save_meta(name, world, None)?;
         }
         Ok(())
+    }
+
+    /// Atomically (re)write checkpoint `name`'s meta record: world size
+    /// on the first line, an optional opaque note (e.g. a partitioning
+    /// fingerprint) on the second.
+    pub fn save_meta(&self, name: &str, world: usize, note: Option<&str>) -> Result<()> {
+        let body = match note {
+            Some(n) => format!("{world}\n{n}"),
+            None => world.to_string(),
+        };
+        Self::write_atomic(&self.meta_path(name), body.as_bytes())
     }
 
     /// True when checkpoint `name` is complete (meta + all parts).
@@ -51,13 +84,29 @@ impl Checkpointer {
         (0..world).all(|r| self.part_path(name, r).exists())
     }
 
+    /// True when *stage* checkpoint `name` is complete (meta + all
+    /// `CYF1`-framed parts).
+    pub fn exists_frames(&self, name: &str) -> bool {
+        let Ok(world) = self.world_of(name) else { return false };
+        (0..world).all(|r| self.frame_part_path(name, r).exists())
+    }
+
     /// The parallelism `name` was written with.
     pub fn world_of(&self, name: &str) -> Result<usize> {
         let s = std::fs::read_to_string(self.meta_path(name))
             .map_err(|_| Error::Store(format!("no checkpoint '{name}'")))?;
-        s.trim()
+        s.lines()
+            .next()
+            .unwrap_or("")
+            .trim()
             .parse()
             .map_err(|e| Error::Store(format!("bad checkpoint meta: {e}")))
+    }
+
+    /// The note recorded with checkpoint `name`'s meta, if any.
+    pub fn note_of(&self, name: &str) -> Option<String> {
+        let s = std::fs::read_to_string(self.meta_path(name)).ok()?;
+        s.split_once('\n').map(|(_, note)| note.trim_end().to_string())
     }
 
     /// Restore this rank's partition. When the restarting gang has a
@@ -79,11 +128,95 @@ impl Checkpointer {
         Ok(all.split_even(world)[rank].clone())
     }
 
-    /// Delete checkpoint `name`.
+    /// Persist rank `rank`'s partition of *stage* checkpoint `name` as a
+    /// stream of `CYF1` wire frames — the exact chunking the exchange
+    /// spills with ([`crate::table::FrameEncoder`]), so stage checkpoints
+    /// and spill files share one on-disk grammar. Atomic via
+    /// `.cyf.tmp` + rename; rank 0 records world + `note` in the meta.
+    pub fn save_frames(
+        &self,
+        name: &str,
+        rank: usize,
+        world: usize,
+        note: Option<&str>,
+        t: &Table,
+        frame_bytes: usize,
+    ) -> Result<()> {
+        let mut buf = Vec::with_capacity(t.byte_size() + 256);
+        for frame in FrameEncoder::new(t, frame_bytes.max(1)) {
+            buf.extend_from_slice(&frame);
+        }
+        Self::write_atomic(&self.frame_part_path(name, rank), &buf)?;
+        if rank == 0 {
+            self.save_meta(name, world, note)?;
+        }
+        Ok(())
+    }
+
+    /// Restore this rank's partition of a `CYF1`-framed stage checkpoint.
+    /// The restoring gang must match the checkpoint's parallelism: stage
+    /// outputs are hash-co-located, and re-splitting them evenly would
+    /// silently break the exchange-equivalence the replay relies on.
+    pub fn restore_frames(&self, name: &str, rank: usize, world: usize) -> Result<Table> {
+        let saved_world = self.world_of(name)?;
+        if world != saved_world {
+            return Err(Error::Store(format!(
+                "stage checkpoint '{name}' was written by a {saved_world}-rank gang; \
+                 a {world}-rank gang cannot replay it (partitions are hash-co-located)"
+            )));
+        }
+        let buf = std::fs::read(self.frame_part_path(name, rank))?;
+        let mut parts = Vec::new();
+        let mut pos = 0usize;
+        let mut expect_seq = 0u32;
+        loop {
+            if buf.len() - pos < FRAME_HEADER_BYTES {
+                return Err(Error::Serde(format!(
+                    "stage checkpoint '{name}' part {rank}: truncated frame header \
+                     at byte {pos}"
+                )));
+            }
+            let payload_len =
+                u64::from_le_bytes(buf[pos + 16..pos + 24].try_into().unwrap()) as usize;
+            let end = pos
+                .checked_add(FRAME_HEADER_BYTES)
+                .and_then(|p| p.checked_add(payload_len))
+                .filter(|&e| e <= buf.len())
+                .ok_or_else(|| {
+                    Error::Serde(format!(
+                        "stage checkpoint '{name}' part {rank}: truncated frame payload \
+                         at byte {pos}"
+                    ))
+                })?;
+            let header = frame_header(&buf[pos..end])?;
+            if header.seq != expect_seq {
+                return Err(Error::Serde(format!(
+                    "stage checkpoint '{name}' part {rank}: frame seq {} where {} expected",
+                    header.seq, expect_seq
+                )));
+            }
+            parts.push(table_from_frame(&buf[pos..end])?);
+            pos = end;
+            expect_seq += 1;
+            if header.last {
+                break;
+            }
+        }
+        if pos != buf.len() {
+            return Err(Error::Serde(format!(
+                "stage checkpoint '{name}' part {rank}: {} trailing bytes after LAST frame",
+                buf.len() - pos
+            )));
+        }
+        Table::concat(&parts.iter().collect::<Vec<_>>())
+    }
+
+    /// Delete checkpoint `name` (both encodings).
     pub fn delete(&self, name: &str) -> Result<()> {
         if let Ok(world) = self.world_of(name) {
             for r in 0..world {
                 let _ = std::fs::remove_file(self.part_path(name, r));
+                let _ = std::fs::remove_file(self.frame_part_path(name, r));
             }
         }
         let _ = std::fs::remove_file(self.meta_path(name));
@@ -163,6 +296,78 @@ mod tests {
         // restored bytes restore the checkpoint
         std::fs::write(&part, &full).unwrap();
         assert_eq!(ck.restore("tr", 0, 1).unwrap(), t);
+    }
+
+    #[test]
+    fn no_tmp_file_survives_a_save() {
+        // the spec'd tmp-name discipline: `<name>.part<rank>.cyt.tmp` must
+        // exist only transiently; after save() the directory holds the
+        // final names alone, so exists() can never be confused by debris.
+        let ck = Checkpointer::new(tmpdir("tmpnames")).unwrap();
+        let t = datagen::uniform_table(8, 50, 0.9);
+        ck.save("s", 0, 1, &t).unwrap();
+        ck.save_frames("f", 0, 1, None, &t, 1 << 20).unwrap();
+        let names: Vec<String> = std::fs::read_dir(ck.dir())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(
+            names.iter().all(|n| !n.ends_with(".tmp")),
+            "tmp debris left behind: {names:?}"
+        );
+    }
+
+    #[test]
+    fn frame_checkpoint_roundtrip_multi_frame() {
+        let ck = Checkpointer::new(tmpdir("frames")).unwrap();
+        let t = datagen::uniform_table(6, 500, 0.9);
+        for (r, part) in t.split_even(2).iter().enumerate() {
+            // tiny frame budget → many CYF1 frames per part
+            ck.save_frames("st", r, 2, Some("hash[0]"), part, 64).unwrap();
+        }
+        assert!(ck.exists_frames("st"));
+        assert_eq!(ck.world_of("st").unwrap(), 2);
+        assert_eq!(ck.note_of("st").as_deref(), Some("hash[0]"));
+        for r in 0..2 {
+            assert_eq!(ck.restore_frames("st", r, 2).unwrap(), t.split_even(2)[r]);
+        }
+        // plain checkpoints have no note
+        ck.save("plain", 0, 1, &t).unwrap();
+        assert_eq!(ck.note_of("plain"), None);
+    }
+
+    #[test]
+    fn frame_checkpoint_refuses_other_parallelism() {
+        let ck = Checkpointer::new(tmpdir("fworld")).unwrap();
+        let t = datagen::uniform_table(9, 100, 0.9);
+        for (r, part) in t.split_even(2).iter().enumerate() {
+            ck.save_frames("st", r, 2, None, part, 1 << 20).unwrap();
+        }
+        assert!(ck.restore_frames("st", 0, 4).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_part_errors_at_every_prefix() {
+        // Mirror of the CYT truncation test for the CYF1 stage encoding:
+        // a rank SIGKILLed mid-write may leave any prefix on disk (or the
+        // atomic rename means it leaves nothing — but the replay must not
+        // TRUST that); every cut must decode to an error, never a panic
+        // and never a silently shorter table.
+        let ck = Checkpointer::new(tmpdir("ftrunc")).unwrap();
+        let t = datagen::uniform_table(7, 300, 0.9);
+        ck.save_frames("tr", 0, 1, None, &t, 128).unwrap();
+        let part = ck.dir().join("tr.part0.cyf");
+        let full = std::fs::read(&part).unwrap();
+        assert!(full.len() > 256, "want a multi-frame stream for this test");
+        for cut in 0..full.len() {
+            std::fs::write(&part, &full[..cut]).unwrap();
+            assert!(
+                ck.restore_frames("tr", 0, 1).is_err(),
+                "restore of a {cut}-byte frame stream must error"
+            );
+        }
+        std::fs::write(&part, &full).unwrap();
+        assert_eq!(ck.restore_frames("tr", 0, 1).unwrap(), t);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::store::CylonStore;
 use crate::trace::merge::GlobalTimeline;
 use crate::trace::{TraceCat, TraceSink};
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Per-actor execution environment.
@@ -21,6 +22,10 @@ pub struct CylonEnv {
     pool: Arc<MorselPool>,
     timers: RefCell<PhaseTimers>,
     skew: RefCell<SkewStats>,
+    /// App-level named counters merged into [`CylonEnv::snapshot`]
+    /// alongside the built-in ones — the elastic runtime records
+    /// `restarts` / `stages_recovered` / `stage_ckpts_written` here.
+    counters: RefCell<BTreeMap<String, u64>>,
 }
 
 impl CylonEnv {
@@ -36,7 +41,24 @@ impl CylonEnv {
             pool: MorselPool::disabled(),
             timers: RefCell::new(PhaseTimers::new()),
             skew: RefCell::new(SkewStats::default()),
+            counters: RefCell::new(BTreeMap::new()),
         }
+    }
+
+    /// Add `delta` to the named counter (created at zero). Counters are
+    /// monotonic — [`crate::metrics::MetricsSnapshot::saturating_diff`]
+    /// attributes per-stage windows by diffing snapshots, so never
+    /// decrement.
+    pub fn bump_counter(&self, name: &str, delta: u64) {
+        *self.counters.borrow_mut().entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set the named counter to `value` if that is larger (monotonic
+    /// "record the high-water mark" update, e.g. the current generation).
+    pub fn set_counter_max(&self, name: &str, value: u64) {
+        let mut c = self.counters.borrow_mut();
+        let e = c.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(value);
     }
 
     /// Replace the intra-rank worker pool (builder style; the executor
@@ -107,11 +129,17 @@ impl CylonEnv {
             skew: *self.skew.borrow(),
             overlap: self.comm.peek_overlap_stats(),
             local: self.pool.stats(),
-            counters: vec![
-                ("bytes_sent".to_string(), self.comm.bytes_sent()),
-                ("trace_events_dropped".to_string(), sink.overflow_count()),
-                ("trace_events_recorded".to_string(), sink.recorded_count()),
-            ],
+            counters: {
+                let mut counters = vec![
+                    ("bytes_sent".to_string(), self.comm.bytes_sent()),
+                    ("trace_events_dropped".to_string(), sink.overflow_count()),
+                    ("trace_events_recorded".to_string(), sink.recorded_count()),
+                ];
+                for (k, v) in self.counters.borrow().iter() {
+                    counters.push((k.clone(), *v));
+                }
+                counters
+            },
         }
     }
 

@@ -23,6 +23,7 @@
 mod app;
 pub mod checkpoint;
 mod cluster;
+pub mod elastic;
 mod env;
 #[allow(clippy::module_inception)]
 mod executor;
@@ -34,6 +35,7 @@ mod worker;
 pub use app::AppHandle;
 pub use checkpoint::Checkpointer;
 pub use cluster::Cluster;
+pub use elastic::{launch_elastic_gang, run_elastic_worker, ElasticOptions, ElasticReport};
 pub use env::CylonEnv;
 pub use executor::{CylonExecutor, Executable};
 pub use placement::PlacementGroup;

@@ -32,6 +32,20 @@ fn param_usize(params: &AppParams, key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Die the way a machine failure does: SIGKILL (no destructors, no atexit,
+/// no flushing — an in-flight checkpoint temp file stays a temp file).
+/// Falls back to `abort()` where self-SIGKILL is unavailable.
+fn die_abruptly() -> ! {
+    #[cfg(unix)]
+    {
+        let _ = std::process::Command::new("kill")
+            .arg("-9")
+            .arg(std::process::id().to_string())
+            .status();
+    }
+    std::process::abort();
+}
+
 /// The process-mode application registry. Every app is SPMD over the gang
 /// and returns a one-line result string (collected by the leader).
 pub fn run_named_app(name: &str, params: &AppParams, env: &CylonEnv) -> Result<String> {
@@ -87,6 +101,65 @@ pub fn run_named_app(name: &str, params: &AppParams, env: &CylonEnv) -> Result<S
             let r = crate::table::read_partition(rdir, env.rank())?;
             let t = dist::join(&l, &r, &crate::ops::JoinOptions::inner(0, 0), env)?;
             Ok(format!("rows={}", t.num_rows()))
+        }
+        // The elastic recovery workload: a join→groupby→sort pipeline over
+        // deterministic generated partitions, run through the plan executor
+        // with stage checkpointing when [`crate::config::ElasticConfig`]
+        // enables it. The result line carries the partition's row count AND
+        // a content fingerprint, so the recovery test can assert a restarted
+        // run is byte-identical to an unfailed one. Fault-injection params
+        // (first generation only): `die_rank` + `die_stage` SIGKILL that
+        // rank after the named stage computes but *before* its checkpoint
+        // saves — the abrupt mid-pipeline death the driver must survive.
+        "elastic-pipeline" => {
+            let cfg = Config::from_env();
+            let l = datagen::partition_for_rank(61, rows, card, env.rank(), env.world_size());
+            let r = datagen::partition_for_rank(62, rows, card, env.rank(), env.world_size());
+            let frame = crate::plan::DistFrame::scan(l)
+                .join(
+                    crate::plan::DistFrame::scan(r),
+                    crate::ops::JoinOptions::inner(0, 0),
+                )
+                .groupby(&[0], &[AggSpec::new(1, crate::ops::AggFun::Sum)])
+                .sort(crate::ops::SortOptions::by(0));
+            let options = crate::plan::OptimizerOptions {
+                skew_aware: env.comm().exchange_config().skew.enabled,
+            };
+            let plan = frame.optimized_with(options);
+            let report = if cfg.elastic.stage_ckpt {
+                let mut rec = crate::plan::StageRecovery::for_plan(
+                    &cfg.elastic.ckpt_dir,
+                    &plan,
+                    env.rank(),
+                    env.world_size(),
+                    cfg.exchange.frame_bytes,
+                )?;
+                let generation: u64 = params
+                    .get("__generation")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0);
+                let die_rank = params.get("die_rank").and_then(|v| v.parse::<usize>().ok());
+                if generation == 0 && die_rank == Some(env.rank()) {
+                    let die_stage = params
+                        .get("die_stage")
+                        .cloned()
+                        .unwrap_or_else(|| "sort".into());
+                    rec = rec.with_fault(move |label, _path| {
+                        if label == die_stage {
+                            die_abruptly();
+                        }
+                    });
+                }
+                crate::plan::execute_with_recovery(plan, env, Some(&rec))?
+            } else {
+                crate::plan::execute(plan, env)?
+            };
+            let bytes = crate::table::table_to_bytes(&report.table);
+            Ok(format!(
+                "rows={} fp={:016x}",
+                report.table.num_rows(),
+                crate::util::fnv1a64(&bytes)
+            ))
         }
         // Fault-injection app for the worker-death-during-barrier test:
         // rank 0 exits with an error while every other rank is already

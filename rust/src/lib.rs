@@ -53,6 +53,11 @@
 //! - [`executor::process`] — multi-process gangs (leader spawns workers,
 //!   file-KV rendezvous, TCP) and [`executor::checkpoint`] — coarse
 //!   fault tolerance (paper §VI).
+//! - [`executor::elastic`] — elastic process gangs: heartbeat failure
+//!   detection through the kv store, generation fencing
+//!   (`Error::RankFailed`), respawn, and checkpoint-replay recovery of
+//!   exchange stages via [`plan::StageRecovery`]
+//!   (`CYLONFLOW_STAGE_CKPT`).
 //! - [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` kernels.
 //! - [`metrics`] — phase timers for the comm/compute breakdown experiments,
 //!   unified per-actor [`metrics::MetricsSnapshot`].

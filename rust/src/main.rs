@@ -60,6 +60,8 @@ fn run(args: &Args) -> Result<()> {
         "join" | "groupby" | "sort" | "pipeline" => op(args),
         "launch" => launch(args),
         "worker" => worker(),
+        "elastic" => elastic(args),
+        "elastic-worker" => elastic_worker(),
         _ => {
             println!(
                 "usage: cylonflow <info|smoke|join|groupby|sort|pipeline> \
@@ -67,7 +69,13 @@ fn run(args: &Args) -> Result<()> {
                  \n\
                  multi-process mode:\n\
                  cylonflow launch --app <smoke|join|groupby|sort|pipeline> --workers N [--rows N]\n\
-                 cylonflow worker --rank R --world P --gang G --kv-dir D --app A [--param k=v]..."
+                 cylonflow worker --rank R --world P --gang G --kv-dir D --app A [--param k=v]...\n\
+                 \n\
+                 elastic mode (heartbeat failure detection + checkpoint-replay recovery,\n\
+                 knobs: CYLONFLOW_HEARTBEAT_MS / CYLONFLOW_LEASE_MISSES / CYLONFLOW_MAX_RESTARTS /\n\
+                 CYLONFLOW_STAGE_CKPT / CYLONFLOW_CKPT_DIR):\n\
+                 cylonflow elastic --app <elastic-pipeline|...> --workers N [--rows N]\n\
+                 cylonflow elastic-worker --rank R --world P --gang G --kv-dir D --app A [--param k=v]..."
             );
             Ok(())
         }
@@ -138,6 +146,77 @@ fn worker() -> Result<()> {
         }
     }
     process::run_worker(rank, world, &gang, std::path::Path::new(&kv_dir), &app, &params)
+}
+
+/// Elastic leader mode: like `launch`, but the gang survives rank
+/// failures by heartbeat detection, generation fencing and respawn.
+fn elastic(args: &Args) -> Result<()> {
+    use cylonflow::executor::{elastic, process};
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+    };
+    let app = flag("--app").unwrap_or_else(|| "elastic-pipeline".into());
+    let mut params = process::AppParams::new();
+    params.insert("rows".into(), args.rows.to_string());
+    params.insert("cardinality".into(), args.cardinality.to_string());
+    let binary = process::current_binary()?;
+    let opts = elastic::ElasticOptions::from_config(&Config::from_env());
+    let t0 = Instant::now();
+    let report = elastic::launch_elastic_gang(&binary, args.workers, &app, &params, &opts)?;
+    println!(
+        "elastic gang ({} workers) app '{app}' finished in {:.3}s: generation {} after {} restart(s)",
+        args.workers,
+        t0.elapsed().as_secs_f64(),
+        report.generation,
+        report.restarts
+    );
+    for (rank, r) in report.results.iter().enumerate() {
+        println!("  rank {rank}: {r}");
+    }
+    println!("driver log: {}", report.log.display());
+    Ok(())
+}
+
+/// Elastic worker mode (spawned by `elastic`).
+fn elastic_worker() -> Result<()> {
+    use cylonflow::executor::process;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1).cloned())
+    };
+    let rank: usize = flag("--rank")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| cylonflow::Error::invalid("elastic-worker needs --rank"))?;
+    let world: usize = flag("--world")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| cylonflow::Error::invalid("elastic-worker needs --world"))?;
+    let gang = flag("--gang").unwrap_or_else(|| "eg".into());
+    let kv_dir = flag("--kv-dir")
+        .ok_or_else(|| cylonflow::Error::invalid("elastic-worker needs --kv-dir"))?;
+    let app = flag("--app").unwrap_or_else(|| "elastic-pipeline".into());
+    let mut params = process::AppParams::new();
+    for (i, a) in argv.iter().enumerate() {
+        if a == "--param" {
+            if let Some(kv) = argv.get(i + 1) {
+                if let Some((k, v)) = kv.split_once('=') {
+                    params.insert(k.to_string(), v.to_string());
+                }
+            }
+        }
+    }
+    cylonflow::executor::run_elastic_worker(
+        rank,
+        world,
+        &gang,
+        std::path::Path::new(&kv_dir),
+        &app,
+        &params,
+    )
 }
 
 fn info() -> Result<()> {

@@ -6,7 +6,7 @@
 use super::optimizer::{GroupbyMode, PhysNode, PhysPlan};
 use crate::dist;
 use crate::error::Result;
-use crate::executor::CylonEnv;
+use crate::executor::{Checkpointer, CylonEnv};
 use crate::metrics::{
     LocalStats, MetricsSnapshot, OverlapStats, Phase, PhaseTimers, SkewStats, SpillStats,
     StageTiming,
@@ -143,13 +143,156 @@ impl PlanReport {
     }
 }
 
+/// Stage-checkpoint context for [`execute_with_recovery`] — the elastic
+/// replay path (DESIGN.md §13).
+///
+/// Every plan node whose output crossed an exchange writes its partition
+/// as a named `CYF1` stage checkpoint after computing it; a recovering
+/// gang re-enters the plan and, for each such node, *skips the whole
+/// subtree* when the checkpoint is complete and provably
+/// exchange-equivalent — the [`super::Partitioning`] lineage fingerprint
+/// recorded in the checkpoint meta must match the partitioning the
+/// optimizer derived for this run, and the world sizes must agree (stage
+/// outputs are hash-co-located; re-splitting would break equivalence).
+///
+/// Checkpoint names are `"{tag}-{path}"` where `tag` fingerprints the
+/// optimized plan (shape + world) and `path` is the node's structural
+/// position (`r`, `r.0`, `r.0.1`, …) — stable across runs even when
+/// replay skips subtrees, which post-order indices would not be.
+pub struct StageRecovery {
+    ckpt: Checkpointer,
+    tag: String,
+    rank: usize,
+    world: usize,
+    frame_bytes: usize,
+    /// Fault-injection hook (tests): called with `(label, path)` after an
+    /// exchange stage computes but *before* its checkpoint is saved — the
+    /// window where a killed rank leaves the stage incomplete.
+    #[allow(clippy::type_complexity)]
+    fault: Option<Box<dyn Fn(&str, &str)>>,
+}
+
+impl StageRecovery {
+    /// Recovery context rooted at `dir`, named for `plan` (the tag hashes
+    /// the optimized plan's rendering plus the world size, so two
+    /// different pipelines — or the same pipeline at another parallelism
+    /// — can never replay each other's checkpoints).
+    pub fn for_plan(
+        dir: impl Into<std::path::PathBuf>,
+        plan: &PhysPlan,
+        rank: usize,
+        world: usize,
+        frame_bytes: usize,
+    ) -> Result<StageRecovery> {
+        let shape = format!("{plan}|world={world}");
+        Ok(StageRecovery {
+            ckpt: Checkpointer::new(dir)?,
+            tag: format!("stage-{:016x}", crate::util::fnv1a64(shape.as_bytes())),
+            rank,
+            world,
+            frame_bytes: frame_bytes.max(1),
+            fault: None,
+        })
+    }
+
+    /// Install a fault-injection hook (builder style; tests only — the
+    /// hook fires between an exchange stage's compute and its save).
+    pub fn with_fault(mut self, f: impl Fn(&str, &str) + 'static) -> StageRecovery {
+        self.fault = Some(Box::new(f));
+        self
+    }
+
+    /// The checkpoint tag (exposed so tests can locate the files).
+    pub fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn stage_name(&self, path: &str) -> String {
+        format!("{}-{}", self.tag, path)
+    }
+
+    /// Is the stage at `path` covered by a complete, exchange-equivalent
+    /// checkpoint? Complete = meta + every rank's framed part (a part can
+    /// only be missing if its writer died before the atomic rename);
+    /// equivalent = same world and identical partitioning-lineage
+    /// fingerprint.
+    fn covered(&self, path: &str, fingerprint: &str) -> bool {
+        let name = self.stage_name(path);
+        self.ckpt.exists_frames(&name)
+            && self.ckpt.world_of(&name).ok() == Some(self.world)
+            && self.ckpt.note_of(&name).as_deref() == Some(fingerprint)
+    }
+
+    fn restore(&self, path: &str) -> Result<Table> {
+        self.ckpt
+            .restore_frames(&self.stage_name(path), self.rank, self.world)
+    }
+
+    fn save(&self, path: &str, fingerprint: &str, t: &Table) -> Result<()> {
+        self.ckpt.save_frames(
+            &self.stage_name(path),
+            self.rank,
+            self.world,
+            Some(fingerprint),
+            t,
+            self.frame_bytes,
+        )
+    }
+
+    fn fault(&self, label: &str, path: &str) {
+        if let Some(f) = &self.fault {
+            f(label, path);
+        }
+    }
+}
+
+/// The partitioning-lineage fingerprint recorded in (and checked
+/// against) a stage checkpoint's meta: the `Debug` rendering of the
+/// node's [`super::Partitioning`] — hash/range keys, balanced flag and
+/// all. Two plans whose stage outputs are distributed identically agree
+/// on it; any relocation of rows across ranks changes it.
+fn partitioning_fingerprint(plan: &PhysPlan) -> String {
+    format!("{:?}", plan.partitioning)
+}
+
+/// Does this node's output cross an exchange? Only such stages are
+/// checkpointed: local stages (filter/select/scalar, prepartitioned
+/// groupby/sort/distinct) are deterministic recomputation over their
+/// (checkpointed) inputs and cost no communication to replay.
+fn node_exchanges(node: &PhysNode) -> bool {
+    match node {
+        PhysNode::Scan { .. }
+        | PhysNode::Filter { .. }
+        | PhysNode::Select { .. }
+        | PhysNode::AddScalar { .. } => false,
+        PhysNode::Join { .. } | PhysNode::SetOp { .. } | PhysNode::Rebalance { .. } => true,
+        PhysNode::GroupBy { mode, .. } => !matches!(mode, GroupbyMode::Prepartitioned),
+        PhysNode::Sort { prepartitioned, .. } => !prepartitioned,
+        PhysNode::Distinct { prepartitioned, .. } => !prepartitioned,
+    }
+}
+
 /// Execute `plan` on this rank. Every rank of the gang must execute the
 /// same plan shape (the usual SPMD contract — only the scanned
 /// partitions differ per rank).
 pub fn execute(plan: PhysPlan, env: &CylonEnv) -> Result<PlanReport> {
+    execute_with_recovery(plan, env, None)
+}
+
+/// [`execute`] with an optional stage-checkpoint context: exchange
+/// stages covered by a complete, lineage-equivalent checkpoint are
+/// restored from disk (subtree skipped entirely); every other exchange
+/// stage saves its output as it completes, so the *next* recovery starts
+/// one stage further along. With `recovery == None` this is exactly
+/// [`execute`].
+pub fn execute_with_recovery(
+    plan: PhysPlan,
+    env: &CylonEnv,
+    recovery: Option<&StageRecovery>,
+) -> Result<PlanReport> {
     let mut stages = Vec::new();
     let mut mark = env.snapshot();
-    let table = eval(plan, env, &mut stages, &mut mark)?;
+    let table = eval(plan, env, &mut stages, &mut mark, recovery, "r")?;
     Ok(PlanReport { table, stages })
 }
 
@@ -158,12 +301,45 @@ fn eval(
     env: &CylonEnv,
     stages: &mut Vec<StageTiming>,
     mark: &mut MetricsSnapshot,
+    rec: Option<&StageRecovery>,
+    path: &str,
 ) -> Result<Table> {
     let label = plan.label();
+    let exchanges = node_exchanges(&plan.node);
+    let fingerprint = if rec.is_some() && exchanges {
+        partitioning_fingerprint(&plan)
+    } else {
+        String::new()
+    };
+    // Replay short-circuit: a covered exchange stage restores this rank's
+    // part and skips its whole subtree. Soundness: the fingerprint proves
+    // the restored partitions are distributed exactly as this run's
+    // optimizer expects, and completeness (every rank's part present)
+    // implies every rank finished the stage — collectives synchronize, so
+    // all ranks see the same covered() answer when they arrive here.
+    if let Some(rc) = rec {
+        if exchanges && rc.covered(path, &fingerprint) {
+            let t = env.time(Phase::Auxiliary, || rc.restore(path))?;
+            env.bump_counter("stages_recovered", 1);
+            let now = env.snapshot();
+            let delta = now.saturating_diff(mark);
+            stages.push(StageTiming {
+                name: format!("{label}(replayed)"),
+                timers: delta.timers,
+                spill: delta.spill,
+                skew: delta.skew,
+                overlap: delta.overlap,
+                local: delta.local,
+            });
+            *mark = now;
+            return Ok(t);
+        }
+    }
     // One trace span per executed node, opened before the match so it
     // encloses the recursive input evaluation: on the timeline a join's
     // span contains its children's spans, mirroring the plan tree.
     let _span = env.trace().span(TraceCat::Stage, label);
+    let child = |i: usize| format!("{path}.{i}");
     let out = match plan.node {
         // Scans do no work: return the partition, emit no stage. When
         // this plan holds the only reference (the usual build-and-run
@@ -172,18 +348,18 @@ fn eval(
             return Ok(std::sync::Arc::try_unwrap(table).unwrap_or_else(|arc| (*arc).clone()))
         }
         PhysNode::Filter { input, pred } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             env.time(Phase::Compute, || pred.apply_with_pool(&t, env.pool()))?
         }
         PhysNode::Select { input, cols } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             env.time(Phase::Auxiliary, || {
                 ops::project_with_pool(&t, &cols, env.pool())
             })?
         }
         PhysNode::Join { left, right, opts, exchange, skew_tolerant } => {
-            let l = eval(*left, env, stages, mark)?;
-            let r = eval(*right, env, stages, mark)?;
+            let l = eval(*left, env, stages, mark, rec, &child(0))?;
+            let r = eval(*right, env, stages, mark, rec, &child(1))?;
             if skew_tolerant {
                 dist::join_skew(&l, &r, &opts, env)?
             } else {
@@ -191,7 +367,7 @@ fn eval(
             }
         }
         PhysNode::GroupBy { input, keys, aggs, mode } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             match mode {
                 GroupbyMode::Prepartitioned => {
                     dist::groupby_prepartitioned(&t, &keys, &aggs, env)?
@@ -202,7 +378,7 @@ fn eval(
             }
         }
         PhysNode::Sort { input, opts, prepartitioned, skew_tolerant } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             if prepartitioned {
                 dist::sort_prepartitioned(&t, &opts, env)?
             } else if skew_tolerant {
@@ -212,7 +388,7 @@ fn eval(
             }
         }
         PhysNode::Distinct { input, prepartitioned } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             if prepartitioned {
                 dist::setops::distinct_prepartitioned(&t, env)?
             } else {
@@ -220,8 +396,8 @@ fn eval(
             }
         }
         PhysNode::SetOp { left, right, kind } => {
-            let l = eval(*left, env, stages, mark)?;
-            let r = eval(*right, env, stages, mark)?;
+            let l = eval(*left, env, stages, mark, rec, &child(0))?;
+            let r = eval(*right, env, stages, mark, rec, &child(1))?;
             match kind {
                 super::logical::SetOpKind::UnionDistinct => dist::union_distinct(&l, &r, env)?,
                 super::logical::SetOpKind::Intersect => dist::intersect(&l, &r, env)?,
@@ -229,14 +405,26 @@ fn eval(
             }
         }
         PhysNode::AddScalar { input, col, scalar } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             env.time(Phase::Compute, || ops::add_scalar(&t, col, scalar))?
         }
         PhysNode::Rebalance { input } => {
-            let t = eval(*input, env, stages, mark)?;
+            let t = eval(*input, env, stages, mark, rec, &child(0))?;
             dist::rebalance(&t, env)?.0
         }
     };
+    // Persist the stage output *after* the exchange completed: once every
+    // rank's part exists the stage is globally done (the exchange is a
+    // synchronization point), so a recovering gang may trust a complete
+    // checkpoint. A rank killed before its atomic rename leaves the stage
+    // uncovered and it recomputes — never a torn replay.
+    if let Some(rc) = rec {
+        if exchanges {
+            rc.fault(label, path);
+            env.time(Phase::Auxiliary, || rc.save(path, &fingerprint, &out))?;
+            env.bump_counter("stage_ckpts_written", 1);
+        }
+    }
     // Attribute the timer/spill/skew deltas since the last cut to this node.
     let now = env.snapshot();
     let delta = now.saturating_diff(mark);
@@ -309,6 +497,65 @@ mod tests {
         let t = &out[0].table;
         assert_eq!(t.num_columns(), 1);
         assert_eq!(t.column(0).unwrap().i64_values().unwrap(), &[30, 40]);
+    }
+
+    fn recovery_pipeline(env: &CylonEnv) -> DistFrame {
+        let l = datagen::partition_for_rank(801, 600, 0.5, env.rank(), env.world_size());
+        let r = datagen::partition_for_rank(802, 600, 0.5, env.rank(), env.world_size());
+        DistFrame::scan(l)
+            .join(DistFrame::scan(r), JoinOptions::inner(0, 0))
+            .groupby(&[0], &[AggSpec::new(1, AggFun::Sum)])
+            .sort(SortOptions::by(0))
+    }
+
+    fn run_recovering(dir: std::path::PathBuf, p: usize) -> Vec<PlanReport> {
+        let c = Cluster::local(p).unwrap();
+        let exec = CylonExecutor::new(&c, p).unwrap();
+        exec.run(move |env| {
+            let plan = recovery_pipeline(env).optimized();
+            let rec = StageRecovery::for_plan(&dir, &plan, env.rank(), env.world_size(), 1 << 14)?;
+            execute_with_recovery(plan, env, Some(&rec))
+        })
+        .unwrap()
+        .wait()
+        .unwrap()
+    }
+
+    #[test]
+    fn covered_stages_replay_and_foreign_checkpoints_are_refused() {
+        let p = 2;
+        let dir = std::env::temp_dir()
+            .join(format!("cylonflow-stage-rec-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // First run computes everything and leaves stage checkpoints behind.
+        let first = run_recovering(dir.clone(), p);
+        for rep in &first {
+            let names: Vec<&str> = rep.stages.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, ["join", "groupby", "sort"], "first run computes");
+        }
+
+        // Second run over the same plan replays the last covered exchange
+        // stage (sort covers its whole subtree) and is byte-identical.
+        let second = run_recovering(dir.clone(), p);
+        for (a, b) in first.iter().zip(&second) {
+            let names: Vec<&str> = b.stages.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, ["sort(replayed)"], "covered subtree skipped: {names:?}");
+            assert_eq!(
+                crate::table::table_to_bytes(&a.table),
+                crate::table::table_to_bytes(&b.table),
+                "replayed partition must be byte-identical"
+            );
+        }
+
+        // A different parallelism must refuse the p-rank checkpoints and
+        // recompute from scratch (world recorded in the meta gates replay;
+        // the plan tag also differs because it hashes the world).
+        let solo = run_recovering(dir.clone(), 1);
+        let names: Vec<&str> = solo[0].stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["join", "groupby", "sort"], "foreign world recomputes");
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod exec;
 pub mod logical;
 pub mod optimizer;
 
-pub use exec::{execute, PlanReport};
+pub use exec::{execute, execute_with_recovery, PlanReport, StageRecovery};
 pub use logical::{DistFrame, FilterPred, LogicalPlan, SetOpKind};
 pub use optimizer::{
     optimize, optimize_with, unoptimized, GroupbyMode, OptimizerOptions, Partitioning, PhysNode,

@@ -27,6 +27,19 @@ pub fn hash64(key: i64) -> i64 {
     h as i64
 }
 
+/// FNV-1a over a byte slice: the stable content fingerprint used for
+/// plan-shaped checkpoint names ([`crate::plan::StageRecovery`]) and
+/// byte-identity assertions in the elastic recovery tests. Not a key
+/// hash — use [`hash64`] for partitioning.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// Hash a slice of keys into `out` (native fallback for the PJRT kernel).
 pub fn hash64_slice(keys: &[i64], out: &mut [i64]) {
     debug_assert_eq!(keys.len(), out.len());

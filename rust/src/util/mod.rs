@@ -5,6 +5,6 @@ pub mod hash;
 pub mod rng;
 pub mod time;
 
-pub use hash::{hash64, HASH_M1, HASH_M2};
+pub use hash::{fnv1a64, hash64, HASH_M1, HASH_M2};
 pub use rng::SplitMix64;
 pub use time::Stopwatch;

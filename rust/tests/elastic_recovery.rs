@@ -1,0 +1,195 @@
+//! Integration: elastic process gangs — heartbeat failure detection,
+//! generation fencing, SIGKILL-a-rank-mid-pipeline recovery via stage
+//! checkpoints (DESIGN.md §13). Driver logs land in
+//! `target/elastic-logs/` so the CI fault leg can upload them as
+//! artifacts when a run fails.
+
+use cylonflow::executor::elastic::{launch_elastic_gang, ElasticOptions};
+use cylonflow::executor::process::AppParams;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn binary() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cylonflow"))
+}
+
+/// Where driver logs and metrics dumps go (uploaded by CI on failure).
+fn log_dir() -> PathBuf {
+    let d = Path::new("target").join("elastic-logs");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cylonflow-elastic-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Options for a test gang: fast heartbeats, a lease generous enough for
+/// loaded CI machines (SIGKILL detection goes through process exit, not
+/// the lease, so this does not slow the fault tests down), and the
+/// elastic knobs passed to the children explicitly — tests must not
+/// mutate their own process environment.
+fn test_opts(tag: &str, max_restarts: u32, stage_ckpt: bool, ckpt_dir: &Path) -> ElasticOptions {
+    ElasticOptions {
+        heartbeat: Duration::from_millis(100),
+        lease: Duration::from_secs(10),
+        max_restarts,
+        timeout: Duration::from_secs(300),
+        log_path: Some(log_dir().join(format!("{tag}.driver.log"))),
+        child_env: vec![
+            ("CYLONFLOW_HEARTBEAT_MS".into(), "100".into()),
+            ("CYLONFLOW_MAX_RESTARTS".into(), max_restarts.to_string()),
+            (
+                "CYLONFLOW_STAGE_CKPT".into(),
+                if stage_ckpt { "1" } else { "0" }.into(),
+            ),
+            (
+                "CYLONFLOW_CKPT_DIR".into(),
+                ckpt_dir.to_string_lossy().into_owned(),
+            ),
+        ],
+    }
+}
+
+fn pipeline_params(rows: usize) -> AppParams {
+    let mut p = AppParams::new();
+    p.insert("rows".into(), rows.to_string());
+    p.insert("cardinality".into(), "0.9".into());
+    p
+}
+
+/// Pull a named counter out of the hand-rolled MetricsSnapshot JSON.
+fn counter(json: &str, name: &str) -> u64 {
+    let needle = format!("\"{name}\": ");
+    json.find(&needle)
+        .map(|i| {
+            json[i + needle.len()..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .unwrap_or(0)
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn elastic_gang_completes_without_faults() {
+    let ckpt = scratch("nofault-ckpt");
+    let report = launch_elastic_gang(
+        binary(),
+        2,
+        "elastic-pipeline",
+        &pipeline_params(10_000),
+        &test_opts("nofault", 2, false, &ckpt),
+    )
+    .unwrap();
+    assert_eq!(report.restarts, 0, "unfailed run must not restart");
+    assert_eq!(report.generation, 0);
+    assert_eq!(report.results.len(), 2);
+    assert_eq!(report.metrics_json.len(), 2);
+    for r in &report.results {
+        assert!(r.starts_with("rows="), "result line shape: {r:?}");
+        assert!(r.contains(" fp="), "result line shape: {r:?}");
+    }
+    for m in &report.metrics_json {
+        assert_eq!(counter(m, "restarts"), 0);
+    }
+    assert!(report.log.exists(), "driver log must be kept on disk");
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn sigkilled_rank_recovers_byte_identical_within_budget() {
+    let world = 4;
+    let rows = 20_000;
+
+    // Baseline: the same pipeline, same world, no faults, no checkpoints.
+    let base_ckpt = scratch("kill-base-ckpt");
+    let baseline = launch_elastic_gang(
+        binary(),
+        world,
+        "elastic-pipeline",
+        &pipeline_params(rows),
+        &test_opts("kill-baseline", 0, false, &base_ckpt),
+    )
+    .unwrap();
+    assert_eq!(baseline.restarts, 0);
+
+    // Faulted run: rank 1 SIGKILLs itself after the sort stage computes
+    // but before its checkpoint saves — mid-pipeline, past the join whose
+    // checkpoint generation 1 will replay.
+    let ckpt = scratch("kill-ckpt");
+    let mut params = pipeline_params(rows);
+    params.insert("die_rank".into(), "1".into());
+    params.insert("die_stage".into(), "sort".into());
+    let report = launch_elastic_gang(
+        binary(),
+        world,
+        "elastic-pipeline",
+        &params,
+        &test_opts("kill-sort", 2, true, &ckpt),
+    )
+    .expect("gang must survive one SIGKILLed rank within the restart budget");
+
+    assert!(report.restarts >= 1, "the kill must be detected as a restart");
+    assert!(report.generation >= 1, "completion must be at a fenced generation");
+    assert_eq!(
+        report.results, baseline.results,
+        "recovered run must be byte-identical to the unfailed baseline \
+         (per-rank row counts and content fingerprints)"
+    );
+    // every completing rank carries the restart in its metrics snapshot
+    for m in &report.metrics_json {
+        assert!(
+            counter(m, "restarts") >= 1,
+            "MetricsSnapshot must record the restart: {m}"
+        );
+    }
+    // generation 1 replayed the join checkpoint generation 0 completed
+    assert!(
+        report
+            .metrics_json
+            .iter()
+            .any(|m| counter(m, "stages_recovered") >= 1),
+        "recovery must replay at least one covered stage, got: {:?}",
+        report.metrics_json
+    );
+    assert!(
+        report
+            .metrics_json
+            .iter()
+            .any(|m| counter(m, "stage_ckpts_written") >= 1),
+        "exchange stages must write checkpoints, got: {:?}",
+        report.metrics_json
+    );
+    // dump the completing generation's metrics next to the driver log for
+    // the CI artifact
+    for (rank, m) in report.metrics_json.iter().enumerate() {
+        let _ = std::fs::write(log_dir().join(format!("kill-sort.rank{rank}.metrics.json")), m);
+    }
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let _ = std::fs::remove_dir_all(&base_ckpt);
+}
+
+#[test]
+fn restart_budget_exhausted_aborts_the_gang() {
+    // max_restarts = 0: the very first failure must abort, promptly.
+    let ckpt = scratch("abort-ckpt");
+    let mut params = pipeline_params(5_000);
+    params.insert("die_rank".into(), "0".into());
+    let err = launch_elastic_gang(
+        binary(),
+        2,
+        "elastic-pipeline",
+        &params,
+        &test_opts("abort", 0, true, &ckpt),
+    )
+    .expect_err("zero restart budget must abort on the first failure");
+    let msg = err.to_string();
+    assert!(msg.contains("aborted"), "error must say the gang aborted: {msg}");
+    assert!(msg.contains("rank 0"), "error must name the failed rank: {msg}");
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

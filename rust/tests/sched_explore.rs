@@ -114,31 +114,68 @@ fn mutation_no_slot_lock_is_caught() {
 }
 
 /// The CI mutation smoke: the `concurrency` leg runs this once normally
-/// (it passes trivially) and once with `CYLONFLOW_SCHED_MUTATION=
-/// stamp-after-sweep`, where the clean-suite assertion is inverted — the
-/// explorer must FAIL on the mutated protocol, proving a harness that
-/// stopped looking would turn CI red rather than silently green.
+/// (it passes trivially) and once per seeded mutation with
+/// `CYLONFLOW_SCHED_MUTATION=<name>` (a CI matrix over every bug the
+/// models can seed), where the clean-suite assertion is inverted — the
+/// explorer must FAIL on the mutated protocol with the expected violation
+/// class, proving a harness that stopped looking would turn CI red rather
+/// than silently green.
 #[test]
 fn mutation_env_smoke() {
-    let bug = match std::env::var("CYLONFLOW_SCHED_MUTATION").ok().as_deref() {
-        Some("stamp-after-sweep") => Some(MailboxBug::StampAfterSweep),
-        Some(other) => panic!("unknown CYLONFLOW_SCHED_MUTATION '{other}'"),
-        None => None,
+    let name = std::env::var("CYLONFLOW_SCHED_MUTATION").ok();
+    // (model to explore, expected violation fragment) per mutation name
+    let run = |mutation: Option<&str>| -> (std::result::Result<cylonflow::sched_test::Report, Violation>, &'static str) {
+        match mutation {
+            None => (
+                Explorer::default().explore(&mut MailboxModel::new(2, None)),
+                "deadlock",
+            ),
+            Some("stamp-after-sweep") => (
+                Explorer::default()
+                    .explore(&mut MailboxModel::new(2, Some(MailboxBug::StampAfterSweep))),
+                "deadlock",
+            ),
+            Some("done-after-notify") => (
+                Explorer::default()
+                    .explore(&mut RequestModel::new(Some(RequestBug::DoneAfterNotify))),
+                "deadlock",
+            ),
+            Some("no-recheck-under-lock") => (
+                Explorer::default()
+                    .explore(&mut RequestModel::new(Some(RequestBug::NoRecheckUnderLock))),
+                "deadlock",
+            ),
+            Some("early-slot-release") => (
+                Explorer::default()
+                    .explore(&mut EngineModel::new(2, 2, Some(EngineBug::EarlySlotRelease))),
+                "backpressure overcommitted",
+            ),
+            Some("no-slot-lock") => (
+                Explorer::default().explore(&mut TcpModel::new(1, Some(TcpBug::NoSlotLock))),
+                "sockets opened",
+            ),
+            Some(other) => panic!("unknown CYLONFLOW_SCHED_MUTATION '{other}'"),
+        }
     };
-    let mutated = bug.is_some();
-    let mut m = MailboxModel::new(2, bug);
-    match Explorer::default().explore(&mut m) {
+    let mutated = name.is_some();
+    let (outcome, expect_fragment) = run(name.as_deref());
+    match outcome {
         Ok(report) => {
             assert!(
                 !mutated,
-                "explorer has lost its teeth: the seeded stamp-after-sweep \
-                 mutation survived {} exhaustive paths",
+                "explorer has lost its teeth: the seeded '{}' mutation \
+                 survived {} exhaustive paths",
+                name.as_deref().unwrap_or(""),
                 report.paths
             );
         }
         Err(v) => {
             assert!(mutated, "clean mailbox protocol flagged: {v}");
-            assert!(v.message.contains("deadlock"), "unexpected violation class: {v}");
+            assert!(
+                v.message.contains(expect_fragment),
+                "unexpected violation class for '{}': {v}",
+                name.as_deref().unwrap_or("")
+            );
         }
     }
 }
