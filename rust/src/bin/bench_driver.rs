@@ -32,6 +32,20 @@
 //!                                             selects the whole family),
 //!                                             emits BENCH_ci.json for
 //!                                             bench_gate
+//! bench_driver top    (--kv-dir DIR | --demo) [--gang NAME] [--iters K]
+//!                     [--interval-ms MS]
+//!                                             live per-rank view of a
+//!                                             running elastic gang: tails
+//!                                             the heartbeat + telemetry
+//!                                             keys (CYLONFLOW_TELEMETRY
+//!                                             must be on in the workers),
+//!                                             renders generation/heartbeat
+//!                                             age/stage/rates per refresh,
+//!                                             ends with the merged cluster
+//!                                             summary + Prometheus
+//!                                             exposition; --demo
+//!                                             self-launches a 2-rank gang
+//!                                             to watch
 //! ```
 //!
 //! Testbed note: this machine exposes a single core, so wall times do not
@@ -787,6 +801,223 @@ fn trace_run(argv: &[String]) -> i32 {
     0
 }
 
+// --------------------------------------------------------------- top
+
+/// Per-rank observer state for `bench_driver top`: tracks when the
+/// heartbeat value last changed (age display) and the last two distinct
+/// telemetry samples (rate display divides their counter deltas by
+/// their wall-clock distance).
+#[derive(Default)]
+struct RankView {
+    hb: Option<Vec<u8>>,
+    hb_changed: Option<std::time::Instant>,
+    prev: Option<cylonflow::metrics::TelemetrySample>,
+    latest: Option<cylonflow::metrics::TelemetrySample>,
+}
+
+impl RankView {
+    fn observe_hb(&mut self, value: Option<Vec<u8>>) {
+        if value.is_some() && value != self.hb {
+            self.hb = value;
+            self.hb_changed = Some(std::time::Instant::now());
+        }
+    }
+
+    fn observe_sample(&mut self, s: cylonflow::metrics::TelemetrySample) {
+        if self.latest.as_ref().map(|l| l.seq) != Some(s.seq) {
+            self.prev = self.latest.take();
+            self.latest = Some(s);
+        }
+    }
+
+    /// Per-second rate of a named counter between the last two samples.
+    fn rate(&self, counter: &str) -> Option<f64> {
+        let (a, b) = (self.prev.as_ref()?, self.latest.as_ref()?);
+        let dt_ms = b.unix_ms.saturating_sub(a.unix_ms);
+        if dt_ms == 0 {
+            return None;
+        }
+        let d = b.total.counter(counter).saturating_sub(a.total.counter(counter));
+        Some(d as f64 * 1000.0 / dt_ms as f64)
+    }
+}
+
+/// `bench_driver top`: live view of a running elastic gang. Tails the
+/// gang's heartbeat and telemetry keys in the rendezvous kv directory
+/// (workers must run with `CYLONFLOW_TELEMETRY=1`) and renders one
+/// per-rank table per refresh; ends with the merged
+/// [`cylonflow::metrics::cluster_summary`] of the last samples, as text
+/// and as Prometheus exposition. `--demo` self-launches a 2-rank
+/// telemetry-enabled gang and watches it.
+fn top_run(argv: &[String]) -> i32 {
+    use cylonflow::comm::kv::{FileKv, KvStore};
+    use cylonflow::executor::elastic::{
+        generation_key, heartbeat_key, launch_elastic_gang, telemetry_key, ElasticOptions,
+    };
+    use cylonflow::metrics::{cluster_summary, TelemetrySample};
+    use std::path::PathBuf;
+
+    let flag = |name: &str| cylonflow::bench_util::arg_value(argv, name);
+    let gang = flag("--gang").cloned().unwrap_or_else(|| "eg".to_string());
+    let iters: usize = flag("--iters").and_then(|v| v.parse().ok()).unwrap_or(10);
+    let interval = Duration::from_millis(
+        flag("--interval-ms").and_then(|v| v.parse().ok()).unwrap_or(200).max(1),
+    );
+    let demo = argv.iter().any(|a| a == "--demo");
+
+    let mut driver = None;
+    let kv_dir: PathBuf = if demo {
+        let dir = std::env::temp_dir().join(format!("cylonflow-top-demo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let binary = std::env::current_exe()
+            .ok()
+            .and_then(|p| p.parent().map(|d| d.join("cylonflow")))
+            .filter(|p| p.exists());
+        let Some(binary) = binary else {
+            eprintln!("top: --demo needs the `cylonflow` binary next to bench_driver");
+            return 1;
+        };
+        let opts = ElasticOptions {
+            kv_dir: Some(dir.clone()),
+            child_env: vec![
+                ("CYLONFLOW_TELEMETRY".into(), "1".into()),
+                ("CYLONFLOW_TELEMETRY_MS".into(), "25".into()),
+            ],
+            ..ElasticOptions::from_config(&Config::from_env())
+        };
+        let mut params = cylonflow::executor::process::AppParams::new();
+        params.insert("rows".into(), "60000".into());
+        params.insert("cardinality".into(), "0.9".into());
+        driver = Some(std::thread::spawn(move || {
+            match launch_elastic_gang(&binary, 2, "elastic-pipeline", &params, &opts) {
+                Ok(rep) => println!(
+                    "top: demo gang done at generation {} after {} restart(s)",
+                    rep.generation, rep.restarts
+                ),
+                Err(e) => eprintln!("top: demo gang failed: {e}"),
+            }
+        }));
+        dir
+    } else {
+        match flag("--kv-dir") {
+            Some(d) => PathBuf::from(d),
+            None => {
+                eprintln!(
+                    "usage: bench_driver top (--kv-dir DIR | --demo) [--gang NAME] \
+                     [--iters K] [--interval-ms MS]"
+                );
+                return 2;
+            }
+        }
+    };
+
+    // Wait (briefly) for the gang's fence to appear, then tail it.
+    let kv = match FileKv::new(&kv_dir) {
+        Ok(kv) => kv,
+        Err(e) => {
+            eprintln!("top: cannot open kv dir {}: {e}", kv_dir.display());
+            return 1;
+        }
+    };
+    let boot = std::time::Instant::now();
+    while kv.get(&generation_key(&gang)).is_none() {
+        if boot.elapsed() > Duration::from_secs(30) {
+            eprintln!("top: no generation fence under {} for gang {gang:?}", kv_dir.display());
+            return 1;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut views: Vec<RankView> = Vec::new();
+    for tick in 0..iters {
+        let generation = kv
+            .get(&generation_key(&gang))
+            .and_then(|v| {
+                String::from_utf8_lossy(&v).split_whitespace().next()?.parse::<u64>().ok()
+            })
+            .unwrap_or(0);
+        // Probe the world size from published heartbeat keys (ranks are
+        // dense from 0; cap the probe defensively).
+        while views.len() < 64 && kv.get(&heartbeat_key(&gang, views.len())).is_some() {
+            views.push(RankView::default());
+        }
+        let mut rows = Vec::new();
+        for (rank, view) in views.iter_mut().enumerate() {
+            view.observe_hb(kv.get(&heartbeat_key(&gang, rank)));
+            // A rank's telemetry key is per-generation; fall back to the
+            // previous generation right after a fence bump.
+            for g in [generation, generation.saturating_sub(1)] {
+                if let Some(v) = kv.get(&telemetry_key(&gang, g, rank)) {
+                    if let Ok(s) = TelemetrySample::from_json(&String::from_utf8_lossy(&v)) {
+                        view.observe_sample(s);
+                        break;
+                    }
+                }
+            }
+            let age = view
+                .hb_changed
+                .map_or_else(|| "-".into(), |t| format!("{}ms", t.elapsed().as_millis()));
+            let (gen_s, seq, stage, spill, skew, overlap) = match &view.latest {
+                Some(s) => (
+                    s.generation.to_string(),
+                    s.seq.to_string(),
+                    if s.stage.is_empty() { "-".to_string() } else { s.stage.clone() },
+                    format!("{}B", s.total.spill.spilled_bytes),
+                    format!("{:.2}", s.total.skew.ratio_after_milli as f64 / 1000.0),
+                    s.total.overlap.chunks_overlapped.to_string(),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            let fmt_rate = |r: Option<f64>| r.map_or_else(|| "-".to_string(), |v| format!("{v:.0}/s"));
+            rows.push((
+                format!("rank {rank}"),
+                vec![
+                    gen_s,
+                    age,
+                    seq,
+                    stage,
+                    fmt_rate(view.rate("rows_out")),
+                    fmt_rate(view.rate("bytes_sent")),
+                    spill,
+                    skew,
+                    overlap,
+                ],
+            ));
+        }
+        print_table(
+            &format!("top — gang {gang:?} generation {generation} (refresh {})", tick + 1),
+            &["gen", "hb age", "seq", "stage", "rows", "bytes", "spill", "skew", "overlap"],
+            &rows,
+        );
+        if kv.get(&format!("{gang}/done")).is_some() || kv.get(&format!("{gang}/abort")).is_some() {
+            println!("top: gang reached a terminal verdict");
+            break;
+        }
+        std::thread::sleep(interval);
+    }
+
+    let snaps: Vec<_> = views
+        .iter()
+        .filter_map(|v| v.latest.as_ref().map(|s| s.total.clone()))
+        .collect();
+    if snaps.is_empty() {
+        eprintln!(
+            "top: no telemetry samples observed — are the workers running with CYLONFLOW_TELEMETRY=1?"
+        );
+        if let Some(h) = driver {
+            let _ = h.join();
+        }
+        return 1;
+    }
+    let summary = cluster_summary(&snaps);
+    println!("{}", summary.table());
+    println!("{}", summary.prometheus());
+    if let Some(h) = driver {
+        let _ = h.join();
+    }
+    0
+}
+
 /// `bench_driver bench`: the fixed-seed CI trajectory. Runs the selected
 /// operators over uniform and zipf-skewed keys with the skew subsystem
 /// enabled, prints the measurements and writes them as JSON for the
@@ -892,6 +1123,7 @@ fn main() {
     match cmd.as_str() {
         "bench" => std::process::exit(bench_ci(&argv[1..])),
         "trace" => std::process::exit(trace_run(&argv[1..])),
+        "top" => std::process::exit(top_run(&argv[1..])),
         "fig6" => fig6(large),
         "fig7" => fig7(large),
         "fig8" => {
@@ -915,7 +1147,7 @@ fn main() {
         other => {
             eprintln!("unknown figure '{other}'");
             eprintln!(
-                "usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|bench|trace|all> [--rows N]"
+                "usage: bench_driver <fig6|fig7|fig8|fig9|serial|ablation|bench|trace|top|all> [--rows N]"
             );
             std::process::exit(2);
         }

@@ -38,12 +38,12 @@ use super::nb::{CommRequest, ProgressEngine};
 use super::Communicator;
 use crate::config::ExchangeConfig;
 use crate::error::Result;
-use crate::metrics::{OverlapStats, Phase, PhaseTimers, SpillStats};
+use crate::metrics::{OverlapStats, Phase, PhaseTimers, SpillStats, StatsHub};
 use crate::store::SpillBuffer;
 use crate::table::{frame_header, table_from_bytes, table_to_bytes, FrameEncoder, Table};
 use crate::trace::{TraceCat, TraceSink};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A live communication context: transport + algorithms + tag allocation
@@ -59,9 +59,10 @@ pub struct CommContext {
     // Collective ops consume tag ranges; every rank allocates in the same
     // order (SPMD), so counters stay aligned without coordination.
     next_tag: AtomicU64,
-    timers: Mutex<PhaseTimers>,
-    spill: Mutex<SpillStats>,
-    overlap: Mutex<OverlapStats>,
+    // All comm-side stat families (communication timers, spill/overlap
+    // counters, wire-seam histograms) live in one Arc-shared hub so the
+    // telemetry sampler thread can snapshot them while a collective runs.
+    stats: Arc<StatsHub>,
     // Started on first nonblocking use; dropping the context shuts it
     // down (outstanding requests error, thread joins — never leaks).
     engine: OnceLock<ProgressEngine>,
@@ -92,9 +93,7 @@ impl CommContext {
             algos,
             exchange,
             next_tag: AtomicU64::new(1 << 16),
-            timers: Mutex::new(PhaseTimers::new()),
-            spill: Mutex::new(SpillStats::default()),
-            overlap: Mutex::new(OverlapStats::default()),
+            stats: Arc::new(StatsHub::new()),
             engine: OnceLock::new(),
             trace: TraceSink::disabled(),
         }
@@ -152,59 +151,54 @@ impl CommContext {
         self.comm.clone()
     }
 
+    /// The comm-side stats hub (communication timers, spill/overlap
+    /// counters, wire-seam histograms). Shared with the telemetry sampler
+    /// ([`crate::metrics::TelemetrySource`]), the progress engine and the
+    /// spill buffers.
+    pub fn stats(&self) -> Arc<StatsHub> {
+        self.stats.clone()
+    }
+
     /// Snapshot and reset the accumulated communication timers.
     pub fn take_timers(&self) -> PhaseTimers {
-        let mut t = self.timers.lock().expect("timers poisoned");
-        let snap = t.clone();
-        t.reset();
-        snap
+        self.stats.take_timers()
     }
 
     /// Non-destructive snapshot of the accumulated communication timers
     /// (per-stage deltas peek without disturbing the app-level report).
     pub fn peek_timers(&self) -> PhaseTimers {
-        self.timers.lock().expect("timers poisoned").clone()
+        self.stats.peek_timers()
     }
 
     /// Non-destructive snapshot of the accumulated spill counters
     /// (monotonic; stage attribution diffs successive snapshots).
     pub fn peek_spill_stats(&self) -> SpillStats {
-        *self.spill.lock().expect("spill stats poisoned")
+        self.stats.peek_spill()
     }
 
     /// Snapshot and reset the accumulated spill counters.
     pub fn take_spill_stats(&self) -> SpillStats {
-        let mut s = self.spill.lock().expect("spill stats poisoned");
-        let snap = *s;
-        *s = SpillStats::default();
-        snap
+        self.stats.take_spill()
     }
 
     /// Non-destructive snapshot of the accumulated overlap counters
     /// (monotonic, like [`CommContext::peek_spill_stats`]; all zero
     /// while the overlap path is disabled).
     pub fn peek_overlap_stats(&self) -> OverlapStats {
-        *self.overlap.lock().expect("overlap stats poisoned")
+        self.stats.peek_overlap()
     }
 
     /// Snapshot and reset the accumulated overlap counters.
     pub fn take_overlap_stats(&self) -> OverlapStats {
-        let mut s = self.overlap.lock().expect("overlap stats poisoned");
-        let snap = *s;
-        *s = OverlapStats::default();
-        snap
+        self.stats.take_overlap()
     }
 
     fn record_spill(&self, stats: SpillStats) {
-        if !stats.is_zero() {
-            self.spill.lock().expect("spill stats poisoned").merge(&stats);
-        }
+        self.stats.record_spill(stats);
     }
 
     fn record_overlap(&self, stats: OverlapStats) {
-        if !stats.is_zero() {
-            self.overlap.lock().expect("overlap stats poisoned").merge(&stats);
-        }
+        self.stats.record_overlap(stats);
     }
 
     /// The nonblocking progress engine of this context, started on first
@@ -217,7 +211,12 @@ impl CommContext {
             // most `inflight` frames per peer outstanding, so this only
             // binds direct isend users that race far ahead.
             let bound = (self.exchange.overlap.inflight_chunks.max(1) * self.world_size()).max(8);
-            ProgressEngine::with_trace(self.comm.clone(), bound, self.trace.clone())
+            ProgressEngine::with_observers(
+                self.comm.clone(),
+                bound,
+                self.trace.clone(),
+                self.stats.clone(),
+            )
         })
     }
 
@@ -242,10 +241,9 @@ impl CommContext {
     fn timed<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
         let start = Instant::now();
         let out = f();
-        self.timers
-            .lock()
-            .expect("timers poisoned")
-            .add(Phase::Communication, start.elapsed());
+        let elapsed = start.elapsed();
+        self.stats.add_phase(Phase::Communication, elapsed);
+        self.stats.record_hist("collective_ns", elapsed.as_nanos() as u64);
         out
     }
 
@@ -255,7 +253,7 @@ impl CommContext {
     /// concurrently with the wire) instead of billing everything to
     /// Communication the way the blocking `timed` wrapper must.
     fn add_phase(&self, phase: Phase, d: Duration) {
-        self.timers.lock().expect("timers poisoned").add(phase, d);
+        self.stats.add_phase(phase, d);
     }
 
     /// Synchronize the gang.
@@ -342,10 +340,11 @@ impl CommContext {
         let mut span = self.trace.span(TraceCat::Comm, "shuffle_streamed");
         span.set_args(p as u64, 0);
         self.timed(|| {
-            let mut sink = SpillBuffer::with_trace(
+            let mut sink = SpillBuffer::with_observers(
                 self.exchange.spill_budget_bytes,
                 &self.exchange.spill_dir,
                 self.trace.clone(),
+                Some(self.stats.clone()),
             );
             {
                 let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
@@ -354,10 +353,19 @@ impl CommContext {
                     streams.push(Box::new(TracedFrames {
                         inner: FrameEncoder::new(t, self.exchange.frame_bytes),
                         trace: self.trace.as_ref(),
+                        stats: self.stats.as_ref(),
                         dest: j as u64,
+                        last_pull: None,
                     }));
                 }
+                let mut last_recv: Option<Instant> = None;
                 let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                    if let Some(prev) = last_recv.replace(Instant::now()) {
+                        // inter-arrival gap: how long the receiver sat
+                        // between frames (wire + sender encode time)
+                        self.stats
+                            .record_hist("frame_recv_wait_ns", prev.elapsed().as_nanos() as u64);
+                    }
                     let h = frame_header(&frame)?;
                     self.trace.event(
                         TraceCat::Comm,
@@ -388,10 +396,11 @@ impl CommContext {
         let mut span = self.trace.span(TraceCat::Comm, "shuffle_overlapped");
         span.set_args(self.world_size() as u64, 0);
         let wall = Instant::now();
-        let mut sink = SpillBuffer::with_trace(
+        let mut sink = SpillBuffer::with_observers(
             self.exchange.spill_budget_bytes,
             &self.exchange.spill_dir,
             self.trace.clone(),
+            Some(self.stats.clone()),
         );
         let stats = {
             let mut streams: Vec<Box<dyn Iterator<Item = Vec<u8>> + '_>> =
@@ -402,7 +411,12 @@ impl CommContext {
                 // record each outgoing frame.
                 streams.push(Box::new(FrameEncoder::new(t, self.exchange.frame_bytes)));
             }
+            let mut last_recv: Option<Instant> = None;
             let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                if let Some(prev) = last_recv.replace(Instant::now()) {
+                    self.stats
+                        .record_hist("frame_recv_wait_ns", prev.elapsed().as_nanos() as u64);
+                }
                 let h = frame_header(&frame)?;
                 self.trace.event(
                     TraceCat::Comm,
@@ -441,6 +455,7 @@ impl CommContext {
         let comm = Duration::from_nanos(stats.wire_wait_nanos).min(total);
         self.add_phase(Phase::Communication, comm);
         self.add_phase(Phase::Auxiliary, total - comm);
+        self.stats.record_hist("collective_ns", total.as_nanos() as u64);
         out
     }
 
@@ -458,21 +473,31 @@ impl CommContext {
         let mut span = self.trace.span(TraceCat::Comm, "allgather_streamed");
         span.set_args(self.world_size() as u64, 0);
         self.timed(|| {
-            let mut sink = SpillBuffer::with_trace(
+            let mut sink = SpillBuffer::with_observers(
                 self.exchange.spill_budget_bytes,
                 &self.exchange.spill_dir,
                 self.trace.clone(),
+                Some(self.stats.clone()),
             );
             {
                 let frames = Box::new(TracedFrames {
                     inner: FrameEncoder::new(t, self.exchange.frame_bytes),
                     trace: self.trace.as_ref(),
+                    stats: self.stats.as_ref(),
                     // broadcast-style stream: every other rank receives
                     // each frame, so mark the destination as the world
                     // size rather than a single peer.
                     dest: self.world_size() as u64,
+                    last_pull: None,
                 });
+                let mut last_recv: Option<Instant> = None;
                 let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                    if let Some(prev) = last_recv.replace(Instant::now()) {
+                        // inter-arrival gap: how long the receiver sat
+                        // between frames (wire + sender encode time)
+                        self.stats
+                            .record_hist("frame_recv_wait_ns", prev.elapsed().as_nanos() as u64);
+                    }
                     let h = frame_header(&frame)?;
                     self.trace.event(
                         TraceCat::Comm,
@@ -496,14 +521,20 @@ impl CommContext {
         let mut span = self.trace.span(TraceCat::Comm, "allgather_overlapped");
         span.set_args(self.world_size() as u64, 0);
         let wall = Instant::now();
-        let mut sink = SpillBuffer::with_trace(
+        let mut sink = SpillBuffer::with_observers(
             self.exchange.spill_budget_bytes,
             &self.exchange.spill_dir,
             self.trace.clone(),
+            Some(self.stats.clone()),
         );
         let stats = {
             let frames = Box::new(FrameEncoder::new(t, self.exchange.frame_bytes));
+            let mut last_recv: Option<Instant> = None;
             let mut push = |source: usize, frame: Vec<u8>| -> Result<bool> {
+                if let Some(prev) = last_recv.replace(Instant::now()) {
+                    self.stats
+                        .record_hist("frame_recv_wait_ns", prev.elapsed().as_nanos() as u64);
+                }
                 let h = frame_header(&frame)?;
                 self.trace.event(
                     TraceCat::Comm,
@@ -607,19 +638,27 @@ impl CommContext {
 /// Iterator adapter that records one `frame_send` instant per frame a
 /// streamed algorithm pulls from a [`FrameEncoder`] (a0 = destination
 /// rank — or the world size for broadcast-style allgather streams,
-/// where every peer receives the frame; a1 = frame length in bytes).
+/// where every peer receives the frame; a1 = frame length in bytes),
+/// plus a `frame_send_wait_ns` histogram observation of the gap between
+/// successive pulls — how long the wire kept the encoder idle.
 struct TracedFrames<'a, I> {
     inner: I,
     trace: &'a TraceSink,
+    stats: &'a StatsHub,
     dest: u64,
+    last_pull: Option<Instant>,
 }
 
 impl<I: Iterator<Item = Vec<u8>>> Iterator for TracedFrames<'_, I> {
     type Item = Vec<u8>;
 
     fn next(&mut self) -> Option<Vec<u8>> {
+        if let Some(prev) = self.last_pull {
+            self.stats.record_hist("frame_send_wait_ns", prev.elapsed().as_nanos() as u64);
+        }
         let frame = self.inner.next()?;
         self.trace.event(TraceCat::Comm, "frame_send", self.dest, frame.len() as u64);
+        self.last_pull = Some(Instant::now());
         Some(frame)
     }
 }
@@ -999,6 +1038,30 @@ mod tests {
         });
         for t in outs {
             assert!(t.get(Phase::Communication) > std::time::Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn collectives_record_latency_histograms() {
+        let outs = run_gang(streaming_contexts(2, 0), |ctx| {
+            let parts: Vec<Table> = (0..2)
+                .map(|_| {
+                    Table::from_columns(vec![("v", Column::from_i64(vec![1; 64]))]).unwrap()
+                })
+                .collect();
+            ctx.shuffle_streamed(parts)?;
+            Ok(ctx.stats().peek_hists())
+        });
+        for hists in outs {
+            let coll = hists.get("collective_ns").expect("collective latency recorded");
+            assert!(coll.count() > 0);
+            assert!(coll.sum() > 0);
+            // zero budget forces spilling, so the spill-size seam fired too
+            let spill = hists.get("spill_write_bytes").expect("spill sizes recorded");
+            assert!(spill.count() > 0);
+            // multi-frame exchange at p=2: the wire seams observed gaps
+            assert!(hists.get("frame_recv_wait_ns").is_some());
+            assert!(hists.get("frame_send_wait_ns").is_some());
         }
     }
 }

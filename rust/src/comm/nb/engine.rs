@@ -33,6 +33,7 @@ use super::request::{CommRequest, Notifier, RequestState};
 use crate::comm::mailbox::RECV_TIMEOUT;
 use crate::comm::Communicator;
 use crate::error::{Error, Result};
+use crate::metrics::StatsHub;
 use crate::trace::{TraceCat, TraceSink};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -85,6 +86,10 @@ struct Shared {
     /// events (`isend_posted` → `send_wire` → `recv_complete`) land in
     /// the same per-rank ring as everything else.
     trace: Arc<TraceSink>,
+    /// Stats hub shared with the owning context: time an `isend`
+    /// submitter spends blocked on the backpressure bound lands in the
+    /// `nb_queue_wait_ns` histogram.
+    stats: Arc<StatsHub>,
     /// Forced-race step points (`engine.pre_idle_wait`); the send-queue
     /// FIFO + backpressure protocol itself is model-checked in
     /// [`crate::sched_test::engine_model`].
@@ -117,6 +122,20 @@ impl ProgressEngine {
         max_pending_sends: usize,
         trace: Arc<TraceSink>,
     ) -> ProgressEngine {
+        ProgressEngine::with_observers(comm, max_pending_sends, trace, Arc::new(StatsHub::new()))
+    }
+
+    /// [`ProgressEngine::with_trace`] plus a shared [`StatsHub`]: time a
+    /// submitter spends blocked in [`ProgressEngine::isend`] waiting for
+    /// a send slot is recorded into the hub's `nb_queue_wait_ns`
+    /// histogram, so backpressure stalls show up in
+    /// [`crate::metrics::MetricsSnapshot`].
+    pub fn with_observers(
+        comm: Arc<dyn Communicator>,
+        max_pending_sends: usize,
+        trace: Arc<TraceSink>,
+        stats: Arc<StatsHub>,
+    ) -> ProgressEngine {
         let shared = Arc::new(Shared {
             comm,
             queue: Mutex::new(Queue {
@@ -129,6 +148,7 @@ impl ProgressEngine {
             shutdown: AtomicBool::new(false),
             max_pending_sends: max_pending_sends.max(1),
             trace,
+            stats,
             #[cfg(test)]
             steps: crate::sched_test::StepPoints::disabled(),
         });
@@ -155,6 +175,7 @@ impl ProgressEngine {
             shutdown: AtomicBool::new(false),
             max_pending_sends: max_pending_sends.max(1),
             trace: TraceSink::disabled(),
+            stats: Arc::new(StatsHub::new()),
             steps,
         });
         ProgressEngine::spawn(shared)
@@ -191,16 +212,21 @@ impl ProgressEngine {
         }
         let state = RequestState::new(self.shared.notifier.clone());
         let mut q = self.shared.queue.lock().expect("engine queue poisoned");
+        let mut blocked_since: Option<Instant> = None;
         while q.pending_sends >= self.shared.max_pending_sends {
             if self.shared.shutdown.load(Ordering::Acquire) {
                 return Err(Error::comm("isend on a shut-down progress engine"));
             }
+            blocked_since.get_or_insert_with(Instant::now);
             let (guard, _) = self
                 .shared
                 .queue_cv
                 .wait_timeout(q, IDLE_WAIT)
                 .expect("engine queue poisoned");
             q = guard;
+        }
+        if let Some(t0) = blocked_since {
+            self.shared.stats.record_hist("nb_queue_wait_ns", t0.elapsed().as_nanos() as u64);
         }
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(Error::comm("isend on a shut-down progress engine"));

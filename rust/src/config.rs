@@ -146,6 +146,44 @@ impl Default for TraceConfig {
     }
 }
 
+/// Knobs of the live-telemetry plane (see
+/// [`crate::metrics::TelemetryPublisher`] and DESIGN.md §14). When
+/// enabled, each rank runs a sampler thread that captures a
+/// [`crate::metrics::TelemetrySample`] every `interval_ms` — the
+/// cumulative [`crate::metrics::MetricsSnapshot`] plus the delta since
+/// the previous sample — into a bounded flight-recorder ring, publishes
+/// the latest sample through the gang's kv store
+/// (`{gang}/telemetry/g{gen}/{rank}`), and appends every sample to a
+/// per-rank flight-recorder JSONL file that survives SIGKILL.
+///
+/// Off by default: with telemetry off no sampler thread is spawned, no
+/// kv key is written and no counter is perturbed — the pipeline takes
+/// exactly the untelemetered code path (pinned by `tests/telemetry.rs`).
+///
+/// Environment variables: `CYLONFLOW_TELEMETRY` (`1`/`on`/`true`
+/// enables), `CYLONFLOW_TELEMETRY_MS` (sampling interval in
+/// milliseconds, ≥ 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Master switch for the per-rank telemetry sampler.
+    pub enabled: bool,
+    /// Sampling interval in milliseconds.
+    pub interval_ms: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: false, interval_ms: 200 }
+    }
+}
+
+impl TelemetryConfig {
+    /// The sampling interval as a [`std::time::Duration`].
+    pub fn interval(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.interval_ms.max(1))
+    }
+}
+
 /// Knobs of the elastic process-gang driver (see
 /// [`crate::executor::elastic`] and DESIGN.md §13). The driver launches
 /// real OS worker processes, watches per-rank heartbeats published
@@ -257,6 +295,8 @@ pub struct Config {
     /// Elastic process-gang knobs (heartbeat lease, restart budget,
     /// stage checkpointing; `CYLONFLOW_HEARTBEAT_MS` et al.).
     pub elastic: ElasticConfig,
+    /// Live-telemetry knobs (off by default; `CYLONFLOW_TELEMETRY`).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for Config {
@@ -270,6 +310,7 @@ impl Default for Config {
             trace: TraceConfig::default(),
             parallel: ParallelConfig::default(),
             elastic: ElasticConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -295,8 +336,10 @@ impl Config {
     /// interval, ms), `CYLONFLOW_LEASE_MISSES` (missable beats before a
     /// rank is declared dead), `CYLONFLOW_MAX_RESTARTS` (epoch restarts
     /// before the elastic driver gives up), `CYLONFLOW_STAGE_CKPT`
-    /// (`1`/`on`/`true` enables stage checkpointing), and
-    /// `CYLONFLOW_CKPT_DIR` (shared stage-checkpoint directory).
+    /// (`1`/`on`/`true` enables stage checkpointing), `CYLONFLOW_CKPT_DIR`
+    /// (shared stage-checkpoint directory), `CYLONFLOW_TELEMETRY`
+    /// (`1`/`on`/`true` enables the per-rank telemetry sampler), and
+    /// `CYLONFLOW_TELEMETRY_MS` (telemetry sampling interval, ms).
     pub fn from_env() -> Config {
         let mut c = Config::default();
         // CYLONFLOW_BACKEND is canonical; CYLONFLOW_COMM is the alias the
@@ -386,6 +429,14 @@ impl Config {
         if let Ok(d) = std::env::var("CYLONFLOW_CKPT_DIR") {
             c.elastic.ckpt_dir = d;
         }
+        if let Ok(s) = std::env::var("CYLONFLOW_TELEMETRY") {
+            c.telemetry.enabled = parse_switch(&s);
+        }
+        if let Ok(n) = std::env::var("CYLONFLOW_TELEMETRY_MS") {
+            if let Ok(v) = n.trim().parse::<u64>() {
+                c.telemetry.interval_ms = v.max(1);
+            }
+        }
         c
     }
 }
@@ -452,6 +503,9 @@ mod tests {
         assert!(!c.elastic.stage_ckpt, "stage checkpointing must be opt-in");
         assert!(!c.elastic.ckpt_dir.is_empty());
         assert_eq!(c.elastic.lease(), std::time::Duration::from_millis(1250));
+        assert!(!c.telemetry.enabled, "telemetry must be opt-in");
+        assert_eq!(c.telemetry.interval_ms, 200);
+        assert_eq!(c.telemetry.interval(), std::time::Duration::from_millis(200));
     }
 
     #[test]

@@ -23,8 +23,17 @@
 //! {gang}/result/g{gen}/{r}   app result string         epoch output
 //! {gang}/metrics/g{gen}/{r}  MetricsSnapshot JSON      epoch metrics
 //! {gang}/error/g{gen}/{r}    error string              epoch failure
+//! {gang}/telemetry/g{gen}/{r} TelemetrySample JSON     latest live sample (opt-in)
 //! {gang}/done, {gang}/abort  terminal verdicts         driver-owned
 //! ```
+//!
+//! With telemetry enabled (`CYLONFLOW_TELEMETRY`, see
+//! [`crate::config::TelemetryConfig`]) every worker additionally runs a
+//! sampler thread that publishes its latest timestamped metrics sample
+//! under the telemetry key (what `bench_driver top` tails) and appends
+//! every sample to a per-rank flight-recorder JSONL under the kv
+//! directory; the driver copies those files next to its log on exit, so
+//! a SIGKILLed rank still leaves its last observations behind.
 //!
 //! The heartbeat value piggybacks the transport's
 //! [`Communicator::activity_stamp`] — the same monotonic progress stamp
@@ -38,6 +47,7 @@ use crate::comm::tcp::{parse_fence, FenceConfig, TcpComm};
 use crate::comm::{CommBackend, CommContext, Communicator};
 use crate::config::Config;
 use crate::error::{Error, Result};
+use crate::metrics::{TelemetryPublisher, TelemetrySink};
 use crate::store::{CylonStore, ObjectStore};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -51,11 +61,14 @@ const BOOT_TIMEOUT: Duration = Duration::from_secs(30);
 /// How long a finished worker waits for done/abort/next-generation.
 const VERDICT_TIMEOUT: Duration = Duration::from_secs(600);
 
-fn generation_key(gang: &str) -> String {
+/// Key of the driver-owned generation fence (`"{gen} {failed|-}"`).
+/// Public so observers (`bench_driver top`) can follow a live gang.
+pub fn generation_key(gang: &str) -> String {
     format!("{gang}/generation")
 }
 
-fn heartbeat_key(gang: &str, rank: usize) -> String {
+/// Key a rank publishes its heartbeat under (`"{gen} {seq} {stamp}"`).
+pub fn heartbeat_key(gang: &str, rank: usize) -> String {
     format!("{gang}/heartbeat/{rank}")
 }
 
@@ -69,6 +82,20 @@ fn metrics_key(gang: &str, generation: u64, rank: usize) -> String {
 
 fn error_key(gang: &str, generation: u64, rank: usize) -> String {
     format!("{gang}/error/g{generation}/{rank}")
+}
+
+/// Key the telemetry sampler publishes its latest sample under (read by
+/// `bench_driver top`). Public so the tool and the elastic runtime agree
+/// on the shape.
+pub fn telemetry_key(gang: &str, generation: u64, rank: usize) -> String {
+    format!("{gang}/telemetry/g{generation}/{rank}")
+}
+
+/// Per-rank flight-recorder JSONL location under the gang's kv
+/// directory (a real subdirectory — [`FileKv`] escapes `/` in keys, so
+/// no key file can collide with it).
+pub fn flight_file(kv_dir: &Path, rank: usize) -> PathBuf {
+    kv_dir.join("flight").join(format!("rank{rank}.jsonl"))
 }
 
 fn done_key(gang: &str) -> String {
@@ -202,6 +229,18 @@ impl LeaseMonitor {
         let ttl = if slot.published { self.lease } else { self.grace };
         slot.since.elapsed() > ttl
     }
+
+    /// How long ago `rank`'s heartbeat last changed, plus the sequence
+    /// number of the last beat it published (`None` before the first
+    /// beat) — what the dead-rank log line reports.
+    fn last_seen(&self, rank: usize) -> (Duration, Option<u64>) {
+        let slot = &self.slots[rank];
+        let seq = slot
+            .value
+            .as_deref()
+            .and_then(|v| std::str::from_utf8(v).ok()?.split_whitespace().nth(1)?.parse().ok());
+        (slot.since.elapsed(), seq)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -240,7 +279,8 @@ fn wait_for_verdict(kv: &FileKv, gang: &str, generation: u64, timeout: Duration)
 }
 
 /// One epoch: bind a fenced communicator under the per-generation gang
-/// name, build the env, publish heartbeats, run the app. Returns the app's
+/// name, build the env, publish heartbeats (and, when telemetry is
+/// enabled, timestamped metrics samples), run the app. Returns the app's
 /// result line plus the epoch's [`crate::metrics::MetricsSnapshot`] JSON.
 #[allow(clippy::too_many_arguments)]
 fn run_epoch(
@@ -248,6 +288,7 @@ fn run_epoch(
     world: usize,
     gang: &str,
     kv: &Arc<FileKv>,
+    flight: &Path,
     app: &str,
     params: &AppParams,
     config: &Config,
@@ -279,6 +320,21 @@ fn run_epoch(
         env.comm().communicator(),
         config.elastic.heartbeat(),
     )?;
+    // Opt-in sampler: latest sample to the kv (live view), every sample
+    // appended to the flight recorder (post-mortem). `None` — and zero
+    // overhead — unless CYLONFLOW_TELEMETRY is on. Dropping it at scope
+    // exit (success or error) captures one final sample.
+    let _telemetry = TelemetryPublisher::maybe_start(
+        &config.telemetry,
+        generation,
+        env.telemetry_source(),
+        TelemetrySink::new()
+            .with_kv(
+                kv.clone() as Arc<dyn KvStore>,
+                telemetry_key(gang, generation, rank),
+            )
+            .with_flight(flight),
+    );
     let mut epoch_params = params.clone();
     epoch_params.insert("__generation".into(), generation.to_string());
     let msg = run_named_app(app, &epoch_params, &env)?;
@@ -315,7 +371,8 @@ pub fn run_elastic_worker(
         if kv.get(&done_key(gang)).is_some() {
             return Ok(());
         }
-        match run_epoch(rank, world, gang, &kv, app, params, &config, generation) {
+        let flight = flight_file(kv_dir, rank);
+        match run_epoch(rank, world, gang, &kv, &flight, app, params, &config, generation) {
             Ok((msg, metrics)) => {
                 // metrics first: a published result implies its metrics exist
                 kv.put(&metrics_key(gang, generation, rank), metrics.as_bytes())?;
@@ -369,6 +426,11 @@ pub struct ElasticOptions {
     /// `CYLONFLOW_STAGE_CKPT=1`, `CYLONFLOW_HEARTBEAT_MS=…`), so tests
     /// can configure children without mutating their own process env.
     pub child_env: Vec<(String, String)>,
+    /// Rendezvous kv directory override. `None` (the default) creates a
+    /// fresh temp directory and removes it when the run succeeds; a
+    /// caller-provided directory is left in place — what `bench_driver
+    /// top` and the telemetry tests use to observe a gang live.
+    pub kv_dir: Option<PathBuf>,
 }
 
 impl ElasticOptions {
@@ -381,6 +443,7 @@ impl ElasticOptions {
             timeout: Duration::from_secs(600),
             log_path: None,
             child_env: Vec::new(),
+            kv_dir: None,
         }
     }
 }
@@ -399,6 +462,9 @@ pub struct ElasticReport {
     pub generation: u64,
     /// The driver log (kept on disk after the run).
     pub log: PathBuf,
+    /// Flight-recorder JSONL files collected next to the driver log
+    /// (empty unless the workers ran with `CYLONFLOW_TELEMETRY`).
+    pub flights: Vec<PathBuf>,
 }
 
 struct DriverLog {
@@ -419,6 +485,23 @@ impl DriverLog {
         let _ = writeln!(self.file, "{msg}");
         let _ = self.file.flush();
     }
+}
+
+/// Copy every rank's flight-recorder JSONL (if any) next to the driver
+/// log (`<log>.rank{r}.flight.jsonl`), so the recordings survive the
+/// kv-directory cleanup and land where CI collects failure artifacts.
+fn collect_flights(kv_dir: &Path, world: usize, log_path: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for rank in 0..world {
+        let src = flight_file(kv_dir, rank);
+        if src.exists() {
+            let dest = log_path.with_extension(format!("rank{rank}.flight.jsonl"));
+            if std::fs::copy(&src, &dest).is_ok() {
+                out.push(dest);
+            }
+        }
+    }
+    out
 }
 
 fn reap(children: &mut [Child], patience: Duration) {
@@ -455,10 +538,9 @@ pub fn launch_elastic_gang(
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_nanos())
         .unwrap_or(0);
-    let kv_dir = std::env::temp_dir().join(format!(
-        "cylonflow-elastic-{}-{stamp}",
-        std::process::id()
-    ));
+    let kv_dir = opts.kv_dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("cylonflow-elastic-{}-{stamp}", std::process::id()))
+    });
     std::fs::create_dir_all(&kv_dir)?;
     let gang = "eg";
     let kv = FileKv::new(&kv_dir)?;
@@ -533,8 +615,18 @@ pub fn launch_elastic_gang(
             log.line(&format!(
                 "done at generation {generation} after {restarts} restart(s)"
             ));
-            let _ = std::fs::remove_dir_all(&kv_dir);
-            return Ok(ElasticReport { results, metrics_json, restarts, generation, log: log_path });
+            let flights = collect_flights(&kv_dir, world, &log_path);
+            if opts.kv_dir.is_none() {
+                let _ = std::fs::remove_dir_all(&kv_dir);
+            }
+            return Ok(ElasticReport {
+                results,
+                metrics_json,
+                restarts,
+                generation,
+                log: log_path,
+                flights,
+            });
         }
 
         // -- failure detection: error key, silent exit, or stale lease
@@ -561,8 +653,11 @@ pub fn launch_elastic_gang(
 
         if let Some((rank, why)) = failure {
             restarts += 1;
+            let (beat_age, last_seq) = lease.last_seen(rank);
+            let last_seq = last_seq.map_or_else(|| "-".to_string(), |s| s.to_string());
             log.line(&format!(
-                "generation {generation}: rank {rank} failed — {why} (restart {restarts}/{})",
+                "generation {generation}: rank {rank} failed — {why} \
+                 (heartbeat age {beat_age:?}, last seq {last_seq}, restart {restarts}/{})",
                 opts.max_restarts
             ));
             if restarts > opts.max_restarts {
@@ -571,7 +666,11 @@ pub fn launch_elastic_gang(
                     let _ = c.kill();
                 }
                 reap(&mut children, Duration::from_secs(10));
-                log.line("restart budget exhausted; gang aborted");
+                let flights = collect_flights(&kv_dir, world, &log_path);
+                log.line(&format!(
+                    "restart budget exhausted; gang aborted ({} flight recording(s) kept)",
+                    flights.len()
+                ));
                 return Err(Error::Executor(format!(
                     "elastic gang aborted after {restarts} failure(s): rank {rank} {why}"
                 )));
@@ -603,7 +702,11 @@ pub fn launch_elastic_gang(
                 let _ = c.kill();
             }
             reap(&mut children, Duration::from_secs(10));
-            log.line("driver timeout; gang aborted");
+            let flights = collect_flights(&kv_dir, world, &log_path);
+            log.line(&format!(
+                "driver timeout; gang aborted ({} flight recording(s) kept)",
+                flights.len()
+            ));
             return Err(Error::Executor(format!(
                 "elastic gang timed out after {:?} (generation {generation}, {restarts} restart(s))",
                 opts.timeout
@@ -686,6 +789,11 @@ mod tests {
         assert_eq!(result_key("eg", 1, 3), "eg/result/g1/3");
         assert_eq!(metrics_key("eg", 0, 0), "eg/metrics/g0/0");
         assert_eq!(error_key("eg", 2, 1), "eg/error/g2/1");
+        assert_eq!(telemetry_key("eg", 1, 2), "eg/telemetry/g1/2");
         assert_eq!(epoch_gang("eg", 5), "eg.g5");
+        assert_eq!(
+            flight_file(Path::new("/kv"), 3),
+            Path::new("/kv/flight/rank3.jsonl")
+        );
     }
 }

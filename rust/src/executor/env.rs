@@ -5,13 +5,11 @@
 
 use super::pool::MorselPool;
 use crate::comm::CommContext;
-use crate::metrics::{MetricsSnapshot, Phase, PhaseTimers, SkewStats};
+use crate::metrics::{MetricsSnapshot, Phase, PhaseTimers, SkewStats, StatsHub, TelemetrySource};
 use crate::ops::KeyHasher;
 use crate::store::CylonStore;
 use crate::trace::merge::GlobalTimeline;
 use crate::trace::{TraceCat, TraceSink};
-use std::cell::RefCell;
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Per-actor execution environment.
@@ -20,12 +18,12 @@ pub struct CylonEnv {
     store: CylonStore,
     hasher: Box<dyn KeyHasher>,
     pool: Arc<MorselPool>,
-    timers: RefCell<PhaseTimers>,
-    skew: RefCell<SkewStats>,
-    /// App-level named counters merged into [`CylonEnv::snapshot`]
-    /// alongside the built-in ones — the elastic runtime records
-    /// `restarts` / `stages_recovered` / `stage_ckpts_written` here.
-    counters: RefCell<BTreeMap<String, u64>>,
+    /// Thread-safe accumulator for everything the worker thread records
+    /// directly — phase timers, skew, app counters, seam histograms and
+    /// the current-stage label. Shared (`Arc`) with the telemetry
+    /// sampler thread; the communication-side families live in the
+    /// [`CommContext`]'s own hub.
+    stats: Arc<StatsHub>,
 }
 
 impl CylonEnv {
@@ -39,9 +37,7 @@ impl CylonEnv {
             store,
             hasher,
             pool: MorselPool::disabled(),
-            timers: RefCell::new(PhaseTimers::new()),
-            skew: RefCell::new(SkewStats::default()),
-            counters: RefCell::new(BTreeMap::new()),
+            stats: Arc::new(StatsHub::new()),
         }
     }
 
@@ -50,15 +46,49 @@ impl CylonEnv {
     /// attributes per-stage windows by diffing snapshots, so never
     /// decrement.
     pub fn bump_counter(&self, name: &str, delta: u64) {
-        *self.counters.borrow_mut().entry(name.to_string()).or_insert(0) += delta;
+        self.stats.bump_counter(name, delta);
     }
 
     /// Set the named counter to `value` if that is larger (monotonic
     /// "record the high-water mark" update, e.g. the current generation).
     pub fn set_counter_max(&self, name: &str, value: u64) {
-        let mut c = self.counters.borrow_mut();
-        let e = c.entry(name.to_string()).or_insert(0);
-        *e = (*e).max(value);
+        self.stats.set_counter_max(name, value);
+    }
+
+    /// Record one observation into the named seam histogram (e.g. the
+    /// plan executor's `stage_duration_ns`). Histograms are monotonic
+    /// like counters; stage attribution diffs them.
+    pub fn record_hist(&self, name: &str, value: u64) {
+        self.stats.record_hist(name, value);
+    }
+
+    /// Set the human-readable label of the work this actor is currently
+    /// executing (the plan executor sets the stage summary; telemetry
+    /// samples carry it so `bench_driver top` can show where each rank
+    /// is).
+    pub fn set_stage(&self, label: &str) {
+        self.stats.set_stage(label);
+    }
+
+    /// This actor's worker-side stats hub (shared with the telemetry
+    /// sampler; the communication families live in
+    /// [`CommContext::stats`]).
+    pub fn stats(&self) -> Arc<StatsHub> {
+        self.stats.clone()
+    }
+
+    /// Bundle everything the telemetry sampler needs to snapshot this
+    /// actor from another thread: both stats hubs, the transport, the
+    /// trace sink and the morsel pool. [`CylonEnv::snapshot`] and the
+    /// sampler read through the same source, so they always agree.
+    pub fn telemetry_source(&self) -> TelemetrySource {
+        TelemetrySource::new(
+            self.stats.clone(),
+            self.comm.stats(),
+            self.comm.communicator(),
+            self.comm.trace().clone(),
+            self.pool.clone(),
+        )
     }
 
     /// Replace the intra-rank worker pool (builder style; the executor
@@ -109,38 +139,21 @@ impl CylonEnv {
     /// Time `f` under `phase` (compute/auxiliary; communication is timed
     /// inside [`CommContext`]).
     pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
-        self.timers.borrow_mut().time(phase, f)
+        self.stats.time(phase, f)
     }
 
     /// Non-destructive unified snapshot of every metrics family this
     /// actor accumulates — phase timers (local plus communication),
-    /// spill, skew, overlap, and the named-counter registry
-    /// (`bytes_sent` from the transport, `trace_events_recorded` /
-    /// `trace_events_dropped` from the trace sink). Monotonic: the plan
-    /// executor attributes windows to stages by diffing successive
-    /// snapshots with [`MetricsSnapshot::saturating_diff`].
+    /// spill, skew, overlap, seam histograms and the named-counter
+    /// registry (`bytes_sent` from the transport,
+    /// `trace_events_recorded` / `trace_events_dropped` from the trace
+    /// sink). Monotonic: the plan executor attributes windows to stages
+    /// by diffing successive snapshots with
+    /// [`MetricsSnapshot::saturating_diff`]. Reads through
+    /// [`CylonEnv::telemetry_source`], so the sampler thread and the
+    /// worker always see the same unified view.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut timers = self.timers.borrow().clone();
-        timers.merge(&self.comm.peek_timers());
-        let sink = self.comm.trace();
-        MetricsSnapshot {
-            timers,
-            spill: self.comm.peek_spill_stats(),
-            skew: *self.skew.borrow(),
-            overlap: self.comm.peek_overlap_stats(),
-            local: self.pool.stats(),
-            counters: {
-                let mut counters = vec![
-                    ("bytes_sent".to_string(), self.comm.bytes_sent()),
-                    ("trace_events_dropped".to_string(), sink.overflow_count()),
-                    ("trace_events_recorded".to_string(), sink.recorded_count()),
-                ];
-                for (k, v) in self.counters.borrow().iter() {
-                    counters.push((k.clone(), *v));
-                }
-                counters
-            },
-        }
+        self.telemetry_source().snapshot()
     }
 
     /// Gather every rank's trace buffer into one clock-aligned, merged
@@ -158,27 +171,6 @@ impl CylonEnv {
         crate::trace::merge::snapshot_global(&self.comm).map(Some)
     }
 
-    /// Non-destructive snapshot of this actor's accumulated phase timers
-    /// (local phases plus communication).
-    #[deprecated(since = "0.6.0", note = "use `snapshot().timers` instead")]
-    pub fn metrics_snapshot(&self) -> PhaseTimers {
-        self.snapshot().timers
-    }
-
-    /// Non-destructive snapshot of this actor's accumulated spill
-    /// counters.
-    #[deprecated(since = "0.6.0", note = "use `snapshot().spill` instead")]
-    pub fn spill_snapshot(&self) -> crate::metrics::SpillStats {
-        self.snapshot().spill
-    }
-
-    /// Non-destructive snapshot of this actor's accumulated
-    /// communication/computation overlap counters.
-    #[deprecated(since = "0.6.0", note = "use `snapshot().overlap` instead")]
-    pub fn overlap_snapshot(&self) -> crate::metrics::OverlapStats {
-        self.snapshot().overlap
-    }
-
     /// Fold a skew-aware exchange's counters into this actor's running
     /// [`SkewStats`] (called by the [`crate::dist::skew`] operators).
     /// Counters accumulate; the balance ratios keep the latest
@@ -193,24 +185,14 @@ impl CylonEnv {
                 stats.hot_keys,
                 stats.rows_rerouted,
             );
-            self.skew.borrow_mut().observe(stats);
+            self.stats.observe_skew(stats);
         }
-    }
-
-    /// Non-destructive snapshot of this actor's accumulated skew
-    /// counters.
-    #[deprecated(since = "0.6.0", note = "use `snapshot().skew` instead")]
-    pub fn skew_snapshot(&self) -> SkewStats {
-        self.snapshot().skew
     }
 
     /// Snapshot and reset this actor's metrics, folding in the
     /// communication timers.
     pub fn take_metrics(&self) -> PhaseTimers {
-        let mut t = self.timers.borrow_mut();
-        let mut snap = t.clone();
-        t.reset();
-        drop(t);
+        let mut snap = self.stats.take_timers();
         snap.merge(&self.comm.take_timers());
         snap
     }

@@ -17,10 +17,10 @@
 //! algorithms bit for bit and records no `local_*` stats.
 
 use crate::config::ParallelConfig;
-use crate::metrics::LocalStats;
+use crate::metrics::{HistSet, LocalStats};
 use crate::trace::{TraceCat, TraceSink};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Per-env worker pool scheduling cache-sized morsels across cores.
@@ -33,6 +33,11 @@ pub struct MorselPool {
     morsels: AtomicU64,
     busy_nanos: AtomicU64,
     idle_nanos: AtomicU64,
+    /// Per-worker busy-time distribution (`morsel_busy_ns`): one sample
+    /// per worker per parallel [`MorselPool::run`], so skewed morsel
+    /// batches show up as a wide histogram even when the summed
+    /// `local_*` counters look balanced.
+    hists: Mutex<HistSet>,
 }
 
 impl std::fmt::Debug for MorselPool {
@@ -55,6 +60,7 @@ impl MorselPool {
             morsels: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
             idle_nanos: AtomicU64::new(0),
+            hists: Mutex::new(HistSet::new()),
         })
     }
 
@@ -179,6 +185,12 @@ impl MorselPool {
         });
         let wall_nanos = wall.elapsed().as_nanos() as u64;
         let busy: u64 = per_worker.iter().map(|(_, b)| *b).sum();
+        {
+            let mut hists = self.hists.lock().expect("morsel pool hists poisoned");
+            for (_, b) in &per_worker {
+                hists.record("morsel_busy_ns", *b);
+            }
+        }
         self.morsels.fetch_add(count as u64, Ordering::Relaxed);
         self.busy_nanos.fetch_add(busy, Ordering::Relaxed);
         self.idle_nanos
@@ -203,6 +215,14 @@ impl MorselPool {
             busy_nanos: self.busy_nanos.load(Ordering::Relaxed),
             idle_nanos: self.idle_nanos.load(Ordering::Relaxed),
         }
+    }
+
+    /// Snapshot of the pool's histograms (`morsel_busy_ns` per-worker
+    /// busy times; empty while serial). Monotonic like the counters —
+    /// never reset, merged into [`crate::metrics::MetricsSnapshot`] by
+    /// the telemetry source.
+    pub fn hists(&self) -> HistSet {
+        self.hists.lock().expect("morsel pool hists poisoned").clone()
     }
 }
 
@@ -264,6 +284,21 @@ mod tests {
         let a = p.run(100, |i| i * i);
         let b = p.run(100, |i| i * i);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_run_records_worker_busy_histogram() {
+        let p = MorselPool::new(4, 1, TraceSink::disabled());
+        assert!(p.hists().is_empty(), "no samples before any run");
+        p.run(16, |i| i);
+        let h = p.hists();
+        let busy = h.get("morsel_busy_ns").expect("busy hist after a parallel run");
+        assert_eq!(busy.count(), 4, "one sample per worker");
+        assert_eq!(busy.sum(), p.stats().busy_nanos, "histogram sum matches the counter");
+        // serial pools never touch the histogram
+        let serial = MorselPool::disabled();
+        serial.run(16, |i| i);
+        assert!(serial.hists().is_empty());
     }
 
     #[test]

@@ -59,8 +59,14 @@
 //!   exchange stages via [`plan::StageRecovery`]
 //!   (`CYLONFLOW_STAGE_CKPT`).
 //! - [`runtime`] — PJRT bridge: loads `artifacts/*.hlo.txt` kernels.
-//! - [`metrics`] — phase timers for the comm/compute breakdown experiments,
-//!   unified per-actor [`metrics::MetricsSnapshot`].
+//! - [`metrics`] — phase timers for the comm/compute breakdown
+//!   experiments, unified per-actor [`metrics::MetricsSnapshot`] with
+//!   log2-bucketed seam histograms ([`metrics::Histogram`]), an opt-in
+//!   (`CYLONFLOW_TELEMETRY`) live-telemetry sampler publishing
+//!   timestamped per-rank samples through the gang's kv store with a
+//!   SIGKILL-surviving flight-recorder JSONL, and cross-rank
+//!   aggregation ([`metrics::cluster_summary`]: text table +
+//!   Prometheus exposition, consumed by `bench_driver top`).
 //! - [`trace`] — opt-in (`CYLONFLOW_TRACE`) per-rank event tracing:
 //!   bounded ring of spans/instants through the hot layers, cross-rank
 //!   clock-aligned merge, Chrome-trace JSON export.

@@ -1,0 +1,406 @@
+//! Log2-bucketed histograms — the latency/size distribution layer of the
+//! observability plane (DESIGN.md §14).
+//!
+//! Counters tell you *how much*; histograms tell you *how it was
+//! distributed*. A [`Histogram`] buckets `u64` observations (nanoseconds,
+//! bytes) by bit length, so the whole distribution is 65 integers —
+//! cheap enough to record on hot paths, merge across ranks, diff across
+//! stage boundaries, and ship through the same monotonic
+//! snapshot-and-diff discipline every other metrics family uses
+//! ([`crate::metrics::MetricsSnapshot::saturating_diff`]). Quantile
+//! readouts ([`Histogram::quantile`], p50/p95/p99) resolve to the upper
+//! bound of the containing bucket, i.e. they are exact to within the 2×
+//! bucket width — the right fidelity for "is p99 a millisecond or a
+//! second", which is what the adaptive optimizer and the `bench_driver
+//! top` view consume.
+//!
+//! [`HistSet`] is the named registry: a `BTreeMap` keyed by stable seam
+//! names (`stage_duration_ns`, `collective_ns`, `spill_write_bytes`, …)
+//! with set-wise merge/diff, carried inside
+//! [`crate::metrics::StageTiming`] and [`crate::metrics::MetricsSnapshot`].
+
+use std::collections::BTreeMap;
+
+/// Bucket count: index 0 holds the value 0, index `i ∈ 1..=64` holds
+/// values of bit length `i` (range `[2^(i-1), 2^i)`).
+pub const HIST_BUCKETS: usize = 65;
+
+/// A log2-bucketed distribution of `u64` observations. Monotonic like
+/// every other metrics family: it only ever accumulates, and stage/window
+/// attribution happens by [`Histogram::saturating_diff`] between two
+/// snapshots of the same histogram.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("p50", &self.p50())
+            .field("p99", &self.p99())
+            .finish()
+    }
+}
+
+impl Histogram {
+    /// Fresh, empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// The bucket index a value lands in (0 for 0, else its bit length).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` — what quantile readouts
+    /// resolve to.
+    pub fn bucket_ceiling(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            64.. => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` observations of the same value (bulk path for replays).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[Histogram::bucket_of(v)] += n;
+        self.count += n;
+        self.sum = self.sum.saturating_add(v.saturating_mul(n));
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Mean recorded value (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_zero(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Occupancy of bucket `i` (0 when out of range).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets.get(i).copied().unwrap_or(0)
+    }
+
+    /// Non-empty `(bucket index, occupancy)` pairs, ascending — the
+    /// sparse form the JSON emit ships.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| **n > 0)
+            .map(|(i, n)| (i, *n))
+            .collect()
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile observation
+    /// (`q` clamped to `[0, 1]`; 0 when empty). Exact to within the 2×
+    /// log2 bucket width.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the target observation, 1-based, ceil so q=1.0 is the max
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Histogram::bucket_ceiling(i);
+            }
+        }
+        Histogram::bucket_ceiling(HIST_BUCKETS - 1)
+    }
+
+    /// Median bucket ceiling.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile bucket ceiling.
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile bucket ceiling.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Sum another histogram into this one (cross-rank / cross-source
+    /// aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Bucket-wise `self − earlier`, clamped at zero — attributes a
+    /// monotonically accumulating histogram to one stage/window, exactly
+    /// like [`crate::metrics::SpillStats::saturating_diff`].
+    pub fn saturating_diff(&self, earlier: &Histogram) -> Histogram {
+        let mut out = Histogram::default();
+        for (i, (s, e)) in self.buckets.iter().zip(earlier.buckets.iter()).enumerate() {
+            out.buckets[i] = s.saturating_sub(*e);
+        }
+        out.count = self.count.saturating_sub(earlier.count);
+        out.sum = self.sum.saturating_sub(earlier.sum);
+        out
+    }
+
+    /// Rebuild a histogram from its serialized parts (sparse
+    /// `(bucket index, occupancy)` pairs). `count` and `sum` are carried
+    /// explicitly because `sum` is not derivable from log2 buckets.
+    ///
+    /// Errors on out-of-range bucket indices (never panics on wire data).
+    pub fn from_parts(count: u64, sum: u64, buckets: &[(usize, u64)]) -> Result<Histogram, String> {
+        let mut h = Histogram::default();
+        for (i, n) in buckets {
+            if *i >= HIST_BUCKETS {
+                return Err(format!("histogram bucket index {i} out of range"));
+            }
+            h.buckets[*i] += n;
+        }
+        h.count = count;
+        h.sum = sum;
+        Ok(h)
+    }
+
+    /// Compact one-line rendering for tables: `n=… mean=… p50=… p99=…`.
+    pub fn brief(&self) -> String {
+        format!("n={} mean={} p50={} p99={}", self.count, self.mean(), self.p50(), self.p99())
+    }
+}
+
+/// Named histogram registry: the seam-name → [`Histogram`] map carried by
+/// [`crate::metrics::MetricsSnapshot`] (and, as a per-stage delta, by
+/// [`crate::metrics::StageTiming`]). `BTreeMap` so iteration — and
+/// therefore the JSON emit — is deterministic.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct HistSet {
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl HistSet {
+    /// Fresh, empty set.
+    pub fn new() -> HistSet {
+        HistSet::default()
+    }
+
+    /// Record one observation under `name` (creating the histogram on
+    /// first use).
+    pub fn record(&mut self, name: &str, v: u64) {
+        match self.hists.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = Histogram::new();
+                h.record(v);
+                self.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Insert/replace a whole histogram (test and aggregation helper).
+    pub fn insert(&mut self, name: &str, h: Histogram) {
+        self.hists.insert(name.to_string(), h);
+    }
+
+    /// The histogram under `name`, if any observation was recorded.
+    pub fn get(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// True when no histogram holds any observation.
+    pub fn is_empty(&self) -> bool {
+        self.hists.values().all(|h| h.is_zero())
+    }
+
+    /// Iterate `(name, histogram)` in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(n, h)| (n.as_str(), h))
+    }
+
+    /// Number of named histograms.
+    pub fn len(&self) -> usize {
+        self.hists.len()
+    }
+
+    /// Merge another set into this one: histograms sharing a name merge
+    /// bucket-wise, new names are inserted.
+    pub fn merge(&mut self, other: &HistSet) {
+        for (name, h) in &other.hists {
+            match self.hists.get_mut(name) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(name.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Per-name `self − earlier` (a name absent from `earlier` diffs
+    /// against empty); names whose delta is empty are dropped, so a stage
+    /// that recorded nothing under a seam carries no entry for it.
+    pub fn saturating_diff(&self, earlier: &HistSet) -> HistSet {
+        let mut out = HistSet::new();
+        for (name, h) in &self.hists {
+            let d = match earlier.hists.get(name) {
+                Some(e) => h.saturating_diff(e),
+                None => h.clone(),
+            };
+            if !d.is_zero() {
+                out.hists.insert(name.clone(), d);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_is_log2_with_zero_bucket() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(1023), 10);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+        assert_eq!(Histogram::bucket_ceiling(0), 0);
+        assert_eq!(Histogram::bucket_ceiling(1), 1);
+        assert_eq!(Histogram::bucket_ceiling(10), 1023);
+        assert_eq!(Histogram::bucket_ceiling(64), u64::MAX);
+    }
+
+    #[test]
+    fn record_count_sum_mean() {
+        let mut h = Histogram::new();
+        assert!(h.is_zero());
+        assert_eq!(h.quantile(0.5), 0);
+        h.record(0);
+        h.record(100);
+        h.record_n(50, 2);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 200);
+        assert_eq!(h.mean(), 50);
+        assert_eq!(h.bucket(0), 1);
+        assert_eq!(h.nonzero_buckets().len(), 3); // 0, 50 (bucket 6), 100 (bucket 7)
+    }
+
+    #[test]
+    fn quantiles_resolve_to_bucket_ceilings() {
+        let mut h = Histogram::new();
+        for v in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.record(v);
+        }
+        // 9 of 10 observations in bucket 1 (ceiling 1)
+        assert_eq!(h.p50(), 1);
+        // the 10th (q=1.0-side) lands in bucket 10 (ceiling 1023)
+        assert_eq!(h.quantile(1.0), 1023);
+        assert_eq!(h.p99(), 1023, "p99 of 10 obs is the max");
+        assert_eq!(h.quantile(0.90), 1, "rank ceil(9.0)=9 is still the small bucket");
+    }
+
+    #[test]
+    fn merge_sums_and_diff_clamps() {
+        let mut a = Histogram::new();
+        a.record(10);
+        a.record(2000);
+        let mut b = Histogram::new();
+        b.record(10);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum(), 2020);
+        assert_eq!(m.bucket(Histogram::bucket_of(10)), 2);
+        let d = m.saturating_diff(&a);
+        assert_eq!(d, b, "diff recovers exactly what was merged in");
+        assert!(a.saturating_diff(&m).is_zero(), "clamped, never negative");
+    }
+
+    #[test]
+    fn saturating_sum_never_overflows() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX);
+        assert_eq!(h.sum(), u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn hist_set_records_merges_and_diffs_by_name() {
+        let mut a = HistSet::new();
+        a.record("lat_ns", 100);
+        a.record("lat_ns", 200);
+        a.record("bytes", 4096);
+        let cut = a.clone(); // window boundary
+        a.record("lat_ns", 400);
+        a.record("new_seam", 7);
+        let d = a.saturating_diff(&cut);
+        assert_eq!(d.get("lat_ns").unwrap().count(), 1);
+        assert_eq!(d.get("new_seam").unwrap().count(), 1, "absent earlier diffs vs empty");
+        assert!(d.get("bytes").is_none(), "empty deltas are dropped");
+        let mut m = cut.clone();
+        m.merge(&d);
+        assert_eq!(m, a, "diff then merge reconstructs the later snapshot");
+    }
+
+    #[test]
+    fn empty_set_behaviors() {
+        let s = HistSet::new();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert!(s.saturating_diff(&s).is_empty());
+        let mut t = HistSet::new();
+        t.merge(&s);
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,228 @@
+//! Minimal JSON object scanner for the metrics surface — just enough to
+//! parse back what [`crate::metrics::MetricsSnapshot::to_json`] and the
+//! telemetry samples emit: objects whose values are unsigned integers,
+//! strings, or nested objects of the same shape. No arrays, floats,
+//! booleans, nulls, or escape sequences beyond `\"` and `\\` — the emit
+//! side never produces them (deliberately small, like
+//! [`crate::bench_util::parse_bench_records`], not a general parser).
+
+/// A parsed JSON value of the restricted metrics grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum JsonVal {
+    /// An unsigned integer.
+    Num(u64),
+    /// A string.
+    Str(String),
+    /// An object, fields in source order.
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    /// Field lookup on an object (None on non-objects / missing keys).
+    pub(crate) fn field(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric field lookup, defaulting to 0 when absent (the metrics
+    /// emit omits nothing, but forward-compatible parses shouldn't break
+    /// on a field a newer writer dropped).
+    pub(crate) fn num(&self, key: &str) -> Result<u64, String> {
+        match self.field(key) {
+            None => Ok(0),
+            Some(JsonVal::Num(n)) => Ok(*n),
+            Some(other) => Err(format!("field {key:?} is not a number: {other:?}")),
+        }
+    }
+
+    /// String field lookup, defaulting to "" when absent.
+    pub(crate) fn str_field(&self, key: &str) -> Result<String, String> {
+        match self.field(key) {
+            None => Ok(String::new()),
+            Some(JsonVal::Str(s)) => Ok(s.clone()),
+            Some(other) => Err(format!("field {key:?} is not a string: {other:?}")),
+        }
+    }
+
+    /// The object's fields in source order (empty for non-objects).
+    pub(crate) fn fields(&self) -> &[(String, JsonVal)] {
+        match self {
+            JsonVal::Obj(fields) => fields,
+            _ => &[],
+        }
+    }
+}
+
+/// Parse a complete JSON object (rejecting trailing garbage).
+pub(crate) fn parse_object(text: &str) -> Result<JsonVal, String> {
+    let mut c = Cursor { bytes: text.as_bytes(), pos: 0 };
+    c.skip_ws();
+    let v = c.parse_value()?;
+    c.skip_ws();
+    if c.pos != c.bytes.len() {
+        return Err(format!("trailing data at byte {}", c.pos));
+    }
+    match v {
+        JsonVal::Obj(_) => Ok(v),
+        other => Err(format!("top level is not an object: {other:?}")),
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn parse_value(&mut self) -> Result<JsonVal, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.parse_obj(),
+            Some(b'"') => Ok(JsonVal::Str(self.parse_string()?)),
+            Some(b'0'..=b'9') => self.parse_num(),
+            Some(other) => Err(format!("unexpected {:?} at byte {}", other as char, self.pos)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn parse_obj(&mut self) -> Result<JsonVal, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonVal::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.parse_value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn parse_string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        other => {
+                            return Err(format!(
+                                "unsupported escape {other:?} at byte {}",
+                                self.pos
+                            ))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // advance over one UTF-8 scalar (input came from &str,
+                    // so boundaries are valid)
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && self.bytes[self.pos] & 0xC0 == 0x80 {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn parse_num(&mut self) -> Result<JsonVal, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<u64>()
+            .map(JsonVal::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_objects_numbers_and_strings() {
+        let v = parse_object(
+            r#"{"a": 7, "b": {"c": 0, "d": {"x": 18446744073709551615}}, "s": "join(replayed)"}"#,
+        )
+        .unwrap();
+        assert_eq!(v.num("a").unwrap(), 7);
+        assert_eq!(v.field("b").unwrap().field("d").unwrap().num("x").unwrap(), u64::MAX);
+        assert_eq!(v.str_field("s").unwrap(), "join(replayed)");
+        assert_eq!(v.num("missing").unwrap(), 0, "absent numeric fields default to 0");
+        assert_eq!(v.fields().len(), 3);
+    }
+
+    #[test]
+    fn preserves_field_order_and_handles_empty() {
+        let v = parse_object(r#"{"z": 1, "a": 2, "empty": {}}"#).unwrap();
+        let names: Vec<&str> = v.fields().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["z", "a", "empty"]);
+        assert!(v.field("empty").unwrap().fields().is_empty());
+    }
+
+    #[test]
+    fn escapes_and_whitespace() {
+        let v = parse_object("{ \"k\" : \"a\\\"b\\\\c\" }").unwrap();
+        assert_eq!(v.str_field("k").unwrap(), "a\"b\\c");
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse_object("").is_err());
+        assert!(parse_object("{").is_err());
+        assert!(parse_object(r#"{"a": }"#).is_err());
+        assert!(parse_object(r#"{"a": 1} extra"#).is_err());
+        assert!(parse_object(r#"{"a": -1}"#).is_err(), "negatives never emitted");
+        assert!(parse_object(r#"{"a": [1]}"#).is_err(), "arrays never emitted");
+        assert!(parse_object(r#"{"a": "\n"}"#).is_err(), "unsupported escape");
+        assert!(parse_object("7").is_err(), "top level must be an object");
+    }
+}

@@ -1,11 +1,32 @@
 //! Phase metrics — what Fig 6 (communication vs computation breakdown) is
-//! made of.
+//! made of — plus the observability plane built on top of it
+//! (DESIGN.md §14).
 //!
 //! Each worker tracks wall time per [`Phase`]; the driver aggregates
-//! per-rank reports into a [`Breakdown`].
+//! per-rank reports into a [`Breakdown`]. Every counter family
+//! accumulates monotonically and is attributed to stages/windows by
+//! diffing snapshots (`saturating_diff`). The [`hist`] module adds
+//! log2-bucketed latency/size distributions recorded at the hot seams;
+//! [`StatsHub`] is the thread-safe accumulator the worker, the comm
+//! layer and the telemetry sampler all share; [`MetricsSnapshot`] is the
+//! unified point-in-time view (JSON round-trippable via
+//! [`MetricsSnapshot::to_json`] / [`MetricsSnapshot::from_json`]);
+//! [`TelemetryPublisher`] samples it live from a per-rank thread; and
+//! [`cluster_summary`] merges rank snapshots into the gang-wide view the
+//! `bench_driver top` monitor and the Prometheus exposition render.
+
+mod hist;
+mod json;
+mod telemetry;
+
+pub use hist::{HistSet, Histogram, HIST_BUCKETS};
+pub use telemetry::{
+    TelemetryPublisher, TelemetrySample, TelemetrySink, TelemetrySource, TELEMETRY_RING_CAP,
+};
 
 use crate::util::Stopwatch;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// The phases distributed operators are decomposed into (paper §III-B:
@@ -36,6 +57,19 @@ impl Phase {
 pub struct PhaseTimers {
     timers: BTreeMap<Phase, Duration>,
 }
+
+// Semantic equality: an explicitly-recorded zero duration and an absent
+// entry are the same timer state (so `from_json(to_json(t)) == t` holds
+// even when a coarse clock produced a zero-length measurement).
+impl PartialEq for PhaseTimers {
+    fn eq(&self, other: &Self) -> bool {
+        [Phase::Compute, Phase::Auxiliary, Phase::Communication]
+            .iter()
+            .all(|p| self.get(*p) == other.get(*p))
+    }
+}
+
+impl Eq for PhaseTimers {}
 
 impl PhaseTimers {
     /// Fresh, all-zero timers.
@@ -319,6 +353,10 @@ pub struct StageTiming {
     /// Morsel-pool work this stage's local operators ran across cores
     /// (zero when intra-rank parallelism is disabled, the default).
     pub local: LocalStats,
+    /// Latency/size distributions the stage's hot seams recorded
+    /// (per-name delta of the actor's monotonic [`HistSet`]; empty seams
+    /// are dropped, see [`HistSet::saturating_diff`]).
+    pub hists: HistSet,
 }
 
 /// One worker's unified metrics view at a point in time: every
@@ -328,7 +366,7 @@ pub struct StageTiming {
 /// [`crate::executor::CylonEnv::snapshot`] returns — the single
 /// replacement for the former per-family accessors — and what the plan
 /// executor diffs across stage boundaries.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct MetricsSnapshot {
     /// Compute / auxiliary / communication wall time.
     pub timers: PhaseTimers,
@@ -344,6 +382,10 @@ pub struct MetricsSnapshot {
     /// (`bytes_sent`, `trace_events_recorded`, …), sorted by name so the
     /// JSON emit is deterministic.
     pub counters: Vec<(String, u64)>,
+    /// Latency/size distributions recorded at the hot seams
+    /// (`stage_duration_ns`, `collective_ns`, `spill_write_bytes`, … —
+    /// see DESIGN.md §14 for the seam inventory).
+    pub hists: HistSet,
 }
 
 impl MetricsSnapshot {
@@ -372,7 +414,29 @@ impl MetricsSnapshot {
                 .iter()
                 .map(|(n, v)| (n.clone(), v.saturating_sub(earlier.counter(n))))
                 .collect(),
+            hists: self.hists.saturating_diff(&earlier.hists),
         }
+    }
+
+    /// Fold another snapshot into this one for *aggregation* (across
+    /// ranks): timers, spill, overlap, local and named counters sum;
+    /// histograms merge bucket-wise; skew follows [`SkewStats::merge`]
+    /// (counters sum, ratios keep the worst observation). This is the
+    /// pairwise step [`cluster_summary`] folds a gang with.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.timers.merge(&other.timers);
+        self.spill.merge(&other.spill);
+        self.skew.merge(&other.skew);
+        self.overlap.merge(&other.overlap);
+        self.local.merge(&other.local);
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        self.counters.sort();
+        self.hists.merge(&other.hists);
     }
 
     /// Machine-readable JSON object, hand-rolled in the same stable
@@ -386,13 +450,37 @@ impl MetricsSnapshot {
     ///  "ratio_before_milli": 0, "ratio_after_milli": 0,
     ///  "chunks_overlapped": 0, "hidden_ns": 0, "wire_wait_ns": 0,
     ///  "local_morsels": 0, "local_busy_ns": 0, "local_idle_ns": 0,
-    ///  "counters": {"bytes_sent": 0}}
+    ///  "counters": {"bytes_sent": 0},
+    ///  "hists": {"collective_ns": {"count": 2, "sum": 900, "buckets": {"9": 2}}}}
     /// ```
+    ///
+    /// Histograms ship sparse (`buckets` maps log2 bucket index →
+    /// occupancy; empty buckets are omitted). [`MetricsSnapshot::from_json`]
+    /// reads this exact surface back, so the whole metrics plane is
+    /// round-trippable: `from_json(to_json(s)) == s`.
     pub fn to_json(&self) -> String {
         let counters = self
             .counters
             .iter()
             .map(|(n, v)| format!("\"{n}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let hists = self
+            .hists
+            .iter()
+            .map(|(name, h)| {
+                let buckets = h
+                    .nonzero_buckets()
+                    .iter()
+                    .map(|(i, n)| format!("\"{i}\": {n}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    "\"{name}\": {{\"count\": {}, \"sum\": {}, \"buckets\": {{{buckets}}}}}",
+                    h.count(),
+                    h.sum()
+                )
+            })
             .collect::<Vec<_>>()
             .join(", ");
         format!(
@@ -403,7 +491,7 @@ impl MetricsSnapshot {
                 "\"ratio_before_milli\": {}, \"ratio_after_milli\": {}, ",
                 "\"chunks_overlapped\": {}, \"hidden_ns\": {}, \"wire_wait_ns\": {}, ",
                 "\"local_morsels\": {}, \"local_busy_ns\": {}, \"local_idle_ns\": {}, ",
-                "\"counters\": {{{}}}}}"
+                "\"counters\": {{{}}}, \"hists\": {{{}}}}}"
             ),
             self.timers.get(Phase::Compute).as_nanos(),
             self.timers.get(Phase::Auxiliary).as_nanos(),
@@ -421,7 +509,94 @@ impl MetricsSnapshot {
             self.local.busy_nanos,
             self.local.idle_nanos,
             counters,
+            hists,
         )
+    }
+
+    /// Parse a snapshot back from [`MetricsSnapshot::to_json`]'s output
+    /// (the inverse: `from_json(to_json(s)) == s`, property-tested in
+    /// `tests/telemetry.rs`). Missing numeric fields read as 0 and
+    /// unknown keys are ignored, so older/newer emitters interoperate;
+    /// structurally malformed input is an error, never a panic.
+    ///
+    /// # Errors
+    /// [`crate::error::Error::InvalidArgument`] naming the parse failure
+    /// (truncated object, non-numeric field, out-of-range bucket index).
+    pub fn from_json(text: &str) -> crate::error::Result<MetricsSnapshot> {
+        let obj = json::parse_object(text)
+            .map_err(|e| crate::error::Error::invalid(format!("metrics json: {e}")))?;
+        MetricsSnapshot::from_parsed(&obj)
+            .map_err(|e| crate::error::Error::invalid(format!("metrics json: {e}")))
+    }
+
+    /// Build from an already-parsed object (shared with the telemetry
+    /// sample parser, which embeds snapshots as nested objects).
+    pub(crate) fn from_parsed(obj: &json::JsonVal) -> Result<MetricsSnapshot, String> {
+        let mut timers = PhaseTimers::new();
+        for (phase, key) in [
+            (Phase::Compute, "compute_ns"),
+            (Phase::Auxiliary, "auxiliary_ns"),
+            (Phase::Communication, "communication_ns"),
+        ] {
+            let ns = obj.num(key)?;
+            if ns > 0 {
+                timers.add(phase, Duration::from_nanos(ns));
+            }
+        }
+        let mut counters = Vec::new();
+        if let Some(c) = obj.field("counters") {
+            for (name, v) in c.fields() {
+                match v {
+                    json::JsonVal::Num(n) => counters.push((name.clone(), *n)),
+                    other => return Err(format!("counter {name:?} is not a number: {other:?}")),
+                }
+            }
+        }
+        let mut hists = HistSet::new();
+        if let Some(hs) = obj.field("hists") {
+            for (name, h) in hs.fields() {
+                let mut pairs = Vec::new();
+                if let Some(buckets) = h.field("buckets") {
+                    for (idx, n) in buckets.fields() {
+                        let i: usize = idx
+                            .parse()
+                            .map_err(|_| format!("bad bucket index {idx:?} in {name:?}"))?;
+                        match n {
+                            json::JsonVal::Num(n) => pairs.push((i, *n)),
+                            other => {
+                                return Err(format!("bucket {idx:?} is not a number: {other:?}"))
+                            }
+                        }
+                    }
+                }
+                hists.insert(name, Histogram::from_parts(h.num("count")?, h.num("sum")?, &pairs)?);
+            }
+        }
+        Ok(MetricsSnapshot {
+            timers,
+            spill: SpillStats {
+                spilled_bytes: obj.num("spilled_bytes")?,
+                spill_count: obj.num("spill_count")?,
+            },
+            skew: SkewStats {
+                hot_keys: obj.num("hot_keys")?,
+                rows_rerouted: obj.num("rows_rerouted")?,
+                ratio_before_milli: obj.num("ratio_before_milli")?,
+                ratio_after_milli: obj.num("ratio_after_milli")?,
+            },
+            overlap: OverlapStats {
+                chunks_overlapped: obj.num("chunks_overlapped")?,
+                hidden_nanos: obj.num("hidden_ns")?,
+                wire_wait_nanos: obj.num("wire_wait_ns")?,
+            },
+            local: LocalStats {
+                morsels: obj.num("local_morsels")?,
+                busy_nanos: obj.num("local_busy_ns")?,
+                idle_nanos: obj.num("local_idle_ns")?,
+            },
+            counters,
+            hists,
+        })
     }
 
     /// One-line human summary (what the examples print at exit).
@@ -495,6 +670,282 @@ impl Breakdown {
             self.mean(Phase::Communication).as_secs_f64() * 1e3,
             self.comm_fraction() * 100.0
         )
+    }
+}
+
+/// Thread-safe accumulator of every metrics family one actor keeps.
+///
+/// Two hubs exist per worker — one owned by [`crate::executor::CylonEnv`]
+/// (worker-side timers, skew observations, the named-counter registry,
+/// the current-stage label and the stage-duration histograms) and one
+/// owned by [`crate::comm::CommContext`] (communication timers,
+/// spill/overlap counters, wire-seam histograms) — both `Arc`-shared so
+/// the [`TelemetryPublisher`] sampler thread can read a consistent
+/// [`MetricsSnapshot`] while the worker thread is deep inside an
+/// operator. Every family keeps the established monotonic
+/// accumulate-then-diff discipline; the hub only moves the storage
+/// behind mutexes (uncontended in the common case — the sampler touches
+/// them a few times per second).
+#[derive(Debug, Default)]
+pub struct StatsHub {
+    timers: Mutex<PhaseTimers>,
+    spill: Mutex<SpillStats>,
+    skew: Mutex<SkewStats>,
+    overlap: Mutex<OverlapStats>,
+    hists: Mutex<HistSet>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    stage: Mutex<String>,
+}
+
+impl StatsHub {
+    /// Fresh, all-zero hub.
+    pub fn new() -> StatsHub {
+        StatsHub::default()
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<T>(&self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let mut sw = Stopwatch::new();
+        let out = sw.time(f);
+        self.add_phase(phase, sw.elapsed());
+        out
+    }
+
+    /// Add a pre-measured duration to `phase`.
+    pub fn add_phase(&self, phase: Phase, d: Duration) {
+        self.timers.lock().expect("timers poisoned").add(phase, d);
+    }
+
+    /// Non-destructive snapshot of the phase timers.
+    pub fn peek_timers(&self) -> PhaseTimers {
+        self.timers.lock().expect("timers poisoned").clone()
+    }
+
+    /// Snapshot and reset the phase timers.
+    pub fn take_timers(&self) -> PhaseTimers {
+        let mut t = self.timers.lock().expect("timers poisoned");
+        let snap = t.clone();
+        t.reset();
+        snap
+    }
+
+    /// Sum spill counters into the hub (no-op when zero).
+    pub fn record_spill(&self, stats: SpillStats) {
+        if !stats.is_zero() {
+            self.spill.lock().expect("spill poisoned").merge(&stats);
+        }
+    }
+
+    /// Non-destructive snapshot of the spill counters.
+    pub fn peek_spill(&self) -> SpillStats {
+        *self.spill.lock().expect("spill poisoned")
+    }
+
+    /// Snapshot and reset the spill counters.
+    pub fn take_spill(&self) -> SpillStats {
+        let mut s = self.spill.lock().expect("spill poisoned");
+        let snap = *s;
+        *s = SpillStats::default();
+        snap
+    }
+
+    /// Sum overlap counters into the hub (no-op when zero).
+    pub fn record_overlap(&self, stats: OverlapStats) {
+        if !stats.is_zero() {
+            self.overlap.lock().expect("overlap poisoned").merge(&stats);
+        }
+    }
+
+    /// Non-destructive snapshot of the overlap counters.
+    pub fn peek_overlap(&self) -> OverlapStats {
+        *self.overlap.lock().expect("overlap poisoned")
+    }
+
+    /// Snapshot and reset the overlap counters.
+    pub fn take_overlap(&self) -> OverlapStats {
+        let mut s = self.overlap.lock().expect("overlap poisoned");
+        let snap = *s;
+        *s = OverlapStats::default();
+        snap
+    }
+
+    /// Fold one exchange's skew observation into the running stats
+    /// ([`SkewStats::observe`] semantics: counters sum, ratios latest).
+    pub fn observe_skew(&self, obs: &SkewStats) {
+        self.skew.lock().expect("skew poisoned").observe(obs);
+    }
+
+    /// Non-destructive snapshot of the skew counters.
+    pub fn peek_skew(&self) -> SkewStats {
+        *self.skew.lock().expect("skew poisoned")
+    }
+
+    /// Record one histogram observation under a seam name.
+    pub fn record_hist(&self, name: &str, v: u64) {
+        self.hists.lock().expect("hists poisoned").record(name, v);
+    }
+
+    /// Non-destructive snapshot of the named histograms.
+    pub fn peek_hists(&self) -> HistSet {
+        self.hists.lock().expect("hists poisoned").clone()
+    }
+
+    /// Add `by` to the named counter (creating it at zero first). Safe
+    /// from any thread — the counter registry is what the concurrent
+    /// morsel-pool test hammers.
+    pub fn bump_counter(&self, name: &str, by: u64) {
+        *self.counters.lock().expect("counters poisoned").entry(name.to_string()).or_insert(0) +=
+            by;
+    }
+
+    /// Raise the named counter to at least `v` (gauge-style maximum).
+    pub fn set_counter_max(&self, name: &str, v: u64) {
+        let mut c = self.counters.lock().expect("counters poisoned");
+        let e = c.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// The named-counter registry, sorted by name.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .expect("counters poisoned")
+            .iter()
+            .map(|(n, v)| (n.clone(), *v))
+            .collect()
+    }
+
+    /// Publish the label of the stage the worker is currently executing
+    /// (read by the telemetry sampler for the live `top` view).
+    pub fn set_stage(&self, label: &str) {
+        let mut s = self.stage.lock().expect("stage poisoned");
+        s.clear();
+        s.push_str(label);
+    }
+
+    /// The most recently published stage label ("" before any stage).
+    pub fn current_stage(&self) -> String {
+        self.stage.lock().expect("stage poisoned").clone()
+    }
+}
+
+/// Gang-wide aggregation of per-rank snapshots: the merged whole plus
+/// how many ranks contributed. Built by [`cluster_summary`]; rendered as
+/// a text table ([`ClusterSummary::table`]) or Prometheus-style
+/// exposition ([`ClusterSummary::prometheus`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterSummary {
+    /// Ranks aggregated.
+    pub ranks: usize,
+    /// Every family merged: counters/timers/spill/overlap/local summed,
+    /// histograms merged bucket-wise, skew ratios kept at the worst
+    /// observation ([`MetricsSnapshot::merge`]).
+    pub merged: MetricsSnapshot,
+}
+
+/// Merge per-rank snapshots into one [`ClusterSummary`]. Folding is
+/// pairwise [`MetricsSnapshot::merge`], so summarizing `[a, b, c]`
+/// equals merging the ranks into one snapshot by hand — the equivalence
+/// `tests/telemetry.rs` pins.
+pub fn cluster_summary(per_rank: &[MetricsSnapshot]) -> ClusterSummary {
+    let mut merged = MetricsSnapshot::default();
+    for s in per_rank {
+        merged.merge(s);
+    }
+    ClusterSummary { ranks: per_rank.len(), merged }
+}
+
+impl ClusterSummary {
+    /// Aligned text table of the merged families and histogram quantiles.
+    pub fn table(&self) -> String {
+        let m = &self.merged;
+        let mut out = String::new();
+        out.push_str(&format!("cluster summary ({} ranks)\n", self.ranks));
+        out.push_str(&format!(
+            "  {:<22} compute={:?} auxiliary={:?} communication={:?}\n",
+            "phase",
+            m.timers.get(Phase::Compute),
+            m.timers.get(Phase::Auxiliary),
+            m.timers.get(Phase::Communication),
+        ));
+        out.push_str(&format!(
+            "  {:<22} spilled_bytes={} spill_count={}\n",
+            "spill", m.spill.spilled_bytes, m.spill.spill_count
+        ));
+        out.push_str(&format!(
+            "  {:<22} hot_keys={} rows_rerouted={} worst_ratio_before={} worst_ratio_after={}\n",
+            "skew",
+            m.skew.hot_keys,
+            m.skew.rows_rerouted,
+            m.skew.ratio_before_milli,
+            m.skew.ratio_after_milli
+        ));
+        out.push_str(&format!(
+            "  {:<22} chunks={} hidden_ns={} wire_wait_ns={}\n",
+            "overlap", m.overlap.chunks_overlapped, m.overlap.hidden_nanos, m.overlap.wire_wait_nanos
+        ));
+        out.push_str(&format!(
+            "  {:<22} morsels={} busy_ns={} idle_ns={}\n",
+            "local", m.local.morsels, m.local.busy_nanos, m.local.idle_nanos
+        ));
+        for (name, v) in &m.counters {
+            out.push_str(&format!("  counter {name:<14} {v}\n"));
+        }
+        for (name, h) in m.hists.iter() {
+            out.push_str(&format!("  hist    {name:<22} {}\n", h.brief()));
+        }
+        out
+    }
+
+    /// Prometheus-style exposition of the merged snapshot: one
+    /// `cylonflow_*` sample per scalar, `cylonflow_counter{name="…"}`
+    /// for the registry, and cumulative
+    /// `cylonflow_hist_bucket{seam="…",le="…"}` series (ending in
+    /// `le="+Inf"`) plus `_count`/`_sum` per histogram — the text format
+    /// a scraper ingests from a metrics endpoint or a pushed file.
+    pub fn prometheus(&self) -> String {
+        let m = &self.merged;
+        let mut out = String::new();
+        out.push_str(&format!("cylonflow_ranks {}\n", self.ranks));
+        for (name, v) in [
+            ("cylonflow_compute_ns", m.timers.get(Phase::Compute).as_nanos() as u64),
+            ("cylonflow_auxiliary_ns", m.timers.get(Phase::Auxiliary).as_nanos() as u64),
+            ("cylonflow_communication_ns", m.timers.get(Phase::Communication).as_nanos() as u64),
+            ("cylonflow_spilled_bytes", m.spill.spilled_bytes),
+            ("cylonflow_spill_count", m.spill.spill_count),
+            ("cylonflow_skew_hot_keys", m.skew.hot_keys),
+            ("cylonflow_skew_rows_rerouted", m.skew.rows_rerouted),
+            ("cylonflow_skew_ratio_before_milli", m.skew.ratio_before_milli),
+            ("cylonflow_skew_ratio_after_milli", m.skew.ratio_after_milli),
+            ("cylonflow_overlap_chunks", m.overlap.chunks_overlapped),
+            ("cylonflow_overlap_hidden_ns", m.overlap.hidden_nanos),
+            ("cylonflow_overlap_wire_wait_ns", m.overlap.wire_wait_nanos),
+            ("cylonflow_local_morsels", m.local.morsels),
+            ("cylonflow_local_busy_ns", m.local.busy_nanos),
+            ("cylonflow_local_idle_ns", m.local.idle_nanos),
+        ] {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &m.counters {
+            out.push_str(&format!("cylonflow_counter{{name=\"{name}\"}} {v}\n"));
+        }
+        for (name, h) in m.hists.iter() {
+            let mut cum = 0u64;
+            for (i, n) in h.nonzero_buckets() {
+                cum += n;
+                out.push_str(&format!(
+                    "cylonflow_hist_bucket{{seam=\"{name}\",le=\"{}\"}} {cum}\n",
+                    Histogram::bucket_ceiling(i)
+                ));
+            }
+            out.push_str(&format!(
+                "cylonflow_hist_bucket{{seam=\"{name}\",le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!("cylonflow_hist_count{{seam=\"{name}\"}} {}\n", h.count()));
+            out.push_str(&format!("cylonflow_hist_sum{{seam=\"{name}\"}} {}\n", h.sum()));
+        }
+        out
     }
 }
 
@@ -683,5 +1134,133 @@ mod tests {
         let v = t.time(Phase::Auxiliary, || 42);
         assert_eq!(v, 42);
         assert!(t.get(Phase::Auxiliary) > Duration::ZERO);
+    }
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        s.timers.add(Phase::Compute, Duration::from_nanos(500));
+        s.timers.add(Phase::Communication, Duration::from_nanos(900));
+        s.spill = SpillStats { spilled_bytes: 128, spill_count: 2 };
+        s.skew = SkewStats {
+            hot_keys: 1,
+            rows_rerouted: 40,
+            ratio_before_milli: 2600,
+            ratio_after_milli: 1300,
+        };
+        s.overlap = OverlapStats { chunks_overlapped: 3, hidden_nanos: 700, wire_wait_nanos: 90 };
+        s.local = LocalStats { morsels: 10, busy_nanos: 5000, idle_nanos: 400 };
+        s.counters = vec![("bytes_sent".into(), 4096), ("rows_out".into(), 77)];
+        s.hists.record("collective_ns", 800);
+        s.hists.record("collective_ns", 1300);
+        s.hists.record("spill_write_bytes", 0);
+        s.hists.record("spill_write_bytes", u64::MAX);
+        s
+    }
+
+    #[test]
+    fn metrics_snapshot_json_round_trips() {
+        let s = sample_snapshot();
+        let back = MetricsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // empty snapshot round-trips too (timers absent vs zero are equal
+        // under the semantic PhaseTimers equality)
+        let empty = MetricsSnapshot::default();
+        assert_eq!(MetricsSnapshot::from_json(&empty.to_json()).unwrap(), empty);
+        // malformed input errors, never panics
+        assert!(MetricsSnapshot::from_json("").is_err());
+        assert!(MetricsSnapshot::from_json("{\"compute_ns\": }").is_err());
+        assert!(
+            MetricsSnapshot::from_json(
+                "{\"hists\": {\"x\": {\"count\": 1, \"sum\": 1, \"buckets\": {\"99\": 1}}}}"
+            )
+            .is_err(),
+            "out-of-range bucket index rejected"
+        );
+    }
+
+    #[test]
+    fn cluster_summary_equals_manual_merge() {
+        let a = sample_snapshot();
+        let mut b = sample_snapshot();
+        b.counters.push(("only_b".into(), 5));
+        b.hists.record("stage_duration_ns", 123456);
+        let c = MetricsSnapshot::default();
+        let summary = cluster_summary(&[a.clone(), b.clone(), c.clone()]);
+        assert_eq!(summary.ranks, 3);
+        let mut manual = a;
+        manual.merge(&b);
+        manual.merge(&c);
+        assert_eq!(summary.merged, manual);
+        // counters summed, histograms merged bucket-wise
+        assert_eq!(summary.merged.counter("bytes_sent"), 8192);
+        assert_eq!(summary.merged.counter("only_b"), 5);
+        assert_eq!(summary.merged.hists.get("collective_ns").unwrap().count(), 4);
+        let table = summary.table();
+        assert!(table.contains("cluster summary (3 ranks)"));
+        assert!(table.contains("bytes_sent"));
+        let prom = summary.prometheus();
+        assert!(prom.contains("cylonflow_ranks 3"));
+        assert!(prom.contains("cylonflow_counter{name=\"bytes_sent\"} 8192"));
+        assert!(prom.contains("le=\"+Inf\"} 4"));
+    }
+
+    #[test]
+    fn stats_hub_accumulates_every_family() {
+        let hub = StatsHub::new();
+        hub.add_phase(Phase::Compute, Duration::from_millis(3));
+        hub.record_spill(SpillStats { spilled_bytes: 64, spill_count: 1 });
+        hub.record_overlap(OverlapStats {
+            chunks_overlapped: 2,
+            hidden_nanos: 10,
+            wire_wait_nanos: 5,
+        });
+        hub.observe_skew(&SkewStats {
+            hot_keys: 1,
+            rows_rerouted: 9,
+            ratio_before_milli: 2000,
+            ratio_after_milli: 1100,
+        });
+        hub.record_hist("collective_ns", 700);
+        hub.bump_counter("rows_out", 3);
+        hub.bump_counter("rows_out", 4);
+        hub.set_counter_max("peak", 9);
+        hub.set_counter_max("peak", 2);
+        hub.set_stage("join");
+        assert_eq!(hub.peek_timers().get(Phase::Compute), Duration::from_millis(3));
+        assert_eq!(hub.peek_spill().spilled_bytes, 64);
+        assert_eq!(hub.peek_overlap().chunks_overlapped, 2);
+        assert_eq!(hub.peek_skew().rows_rerouted, 9);
+        assert_eq!(hub.peek_hists().get("collective_ns").unwrap().count(), 1);
+        assert_eq!(hub.counters(), vec![("peak".to_string(), 9), ("rows_out".to_string(), 7)]);
+        assert_eq!(hub.current_stage(), "join");
+        // take_* resets, peek_* does not
+        assert_eq!(hub.take_spill().spilled_bytes, 64);
+        assert!(hub.peek_spill().is_zero());
+        assert_eq!(hub.take_timers().get(Phase::Compute), Duration::from_millis(3));
+        assert_eq!(hub.peek_timers().total(), Duration::ZERO);
+        assert_eq!(hub.take_overlap().chunks_overlapped, 2);
+        assert!(hub.peek_overlap().is_zero());
+    }
+
+    #[test]
+    fn stats_hub_counters_survive_concurrent_bumps() {
+        use std::sync::Arc;
+        let hub = Arc::new(StatsHub::new());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let hub = Arc::clone(&hub);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        hub.bump_counter("shared", 1);
+                        hub.record_hist("shared_ns", 1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(hub.counters(), vec![("shared".to_string(), 4000)]);
+        assert_eq!(hub.peek_hists().get("shared_ns").unwrap().count(), 4000);
     }
 }

@@ -1,0 +1,492 @@
+//! Live per-rank telemetry: a sampler thread that periodically snapshots
+//! every metrics family, keeps a bounded flight-recorder ring of
+//! timestamped samples, and publishes the latest one through the gang's
+//! kv store so an external observer (`bench_driver top`) can watch a
+//! running pipeline (DESIGN.md §14).
+//!
+//! Off by default (`CYLONFLOW_TELEMETRY` /
+//! [`crate::config::TelemetryConfig`]): when disabled,
+//! [`TelemetryPublisher::maybe_start`] returns `None` — no thread is
+//! spawned, no counter is touched, results stay byte-identical
+//! (pinned by `tests/telemetry.rs`). When enabled, each sample is also
+//! appended eagerly (write + flush per line) to a flight-recorder JSONL
+//! file, so a SIGKILLed rank still leaves its last observed state on
+//! disk for the fault-leg artifacts.
+
+use super::{json, MetricsSnapshot, StatsHub};
+use crate::comm::{Communicator, KvStore};
+use crate::config::TelemetryConfig;
+use crate::executor::MorselPool;
+use crate::trace::TraceSink;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Samples the flight-recorder ring retains per rank (oldest evicted
+/// beyond it). At the default 200 ms interval this is ~100 s of history.
+pub const TELEMETRY_RING_CAP: usize = 512;
+
+/// Everything a sampler needs to assemble one rank's unified
+/// [`MetricsSnapshot`]: the worker-side and comm-side [`StatsHub`]s, the
+/// transport (for `bytes_sent`), the trace sink (for its event
+/// counters) and the morsel pool (for `local_*` and its busy-time
+/// histogram). Cheap to clone — all `Arc`s.
+///
+/// [`crate::executor::CylonEnv::snapshot`] builds its snapshot through
+/// the same source, so what the sampler thread publishes is exactly what
+/// the worker itself would report at that instant.
+#[derive(Clone)]
+pub struct TelemetrySource {
+    env: Arc<StatsHub>,
+    comm: Arc<StatsHub>,
+    transport: Arc<dyn Communicator>,
+    trace: Arc<TraceSink>,
+    pool: Arc<MorselPool>,
+}
+
+impl std::fmt::Debug for TelemetrySource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetrySource")
+            .field("rank", &self.transport.rank())
+            .finish_non_exhaustive()
+    }
+}
+
+impl TelemetrySource {
+    /// Bundle one rank's stat holders into a sampling source.
+    pub fn new(
+        env: Arc<StatsHub>,
+        comm: Arc<StatsHub>,
+        transport: Arc<dyn Communicator>,
+        trace: Arc<TraceSink>,
+        pool: Arc<MorselPool>,
+    ) -> TelemetrySource {
+        TelemetrySource { env, comm, transport, trace, pool }
+    }
+
+    /// One rank's unified metrics view right now: worker + comm timers
+    /// merged, every family read from its owning hub, histograms the
+    /// union of the worker, comm and pool seams, and the named-counter
+    /// registry extended with the transport/trace built-ins
+    /// (`bytes_sent`, `trace_events_dropped`, `trace_events_recorded`),
+    /// sorted by name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut timers = self.env.peek_timers();
+        timers.merge(&self.comm.peek_timers());
+        let mut hists = self.env.peek_hists();
+        hists.merge(&self.comm.peek_hists());
+        hists.merge(&self.pool.hists());
+        let mut counters = self.env.counters();
+        counters.push(("bytes_sent".to_string(), self.transport.bytes_sent()));
+        counters.push(("trace_events_dropped".to_string(), self.trace.overflow_count()));
+        counters.push(("trace_events_recorded".to_string(), self.trace.recorded_count()));
+        counters.sort();
+        MetricsSnapshot {
+            timers,
+            spill: self.comm.peek_spill(),
+            skew: self.env.peek_skew(),
+            overlap: self.comm.peek_overlap(),
+            local: self.pool.stats(),
+            counters,
+            hists,
+        }
+    }
+
+    /// The stage label the worker most recently published ("" before the
+    /// first stage).
+    pub fn current_stage(&self) -> String {
+        self.env.current_stage()
+    }
+}
+
+/// One timestamped telemetry observation: the cumulative snapshot plus
+/// the delta since the previous sample (what rate displays divide by the
+/// sampling interval). JSON round-trippable — the flight recorder writes
+/// [`TelemetrySample::to_json`] lines and `bench_driver top` reads them
+/// back with [`TelemetrySample::from_json`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetrySample {
+    /// Publishing rank.
+    pub rank: usize,
+    /// Elastic generation the rank is executing (0 outside elastic runs).
+    pub generation: u64,
+    /// Monotonic per-publisher sequence number, from 1.
+    pub seq: u64,
+    /// Wall-clock capture time, milliseconds since the Unix epoch.
+    pub unix_ms: u64,
+    /// Milliseconds since the publisher started (monotonic clock).
+    pub elapsed_ms: u64,
+    /// Stage label the worker was in when sampled ("" between stages).
+    pub stage: String,
+    /// Cumulative snapshot at capture time.
+    pub total: MetricsSnapshot,
+    /// `total − previous sample's total` (family-wise
+    /// [`MetricsSnapshot::saturating_diff`]); the first sample's delta
+    /// equals its total.
+    pub delta: MetricsSnapshot,
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl TelemetrySample {
+    /// One-line JSON object (nested snapshots via
+    /// [`MetricsSnapshot::to_json`]) — the flight-recorder JSONL line and
+    /// the kv-published value.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"rank\": {}, \"generation\": {}, \"seq\": {}, ",
+                "\"unix_ms\": {}, \"elapsed_ms\": {}, \"stage\": \"{}\", ",
+                "\"total\": {}, \"delta\": {}}}"
+            ),
+            self.rank,
+            self.generation,
+            self.seq,
+            self.unix_ms,
+            self.elapsed_ms,
+            escape(&self.stage),
+            self.total.to_json(),
+            self.delta.to_json(),
+        )
+    }
+
+    /// Parse a sample back from [`TelemetrySample::to_json`]'s output
+    /// (`from_json(to_json(s)) == s`). Missing fields read as 0/""/empty,
+    /// so truncated-but-parseable flight lines still yield data.
+    ///
+    /// # Errors
+    /// [`crate::error::Error::InvalidArgument`] on structurally malformed
+    /// input (a torn final flight line after SIGKILL, for example).
+    pub fn from_json(text: &str) -> crate::error::Result<TelemetrySample> {
+        let invalid = |e: String| crate::error::Error::invalid(format!("telemetry json: {e}"));
+        let obj = json::parse_object(text).map_err(invalid)?;
+        let snap = |key: &str| -> Result<MetricsSnapshot, String> {
+            match obj.field(key) {
+                Some(v) => MetricsSnapshot::from_parsed(v),
+                None => Ok(MetricsSnapshot::default()),
+            }
+        };
+        Ok(TelemetrySample {
+            rank: obj.num("rank").map_err(invalid)? as usize,
+            generation: obj.num("generation").map_err(invalid)?,
+            seq: obj.num("seq").map_err(invalid)?,
+            unix_ms: obj.num("unix_ms").map_err(invalid)?,
+            elapsed_ms: obj.num("elapsed_ms").map_err(invalid)?,
+            stage: obj.str_field("stage").map_err(invalid)?,
+            total: snap("total").map_err(invalid)?,
+            delta: snap("delta").map_err(invalid)?,
+        })
+    }
+}
+
+/// Where a publisher sends its samples: optionally a kv key (the gang's
+/// `{gang}/telemetry/g{gen}/{rank}` — latest sample wins, atomic via the
+/// [`crate::comm::FileKv`] tmp+rename put) and optionally a
+/// flight-recorder JSONL path (every sample appended and flushed, so the
+/// file survives SIGKILL mid-run). Both best-effort: a full disk or torn
+/// kv dir must never take the worker down, so publish errors are counted,
+/// not raised.
+#[derive(Debug, Default)]
+pub struct TelemetrySink {
+    kv: Option<(Arc<dyn KvStore>, String)>,
+    flight: Option<PathBuf>,
+}
+
+impl TelemetrySink {
+    /// A sink that publishes nowhere (samples still land in the ring).
+    pub fn new() -> TelemetrySink {
+        TelemetrySink::default()
+    }
+
+    /// Also publish the latest sample under `key` in `kv`.
+    pub fn with_kv(mut self, kv: Arc<dyn KvStore>, key: impl Into<String>) -> TelemetrySink {
+        self.kv = Some((kv, key.into()));
+        self
+    }
+
+    /// Also append every sample as one JSONL line to `path`.
+    pub fn with_flight(mut self, path: impl Into<PathBuf>) -> TelemetrySink {
+        self.flight = Some(path.into());
+        self
+    }
+
+    /// Publish one sample; returns how many destinations failed.
+    fn publish(&self, sample: &TelemetrySample) -> u64 {
+        let line = sample.to_json();
+        let mut failures = 0;
+        if let Some((kv, key)) = &self.kv {
+            if kv.put(key, line.as_bytes()).is_err() {
+                failures += 1;
+            }
+        }
+        if let Some(path) = &self.flight {
+            let open = || std::fs::OpenOptions::new().create(true).append(true).open(path);
+            // The flight path usually lives in a not-yet-created
+            // subdirectory (`{kv_dir}/flight/`); materialize it on the
+            // first append — here rather than in `with_flight`, so a
+            // sink built for a publisher that never starts (telemetry
+            // disabled) touches no disk at all.
+            let appended = open()
+                .or_else(|e| match path.parent() {
+                    Some(parent) => {
+                        std::fs::create_dir_all(parent)?;
+                        open()
+                    }
+                    None => Err(e),
+                })
+                .and_then(|mut f| {
+                    f.write_all(line.as_bytes())?;
+                    f.write_all(b"\n")?;
+                    f.flush()
+                });
+            if appended.is_err() {
+                failures += 1;
+            }
+        }
+        failures
+    }
+}
+
+impl std::fmt::Debug for TelemetryPublisher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetryPublisher")
+            .field("samples", &self.ring.lock().map(|r| r.len()).unwrap_or(0))
+            .finish_non_exhaustive()
+    }
+}
+
+/// The per-rank sampler thread: every `CYLONFLOW_TELEMETRY_MS` it
+/// captures a [`TelemetrySample`] (cumulative snapshot + delta since the
+/// last sample), appends it to the bounded flight-recorder ring and
+/// hands it to the [`TelemetrySink`]. The thread follows the
+/// heartbeat idiom from [`crate::executor::elastic`]: named, sliced
+/// 2 ms sleeps for prompt shutdown, stopped + joined on `Drop`. A final
+/// sample is always captured at stop, so even a pipeline shorter than
+/// one interval publishes its end state.
+pub struct TelemetryPublisher {
+    stop: Arc<AtomicBool>,
+    ring: Arc<Mutex<VecDeque<TelemetrySample>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TelemetryPublisher {
+    /// Start the sampler if `cfg.enabled`; `None` otherwise — the
+    /// disabled path spawns no thread and touches nothing (what the
+    /// disabled-path test pins). `generation` tags every sample (0 for
+    /// non-elastic runs).
+    pub fn maybe_start(
+        cfg: &TelemetryConfig,
+        generation: u64,
+        source: TelemetrySource,
+        sink: TelemetrySink,
+    ) -> Option<TelemetryPublisher> {
+        if !cfg.enabled {
+            return None;
+        }
+        let period = cfg.interval();
+        let rank = source.transport.rank();
+        let stop = Arc::new(AtomicBool::new(false));
+        let ring = Arc::new(Mutex::new(VecDeque::new()));
+        let thread_stop = Arc::clone(&stop);
+        let thread_ring = Arc::clone(&ring);
+        let handle = std::thread::Builder::new()
+            .name(format!("cyf-telemetry-{rank}"))
+            .spawn(move || {
+                let started = Instant::now();
+                let mut prev = MetricsSnapshot::default();
+                let mut seq = 0u64;
+                let mut capture = |prev: &mut MetricsSnapshot, seq: &mut u64| {
+                    let total = source.snapshot();
+                    let delta = total.saturating_diff(prev);
+                    *prev = total.clone();
+                    *seq += 1;
+                    let sample = TelemetrySample {
+                        rank,
+                        generation,
+                        seq: *seq,
+                        unix_ms: unix_ms(),
+                        elapsed_ms: started.elapsed().as_millis() as u64,
+                        stage: source.current_stage(),
+                        total,
+                        delta,
+                    };
+                    sink.publish(&sample);
+                    let mut ring = thread_ring.lock().expect("telemetry ring poisoned");
+                    if ring.len() >= TELEMETRY_RING_CAP {
+                        ring.pop_front();
+                    }
+                    ring.push_back(sample);
+                };
+                loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < period && !thread_stop.load(Ordering::Relaxed) {
+                        let slice = (period - slept).min(Duration::from_millis(2));
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    if thread_stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    capture(&mut prev, &mut seq);
+                }
+                // end-of-run state, even for sub-interval pipelines
+                capture(&mut prev, &mut seq);
+            })
+            .expect("spawn telemetry thread");
+        Some(TelemetryPublisher { stop, ring, handle: Some(handle) })
+    }
+
+    /// The flight-recorder ring: up to [`TELEMETRY_RING_CAP`] most recent
+    /// samples, oldest first.
+    pub fn samples(&self) -> Vec<TelemetrySample> {
+        self.ring.lock().expect("telemetry ring poisoned").iter().cloned().collect()
+    }
+
+    /// Stop and join the sampler (also captures the final sample). Idempotent;
+    /// `Drop` calls it too.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TelemetryPublisher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn unix_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_millis() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{InMemoryKv, MemoryFabric};
+    use crate::metrics::Phase;
+
+    fn one_rank_source() -> (TelemetrySource, Arc<StatsHub>, Arc<StatsHub>) {
+        let env = Arc::new(StatsHub::new());
+        let comm = Arc::new(StatsHub::new());
+        let transport: Arc<dyn Communicator> = Arc::new(MemoryFabric::create(1).remove(0));
+        let source = TelemetrySource::new(
+            Arc::clone(&env),
+            Arc::clone(&comm),
+            transport,
+            TraceSink::disabled(),
+            MorselPool::disabled(),
+        );
+        (source, env, comm)
+    }
+
+    #[test]
+    fn source_snapshot_unifies_both_hubs() {
+        let (source, env, comm) = one_rank_source();
+        env.add_phase(Phase::Compute, Duration::from_nanos(300));
+        env.bump_counter("rows_out", 9);
+        env.record_hist("stage_duration_ns", 1000);
+        env.set_stage("join");
+        comm.add_phase(Phase::Communication, Duration::from_nanos(700));
+        comm.record_spill(crate::metrics::SpillStats { spilled_bytes: 64, spill_count: 1 });
+        comm.record_hist("collective_ns", 500);
+        let s = source.snapshot();
+        assert_eq!(s.timers.get(Phase::Compute), Duration::from_nanos(300));
+        assert_eq!(s.timers.get(Phase::Communication), Duration::from_nanos(700));
+        assert_eq!(s.spill.spilled_bytes, 64);
+        assert_eq!(s.counter("rows_out"), 9);
+        assert!(s.hists.get("stage_duration_ns").is_some());
+        assert!(s.hists.get("collective_ns").is_some());
+        // transport/trace built-ins are always present
+        assert!(s.counters.iter().any(|(n, _)| n == "bytes_sent"));
+        assert!(s.counters.iter().any(|(n, _)| n == "trace_events_recorded"));
+        // sorted by name for deterministic JSON
+        let names: Vec<&str> = s.counters.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert_eq!(source.current_stage(), "join");
+    }
+
+    #[test]
+    fn sample_json_round_trips() {
+        let (source, env, _comm) = one_rank_source();
+        env.bump_counter("rows_out", 3);
+        env.record_hist("stage_duration_ns", 12345);
+        let total = source.snapshot();
+        let sample = TelemetrySample {
+            rank: 1,
+            generation: 2,
+            seq: 7,
+            unix_ms: 1_700_000_000_123,
+            elapsed_ms: 456,
+            stage: "join(replayed)".into(),
+            total: total.clone(),
+            delta: total,
+        };
+        let back = TelemetrySample::from_json(&sample.to_json()).unwrap();
+        assert_eq!(back, sample);
+        // a torn flight line (SIGKILL mid-write) errors, never panics
+        let line = sample.to_json();
+        assert!(TelemetrySample::from_json(&line[..line.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn disabled_config_spawns_nothing() {
+        let (source, _env, _comm) = one_rank_source();
+        let cfg = TelemetryConfig::default();
+        assert!(!cfg.enabled, "telemetry must be opt-in");
+        assert!(TelemetryPublisher::maybe_start(&cfg, 0, source, TelemetrySink::new()).is_none());
+    }
+
+    #[test]
+    fn publisher_samples_ring_kv_and_flight() {
+        let (source, env, _comm) = one_rank_source();
+        let kv: Arc<dyn KvStore> = InMemoryKv::shared();
+        let dir = std::env::temp_dir().join(format!("cyf-telemetry-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let flight = dir.join("rank0.flight.jsonl");
+        let cfg = TelemetryConfig { enabled: true, interval_ms: 5 };
+        let sink =
+            TelemetrySink::new().with_kv(Arc::clone(&kv), "g/telemetry/g0/0").with_flight(&flight);
+        let mut publisher =
+            TelemetryPublisher::maybe_start(&cfg, 0, source, sink).expect("enabled");
+        env.bump_counter("rows_out", 42);
+        std::thread::sleep(Duration::from_millis(40));
+        publisher.shutdown();
+        let samples = publisher.samples();
+        assert!(!samples.is_empty(), "sampler must have fired");
+        // seq strictly increasing from 1; the counter bump was observed
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(s.seq, i as u64 + 1);
+            assert_eq!(s.rank, 0);
+        }
+        assert_eq!(samples.last().unwrap().total.counter("rows_out"), 42);
+        // deltas reconstruct the totals: sum of deltas == final total
+        let mut acc = MetricsSnapshot::default();
+        for s in &samples {
+            acc.merge(&s.delta);
+        }
+        assert_eq!(acc.counter("rows_out"), 42);
+        // kv holds the latest sample
+        let latest = kv.wait("g/telemetry/g0/0", Duration::from_secs(1)).unwrap();
+        let latest = TelemetrySample::from_json(std::str::from_utf8(&latest).unwrap()).unwrap();
+        assert_eq!(latest.seq, samples.last().unwrap().seq);
+        // flight file holds every sample as parseable JSONL
+        let text = std::fs::read_to_string(&flight).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), samples.len());
+        for line in &lines {
+            TelemetrySample::from_json(line).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

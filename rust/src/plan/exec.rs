@@ -14,7 +14,7 @@ use crate::metrics::{
 use crate::ops;
 use crate::table::Table;
 use crate::trace::TraceCat;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Result of executing a plan on one rank: the rank's output partition
 /// plus per-node stage timings in execution (post-order) order.
@@ -305,6 +305,12 @@ fn eval(
     path: &str,
 ) -> Result<Table> {
     let label = plan.label();
+    // Live-visibility hooks: the stage label lands in telemetry samples
+    // (`bench_driver top` shows where each rank is), and the wall from
+    // here to this node's attribution cut lands in `stage_duration_ns`
+    // (enclosing input stages, like the stage trace span).
+    env.set_stage(label);
+    let entered = Instant::now();
     let exchanges = node_exchanges(&plan.node);
     let fingerprint = if rec.is_some() && exchanges {
         partitioning_fingerprint(&plan)
@@ -321,6 +327,8 @@ fn eval(
         if exchanges && rc.covered(path, &fingerprint) {
             let t = env.time(Phase::Auxiliary, || rc.restore(path))?;
             env.bump_counter("stages_recovered", 1);
+            env.bump_counter("rows_out", t.num_rows() as u64);
+            env.record_hist("stage_duration_ns", entered.elapsed().as_nanos() as u64);
             let now = env.snapshot();
             let delta = now.saturating_diff(mark);
             stages.push(StageTiming {
@@ -330,6 +338,7 @@ fn eval(
                 skew: delta.skew,
                 overlap: delta.overlap,
                 local: delta.local,
+                hists: delta.hists,
             });
             *mark = now;
             return Ok(t);
@@ -425,6 +434,8 @@ fn eval(
             env.bump_counter("stage_ckpts_written", 1);
         }
     }
+    env.bump_counter("rows_out", out.num_rows() as u64);
+    env.record_hist("stage_duration_ns", entered.elapsed().as_nanos() as u64);
     // Attribute the timer/spill/skew deltas since the last cut to this node.
     let now = env.snapshot();
     let delta = now.saturating_diff(mark);
@@ -435,6 +446,7 @@ fn eval(
         skew: delta.skew,
         overlap: delta.overlap,
         local: delta.local,
+        hists: delta.hists,
     });
     *mark = now;
     Ok(out)

@@ -19,7 +19,7 @@
 //! when whichever of the two owns it last is dropped.
 
 use crate::error::{Error, Result};
-use crate::metrics::SpillStats;
+use crate::metrics::{SpillStats, StatsHub};
 use crate::table::{table_from_frame, Table};
 use crate::trace::{TraceCat, TraceSink};
 use std::fs::File;
@@ -67,6 +67,7 @@ pub struct SpillBuffer {
     write_offset: u64,
     stats: SpillStats,
     trace: Arc<TraceSink>,
+    hub: Option<Arc<StatsHub>>,
 }
 
 impl SpillBuffer {
@@ -85,6 +86,20 @@ impl SpillBuffer {
         dir: impl Into<PathBuf>,
         trace: Arc<TraceSink>,
     ) -> SpillBuffer {
+        SpillBuffer::with_observers(budget_bytes, dir, trace, None)
+    }
+
+    /// [`SpillBuffer::with_trace`] plus an optional [`StatsHub`]: when
+    /// present, every spilled frame records its byte size into the
+    /// `spill_write_bytes` histogram and every replay read-back into
+    /// `spill_read_bytes`, so spill granularity shows up in
+    /// [`crate::metrics::MetricsSnapshot`] alongside the spill counters.
+    pub fn with_observers(
+        budget_bytes: usize,
+        dir: impl Into<PathBuf>,
+        trace: Arc<TraceSink>,
+        hub: Option<Arc<StatsHub>>,
+    ) -> SpillBuffer {
         SpillBuffer {
             budget_bytes,
             dir: dir.into(),
@@ -94,6 +109,7 @@ impl SpillBuffer {
             write_offset: 0,
             stats: SpillStats::default(),
             trace,
+            hub,
         }
     }
 
@@ -109,6 +125,9 @@ impl SpillBuffer {
         }
         let offset = self.spill(&frame)?;
         self.trace.event(TraceCat::Spill, "spill_write", frame.len() as u64, offset);
+        if let Some(hub) = &self.hub {
+            hub.record_hist("spill_write_bytes", frame.len() as u64);
+        }
         self.stats.spilled_bytes += frame.len() as u64;
         self.stats.spill_count += 1;
         self.frames.push((key, Slot::Disk(offset, frame.len() as u64)));
@@ -160,7 +179,12 @@ impl SpillBuffer {
         }
         let mut frames = std::mem::take(&mut self.frames);
         frames.sort_by_key(|(key, _)| *key);
-        Ok(SpillReplay { frames: frames.into_iter(), file, trace: self.trace.clone() })
+        Ok(SpillReplay {
+            frames: frames.into_iter(),
+            file,
+            trace: self.trace.clone(),
+            hub: self.hub.clone(),
+        })
     }
 }
 
@@ -171,6 +195,7 @@ pub struct SpillReplay {
     frames: std::vec::IntoIter<(u64, Slot)>,
     file: Option<SpillFile>,
     trace: Arc<TraceSink>,
+    hub: Option<Arc<StatsHub>>,
 }
 
 impl SpillReplay {
@@ -183,6 +208,9 @@ impl SpillReplay {
         sf.file.seek(SeekFrom::Start(offset))?;
         sf.file.read_exact(&mut buf)?;
         self.trace.event(TraceCat::Spill, "spill_read", len, offset);
+        if let Some(hub) = &self.hub {
+            hub.record_hist("spill_read_bytes", len);
+        }
         Ok(buf)
     }
 }
@@ -322,6 +350,27 @@ mod tests {
         assert_eq!(results.len(), 2);
         assert!(results[0].is_ok(), "frames before the cut still replay");
         assert!(results[1].is_err(), "the torn frame must surface an error");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn observer_hub_records_spill_size_histograms() {
+        let dir = test_dir("hub");
+        let hub = Arc::new(StatsHub::new());
+        let mut b =
+            SpillBuffer::with_observers(0, &dir, TraceSink::disabled(), Some(hub.clone()));
+        b.push(0, 0, frame(vec![1, 2], 0, false)).unwrap();
+        b.push(0, 1, frame(vec![3, 4], 1, true)).unwrap();
+        let spilled = b.stats().spilled_bytes;
+        let n: usize = b.replay().unwrap().map(|t| t.unwrap().num_rows()).sum();
+        assert_eq!(n, 4);
+        let hists = hub.peek_hists();
+        let w = hists.get("spill_write_bytes").expect("write hist");
+        assert_eq!(w.count(), 2);
+        assert_eq!(w.sum(), spilled);
+        let r = hists.get("spill_read_bytes").expect("read hist");
+        assert_eq!(r.count(), 2);
+        assert_eq!(r.sum(), spilled, "every spilled byte is read back exactly once");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

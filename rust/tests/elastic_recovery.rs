@@ -50,6 +50,7 @@ fn test_opts(tag: &str, max_restarts: u32, stage_ckpt: bool, ckpt_dir: &Path) ->
                 ckpt_dir.to_string_lossy().into_owned(),
             ),
         ],
+        kv_dir: None,
     }
 }
 

@@ -1,0 +1,415 @@
+//! Integration: the live-telemetry plane (DESIGN.md §14) — a running
+//! elastic gang is observable from outside through the kv store while it
+//! executes, the flight-recorder JSONL survives SIGKILL, cluster
+//! aggregation equals the hand-merged whole, histogram deltas are
+//! consistent with their cumulative totals, and the disabled path
+//! perturbs nothing (byte-identical results, no keys, no files).
+
+use cylonflow::comm::{FileKv, KvStore};
+use cylonflow::executor::elastic::{launch_elastic_gang, telemetry_key, ElasticOptions};
+use cylonflow::executor::process::AppParams;
+use cylonflow::executor::MorselPool;
+use cylonflow::metrics::{
+    cluster_summary, MetricsSnapshot, Phase, StatsHub, TelemetrySample,
+};
+use cylonflow::trace::TraceSink;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn binary() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_cylonflow"))
+}
+
+/// Where driver logs and collected flight recordings go (uploaded by CI
+/// as fault-leg artifacts).
+fn log_dir() -> PathBuf {
+    let d = Path::new("target").join("elastic-logs");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cylonflow-tele-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Gang options with telemetry enabled at a fast sampling interval (plus
+/// the usual fast-heartbeat elastic knobs, passed explicitly so tests
+/// never mutate their own environment).
+fn tele_opts(tag: &str, max_restarts: u32, kv_dir: &Path, telemetry: bool) -> ElasticOptions {
+    let mut child_env = vec![
+        ("CYLONFLOW_HEARTBEAT_MS".to_string(), "100".to_string()),
+        ("CYLONFLOW_MAX_RESTARTS".to_string(), max_restarts.to_string()),
+        ("CYLONFLOW_STAGE_CKPT".to_string(), "0".to_string()),
+    ];
+    // Always set explicitly: the CI telemetry leg exports
+    // CYLONFLOW_TELEMETRY=1 suite-wide, and the disabled-path test must
+    // stay disabled under it.
+    if telemetry {
+        child_env.push(("CYLONFLOW_TELEMETRY".to_string(), "1".to_string()));
+        child_env.push(("CYLONFLOW_TELEMETRY_MS".to_string(), "10".to_string()));
+    } else {
+        child_env.push(("CYLONFLOW_TELEMETRY".to_string(), "0".to_string()));
+    }
+    ElasticOptions {
+        heartbeat: Duration::from_millis(100),
+        lease: Duration::from_secs(10),
+        max_restarts,
+        timeout: Duration::from_secs(300),
+        log_path: Some(log_dir().join(format!("{tag}.driver.log"))),
+        child_env,
+        kv_dir: Some(kv_dir.to_path_buf()),
+    }
+}
+
+fn pipeline_params(rows: usize) -> AppParams {
+    let mut p = AppParams::new();
+    p.insert("rows".into(), rows.to_string());
+    p.insert("cardinality".into(), "0.9".into());
+    p
+}
+
+fn counter_of(cs: &[(String, u64)], name: &str) -> u64 {
+    cs.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+}
+
+/// The latest published sample for `rank` at generation `gen`, if any.
+fn read_sample(kv: &FileKv, gen: u64, rank: usize) -> Option<TelemetrySample> {
+    let v = kv.get(&telemetry_key("eg", gen, rank))?;
+    TelemetrySample::from_json(&String::from_utf8_lossy(&v)).ok()
+}
+
+/// A running 2-rank gang is observable from the outside: timestamped,
+/// seq-increasing samples appear under the gang's telemetry keys in the
+/// kv store *while the pipeline executes* (not just after it finishes),
+/// the final per-rank totals aggregate into a [`cluster_summary`] equal
+/// to the hand-merged whole, and the flight recordings are
+/// delta-consistent with the cumulative snapshots they carry.
+#[test]
+fn live_gang_is_observable_and_aggregates_consistently() {
+    let world = 2;
+    let kv_dir = scratch("live-kv");
+    std::fs::create_dir_all(&kv_dir).unwrap();
+    let opts = tele_opts("tele-live", 0, &kv_dir, true);
+    let params = pipeline_params(200_000);
+    let bin = binary().to_path_buf();
+    let driver = std::thread::spawn(move || {
+        launch_elastic_gang(&bin, world, "elastic-pipeline", &params, &opts)
+    });
+
+    // Observe the gang from outside, through the same kv store the
+    // workers publish to, while the driver thread is still running.
+    let kv = FileKv::new(&kv_dir).unwrap();
+    let mut live: Vec<Vec<TelemetrySample>> = vec![Vec::new(); world];
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !driver.is_finished() && Instant::now() < deadline {
+        for (rank, seen) in live.iter_mut().enumerate() {
+            if let Some(s) = read_sample(&kv, 0, rank) {
+                if seen.last().map_or(true, |p| p.seq < s.seq) {
+                    seen.push(s);
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let report = driver
+        .join()
+        .expect("driver thread must not panic")
+        .expect("unfailed gang must complete");
+    assert_eq!(report.generation, 0);
+    assert_eq!(report.results.len(), world);
+
+    for (rank, seen) in live.iter().enumerate() {
+        assert!(
+            !seen.is_empty(),
+            "rank {rank} published no telemetry sample while the gang was running"
+        );
+        for s in seen {
+            assert_eq!(s.rank, rank);
+            assert_eq!(s.generation, 0);
+            assert!(s.seq >= 1, "seq starts at 1");
+            assert!(s.unix_ms > 0, "samples must be wall-clock timestamped");
+        }
+        for w in seen.windows(2) {
+            assert!(w[0].seq < w[1].seq, "seq must increase");
+            assert!(w[0].elapsed_ms <= w[1].elapsed_ms, "elapsed must not go backwards");
+        }
+    }
+
+    // The final published totals summarize exactly like a hand merge.
+    let finals: Vec<MetricsSnapshot> = (0..world)
+        .map(|r| read_sample(&kv, 0, r).expect("final sample must persist in kv").total)
+        .collect();
+    let summary = cluster_summary(&finals);
+    let mut manual = MetricsSnapshot::default();
+    for s in &finals {
+        manual.merge(s);
+    }
+    assert_eq!(summary.ranks, world);
+    assert_eq!(summary.merged, manual, "cluster_summary must equal the merged whole");
+    assert!(summary.table().contains(&format!("cluster summary ({world} ranks)")));
+    assert!(summary.prometheus().contains(&format!("cylonflow_ranks {world}")));
+    // the hot-seam histograms actually fired during a real pipeline
+    assert!(
+        summary.merged.hists.get("stage_duration_ns").is_some(),
+        "plan executor must record stage durations: {}",
+        summary.table()
+    );
+
+    // Flight recordings (collected next to the driver log on success)
+    // are internally consistent: each line's delta equals the diff of
+    // its total against the previous line's total, and merging all
+    // deltas reconstructs the final cumulative counters and histograms.
+    assert_eq!(report.flights.len(), world, "one flight recording per rank");
+    for flight in &report.flights {
+        let text = std::fs::read_to_string(flight).unwrap();
+        let samples: Vec<TelemetrySample> = text
+            .lines()
+            .map(|l| TelemetrySample::from_json(l).expect("every flight line parses"))
+            .collect();
+        assert!(!samples.is_empty());
+        assert_eq!(samples[0].delta, samples[0].total, "first delta is the first total");
+        for w in samples.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1, "flight seqs are contiguous");
+            assert_eq!(
+                w[1].delta,
+                w[1].total.saturating_diff(&w[0].total),
+                "each delta must be the family-wise diff against the previous total"
+            );
+        }
+        let mut acc = MetricsSnapshot::default();
+        for s in &samples {
+            acc.merge(&s.delta);
+        }
+        let last = &samples.last().unwrap().total;
+        assert_eq!(acc.counters, last.counters, "delta chain must rebuild the counters");
+        assert_eq!(acc.hists, last.hists, "delta chain must rebuild the histograms");
+        assert_eq!(acc.timers, last.timers, "delta chain must rebuild the timers");
+    }
+
+    let _ = std::fs::remove_dir_all(&kv_dir);
+}
+
+/// A SIGKILLed rank (restart budget 0, so the gang aborts) still leaves
+/// readable flight-recorder JSONL next to the driver log: every line
+/// parses back into a [`TelemetrySample`] (at most the torn final line
+/// of the killed rank is tolerated).
+#[test]
+fn sigkilled_rank_leaves_readable_flight_recording() {
+    let kv_dir = scratch("abort-kv");
+    std::fs::create_dir_all(&kv_dir).unwrap();
+    let mut params = pipeline_params(40_000);
+    params.insert("die_rank".into(), "1".into());
+    params.insert("die_stage".into(), "sort".into());
+    let err = launch_elastic_gang(
+        binary(),
+        2,
+        "elastic-pipeline",
+        &params,
+        &tele_opts("tele-abort", 0, &kv_dir, true),
+    )
+    .expect_err("zero restart budget must abort on the SIGKILL");
+    assert!(err.to_string().contains("aborted"), "gang must abort: {err}");
+
+    let mut recordings = 0;
+    for rank in 0..2 {
+        let flight = log_dir().join(format!("tele-abort.driver.rank{rank}.flight.jsonl"));
+        if !flight.exists() {
+            continue;
+        }
+        recordings += 1;
+        let text = std::fs::read_to_string(&flight).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty(), "a kept flight recording must hold samples");
+        for (i, line) in lines.iter().enumerate() {
+            match TelemetrySample::from_json(line) {
+                Ok(s) => {
+                    assert_eq!(s.rank, rank);
+                    assert!(s.seq >= 1);
+                    assert!(s.unix_ms > 0);
+                }
+                Err(_) => assert_eq!(
+                    i,
+                    lines.len() - 1,
+                    "only a torn final line may fail to parse: {line:?}"
+                ),
+            }
+        }
+    }
+    assert!(
+        recordings >= 1,
+        "the abort path must keep at least one rank's flight recording"
+    );
+    let _ = std::fs::remove_dir_all(&kv_dir);
+}
+
+/// The disabled path perturbs nothing: a gang run without telemetry
+/// produces byte-identical results to one with it, publishes no
+/// telemetry key, and writes no flight-recorder file.
+#[test]
+fn disabled_telemetry_is_inert_and_byte_identical() {
+    let rows = 15_000;
+    let off_kv = scratch("off-kv");
+    let on_kv = scratch("on-kv");
+    std::fs::create_dir_all(&off_kv).unwrap();
+    std::fs::create_dir_all(&on_kv).unwrap();
+
+    let off = launch_elastic_gang(
+        binary(),
+        2,
+        "elastic-pipeline",
+        &pipeline_params(rows),
+        &tele_opts("tele-off", 0, &off_kv, false),
+    )
+    .unwrap();
+    let on = launch_elastic_gang(
+        binary(),
+        2,
+        "elastic-pipeline",
+        &pipeline_params(rows),
+        &tele_opts("tele-on", 0, &on_kv, true),
+    )
+    .unwrap();
+
+    assert_eq!(
+        off.results, on.results,
+        "telemetry must not perturb results (per-rank row counts and fingerprints)"
+    );
+    assert!(off.flights.is_empty(), "no flight recordings without telemetry");
+    assert_eq!(on.flights.len(), 2, "telemetry-on runs keep one recording per rank");
+    // no telemetry key ever materialized in the off run's kv store
+    let leaked: Vec<String> = std::fs::read_dir(&off_kv)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains("telemetry"))
+        .collect();
+    assert!(leaked.is_empty(), "disabled run must publish no telemetry keys: {leaked:?}");
+    assert!(!off_kv.join("flight").exists(), "disabled run must write no flight dir");
+    assert!(on_kv.join("flight").exists(), "enabled run writes its flight dir");
+
+    let _ = std::fs::remove_dir_all(&off_kv);
+    let _ = std::fs::remove_dir_all(&on_kv);
+}
+
+/// Deterministic pseudo-random generator (splitmix-style LCG) for the
+/// round-trip property — no external crates, reproducible failures.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+/// An arbitrary-but-valid snapshot: every family populated from the
+/// generator (values capped well inside u64 so saturating arithmetic
+/// never masks a mismatch).
+fn arbitrary_snapshot(rng: &mut Lcg) -> MetricsSnapshot {
+    let mut s = MetricsSnapshot::default();
+    s.timers.add(Phase::Compute, Duration::from_nanos(rng.below(1 << 40)));
+    s.timers.add(Phase::Auxiliary, Duration::from_nanos(rng.below(1 << 40)));
+    s.timers.add(Phase::Communication, Duration::from_nanos(rng.below(1 << 40)));
+    s.spill.spilled_bytes = rng.below(1 << 34);
+    s.spill.spill_count = rng.below(1 << 10);
+    s.skew.hot_keys = rng.below(1 << 16);
+    s.skew.rows_rerouted = rng.below(1 << 24);
+    s.skew.ratio_before_milli = rng.below(10_000);
+    s.skew.ratio_after_milli = rng.below(10_000);
+    s.overlap.chunks_overlapped = rng.below(1 << 16);
+    s.overlap.hidden_nanos = rng.below(1 << 40);
+    s.overlap.wire_wait_nanos = rng.below(1 << 40);
+    s.local.morsels = rng.below(1 << 16);
+    s.local.busy_nanos = rng.below(1 << 40);
+    s.local.idle_nanos = rng.below(1 << 40);
+    for c in 0..rng.below(5) {
+        s.counters.push((format!("counter_{c}"), rng.below(1 << 48)));
+    }
+    s.counters.sort();
+    for name in ["stage_duration_ns", "collective_ns", "spill_write_bytes"] {
+        for _ in 0..rng.below(6) {
+            s.hists.record(name, rng.below(1 << 48));
+        }
+    }
+    s
+}
+
+/// Property: `from_json(to_json(x)) == x` for arbitrary snapshots and
+/// the telemetry samples wrapping them (including stage labels that need
+/// JSON escaping), and cluster aggregation is order-insensitive.
+#[test]
+fn snapshot_json_round_trip_property() {
+    let mut rng = Lcg(0x5eed_cafe_f00d_0001);
+    let mut ranks = Vec::new();
+    for case in 0..50u64 {
+        let snap = arbitrary_snapshot(&mut rng);
+        let back = MetricsSnapshot::from_json(&snap.to_json())
+            .unwrap_or_else(|e| panic!("case {case}: snapshot must parse back: {e}"));
+        assert_eq!(back, snap, "case {case}: snapshot round trip");
+
+        let sample = TelemetrySample {
+            rank: (case % 8) as usize,
+            generation: case / 8,
+            seq: case + 1,
+            unix_ms: 1_700_000_000_000 + case,
+            elapsed_ms: case * 37,
+            stage: format!("stage \"{case}\" \\ join"),
+            total: snap.clone(),
+            delta: snap.saturating_diff(&arbitrary_snapshot(&mut rng)),
+        };
+        let back = TelemetrySample::from_json(&sample.to_json())
+            .unwrap_or_else(|e| panic!("case {case}: sample must parse back: {e}"));
+        assert_eq!(back, sample, "case {case}: sample round trip");
+        ranks.push(snap);
+    }
+    // aggregation order must not matter (counters sort, hists are
+    // name-keyed, skew keeps the worst ratio either way)
+    let forward = cluster_summary(&ranks);
+    ranks.reverse();
+    let backward = cluster_summary(&ranks);
+    assert_eq!(forward, backward, "cluster_summary must be order-insensitive");
+}
+
+/// The shared counter/histogram registry stays consistent when bumped
+/// from many morsel-pool worker threads at once, and the pool records
+/// its own per-worker busy-time histogram.
+#[test]
+fn counter_registry_survives_concurrent_morsel_threads() {
+    let hub = Arc::new(StatsHub::new());
+    let pool = MorselPool::new(4, 1 << 20, TraceSink::disabled());
+    let morsels = 64usize;
+    let outputs = pool.run(morsels, |i| {
+        hub.bump_counter("rows_out", i as u64 + 1);
+        hub.bump_counter(&format!("shard_{}", i % 4), 1);
+        hub.record_hist("stage_duration_ns", (i as u64 + 1) * 10);
+        1u64
+    });
+    assert_eq!(outputs.len(), morsels);
+    assert_eq!(outputs.iter().sum::<u64>(), morsels as u64);
+
+    let counters = hub.counters();
+    let expected: u64 = (1..=morsels as u64).sum();
+    assert_eq!(counter_of(&counters, "rows_out"), expected, "no bump may be lost");
+    for shard in 0..4 {
+        assert_eq!(counter_of(&counters, &format!("shard_{shard}")), morsels as u64 / 4);
+    }
+    let hists = hub.peek_hists();
+    let h = hists.get("stage_duration_ns").expect("histogram must exist");
+    assert_eq!(h.count(), morsels as u64, "no histogram sample may be lost");
+    assert_eq!(h.sum(), expected * 10);
+
+    // the pool's own seam: one busy-time sample per worker thread
+    let busy = pool.hists();
+    let b = busy.get("morsel_busy_ns").expect("parallel run records worker busy time");
+    assert_eq!(b.count(), 4, "one sample per worker");
+}

@@ -280,21 +280,21 @@ fn traced_pipeline_exports_chrome_json_that_roundtrips() {
     }
 }
 
-/// The deprecated per-family accessors are thin wrappers over the
-/// unified snapshot — pin that equivalence until they are removed.
+/// The unified snapshot reads through the same telemetry source the
+/// sampler thread uses — pin that the two views agree on every family.
 #[test]
-#[allow(deprecated)]
-fn deprecated_accessors_match_unified_snapshot() {
+fn unified_snapshot_matches_telemetry_source() {
     let cluster = Cluster::local(1).unwrap();
     let exec = CylonExecutor::new(&cluster, 1).unwrap();
     exec.run(|env| {
         let t = datagen::partition_for_rank(31, 500, 0.5, env.rank(), env.world_size());
         cylonflow::dist::shuffle_by_key(&t, &[0], env)?;
         let unified = env.snapshot();
-        assert_eq!(env.spill_snapshot(), unified.spill);
-        assert_eq!(env.skew_snapshot(), unified.skew);
-        assert_eq!(env.overlap_snapshot(), unified.overlap);
-        assert_eq!(env.metrics_snapshot().total(), unified.timers.total());
+        let sampled = env.telemetry_source().snapshot();
+        assert_eq!(sampled.spill, unified.spill);
+        assert_eq!(sampled.skew, unified.skew);
+        assert_eq!(sampled.overlap, unified.overlap);
+        assert_eq!(sampled.timers.total(), unified.timers.total());
         Ok(())
     })
     .unwrap()
